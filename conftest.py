@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from the
+repository root (the test modules import the `compile` package relative
+to `python/`)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent / "python"))

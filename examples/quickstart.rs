@@ -1,0 +1,79 @@
+//! Quickstart: the whole stack on one small matrix.
+//!
+//! 1. generate a banded test matrix (corpus);
+//! 2. run SpMV natively (exec) and through the AOT-compiled Pallas
+//!    kernel on the PJRT runtime — check they agree;
+//! 3. run 4 power-iteration steps through the composed L2 graph;
+//! 4. simulate 1–4-thread scalability on the FT-2000+ core-group and
+//!    print the paper-style profile.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use ft2000_spmv::coordinator::{advisor, profile_matrix, ProfileConfig};
+use ft2000_spmv::corpus::generators;
+use ft2000_spmv::exec;
+use ft2000_spmv::runtime::Runtime;
+use ft2000_spmv::sched::Schedule;
+use ft2000_spmv::sparse::Ell;
+use ft2000_spmv::util::rng::Pcg32;
+use ft2000_spmv::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Pcg32::new(2019);
+    let csr = generators::banded(4096, 7, &mut rng);
+    let x: Vec<f64> = (0..csr.n_cols).map(|_| rng.gen_f64()).collect();
+    println!(
+        "matrix: {} rows, {} nnz (banded FEM-like)\n",
+        csr.n_rows,
+        csr.nnz()
+    );
+
+    // --- native vs PJRT (pallas kernel) -------------------------------
+    let native = exec::spmv_sequential(&csr, &x);
+    let rt = Runtime::new("artifacts")?;
+    let y_pjrt = rt.spmv(&csr, &x)?;
+    let max_err = native
+        .y
+        .iter()
+        .zip(&y_pjrt)
+        .map(|(a, b)| (a - b).abs() / (1.0 + a.abs()))
+        .fold(0.0, f64::max);
+    println!(
+        "native vs pallas-kernel-on-PJRT: max relative error {max_err:.2e} (platform: {})",
+        rt.platform()
+    );
+    assert!(max_err < 1e-4);
+
+    // --- composed graph: power iteration ------------------------------
+    let ell = Ell::from_csr(&csr, None)?;
+    let x0 = vec![1.0 / (csr.n_rows as f64).sqrt(); csr.n_rows];
+    let (_v, rayleigh) = rt.power_iter(&ell, &x0)?;
+    println!("power iteration (4 steps, AOT graph): rayleigh = {rayleigh:.4}\n");
+
+    // --- threaded execution (host) ------------------------------------
+    let threaded = exec::spmv_threaded(&csr, &x, Schedule::CsrRowStatic, 4);
+    println!(
+        "host 4-thread CSR SpMV: {:.3} ms ({:.2} Gflops on this machine)\n",
+        threaded.wall_seconds * 1e3,
+        threaded.gflops(csr.nnz())
+    );
+
+    // --- simulated FT-2000+ scalability --------------------------------
+    let profile = profile_matrix(&csr, "banded-4k", &ProfileConfig::default());
+    let mut t = Table::new(
+        "Simulated FT-2000+ core-group scalability (CSR static)",
+        &["threads", "speedup", "Gflops"],
+    );
+    for (i, nt) in profile.thread_counts.iter().enumerate() {
+        t.row(vec![
+            nt.to_string(),
+            format!("{:.3}x", profile.speedups[i]),
+            format!("{:.3}", profile.gflops[i]),
+        ]);
+    }
+    t.print();
+    for line in advisor::advise(&csr, &profile) {
+        println!("advisor: {line}");
+    }
+    Ok(())
+}

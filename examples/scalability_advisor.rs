@@ -1,0 +1,77 @@
+//! Scalability advisor — the paper's "profiling tool" claim (§5.2.3
+//! future work) made concrete: profile a matrix, diagnose the dominant
+//! scalability bottleneck, apply the recommended optimization, and
+//! verify the improvement in the simulator.
+//!
+//! Run: `cargo run --release --example scalability_advisor [-- <named>|all]`
+
+use ft2000_spmv::coordinator::advisor::{diagnose, Advice};
+use ft2000_spmv::coordinator::{profile_matrix, ProfileConfig};
+use ft2000_spmv::corpus::NamedMatrix;
+use ft2000_spmv::reorder;
+use ft2000_spmv::sched::Schedule;
+use ft2000_spmv::sparse::Csr;
+use ft2000_spmv::util::table::Table;
+
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "all".into());
+    let targets: Vec<NamedMatrix> = if which == "all" {
+        NamedMatrix::ALL.to_vec()
+    } else {
+        NamedMatrix::ALL
+            .into_iter()
+            .filter(|m| m.name() == which)
+            .collect()
+    };
+    let mut t = Table::new(
+        "Advisor: diagnose -> optimize -> verify (simulated FT-2000+)",
+        &["matrix", "baseline 4t", "diagnosis", "optimized 4t", "action"],
+    );
+    for named in targets {
+        let csr = named.generate();
+        let base = profile_matrix(&csr, named.name(), &ProfileConfig::default());
+        let advice = diagnose(&csr, &base);
+        let primary = advice.first().cloned().unwrap_or(Advice::NoActionNeeded);
+        let (optimized, action) = apply(&csr, &primary);
+        t.row(vec![
+            named.name().to_string(),
+            format!("{:.3}x", base.max_speedup()),
+            format!("{primary:?}"),
+            optimized
+                .map(|s| format!("{s:.3}x"))
+                .unwrap_or_else(|| "-".into()),
+            action,
+        ]);
+    }
+    t.print();
+}
+
+/// Apply the advised optimization and return the new 4-thread speedup.
+fn apply(csr: &Csr, advice: &Advice) -> (Option<f64>, String) {
+    match advice {
+        Advice::UseCsr5 => {
+            let cfg = ProfileConfig {
+                schedule: Schedule::Csr5Tiles { tile_nnz: 256 },
+                ..Default::default()
+            };
+            let p = profile_matrix(csr, "csr5", &cfg);
+            (Some(p.max_speedup()), "switched to CSR5 tiles".into())
+        }
+        Advice::UsePrivateL2 => {
+            let p = profile_matrix(csr, "priv", &ProfileConfig::private_l2());
+            (
+                Some(p.max_speedup()),
+                "pinned threads to separate core-groups".into(),
+            )
+        }
+        Advice::UseLocalityReorder => {
+            let plan = reorder::locality_reorder(csr, 64);
+            let fixed = plan.apply(csr);
+            let p = profile_matrix(&fixed, "reord", &ProfileConfig::default());
+            (Some(p.max_speedup()), "applied locality row reorder".into())
+        }
+        Advice::FitsInCache | Advice::NoActionNeeded => {
+            (None, "none needed".into())
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Solver workload: Conjugate Gradient on a 2-D Poisson problem —
+//! the kind of scientific application the paper motivates SpMV with —
+//! executed on the host and characterized on the simulated FT-2000+.
+//!
+//! Run: `cargo run --release --example solver_workload [-- grid_side]`
+
+use ft2000_spmv::coordinator::{profile_matrix, ProfileConfig};
+use ft2000_spmv::corpus::generators;
+use ft2000_spmv::sched::Schedule;
+use ft2000_spmv::solver::{cg, CgOptions};
+use ft2000_spmv::sparse::Coo;
+use ft2000_spmv::util::rng::Pcg32;
+use ft2000_spmv::util::table::Table;
+
+fn main() {
+    let side: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(96);
+    // SPD system: 5-point Laplacian + diagonal shift.
+    let lap = generators::stencil(side * side, 5);
+    let n = lap.n_rows;
+    let mut coo = Coo::new(n, n);
+    for r in 0..n {
+        let (cols, vals) = lap.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            coo.push(r, c as usize, v);
+        }
+        coo.push(r, r, 0.1);
+    }
+    let a = coo.to_csr();
+    let mut rng = Pcg32::new(42);
+    let x_true: Vec<f64> = (0..n).map(|_| rng.gen_f64() - 0.5).collect();
+    let mut b = vec![0.0; n];
+    a.spmv(&x_true, &mut b);
+    println!(
+        "Poisson system: {n} unknowns, {} nonzeros ({}x{} grid)\n",
+        a.nnz(),
+        side,
+        side
+    );
+
+    // --- host solves under different schedules -------------------------
+    let mut t = Table::new(
+        "CG on this machine (rel_tol 1e-8)",
+        &["config", "iters", "converged", "wall SpMV (ms)", "max |x-x*|"],
+    );
+    for (name, opts) in [
+        ("1 thread, CSR", CgOptions::default()),
+        (
+            "4 threads, CSR",
+            CgOptions { threads: 4, ..Default::default() },
+        ),
+        (
+            "4 threads, CSR5",
+            CgOptions {
+                threads: 4,
+                schedule: Schedule::Csr5Tiles { tile_nnz: 256 },
+                ..Default::default()
+            },
+        ),
+        (
+            "4 threads, CSR + Jacobi",
+            CgOptions { threads: 4, jacobi: true, ..Default::default() },
+        ),
+    ] {
+        let r = cg(&a, &b, &opts);
+        let err = r
+            .x
+            .iter()
+            .zip(&x_true)
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0, f64::max);
+        t.row(vec![
+            name.into(),
+            r.iterations.to_string(),
+            r.converged.to_string(),
+            format!("{:.2}", r.spmv_seconds * 1e3),
+            format!("{err:.2e}"),
+        ]);
+    }
+    t.print();
+
+    // --- simulated per-iteration cost on FT-2000+ -----------------------
+    let profile = profile_matrix(&a, "poisson", &ProfileConfig::default());
+    let mut t = Table::new(
+        "Simulated FT-2000+ cost per CG iteration (1 SpMV dominates)",
+        &["threads", "SpMV µs (simulated)", "speedup"],
+    );
+    for (i, nt) in profile.thread_counts.iter().enumerate() {
+        t.row(vec![
+            nt.to_string(),
+            format!("{:.1}", profile.wall_seconds[i] * 1e6),
+            format!("{:.3}x", profile.speedups[i]),
+        ]);
+    }
+    t.print();
+}

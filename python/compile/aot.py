@@ -1,0 +1,170 @@
+"""AOT export: lower the L2 graphs to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The HLO text
+parser on the rust side reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Every artifact is a fixed-shape *bucket*; ``manifest.json`` records the
+bucket table so ``runtime::registry`` on the rust side can select and
+pad without re-parsing HLO. Run as::
+
+    python -m compile.aot --out-dir ../artifacts
+
+(idempotent: skips writing when the manifest matches).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Bucket tables. Square matrices (the corpus is square, like SuiteSparse's
+# square subset the paper uses). M = N for every bucket.
+#
+# ELL buckets: (rows, K). K is the padded row width; rust picks the first
+# bucket with rows >= m and K >= nnz_max (or falls back to seg buckets for
+# pathological rows).
+ELL_BUCKETS = [
+    (1024, 8),
+    (1024, 32),
+    (4096, 8),
+    (4096, 32),
+    (16384, 16),
+]
+# SEG buckets: (nnz_padded, rows). Load-balanced path; used when ELL
+# padding would explode (nnz_max >> nnz_avg, the exdata_1 pathology).
+SEG_BUCKETS = [
+    (16384, 4096),
+    (65536, 16384),
+    (262144, 16384),
+]
+# Power-iteration buckets (rows, K): the composed-graph artifact.
+POWER_BUCKETS = [(4096, 16)]
+# SpMM buckets (rows, K, V): block solvers' multi-vector SpMV.
+SPMM_BUCKETS = [(4096, 16, 8)]
+
+BLOCK_ROWS = 256  # ELL row-tile; all bucket row counts are multiples.
+
+
+def build_jobs():
+    """Yield (name, lowered) for every artifact."""
+    for m, k in ELL_BUCKETS:
+        name = f"ell_spmv_m{m}_k{k}"
+        fn = jax.jit(model.ell_spmv_graph)
+        lowered = fn.lower(
+            _spec((m, k), I32), _spec((m, k), F32), _spec((m,), F32)
+        )
+        yield name, lowered, {
+            "kind": "ell",
+            "rows": m,
+            "k": k,
+            "n": m,
+            "params": ["cols i32[m,k]", "data f32[m,k]", "x f32[n]"],
+            "returns": ["y f32[m]"],
+        }
+    for nnz, m in SEG_BUCKETS:
+        name = f"seg_spmv_nnz{nnz}_m{m}"
+        fn = jax.jit(functools.partial(model.seg_spmv_graph, m=m))
+        lowered = fn.lower(
+            _spec((nnz,), I32),
+            _spec((nnz,), I32),
+            _spec((nnz,), F32),
+            _spec((m,), F32),
+        )
+        yield name, lowered, {
+            "kind": "seg",
+            "rows": m,
+            "nnz": nnz,
+            "n": m,
+            "params": [
+                "cols i32[nnz]",
+                "rows i32[nnz]",
+                "data f32[nnz]",
+                "x f32[n]",
+            ],
+            "returns": ["y f32[m]"],
+        }
+    for m, k, v in SPMM_BUCKETS:
+        name = f"ell_spmm_m{m}_k{k}_v{v}"
+        fn = jax.jit(model.ell_spmm_graph)
+        lowered = fn.lower(
+            _spec((m, k), I32), _spec((m, k), F32), _spec((m, v), F32)
+        )
+        yield name, lowered, {
+            "kind": "spmm",
+            "rows": m,
+            "k": k,
+            "n": m,
+            "v": v,
+            "params": ["cols i32[m,k]", "data f32[m,k]", "x f32[n,v]"],
+            "returns": ["y f32[m,v]"],
+        }
+    for m, k in POWER_BUCKETS:
+        name = f"power_iter_m{m}_k{k}"
+        fn = jax.jit(functools.partial(model.power_iter_graph, iters=4))
+        lowered = fn.lower(
+            _spec((m, k), I32), _spec((m, k), F32), _spec((m,), F32)
+        )
+        yield name, lowered, {
+            "kind": "power",
+            "rows": m,
+            "k": k,
+            "n": m,
+            "iters": 4,
+            "params": ["cols i32[m,k]", "data f32[m,k]", "x0 f32[n]"],
+            "returns": ["v f32[m]", "rayleigh f32[]"],
+        }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"format": "hlo-text", "artifacts": []}
+
+    for name, lowered, meta in build_jobs():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta, name=name, file=os.path.basename(path))
+        manifest["artifacts"].append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Pallas ELL SpMV kernel (row-tiled), the TPU re-expression of the
+paper's row-parallel CSR SpMV.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's OpenMP
+static row partition becomes a BlockSpec row tiling — each grid step
+owns a ``(TM, K)`` slab of the padded nonzero matrix in VMEM, while the
+dense vector ``x`` stays resident in VMEM across all row tiles. That
+residency is the TPU analogue of the shared-L2 reuse of ``x`` that the
+paper identifies as the key scalability factor on FT-2000+.
+
+The per-row dot product is a vectorized multiply + lane reduction on the
+VPU (there is no MXU-shaped matmul in SpMV; the kernel is gather-bound,
+exactly like the CPU version is memory-bound).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO. Real-TPU viability
+is assessed from the VMEM footprint of the chosen BlockSpec (see
+DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ell_kernel(cols_ref, data_ref, x_ref, y_ref):
+    """One row tile: y[TM] = sum_k data[TM, K] * x[cols[TM, K]]."""
+    cols = cols_ref[...]  # i32[TM, K]
+    data = data_ref[...]  # f32[TM, K]
+    x = x_ref[...]  # f32[N] — full vector, VMEM resident
+    gathered = x[cols]  # gather, VPU
+    y_ref[...] = jnp.sum(data * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def ell_spmv(cols, data, x, *, block_rows=256):
+    """ELL SpMV via pallas_call with a row-tiled grid.
+
+    Args:
+      cols: i32[M, K] padded column indices (padding -> 0).
+      data: f32[M, K] padded values (padding -> 0.0).
+      x:    f32[N] dense vector.
+      block_rows: rows per grid step; must divide M. Automatically
+        clamped to M for small matrices (M < block_rows).
+
+    Returns:
+      f32[M] = A @ x.
+    """
+    m, k = data.shape
+    (n,) = x.shape
+    if block_rows > m:
+        block_rows = m
+    if m % block_rows != 0:
+        raise ValueError(f"M={m} not divisible by block_rows={block_rows}")
+    grid = (m // block_rows,)
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),  # x: same full block every step
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), data.dtype),
+        interpret=True,
+    )(cols, data, x)
+
+
+def vmem_bytes(m, k, n, block_rows=256, dtype_bytes=4):
+    """Estimated VMEM working set per grid step for this BlockSpec.
+
+    data tile + cols tile + x + y tile. Used by the §Perf analysis to
+    check the schedule fits the ~16 MiB/core VMEM of a modern TPU.
+    """
+    tile = block_rows * k * dtype_bytes  # data
+    tile += block_rows * k * 4  # cols (i32)
+    tile += n * dtype_bytes  # x resident
+    tile += block_rows * dtype_bytes  # y
+    return tile

@@ -1,0 +1,89 @@
+"""Pure-jnp reference oracles for the SpMV kernels.
+
+These are the correctness ground truth for the Pallas kernels in this
+package (checked by pytest at build time) and define the exact semantics
+the rust runtime relies on:
+
+* ``ell_spmv_ref``  — ELL-padded SpMV. Padding slots carry ``data == 0``
+  and ``col == 0``; they contribute nothing to the row dot product.
+* ``seg_spmv_ref``  — flat (CSR5-style) segmented SpMV over an nnz
+  stream. Padding slots carry ``data == 0`` and ``row == 0``.
+* ``power_iter_ell_ref`` — a small composed graph (repeated normalized
+  SpMV) used to validate that the L2 model composes kernels correctly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(data, cols, x):
+    """ELL SpMV: y[i] = sum_k data[i, k] * x[cols[i, k]].
+
+    Args:
+      data: f32[M, K] nonzero values, zero-padded per row.
+      cols: i32[M, K] column indices, padding slots must be 0.
+      x:    f32[N] dense input vector.
+
+    Returns:
+      f32[M] product vector.
+    """
+    gathered = x[cols]  # [M, K]
+    return jnp.sum(data * gathered, axis=1)
+
+
+def seg_spmv_ref(data, cols, rows, x, m):
+    """Segmented (flat-nnz) SpMV: y = segment_sum(data * x[cols], rows).
+
+    This is the CSR5-shaped computation: the nonzero stream is processed
+    as a flat array regardless of row boundaries, so work is balanced by
+    construction. Padding slots must have ``data == 0`` (their row id is
+    irrelevant but kept in-range, conventionally 0).
+
+    Args:
+      data: f32[NNZ] nonzero values (zero-padded tail).
+      cols: i32[NNZ] column index per nonzero.
+      rows: i32[NNZ] row id (segment id) per nonzero, non-decreasing.
+      x:    f32[N] dense input vector.
+      m:    static output length (number of rows).
+
+    Returns:
+      f32[m] product vector.
+    """
+    prod = data * x[cols]
+    return jax.ops.segment_sum(prod, rows, num_segments=m)
+
+
+def power_iter_ell_ref(data, cols, x0, iters=4):
+    """``iters`` steps of y <- normalize(A @ y) starting from x0.
+
+    Square-matrix (M == N) composed graph used by the L2 model tests and
+    the quickstart example. Normalization uses the L2 norm with an
+    epsilon so the all-zero matrix is safe.
+    """
+
+    def step(_, v):
+        y = ell_spmv_ref(data, cols, v)
+        n = jnp.sqrt(jnp.sum(y * y)) + 1e-12
+        return y / n
+
+    return jax.lax.fori_loop(0, iters, step, x0)
+
+
+def csr_to_ell(ptr, indices, values, m, k):
+    """Host-side helper: convert CSR arrays to zero-padded ELL (numpy).
+
+    Used only by tests/tools; the production conversion lives in rust
+    (``sparse::ell``). Rows with more than ``k`` nonzeros are an error.
+    """
+    import numpy as np
+
+    data = np.zeros((m, k), dtype=np.float32)
+    cols = np.zeros((m, k), dtype=np.int32)
+    for i in range(m):
+        row = values[ptr[i]:ptr[i + 1]]
+        idx = indices[ptr[i]:ptr[i + 1]]
+        if len(row) > k:
+            raise ValueError(f"row {i} has {len(row)} nnz > K={k}")
+        data[i, : len(row)] = row
+        cols[i, : len(idx)] = idx
+    return data, cols

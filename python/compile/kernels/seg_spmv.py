@@ -1,0 +1,90 @@
+"""Pallas segmented-sum SpMV kernel — the CSR5-shaped computation.
+
+CSR5's insight (Liu & Vinter, ICS'15) is that partitioning the *nonzero
+stream* into fixed-size 2-D tiles, instead of partitioning rows, gives
+perfect load balance regardless of the row-length distribution. The
+paper (§5.2.1) uses CSR5 to rescue matrices whose CSR scalability is
+killed by ``job_var >= 0.45``.
+
+TPU re-expression (DESIGN.md §Hardware-Adaptation): the nnz stream is
+reshaped into ``(T, S)`` tiles (CSR5's t×σ); each tile's products
+``data * x[cols]`` are computed vectorized, then a segmented reduction
+keyed by the per-nonzero row id folds products into rows. The
+cross-tile carry that CSR5 handles with ``seg_off``/``y_off``
+descriptors is here subsumed by the scatter-add segment reduction,
+which XLA lowers to a single fused scatter.
+
+Padding: tail slots carry ``data == 0`` and ``row == 0`` so they fold
+harmlessly into row 0.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _seg_kernel(m, cols_ref, rows_ref, data_ref, x_ref, y_ref):
+    """Whole-stream segmented SpMV in one program.
+
+    interpret-mode note: the scatter-add races that would make a
+    multi-program scatter unsafe on real hardware do not arise here —
+    the segment reduction is expressed as one scatter over the full
+    stream, which is also the form XLA fuses best on CPU.
+    """
+    cols = cols_ref[...]
+    rows = rows_ref[...]
+    data = data_ref[...]
+    x = x_ref[...]
+    tiles, width = data.shape
+    prod = (data * x[cols]).reshape(tiles * width)
+    seg = rows.reshape(tiles * width)
+    y = jnp.zeros((m,), dtype=data.dtype).at[seg].add(prod)
+    y_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tile_width"))
+def seg_spmv(cols, rows, data, x, *, m, tile_width=256):
+    """Segmented (CSR5-style) SpMV via pallas_call.
+
+    Args:
+      cols: i32[NNZ] column index per nonzero (padding -> 0).
+      rows: i32[NNZ] row (segment) id per nonzero (padding -> 0).
+      data: f32[NNZ] values (padding -> 0.0).
+      x:    f32[N] dense vector.
+      m:    static number of rows.
+      tile_width: CSR5 sigma; NNZ must be divisible by it.
+
+    Returns:
+      f32[m] = A @ x.
+    """
+    (nnz,) = data.shape
+    if nnz % tile_width != 0:
+        raise ValueError(f"NNZ={nnz} not divisible by tile_width={tile_width}")
+    tiles = nnz // tile_width
+    shape2d = (tiles, tile_width)
+    (n,) = x.shape
+    kernel = functools.partial(_seg_kernel, m)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec(shape2d, lambda: (0, 0)),
+            pl.BlockSpec(shape2d, lambda: (0, 0)),
+            pl.BlockSpec(shape2d, lambda: (0, 0)),
+            pl.BlockSpec((n,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), data.dtype),
+        interpret=True,
+    )(
+        cols.reshape(shape2d),
+        rows.reshape(shape2d),
+        data.reshape(shape2d),
+        x,
+    )
+
+
+def vmem_bytes(nnz, m, n, dtype_bytes=4):
+    """Estimated VMEM working set (whole-stream schedule)."""
+    return nnz * (dtype_bytes + 4 + 4) + n * dtype_bytes + m * dtype_bytes

@@ -1,0 +1,69 @@
+"""L2 — jax compute graphs wrapping the L1 Pallas kernels.
+
+Each public function here is an AOT export target: ``aot.py`` lowers it
+at one or more fixed shape *buckets* (PJRT executables are
+shape-monomorphic) and the rust runtime picks the smallest bucket a
+matrix fits after padding (``runtime::registry``).
+
+Exported graphs:
+
+* ``ell_spmv_graph``      — single ELL SpMV (the workhorse).
+* ``seg_spmv_graph``      — CSR5-style segmented SpMV.
+* ``power_iter_graph``    — 4 normalized SpMV iterations (composition
+  check + the quickstart's "do something real" demo).
+* ``spmv_flops_graph``    — SpMV plus the Gflops bookkeeping reduction
+  (dot-products count) used by the benchmark harness to cross-check the
+  rust-side flop accounting.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ell_spmm import ell_spmm
+from .kernels.ell_spmv import ell_spmv
+from .kernels.seg_spmv import seg_spmv
+
+
+def ell_spmv_graph(cols, data, x):
+    """y = A @ x with A in padded ELL form. Returns a 1-tuple."""
+    return (ell_spmv(cols, data, x),)
+
+
+def ell_spmm_graph(cols, data, x):
+    """Y = A @ X (multi-vector SpMV). Returns a 1-tuple."""
+    return (ell_spmm(cols, data, x),)
+
+
+def seg_spmv_graph(cols, rows, data, x, *, m):
+    """y = A @ x with A as a flat nonzero stream. Returns a 1-tuple."""
+    return (seg_spmv(cols, rows, data, x, m=m),)
+
+
+def power_iter_graph(cols, data, x0, *, iters=4):
+    """iters steps of v <- normalize(A v); returns (v, rayleigh).
+
+    The Rayleigh quotient v'Av gives the dominant-eigenvalue estimate —
+    a realistic consumer of SpMV (the paper motivates SpMV via iterative
+    scientific kernels of exactly this shape).
+    """
+
+    def step(_, v):
+        y = ell_spmv(cols, data, v)
+        n = jnp.sqrt(jnp.sum(y * y)) + 1e-12
+        return y / n
+
+    v = jax.lax.fori_loop(0, iters, step, x0)
+    av = ell_spmv(cols, data, v)
+    rayleigh = jnp.sum(v * av)
+    return (v, rayleigh)
+
+
+def spmv_flops_graph(cols, data, x):
+    """(y, useful_flops) — flops = 2 * count(data != 0) as f32.
+
+    The harness divides by simulated seconds to report Gflops the same
+    way the paper does (2*nnz flops per SpMV).
+    """
+    y = ell_spmv(cols, data, x)
+    nnz = jnp.sum(jnp.where(data != 0.0, 1.0, 0.0))
+    return (y, 2.0 * nnz)

@@ -1,0 +1,43 @@
+"""Shared fixtures: random sparse matrices in ELL / flat-seg form."""
+
+import numpy as np
+import pytest
+
+
+def random_ell(rng, m, k, n, density=0.6):
+    """Random zero-padded ELL arrays. Padding: data=0, col=0."""
+    data = np.zeros((m, k), dtype=np.float32)
+    cols = np.zeros((m, k), dtype=np.int32)
+    for i in range(m):
+        nnz = int(rng.integers(0, k + 1) * density) if k else 0
+        nnz = min(nnz, k)
+        data[i, :nnz] = rng.standard_normal(nnz).astype(np.float32)
+        cols[i, :nnz] = rng.integers(0, n, nnz).astype(np.int32)
+    return data, cols
+
+
+def ell_to_seg(data, cols):
+    """Flatten ELL arrays to the seg kernel's (data, cols, rows) stream,
+    dropping padding then re-padding the tail with row id 0 / data 0."""
+    m, k = data.shape
+    mask = data != 0.0
+    rows2d = np.broadcast_to(np.arange(m, dtype=np.int32)[:, None], (m, k))
+    d = data[mask]
+    c = cols[mask]
+    r = rows2d[mask]
+    return d, c, r
+
+
+def pad_seg(d, c, r, nnz_padded):
+    out_d = np.zeros(nnz_padded, dtype=np.float32)
+    out_c = np.zeros(nnz_padded, dtype=np.int32)
+    out_r = np.zeros(nnz_padded, dtype=np.int32)
+    out_d[: len(d)] = d
+    out_c[: len(c)] = c
+    out_r[: len(r)] = r
+    return out_d, out_c, out_r
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xF7_2000)

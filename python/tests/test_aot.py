@@ -1,0 +1,58 @@
+"""AOT pipeline: every bucket lowers to parseable HLO text and the
+manifest is consistent. This is the build-time gate for `make artifacts`.
+"""
+
+import json
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def jobs():
+    # Lowering all buckets is the expensive part; do it once.
+    return list(aot.build_jobs())
+
+
+def test_all_buckets_lower(jobs):
+    assert len(jobs) == (
+        len(aot.ELL_BUCKETS)
+        + len(aot.SEG_BUCKETS)
+        + len(aot.POWER_BUCKETS)
+        + len(aot.SPMM_BUCKETS)
+    )
+
+
+def test_hlo_text_roundtrippable(jobs):
+    for name, lowered, _meta in jobs:
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ROOT" in text, name
+
+
+def test_meta_schema(jobs):
+    for name, _lowered, meta in jobs:
+        assert meta["kind"] in ("ell", "seg", "power", "spmm")
+        assert meta["rows"] > 0
+        assert isinstance(meta["params"], list) and meta["params"]
+
+
+def test_ell_bucket_rows_divisible_by_block():
+    for m, _k in aot.ELL_BUCKETS:
+        assert m % aot.BLOCK_ROWS == 0
+
+
+def test_manifest_written(tmp_path, monkeypatch, jobs):
+    import sys
+
+    monkeypatch.setattr(
+        sys, "argv", ["aot", "--out-dir", str(tmp_path)]
+    )
+    aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert len(names) == len(manifest["artifacts"])  # unique
+    for a in manifest["artifacts"]:
+        assert (tmp_path / a["file"]).exists()

@@ -1,0 +1,236 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the whole stack — the rust
+runtime executes exactly the HLO these kernels lower to.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ell_spmv import ell_spmv, vmem_bytes
+from compile.kernels.seg_spmv import seg_spmv
+from compile.kernels import ref
+
+from .conftest import ell_to_seg, pad_seg, random_ell
+
+
+# ---------------------------------------------------------------------------
+# ELL kernel
+
+
+def test_ell_identity(rng):
+    """A = I (in ELL form) => y == x."""
+    m = 256
+    data = np.zeros((m, 4), dtype=np.float32)
+    cols = np.zeros((m, 4), dtype=np.int32)
+    data[:, 0] = 1.0
+    cols[:, 0] = np.arange(m)
+    x = rng.standard_normal(m).astype(np.float32)
+    y = np.asarray(ell_spmv(cols, data, x, block_rows=64))
+    np.testing.assert_allclose(y, x, rtol=1e-6)
+
+
+def test_ell_matches_ref(rng):
+    m, k, n = 512, 8, 512
+    data, cols = random_ell(rng, m, k, n)
+    x = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(ell_spmv(cols, data, x, block_rows=128))
+    want = np.asarray(ref.ell_spmv_ref(data, cols, x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ell_matches_dense(rng):
+    """Cross-check against an explicit dense matmul."""
+    m, k, n = 128, 4, 128
+    data, cols = random_ell(rng, m, k, n)
+    x = rng.standard_normal(n).astype(np.float32)
+    dense = np.zeros((m, n), dtype=np.float64)
+    for i in range(m):
+        for j in range(k):
+            dense[i, cols[i, j]] += np.float64(data[i, j])
+    want = dense @ x.astype(np.float64)
+    got = np.asarray(ell_spmv(cols, data, x, block_rows=64))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ell_block_rows_invariance(rng):
+    """Result must not depend on the BlockSpec row tile."""
+    m, k, n = 512, 8, 512
+    data, cols = random_ell(rng, m, k, n)
+    x = rng.standard_normal(n).astype(np.float32)
+    y64 = np.asarray(ell_spmv(cols, data, x, block_rows=64))
+    y256 = np.asarray(ell_spmv(cols, data, x, block_rows=256))
+    y512 = np.asarray(ell_spmv(cols, data, x, block_rows=512))
+    np.testing.assert_allclose(y64, y256, rtol=1e-6)
+    np.testing.assert_allclose(y64, y512, rtol=1e-6)
+
+
+def test_ell_rejects_bad_block():
+    data = np.zeros((100, 4), dtype=np.float32)
+    cols = np.zeros((100, 4), dtype=np.int32)
+    x = np.zeros(100, dtype=np.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        ell_spmv(cols, data, x, block_rows=64)
+
+
+def test_ell_zero_matrix():
+    m = 128
+    data = np.zeros((m, 8), dtype=np.float32)
+    cols = np.zeros((m, 8), dtype=np.int32)
+    x = np.ones(m, dtype=np.float32)
+    y = np.asarray(ell_spmv(cols, data, x, block_rows=64))
+    assert np.all(y == 0.0)
+
+
+def test_vmem_estimate_sane():
+    # 16384x16 bucket: ~3.3 MiB — comfortably inside 16 MiB VMEM.
+    b = vmem_bytes(16384, 16, 16384, block_rows=256)
+    assert b < 16 * 2**20
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m_pow=st.integers(6, 9),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ell_hypothesis_sweep(m_pow, k, seed):
+    """Shape/content sweep: kernel == oracle for random ELL matrices."""
+    m = 2**m_pow
+    r = np.random.default_rng(seed)
+    data, cols = random_ell(r, m, k, m)
+    x = r.standard_normal(m).astype(np.float32)
+    got = np.asarray(ell_spmv(cols, data, x, block_rows=64))
+    want = np.asarray(ref.ell_spmv_ref(data, cols, x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Segmented (CSR5-style) kernel
+
+
+def test_seg_matches_ref(rng):
+    m, k, n = 256, 8, 256
+    data, cols = random_ell(rng, m, k, n)
+    d, c, r = ell_to_seg(data, cols)
+    nnz_padded = 2048
+    d, c, r = pad_seg(d, c, r, nnz_padded)
+    x = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(seg_spmv(c, r, d, x, m=m, tile_width=256))
+    want = np.asarray(ref.seg_spmv_ref(d, c, r, x, m))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_seg_matches_ell(rng):
+    """The two kernels must agree: same matrix, different layouts."""
+    m, k, n = 256, 8, 256
+    data, cols = random_ell(rng, m, k, n)
+    x = rng.standard_normal(n).astype(np.float32)
+    y_ell = np.asarray(ell_spmv(cols, data, x, block_rows=64))
+    d, c, r = pad_seg(*ell_to_seg(data, cols), 2048)
+    y_seg = np.asarray(seg_spmv(c, r, d, x, m=m, tile_width=256))
+    np.testing.assert_allclose(y_ell, y_seg, rtol=1e-4, atol=1e-4)
+
+
+def test_seg_single_dense_row(rng):
+    """The exdata_1 pathology: all nonzeros in one row. ELL cannot hold
+    it without K=m; the seg kernel handles it natively."""
+    m, nnz = 64, 1024
+    d = rng.standard_normal(nnz).astype(np.float32)
+    c = rng.integers(0, m, nnz).astype(np.int32)
+    r = np.full(nnz, 7, dtype=np.int32)
+    x = rng.standard_normal(m).astype(np.float32)
+    got = np.asarray(seg_spmv(c, r, d, x, m=m, tile_width=256))
+    want = np.zeros(m, dtype=np.float64)
+    for j in range(nnz):
+        want[7] += np.float64(d[j]) * np.float64(x[c[j]])
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_seg_rejects_bad_tile():
+    d = np.zeros(100, dtype=np.float32)
+    c = np.zeros(100, dtype=np.int32)
+    r = np.zeros(100, dtype=np.int32)
+    x = np.zeros(10, dtype=np.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        seg_spmv(c, r, d, x, m=10, tile_width=64)
+
+
+def test_seg_tile_width_invariance(rng):
+    """Result must not depend on the CSR5 tile width (sigma)."""
+    m, k, n = 128, 6, 128
+    data, cols = random_ell(rng, m, k, n)
+    d, c, r = pad_seg(*ell_to_seg(data, cols), 1024)
+    x = rng.standard_normal(n).astype(np.float32)
+    outs = [
+        np.asarray(seg_spmv(c, r, d, x, m=m, tile_width=w))
+        for w in (64, 128, 256, 512, 1024)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-6)
+
+
+def test_seg_all_padding():
+    """A fully-padded (empty) stream yields zero output."""
+    d = np.zeros(256, dtype=np.float32)
+    c = np.zeros(256, dtype=np.int32)
+    r = np.zeros(256, dtype=np.int32)
+    x = np.ones(32, dtype=np.float32)
+    y = np.asarray(seg_spmv(c, r, d, x, m=32, tile_width=256))
+    assert np.all(y == 0.0)
+
+
+def test_seg_duplicate_coordinates_accumulate(rng):
+    """Multiple stream entries with the same (row, col) must sum."""
+    d = np.array([1.0, 2.0, 3.0] + [0.0] * 253, dtype=np.float32)
+    c = np.array([5, 5, 5] + [0] * 253, dtype=np.int32)
+    r = np.array([2, 2, 2] + [0] * 253, dtype=np.int32)
+    x = np.arange(16, dtype=np.float32)
+    y = np.asarray(seg_spmv(c, r, d, x, m=16, tile_width=256))
+    assert y[2] == pytest.approx(6.0 * 5.0)
+
+
+def test_ell_duplicate_columns_accumulate():
+    """ELL rows may repeat a column; contributions must sum."""
+    data = np.array([[1.0, 2.0]], dtype=np.float32)
+    cols = np.array([[3, 3]], dtype=np.int32)
+    x = np.zeros(8, dtype=np.float32)
+    x[3] = 10.0
+    y = np.asarray(ell_spmv(cols, data, x, block_rows=1))
+    assert y[0] == pytest.approx(30.0)
+
+
+def test_kernels_float32_accumulation_order(rng):
+    """Both kernels stay within float32 tolerance of a float64 oracle
+    on ill-conditioned inputs (large cancellations)."""
+    m, k, n = 64, 8, 64
+    data, cols = random_ell(rng, m, k, n)
+    data *= 1e4  # amplify cancellation error
+    x = (rng.standard_normal(n) * 1e3).astype(np.float32)
+    want = np.zeros(m, dtype=np.float64)
+    for i in range(m):
+        for j in range(k):
+            want[i] += np.float64(data[i, j]) * np.float64(x[cols[i, j]])
+    got = np.asarray(ell_spmv(cols, data, x, block_rows=64))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m_pow=st.integers(5, 9),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_seg_hypothesis_sweep(m_pow, k, seed):
+    m = 2**m_pow
+    r_ = np.random.default_rng(seed)
+    data, cols = random_ell(r_, m, k, m)
+    x = r_.standard_normal(m).astype(np.float32)
+    d, c, r = ell_to_seg(data, cols)
+    nnz_padded = max(256, int(2 ** np.ceil(np.log2(max(len(d), 1) + 1))))
+    nnz_padded = ((nnz_padded + 255) // 256) * 256
+    d, c, r = pad_seg(d, c, r, nnz_padded)
+    got = np.asarray(seg_spmv(c, r, d, x, m=m, tile_width=256))
+    want = np.asarray(ref.seg_spmv_ref(d, c, r, x, m))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

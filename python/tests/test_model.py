@@ -1,0 +1,64 @@
+"""L2 correctness: composed graphs (power iteration, flops graph)."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+from .conftest import random_ell
+
+
+def _sym_ell(rng, m, k):
+    """A diagonally-dominant symmetric-ish ELL matrix with a known
+    dominant direction (for power-iteration convergence checks)."""
+    data = np.zeros((m, k), dtype=np.float32)
+    cols = np.zeros((m, k), dtype=np.int32)
+    data[:, 0] = 2.0 + rng.random(m).astype(np.float32)
+    cols[:, 0] = np.arange(m)
+    if k > 1:
+        data[:, 1] = 0.1
+        cols[:, 1] = (np.arange(m) + 1) % m
+    return data, cols
+
+
+def test_power_iter_matches_ref(rng):
+    m, k = 256, 4
+    data, cols = _sym_ell(rng, m, k)
+    x0 = np.ones(m, dtype=np.float32) / np.sqrt(m)
+    v, lam = model.power_iter_graph(cols, data, x0, iters=4)
+    v_ref = np.asarray(ref.power_iter_ell_ref(data, cols, x0, iters=4))
+    np.testing.assert_allclose(np.asarray(v), v_ref, rtol=1e-5, atol=1e-5)
+    assert np.isfinite(float(lam))
+
+
+def test_power_iter_unit_norm(rng):
+    m, k = 256, 4
+    data, cols = _sym_ell(rng, m, k)
+    x0 = np.ones(m, dtype=np.float32) / np.sqrt(m)
+    v, _ = model.power_iter_graph(cols, data, x0, iters=8)
+    assert abs(float(np.linalg.norm(np.asarray(v))) - 1.0) < 1e-4
+
+
+def test_power_iter_rayleigh_in_spectrum(rng):
+    """For a diagonal matrix the Rayleigh quotient must lie within
+    [min(diag), max(diag)]."""
+    m = 128
+    diag = (1.0 + np.arange(m) / m).astype(np.float32)
+    data = np.zeros((m, 4), dtype=np.float32)
+    cols = np.zeros((m, 4), dtype=np.int32)
+    data[:, 0] = diag
+    cols[:, 0] = np.arange(m)
+    x0 = np.ones(m, dtype=np.float32) / np.sqrt(m)
+    _, lam = model.power_iter_graph(cols, data, x0, iters=16)
+    assert diag.min() - 1e-4 <= float(lam) <= diag.max() + 1e-4
+
+
+def test_flops_graph_counts_nonzeros(rng):
+    m, k, n = 128, 8, 128
+    data, cols = random_ell(rng, m, k, n)
+    x = rng.standard_normal(n).astype(np.float32)
+    y, flops = model.spmv_flops_graph(cols, data, x)
+    want_y = np.asarray(ref.ell_spmv_ref(data, cols, x))
+    np.testing.assert_allclose(np.asarray(y), want_y, rtol=1e-4, atol=1e-4)
+    assert float(flops) == pytest.approx(2.0 * np.count_nonzero(data))

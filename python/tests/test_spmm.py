@@ -1,0 +1,58 @@
+"""SpMM kernel vs oracle + consistency with per-vector SpMV."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ell_spmm import ell_spmm, ell_spmm_ref, vmem_bytes
+from compile.kernels.ell_spmv import ell_spmv
+
+from .conftest import random_ell
+
+
+def test_spmm_matches_ref(rng):
+    m, k, n, v = 256, 8, 256, 4
+    data, cols = random_ell(rng, m, k, n)
+    x = rng.standard_normal((n, v)).astype(np.float32)
+    got = np.asarray(ell_spmm(cols, data, x, block_rows=64))
+    want = np.asarray(ell_spmm_ref(data, cols, x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_columns_match_spmv(rng):
+    """Each SpMM output column equals the SpMV on that x column."""
+    m, k, n, v = 128, 6, 128, 3
+    data, cols = random_ell(rng, m, k, n)
+    x = rng.standard_normal((n, v)).astype(np.float32)
+    y = np.asarray(ell_spmm(cols, data, x, block_rows=64))
+    for j in range(v):
+        yj = np.asarray(ell_spmv(cols, data, x[:, j].copy(), block_rows=64))
+        np.testing.assert_allclose(y[:, j], yj, rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_single_vector_degenerate(rng):
+    m, k, n = 64, 4, 64
+    data, cols = random_ell(rng, m, k, n)
+    x = rng.standard_normal((n, 1)).astype(np.float32)
+    y = np.asarray(ell_spmm(cols, data, x, block_rows=64))
+    assert y.shape == (m, 1)
+
+
+def test_vmem_estimate_positive():
+    assert vmem_bytes(4096, 16, 4096, 8) > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m_pow=st.integers(5, 8),
+    k=st.integers(1, 8),
+    v=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_hypothesis_sweep(m_pow, k, v, seed):
+    m = 2**m_pow
+    r = np.random.default_rng(seed)
+    data, cols = random_ell(r, m, k, m)
+    x = r.standard_normal((m, v)).astype(np.float32)
+    got = np.asarray(ell_spmm(cols, data, x, block_rows=32))
+    want = np.asarray(ell_spmm_ref(data, cols, x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,21 @@
+//! Shared helpers for the figure/table bench harnesses.
+//!
+//! Each bench target regenerates one table or figure of the paper,
+//! printing the same rows/series the paper reports. Scale defaults to
+//! the fast corpus; set `FT2000_SUITE=full` for the paper-scale 1008
+//! matrices (or `tiny` for smoke runs).
+
+use ft2000_spmv::corpus::suite::SuiteSpec;
+
+pub fn suite_from_env() -> SuiteSpec {
+    match std::env::var("FT2000_SUITE").as_deref() {
+        Ok("full") => SuiteSpec::full(),
+        Ok("tiny") => SuiteSpec::tiny(),
+        _ => SuiteSpec::fast(),
+    }
+}
+
+pub fn banner(id: &str, paper: &str) {
+    println!("\n=== {id} ===");
+    println!("paper reference: {paper}\n");
+}

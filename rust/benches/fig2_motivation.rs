@@ -1,0 +1,73 @@
+//! Fig 2 — motivation: bone010 CSR SpMV, 1–16 threads, Intel Xeon
+//! E5-2692 vs Phytium FT-2000+.
+//!
+//! Paper shape: Xeon rises ~linearly to 4 threads then flattens
+//! (memory bus saturates); FT-2000+ starts lower, rises only slightly
+//! inside the first core-group, then climbs quasi-linearly to 16
+//! threads as more core-groups (each with its own L2 + DCU share)
+//! come online.
+
+mod common;
+
+use ft2000_spmv::coordinator::{profile_matrix, ProfileConfig};
+use ft2000_spmv::corpus::NamedMatrix;
+use ft2000_spmv::sim::topology::{Placement, Topology};
+use ft2000_spmv::util::table::{series, Table};
+
+fn main() {
+    common::banner(
+        "Fig 2",
+        "SpMV performance (Gflops) of bone010, 1-16 threads, Xeon vs FT-2000+",
+    );
+    let csr = NamedMatrix::Bone010.generate();
+    let threads: Vec<usize> = vec![1, 2, 4, 8, 12, 16];
+    let mut table = Table::new(
+        "Fig 2 — bone010 SpMV Gflops by thread count",
+        &["threads", "Xeon E5-2692", "FT-2000+"],
+    );
+    let mut xeon_pts = Vec::new();
+    let mut ft_pts = Vec::new();
+    let xeon_cfg = ProfileConfig {
+        topo: Topology::xeon_e5_2692(),
+        threads: threads.clone(),
+        ..Default::default()
+    };
+    let ft_cfg = ProfileConfig {
+        topo: Topology::ft2000plus(),
+        placement: Placement::CoreGroupFirst,
+        threads: threads.clone(),
+        ..Default::default()
+    };
+    let xeon = profile_matrix(&csr, "bone010", &xeon_cfg);
+    let ft = profile_matrix(&csr, "bone010", &ft_cfg);
+    for (i, nt) in threads.iter().enumerate() {
+        table.row(vec![
+            nt.to_string(),
+            format!("{:.3}", xeon.gflops[i]),
+            format!("{:.3}", ft.gflops[i]),
+        ]);
+        xeon_pts.push((*nt as f64, xeon.gflops[i]));
+        ft_pts.push((*nt as f64, ft.gflops[i]));
+    }
+    table.print();
+    println!("{}", series("xeon", &xeon_pts));
+    println!("{}", series("ft2000+", &ft_pts));
+
+    // Shape assertions the paper's narrative makes:
+    let x4 = xeon.gflops[2];
+    let x16 = xeon.gflops[5];
+    println!(
+        "\nXeon 4->16 thread gain: {:.1}% (paper: 'very slight')",
+        100.0 * (x16 - x4) / x4
+    );
+    let f4 = ft.gflops[2];
+    let f16 = ft.gflops[5];
+    println!(
+        "FT-2000+ 4->16 thread gain: {:.1}% (paper: 'quasi-linear speedup')",
+        100.0 * (f16 - f4) / f4
+    );
+    println!(
+        "single-thread ratio Xeon/FT: {:.2}x (paper: Xeon clearly faster per core)",
+        xeon.gflops[0] / ft.gflops[0]
+    );
+}

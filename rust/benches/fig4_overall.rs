@@ -1,0 +1,29 @@
+//! Fig 4 + Table 2 — overall speedup of the corpus, 1–4 threads on a
+//! core-group.
+//!
+//! Paper shape: most 4-thread speedups lie between 1x and 2x; a small
+//! tail is hyper-linear; averages 1.0 / 1.50 / 1.77 / 1.93.
+
+mod common;
+
+use ft2000_spmv::coordinator::{report, Campaign, ProfileConfig};
+use ft2000_spmv::util::table::ascii_scatter;
+
+fn main() {
+    let suite = common::suite_from_env();
+    common::banner(
+        "Fig 4 + Table 2",
+        "overall speedup of SpMV in 1-4 threads on FT-2000+ (one core-group)",
+    );
+    eprintln!("sweeping {} matrices...", suite.total());
+    let profiles = Campaign::new(suite, ProfileConfig::default()).run();
+
+    report::table2_average_speedups(&profiles).print();
+    report::fig4_distribution(&profiles).print();
+
+    // Fig 4 as an ascii scatter: matrix index vs 4-thread speedup.
+    let xs: Vec<f64> = (0..profiles.len()).map(|i| i as f64).collect();
+    let ys: Vec<f64> = profiles.iter().map(|p| p.max_speedup()).collect();
+    println!("Fig 4 — speedup per matrix (x: matrix, y: 4t speedup):");
+    println!("{}", ascii_scatter(&xs, &ys, 72, 12));
+}

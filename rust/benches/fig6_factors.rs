@@ -1,0 +1,60 @@
+//! Fig 6 — scatter plots + binned averages of the three identified
+//! factors against 4-thread speedup.
+//!
+//! Paper shape: speedup declines as job_var grows past ~0.45 (b), as
+//! L2_DCMR_change grows (d), and as normalized nnz_var grows (f).
+
+mod common;
+
+use ft2000_spmv::coordinator::{report, Campaign, ProfileConfig};
+use ft2000_spmv::util::stats;
+use ft2000_spmv::util::table::ascii_scatter;
+
+fn main() {
+    let suite = common::suite_from_env();
+    common::banner(
+        "Fig 6",
+        "correspondence between the three factors and SpMV speedup",
+    );
+    eprintln!("sweeping {} matrices...", suite.total());
+    let profiles = Campaign::new(suite, ProfileConfig::default()).run();
+    let speedups: Vec<f64> =
+        profiles.iter().map(|p| p.max_speedup()).collect();
+
+    for (name, xs, normalize) in [
+        (
+            "job_var",
+            profiles.iter().map(|p| p.derived.job_var).collect::<Vec<_>>(),
+            false,
+        ),
+        (
+            "L2_DCMR_change",
+            profiles
+                .iter()
+                .map(|p| p.derived.l2_dcmr_change)
+                .collect::<Vec<_>>(),
+            false,
+        ),
+        (
+            "nnz_var",
+            profiles.iter().map(|p| p.features.nnz_var).collect::<Vec<_>>(),
+            true,
+        ),
+    ] {
+        let xs = if normalize {
+            stats::minmax_normalize(&xs)
+        } else {
+            xs
+        };
+        println!(
+            "Fig 6 ({name}) — scatter (x: {name}{}, y: 4t speedup):",
+            if normalize { ", normalized" } else { "" }
+        );
+        println!("{}", ascii_scatter(&xs, &speedups, 64, 10));
+        report::fig6_binned(&profiles, name, 6).print();
+        println!(
+            "pearson r({name}, speedup) = {:+.3}\n",
+            stats::pearson(&xs, &speedups)
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! Fig 7 — CSR vs CSR5 on exdata_1: job_var and speedup by thread
+//! count, plus the corpus-level §5.2.1 check (CSR5 on every matrix
+//! with job_var >= 0.45).
+//!
+//! Paper: on exdata_1 CSR5 drops job_var 0.992 -> 0.298 and lifts the
+//! 4-thread speedup 1.018x -> 1.468x; over all imbalance-flagged
+//! matrices the average improves 1.632x -> 2.023x.
+
+mod common;
+
+use ft2000_spmv::coordinator::{profile_matrix, Campaign, ProfileConfig};
+use ft2000_spmv::sched::{partition, Schedule};
+use ft2000_spmv::sparse::features::job_var;
+use ft2000_spmv::corpus::NamedMatrix;
+use ft2000_spmv::util::stats;
+use ft2000_spmv::util::table::Table;
+
+fn main() {
+    common::banner("Fig 7", "job_var and speedup of exdata_1 in CSR vs CSR5");
+    let csr = NamedMatrix::Exdata1.generate();
+    let csr5_sched = Schedule::Csr5Tiles { tile_nnz: 256 };
+
+    let jv_csr =
+        job_var(&partition(&csr, Schedule::CsrRowStatic, 4).thread_nnz(&csr));
+    let jv_csr5 = job_var(&partition(&csr, csr5_sched, 4).thread_nnz(&csr));
+
+    let p_csr = profile_matrix(&csr, "exdata_1", &ProfileConfig::default());
+    let p_csr5 = profile_matrix(
+        &csr,
+        "exdata_1",
+        &ProfileConfig { schedule: csr5_sched, ..Default::default() },
+    );
+
+    let mut t = Table::new(
+        "Fig 7 — exdata_1: CSR vs CSR5 (paper: job_var 0.992->0.298, speedup 1.018x->1.468x)",
+        &["metric", "CSR", "CSR5"],
+    );
+    t.row(vec![
+        "job_var (4t)".into(),
+        format!("{jv_csr:.3}"),
+        format!("{jv_csr5:.3}"),
+    ]);
+    for (i, nt) in p_csr.thread_counts.iter().enumerate() {
+        t.row(vec![
+            format!("speedup {nt}t"),
+            format!("{:.3}x", p_csr.speedups[i]),
+            format!("{:.3}x", p_csr5.speedups[i]),
+        ]);
+    }
+    t.print();
+
+    // Corpus-level: CSR5 on all imbalance-flagged matrices.
+    let suite = common::suite_from_env();
+    eprintln!("sweeping {} matrices for the flagged-set check...", suite.total());
+    let base = Campaign::new(suite.clone(), ProfileConfig::default()).run();
+    let entries = suite.entries();
+    let mut before = Vec::new();
+    let mut after = Vec::new();
+    for (i, p) in base.iter().enumerate() {
+        if p.derived.job_var >= 0.45 {
+            let m = suite.materialize(&entries[i]);
+            before.push(p.max_speedup());
+            after.push(
+                profile_matrix(
+                    &m.csr,
+                    &m.name,
+                    &ProfileConfig { schedule: csr5_sched, ..Default::default() },
+                )
+                .max_speedup(),
+            );
+        }
+    }
+    println!(
+        "\nCSR5 on the {} matrices with job_var >= 0.45:\n  average 4t speedup {:.3}x -> {:.3}x   (paper: 1.632x -> 2.023x)",
+        before.len(),
+        stats::mean(&before),
+        stats::mean(&after)
+    );
+}

@@ -1,0 +1,60 @@
+//! Fig 8 + §5.2.2 — shared vs private L2 placement.
+//!
+//! Paper: conf5_4-8x8-20 improves 1.35x -> 3.61x with private L2
+//! (L2 miss rate 30% -> 25%); asia_osm barely improves (3.170x ->
+//! 3.254x, +2.6%) because nnz_avg < 3; the corpus average improves
+//! 1.93x -> 3.40x.
+
+mod common;
+
+use ft2000_spmv::coordinator::{profile_matrix, Campaign, ProfileConfig};
+use ft2000_spmv::corpus::NamedMatrix;
+use ft2000_spmv::util::stats;
+use ft2000_spmv::util::table::Table;
+
+fn main() {
+    common::banner("Fig 8", "SpMV scalability with shared vs private L2 caches");
+    let group = ProfileConfig::default();
+    let private = ProfileConfig::private_l2();
+
+    let mut t = Table::new(
+        "Fig 8 — 4-thread speedup: one core-group vs private L2",
+        &["matrix", "shared L2", "private L2", "paper"],
+    );
+    for (named, paper) in [
+        (NamedMatrix::Conf5_4_8x8_20, "1.35x -> 3.61x"),
+        (NamedMatrix::AsiaOsm, "3.170x -> 3.254x"),
+        (NamedMatrix::Debr, "(not reported)"),
+    ] {
+        let csr = named.generate();
+        let g = profile_matrix(&csr, named.name(), &group);
+        let p = profile_matrix(&csr, named.name(), &private);
+        t.row(vec![
+            named.name().to_string(),
+            format!("{:.3}x", g.max_speedup()),
+            format!("{:.3}x", p.max_speedup()),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+
+    let suite = common::suite_from_env();
+    eprintln!("corpus averages over {} matrices...", suite.total());
+    let g_avg = stats::mean(
+        &Campaign::new(suite.clone(), group)
+            .run()
+            .iter()
+            .map(|p| p.max_speedup())
+            .collect::<Vec<_>>(),
+    );
+    let p_avg = stats::mean(
+        &Campaign::new(suite, private)
+            .run()
+            .iter()
+            .map(|p| p.max_speedup())
+            .collect::<Vec<_>>(),
+    );
+    println!(
+        "\ncorpus average 4-thread speedup: {g_avg:.3}x (shared) -> {p_avg:.3}x (private)   (paper: 1.93x -> 3.40x)"
+    );
+}

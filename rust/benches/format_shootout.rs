@@ -1,0 +1,90 @@
+//! Format/schedule shoot-out + learned selector evaluation.
+//!
+//! For every structural class: which schedule wins on the simulated
+//! FT-2000+ core-group, and how close does the static-feature
+//! classifier (the paper's future-work "decide whether to apply these
+//! optimizations" tool) get to the oracle?
+
+mod common;
+
+use std::collections::HashMap;
+
+use ft2000_spmv::coordinator::format_select::{
+    candidates, label_matrix, FormatSelector,
+};
+use ft2000_spmv::util::table::Table;
+
+fn main() {
+    let suite = common::suite_from_env();
+    common::banner(
+        "Format shoot-out",
+        "per-class schedule winners + learned selector (future work, §5.2.3)",
+    );
+    eprintln!("labeling {} matrices (3 schedules each)...", suite.total());
+    let entries = suite.entries();
+    let samples: Vec<_> = entries
+        .iter()
+        .map(|e| {
+            let m = suite.materialize(e);
+            (e.class, label_matrix(&m.csr, &e.name))
+        })
+        .collect();
+
+    // Per-class winner counts.
+    let mut per_class: HashMap<&str, Vec<usize>> = HashMap::new();
+    for (class, s) in &samples {
+        per_class
+            .entry(class.name())
+            .or_insert_with(|| vec![0; candidates().len()])
+            [s.best] += 1;
+    }
+    let mut t = Table::new(
+        "Winning schedule by structural class (4 threads, one core-group)",
+        &["class", "csr-static", "csr-balanced", "csr5-t256"],
+    );
+    let mut classes: Vec<_> = per_class.iter().collect();
+    classes.sort_by_key(|(name, _)| *name);
+    for (name, wins) in classes {
+        t.row(vec![
+            name.to_string(),
+            wins[0].to_string(),
+            wins[1].to_string(),
+            wins[2].to_string(),
+        ]);
+    }
+    t.print();
+
+    // Train/test split for the selector.
+    let n = samples.len();
+    let cut = n * 8 / 10;
+    let train: Vec<_> =
+        samples[..cut].iter().map(|(_, s)| s.clone()).collect();
+    let test: Vec<_> = samples[cut..].iter().map(|(_, s)| s.clone()).collect();
+    let sel = FormatSelector::train(&train);
+    let (acc_tr, ratio_tr) = sel.evaluate(&train);
+    let (acc_te, ratio_te) = sel.evaluate(&test);
+    let static_ratio = |xs: &[ft2000_spmv::coordinator::format_select::LabeledMatrix]| {
+        xs.iter().map(|s| s.seconds[s.best] / s.seconds[0]).sum::<f64>()
+            / xs.len().max(1) as f64
+    };
+    let mut t = Table::new(
+        "Learned selector (static pre-run features only)",
+        &["metric", "train", "held-out"],
+    );
+    t.row(vec![
+        "label accuracy".into(),
+        format!("{:.1}%", acc_tr * 100.0),
+        format!("{:.1}%", acc_te * 100.0),
+    ]);
+    t.row(vec![
+        "achieved/oracle perf".into(),
+        format!("{:.1}%", ratio_tr * 100.0),
+        format!("{:.1}%", ratio_te * 100.0),
+    ]);
+    t.row(vec![
+        "always-CSR-static baseline".into(),
+        format!("{:.1}%", static_ratio(&train) * 100.0),
+        format!("{:.1}%", static_ratio(&test) * 100.0),
+    ]);
+    t.print();
+}

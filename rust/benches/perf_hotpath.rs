@@ -1,0 +1,99 @@
+//! §Perf — wall-clock benchmarks of the hot paths on THIS machine
+//! (criterion is unavailable offline; `util::bench` implements the
+//! 95%-CI measurement protocol).
+//!
+//! Targets:
+//! * cache probe micro-benchmark (the simulator's innermost loop);
+//! * trace-driven simulation throughput (accesses/second);
+//! * native CSR/CSR5 SpMV executor (Gflops on the host);
+//! * end-to-end matrix profile (the campaign unit of work).
+
+mod common;
+
+use ft2000_spmv::coordinator::{profile_matrix, ProfileConfig};
+use ft2000_spmv::corpus::generators;
+use ft2000_spmv::exec;
+use ft2000_spmv::sched::Schedule;
+use ft2000_spmv::sim::cache::{Cache, Replacement};
+use ft2000_spmv::sim::engine::{simulate, ThreadSpec};
+use ft2000_spmv::sim::topology::Topology;
+use ft2000_spmv::trace::CsrTrace;
+use ft2000_spmv::util::bench::{bench, black_box, BenchConfig};
+use ft2000_spmv::util::rng::Pcg32;
+
+fn main() {
+    common::banner("§Perf", "host wall-clock of the simulator/executor hot paths");
+    let cfg = BenchConfig::default();
+    let mut rng = Pcg32::new(0xBE7C);
+
+    // --- cache probe micro ---------------------------------------------
+    let addrs: Vec<u64> =
+        (0..1_000_000).map(|_| (rng.gen_range(1 << 22) as u64) << 3).collect();
+    for (name, policy) in
+        [("lru", Replacement::Lru), ("random", Replacement::Random)]
+    {
+        let mut cache = Cache::with_policy(2 * 1024 * 1024, 16, policy);
+        let r = bench(&format!("cache_probe_{name}_1M"), &cfg, || {
+            for &a in &addrs {
+                black_box(cache.access(a));
+            }
+        });
+        println!(
+            "{}  ({:.1} M probes/s)",
+            r.summary(),
+            1.0 / r.mean_s
+        );
+    }
+
+    // --- simulation throughput ------------------------------------------
+    let csr = generators::random_uniform(16_384, 16, &mut rng);
+    let accesses = (2 * csr.n_rows + 3 * csr.nnz()) as f64;
+    let topo = Topology::ft2000plus();
+    let r = bench("simulate_4t_random16k", &cfg, || {
+        let threads: Vec<ThreadSpec<CsrTrace>> = (0..4)
+            .map(|t| ThreadSpec {
+                gen: CsrTrace::new(
+                    &csr,
+                    csr.n_rows * t / 4,
+                    csr.n_rows * (t + 1) / 4,
+                ),
+                core: t,
+            })
+            .collect();
+        black_box(simulate(&topo, threads));
+    });
+    println!(
+        "{}  ({:.1} M accesses/s)",
+        r.summary(),
+        accesses / r.mean_s / 1e6
+    );
+
+    // --- native SpMV executors ------------------------------------------
+    let x: Vec<f64> = (0..csr.n_cols).map(|_| rng.gen_f64()).collect();
+    for (name, sched) in [
+        ("csr_seq", None),
+        ("csr_4t", Some(Schedule::CsrRowStatic)),
+        ("csr5_4t", Some(Schedule::Csr5Tiles { tile_nnz: 256 })),
+    ] {
+        let r = bench(&format!("spmv_{name}"), &cfg, || match sched {
+            None => {
+                black_box(exec::spmv_sequential(&csr, &x));
+            }
+            Some(s) => {
+                black_box(exec::spmv_threaded(&csr, &x, s, 4));
+            }
+        });
+        println!(
+            "{}  ({:.3} Gflops host)",
+            r.summary(),
+            2.0 * csr.nnz() as f64 / r.mean_s / 1e9
+        );
+    }
+
+    // --- campaign unit of work ------------------------------------------
+    let small = generators::banded(4096, 8, &mut rng);
+    let r = bench("profile_matrix_banded4k", &cfg, || {
+        black_box(profile_matrix(&small, "b", &ProfileConfig::default()));
+    });
+    println!("{}", r.summary());
+}

@@ -1,0 +1,80 @@
+//! Fig 9 + Table 5 — the locality-aware storage format experiment.
+//!
+//! The synthesized matrix has 64*6400 rows with 4 nonzeros per row,
+//! drawn from interleaved distant column clusters (Fig 9 left: worst
+//! possible x reuse). The locality-aware reorder groups rows with
+//! similar column signatures (Fig 9 right).
+//!
+//! Paper (Table 5): single-thread 0.419 -> 0.585 Gflops; 64-thread
+//! 15.907 -> 27.306 Gflops (+71.7%); scalability 37.96x -> 46.68x.
+
+mod common;
+
+use ft2000_spmv::coordinator::{profile_matrix, ProfileConfig};
+use ft2000_spmv::corpus::generators::poor_locality;
+use ft2000_spmv::reorder::{locality_reorder, locality_score};
+use ft2000_spmv::util::rng::Pcg32;
+use ft2000_spmv::util::table::Table;
+
+fn main() {
+    common::banner(
+        "Table 5",
+        "performance and scalability of SpMV by exploiting the locality of x",
+    );
+    // Paper geometry: rows = 64*6400, avg nonzeros per row = 4.
+    let n = 64 * 6400;
+    let mut rng = Pcg32::new(0x10CA11);
+    let synth = poor_locality(n, 4, 64, &mut rng);
+    let plan = locality_reorder(&synth, 64);
+    let transformed = plan.apply(&synth);
+    println!(
+        "locality score (block overlap of adjacent rows): {:.3} -> {:.3}\n",
+        locality_score(&synth, 64),
+        locality_score(&transformed, 64)
+    );
+
+    // 1 thread and 64 threads across the whole chip (core-group-first
+    // covers all 16 groups / 8 panels at 64 threads).
+    let cfg = ProfileConfig {
+        threads: vec![1, 4, 16, 64],
+        ..Default::default()
+    };
+    let p_synth = profile_matrix(&synth, "synthesized", &cfg);
+    let p_trans = profile_matrix(&transformed, "transformed", &cfg);
+
+    let mut t = Table::new(
+        "Table 5 — synthesized vs transformed (locality-aware) matrix",
+        &["metric", "synthesized", "transformed", "paper"],
+    );
+    t.row(vec![
+        "single-thread Perf.".into(),
+        format!("{:.3} Gflops", p_synth.gflops[0]),
+        format!("{:.3} Gflops", p_trans.gflops[0]),
+        "0.419 -> 0.585 Gflops".into(),
+    ]);
+    let last = cfg.threads.len() - 1;
+    t.row(vec![
+        "64-thread Perf.".into(),
+        format!("{:.3} Gflops", p_synth.gflops[last]),
+        format!("{:.3} Gflops", p_trans.gflops[last]),
+        "15.907 -> 27.306 Gflops".into(),
+    ]);
+    t.row(vec![
+        "speedup".into(),
+        format!("{:.2}x", p_synth.speedups[last]),
+        format!("{:.2}x", p_trans.speedups[last]),
+        "37.96x -> 46.68x".into(),
+    ]);
+    t.print();
+
+    let gain = 100.0 * (p_trans.gflops[last] - p_synth.gflops[last])
+        / p_synth.gflops[last];
+    println!("64-thread improvement: {gain:+.1}% (paper: +71.7%)");
+    println!(
+        "intermediate: 4t {:.2}x -> {:.2}x, 16t {:.2}x -> {:.2}x",
+        p_synth.speedups[1],
+        p_trans.speedups[1],
+        p_synth.speedups[2],
+        p_trans.speedups[2]
+    );
+}

@@ -1,0 +1,12 @@
+//! Offline matrix/trace analysis tools.
+//!
+//! * [`reuse`] — Mattson stack-distance (LRU reuse-distance) analysis
+//!   of the `x`-vector gather stream: the quantitative version of the
+//!   paper's §5.1 locality argument ("how the dense vector x will be
+//!   reused"), and the input the advisor uses to justify the §5.2.3
+//!   reordering.
+//! * [`spy`] — ASCII spy plots and structural profiles (row-degree
+//!   histogram, bandwidth profile) for reports and examples.
+
+pub mod reuse;
+pub mod spy;

@@ -1,0 +1,132 @@
+//! ASCII spy plots and structural profiles — the visual half of the
+//! Table-4 "sparsity structure" column and the report generator.
+
+use crate::sparse::Csr;
+
+/// Density spy plot: `rows x cols` character grid; darker glyphs mark
+/// denser blocks.
+pub fn spy(csr: &Csr, rows: usize, cols: usize) -> String {
+    let rows = rows.max(1);
+    let cols = cols.max(1);
+    let mut grid = vec![0u32; rows * cols];
+    if csr.n_rows == 0 || csr.n_cols == 0 {
+        return String::new();
+    }
+    for r in 0..csr.n_rows {
+        let gr = r * rows / csr.n_rows;
+        let (rc, _) = csr.row(r);
+        for &c in rc {
+            let gc = (c as usize) * cols / csr.n_cols;
+            grid[gr * cols + gc] += 1;
+        }
+    }
+    let max = *grid.iter().max().unwrap_or(&1);
+    let glyphs = [' ', '.', ':', '+', '*', '#', '@'];
+    let mut out = String::with_capacity(rows * (cols + 3));
+    for gr in 0..rows {
+        out.push('|');
+        for gc in 0..cols {
+            let v = grid[gr * cols + gc];
+            let g = if v == 0 {
+                0
+            } else {
+                1 + (v as usize * (glyphs.len() - 2)) / max as usize
+            };
+            out.push(glyphs[g.min(glyphs.len() - 1)]);
+        }
+        out.push_str("|\n");
+    }
+    out
+}
+
+/// Row-degree histogram over log2 buckets: (bucket_label, count).
+pub fn degree_histogram(csr: &Csr) -> Vec<(String, usize)> {
+    let mut buckets = vec![0usize; 24];
+    for r in 0..csr.n_rows {
+        let d = csr.row_nnz(r);
+        let b = if d == 0 {
+            0
+        } else {
+            (usize::BITS - d.leading_zeros()) as usize
+        };
+        buckets[b.min(23)] += 1;
+    }
+    buckets
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| c > 0)
+        .map(|(b, &c)| {
+            let label = if b == 0 {
+                "0".to_string()
+            } else {
+                format!("{}..{}", 1usize << (b - 1), (1usize << b) - 1)
+            };
+            (label, c)
+        })
+        .collect()
+}
+
+/// Matrix bandwidth profile: (max |col-row|, mean |col-row|).
+pub fn bandwidth(csr: &Csr) -> (usize, f64) {
+    let mut max = 0usize;
+    let mut sum = 0f64;
+    let mut n = 0u64;
+    for r in 0..csr.n_rows {
+        let (cols, _) = csr.row(r);
+        for &c in cols {
+            let d = (c as i64 - r as i64).unsigned_abs() as usize;
+            max = max.max(d);
+            sum += d as f64;
+            n += 1;
+        }
+    }
+    (max, if n == 0 { 0.0 } else { sum / n as f64 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generators;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn spy_shapes() {
+        let mut rng = Pcg32::new(1);
+        let csr = generators::banded(256, 5, &mut rng);
+        let s = spy(&csr, 8, 16);
+        assert_eq!(s.lines().count(), 8);
+        // A banded matrix lights the diagonal cells.
+        let first = s.lines().next().unwrap();
+        assert_ne!(first.chars().nth(1), Some(' '));
+    }
+
+    #[test]
+    fn spy_empty() {
+        assert!(spy(&Csr::zero(0, 0), 4, 4).is_empty());
+        let blank = spy(&Csr::zero(4, 4), 2, 2);
+        assert!(blank.chars().all(|c| c == ' ' || c == '|' || c == '\n'));
+    }
+
+    #[test]
+    fn degree_histogram_sums_to_rows() {
+        let mut rng = Pcg32::new(2);
+        let csr = generators::power_law(512, 6.0, 1.6, &mut rng);
+        let h = degree_histogram(&csr);
+        let total: usize = h.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 512);
+    }
+
+    #[test]
+    fn bandwidth_of_banded() {
+        let mut rng = Pcg32::new(3);
+        let csr = generators::banded(128, 7, &mut rng);
+        let (max, mean) = bandwidth(&csr);
+        assert!(max <= 4, "band halfwidth: {max}");
+        assert!(mean <= 4.0);
+    }
+
+    #[test]
+    fn bandwidth_of_identity() {
+        assert_eq!(bandwidth(&Csr::identity(9)), (0, 0.0));
+    }
+}

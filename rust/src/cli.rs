@@ -1,0 +1,294 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! ```text
+//! ft2000-spmv sweep   [--suite tiny|fast|full] [--schedule S] [--placement P] [--threads 1,2,3,4] [--csv PATH]
+//! ft2000-spmv train   [--suite tiny|fast|full] [--trees N]
+//! ft2000-spmv analyze (--named NAME | --mtx PATH)
+//! ft2000-spmv verify  [--artifacts DIR]
+//! ft2000-spmv info
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::corpus::suite::SuiteSpec;
+use crate::corpus::NamedMatrix;
+use crate::sched::Schedule;
+use crate::sim::topology::Placement;
+
+/// Parsed command line.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    pub command: Command,
+}
+
+#[derive(Clone, Debug)]
+pub enum Command {
+    /// Corpus sweep -> Table 2 / Fig 4 summaries (+ optional CSV).
+    Sweep {
+        suite: SuiteSpec,
+        schedule: Schedule,
+        placement: Placement,
+        threads: Vec<usize>,
+        csv: Option<String>,
+    },
+    /// Train the regression forest and print importances + Fig 5 tree.
+    Train { suite: SuiteSpec, trees: usize },
+    /// Profile one matrix and print the advisor diagnosis.
+    Analyze { source: MatrixSource },
+    /// Check PJRT artifacts against the native executor.
+    Verify { artifacts: String },
+    /// Write a full markdown characterization report for one matrix.
+    Report { source: MatrixSource, out: Option<String> },
+    /// Export the synthetic corpus as MatrixMarket files.
+    Export { suite: SuiteSpec, dir: String },
+    /// Print topology/provenance info.
+    Info,
+}
+
+#[derive(Clone, Debug)]
+pub enum MatrixSource {
+    Named(NamedMatrix),
+    MatrixMarket(String),
+}
+
+pub fn usage() -> &'static str {
+    "usage: ft2000-spmv <sweep|train|analyze|verify|info> [options]\n\
+     \n\
+     sweep    --suite tiny|fast|full   corpus scale (default fast)\n\
+     \u{20}        --schedule csr|balanced|csr5|dynamic\n\
+     \u{20}        --placement group|private\n\
+     \u{20}        --threads 1,2,3,4\n\
+     \u{20}        --csv PATH           dump per-matrix results\n\
+     train    --suite tiny|fast|full  --trees N (default 20)\n\
+     analyze  --named bone010|exdata_1|conf5_4-8x8-20|debr|appu|asia_osm\n\
+     \u{20}        --mtx PATH           MatrixMarket file\n\
+     verify   --artifacts DIR        (default ./artifacts)\n\
+     report   --named NAME | --mtx PATH  [--out FILE]\n\
+     export   --suite tiny|fast|full --dir PATH\n\
+     info"
+}
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        } else {
+            bail!("unexpected argument '{a}'");
+        }
+    }
+    Ok(flags)
+}
+
+fn parse_suite(flags: &HashMap<String, String>) -> Result<SuiteSpec> {
+    match flags.get("suite").map(String::as_str).unwrap_or("fast") {
+        "tiny" => Ok(SuiteSpec::tiny()),
+        "fast" => Ok(SuiteSpec::fast()),
+        "full" => Ok(SuiteSpec::full()),
+        other => bail!("unknown suite '{other}' (tiny|fast|full)"),
+    }
+}
+
+fn parse_schedule(flags: &HashMap<String, String>) -> Result<Schedule> {
+    match flags.get("schedule").map(String::as_str).unwrap_or("csr") {
+        "csr" => Ok(Schedule::CsrRowStatic),
+        "balanced" => Ok(Schedule::CsrRowBalanced),
+        "csr5" => Ok(Schedule::Csr5Tiles { tile_nnz: 256 }),
+        "dynamic" => Ok(Schedule::CsrDynamic { chunk: 64 }),
+        other => bail!("unknown schedule '{other}'"),
+    }
+}
+
+fn parse_placement(flags: &HashMap<String, String>) -> Result<Placement> {
+    match flags.get("placement").map(String::as_str).unwrap_or("group") {
+        "group" => Ok(Placement::CoreGroupFirst),
+        "private" => Ok(Placement::PrivateL2),
+        other => bail!("unknown placement '{other}' (group|private)"),
+    }
+}
+
+fn parse_threads(flags: &HashMap<String, String>) -> Result<Vec<usize>> {
+    let raw = flags
+        .get("threads")
+        .map(String::as_str)
+        .unwrap_or("1,2,3,4");
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        out.push(
+            part.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad thread count '{part}'"))?,
+        );
+    }
+    if out.first() != Some(&1) {
+        bail!("--threads must start with 1 (the speedup baseline)");
+    }
+    Ok(out)
+}
+
+fn parse_named(name: &str) -> Result<NamedMatrix> {
+    NamedMatrix::ALL
+        .into_iter()
+        .find(|m| m.name() == name)
+        .ok_or_else(|| {
+            anyhow!(
+                "unknown matrix '{name}' (known: {})",
+                NamedMatrix::ALL
+                    .iter()
+                    .map(|m| m.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+}
+
+/// Parse `argv[1..]`.
+pub fn parse(args: &[String]) -> Result<Cli> {
+    let (cmd, rest) = args
+        .split_first()
+        .ok_or_else(|| anyhow!("missing command\n{}", usage()))?;
+    let flags = parse_flags(rest)?;
+    let command = match cmd.as_str() {
+        "sweep" => Command::Sweep {
+            suite: parse_suite(&flags)?,
+            schedule: parse_schedule(&flags)?,
+            placement: parse_placement(&flags)?,
+            threads: parse_threads(&flags)?,
+            csv: flags.get("csv").cloned(),
+        },
+        "train" => Command::Train {
+            suite: parse_suite(&flags)?,
+            trees: flags
+                .get("trees")
+                .map(|s| s.parse())
+                .transpose()
+                .map_err(|_| anyhow!("bad --trees"))?
+                .unwrap_or(20),
+        },
+        "analyze" => {
+            let source = if let Some(n) = flags.get("named") {
+                MatrixSource::Named(parse_named(n)?)
+            } else if let Some(p) = flags.get("mtx") {
+                MatrixSource::MatrixMarket(p.clone())
+            } else {
+                bail!("analyze needs --named NAME or --mtx PATH");
+            };
+            Command::Analyze { source }
+        }
+        "verify" => Command::Verify {
+            artifacts: flags
+                .get("artifacts")
+                .cloned()
+                .unwrap_or_else(|| "artifacts".into()),
+        },
+        "report" => {
+            let source = if let Some(n) = flags.get("named") {
+                MatrixSource::Named(parse_named(n)?)
+            } else if let Some(p) = flags.get("mtx") {
+                MatrixSource::MatrixMarket(p.clone())
+            } else {
+                bail!("report needs --named NAME or --mtx PATH");
+            };
+            Command::Report { source, out: flags.get("out").cloned() }
+        }
+        "export" => Command::Export {
+            suite: parse_suite(&flags)?,
+            dir: flags
+                .get("dir")
+                .cloned()
+                .ok_or_else(|| anyhow!("export needs --dir PATH"))?,
+        },
+        "info" => Command::Info,
+        other => bail!("unknown command '{other}'\n{}", usage()),
+    };
+    Ok(Cli { command })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_sweep_defaults() {
+        let cli = parse(&sv(&["sweep"])).unwrap();
+        match cli.command {
+            Command::Sweep { threads, schedule, placement, .. } => {
+                assert_eq!(threads, vec![1, 2, 3, 4]);
+                assert_eq!(schedule, Schedule::CsrRowStatic);
+                assert_eq!(placement, Placement::CoreGroupFirst);
+            }
+            _ => panic!("wrong command"),
+        }
+    }
+
+    #[test]
+    fn parses_flags() {
+        let cli = parse(&sv(&[
+            "sweep",
+            "--suite",
+            "tiny",
+            "--schedule",
+            "csr5",
+            "--placement",
+            "private",
+            "--threads",
+            "1,2,4",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Sweep { suite, schedule, placement, threads, .. } => {
+                assert_eq!(suite.per_class, SuiteSpec::tiny().per_class);
+                assert!(matches!(schedule, Schedule::Csr5Tiles { .. }));
+                assert_eq!(placement, Placement::PrivateL2);
+                assert_eq!(threads, vec![1, 2, 4]);
+            }
+            _ => panic!("wrong command"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse(&sv(&[])).is_err());
+        assert!(parse(&sv(&["bogus"])).is_err());
+        assert!(parse(&sv(&["sweep", "--threads", "2,4"])).is_err());
+        assert!(parse(&sv(&["sweep", "--suite", "huge"])).is_err());
+        assert!(parse(&sv(&["analyze"])).is_err());
+        assert!(parse(&sv(&["analyze", "--named", "nope"])).is_err());
+    }
+
+    #[test]
+    fn parses_report_and_export() {
+        let cli = parse(&sv(&["report", "--named", "debr"])).unwrap();
+        assert!(matches!(cli.command, Command::Report { .. }));
+        let cli =
+            parse(&sv(&["export", "--suite", "tiny", "--dir", "/tmp/x"]))
+                .unwrap();
+        assert!(matches!(cli.command, Command::Export { .. }));
+        assert!(parse(&sv(&["export"])).is_err());
+        assert!(parse(&sv(&["report"])).is_err());
+    }
+
+    #[test]
+    fn parses_named() {
+        let cli =
+            parse(&sv(&["analyze", "--named", "exdata_1"])).unwrap();
+        match cli.command {
+            Command::Analyze { source: MatrixSource::Named(m) } => {
+                assert_eq!(m, NamedMatrix::Exdata1)
+            }
+            _ => panic!("wrong command"),
+        }
+    }
+}

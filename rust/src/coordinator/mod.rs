@@ -1,0 +1,328 @@
+//! Campaign orchestration — the L3 coordination layer.
+//!
+//! A *profile* runs one matrix through the simulator at each thread
+//! count (the paper's 1–4 on a core-group, up to 64 chip-wide),
+//! collecting PAPI counters, speedups, and the Table-3 derived
+//! features. A *campaign* sweeps a corpus in parallel worker threads
+//! and assembles the regression dataset of §4.2.1.
+
+pub mod advisor;
+pub mod format_select;
+pub mod matrix_report;
+pub mod report;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::corpus::suite::SuiteSpec;
+use crate::counters::{Counters, Derived};
+use crate::mlmodel::Dataset;
+use crate::sched::{csr5_for, partition, Partition, Schedule};
+use crate::sim::engine::{simulate, SimResult, ThreadSpec};
+use crate::sim::topology::{Placement, Topology};
+use crate::sparse::{Csr, MatrixFeatures};
+use crate::trace::{AccessGen, Csr5Trace, CsrMultiTrace};
+
+/// Experiment configuration for one profiling run.
+#[derive(Clone, Debug)]
+pub struct ProfileConfig {
+    pub topo: Topology,
+    pub schedule: Schedule,
+    pub placement: Placement,
+    /// Thread counts to sweep; must start with 1 (speedup baseline).
+    pub threads: Vec<usize>,
+}
+
+impl Default for ProfileConfig {
+    fn default() -> Self {
+        ProfileConfig {
+            topo: Topology::ft2000plus(),
+            schedule: Schedule::CsrRowStatic,
+            placement: Placement::CoreGroupFirst,
+            threads: vec![1, 2, 3, 4],
+        }
+    }
+}
+
+impl ProfileConfig {
+    /// §5.2.2's private-L2 mode.
+    pub fn private_l2() -> Self {
+        ProfileConfig { placement: Placement::PrivateL2, ..Default::default() }
+    }
+}
+
+/// Everything measured for one matrix under one config.
+#[derive(Clone, Debug)]
+pub struct MatrixProfile {
+    pub name: String,
+    pub features: MatrixFeatures,
+    pub thread_counts: Vec<usize>,
+    pub wall_seconds: Vec<f64>,
+    /// Normalized to the 1-thread run (paper convention).
+    pub speedups: Vec<f64>,
+    pub gflops: Vec<f64>,
+    pub derived: Derived,
+    pub counters_1t: Counters,
+    /// Per-thread counters of the max-thread run.
+    pub counters_mt: Vec<Counters>,
+}
+
+impl MatrixProfile {
+    /// Speedup at the highest thread count.
+    pub fn max_speedup(&self) -> f64 {
+        *self.speedups.last().unwrap_or(&1.0)
+    }
+}
+
+/// Simulate one (matrix, thread-count) point; returns the sim result
+/// plus the nonzero allocation of the partition.
+pub fn simulate_point(
+    csr: &Csr,
+    cfg: &ProfileConfig,
+    n_threads: usize,
+) -> (SimResult, Vec<usize>) {
+    let part = partition(csr, cfg.schedule, n_threads);
+    let thread_nnz = part.thread_nnz(csr);
+    let csr5 = csr5_for(csr, cfg.schedule);
+    let mut threads: Vec<ThreadSpec<Box<dyn AccessGen + '_>>> = Vec::new();
+    match &part {
+        Partition::Rows { per_thread } => {
+            for (t, ranges) in per_thread.iter().enumerate() {
+                threads.push(ThreadSpec {
+                    gen: Box::new(CsrMultiTrace::new(csr, ranges.clone())),
+                    core: cfg.placement.core_of(t, &cfg.topo),
+                });
+            }
+        }
+        Partition::Tiles { per_thread, .. } => {
+            let csr5 = csr5.as_ref().expect("tile schedule implies csr5");
+            for (t, &(t0, t1)) in per_thread.iter().enumerate() {
+                threads.push(ThreadSpec {
+                    gen: Box::new(Csr5Trace::new(csr5, t0, t1)),
+                    core: cfg.placement.core_of(t, &cfg.topo),
+                });
+            }
+        }
+    }
+    (simulate(&cfg.topo, threads), thread_nnz)
+}
+
+/// Profile a matrix across the configured thread counts.
+pub fn profile_matrix(
+    csr: &Csr,
+    name: &str,
+    cfg: &ProfileConfig,
+) -> MatrixProfile {
+    assert_eq!(cfg.threads.first(), Some(&1), "first sweep point must be 1");
+    let features = MatrixFeatures::extract(csr);
+    let flops = 2.0 * csr.nnz() as f64;
+    let mut wall = Vec::new();
+    let mut gflops = Vec::new();
+    let mut counters_1t = Counters::default();
+    let mut counters_mt = Vec::new();
+    let mut last_thread_nnz = vec![csr.nnz()];
+    for &nt in &cfg.threads {
+        let (res, thread_nnz) = simulate_point(csr, cfg, nt);
+        wall.push(res.wall_seconds());
+        gflops.push(res.gflops(flops));
+        if nt == 1 {
+            counters_1t = res.per_thread[0];
+        }
+        if nt == *cfg.threads.last().unwrap() {
+            counters_mt = res.per_thread.clone();
+            last_thread_nnz = thread_nnz;
+        }
+    }
+    let speedups: Vec<f64> = wall.iter().map(|&t| wall[0] / t).collect();
+    let derived = Derived::from_profiles(
+        &counters_1t,
+        if counters_mt.is_empty() {
+            std::slice::from_ref(&counters_1t)
+        } else {
+            &counters_mt
+        },
+        &last_thread_nnz,
+    );
+    MatrixProfile {
+        name: name.to_string(),
+        features,
+        thread_counts: cfg.threads.clone(),
+        wall_seconds: wall,
+        speedups,
+        gflops,
+        derived,
+        counters_1t,
+        counters_mt,
+    }
+}
+
+/// A corpus-wide sweep.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    pub spec: SuiteSpec,
+    pub cfg: ProfileConfig,
+    pub workers: usize,
+}
+
+impl Campaign {
+    pub fn new(spec: SuiteSpec, cfg: ProfileConfig) -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Campaign { spec, cfg, workers }
+    }
+
+    /// Run the sweep across worker threads. Results keep entry order.
+    pub fn run(&self) -> Vec<MatrixProfile> {
+        let entries = self.spec.entries();
+        let n = entries.len();
+        let next = AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<MatrixProfile>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.max(1) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let e = &entries[i];
+                    let m = self.spec.materialize(e);
+                    let p = profile_matrix(&m.csr, &e.name, &self.cfg);
+                    results.lock().unwrap()[i] = Some(p);
+                });
+            }
+        });
+        results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|p| p.expect("worker completed"))
+            .collect()
+    }
+}
+
+/// Table-3 feature order used throughout the model/report code.
+pub const FEATURE_NAMES: [&str; 9] = [
+    "n_rows",
+    "nnz_max",
+    "nnz_avg",
+    "nnz_var",
+    "L1_DCMR",
+    "L2_DCMR",
+    "IPC",
+    "L2_DCMR_change",
+    "job_var",
+];
+
+/// Feature vector of one profile (Table 3 order).
+pub fn feature_vector(p: &MatrixProfile) -> Vec<f64> {
+    vec![
+        p.features.n_rows as f64,
+        p.features.nnz_max as f64,
+        p.features.nnz_avg,
+        p.features.nnz_var,
+        p.derived.l1_dcmr_1t,
+        p.derived.l2_dcmr_1t,
+        p.derived.ipc_1t,
+        p.derived.l2_dcmr_change,
+        p.derived.job_var,
+    ]
+}
+
+/// Assemble the regression dataset: features -> max-thread speedup.
+pub fn build_dataset(profiles: &[MatrixProfile]) -> Dataset {
+    let mut d = Dataset::new(
+        FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+    );
+    for p in profiles {
+        d.push(feature_vector(p), p.max_speedup());
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::NamedMatrix;
+
+    #[test]
+    fn profile_shapes() {
+        let csr = crate::corpus::generators::banded(
+            2048,
+            8,
+            &mut crate::util::rng::Pcg32::new(1),
+        );
+        let p = profile_matrix(&csr, "banded", &ProfileConfig::default());
+        assert_eq!(p.speedups.len(), 4);
+        assert!((p.speedups[0] - 1.0).abs() < 1e-12);
+        assert!(p.speedups.iter().all(|&s| s > 0.0));
+        assert_eq!(p.counters_mt.len(), 4);
+        assert!(p.gflops[0] > 0.0);
+    }
+
+    #[test]
+    fn speedup_non_trivial_on_named() {
+        // debr-like: balanced, good locality -> should scale decently.
+        let csr = NamedMatrix::Debr.generate();
+        let p = profile_matrix(&csr, "debr", &ProfileConfig::default());
+        assert!(
+            p.max_speedup() > 1.3,
+            "debr replica should scale: {:?}",
+            p.speedups
+        );
+    }
+
+    #[test]
+    fn exdata1_flat_speedup() {
+        // The paper's imbalance pathology: speedup ~1.02x at 4 threads.
+        let csr = NamedMatrix::Exdata1.generate();
+        let p = profile_matrix(&csr, "exdata_1", &ProfileConfig::default());
+        assert!(
+            p.max_speedup() < 1.3,
+            "exdata_1 must be imbalance-limited: {:?}",
+            p.speedups
+        );
+        assert!(p.derived.job_var > 0.9);
+    }
+
+    #[test]
+    fn csr5_rescues_exdata1() {
+        let csr = NamedMatrix::Exdata1.generate();
+        let csr_cfg = ProfileConfig::default();
+        let csr5_cfg = ProfileConfig {
+            schedule: Schedule::Csr5Tiles { tile_nnz: 256 },
+            ..Default::default()
+        };
+        let a = profile_matrix(&csr, "exdata_1", &csr_cfg);
+        let b = profile_matrix(&csr, "exdata_1", &csr5_cfg);
+        assert!(
+            b.max_speedup() > a.max_speedup() + 0.2,
+            "CSR5 {:.3} should beat CSR {:.3} (Fig 7)",
+            b.max_speedup(),
+            a.max_speedup()
+        );
+        assert!(b.derived.job_var < 0.35);
+    }
+
+    #[test]
+    fn campaign_tiny_runs() {
+        let c = Campaign::new(SuiteSpec::tiny(), ProfileConfig::default());
+        let profiles = c.run();
+        assert_eq!(profiles.len(), SuiteSpec::tiny().total());
+        let d = build_dataset(&profiles);
+        assert_eq!(d.len(), profiles.len());
+        assert_eq!(d.n_features(), FEATURE_NAMES.len());
+    }
+
+    #[test]
+    fn dataset_targets_are_speedups() {
+        let c = Campaign::new(SuiteSpec::tiny(), ProfileConfig::default());
+        let profiles = c.run();
+        let d = build_dataset(&profiles);
+        for (&y, p) in d.y.iter().zip(&profiles) {
+            assert_eq!(y, p.max_speedup());
+            assert!(y > 0.1 && y < 16.0, "speedup out of range: {y}");
+        }
+    }
+}

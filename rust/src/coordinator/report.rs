@@ -1,0 +1,221 @@
+//! Report writers: CSV dumps and markdown summaries of campaign
+//! results (what the benches print, what EXPERIMENTS.md records).
+
+use std::io::Write;
+
+use crate::util::stats;
+use crate::util::table::Table;
+
+use super::{MatrixProfile, FEATURE_NAMES};
+
+/// CSV of all profiles: features + per-thread-count speedups.
+pub fn write_csv<W: Write>(
+    w: &mut W,
+    profiles: &[MatrixProfile],
+) -> std::io::Result<()> {
+    write!(w, "name")?;
+    for f in FEATURE_NAMES {
+        write!(w, ",{f}")?;
+    }
+    if let Some(p) = profiles.first() {
+        for nt in &p.thread_counts {
+            write!(w, ",speedup_{nt}t")?;
+        }
+        for nt in &p.thread_counts {
+            write!(w, ",gflops_{nt}t")?;
+        }
+    }
+    writeln!(w)?;
+    for p in profiles {
+        write!(w, "{}", p.name)?;
+        for v in super::feature_vector(p) {
+            write!(w, ",{v}")?;
+        }
+        for s in &p.speedups {
+            write!(w, ",{s:.4}")?;
+        }
+        for g in &p.gflops {
+            write!(w, ",{g:.4}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Table 2: average speedup per thread count.
+pub fn table2_average_speedups(profiles: &[MatrixProfile]) -> Table {
+    let mut t = Table::new(
+        "Table 2 — average speedup of SpMV with multi-threads over a single thread",
+        &["#threads", "speedup"],
+    );
+    if profiles.is_empty() {
+        return t;
+    }
+    let counts = &profiles[0].thread_counts;
+    for (i, nt) in counts.iter().enumerate() {
+        let avg = stats::mean(
+            &profiles.iter().map(|p| p.speedups[i]).collect::<Vec<_>>(),
+        );
+        t.row(vec![nt.to_string(), format!("{avg:.2}x")]);
+    }
+    t
+}
+
+/// Fig 4 summary: distribution of max-thread speedups.
+pub fn fig4_distribution(profiles: &[MatrixProfile]) -> Table {
+    let speedups: Vec<f64> =
+        profiles.iter().map(|p| p.max_speedup()).collect();
+    let mut t = Table::new(
+        "Fig 4 — distribution of 4-thread speedups over the corpus",
+        &["stat", "value"],
+    );
+    t.row(vec!["matrices".into(), speedups.len().to_string()]);
+    t.row(vec!["mean".into(), format!("{:.3}x", stats::mean(&speedups))]);
+    t.row(vec![
+        "p10".into(),
+        format!("{:.3}x", stats::percentile(&speedups, 10.0)),
+    ]);
+    t.row(vec![
+        "median".into(),
+        format!("{:.3}x", stats::percentile(&speedups, 50.0)),
+    ]);
+    t.row(vec![
+        "p90".into(),
+        format!("{:.3}x", stats::percentile(&speedups, 90.0)),
+    ]);
+    t.row(vec![
+        "max".into(),
+        format!(
+            "{:.3}x",
+            speedups.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        ),
+    ]);
+    let hyper = speedups.iter().filter(|&&s| s > 4.0).count();
+    t.row(vec!["hyper-linear (>4x)".into(), hyper.to_string()]);
+    let sub2 = speedups.iter().filter(|&&s| s < 2.0).count();
+    t.row(vec![
+        "below 2x".into(),
+        format!(
+            "{} ({:.0}%)",
+            sub2,
+            100.0 * sub2 as f64 / speedups.len().max(1) as f64
+        ),
+    ]);
+    t
+}
+
+/// Fig 6 binned-average rows for one factor.
+pub fn fig6_binned(
+    profiles: &[MatrixProfile],
+    factor: &str,
+    bins: usize,
+) -> Table {
+    let xs: Vec<f64> = profiles
+        .iter()
+        .map(|p| match factor {
+            "job_var" => p.derived.job_var,
+            "L2_DCMR_change" => p.derived.l2_dcmr_change,
+            "nnz_var" => p.features.nnz_var,
+            other => panic!("unknown factor {other}"),
+        })
+        .collect();
+    let xs = if factor == "nnz_var" {
+        stats::minmax_normalize(&xs) // the paper normalizes nnz_var
+    } else {
+        xs
+    };
+    let ys: Vec<f64> = profiles.iter().map(|p| p.max_speedup()).collect();
+    let mut t = Table::new(
+        format!("Fig 6 — binned average speedup vs {factor}"),
+        &[factor, "avg speedup", "n"],
+    );
+    for (center, mean, count) in stats::binned_mean(&xs, &ys, bins) {
+        t.row(vec![
+            format!("{center:.3}"),
+            format!("{mean:.3}x"),
+            count.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Correlation summary of the three Fig 6 factors against speedup.
+pub fn factor_correlations(profiles: &[MatrixProfile]) -> Table {
+    let ys: Vec<f64> = profiles.iter().map(|p| p.max_speedup()).collect();
+    let mut t = Table::new(
+        "Factor correlations with 4-thread speedup",
+        &["factor", "pearson r"],
+    );
+    for (name, xs) in [
+        (
+            "job_var",
+            profiles.iter().map(|p| p.derived.job_var).collect::<Vec<_>>(),
+        ),
+        (
+            "L2_DCMR_change",
+            profiles
+                .iter()
+                .map(|p| p.derived.l2_dcmr_change)
+                .collect::<Vec<_>>(),
+        ),
+        (
+            "nnz_var",
+            profiles.iter().map(|p| p.features.nnz_var).collect::<Vec<_>>(),
+        ),
+    ] {
+        t.row(vec![name.into(), format!("{:+.3}", stats::pearson(&xs, &ys))]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{profile_matrix, ProfileConfig};
+    use crate::corpus::generators::banded;
+    use crate::util::rng::Pcg32;
+
+    fn profiles() -> Vec<MatrixProfile> {
+        let mut rng = Pcg32::new(2);
+        (0..3)
+            .map(|i| {
+                let csr = banded(512 + i * 256, 6, &mut rng);
+                profile_matrix(
+                    &csr,
+                    &format!("m{i}"),
+                    &ProfileConfig::default(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn csv_well_formed() {
+        let ps = profiles();
+        let mut buf = Vec::new();
+        write_csv(&mut buf, &ps).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + ps.len());
+        let header_cols = lines[0].split(',').count();
+        for l in &lines[1..] {
+            assert_eq!(l.split(',').count(), header_cols);
+        }
+        assert!(lines[0].contains("job_var"));
+    }
+
+    #[test]
+    fn tables_render() {
+        let ps = profiles();
+        assert!(table2_average_speedups(&ps).to_markdown().contains("1"));
+        assert!(fig4_distribution(&ps).to_markdown().contains("median"));
+        assert!(fig6_binned(&ps, "job_var", 4).to_markdown().contains("Fig 6"));
+        assert!(factor_correlations(&ps).to_markdown().contains("pearson"));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown factor")]
+    fn fig6_rejects_bad_factor() {
+        fig6_binned(&profiles(), "bogus", 4);
+    }
+}

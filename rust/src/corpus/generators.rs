@@ -1,0 +1,436 @@
+//! Structural matrix generators, one per SuiteSparse domain family.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Pcg32;
+
+/// Structural families found in the SuiteSparse collection, matched to
+/// the scalability behaviours the paper analyzes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatrixClass {
+    /// Banded FEM/stencil matrices (regular, good x-locality) —
+    /// the `debr` behaviour class.
+    Banded,
+    /// 5-point 2-D grid Laplacian (very regular, nnz_var = 0).
+    Stencil5,
+    /// 9-point 2-D grid Laplacian.
+    Stencil9,
+    /// Uniform random pattern (poor locality) — the `appu` class.
+    RandomUniform,
+    /// Power-law / social-network degrees (skewed rows).
+    PowerLaw,
+    /// Dense row-block outliers concentrating the nonzeros — the
+    /// `exdata_1` pathology class.
+    DenseRowBlock,
+    /// Fixed row degree with wide random spread (regular but
+    /// contention-heavy) — the `conf5_4-8x8-20` (QCD lattice) class.
+    RegularWide,
+    /// Road-network-like: tiny degree, near-1-D locality — the
+    /// `asia_osm` class.
+    RoadNetwork,
+    /// Fig 9's synthesized poor-locality matrix: balanced rows whose
+    /// column clusters are interleaved so consecutive rows touch
+    /// distant parts of x.
+    PoorLocality,
+}
+
+impl MatrixClass {
+    pub const ALL: [MatrixClass; 9] = [
+        MatrixClass::Banded,
+        MatrixClass::Stencil5,
+        MatrixClass::Stencil9,
+        MatrixClass::RandomUniform,
+        MatrixClass::PowerLaw,
+        MatrixClass::DenseRowBlock,
+        MatrixClass::RegularWide,
+        MatrixClass::RoadNetwork,
+        MatrixClass::PoorLocality,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatrixClass::Banded => "banded",
+            MatrixClass::Stencil5 => "stencil5",
+            MatrixClass::Stencil9 => "stencil9",
+            MatrixClass::RandomUniform => "random_uniform",
+            MatrixClass::PowerLaw => "power_law",
+            MatrixClass::DenseRowBlock => "dense_row_block",
+            MatrixClass::RegularWide => "regular_wide",
+            MatrixClass::RoadNetwork => "road_network",
+            MatrixClass::PoorLocality => "poor_locality",
+        }
+    }
+
+    /// Generate an `n x n` matrix with roughly `target_nnz` nonzeros.
+    pub fn generate(&self, n: usize, target_nnz: usize, seed: u64) -> Csr {
+        let mut rng = Pcg32::new(seed);
+        let deg = (target_nnz as f64 / n.max(1) as f64).max(1.0);
+        match self {
+            MatrixClass::Banded => banded(n, deg.round() as usize, &mut rng),
+            MatrixClass::Stencil5 => stencil(n, 5),
+            MatrixClass::Stencil9 => stencil(n, 9),
+            MatrixClass::RandomUniform => {
+                random_uniform(n, (deg.round() as usize).max(1), &mut rng)
+            }
+            MatrixClass::PowerLaw => power_law(n, deg, 1.6, &mut rng),
+            MatrixClass::DenseRowBlock => {
+                dense_row_block(n, target_nnz, &mut rng)
+            }
+            MatrixClass::RegularWide => {
+                regular_wide(n, (deg.round() as usize).max(2), &mut rng)
+            }
+            MatrixClass::RoadNetwork => road_network(n, &mut rng),
+            MatrixClass::PoorLocality => {
+                poor_locality(n, (deg.round() as usize).max(2), 64, &mut rng)
+            }
+        }
+    }
+}
+
+fn val(rng: &mut Pcg32) -> f64 {
+    // Nonzero magnitudes around 1.0; never exactly zero.
+    0.1 + rng.gen_f64()
+}
+
+/// Banded matrix: `band` diagonals clustered around the main diagonal.
+pub fn banded(n: usize, band: usize, rng: &mut Pcg32) -> Csr {
+    let band = band.clamp(1, n.max(1));
+    let mut coo = Coo::with_capacity(n, n, n * band);
+    let half = (band / 2) as isize;
+    for r in 0..n as isize {
+        for d in -half..=(band as isize - half - 1) {
+            let c = r + d;
+            if c >= 0 && c < n as isize {
+                coo.push(r as usize, c as usize, val(rng));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 2-D grid Laplacian stencil (5- or 9-point) on a ~sqrt(n) x sqrt(n)
+/// grid; n is rounded down to a perfect square.
+pub fn stencil(n: usize, points: usize) -> Csr {
+    let side = (n as f64).sqrt().floor() as usize;
+    let side = side.max(1);
+    let n = side * side;
+    let mut coo = Coo::with_capacity(n, n, n * points);
+    let idx = |i: usize, j: usize| i * side + j;
+    for i in 0..side {
+        for j in 0..side {
+            let r = idx(i, j);
+            coo.push(r, r, 4.0);
+            let mut neigh: Vec<(isize, isize)> =
+                vec![(-1, 0), (1, 0), (0, -1), (0, 1)];
+            if points == 9 {
+                neigh.extend_from_slice(&[(-1, -1), (-1, 1), (1, -1), (1, 1)]);
+            }
+            for (di, dj) in neigh {
+                let (ni, nj) = (i as isize + di, j as isize + dj);
+                if ni >= 0 && ni < side as isize && nj >= 0 && nj < side as isize
+                {
+                    coo.push(r, idx(ni as usize, nj as usize), -1.0);
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Uniform random pattern with exactly `deg` distinct columns per row.
+pub fn random_uniform(n: usize, deg: usize, rng: &mut Pcg32) -> Csr {
+    let deg = deg.min(n);
+    let mut coo = Coo::with_capacity(n, n, n * deg);
+    for r in 0..n {
+        for c in rng.sample_distinct(n, deg) {
+            coo.push(r, c, val(rng));
+        }
+    }
+    coo.to_csr()
+}
+
+/// Power-law row degrees (zipf over rows) with uniform columns — the
+/// social-network family.
+pub fn power_law(n: usize, avg_deg: f64, alpha: f64, rng: &mut Pcg32) -> Csr {
+    let total = (n as f64 * avg_deg) as usize;
+    let mut coo = Coo::with_capacity(n, n, total);
+    // Hub rows get zipf-rank-proportional degree; assign by sampling
+    // a row via zipf then a uniform column.
+    let mut row_of_rank: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut row_of_rank);
+    for _ in 0..total {
+        let r = row_of_rank[rng.gen_zipf(n, alpha)];
+        let c = rng.gen_range(n);
+        coo.push(r, c, val(rng));
+    }
+    coo.to_csr()
+}
+
+/// A contiguous block of dense rows holds ~`frac` of all nonzeros —
+/// the exdata_1 pathology. The block sits in the second quarter of the
+/// rows so a 4-thread static row partition lands it on thread 2,
+/// matching the paper's "the second thread will consume more than 99%
+/// of the nonzeros".
+pub fn dense_row_block(n: usize, target_nnz: usize, rng: &mut Pcg32) -> Csr {
+    let frac = 0.99;
+    let dense_nnz = (target_nnz as f64 * frac) as usize;
+    let sparse_nnz = target_nnz - dense_nnz;
+    // Concentrate the dense nonzeros in ~n/16 rows so nnz_max dwarfs
+    // nnz_avg (exdata_1: a block of very wide rows).
+    let width = (dense_nnz / (n / 16).max(1)).clamp(1, n);
+    let dense_rows = (dense_nnz / width).max(1);
+    let start = n / 4; // second quarter
+    let mut coo = Coo::with_capacity(n, n, target_nnz);
+    for i in 0..dense_rows {
+        let r = (start + i).min(n - 1);
+        for c in rng.sample_distinct(n, width) {
+            coo.push(r, c, val(rng));
+        }
+    }
+    // Background: diagonal + sprinkle.
+    for r in 0..n {
+        coo.push(r, r, val(rng));
+    }
+    for _ in 0..sparse_nnz.saturating_sub(n) {
+        coo.push(rng.gen_range(n), rng.gen_range(n), val(rng));
+    }
+    coo.to_csr()
+}
+
+/// Every row has exactly `deg` nonzeros spread over the whole column
+/// space (QCD-lattice-like: perfectly balanced but each row's gather
+/// spans far across x, stressing the shared L2).
+pub fn regular_wide(n: usize, deg: usize, rng: &mut Pcg32) -> Csr {
+    let deg = deg.min(n);
+    let mut coo = Coo::with_capacity(n, n, n * deg);
+    let stride = (n / deg.max(1)).max(1);
+    for r in 0..n {
+        // Evenly-strided columns with a random phase: fixed degree,
+        // zero row variance, whole-x span.
+        let phase = rng.gen_range(stride);
+        for j in 0..deg {
+            let c = (phase + j * stride + r / 64) % n;
+            coo.push(r, c, val(rng));
+        }
+    }
+    let csr = coo.to_csr();
+    // Strided construction can collide columns (dedup merges them);
+    // top up rows that lost entries to keep variance ~0.
+    top_up_rows(csr, deg, rng)
+}
+
+fn top_up_rows(csr: Csr, deg: usize, rng: &mut Pcg32) -> Csr {
+    let n = csr.n_rows;
+    let mut coo = Coo::with_capacity(n, n, n * deg);
+    for r in 0..n {
+        let (cols, vals) = csr.row(r);
+        let mut have: Vec<u32> = cols.to_vec();
+        for (c, v) in cols.iter().zip(vals) {
+            coo.push(r, *c as usize, *v);
+        }
+        let mut guard = 0;
+        while have.len() < deg && guard < deg * 20 {
+            let c = rng.gen_range(n) as u32;
+            if !have.contains(&c) {
+                have.push(c);
+                coo.push(r, c as usize, val(rng));
+            }
+            guard += 1;
+        }
+    }
+    coo.to_csr()
+}
+
+/// Road-network-like: a 1-D chain plus sparse shortcut edges; average
+/// degree ~2.5, excellent x-locality (the asia_osm behaviour: private
+/// L2 barely helps because the shared L2 already suffices).
+pub fn road_network(n: usize, rng: &mut Pcg32) -> Csr {
+    let mut coo = Coo::with_capacity(n, n, n * 3);
+    for r in 0..n {
+        if r + 1 < n {
+            coo.push(r, r + 1, val(rng));
+            coo.push(r + 1, r, val(rng));
+        }
+        // A small fraction of nodes get a shortcut edge. Geographic
+        // node ordering (how SuiteSparse road networks are stored)
+        // keeps almost all edges near-diagonal, so x access is
+        // overwhelmingly prefetchable.
+        if rng.gen_f64() < 0.08 {
+            let off = 2 + rng.gen_range(1022);
+            let c = (r + off) % n;
+            coo.push(r, c, val(rng));
+        }
+    }
+    coo.to_csr()
+}
+
+/// Fig 9's synthesized poor-locality matrix: rows have identical
+/// degree, but consecutive rows draw their columns from clusters far
+/// apart, so the sequential row order reuses x as badly as possible.
+/// `clusters` controls how many distant column groups interleave.
+pub fn poor_locality(
+    n: usize,
+    deg: usize,
+    clusters: usize,
+    rng: &mut Pcg32,
+) -> Csr {
+    let clusters = clusters.clamp(1, n.max(1));
+    let cluster_w = (n / clusters).max(deg.max(1));
+    let mut coo = Coo::with_capacity(n, n, n * deg);
+    for r in 0..n {
+        // Row r uses cluster (r mod clusters): adjacent rows touch
+        // maximally distant x regions. Within a row the nonzeros are
+        // contiguous (Fig 9's block structure): the pathology is the
+        // lack of cross-row reuse, not within-row scatter.
+        let cl = r % clusters;
+        let base = (cl * cluster_w) % n;
+        let off = rng.gen_range(cluster_w.saturating_sub(deg).max(1));
+        for j in 0..deg {
+            let c = (base + off + j) % n;
+            coo.push(r, c, val(rng));
+        }
+    }
+    coo.to_csr()
+}
+
+/// The locality-friendly counterpart of [`poor_locality`] — what the
+/// ideal reordering of Fig 9 (right) produces. Used as ground truth in
+/// reorder tests.
+pub fn good_locality(
+    n: usize,
+    deg: usize,
+    clusters: usize,
+    rng: &mut Pcg32,
+) -> Csr {
+    let csr = poor_locality(n, deg, clusters, rng);
+    // Sort rows by cluster id == stable sort by (r % clusters).
+    let clusters = clusters.clamp(1, n.max(1));
+    let mut perm: Vec<usize> = (0..n).collect();
+    perm.sort_by_key(|&r| r % clusters);
+    csr.permute_rows(&perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::MatrixFeatures;
+
+    fn rng() -> Pcg32 {
+        Pcg32::new(0xC0FFEE)
+    }
+
+    #[test]
+    fn all_classes_generate_valid() {
+        for class in MatrixClass::ALL {
+            let csr = class.generate(512, 4096, 42);
+            assert!(csr.validate().is_ok(), "{class:?}");
+            assert!(csr.nnz() > 0, "{class:?} generated empty matrix");
+            assert!(csr.n_rows > 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        for class in MatrixClass::ALL {
+            let a = class.generate(256, 2048, 7);
+            let b = class.generate(256, 2048, 7);
+            assert_eq!(a, b, "{class:?} not deterministic");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = MatrixClass::RandomUniform.generate(256, 2048, 1);
+        let b = MatrixClass::RandomUniform.generate(256, 2048, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn stencil5_regular() {
+        let csr = stencil(1024, 5);
+        let f = MatrixFeatures::extract(&csr);
+        // Interior rows have 5 nonzeros; borders fewer.
+        assert_eq!(f.nnz_max, 5);
+        assert!(f.nnz_var < 1.0);
+    }
+
+    #[test]
+    fn regular_wide_zero_variance() {
+        let csr = regular_wide(512, 16, &mut rng());
+        let f = MatrixFeatures::extract(&csr);
+        assert!(
+            f.nnz_var < 0.5,
+            "regular_wide should have ~0 row variance, got {}",
+            f.nnz_var
+        );
+        assert!((f.nnz_avg - 16.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn dense_row_block_is_skewed() {
+        let csr = dense_row_block(1024, 40_000, &mut rng());
+        let f = MatrixFeatures::extract(&csr);
+        // Nearly all nonzeros in few rows -> huge max, small avg.
+        assert!(f.nnz_max as f64 > 10.0 * f.nnz_avg);
+        // And they sit in the second quarter of rows.
+        let q = csr.n_rows / 4;
+        let block_nnz: usize =
+            (q..2 * q).map(|r| csr.row_nnz(r)).sum();
+        assert!(block_nnz as f64 > 0.8 * csr.nnz() as f64);
+    }
+
+    #[test]
+    fn power_law_skewed_rows() {
+        let csr = power_law(2048, 8.0, 1.6, &mut rng());
+        let f = MatrixFeatures::extract(&csr);
+        assert!(f.nnz_var > f.nnz_avg, "power law should be overdispersed");
+    }
+
+    #[test]
+    fn road_network_low_degree() {
+        let csr = road_network(4096, &mut rng());
+        let f = MatrixFeatures::extract(&csr);
+        assert!(f.nnz_avg < 3.0, "asia_osm-like degree, got {}", f.nnz_avg);
+    }
+
+    #[test]
+    fn poor_locality_balanced_but_scattered() {
+        let csr = poor_locality(1024, 4, 64, &mut rng());
+        let f = MatrixFeatures::extract(&csr);
+        assert!(f.nnz_var < 2.0, "rows balanced");
+        // Adjacent rows should overlap in columns rarely.
+        let mut overlaps = 0usize;
+        for r in 0..csr.n_rows - 1 {
+            let (a, _) = csr.row(r);
+            let (b, _) = csr.row(r + 1);
+            if a.iter().any(|c| b.contains(c)) {
+                overlaps += 1;
+            }
+        }
+        assert!(
+            (overlaps as f64) < 0.05 * csr.n_rows as f64,
+            "adjacent rows share columns too often: {overlaps}"
+        );
+    }
+
+    #[test]
+    fn good_locality_is_row_permutation() {
+        let mut r1 = rng();
+        let mut r2 = rng();
+        let bad = poor_locality(256, 4, 16, &mut r1);
+        let good = good_locality(256, 4, 16, &mut r2);
+        assert_eq!(bad.nnz(), good.nnz());
+        // Same multiset of row degree values.
+        let mut d1: Vec<usize> = (0..256).map(|r| bad.row_nnz(r)).collect();
+        let mut d2: Vec<usize> = (0..256).map(|r| good.row_nnz(r)).collect();
+        d1.sort_unstable();
+        d2.sort_unstable();
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn banded_degree_matches() {
+        let csr = banded(512, 9, &mut rng());
+        let f = MatrixFeatures::extract(&csr);
+        assert!((f.nnz_avg - 9.0).abs() < 0.5);
+    }
+}

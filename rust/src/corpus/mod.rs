@@ -1,0 +1,29 @@
+//! Synthetic matrix corpus — the substitute for the paper's 1008
+//! SuiteSparse matrices (DESIGN.md §Substitutions).
+//!
+//! The paper's dataset spans "regular and irregular matrices, covering
+//! domains from scientific computing to social networks". Each
+//! [`MatrixClass`] here generates one of those structural families
+//! deterministically from a seed; [`suite`] assembles the full
+//! 1008-matrix sweep, and [`named`] replicates the six case-study
+//! matrices (bone010, exdata_1, conf5_4-8x8-20, debr, appu, asia_osm)
+//! from their published structure.
+
+pub mod generators;
+pub mod named;
+pub mod suite;
+
+pub use generators::MatrixClass;
+pub use named::NamedMatrix;
+pub use suite::{SuiteSpec, SuiteEntry};
+
+use crate::sparse::Csr;
+
+/// A corpus entry: a generated matrix plus its provenance.
+#[derive(Clone, Debug)]
+pub struct CorpusMatrix {
+    pub name: String,
+    pub class: MatrixClass,
+    pub seed: u64,
+    pub csr: Csr,
+}

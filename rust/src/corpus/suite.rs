@@ -1,0 +1,163 @@
+//! The synthetic 1008-matrix suite — stand-in for the paper's
+//! SuiteSparse sweep (§3 Datasets).
+//!
+//! 1008 = 9 structural classes × 112 parameter points. Sizes are
+//! log-uniform; nnz spans ~2K–2M so the corpus crosses the
+//! L2-resident → memory-bound boundary of the simulated 2 MB shared L2
+//! the same way the paper's 100K–200M-nnz corpus crosses the real one.
+
+use crate::util::rng::Pcg32;
+
+use super::generators::MatrixClass;
+use super::CorpusMatrix;
+
+/// Parameters of a suite sweep.
+#[derive(Clone, Debug)]
+pub struct SuiteSpec {
+    /// Matrices per class.
+    pub per_class: usize,
+    /// Log-uniform row-count range.
+    pub n_range: (usize, usize),
+    /// Target average row degree range (log-uniform).
+    pub deg_range: (f64, f64),
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl SuiteSpec {
+    /// The full paper-scale suite: 9 × 112 = 1008 matrices.
+    ///
+    /// `n` spans past the shared-L2 boundary (x up to 2 MB) so the
+    /// `L2_DCMR_change` feature is exercised the way the paper's
+    /// 100K–200M-nnz corpus exercises the real 2 MB L2.
+    pub fn full() -> Self {
+        SuiteSpec {
+            per_class: 112,
+            n_range: (1_024, 262_144),
+            deg_range: (2.0, 80.0),
+            seed: 0x5347_2019,
+        }
+    }
+
+    /// A fast subset (~126 matrices) for smoke runs and CI.
+    pub fn fast() -> Self {
+        SuiteSpec { per_class: 14, ..Self::full() }
+    }
+
+    /// A tiny subset for unit tests.
+    pub fn tiny() -> Self {
+        SuiteSpec {
+            per_class: 2,
+            n_range: (256, 2_048),
+            deg_range: (2.0, 16.0),
+            seed: 0x5347_2019,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.per_class * MatrixClass::ALL.len()
+    }
+
+    /// Enumerate the suite's entries (parameters only — cheap).
+    pub fn entries(&self) -> Vec<SuiteEntry> {
+        let mut rng = Pcg32::new(self.seed);
+        let mut out = Vec::with_capacity(self.total());
+        for class in MatrixClass::ALL {
+            for i in 0..self.per_class {
+                let n = log_uniform(
+                    &mut rng,
+                    self.n_range.0 as f64,
+                    self.n_range.1 as f64,
+                ) as usize;
+                let deg = log_uniform(
+                    &mut rng,
+                    self.deg_range.0,
+                    self.deg_range.1,
+                );
+                let target_nnz =
+                    ((n as f64 * deg) as usize).max(n).min(4_000_000);
+                let seed = rng.next_u64();
+                out.push(SuiteEntry {
+                    name: format!("{}_{i:03}", class.name()),
+                    class,
+                    n,
+                    target_nnz,
+                    seed,
+                });
+            }
+        }
+        out
+    }
+
+    /// Generate a matrix from one entry.
+    pub fn materialize(&self, e: &SuiteEntry) -> CorpusMatrix {
+        CorpusMatrix {
+            name: e.name.clone(),
+            class: e.class,
+            seed: e.seed,
+            csr: e.class.generate(e.n, e.target_nnz, e.seed),
+        }
+    }
+}
+
+/// One matrix's generation parameters.
+#[derive(Clone, Debug)]
+pub struct SuiteEntry {
+    pub name: String,
+    pub class: MatrixClass,
+    pub n: usize,
+    pub target_nnz: usize,
+    pub seed: u64,
+}
+
+fn log_uniform(rng: &mut Pcg32, lo: f64, hi: f64) -> f64 {
+    (rng.gen_f64_range(lo.ln(), hi.ln())).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_is_1008() {
+        assert_eq!(SuiteSpec::full().total(), 1008);
+        assert_eq!(SuiteSpec::full().entries().len(), 1008);
+    }
+
+    #[test]
+    fn entries_deterministic() {
+        let a = SuiteSpec::fast().entries();
+        let b = SuiteSpec::fast().entries();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.n, y.n);
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let entries = SuiteSpec::fast().entries();
+        let set: std::collections::HashSet<&str> =
+            entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(set.len(), entries.len());
+    }
+
+    #[test]
+    fn sizes_in_range() {
+        let spec = SuiteSpec::tiny();
+        for e in spec.entries() {
+            assert!(e.n >= spec.n_range.0 && e.n <= spec.n_range.1);
+            let m = spec.materialize(&e);
+            assert!(m.csr.validate().is_ok(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn covers_all_classes() {
+        let entries = SuiteSpec::tiny().entries();
+        let classes: std::collections::HashSet<_> =
+            entries.iter().map(|e| e.class).collect();
+        assert_eq!(classes.len(), MatrixClass::ALL.len());
+    }
+}

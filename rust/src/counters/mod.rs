@@ -1,0 +1,179 @@
+//! PAPI-style hardware event counters and the derived features of the
+//! paper's Table 3.
+//!
+//! The raw set matches what the paper collects through PAPI on
+//! FT-2000+ (L2_DCM, L2_DCA, L1_DCM, L1_DCA, FR_INS, TOT_INS, TOT_CYC);
+//! the derived set adds L1_DCMR, L2_DCMR, IPC, and the two customized
+//! features `L2_DCMR_change` and `job_var`.
+
+/// Raw per-thread counters (Table 3, "raw hardware counters").
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Counters {
+    /// L1 data cache accesses.
+    pub l1_dca: u64,
+    /// L1 data cache misses.
+    pub l1_dcm: u64,
+    /// L2 data cache accesses (== L1 misses in this hierarchy).
+    pub l2_dca: u64,
+    /// L2 data cache misses.
+    pub l2_dcm: u64,
+    /// Floating point instructions executed.
+    pub fr_ins: u64,
+    /// Total instructions executed.
+    pub tot_ins: u64,
+    /// Total cycles (filled by the timing model).
+    pub tot_cyc: u64,
+}
+
+impl Counters {
+    pub fn l1_dcmr(&self) -> f64 {
+        ratio(self.l1_dcm, self.l1_dca)
+    }
+
+    pub fn l2_dcmr(&self) -> f64 {
+        ratio(self.l2_dcm, self.l2_dca)
+    }
+
+    pub fn ipc(&self) -> f64 {
+        if self.tot_cyc == 0 {
+            0.0
+        } else {
+            self.tot_ins as f64 / self.tot_cyc as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &Counters) {
+        self.l1_dca += other.l1_dca;
+        self.l1_dcm += other.l1_dcm;
+        self.l2_dca += other.l2_dca;
+        self.l2_dcm += other.l2_dcm;
+        self.fr_ins += other.fr_ins;
+        self.tot_ins += other.tot_ins;
+        self.tot_cyc = self.tot_cyc.max(other.tot_cyc);
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Derived features for one (matrix, schedule) pair, combining the
+/// 1-thread and 4-thread profiles the way §4.2.1 describes:
+/// `l2_dcmr_change` uses the *slowest* thread's L2_DCMR at 4 threads
+/// minus the single-thread L2_DCMR.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Derived {
+    pub l1_dcmr_1t: f64,
+    pub l2_dcmr_1t: f64,
+    pub ipc_1t: f64,
+    pub l1_dcmr_mt: f64,
+    /// L2 miss rate of the slowest thread in the multi-thread run.
+    pub l2_dcmr_mt_slowest: f64,
+    pub ipc_mt: f64,
+    /// `L2_DCMR_change` (Table 3).
+    pub l2_dcmr_change: f64,
+    /// `job_var` (Table 3): max per-thread nnz share.
+    pub job_var: f64,
+    /// Shared-L2 probe intensity: L2_DCA / TOT_INS of the single-thread
+    /// run. High values (gather-heavy kernels whose x overflows the
+    /// L1) mark the matrices that queue on the shared L2 — the conf5 /
+    /// appu signature.
+    pub l2_probe_rate_1t: f64,
+}
+
+impl Derived {
+    /// Combine profiles. `single` is the 1-thread counter set;
+    /// `multi` the per-thread counters of the n-thread run;
+    /// `thread_nnz` the nonzero allocation behind `job_var`.
+    pub fn from_profiles(
+        single: &Counters,
+        multi: &[Counters],
+        thread_nnz: &[usize],
+    ) -> Derived {
+        assert!(!multi.is_empty());
+        let slowest = multi
+            .iter()
+            .max_by_key(|c| c.tot_cyc)
+            .expect("non-empty");
+        let mut agg = Counters::default();
+        for c in multi {
+            agg.add(c);
+        }
+        Derived {
+            l1_dcmr_1t: single.l1_dcmr(),
+            l2_dcmr_1t: single.l2_dcmr(),
+            ipc_1t: single.ipc(),
+            l1_dcmr_mt: agg.l1_dcmr(),
+            l2_dcmr_mt_slowest: slowest.l2_dcmr(),
+            ipc_mt: agg.ipc(),
+            l2_dcmr_change: slowest.l2_dcmr() - single.l2_dcmr(),
+            job_var: crate::sparse::features::job_var(thread_nnz),
+            l2_probe_rate_1t: if single.tot_ins == 0 {
+                0.0
+            } else {
+                single.l2_dca as f64 / single.tot_ins as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(l1a: u64, l1m: u64, l2m: u64, ins: u64, cyc: u64) -> Counters {
+        Counters {
+            l1_dca: l1a,
+            l1_dcm: l1m,
+            l2_dca: l1m,
+            l2_dcm: l2m,
+            fr_ins: ins / 2,
+            tot_ins: ins,
+            tot_cyc: cyc,
+        }
+    }
+
+    #[test]
+    fn rates() {
+        let x = c(1000, 100, 50, 5000, 2500);
+        assert!((x.l1_dcmr() - 0.1).abs() < 1e-12);
+        assert!((x.l2_dcmr() - 0.5).abs() < 1e-12);
+        assert!((x.ipc() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_denominators() {
+        let z = Counters::default();
+        assert_eq!(z.l1_dcmr(), 0.0);
+        assert_eq!(z.l2_dcmr(), 0.0);
+        assert_eq!(z.ipc(), 0.0);
+    }
+
+    #[test]
+    fn derived_uses_slowest_thread() {
+        let single = c(1000, 100, 20, 4000, 2000);
+        // Thread 1 is slowest (more cycles) and has higher L2 DCMR.
+        let multi = vec![
+            c(500, 50, 5, 2000, 1000),
+            c(500, 50, 40, 2000, 9000),
+        ];
+        let d = Derived::from_profiles(&single, &multi, &[500, 500]);
+        assert!((d.l2_dcmr_mt_slowest - 0.8).abs() < 1e-12);
+        assert!((d.l2_dcmr_change - (0.8 - 0.2)).abs() < 1e-12);
+        assert!((d.job_var - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_merges() {
+        let mut a = c(10, 5, 2, 100, 50);
+        a.add(&c(20, 5, 4, 100, 80));
+        assert_eq!(a.l1_dca, 30);
+        assert_eq!(a.l1_dcm, 10);
+        assert_eq!(a.tot_ins, 200);
+        assert_eq!(a.tot_cyc, 80); // max, not sum
+    }
+}

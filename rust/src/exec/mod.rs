@@ -1,0 +1,249 @@
+//! Native threaded SpMV executors — the functional compute path for
+//! arbitrary shapes (the PJRT artifacts cover the bucketed shapes; see
+//! `runtime`). Also used to wall-clock the host in the §Perf benches.
+//!
+//! Threads write disjoint row ranges of `y`; the only cross-thread
+//! rows are CSR5 range-boundary carries, which are merged by the
+//! calling thread after the join (exactly the CSR5 algorithm's
+//! cross-thread reduction step).
+
+use std::time::Instant;
+
+use crate::sched::{partition, Partition, Schedule};
+use crate::sparse::csr5::TileCarry;
+use crate::sparse::{Csr, Csr5};
+
+/// Result of one threaded SpMV execution.
+#[derive(Clone, Debug)]
+pub struct ExecResult {
+    pub y: Vec<f64>,
+    pub wall_seconds: f64,
+    pub threads: usize,
+}
+
+impl ExecResult {
+    pub fn gflops(&self, nnz: usize) -> f64 {
+        2.0 * nnz as f64 / self.wall_seconds / 1e9
+    }
+}
+
+/// Disjoint-range mutable view of `y` for scoped threads.
+///
+/// SAFETY: callers must hand each thread ranges that do not overlap
+/// with any other thread's ranges — guaranteed by
+/// `Partition::validate`, which rejects double-covered rows.
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Multi-threaded CSR SpMV under any row partition.
+pub fn spmv_threaded(
+    csr: &Csr,
+    x: &[f64],
+    schedule: Schedule,
+    n_threads: usize,
+) -> ExecResult {
+    assert_eq!(x.len(), csr.n_cols);
+    let part = partition(csr, schedule, n_threads);
+    debug_assert!(part.validate(csr).is_ok());
+    match part {
+        Partition::Rows { per_thread } => {
+            spmv_rows_threaded(csr, x, &per_thread)
+        }
+        Partition::Tiles { tile_nnz, per_thread } => {
+            let csr5 = Csr5::from_csr(csr, tile_nnz);
+            spmv_csr5_threaded(&csr5, x, &per_thread)
+        }
+    }
+}
+
+fn spmv_rows_threaded(
+    csr: &Csr,
+    x: &[f64],
+    per_thread: &[Vec<(usize, usize)>],
+) -> ExecResult {
+    let mut y = vec![0.0f64; csr.n_rows];
+    let ptr = SendPtr(y.as_mut_ptr());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for ranges in per_thread {
+            let ptr = &ptr;
+            s.spawn(move || {
+                // SAFETY: ranges are disjoint across threads
+                // (Partition::validate) — each y[r] is written by
+                // exactly one thread.
+                let yslice = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0, csr.n_rows)
+                };
+                for &(r0, r1) in ranges {
+                    csr.spmv_rows(r0, r1, x, yslice);
+                }
+            });
+        }
+    });
+    ExecResult {
+        y,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        threads: per_thread.len(),
+    }
+}
+
+/// Multi-threaded CSR5 SpMV over tile ranges, with post-join carry
+/// merge.
+pub fn spmv_csr5_threaded(
+    csr5: &Csr5,
+    x: &[f64],
+    per_thread: &[(usize, usize)],
+) -> ExecResult {
+    let mut y = vec![0.0f64; csr5.n_rows];
+    let ptr = SendPtr(y.as_mut_ptr());
+    let t0 = Instant::now();
+    let carries: Vec<Vec<TileCarry>> = std::thread::scope(|s| {
+        let handles: Vec<_> = per_thread
+            .iter()
+            .map(|&(a, b)| {
+                let ptr = &ptr;
+                s.spawn(move || {
+                    // SAFETY: spmv_tiles writes only rows fully
+                    // contained in its tile range; boundary rows are
+                    // returned as carries, not written.
+                    let yslice = unsafe {
+                        std::slice::from_raw_parts_mut(ptr.0, csr5.n_rows)
+                    };
+                    csr5.spmv_tiles(a, b, x, yslice)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for cs in carries {
+        for c in cs {
+            y[c.row] += c.value;
+        }
+    }
+    ExecResult {
+        y,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        threads: per_thread.len(),
+    }
+}
+
+/// Sequential reference execution (wrapped for timing symmetry).
+pub fn spmv_sequential(csr: &Csr, x: &[f64]) -> ExecResult {
+    let mut y = vec![0.0f64; csr.n_rows];
+    let t0 = Instant::now();
+    csr.spmv(x, &mut y);
+    ExecResult { y, wall_seconds: t0.elapsed().as_secs_f64(), threads: 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::check;
+    use crate::{prop_assert, sparse::Coo};
+
+    fn random_csr(rng: &mut Pcg32, n: usize, per_row: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let deg = rng.gen_range(per_row * 2 + 1);
+            for c in rng.sample_distinct(n, deg.min(n)) {
+                coo.push(r, c, rng.gen_f64() - 0.5);
+            }
+        }
+        coo.to_csr()
+    }
+
+    fn assert_close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (p, q)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (p - q).abs() < 1e-9 * (1.0 + p.abs()),
+                "row {i}: {p} vs {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_schedules_match_sequential() {
+        let mut rng = Pcg32::new(0xE8EC);
+        let csr = random_csr(&mut rng, 500, 6);
+        let x: Vec<f64> = (0..500).map(|_| rng.gen_f64()).collect();
+        let want = spmv_sequential(&csr, &x).y;
+        for sched in [
+            Schedule::CsrRowStatic,
+            Schedule::CsrRowBalanced,
+            Schedule::Csr5Tiles { tile_nnz: 32 },
+            Schedule::CsrDynamic { chunk: 16 },
+        ] {
+            for nt in [1, 2, 3, 4, 8] {
+                let got = spmv_threaded(&csr, &x, sched, nt);
+                assert_close(&got.y, &want);
+                assert_eq!(got.threads, nt);
+            }
+        }
+    }
+
+    #[test]
+    fn csr5_boundary_rows_merge() {
+        // One long row spanning multiple threads' tile ranges: every
+        // thread contributes a carry to the same row.
+        let n = 64;
+        let mut coo = Coo::new(n, n);
+        for c in 0..n {
+            coo.push(0, c, 1.0);
+        }
+        let csr = coo.to_csr();
+        let x = vec![1.0; n];
+        let got = spmv_threaded(
+            &csr,
+            &x,
+            Schedule::Csr5Tiles { tile_nnz: 4 },
+            4,
+        );
+        assert_eq!(got.y[0], n as f64);
+        assert!(got.y[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn property_threaded_matches_sequential() {
+        check("threaded==sequential", 25, |rng| {
+            let n = 16 + rng.gen_range(200);
+            let csr = random_csr(rng, n, 4);
+            let x: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+            let want = spmv_sequential(&csr, &x).y;
+            let nt = 1 + rng.gen_range(8);
+            let sched = match rng.gen_range(4) {
+                0 => Schedule::CsrRowStatic,
+                1 => Schedule::CsrRowBalanced,
+                2 => Schedule::Csr5Tiles { tile_nnz: 1 + rng.gen_range(64) },
+                _ => Schedule::CsrDynamic { chunk: 1 + rng.gen_range(32) },
+            };
+            let got = spmv_threaded(&csr, &x, sched, nt);
+            for (i, (p, q)) in got.y.iter().zip(&want).enumerate() {
+                prop_assert!(
+                    (p - q).abs() < 1e-9 * (1.0 + p.abs()),
+                    "row {i}: {p} vs {q} under {sched:?} nt={nt}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = Csr::zero(10, 10);
+        let x = vec![1.0; 10];
+        let r = spmv_threaded(&csr, &x, Schedule::CsrRowStatic, 4);
+        assert!(r.y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gflops_positive() {
+        let mut rng = Pcg32::new(1);
+        let csr = random_csr(&mut rng, 256, 8);
+        let x = vec![1.0; 256];
+        let r = spmv_threaded(&csr, &x, Schedule::CsrRowStatic, 2);
+        assert!(r.gflops(csr.nnz()) > 0.0);
+    }
+}

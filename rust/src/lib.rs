@@ -1,0 +1,42 @@
+//! # ft2000-spmv
+//!
+//! Reproduction of *"Characterizing Scalability of Sparse Matrix-Vector
+//! Multiplications on Phytium FT-2000+ Many-cores"* (Chen, Fang, Xu,
+//! Chen, Wang — IJPP 2019).
+//!
+//! The library provides, from the bottom up:
+//!
+//! * [`sparse`] — CSR / CSR5 / ELL / HYB / COO formats + Table-3
+//!   matrix features;
+//! * [`corpus`] — a deterministic synthetic stand-in for the paper's
+//!   1008 SuiteSparse matrices, plus replicas of its case studies;
+//! * [`sim`] — a trace-driven FT-2000+ many-core cache/memory/timing
+//!   simulator (and a Xeon config for the Fig 2 comparison);
+//! * [`trace`] — per-thread SpMV address-stream generators;
+//! * [`counters`] — PAPI-style events and the derived features
+//!   (L1_DCMR, L2_DCMR, IPC, L2_DCMR_change, job_var);
+//! * [`exec`] — native threaded SpMV executors (functional path);
+//! * [`sched`] — nonzero partitioners and core placements;
+//! * [`reorder`] — the locality-aware row reordering of §5.2.3;
+//! * [`mlmodel`] — CART regression trees / forests + feature
+//!   importance (the paper's scikit-learn analysis, from scratch);
+//! * [`coordinator`] — campaign orchestration: sweeps, datasets,
+//!   reports;
+//! * [`runtime`] — PJRT execution of the AOT-compiled Pallas SpMV
+//!   kernels in `artifacts/` (python never runs at request time).
+
+pub mod analysis;
+pub mod cli;
+pub mod coordinator;
+pub mod corpus;
+pub mod counters;
+pub mod exec;
+pub mod mlmodel;
+pub mod reorder;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod solver;
+pub mod sparse;
+pub mod trace;
+pub mod util;

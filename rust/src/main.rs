@@ -1,0 +1,264 @@
+//! `ft2000-spmv` — CLI front-end of the scalability-characterization
+//! harness. See `cli::usage()` or run with no arguments.
+
+use anyhow::Result;
+
+use ft2000_spmv::cli::{self, Cli, Command, MatrixSource};
+use ft2000_spmv::coordinator::{
+    build_dataset, profile_matrix, report, Campaign, ProfileConfig,
+};
+use ft2000_spmv::corpus::suite::SuiteSpec;
+use ft2000_spmv::mlmodel::{Forest, ForestParams};
+use ft2000_spmv::runtime::Runtime;
+use ft2000_spmv::sched::Schedule;
+use ft2000_spmv::sim::topology::{Placement, Topology};
+use ft2000_spmv::sparse::{mm, Csr};
+use ft2000_spmv::util::table::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cli: Cli) -> Result<()> {
+    match cli.command {
+        Command::Sweep { suite, schedule, placement, threads, csv } => {
+            sweep(suite, schedule, placement, threads, csv)
+        }
+        Command::Train { suite, trees } => train(suite, trees),
+        Command::Analyze { source } => analyze(source),
+        Command::Verify { artifacts } => verify(&artifacts),
+        Command::Report { source, out } => report_cmd(source, out),
+        Command::Export { suite, dir } => export(suite, &dir),
+        Command::Info => info(),
+    }
+}
+
+fn sweep(
+    suite: SuiteSpec,
+    schedule: Schedule,
+    placement: Placement,
+    threads: Vec<usize>,
+    csv: Option<String>,
+) -> Result<()> {
+    let cfg = ProfileConfig {
+        schedule,
+        placement,
+        threads,
+        ..Default::default()
+    };
+    eprintln!(
+        "sweeping {} matrices ({} workers)...",
+        suite.total(),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    let campaign = Campaign::new(suite, cfg);
+    let profiles = campaign.run();
+    report::table2_average_speedups(&profiles).print();
+    report::fig4_distribution(&profiles).print();
+    report::factor_correlations(&profiles).print();
+    if let Some(path) = csv {
+        let mut f = std::fs::File::create(&path)?;
+        report::write_csv(&mut f, &profiles)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn train(suite: SuiteSpec, trees: usize) -> Result<()> {
+    let campaign = Campaign::new(suite, ProfileConfig::default());
+    eprintln!("profiling {} matrices...", campaign.spec.total());
+    let profiles = campaign.run();
+    let data = build_dataset(&profiles);
+    // The paper trains on 90% (§4.2: analysis, not prediction).
+    let (train, test) = data.split(0.9, 0x5EED);
+    let forest = Forest::fit(
+        &train,
+        ForestParams { n_trees: trees, ..Default::default() },
+    );
+    let mut t = Table::new(
+        "Feature importances (regression forest)",
+        &["feature", "importance"],
+    );
+    for (name, imp) in forest.ranked_features() {
+        t.row(vec![name, format!("{imp:.4}")]);
+    }
+    t.print();
+    println!(
+        "train mse = {:.4}, held-out mse = {:.4} ({} train / {} test)\n",
+        forest.mse(&train),
+        forest.mse(&test),
+        train.len(),
+        test.len()
+    );
+    println!("Fig 5 — a tree picked from the regression forest:\n");
+    println!("{}", forest.representative_tree(&train).render());
+    Ok(())
+}
+
+fn analyze(source: MatrixSource) -> Result<()> {
+    let (name, csr) = load(source)?;
+    let profile = profile_matrix(&csr, &name, &ProfileConfig::default());
+    let mut t = Table::new(
+        format!("Profile of {name} (FT-2000+, one core-group, CSR static)"),
+        &["metric", "value"],
+    );
+    t.row(vec!["rows".into(), profile.features.n_rows.to_string()]);
+    t.row(vec!["nnz".into(), profile.features.nnz.to_string()]);
+    t.row(vec![
+        "nnz_avg".into(),
+        format!("{:.2}", profile.features.nnz_avg),
+    ]);
+    t.row(vec![
+        "nnz_var".into(),
+        format!("{:.3}", profile.features.nnz_var),
+    ]);
+    t.row(vec!["job_var".into(), format!("{:.3}", profile.derived.job_var)]);
+    t.row(vec![
+        "L2_DCMR_change".into(),
+        format!("{:+.4}", profile.derived.l2_dcmr_change),
+    ]);
+    for (i, nt) in profile.thread_counts.iter().enumerate() {
+        t.row(vec![
+            format!("speedup {nt}t"),
+            format!(
+                "{:.3}x ({:.3} Gflops)",
+                profile.speedups[i], profile.gflops[i]
+            ),
+        ]);
+    }
+    t.print();
+    for line in ft2000_spmv::coordinator::advisor::advise(&csr, &profile) {
+        println!("advice: {line}");
+    }
+    Ok(())
+}
+
+fn load(source: MatrixSource) -> Result<(String, Csr)> {
+    match source {
+        MatrixSource::Named(m) => Ok((m.name().to_string(), m.generate())),
+        MatrixSource::MatrixMarket(path) => {
+            let f = std::fs::File::open(&path)?;
+            Ok((path, mm::read_csr(f)?))
+        }
+    }
+}
+
+fn report_cmd(source: MatrixSource, out: Option<String>) -> Result<()> {
+    let (name, csr) = load(source)?;
+    let text =
+        ft2000_spmv::coordinator::matrix_report::matrix_report(&csr, &name);
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &text)?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn export(suite: SuiteSpec, dir: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let entries = suite.entries();
+    for e in &entries {
+        let m = suite.materialize(e);
+        let path = format!("{dir}/{}.mtx", e.name);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        mm::write_csr(&mut f, &m.csr).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    eprintln!("exported {} matrices to {dir}", entries.len());
+    Ok(())
+}
+
+fn verify(artifacts: &str) -> Result<()> {
+    use ft2000_spmv::util::rng::Pcg32;
+    let rt = Runtime::new(artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut rng = Pcg32::new(42);
+    let mut failures = 0;
+    for (name, csr) in [
+        (
+            "banded-1k",
+            ft2000_spmv::corpus::generators::banded(1000, 7, &mut rng),
+        ),
+        (
+            "random-2k",
+            ft2000_spmv::corpus::generators::random_uniform(
+                2000, 12, &mut rng,
+            ),
+        ),
+        (
+            "skewed-seg",
+            ft2000_spmv::corpus::generators::dense_row_block(
+                1500, 12_000, &mut rng,
+            ),
+        ),
+    ] {
+        let x: Vec<f64> = (0..csr.n_cols).map(|_| rng.gen_f64()).collect();
+        let mut want = vec![0.0; csr.n_rows];
+        csr.spmv(&x, &mut want);
+        let got = rt.spmv(&csr, &x)?;
+        let max_err = want
+            .iter()
+            .zip(&got)
+            .map(|(a, b)| (a - b).abs() / (1.0 + a.abs()))
+            .fold(0.0, f64::max);
+        let ok = max_err < 1e-4;
+        println!(
+            "{name:<12} rows={:<6} nnz={:<8} max_rel_err={max_err:.2e} {}",
+            csr.n_rows,
+            csr.nnz(),
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        anyhow::bail!("{failures} artifact checks failed");
+    }
+    println!("runtime verification OK (pallas kernels == native executor)");
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    for topo in [Topology::ft2000plus(), Topology::xeon_e5_2692()] {
+        let mut t =
+            Table::new(format!("Topology: {}", topo.name), &["param", "value"]);
+        t.row(vec!["cores".into(), topo.cores.to_string()]);
+        t.row(vec!["freq".into(), format!("{} GHz", topo.freq_ghz)]);
+        t.row(vec![
+            "L1d".into(),
+            format!("{} KB x{}", topo.l1.size_bytes / 1024, topo.l1.ways),
+        ]);
+        t.row(vec![
+            "L2".into(),
+            format!(
+                "{} MB x{} shared by {} cores",
+                topo.l2.size_bytes / (1024 * 1024),
+                topo.l2.ways,
+                topo.l2_group_cores
+            ),
+        ]);
+        t.row(vec![
+            "mem domain".into(),
+            format!(
+                "{} GB/s per {} cores",
+                topo.bw_domain_gbs, topo.cores_per_mem_domain
+            ),
+        ]);
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,239 @@
+//! Classification tree (gini impurity) — used by the format selector
+//! (`coordinator::format_select`), the paper's future-work claim:
+//! choose the SpMV format/schedule from a cheap pre-run profile.
+
+use super::dataset::Dataset;
+
+#[derive(Clone, Debug)]
+pub struct ClassTreeParams {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    pub max_thresholds: usize,
+}
+
+impl Default for ClassTreeParams {
+    fn default() -> Self {
+        ClassTreeParams {
+            max_depth: 6,
+            min_samples_split: 8,
+            min_samples_leaf: 3,
+            max_thresholds: 32,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf { class: usize, n: usize },
+    Split { feature: usize, threshold: f64, left: Box<Node>, right: Box<Node> },
+}
+
+/// A multi-class decision tree over a [`Dataset`] whose targets are
+/// class ids encoded as f64 (0.0, 1.0, ...).
+#[derive(Clone, Debug)]
+pub struct ClassTree {
+    root: Node,
+    pub feature_names: Vec<String>,
+    pub n_classes: usize,
+}
+
+fn gini(counts: &[usize]) -> f64 {
+    let n: usize = counts.iter().sum();
+    if n == 0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    1.0 - counts
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / nf;
+            p * p
+        })
+        .sum::<f64>()
+}
+
+fn majority(counts: &[usize]) -> usize {
+    counts
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, &c)| c)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+impl ClassTree {
+    pub fn fit(data: &Dataset, n_classes: usize, params: ClassTreeParams) -> ClassTree {
+        assert!(!data.is_empty());
+        let idx: Vec<usize> = (0..data.len()).collect();
+        let root = build(data, &idx, n_classes, &params, 0);
+        ClassTree {
+            root,
+            feature_names: data.feature_names.clone(),
+            n_classes,
+        }
+    }
+
+    pub fn predict(&self, features: &[f64]) -> usize {
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf { class, .. } => return *class,
+                Node::Split { feature, threshold, left, right } => {
+                    node = if features[*feature] <= *threshold {
+                        left
+                    } else {
+                        right
+                    };
+                }
+            }
+        }
+    }
+
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        if data.is_empty() {
+            return 0.0;
+        }
+        let hits = data
+            .x
+            .iter()
+            .zip(&data.y)
+            .filter(|(x, &y)| self.predict(x) == y as usize)
+            .count();
+        hits as f64 / data.len() as f64
+    }
+}
+
+fn class_counts(data: &Dataset, idx: &[usize], k: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; k];
+    for &i in idx {
+        counts[data.y[i] as usize] += 1;
+    }
+    counts
+}
+
+fn build(
+    data: &Dataset,
+    idx: &[usize],
+    k: usize,
+    params: &ClassTreeParams,
+    depth: usize,
+) -> Node {
+    let counts = class_counts(data, idx, k);
+    let leaf = || Node::Leaf { class: majority(&counts), n: idx.len() };
+    if depth >= params.max_depth
+        || idx.len() < params.min_samples_split
+        || gini(&counts) < 1e-12
+    {
+        return leaf();
+    }
+    let parent_gini = gini(&counts);
+    let mut best: Option<(usize, f64, f64)> = None;
+    for f in 0..data.n_features() {
+        let mut vals: Vec<f64> = idx.iter().map(|&i| data.x[i][f]).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        if vals.len() < 2 {
+            continue;
+        }
+        let step = ((vals.len() - 1) as f64
+            / params.max_thresholds.min(vals.len() - 1) as f64)
+            .max(1.0);
+        let mut t = 0.0f64;
+        while (t as usize) < vals.len() - 1 {
+            let i = t as usize;
+            let thr = 0.5 * (vals[i] + vals[i + 1]);
+            let mut lc = vec![0usize; k];
+            let mut rc = vec![0usize; k];
+            for &j in idx {
+                if data.x[j][f] <= thr {
+                    lc[data.y[j] as usize] += 1;
+                } else {
+                    rc[data.y[j] as usize] += 1;
+                }
+            }
+            let nl: usize = lc.iter().sum();
+            let nr: usize = rc.iter().sum();
+            if nl >= params.min_samples_leaf && nr >= params.min_samples_leaf {
+                let w = idx.len() as f64;
+                let g = parent_gini
+                    - (nl as f64 / w) * gini(&lc)
+                    - (nr as f64 / w) * gini(&rc);
+                if g > 1e-12 && best.map_or(true, |(_, _, bg)| g > bg) {
+                    best = Some((f, thr, g));
+                }
+            }
+            t += step;
+        }
+    }
+    match best {
+        None => leaf(),
+        Some((feature, threshold, _)) => {
+            let (li, ri): (Vec<usize>, Vec<usize>) =
+                idx.iter().partition(|&&i| data.x[i][feature] <= threshold);
+            Node::Split {
+                feature,
+                threshold,
+                left: Box::new(build(data, &li, k, params, depth + 1)),
+                right: Box::new(build(data, &ri, k, params, depth + 1)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn blobs(n: usize, seed: u64) -> Dataset {
+        // Three separable classes in 2-D.
+        let mut rng = Pcg32::new(seed);
+        let mut d = Dataset::new(vec!["a".into(), "b".into()]);
+        for _ in 0..n {
+            let k = rng.gen_range(3);
+            let (cx, cy) = [(0.0, 0.0), (5.0, 0.0), (0.0, 5.0)][k];
+            d.push(
+                vec![cx + rng.gen_normal() * 0.4, cy + rng.gen_normal() * 0.4],
+                k as f64,
+            );
+        }
+        d
+    }
+
+    #[test]
+    fn separable_blobs_high_accuracy() {
+        let d = blobs(300, 1);
+        let t = ClassTree::fit(&d, 3, ClassTreeParams::default());
+        assert!(t.accuracy(&d) > 0.97, "{}", t.accuracy(&d));
+        assert_eq!(t.predict(&[5.0, 0.0]), 1);
+        assert_eq!(t.predict(&[0.0, 5.0]), 2);
+    }
+
+    #[test]
+    fn generalizes() {
+        let d = blobs(400, 2);
+        let (train, test) = d.split(0.8, 3);
+        let t = ClassTree::fit(&train, 3, ClassTreeParams::default());
+        assert!(t.accuracy(&test) > 0.9, "{}", t.accuracy(&test));
+    }
+
+    #[test]
+    fn single_class_is_leaf() {
+        let mut d = Dataset::new(vec!["a".into()]);
+        for i in 0..20 {
+            d.push(vec![i as f64], 1.0);
+        }
+        let t = ClassTree::fit(&d, 3, ClassTreeParams::default());
+        assert_eq!(t.predict(&[100.0]), 1);
+        assert_eq!(t.accuracy(&d), 1.0);
+    }
+
+    #[test]
+    fn gini_properties() {
+        assert_eq!(gini(&[10, 0, 0]), 0.0);
+        let g = gini(&[5, 5]);
+        assert!((g - 0.5).abs() < 1e-12);
+        assert_eq!(gini(&[]), 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Feature-matrix container for the regression model.
+
+use crate::util::rng::Pcg32;
+
+/// A supervised dataset: `x[i]` is a feature row, `y[i]` the target
+/// (the 4-thread speedup).
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub feature_names: Vec<String>,
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(feature_names: Vec<String>) -> Self {
+        Dataset { feature_names, x: vec![], y: vec![] }
+    }
+
+    pub fn push(&mut self, features: Vec<f64>, target: f64) {
+        assert_eq!(features.len(), self.feature_names.len());
+        self.x.push(features);
+        self.y.push(target);
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.feature_names.len()
+    }
+
+    /// Deterministic shuffled split: first `frac` for training, rest
+    /// for testing (the paper trains on 90%).
+    pub fn split(&self, frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        Pcg32::new(seed).shuffle(&mut idx);
+        let cut = ((self.len() as f64) * frac).round() as usize;
+        let mut train = Dataset::new(self.feature_names.clone());
+        let mut test = Dataset::new(self.feature_names.clone());
+        for (k, &i) in idx.iter().enumerate() {
+            if k < cut {
+                train.push(self.x[i].clone(), self.y[i]);
+            } else {
+                test.push(self.x[i].clone(), self.y[i]);
+            }
+        }
+        (train, test)
+    }
+
+    /// Column view.
+    pub fn column(&self, f: usize) -> Vec<f64> {
+        self.x.iter().map(|row| row[f]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let mut d = Dataset::new(vec!["a".into(), "b".into()]);
+        for i in 0..10 {
+            d.push(vec![i as f64, (10 - i) as f64], i as f64 * 2.0);
+        }
+        d
+    }
+
+    #[test]
+    fn push_and_len() {
+        let d = toy();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.n_features(), 2);
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut d = Dataset::new(vec!["a".into()]);
+        d.push(vec![1.0, 2.0], 0.0);
+    }
+
+    #[test]
+    fn split_fractions() {
+        let d = toy();
+        let (train, test) = d.split(0.9, 42);
+        assert_eq!(train.len(), 9);
+        assert_eq!(test.len(), 1);
+        // Deterministic.
+        let (t2, _) = d.split(0.9, 42);
+        assert_eq!(train.x, t2.x);
+    }
+
+    #[test]
+    fn column_extraction() {
+        let d = toy();
+        let c = d.column(1);
+        assert_eq!(c[0], 10.0);
+        assert_eq!(c[9], 1.0);
+    }
+}

@@ -1,0 +1,208 @@
+//! Bagged regression forest ("regression forests", Fig 5).
+//!
+//! Bootstrap-sampled trees with per-tree feature subsampling;
+//! prediction is the tree average, importance is the tree average of
+//! normalized impurity decreases (sklearn's RandomForestRegressor
+//! convention).
+
+use crate::util::rng::Pcg32;
+
+use super::dataset::Dataset;
+use super::tree::{Tree, TreeParams};
+
+#[derive(Clone, Debug)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    /// Features considered per tree (0 = all).
+    pub max_features: usize,
+    pub seed: u64,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_trees: 20,
+            tree: TreeParams::default(),
+            max_features: 0,
+            seed: 0xF02E57,
+        }
+    }
+}
+
+pub struct Forest {
+    pub trees: Vec<(Tree, Vec<usize>)>, // (tree, feature subset)
+    pub feature_names: Vec<String>,
+}
+
+impl Forest {
+    pub fn fit(data: &Dataset, params: ForestParams) -> Forest {
+        assert!(!data.is_empty());
+        let mut rng = Pcg32::new(params.seed);
+        let nf = data.n_features();
+        let mf = if params.max_features == 0 {
+            nf
+        } else {
+            params.max_features.min(nf)
+        };
+        let mut trees = Vec::with_capacity(params.n_trees);
+        for t in 0..params.n_trees {
+            let mut trng = rng.fork(t as u64);
+            // Bootstrap rows.
+            let n = data.len();
+            let mut boot = Dataset::new(Vec::new());
+            // Feature subset for this tree.
+            let feats = trng.sample_distinct(nf, mf);
+            boot.feature_names =
+                feats.iter().map(|&f| data.feature_names[f].clone()).collect();
+            for _ in 0..n {
+                let i = trng.gen_range(n);
+                let row: Vec<f64> =
+                    feats.iter().map(|&f| data.x[i][f]).collect();
+                boot.push(row, data.y[i]);
+            }
+            let tree = Tree::fit(&boot, params.tree.clone());
+            trees.push((tree, feats));
+        }
+        Forest { trees, feature_names: data.feature_names.clone() }
+    }
+
+    pub fn predict(&self, features: &[f64]) -> f64 {
+        let sum: f64 = self
+            .trees
+            .iter()
+            .map(|(t, feats)| {
+                let row: Vec<f64> =
+                    feats.iter().map(|&f| features[f]).collect();
+                t.predict(&row)
+            })
+            .sum();
+        sum / self.trees.len() as f64
+    }
+
+    pub fn mse(&self, data: &Dataset) -> f64 {
+        if data.is_empty() {
+            return 0.0;
+        }
+        data.x
+            .iter()
+            .zip(&data.y)
+            .map(|(x, &y)| {
+                let d = self.predict(x) - y;
+                d * d
+            })
+            .sum::<f64>()
+            / data.len() as f64
+    }
+
+    /// Average of per-tree normalized importances, mapped back to the
+    /// full feature space.
+    pub fn feature_importances(&self) -> Vec<f64> {
+        let nf = self.feature_names.len();
+        let mut imp = vec![0.0; nf];
+        for (tree, feats) in &self.trees {
+            for (local, &global) in feats.iter().enumerate() {
+                imp[global] += tree.feature_importances()[local];
+            }
+        }
+        let total: f64 = imp.iter().sum();
+        if total > 0.0 {
+            for v in &mut imp {
+                *v /= total;
+            }
+        }
+        imp
+    }
+
+    pub fn ranked_features(&self) -> Vec<(String, f64)> {
+        let mut ranked: Vec<(String, f64)> = self
+            .feature_names
+            .iter()
+            .cloned()
+            .zip(self.feature_importances())
+            .collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        ranked
+    }
+
+    /// "A tree picked from the regression forests" (Fig 5): the tree
+    /// with the lowest training error — rendered as text.
+    pub fn representative_tree(&self, data: &Dataset) -> &Tree {
+        self.trees
+            .iter()
+            .min_by(|(a, fa), (b, fb)| {
+                let da = project(data, fa);
+                let db = project(data, fb);
+                a.mse(&da).partial_cmp(&b.mse(&db)).unwrap()
+            })
+            .map(|(t, _)| t)
+            .expect("non-empty forest")
+    }
+}
+
+fn project(data: &Dataset, feats: &[usize]) -> Dataset {
+    let mut out = Dataset::new(
+        feats.iter().map(|&f| data.feature_names[f].clone()).collect(),
+    );
+    for (row, &y) in data.x.iter().zip(&data.y) {
+        out.push(feats.iter().map(|&f| row[f]).collect(), y);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic(n: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg32::new(seed);
+        let mut d =
+            Dataset::new(vec!["strong".into(), "weak".into(), "noise".into()]);
+        for _ in 0..n {
+            let a = rng.gen_f64();
+            let b = rng.gen_f64();
+            let c = rng.gen_f64();
+            let y = if a > 0.5 { 3.0 } else { 1.0 } + 0.3 * b;
+            d.push(vec![a, b, c], y);
+        }
+        d
+    }
+
+    #[test]
+    fn forest_fits_and_ranks() {
+        let d = synthetic(300, 1);
+        let f = Forest::fit(&d, ForestParams::default());
+        assert!(f.mse(&d) < 0.05, "mse={}", f.mse(&d));
+        assert_eq!(f.ranked_features()[0].0, "strong");
+        let imp = f.feature_importances();
+        assert!((imp.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn feature_subsampling_still_covers() {
+        let d = synthetic(300, 2);
+        let f = Forest::fit(
+            &d,
+            ForestParams { max_features: 2, n_trees: 30, ..Default::default() },
+        );
+        // With 2-of-3 features per tree the strong feature still
+        // dominates on average.
+        assert_eq!(f.ranked_features()[0].0, "strong");
+    }
+
+    #[test]
+    fn representative_tree_renders() {
+        let d = synthetic(200, 3);
+        let f = Forest::fit(&d, ForestParams::default());
+        let t = f.representative_tree(&d);
+        assert!(t.render().contains("speedup ="));
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = synthetic(100, 4);
+        let a = Forest::fit(&d, ForestParams::default());
+        let b = Forest::fit(&d, ForestParams::default());
+        assert_eq!(a.predict(&[0.3, 0.5, 0.5]), b.predict(&[0.3, 0.5, 0.5]));
+    }
+}

@@ -1,0 +1,22 @@
+//! Regression-tree scalability model (§4.2) — the paper's
+//! scikit-learn analysis re-implemented from scratch.
+//!
+//! * [`dataset`] — feature matrix assembly (Table 3 feature order);
+//! * [`tree`] — CART regression tree (variance-reduction splits,
+//!   identical criterion to sklearn's default) + impurity-based
+//!   feature importance + the Fig 5 text rendering;
+//! * [`forest`] — bagged regression forest ("a tree picked from the
+//!   regression forests", Fig 5) with averaged importances.
+//!
+//! The model is used the way the paper uses it: as an *analysis tool*
+//! (trained on 90% of the data, §4.2) whose feature importances rank
+//! the factors limiting SpMV scalability.
+
+pub mod classify;
+pub mod dataset;
+pub mod forest;
+pub mod tree;
+
+pub use dataset::Dataset;
+pub use forest::{Forest, ForestParams};
+pub use tree::{Tree, TreeParams};

@@ -1,0 +1,214 @@
+//! Locality-aware row reordering — §5.2.3's "novel storage format"
+//! idea: bring together rows with a similar nonzero distribution so
+//! the dense vector `x` is reused while it is still cached.
+//!
+//! The reorder computes a cheap column *signature* per row (the
+//! histogram of column blocks the row touches, reduced to its dominant
+//! block and mean column) and stably sorts rows by it. For Fig 9's
+//! synthesized matrix — consecutive rows drawing from maximally
+//! distant column clusters — this recovers exactly the
+//! locality-friendly form on the figure's right side.
+
+use crate::sparse::Csr;
+
+/// How column space is bucketed when fingerprinting rows. Finer blocks
+/// separate clusters better but cost more; 64 matches the synthesized
+/// workload's cluster count and works well across the corpus.
+pub const DEFAULT_BLOCKS: usize = 64;
+
+/// A row-reordering plan: `perm[i]` = source row of output row `i`.
+#[derive(Clone, Debug)]
+pub struct ReorderPlan {
+    pub perm: Vec<usize>,
+    pub blocks: usize,
+}
+
+impl ReorderPlan {
+    /// Identity plan.
+    pub fn identity(n: usize) -> Self {
+        ReorderPlan { perm: (0..n).collect(), blocks: 0 }
+    }
+
+    pub fn apply(&self, csr: &Csr) -> Csr {
+        csr.permute_rows(&self.perm)
+    }
+
+    /// Inverse permutation (to map permuted `y` back to original row
+    /// order after SpMV).
+    pub fn inverse(&self) -> Vec<usize> {
+        let mut inv = vec![0usize; self.perm.len()];
+        for (i, &src) in self.perm.iter().enumerate() {
+            inv[src] = i;
+        }
+        inv
+    }
+}
+
+/// Compute the locality-aware reordering of `csr`.
+pub fn locality_reorder(csr: &Csr, blocks: usize) -> ReorderPlan {
+    let n = csr.n_rows;
+    let blocks = blocks.clamp(1, csr.n_cols.max(1));
+    let block_w = (csr.n_cols.max(1)).div_ceil(blocks);
+    // Signature per row: (dominant column block, mean column).
+    let mut sig: Vec<(usize, u32, u32)> = Vec::with_capacity(n);
+    let mut hist = vec![0u32; blocks];
+    for r in 0..n {
+        let (cols, _) = csr.row(r);
+        if cols.is_empty() {
+            // Empty rows go last, keeping relative order.
+            sig.push((r, u32::MAX, u32::MAX));
+            continue;
+        }
+        for h in hist.iter_mut() {
+            *h = 0;
+        }
+        let mut sum = 0u64;
+        for &c in cols {
+            hist[(c as usize / block_w).min(blocks - 1)] += 1;
+            sum += c as u64;
+        }
+        let dominant = hist
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &cnt)| cnt)
+            .map(|(b, _)| b)
+            .unwrap_or(0) as u32;
+        let mean = (sum / cols.len() as u64) as u32;
+        sig.push((r, dominant, mean));
+    }
+    // Stable sort by (dominant block, mean column).
+    sig.sort_by(|a, b| (a.1, a.2, a.0).cmp(&(b.1, b.2, b.0)));
+    ReorderPlan { perm: sig.into_iter().map(|(r, _, _)| r).collect(), blocks }
+}
+
+/// Locality score: average column-block overlap between consecutive
+/// rows (0 = no reuse, 1 = identical block sets). Used to decide
+/// whether reordering is worth the conversion overhead (the paper's
+/// "not one-fit-all" caveat).
+pub fn locality_score(csr: &Csr, blocks: usize) -> f64 {
+    let n = csr.n_rows;
+    if n < 2 {
+        return 1.0;
+    }
+    let blocks = blocks.clamp(1, csr.n_cols.max(1));
+    let block_w = (csr.n_cols.max(1)).div_ceil(blocks);
+    let block_set = |r: usize| -> u64 {
+        // Bitmask over up to 64 blocks.
+        let (cols, _) = csr.row(r);
+        let mut m = 0u64;
+        for &c in cols {
+            m |= 1u64 << ((c as usize / block_w).min(63));
+        }
+        m
+    };
+    let mut score = 0.0;
+    let mut prev = block_set(0);
+    for r in 1..n {
+        let cur = block_set(r);
+        let inter = (prev & cur).count_ones() as f64;
+        let uni = (prev | cur).count_ones() as f64;
+        if uni > 0.0 {
+            score += inter / uni;
+        } else {
+            score += 1.0;
+        }
+        prev = cur;
+    }
+    score / (n - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generators::{good_locality, poor_locality};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn identity_on_already_local() {
+        let mut rng = Pcg32::new(5);
+        let csr = crate::corpus::generators::banded(256, 5, &mut rng);
+        let plan = locality_reorder(&csr, 64);
+        let before = locality_score(&csr, 64);
+        let after = locality_score(&plan.apply(&csr), 64);
+        assert!(
+            after >= before - 0.05,
+            "reorder must not hurt a banded matrix: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn fixes_fig9_matrix() {
+        let mut rng = Pcg32::new(9);
+        let bad = poor_locality(1024, 4, 64, &mut rng);
+        let before = locality_score(&bad, 64);
+        let plan = locality_reorder(&bad, 64);
+        let fixed = plan.apply(&bad);
+        let after = locality_score(&fixed, 64);
+        assert!(
+            after > before + 0.3,
+            "reorder should strongly improve Fig 9 locality: {before} -> {after}"
+        );
+        // And approach the ideal form's score.
+        let mut rng2 = Pcg32::new(9);
+        let ideal = good_locality(1024, 4, 64, &mut rng2);
+        let ideal_score = locality_score(&ideal, 64);
+        assert!(after > 0.8 * ideal_score, "{after} vs ideal {ideal_score}");
+    }
+
+    #[test]
+    fn perm_is_permutation() {
+        let mut rng = Pcg32::new(11);
+        let csr = poor_locality(512, 4, 32, &mut rng);
+        let plan = locality_reorder(&csr, 64);
+        let mut seen = vec![false; 512];
+        for &p in &plan.perm {
+            assert!(!seen[p]);
+            seen[p] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let mut rng = Pcg32::new(13);
+        let csr = poor_locality(128, 4, 16, &mut rng);
+        let plan = locality_reorder(&csr, 64);
+        let inv = plan.inverse();
+        for (i, &src) in plan.perm.iter().enumerate() {
+            assert_eq!(inv[src], i);
+        }
+    }
+
+    #[test]
+    fn spmv_equivalent_up_to_permutation() {
+        let mut rng = Pcg32::new(17);
+        let csr = poor_locality(256, 4, 16, &mut rng);
+        let plan = locality_reorder(&csr, 64);
+        let permuted = plan.apply(&csr);
+        let x: Vec<f64> = (0..256).map(|_| rng.gen_f64()).collect();
+        let mut y0 = vec![0.0; 256];
+        let mut y1 = vec![0.0; 256];
+        csr.spmv(&x, &mut y0);
+        permuted.spmv(&x, &mut y1);
+        let inv = plan.inverse();
+        for r in 0..256 {
+            assert!((y0[r] - y1[inv[r]]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let csr = Csr::zero(16, 16);
+        let plan = locality_reorder(&csr, 8);
+        assert_eq!(plan.perm.len(), 16);
+        assert_eq!(locality_score(&csr, 8), 1.0);
+    }
+
+    #[test]
+    fn score_bounds() {
+        let mut rng = Pcg32::new(23);
+        let csr = poor_locality(128, 4, 16, &mut rng);
+        let s = locality_score(&csr, 64);
+        assert!((0.0..=1.0).contains(&s));
+    }
+}

@@ -1,0 +1,446 @@
+//! PJRT runtime: loads the AOT-compiled Pallas/JAX SpMV artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from rust.
+//!
+//! Python runs only at `make artifacts`; this module is the entire
+//! request-path compute story. Interchange is HLO *text* (jax >= 0.5
+//! emits 64-bit-id protos that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids — see /opt/xla-example/README.md).
+//!
+//! Artifacts are shape-monomorphic *buckets* (`manifest.json`); the
+//! [`Registry`] picks the smallest bucket a matrix fits after padding,
+//! pads the ELL/seg buffers, executes, and un-pads the result.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::sparse::{Csr, Ell};
+use crate::util::json::{self, Json};
+
+/// Metadata of one AOT artifact (mirror of aot.py's manifest schema).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub rows: usize,
+    pub n: usize,
+    /// ELL/power: padded row width.
+    pub k: usize,
+    /// seg: padded nonzero count.
+    pub nnz: usize,
+    /// spmm: dense vector-block width.
+    pub v: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Ell,
+    Seg,
+    Power,
+    Spmm,
+}
+
+/// The artifact catalogue parsed from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(
+            || format!("reading {} (run `make artifacts`)", manifest_path.display()),
+        )?;
+        let doc = json::parse(&text).context("parsing manifest.json")?;
+        if doc.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("unsupported manifest format");
+        }
+        let mut artifacts = Vec::new();
+        for a in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let get_s = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            let get_n =
+                |k: &str| a.get(k).and_then(Json::as_usize).unwrap_or(0);
+            let kind = match get_s("kind")?.as_str() {
+                "ell" => ArtifactKind::Ell,
+                "seg" => ArtifactKind::Seg,
+                "power" => ArtifactKind::Power,
+                "spmm" => ArtifactKind::Spmm,
+                other => bail!("unknown artifact kind {other}"),
+            };
+            artifacts.push(ArtifactMeta {
+                name: get_s("name")?,
+                file: get_s("file")?,
+                kind,
+                rows: get_n("rows"),
+                n: get_n("n"),
+                k: get_n("k"),
+                nnz: get_n("nnz"),
+                v: get_n("v"),
+            });
+        }
+        Ok(Registry { dir, artifacts })
+    }
+
+    /// Smallest ELL bucket that fits `(rows, k)`.
+    pub fn pick_ell(&self, rows: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Ell && a.rows >= rows && a.k >= k
+            })
+            .min_by_key(|a| a.rows * a.k)
+    }
+
+    /// Smallest seg bucket that fits `(nnz, rows)`.
+    pub fn pick_seg(&self, nnz: usize, rows: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Seg && a.nnz >= nnz && a.rows >= rows
+            })
+            .min_by_key(|a| a.nnz)
+    }
+
+    /// Smallest SpMM bucket fitting `(rows, k, v)`.
+    pub fn pick_spmm(
+        &self,
+        rows: usize,
+        k: usize,
+        v: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Spmm
+                    && a.rows >= rows
+                    && a.k >= k
+                    && a.v >= v
+            })
+            .min_by_key(|a| a.rows * a.k * a.v)
+    }
+
+    pub fn pick_power(&self, rows: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Power && a.rows >= rows && a.k >= k
+            })
+            .min_by_key(|a| a.rows * a.k)
+    }
+}
+
+/// A loaded + compiled artifact, ready to execute.
+pub struct Compiled {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: client + lazily compiled executables.
+pub struct Runtime {
+    pub registry: Registry,
+    client: xla::PjRtClient,
+    compiled: std::cell::RefCell<
+        std::collections::HashMap<String, std::rc::Rc<Compiled>>,
+    >,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let registry = Registry::load(artifact_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        Ok(Runtime {
+            registry,
+            client,
+            compiled: Default::default(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, meta: &ArtifactMeta) -> Result<std::rc::Rc<Compiled>> {
+        if let Some(c) = self.compiled.borrow().get(&meta.name) {
+            return Ok(c.clone());
+        }
+        let path = self.registry.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+        let c = std::rc::Rc::new(Compiled { meta: meta.clone(), exe });
+        self.compiled.borrow_mut().insert(meta.name.clone(), c.clone());
+        Ok(c)
+    }
+
+    /// y = A x through the ELL Pallas kernel. `x.len()` must equal
+    /// `ell.n_cols`; the matrix must fit an ELL bucket.
+    pub fn spmv_ell(&self, ell: &Ell, x: &[f64]) -> Result<Vec<f64>> {
+        let meta = self
+            .registry
+            .pick_ell(ell.n_rows, ell.k)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no ELL bucket fits rows={} k={}",
+                    ell.n_rows,
+                    ell.k
+                )
+            })?
+            .clone();
+        let c = self.compile(&meta)?;
+        let (cols, data) = ell
+            .to_bucket_buffers(meta.rows, meta.k)
+            .ok_or_else(|| anyhow!("bucket pack failed"))?;
+        let mut xf = vec![0.0f32; meta.n];
+        for (i, &v) in x.iter().enumerate() {
+            xf[i] = v as f32;
+        }
+        let lit_cols = xla::Literal::vec1(&cols)
+            .reshape(&[meta.rows as i64, meta.k as i64])
+            .map_err(wrap)?;
+        let lit_data = xla::Literal::vec1(&data)
+            .reshape(&[meta.rows as i64, meta.k as i64])
+            .map_err(wrap)?;
+        let lit_x = xla::Literal::vec1(&xf);
+        let out = c
+            .exe
+            .execute::<xla::Literal>(&[lit_cols, lit_data, lit_x])
+            .map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let y = out.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
+        Ok(y[..ell.n_rows].iter().map(|&v| v as f64).collect())
+    }
+
+    /// y = A x through the segmented (CSR5-style) Pallas kernel —
+    /// handles matrices whose max row width makes ELL impractical.
+    pub fn spmv_seg(&self, csr: &Csr, x: &[f64]) -> Result<Vec<f64>> {
+        let nnz = csr.nnz();
+        let meta = self
+            .registry
+            .pick_seg(nnz, csr.n_rows)
+            .ok_or_else(|| {
+                anyhow!("no seg bucket fits nnz={nnz} rows={}", csr.n_rows)
+            })?
+            .clone();
+        let c = self.compile(&meta)?;
+        let mut cols = vec![0i32; meta.nnz];
+        let mut rows = vec![0i32; meta.nnz];
+        let mut data = vec![0.0f32; meta.nnz];
+        let mut i = 0usize;
+        for r in 0..csr.n_rows {
+            let (rc, rv) = csr.row(r);
+            for (cc, vv) in rc.iter().zip(rv) {
+                cols[i] = *cc as i32;
+                rows[i] = r as i32;
+                data[i] = *vv as f32;
+                i += 1;
+            }
+        }
+        let mut xf = vec![0.0f32; meta.n];
+        for (j, &v) in x.iter().enumerate() {
+            xf[j] = v as f32;
+        }
+        let out = c
+            .exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(&cols),
+                xla::Literal::vec1(&rows),
+                xla::Literal::vec1(&data),
+                xla::Literal::vec1(&xf),
+            ])
+            .map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let y = out.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
+        Ok(y[..csr.n_rows].iter().map(|&v| v as f64).collect())
+    }
+
+    /// Four normalized power-iteration steps + Rayleigh quotient —
+    /// the composed L2 graph (quickstart demo).
+    pub fn power_iter(&self, ell: &Ell, x0: &[f64]) -> Result<(Vec<f64>, f64)> {
+        let meta = self
+            .registry
+            .pick_power(ell.n_rows, ell.k)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no power bucket fits rows={} k={}",
+                    ell.n_rows,
+                    ell.k
+                )
+            })?
+            .clone();
+        let c = self.compile(&meta)?;
+        let (cols, data) = ell
+            .to_bucket_buffers(meta.rows, meta.k)
+            .ok_or_else(|| anyhow!("bucket pack failed"))?;
+        let mut xf = vec![0.0f32; meta.n];
+        for (i, &v) in x0.iter().enumerate() {
+            xf[i] = v as f32;
+        }
+        let out = c
+            .exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(&cols)
+                    .reshape(&[meta.rows as i64, meta.k as i64])
+                    .map_err(wrap)?,
+                xla::Literal::vec1(&data)
+                    .reshape(&[meta.rows as i64, meta.k as i64])
+                    .map_err(wrap)?,
+                xla::Literal::vec1(&xf),
+            ])
+            .map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let (v, lam) = out.to_tuple2().map_err(wrap)?;
+        let vf = v.to_vec::<f32>().map_err(wrap)?;
+        let lamf = lam.to_vec::<f32>().map_err(wrap)?;
+        Ok((
+            vf[..ell.n_rows].iter().map(|&x| x as f64).collect(),
+            lamf.first().copied().unwrap_or(0.0) as f64,
+        ))
+    }
+
+    /// Y = A X through the ELL SpMM kernel: `x` is column-major-free —
+    /// pass `vectors` as a slice of `v` vectors, each `n_cols` long.
+    pub fn spmm_ell(
+        &self,
+        ell: &Ell,
+        vectors: &[Vec<f64>],
+    ) -> Result<Vec<Vec<f64>>> {
+        let v = vectors.len();
+        anyhow::ensure!(v > 0, "need at least one vector");
+        for x in vectors {
+            anyhow::ensure!(x.len() == ell.n_cols, "vector length mismatch");
+        }
+        let meta = self
+            .registry
+            .pick_spmm(ell.n_rows, ell.k, v)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no SpMM bucket fits rows={} k={} v={v}",
+                    ell.n_rows,
+                    ell.k
+                )
+            })?
+            .clone();
+        let c = self.compile(&meta)?;
+        let (cols, data) = ell
+            .to_bucket_buffers(meta.rows, meta.k)
+            .ok_or_else(|| anyhow!("bucket pack failed"))?;
+        // Row-major [n][v] block, zero-padded.
+        let mut xf = vec![0.0f32; meta.n * meta.v];
+        for (j, x) in vectors.iter().enumerate() {
+            for (i, &val) in x.iter().enumerate() {
+                xf[i * meta.v + j] = val as f32;
+            }
+        }
+        let out = c
+            .exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(&cols)
+                    .reshape(&[meta.rows as i64, meta.k as i64])
+                    .map_err(wrap)?,
+                xla::Literal::vec1(&data)
+                    .reshape(&[meta.rows as i64, meta.k as i64])
+                    .map_err(wrap)?,
+                xla::Literal::vec1(&xf)
+                    .reshape(&[meta.n as i64, meta.v as i64])
+                    .map_err(wrap)?,
+            ])
+            .map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let y =
+            out.to_tuple1().map_err(wrap)?.to_vec::<f32>().map_err(wrap)?;
+        // Un-pad into per-vector outputs.
+        let mut result = vec![vec![0.0f64; ell.n_rows]; v];
+        for r in 0..ell.n_rows {
+            for (j, out_j) in result.iter_mut().enumerate() {
+                out_j[r] = y[r * meta.v + j] as f64;
+            }
+        }
+        Ok(result)
+    }
+
+    /// Route a CSR matrix to the best kernel: ELL when padding is
+    /// acceptable, the segmented kernel otherwise (the exdata_1-style
+    /// pathologies).
+    pub fn spmv(&self, csr: &Csr, x: &[f64]) -> Result<Vec<f64>> {
+        let k = csr.max_row_nnz();
+        let dense_ok = self.registry.pick_ell(csr.n_rows, k).is_some();
+        if dense_ok && k > 0 {
+            let ell = Ell::from_csr(csr, None)
+                .map_err(|e| anyhow!("ell conversion: {e}"))?;
+            self.spmv_ell(&ell, x)
+        } else {
+            self.spmv_seg(csr, x)
+        }
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Registry parsing is testable without artifacts on disk; the
+    // execution paths are covered by `tests/runtime_integration.rs`
+    // (which requires `make artifacts`).
+
+    fn toy_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","artifacts":[
+              {"name":"ell_small","file":"a.hlo.txt","kind":"ell","rows":1024,"k":8,"n":1024},
+              {"name":"ell_big","file":"b.hlo.txt","kind":"ell","rows":4096,"k":32,"n":4096},
+              {"name":"seg","file":"c.hlo.txt","kind":"seg","rows":4096,"nnz":16384,"n":4096},
+              {"name":"pow","file":"d.hlo.txt","kind":"power","rows":4096,"k":16,"n":4096}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn registry_parses_and_picks() {
+        let dir = std::env::temp_dir().join("ft2000_registry_test");
+        toy_manifest(&dir);
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.artifacts.len(), 4);
+        assert_eq!(reg.pick_ell(1000, 8).unwrap().name, "ell_small");
+        assert_eq!(reg.pick_ell(1000, 9).unwrap().name, "ell_big");
+        assert_eq!(reg.pick_ell(2000, 4).unwrap().name, "ell_big");
+        assert!(reg.pick_ell(9999, 4).is_none());
+        assert_eq!(reg.pick_seg(100, 100).unwrap().name, "seg");
+        assert!(reg.pick_seg(20000, 100).is_none());
+        assert_eq!(reg.pick_power(4096, 16).unwrap().name, "pow");
+    }
+
+    #[test]
+    fn registry_missing_dir_errors() {
+        let err = Registry::load("/nonexistent/path/xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

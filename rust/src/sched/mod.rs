@@ -1,0 +1,329 @@
+//! Work partitioning (schedules) and thread placement.
+//!
+//! The paper's default is the OpenMP *static* row schedule over CSR —
+//! whose nonzero allocation is entirely at the mercy of the matrix
+//! structure (the `job_var` factor). CSR5's tile schedule balances by
+//! construction (§5.2.1). Row-balanced and dynamic-chunk schedules are
+//! included as baselines the paper mentions ("the overhead of thread
+//! communication with dynamic scheduling is nonnegligible").
+
+use crate::sparse::{Csr, Csr5};
+
+/// A work schedule for multi-threaded SpMV.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// OpenMP `schedule(static)` over rows: equal row *counts*.
+    CsrRowStatic,
+    /// Rows split so per-thread nonzero counts are balanced (prefix
+    /// bisection) — the cheap software fix for imbalance.
+    CsrRowBalanced,
+    /// CSR5 tiles split evenly (`tile_nnz` nonzeros per tile).
+    Csr5Tiles { tile_nnz: usize },
+    /// OpenMP `schedule(dynamic, chunk)` over rows: round-robin chunks
+    /// (modeled deterministically; the runtime overhead is charged by
+    /// the timing model per chunk).
+    CsrDynamic { chunk: usize },
+}
+
+impl Schedule {
+    pub fn name(&self) -> String {
+        match self {
+            Schedule::CsrRowStatic => "csr-static".into(),
+            Schedule::CsrRowBalanced => "csr-balanced".into(),
+            Schedule::Csr5Tiles { tile_nnz } => format!("csr5-t{tile_nnz}"),
+            Schedule::CsrDynamic { chunk } => format!("csr-dyn{chunk}"),
+        }
+    }
+}
+
+/// The materialized assignment of work to threads.
+#[derive(Clone, Debug)]
+pub enum Partition {
+    /// Per thread: a list of row ranges `[r0, r1)`.
+    Rows { per_thread: Vec<Vec<(usize, usize)>> },
+    /// Per thread: one tile range `[t0, t1)` over a CSR5 tiling.
+    Tiles { tile_nnz: usize, per_thread: Vec<(usize, usize)> },
+}
+
+impl Partition {
+    /// Nonzeros assigned to each thread (the `job_var` input).
+    pub fn thread_nnz(&self, csr: &Csr) -> Vec<usize> {
+        match self {
+            Partition::Rows { per_thread } => per_thread
+                .iter()
+                .map(|ranges| {
+                    ranges
+                        .iter()
+                        .map(|&(r0, r1)| csr.ptr[r1] - csr.ptr[r0])
+                        .sum()
+                })
+                .collect(),
+            Partition::Tiles { tile_nnz, per_thread } => {
+                let nnz = csr.nnz();
+                per_thread
+                    .iter()
+                    .map(|&(t0, t1)| {
+                        (t1 * tile_nnz).min(nnz) - (t0 * tile_nnz).min(nnz)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        match self {
+            Partition::Rows { per_thread } => per_thread.len(),
+            Partition::Tiles { per_thread, .. } => per_thread.len(),
+        }
+    }
+
+    /// Every row/tile covered exactly once?
+    pub fn validate(&self, csr: &Csr) -> Result<(), String> {
+        match self {
+            Partition::Rows { per_thread } => {
+                let mut covered = vec![false; csr.n_rows];
+                for ranges in per_thread {
+                    for &(r0, r1) in ranges {
+                        if r1 > csr.n_rows || r0 > r1 {
+                            return Err(format!("bad range ({r0},{r1})"));
+                        }
+                        for r in r0..r1 {
+                            if covered[r] {
+                                return Err(format!("row {r} covered twice"));
+                            }
+                            covered[r] = true;
+                        }
+                    }
+                }
+                if let Some(r) = covered.iter().position(|&c| !c) {
+                    return Err(format!("row {r} uncovered"));
+                }
+                Ok(())
+            }
+            Partition::Tiles { tile_nnz, per_thread } => {
+                let n_tiles = csr.nnz().div_ceil(*tile_nnz).max(1);
+                let mut expect = 0usize;
+                for &(t0, t1) in per_thread {
+                    if t0 != expect || t1 < t0 {
+                        return Err(format!(
+                            "tile ranges not contiguous at ({t0},{t1})"
+                        ));
+                    }
+                    expect = t1;
+                }
+                if expect != n_tiles {
+                    return Err(format!("covered {expect} of {n_tiles} tiles"));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Build the partition of `csr` for `n_threads` under `schedule`.
+pub fn partition(csr: &Csr, schedule: Schedule, n_threads: usize) -> Partition {
+    assert!(n_threads > 0);
+    match schedule {
+        Schedule::CsrRowStatic => {
+            let n = csr.n_rows;
+            Partition::Rows {
+                per_thread: (0..n_threads)
+                    .map(|t| vec![(n * t / n_threads, n * (t + 1) / n_threads)])
+                    .collect(),
+            }
+        }
+        Schedule::CsrRowBalanced => {
+            let total = csr.nnz();
+            let mut per_thread = Vec::with_capacity(n_threads);
+            let mut r = 0usize;
+            for t in 0..n_threads {
+                let target = total * (t + 1) / n_threads;
+                let r0 = r;
+                while r < csr.n_rows && csr.ptr[r + 1] <= target {
+                    r += 1;
+                }
+                // Take at least one row if any remain (avoid starving
+                // later threads of progress on pathological prefixes).
+                if r == r0 && r < csr.n_rows && t < n_threads - 1 {
+                    r += 1;
+                }
+                if t == n_threads - 1 {
+                    r = csr.n_rows;
+                }
+                per_thread.push(vec![(r0, r)]);
+            }
+            Partition::Rows { per_thread }
+        }
+        Schedule::Csr5Tiles { tile_nnz } => {
+            let n_tiles = csr.nnz().div_ceil(tile_nnz).max(1);
+            Partition::Tiles {
+                tile_nnz,
+                per_thread: (0..n_threads)
+                    .map(|t| {
+                        (n_tiles * t / n_threads, n_tiles * (t + 1) / n_threads)
+                    })
+                    .collect(),
+            }
+        }
+        Schedule::CsrDynamic { chunk } => {
+            // Deterministic model of dynamic scheduling: greedy
+            // longest-processing-time assignment of row chunks by
+            // nonzero count — what a work-stealing runtime converges
+            // to for SpMV.
+            let chunk = chunk.max(1);
+            let mut chunks: Vec<(usize, usize, usize)> = Vec::new();
+            let mut r = 0;
+            while r < csr.n_rows {
+                let r1 = (r + chunk).min(csr.n_rows);
+                chunks.push((csr.ptr[r1] - csr.ptr[r], r, r1));
+                r = r1;
+            }
+            chunks.sort_by(|a, b| b.0.cmp(&a.0));
+            let mut per_thread: Vec<Vec<(usize, usize)>> =
+                vec![Vec::new(); n_threads];
+            let mut load = vec![0usize; n_threads];
+            for (nnz, r0, r1) in chunks {
+                let t = (0..n_threads).min_by_key(|&t| load[t]).unwrap();
+                load[t] += nnz;
+                per_thread[t].push((r0, r1));
+            }
+            for ranges in &mut per_thread {
+                ranges.sort_unstable();
+            }
+            Partition::Rows { per_thread }
+        }
+    }
+}
+
+/// Convenience: build the CSR5 structure matching a tile schedule.
+pub fn csr5_for(csr: &Csr, schedule: Schedule) -> Option<Csr5> {
+    match schedule {
+        Schedule::Csr5Tiles { tile_nnz } => Some(Csr5::from_csr(csr, tile_nnz)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::features::job_var;
+    use crate::sparse::Coo;
+
+    fn skewed_matrix(n: usize) -> Csr {
+        // All mass in rows n/4..n/4+4 (thread 2 of 4 under static).
+        let mut coo = Coo::new(n, n);
+        for i in 0..4 {
+            for c in 0..n {
+                coo.push(n / 4 + i, c, 1.0);
+            }
+        }
+        for r in 0..n {
+            coo.push(r, r, 1.0);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn static_partition_covers() {
+        let csr = skewed_matrix(64);
+        for nt in [1, 2, 3, 4, 7] {
+            let p = partition(&csr, Schedule::CsrRowStatic, nt);
+            assert!(p.validate(&csr).is_ok(), "nt={nt}");
+            assert_eq!(p.n_threads(), nt);
+            let total: usize = p.thread_nnz(&csr).iter().sum();
+            assert_eq!(total, csr.nnz());
+        }
+    }
+
+    #[test]
+    fn static_is_imbalanced_on_skew() {
+        let csr = skewed_matrix(64);
+        let p = partition(&csr, Schedule::CsrRowStatic, 4);
+        let jv = job_var(&p.thread_nnz(&csr));
+        assert!(jv > 0.7, "static should be imbalanced: {jv}");
+    }
+
+    #[test]
+    fn balanced_fixes_imbalance() {
+        let csr = skewed_matrix(64);
+        let p = partition(&csr, Schedule::CsrRowBalanced, 4);
+        assert!(p.validate(&csr).is_ok());
+        let jv = job_var(&p.thread_nnz(&csr));
+        assert!(jv < 0.5, "balanced should reduce job_var: {jv}");
+    }
+
+    #[test]
+    fn csr5_tiles_balanced() {
+        let csr = skewed_matrix(64);
+        let p = partition(&csr, Schedule::Csr5Tiles { tile_nnz: 8 }, 4);
+        assert!(p.validate(&csr).is_ok());
+        let jv = job_var(&p.thread_nnz(&csr));
+        assert!(jv < 0.35, "csr5 tiles must balance: {jv}");
+    }
+
+    #[test]
+    fn dynamic_balances_chunks() {
+        // chunk=1 lets LPT spread the four dense rows across threads;
+        // coarser chunks cannot split a chunk (tested below).
+        let csr = skewed_matrix(256);
+        let p = partition(&csr, Schedule::CsrDynamic { chunk: 1 }, 4);
+        assert!(p.validate(&csr).is_ok());
+        let jv = job_var(&p.thread_nnz(&csr));
+        assert!(jv < 0.35, "dynamic chunk=1 should spread rows: {jv}");
+    }
+
+    #[test]
+    fn dynamic_coarse_chunk_limited_by_granularity() {
+        // The dense block fits one chunk of 4 rows: no schedule can
+        // split it, so job_var stays high — the "dynamic scheduling is
+        // not free" caveat of §5.2.1.
+        let csr = skewed_matrix(256);
+        let p = partition(&csr, Schedule::CsrDynamic { chunk: 4 }, 4);
+        assert!(p.validate(&csr).is_ok());
+        let jv = job_var(&p.thread_nnz(&csr));
+        assert!(jv > 0.6, "coarse chunk cannot split the block: {jv}");
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let csr = Csr::identity(3);
+        for sched in [
+            Schedule::CsrRowStatic,
+            Schedule::CsrRowBalanced,
+            Schedule::CsrDynamic { chunk: 1 },
+        ] {
+            let p = partition(&csr, sched, 8);
+            assert!(p.validate(&csr).is_ok(), "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn empty_matrix_partitions() {
+        let csr = Csr::zero(0, 0);
+        let p = partition(&csr, Schedule::CsrRowStatic, 4);
+        assert!(p.validate(&csr).is_ok());
+        assert_eq!(p.thread_nnz(&csr), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn csr5_for_matches() {
+        let csr = skewed_matrix(32);
+        assert!(csr5_for(&csr, Schedule::CsrRowStatic).is_none());
+        let c5 = csr5_for(&csr, Schedule::Csr5Tiles { tile_nnz: 16 }).unwrap();
+        assert_eq!(c5.tile_nnz, 16);
+    }
+
+    #[test]
+    fn balanced_theoretical_optimum_uniform() {
+        let csr = Csr::identity(100);
+        let p = partition(&csr, Schedule::CsrRowBalanced, 4);
+        let jv = job_var(&p.thread_nnz(&csr));
+        assert!((jv - 0.25).abs() < 0.02, "uniform should hit 0.25: {jv}");
+    }
+
+    #[test]
+    fn schedule_names() {
+        assert_eq!(Schedule::CsrRowStatic.name(), "csr-static");
+        assert_eq!(Schedule::Csr5Tiles { tile_nnz: 64 }.name(), "csr5-t64");
+    }
+}

@@ -1,0 +1,22 @@
+//! Trace-driven many-core cache/memory/timing simulator.
+//!
+//! This is the substitute for the physical FT-2000+ (DESIGN.md
+//! §Substitutions): every scalability effect the paper analyzes —
+//! shared-L2 interference and positive reuse of `x`, load imbalance
+//! (slowest-thread time), DCU bandwidth saturation — is a cache or
+//! bandwidth phenomenon this simulator reproduces, while emitting the
+//! same PAPI-named counter set the paper collects.
+//!
+//! Fidelity notes are in DESIGN.md §6. The simulator is *not*
+//! cycle-accurate; it is calibrated to reproduce the paper's shapes
+//! (Table 2 averages, Fig 2 curves, Fig 8 placement effects).
+
+pub mod cache;
+pub mod engine;
+pub mod memory;
+pub mod timing;
+pub mod topology;
+
+pub use cache::Cache;
+pub use engine::{simulate, SimResult};
+pub use topology::{Placement, Topology};

@@ -1,0 +1,238 @@
+//! Cycle model: turns per-thread counters into per-thread cycles.
+//!
+//! cycles(thread) = TOT_INS / issue_width                  (compute)
+//!                + L2_hits · l2_lat · ovl · q(rho_L2)     (L2 probes)
+//!                + L3_hits · l3_lat · ovl                 (Xeon only)
+//!                + mem_seq · mem_lat · ovl · PF · [rho>1] (streams)
+//!                + mem_rand · mem_lat · ovl · q(rho_mem)  (gathers)
+//!
+//! where `q` is the M/M/1-style queue factor of
+//! [`super::memory::queue_factor`] over the group/domain shared paths.
+//! SpMV wall time = slowest thread + fork/join overhead (the paper:
+//! "the SpMV performance is determined by the slowest thread").
+
+use super::memory::{solve_contention, PathKind, SharedPath, StallInputs};
+use super::topology::Topology;
+
+/// Fraction of the DRAM latency a prefetched sequential miss still
+/// exposes (calibrated so single-core streaming SpMV lands at the
+/// paper's ~0.4–0.6 Gflops).
+pub const PREFETCH_FACTOR: f64 = 0.20;
+
+/// Per-thread cache/instruction profile handed to the timing model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ThreadProfile {
+    pub tot_ins: u64,
+    /// L1 misses (== L2 probes).
+    pub l2_probes: u64,
+    /// L1 misses that hit in L2.
+    pub l2_hits: u64,
+    /// L2 misses that hit in L3 (Xeon path; 0 on FT).
+    pub l3_hits: u64,
+    /// Misses to DRAM, split by stream kind.
+    pub mem_seq: u64,
+    pub mem_rand: u64,
+    /// Core this thread is pinned to.
+    pub core: usize,
+}
+
+impl ThreadProfile {
+    pub fn mem_lines(&self) -> u64 {
+        self.mem_seq + self.mem_rand
+    }
+}
+
+/// Timing result for one simulated kernel invocation.
+#[derive(Clone, Debug)]
+pub struct TimingResult {
+    pub per_thread_cycles: Vec<f64>,
+    /// Wall cycles: slowest thread + fork/join (if >1 thread).
+    pub wall_cycles: f64,
+    pub wall_seconds: f64,
+}
+
+/// Compute per-thread and wall cycles under the topology's shared-path
+/// constraints.
+pub fn time_threads(
+    topo: &Topology,
+    profiles: &[ThreadProfile],
+) -> TimingResult {
+    let n = profiles.len();
+    let ghz = topo.freq_ghz;
+    let inputs: Vec<StallInputs> = profiles
+        .iter()
+        .map(|p| StallInputs {
+            base: p.tot_ins as f64 / topo.issue_width
+                + p.l3_hits as f64 * topo.l3_lat * topo.l2_overlap,
+            l2_hit: p.l2_hits as f64 * topo.l2_lat * topo.l2_overlap,
+            mem_seq: p.mem_seq as f64
+                * topo.mem_lat
+                * topo.mem_overlap
+                * PREFETCH_FACTOR,
+            mem_rand: p.mem_rand as f64 * topo.mem_lat * topo.mem_overlap,
+            mem_bytes: p.mem_lines() as f64 * 64.0,
+            l2_accesses: p.l2_probes as f64,
+        })
+        .collect();
+    // Shared paths from the placement: one L2-access path + one DRAM
+    // port per L2 group in use, one DRAM path per memory domain.
+    let mut groups: std::collections::HashMap<usize, Vec<usize>> =
+        std::collections::HashMap::new();
+    let mut domains: std::collections::HashMap<usize, Vec<usize>> =
+        std::collections::HashMap::new();
+    for (t, p) in profiles.iter().enumerate() {
+        groups.entry(topo.l2_group_of(p.core)).or_default().push(t);
+        domains.entry(topo.mem_domain_of(p.core)).or_default().push(t);
+    }
+    let mut paths: Vec<SharedPath> = Vec::new();
+    for (_, threads) in groups {
+        paths.push(SharedPath {
+            kind: PathKind::L2Access,
+            capacity: topo.l2_acc_per_cycle,
+            threads: threads.clone(),
+        });
+        paths.push(SharedPath {
+            kind: PathKind::Dram,
+            capacity: topo.bw_l2_port_gbs / ghz,
+            threads,
+        });
+    }
+    for (_, threads) in domains {
+        paths.push(SharedPath {
+            kind: PathKind::Dram,
+            capacity: topo.bw_domain_gbs / ghz,
+            threads,
+        });
+    }
+    let per_thread = solve_contention(&inputs, &paths);
+    let slowest = per_thread.iter().cloned().fold(0.0, f64::max);
+    let fork = if n > 1 { topo.fork_join_cycles } else { 0.0 };
+    let wall = slowest + fork;
+    TimingResult {
+        per_thread_cycles: per_thread,
+        wall_cycles: wall,
+        wall_seconds: wall / (ghz * 1e9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A memory-streaming SpMV-like profile (debr/bone010 shape).
+    fn streaming_profile(core: usize, scale: u64) -> ThreadProfile {
+        ThreadProfile {
+            tot_ins: 1_600_000 * scale,
+            l2_probes: 70_000 * scale,
+            l2_hits: 5_000 * scale,
+            l3_hits: 0,
+            mem_seq: 62_000 * scale,
+            mem_rand: 3_000 * scale,
+            core,
+        }
+    }
+
+    /// A gather-heavy profile (conf5 shape): many L2 probes, a solid
+    /// random-miss tail.
+    fn gather_profile(core: usize, scale: u64) -> ThreadProfile {
+        ThreadProfile {
+            tot_ins: 3_000_000 * scale,
+            l2_probes: 550_000 * scale,
+            l2_hits: 430_000 * scale,
+            l3_hits: 0,
+            mem_seq: 95_000 * scale,
+            mem_rand: 25_000 * scale,
+            core,
+        }
+    }
+
+    #[test]
+    fn single_thread_baseline() {
+        let topo = Topology::ft2000plus();
+        let r = time_threads(&topo, &[streaming_profile(0, 1)]);
+        assert_eq!(r.per_thread_cycles.len(), 1);
+        assert!(r.wall_cycles > 0.0);
+        assert!((r.wall_seconds - r.wall_cycles / 2.3e9).abs() < 1e-12);
+    }
+
+    fn speedup_4t(topo: &Topology, mk: fn(usize, u64) -> ThreadProfile, cores: [usize; 4]) -> f64 {
+        let single = time_threads(topo, &[mk(0, 4)]);
+        let quad: Vec<ThreadProfile> =
+            cores.iter().map(|&c| mk(c, 1)).collect();
+        let multi = time_threads(topo, &quad);
+        single.wall_cycles / multi.wall_cycles
+    }
+
+    #[test]
+    fn in_group_streaming_scales_partially() {
+        // debr-like: paper gets ~2.2x in a core-group.
+        let topo = Topology::ft2000plus();
+        let s = speedup_4t(&topo, streaming_profile, [0, 1, 2, 3]);
+        assert!(s > 1.6 && s < 3.2, "streaming in-group speedup: {s}");
+    }
+
+    #[test]
+    fn in_group_gather_scales_poorly() {
+        // conf5-like: paper gets ~1.35x in a core-group.
+        let topo = Topology::ft2000plus();
+        let s = speedup_4t(&topo, gather_profile, [0, 1, 2, 3]);
+        assert!(s < 2.0, "gather in-group speedup should be flat: {s}");
+    }
+
+    #[test]
+    fn private_l2_rescues_gather() {
+        // conf5-like with threads on 4 different panels: ~3.6x.
+        let topo = Topology::ft2000plus();
+        let in_group = speedup_4t(&topo, gather_profile, [0, 1, 2, 3]);
+        let private = speedup_4t(&topo, gather_profile, [0, 8, 16, 24]);
+        assert!(
+            private > in_group + 1.0,
+            "private-L2 {private} must beat in-group {in_group}"
+        );
+        assert!(private > 3.0, "private-L2 gather speedup: {private}");
+    }
+
+    #[test]
+    fn slowest_thread_dominates() {
+        let topo = Topology::ft2000plus();
+        let mut threads =
+            vec![streaming_profile(0, 1), streaming_profile(1, 1)];
+        threads[1].tot_ins *= 20; // imbalanced
+        let r = time_threads(&topo, &threads);
+        assert!(r.per_thread_cycles[1] > r.per_thread_cycles[0] * 3.0);
+        assert!(r.wall_cycles >= r.per_thread_cycles[1]);
+    }
+
+    #[test]
+    fn random_misses_cost_more_than_seq() {
+        let topo = Topology::ft2000plus();
+        let seq = ThreadProfile {
+            tot_ins: 1000,
+            mem_seq: 10_000,
+            ..Default::default()
+        };
+        let rand = ThreadProfile {
+            tot_ins: 1000,
+            mem_rand: 10_000,
+            ..Default::default()
+        };
+        let t_seq = time_threads(&topo, &[seq]).wall_cycles;
+        let t_rand = time_threads(&topo, &[rand]).wall_cycles;
+        assert!(t_rand > 3.0 * t_seq, "{t_rand} vs {t_seq}");
+    }
+
+    #[test]
+    fn xeon_faster_single_core() {
+        // Fig 2: Xeon's single-thread SpMV clearly beats FT-2000+'s.
+        let ft = time_threads(
+            &Topology::ft2000plus(),
+            &[streaming_profile(0, 1)],
+        );
+        let xeon = time_threads(
+            &Topology::xeon_e5_2692(),
+            &[streaming_profile(0, 1)],
+        );
+        // Cycle counts: xeon runs fewer cycles AND at similar clock.
+        assert!(xeon.wall_cycles < ft.wall_cycles);
+    }
+}

@@ -1,0 +1,292 @@
+//! Iterative solvers on top of the threaded SpMV — the scientific
+//! workloads the paper's introduction motivates SpMV with ("one of
+//! the most common operations in scientific and HPC applications").
+//!
+//! Included: Conjugate Gradient (optionally Jacobi-preconditioned)
+//! and power iteration. Both drive the *same* SpMV executors the
+//! characterization studies, so the simulated per-iteration cost of a
+//! solve on FT-2000+ follows directly from a matrix profile
+//! (`examples/solver_workload.rs`).
+
+use crate::exec;
+use crate::sched::Schedule;
+use crate::sparse::Csr;
+
+/// Convergence report of an iterative solve.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub residual_norm: f64,
+    pub converged: bool,
+    /// Total wall time spent inside SpMV (host).
+    pub spmv_seconds: f64,
+}
+
+/// Options for [`cg`].
+#[derive(Clone, Debug)]
+pub struct CgOptions {
+    pub max_iters: usize,
+    pub rel_tol: f64,
+    /// Jacobi (diagonal) preconditioning.
+    pub jacobi: bool,
+    pub schedule: Schedule,
+    pub threads: usize,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        CgOptions {
+            max_iters: 500,
+            rel_tol: 1e-8,
+            jacobi: false,
+            schedule: Schedule::CsrRowStatic,
+            threads: 1,
+        }
+    }
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Conjugate Gradient for SPD systems `A x = b`.
+pub fn cg(a: &Csr, b: &[f64], opts: &CgOptions) -> SolveResult {
+    assert_eq!(a.n_rows, a.n_cols, "CG needs a square matrix");
+    assert_eq!(b.len(), a.n_rows);
+    let n = a.n_rows;
+    let inv_diag: Option<Vec<f64>> = if opts.jacobi {
+        Some(
+            (0..n)
+                .map(|r| {
+                    let (cols, vals) = a.row(r);
+                    let d = cols
+                        .iter()
+                        .zip(vals)
+                        .find(|(&c, _)| c as usize == r)
+                        .map(|(_, &v)| v)
+                        .unwrap_or(1.0);
+                    if d.abs() > 1e-300 {
+                        1.0 / d
+                    } else {
+                        1.0
+                    }
+                })
+                .collect(),
+        )
+    } else {
+        None
+    };
+    let precond = |r: &[f64]| -> Vec<f64> {
+        match &inv_diag {
+            Some(d) => r.iter().zip(d).map(|(x, m)| x * m).collect(),
+            None => r.to_vec(),
+        }
+    };
+    let spmv = |v: &[f64], secs: &mut f64| -> Vec<f64> {
+        let res = exec::spmv_threaded(a, v, opts.schedule, opts.threads);
+        *secs += res.wall_seconds;
+        res.y
+    };
+
+    let mut spmv_seconds = 0.0;
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec(); // r = b - A*0
+    let b_norm = norm(b).max(1e-300);
+    let mut z = precond(&r);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    for it in 0..opts.max_iters {
+        let rn = norm(&r);
+        if rn / b_norm <= opts.rel_tol {
+            return SolveResult {
+                x,
+                iterations: it,
+                residual_norm: rn,
+                converged: true,
+                spmv_seconds,
+            };
+        }
+        let ap = spmv(&p, &mut spmv_seconds);
+        let pap = dot(&p, &ap);
+        if pap.abs() < 1e-300 {
+            break; // breakdown (matrix not SPD)
+        }
+        let alpha = rz / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        z = precond(&r);
+        let rz_next = dot(&r, &z);
+        let beta = rz_next / rz;
+        rz = rz_next;
+        for (pi, zi) in p.iter_mut().zip(&z) {
+            *pi = zi + beta * *pi;
+        }
+    }
+    let rn = norm(&r);
+    SolveResult {
+        x,
+        iterations: opts.max_iters,
+        residual_norm: rn,
+        converged: rn / b_norm <= opts.rel_tol,
+        spmv_seconds,
+    }
+}
+
+/// Power iteration: dominant eigenvalue + eigenvector estimate.
+pub fn power_iteration(
+    a: &Csr,
+    iters: usize,
+    schedule: Schedule,
+    threads: usize,
+) -> (Vec<f64>, f64) {
+    assert_eq!(a.n_rows, a.n_cols);
+    let n = a.n_rows;
+    let mut v = vec![1.0 / (n as f64).sqrt(); n];
+    for _ in 0..iters {
+        let y = exec::spmv_threaded(a, &v, schedule, threads).y;
+        let nrm = norm(&y).max(1e-300);
+        v = y.into_iter().map(|x| x / nrm).collect();
+    }
+    let av = exec::spmv_threaded(a, &v, schedule, threads).y;
+    let lambda = dot(&v, &av);
+    (v, lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generators;
+    use crate::sparse::Coo;
+    use crate::util::rng::Pcg32;
+
+    /// SPD test matrix: 2-D Laplacian + eps*I.
+    fn spd(n: usize) -> Csr {
+        let lap = generators::stencil(n, 5);
+        let m = lap.n_rows;
+        let mut coo = Coo::new(m, m);
+        for r in 0..m {
+            let (cols, vals) = lap.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(r, c as usize, v);
+            }
+            coo.push(r, r, 0.5); // diagonal shift -> SPD
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn cg_solves_laplacian() {
+        let a = spd(400);
+        let n = a.n_rows;
+        let mut rng = Pcg32::new(1);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.gen_f64() - 0.5).collect();
+        let mut b = vec![0.0; n];
+        a.spmv(&x_true, &mut b);
+        let res = cg(&a, &b, &CgOptions::default());
+        assert!(res.converged, "residual {}", res.residual_norm);
+        for (xs, xt) in res.x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-5, "{xs} vs {xt}");
+        }
+        assert!(res.spmv_seconds > 0.0);
+    }
+
+    #[test]
+    fn jacobi_preconditioning_helps_scaled_system() {
+        // Badly scaled SPD diag: Jacobi should reduce iterations.
+        let n = 300;
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            coo.push(r, r, 1.0 + (r % 100) as f64 * 10.0);
+            if r + 1 < n {
+                coo.push(r, r + 1, -0.5);
+                coo.push(r + 1, r, -0.5);
+            }
+        }
+        let a = coo.to_csr();
+        let b = vec![1.0; n];
+        let plain = cg(
+            &a,
+            &b,
+            &CgOptions { rel_tol: 1e-10, ..Default::default() },
+        );
+        let pre = cg(
+            &a,
+            &b,
+            &CgOptions { rel_tol: 1e-10, jacobi: true, ..Default::default() },
+        );
+        assert!(plain.converged && pre.converged);
+        assert!(
+            pre.iterations <= plain.iterations,
+            "jacobi {} vs plain {}",
+            pre.iterations,
+            plain.iterations
+        );
+    }
+
+    #[test]
+    fn cg_with_threads_and_schedules_agrees() {
+        let a = spd(225);
+        let b = vec![1.0; a.n_rows];
+        let base = cg(&a, &b, &CgOptions::default());
+        for (threads, sched) in [
+            (4, Schedule::CsrRowStatic),
+            (2, Schedule::Csr5Tiles { tile_nnz: 64 }),
+            (3, Schedule::CsrRowBalanced),
+        ] {
+            let r = cg(
+                &a,
+                &b,
+                &CgOptions { threads, schedule: sched, ..Default::default() },
+            );
+            assert!(r.converged);
+            for (x1, x2) in base.x.iter().zip(&r.x) {
+                assert!((x1 - x2).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn cg_detects_non_convergence() {
+        let a = spd(100);
+        let b = vec![1.0; a.n_rows];
+        let r = cg(
+            &a,
+            &b,
+            &CgOptions { max_iters: 2, rel_tol: 1e-14, ..Default::default() },
+        );
+        assert!(!r.converged);
+        assert_eq!(r.iterations, 2);
+    }
+
+    #[test]
+    fn power_iteration_diagonal() {
+        let n = 64;
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            coo.push(r, r, 1.0 + r as f64);
+        }
+        let a = coo.to_csr();
+        let (v, lambda) =
+            power_iteration(&a, 200, Schedule::CsrRowStatic, 2);
+        assert!((lambda - n as f64).abs() < 0.5, "lambda={lambda}");
+        // Dominant eigenvector concentrates on the last coordinate.
+        let maxi = v
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(maxi, n - 1);
+    }
+}

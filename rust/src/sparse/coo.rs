@@ -1,0 +1,187 @@
+//! COO (coordinate) format — generator interchange.
+
+use super::csr::Csr;
+
+/// Coordinate-format sparse matrix. Entries may be unsorted and may
+/// contain duplicates (summed on conversion to CSR, matching the
+//  MatrixMarket convention).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        Coo { n_rows, n_cols, rows: vec![], cols: vec![], vals: vec![] }
+    }
+
+    pub fn with_capacity(n_rows: usize, n_cols: usize, cap: usize) -> Self {
+        Coo {
+            n_rows,
+            n_cols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append one entry. Debug-asserts bounds.
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.n_rows && c < self.n_cols);
+        self.rows.push(r as u32);
+        self.cols.push(c as u32);
+        self.vals.push(v);
+    }
+
+    /// Validate all indices are in bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rows.len() != self.cols.len()
+            || self.rows.len() != self.vals.len()
+        {
+            return Err("parallel arrays length mismatch".into());
+        }
+        for (i, (&r, &c)) in self.rows.iter().zip(&self.cols).enumerate() {
+            if r as usize >= self.n_rows {
+                return Err(format!("entry {i}: row {r} out of bounds"));
+            }
+            if c as usize >= self.n_cols {
+                return Err(format!("entry {i}: col {c} out of bounds"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Convert to CSR, sorting by (row, col) and summing duplicates.
+    pub fn to_csr(&self) -> Csr {
+        let nnz = self.nnz();
+        // Counting sort by row (O(nnz + n_rows)).
+        let mut row_counts = vec![0usize; self.n_rows + 1];
+        for &r in &self.rows {
+            row_counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.n_rows {
+            row_counts[i + 1] += row_counts[i];
+        }
+        let mut order: Vec<u32> = vec![0; nnz];
+        {
+            let mut next = row_counts.clone();
+            for (i, &r) in self.rows.iter().enumerate() {
+                order[next[r as usize]] = i as u32;
+                next[r as usize] += 1;
+            }
+        }
+        // Sort within each row by column, then merge duplicates.
+        let mut ptr = Vec::with_capacity(self.n_rows + 1);
+        let mut indices: Vec<u32> = Vec::with_capacity(nnz);
+        let mut data: Vec<f64> = Vec::with_capacity(nnz);
+        ptr.push(0usize);
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for r in 0..self.n_rows {
+            scratch.clear();
+            for &oi in &order[row_counts[r]..row_counts[r + 1]] {
+                scratch
+                    .push((self.cols[oi as usize], self.vals[oi as usize]));
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (c, mut v) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                indices.push(c);
+                data.push(v);
+                i = j;
+            }
+            ptr.push(indices.len());
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, ptr, indices, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_to_csr() {
+        // Figure 1 matrix: 4x4, nnz=8.
+        //   row0: (0,1)=5 (0,2)=2
+        //   row1: (1,0)=6 (1,2)=8 (1,3)=3
+        //   row2: (2,2)=4
+        //   row3: (3,1)=7 (3,2)=1
+        let mut coo = Coo::new(4, 4);
+        for &(r, c, v) in &[
+            (0, 1, 5.0),
+            (0, 2, 2.0),
+            (1, 0, 6.0),
+            (1, 2, 8.0),
+            (1, 3, 3.0),
+            (2, 2, 4.0),
+            (3, 1, 7.0),
+            (3, 2, 1.0),
+        ] {
+            coo.push(r, c, v);
+        }
+        let csr = coo.to_csr();
+        // Table 1 values.
+        assert_eq!(csr.ptr, vec![0, 2, 5, 6, 8]);
+        assert_eq!(csr.indices, vec![1, 2, 0, 2, 3, 2, 1, 2]);
+        assert_eq!(
+            csr.data,
+            vec![5.0, 2.0, 6.0, 8.0, 3.0, 4.0, 7.0, 1.0]
+        );
+    }
+
+    #[test]
+    fn unsorted_input_sorted_output() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(2, 2, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(2, 0, 3.0);
+        coo.push(0, 0, 4.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.ptr, vec![0, 2, 2, 4]);
+        assert_eq!(csr.indices, vec![0, 1, 0, 2]);
+        assert_eq!(csr.data, vec![4.0, 2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 2.5);
+        coo.push(1, 1, 1.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.data[0], 3.5);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let coo = Coo::new(5, 5);
+        let csr = coo.to_csr();
+        assert_eq!(csr.ptr, vec![0; 6]);
+        assert_eq!(csr.nnz(), 0);
+    }
+
+    #[test]
+    fn validate_catches_oob() {
+        let mut coo = Coo::new(2, 2);
+        coo.rows.push(5);
+        coo.cols.push(0);
+        coo.vals.push(1.0);
+        assert!(coo.validate().is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! CSR — the paper's primary storage format (§2.2, Table 1).
+
+/// Compressed Sparse Row matrix with f64 values (the paper measures
+/// double-precision Gflops on FT-2000+).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Row pointers, length `n_rows + 1`; last entry == nnz.
+    pub ptr: Vec<usize>,
+    /// Column index per nonzero.
+    pub indices: Vec<u32>,
+    /// Value per nonzero.
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// An empty (all-zero) matrix.
+    pub fn zero(n_rows: usize, n_cols: usize) -> Self {
+        Csr {
+            n_rows,
+            n_cols,
+            ptr: vec![0; n_rows + 1],
+            indices: vec![],
+            data: vec![],
+        }
+    }
+
+    /// Identity matrix (square).
+    pub fn identity(n: usize) -> Self {
+        Csr {
+            n_rows: n,
+            n_cols: n,
+            ptr: (0..=n).collect(),
+            indices: (0..n as u32).collect(),
+            data: vec![1.0; n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Number of nonzeros in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.ptr[r + 1] - self.ptr[r]
+    }
+
+    /// (columns, values) slices of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.ptr[r], self.ptr[r + 1]);
+        (&self.indices[a..b], &self.data[a..b])
+    }
+
+    /// Maximum nonzeros in any row (Table 3 `nnz_max`).
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.n_rows).map(|r| self.row_nnz(r)).max().unwrap_or(0)
+    }
+
+    /// Structural validation: monotone ptr, in-bound sorted columns.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ptr.len() != self.n_rows + 1 {
+            return Err("ptr length != n_rows + 1".into());
+        }
+        if *self.ptr.last().unwrap() != self.nnz() {
+            return Err("ptr[last] != nnz".into());
+        }
+        if self.indices.len() != self.data.len() {
+            return Err("indices/data length mismatch".into());
+        }
+        for r in 0..self.n_rows {
+            if self.ptr[r] > self.ptr[r + 1] {
+                return Err(format!("ptr not monotone at row {r}"));
+            }
+            let (cols, _) = self.row(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!(
+                        "row {r}: columns not strictly increasing"
+                    ));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.n_cols {
+                    return Err(format!("row {r}: column {c} out of bounds"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Sequential SpMV: y = A x. The reference semantics for every
+    /// other executor in the crate.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        for r in 0..self.n_rows {
+            let mut acc = 0.0;
+            for i in self.ptr[r]..self.ptr[r + 1] {
+                acc += self.data[i] * x[self.indices[i] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// SpMV over a row range [r0, r1) — the unit of work the static
+    /// OpenMP schedule assigns to a thread.
+    pub fn spmv_rows(&self, r0: usize, r1: usize, x: &[f64], y: &mut [f64]) {
+        debug_assert!(r1 <= self.n_rows && y.len() == self.n_rows);
+        for r in r0..r1 {
+            let mut acc = 0.0;
+            for i in self.ptr[r]..self.ptr[r + 1] {
+                acc += self.data[i] * x[self.indices[i] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Transpose (used by reordering heuristics and generators).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.n_cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.n_cols {
+            counts[i + 1] += counts[i];
+        }
+        let mut ptr = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        for r in 0..self.n_rows {
+            for i in self.ptr[r]..self.ptr[r + 1] {
+                let c = self.indices[i] as usize;
+                let dst = ptr[c];
+                indices[dst] = r as u32;
+                data[dst] = self.data[i];
+                ptr[c] += 1;
+            }
+        }
+        Csr {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            ptr: counts,
+            indices,
+            data,
+        }
+    }
+
+    /// Apply a row permutation: out.row[i] = self.row[perm[i]].
+    pub fn permute_rows(&self, perm: &[usize]) -> Csr {
+        assert_eq!(perm.len(), self.n_rows);
+        let mut ptr = Vec::with_capacity(self.n_rows + 1);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut data = Vec::with_capacity(self.nnz());
+        ptr.push(0);
+        for &src in perm {
+            let (cols, vals) = self.row(src);
+            indices.extend_from_slice(cols);
+            data.extend_from_slice(vals);
+            ptr.push(indices.len());
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, ptr, indices, data }
+    }
+
+    /// Bytes touched by a full CSR SpMV pass (working-set estimate used
+    /// by the analytical roofline in §Perf): ptr + indices + data + x + y.
+    pub fn working_set_bytes(&self) -> usize {
+        (self.n_rows + 1) * std::mem::size_of::<usize>()
+            + self.nnz() * std::mem::size_of::<u32>()
+            + self.nnz() * std::mem::size_of::<f64>()
+            + self.n_cols * std::mem::size_of::<f64>()
+            + self.n_rows * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    pub(crate) fn paper_matrix() -> Csr {
+        let mut coo = Coo::new(4, 4);
+        for &(r, c, v) in &[
+            (0, 1, 5.0),
+            (0, 2, 2.0),
+            (1, 0, 6.0),
+            (1, 2, 8.0),
+            (1, 3, 3.0),
+            (2, 2, 4.0),
+            (3, 1, 7.0),
+            (3, 2, 1.0),
+        ] {
+            coo.push(r, c, v);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn figure1_spmv() {
+        // Fig 1: A (4x4, nnz=8) times x -> 4x1 vector.
+        let a = paper_matrix();
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = [0.0; 4];
+        a.spmv(&x, &mut y);
+        // row0: 5*2 + 2*3 = 16; row1: 6*1 + 8*3 + 3*4 = 42;
+        // row2: 4*3 = 12; row3: 7*2 + 1*3 = 17.
+        assert_eq!(y, [16.0, 42.0, 12.0, 17.0]);
+    }
+
+    #[test]
+    fn identity_spmv() {
+        let a = Csr::identity(16);
+        let x: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let mut y = vec![0.0; 16];
+        a.spmv(&x, &mut y);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn spmv_rows_partial() {
+        let a = paper_matrix();
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = [0.0; 4];
+        a.spmv_rows(1, 3, &x, &mut y);
+        assert_eq!(y, [0.0, 42.0, 12.0, 0.0]);
+    }
+
+    #[test]
+    fn validate_accepts_good() {
+        assert!(paper_matrix().validate().is_ok());
+        assert!(Csr::zero(3, 3).validate().is_ok());
+        assert!(Csr::identity(5).validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut a = paper_matrix();
+        a.indices[0] = 9; // out of bounds
+        assert!(a.validate().is_err());
+        let mut b = paper_matrix();
+        b.ptr[2] = 0; // non-monotone
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = paper_matrix();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn transpose_spmv_agrees() {
+        // (A^T x)[c] == sum_r A[r,c] x[r]
+        let a = paper_matrix();
+        let at = a.transpose();
+        let x = [1.0, -1.0, 0.5, 2.0];
+        let mut y = [0.0; 4];
+        at.spmv(&x, &mut y);
+        let mut want = [0.0; 4];
+        for r in 0..4 {
+            let (cols, vals) = a.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                want[*c as usize] += v * x[r];
+            }
+        }
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn permute_rows_identity() {
+        let a = paper_matrix();
+        let perm: Vec<usize> = (0..4).collect();
+        assert_eq!(a.permute_rows(&perm), a);
+    }
+
+    #[test]
+    fn permute_rows_swap() {
+        let a = paper_matrix();
+        let b = a.permute_rows(&[3, 2, 1, 0]);
+        assert_eq!(b.row_nnz(0), a.row_nnz(3));
+        assert_eq!(b.row(0), a.row(3));
+        assert_eq!(b.nnz(), a.nnz());
+    }
+
+    #[test]
+    fn max_row_nnz_paper() {
+        assert_eq!(paper_matrix().max_row_nnz(), 3);
+        assert_eq!(Csr::zero(4, 4).max_row_nnz(), 0);
+    }
+
+    #[test]
+    fn working_set_positive() {
+        assert!(paper_matrix().working_set_bytes() > 0);
+    }
+}

@@ -1,0 +1,333 @@
+//! CSR5 (Liu & Vinter, ICS'15) — the load-balanced format the paper
+//! uses to rescue matrices whose CSR scalability is killed by skewed
+//! nonzero allocation (§5.2.1, Fig 7).
+//!
+//! The nonzero stream is partitioned into fixed-size 2-D tiles
+//! (ω lanes × σ rows; we keep the flattened `tile_nnz = ω·σ` view).
+//! Per-tile descriptors follow the paper's Table 1:
+//!
+//! * `tile_ptr[t]`  — row id of the first nonzero of tile `t`.
+//! * `bit_flag`     — one bit per nonzero: "this nonzero starts a row".
+//! * `y_off[t]`     — number of row *starts* inside tile `t` before each
+//!   tile (prefix offset into the per-tile output slots).
+//! * `seg_off`      — simplified here to a per-tile bool: "tile begins
+//!   in the middle of a row" (its leading partial sum must be carried
+//!   into the previous tile's last row).
+//!
+//! Simplification vs. the original: nonzeros are kept in row-major
+//! order inside a tile rather than transposed for SIMD lanes. The
+//! property the paper exploits — *equal nonzeros per tile, hence equal
+//! work per thread* — is preserved exactly; only the intra-tile SIMD
+//! shuffle is elided (our SIMD story lives in the Pallas kernel, see
+//! `python/compile/kernels/seg_spmv.py`, which is the same computation).
+
+use super::csr::Csr;
+
+#[derive(Clone, Debug)]
+pub struct Csr5 {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Nonzeros per tile (ω·σ).
+    pub tile_nnz: usize,
+    /// Row id of each tile's first nonzero; length = n_tiles.
+    pub tile_ptr: Vec<u32>,
+    /// Per-nonzero "starts a row" flag, aligned with `indices`/`data`.
+    pub bit_flag: Vec<bool>,
+    /// Per-tile count of row starts before the tile (exclusive prefix).
+    pub y_off: Vec<u32>,
+    /// Per-tile: starts mid-row (leading segment is a carry).
+    pub seg_off: Vec<bool>,
+    /// Column indices, same order as CSR.
+    pub indices: Vec<u32>,
+    /// Values, same order as CSR.
+    pub data: Vec<f64>,
+    /// Original CSR row pointer (kept for conversions/validation).
+    pub ptr: Vec<usize>,
+}
+
+/// Partial products a tile range produces for rows that may be shared
+/// with neighbouring ranges (the carry the threaded executor merges).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileCarry {
+    pub row: usize,
+    pub value: f64,
+}
+
+impl Csr5 {
+    /// Convert from CSR with the given tile size (ω·σ). The final tile
+    /// may be short (no padding needed on the CPU path).
+    pub fn from_csr(csr: &Csr, tile_nnz: usize) -> Self {
+        assert!(tile_nnz > 0);
+        let nnz = csr.nnz();
+        let n_tiles = nnz.div_ceil(tile_nnz).max(1);
+        let mut bit_flag = vec![false; nnz];
+        for r in 0..csr.n_rows {
+            if csr.ptr[r] < csr.ptr[r + 1] {
+                bit_flag[csr.ptr[r]] = true;
+            }
+        }
+        // row_of[i]: row containing nonzero i (materialized transiently).
+        let mut tile_ptr = Vec::with_capacity(n_tiles);
+        let mut seg_off = Vec::with_capacity(n_tiles);
+        let mut y_off = Vec::with_capacity(n_tiles);
+        let mut starts_before = 0u32;
+        let mut row = 0usize;
+        for t in 0..n_tiles {
+            let begin = t * tile_nnz;
+            if begin < nnz {
+                // Advance `row` to the row containing nonzero `begin`.
+                while csr.ptr[row + 1] <= begin {
+                    row += 1;
+                }
+                tile_ptr.push(row as u32);
+                seg_off.push(!bit_flag[begin]);
+            } else {
+                tile_ptr.push(csr.n_rows.saturating_sub(1) as u32);
+                seg_off.push(false);
+            }
+            y_off.push(starts_before);
+            let end = ((t + 1) * tile_nnz).min(nnz);
+            starts_before +=
+                bit_flag[begin.min(nnz)..end].iter().filter(|&&b| b).count()
+                    as u32;
+        }
+        Csr5 {
+            n_rows: csr.n_rows,
+            n_cols: csr.n_cols,
+            tile_nnz,
+            tile_ptr,
+            bit_flag,
+            y_off,
+            seg_off,
+            indices: csr.indices.clone(),
+            data: csr.data.clone(),
+            ptr: csr.ptr.clone(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tile_ptr.len()
+    }
+
+    /// Segmented-sum SpMV over a tile range `[t0, t1)`.
+    ///
+    /// Complete rows are written into `y` directly; segments that may
+    /// continue across the range boundary (the leading carry and the
+    /// trailing open row) are returned as `TileCarry` for the caller to
+    /// merge — this is exactly the cross-thread reduction CSR5 does
+    /// with its `seg_off` descriptor.
+    pub fn spmv_tiles(
+        &self,
+        t0: usize,
+        t1: usize,
+        x: &[f64],
+        y: &mut [f64],
+    ) -> Vec<TileCarry> {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        let nnz = self.nnz();
+        let begin = (t0 * self.tile_nnz).min(nnz);
+        let end = (t1 * self.tile_nnz).min(nnz);
+        let mut carries = Vec::new();
+        if begin >= end {
+            return carries;
+        }
+        let mut row = self.tile_ptr[t0] as usize;
+        let mut acc = 0.0;
+        let mut leading_open = self.seg_off[t0]; // continuing a row
+        for i in begin..end {
+            if self.bit_flag[i] {
+                if leading_open {
+                    // The partial before the first row start belongs to
+                    // the previous range's last row.
+                    carries.push(TileCarry { row, value: acc });
+                    leading_open = false;
+                } else if i > begin || self.bit_flag[begin] && i == begin {
+                    if i > begin {
+                        y[row] = acc;
+                    }
+                }
+                // Advance to the row this nonzero starts.
+                if i > begin || !self.seg_off[t0] {
+                    if i == begin {
+                        // first element starts a row; row is correct
+                    } else {
+                        row += 1;
+                        while self.ptr[row + 1] <= i {
+                            row += 1;
+                        }
+                    }
+                }
+                acc = 0.0;
+            }
+            acc += self.data[i] * x[self.indices[i] as usize];
+        }
+        // Trailing segment: the last row may continue into the next
+        // range, so it is always a carry.
+        carries.push(TileCarry { row, value: acc });
+        carries
+    }
+
+    /// Sequential SpMV (single range covering all tiles + merge).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let carries = self.spmv_tiles(0, self.n_tiles(), x, y);
+        for c in carries {
+            y[c.row] += c.value;
+        }
+    }
+
+    /// Nonzeros assigned to each of `n_threads` under even tile
+    /// partitioning — the quantity behind the paper's `job_var` drop
+    /// from 0.992 to 0.298 on exdata_1 (Fig 7).
+    pub fn thread_nnz(&self, n_threads: usize) -> Vec<usize> {
+        let nt = self.n_tiles();
+        let nnz = self.nnz();
+        (0..n_threads)
+            .map(|t| {
+                let t0 = nt * t / n_threads;
+                let t1 = nt * (t + 1) / n_threads;
+                let b = (t0 * self.tile_nnz).min(nnz);
+                let e = (t1 * self.tile_nnz).min(nnz);
+                e - b
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn paper_matrix() -> Csr {
+        let mut coo = Coo::new(4, 4);
+        for &(r, c, v) in &[
+            (0, 1, 5.0),
+            (0, 2, 2.0),
+            (1, 0, 6.0),
+            (1, 2, 8.0),
+            (1, 3, 3.0),
+            (2, 2, 4.0),
+            (3, 1, 7.0),
+            (3, 2, 1.0),
+        ] {
+            coo.push(r, c, v);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn table1_descriptors() {
+        // Paper Table 1: tile size 4 over the Fig 1 matrix.
+        let a = Csr5::from_csr(&paper_matrix(), 4);
+        assert_eq!(a.n_tiles(), 2);
+        // tile_ptr = [0, 1]: tile0 starts in row0, tile1 starts in row1
+        // (its first nonzero is index 4, the last nnz of row 1).
+        assert_eq!(a.tile_ptr, vec![0, 1]);
+        // bit_flag over nnz order [r0,r0,r1,r1,r1,r2,r3,r3]:
+        assert_eq!(
+            a.bit_flag,
+            vec![true, false, true, false, false, true, true, false]
+        );
+        // tile 0 holds 2 row starts, tile 1 opens mid-row-1.
+        assert_eq!(a.y_off, vec![0, 2]);
+        assert_eq!(a.seg_off, vec![false, true]);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let csr = paper_matrix();
+        for tile in [1, 2, 3, 4, 8, 100] {
+            let a = Csr5::from_csr(&csr, tile);
+            let x = [1.0, 2.0, 3.0, 4.0];
+            let mut y = [0.0f64; 4];
+            a.spmv(&x, &mut y);
+            assert_eq!(y, [16.0, 42.0, 12.0, 17.0], "tile_nnz={tile}");
+        }
+    }
+
+    #[test]
+    fn split_ranges_merge_to_same_result() {
+        let csr = paper_matrix();
+        let a = Csr5::from_csr(&csr, 2); // 4 tiles
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = [0.0f64; 4];
+        // Two disjoint ranges, as two threads would execute.
+        let mut carries = a.spmv_tiles(0, 2, &x, &mut y);
+        carries.extend(a.spmv_tiles(2, 4, &x, &mut y));
+        for c in carries {
+            y[c.row] += c.value;
+        }
+        assert_eq!(y, [16.0, 42.0, 12.0, 17.0]);
+    }
+
+    #[test]
+    fn balanced_thread_nnz_on_skewed_matrix() {
+        // One dense row (the exdata_1 pathology): CSR static rows give
+        // one thread everything; CSR5 tiles stay balanced.
+        let n = 64;
+        let mut coo = Coo::new(n, n);
+        for c in 0..n {
+            coo.push(7, c, 1.0); // dense row
+        }
+        for r in 0..n {
+            coo.push(r, r, 1.0);
+        }
+        let csr = coo.to_csr();
+        let a = Csr5::from_csr(&csr, 8);
+        let nnz_per = a.thread_nnz(4);
+        let total: usize = nnz_per.iter().sum();
+        assert_eq!(total, csr.nnz());
+        let max = *nnz_per.iter().max().unwrap() as f64;
+        let ratio = max / total as f64;
+        assert!(ratio < 0.35, "csr5 job_var should be near 0.25: {ratio}");
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        let z = Csr::zero(3, 3);
+        let a = Csr5::from_csr(&z, 4);
+        let mut y = [9.0f64; 3];
+        a.spmv(&[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, [0.0, 0.0, 0.0]);
+
+        let i = Csr::identity(1);
+        let a = Csr5::from_csr(&i, 4);
+        let mut y = [0.0f64];
+        a.spmv(&[3.0], &mut y);
+        assert_eq!(y, [3.0]);
+    }
+
+    #[test]
+    fn random_matches_csr() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(99);
+        for trial in 0..20 {
+            let n = 8 + rng.gen_range(64);
+            let mut coo = Coo::new(n, n);
+            let nnz = 1 + rng.gen_range(n * 4);
+            for _ in 0..nnz {
+                coo.push(rng.gen_range(n), rng.gen_range(n), rng.gen_f64());
+            }
+            let csr = coo.to_csr();
+            let tile = 1 + rng.gen_range(16);
+            let a = Csr5::from_csr(&csr, tile);
+            let x: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+            let mut y0 = vec![0.0; n];
+            let mut y1 = vec![0.0; n];
+            csr.spmv(&x, &mut y0);
+            a.spmv(&x, &mut y1);
+            for (i, (p, q)) in y0.iter().zip(&y1).enumerate() {
+                assert!(
+                    (p - q).abs() < 1e-9,
+                    "trial {trial} row {i}: {p} vs {q} (tile={tile})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! DIA (diagonal) format — the classic layout for banded/stencil
+//! matrices (Bell & Garland's taxonomy, paper ref [4]).
+//!
+//! Stores one dense array per occupied diagonal. Perfectly regular
+//! x access (the gather degenerates into shifted streams), but
+//! explodes on matrices whose nonzeros do not cluster on diagonals —
+//! `from_csr` refuses when the fill ratio is too low, which is itself
+//! a useful signal for the format selector.
+
+use super::csr::Csr;
+
+#[derive(Clone, Debug)]
+pub struct Dia {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Offsets of the stored diagonals (col - row), ascending.
+    pub offsets: Vec<i32>,
+    /// Values, one lane of length `n_rows` per diagonal
+    /// (`vals[d * n_rows + r]` = A[r][r + offsets[d]] or 0).
+    pub vals: Vec<f64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum DiaError {
+    #[error(
+        "matrix is not diagonal-friendly: {diags} diagonals for {nnz} nonzeros \
+         (fill {fill:.3} < minimum {min:.3})"
+    )]
+    TooSparse { diags: usize, nnz: usize, fill: f64, min: f64 },
+}
+
+impl Dia {
+    /// Convert from CSR. Fails when the stored-slot fill ratio
+    /// (nnz / (diagonals * n_rows)) would drop below `min_fill`.
+    pub fn from_csr(csr: &Csr, min_fill: f64) -> Result<Dia, DiaError> {
+        let n = csr.n_rows;
+        let mut present = std::collections::BTreeSet::new();
+        for r in 0..n {
+            let (cols, _) = csr.row(r);
+            for &c in cols {
+                present.insert(c as i64 - r as i64);
+            }
+        }
+        let diags = present.len();
+        let slots = diags * n;
+        let fill = if slots == 0 {
+            1.0
+        } else {
+            csr.nnz() as f64 / slots as f64
+        };
+        if fill < min_fill {
+            return Err(DiaError::TooSparse {
+                diags,
+                nnz: csr.nnz(),
+                fill,
+                min: min_fill,
+            });
+        }
+        let offsets: Vec<i32> = present.iter().map(|&d| d as i32).collect();
+        let index_of: std::collections::HashMap<i32, usize> = offsets
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| (d, i))
+            .collect();
+        let mut vals = vec![0.0f64; slots];
+        for r in 0..n {
+            let (cols, rv) = csr.row(r);
+            for (&c, &v) in cols.iter().zip(rv) {
+                let d = index_of[&(c as i32 - r as i32)];
+                vals[d * n + r] = v;
+            }
+        }
+        Ok(Dia { n_rows: n, n_cols: csr.n_cols, offsets, vals })
+    }
+
+    pub fn n_diags(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// SpMV: per-diagonal shifted AXPY — fully streaming.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let n = self.n_rows;
+        for (d, &off) in self.offsets.iter().enumerate() {
+            let lane = &self.vals[d * n..(d + 1) * n];
+            let (r0, r1) = if off >= 0 {
+                (0usize, n.min(self.n_cols.saturating_sub(off as usize)))
+            } else {
+                ((-off) as usize, n)
+            };
+            for r in r0..r1 {
+                let c = (r as i64 + off as i64) as usize;
+                y[r] += lane[r] * x[c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generators;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn banded_roundtrips() {
+        let mut rng = Pcg32::new(0xD1A);
+        let csr = generators::banded(200, 5, &mut rng);
+        let dia = Dia::from_csr(&csr, 0.5).unwrap();
+        assert!(dia.n_diags() <= 6);
+        let x: Vec<f64> = (0..200).map(|_| rng.gen_f64()).collect();
+        let mut want = vec![0.0; 200];
+        let mut got = vec![0.0; 200];
+        csr.spmv(&x, &mut want);
+        dia.spmv(&x, &mut got);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn stencil_works() {
+        let csr = generators::stencil(400, 5);
+        let dia = Dia::from_csr(&csr, 0.2).unwrap();
+        let n = csr.n_rows;
+        let x: Vec<f64> = (0..n).map(|i| (i % 7) as f64).collect();
+        let mut want = vec![0.0; n];
+        let mut got = vec![0.0; n];
+        csr.spmv(&x, &mut want);
+        dia.spmv(&x, &mut got);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn refuses_random_matrices() {
+        let mut rng = Pcg32::new(7);
+        let csr = generators::random_uniform(300, 8, &mut rng);
+        match Dia::from_csr(&csr, 0.5) {
+            Err(DiaError::TooSparse { fill, .. }) => assert!(fill < 0.5),
+            other => panic!("expected TooSparse, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn identity_is_one_diagonal() {
+        let dia = Dia::from_csr(&Csr::identity(64), 0.9).unwrap();
+        assert_eq!(dia.offsets, vec![0]);
+        let x: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let mut y = vec![0.0; 64];
+        dia.spmv(&x, &mut y);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn off_diagonal_bounds() {
+        // Superdiagonal only: y[last] must stay 0.
+        let mut coo = crate::sparse::Coo::new(4, 4);
+        for r in 0..3 {
+            coo.push(r, r + 1, 2.0);
+        }
+        let dia = Dia::from_csr(&coo.to_csr(), 0.2).unwrap();
+        let mut y = vec![0.0; 4];
+        dia.spmv(&[1.0, 1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![2.0, 2.0, 2.0, 0.0]);
+    }
+}

@@ -1,0 +1,183 @@
+//! ELL (ITPACK) format — the padded row-major layout the Pallas/TPU
+//! compute path consumes (see `python/compile/kernels/ell_spmv.py` and
+//! DESIGN.md §Hardware-Adaptation).
+//!
+//! Padding convention (must match `ref.py`): padded slots carry
+//! `data == 0.0` and `col == 0`, so they contribute nothing.
+
+use super::csr::Csr;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ell {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Padded row width (max nonzeros per row, or the bucket's K).
+    pub k: usize,
+    /// Column indices, row-major `[n_rows][k]`.
+    pub cols: Vec<u32>,
+    /// Values, row-major `[n_rows][k]`.
+    pub data: Vec<f64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EllError {
+    #[error("row {row} has {nnz} nonzeros > K={k}")]
+    RowTooWide { row: usize, nnz: usize, k: usize },
+}
+
+impl Ell {
+    /// Convert from CSR. `k` defaults to the max row width; passing an
+    /// explicit `k` (a runtime bucket) fails if any row exceeds it.
+    pub fn from_csr(csr: &Csr, k: Option<usize>) -> Result<Self, EllError> {
+        let width = k.unwrap_or_else(|| csr.max_row_nnz());
+        let mut cols = vec![0u32; csr.n_rows * width];
+        let mut data = vec![0.0f64; csr.n_rows * width];
+        for r in 0..csr.n_rows {
+            let (rc, rv) = csr.row(r);
+            if rc.len() > width {
+                return Err(EllError::RowTooWide {
+                    row: r,
+                    nnz: rc.len(),
+                    k: width,
+                });
+            }
+            let base = r * width;
+            cols[base..base + rc.len()].copy_from_slice(rc);
+            data[base..base + rv.len()].copy_from_slice(rv);
+        }
+        Ok(Ell { n_rows: csr.n_rows, n_cols: csr.n_cols, k: width, cols, data })
+    }
+
+    pub fn nnz_stored(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Fraction of padded (wasted) slots — the ELL inefficiency that
+    /// mirrors CSR's job_var pathology on skewed matrices.
+    pub fn padding_ratio(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        1.0 - self.nnz_stored() as f64 / self.data.len() as f64
+    }
+
+    /// Sequential SpMV (reference semantics for the ELL layout).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        for r in 0..self.n_rows {
+            let base = r * self.k;
+            let mut acc = 0.0;
+            for j in 0..self.k {
+                acc += self.data[base + j] * x[self.cols[base + j] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Flattened f32/i32 buffers padded to a runtime bucket
+    /// `(bucket_rows, bucket_k)` — the exact argument layout of the
+    /// `ell_spmv_m{rows}_k{k}` PJRT artifacts.
+    pub fn to_bucket_buffers(
+        &self,
+        bucket_rows: usize,
+        bucket_k: usize,
+    ) -> Option<(Vec<i32>, Vec<f32>)> {
+        if self.n_rows > bucket_rows || self.k > bucket_k {
+            return None;
+        }
+        let mut cols = vec![0i32; bucket_rows * bucket_k];
+        let mut data = vec![0.0f32; bucket_rows * bucket_k];
+        for r in 0..self.n_rows {
+            let src = r * self.k;
+            let dst = r * bucket_k;
+            for j in 0..self.k {
+                cols[dst + j] = self.cols[src + j] as i32;
+                data[dst + j] = self.data[src + j] as f32;
+            }
+        }
+        Some((cols, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn paper_matrix() -> Csr {
+        let mut coo = Coo::new(4, 4);
+        for &(r, c, v) in &[
+            (0, 1, 5.0),
+            (0, 2, 2.0),
+            (1, 0, 6.0),
+            (1, 2, 8.0),
+            (1, 3, 3.0),
+            (2, 2, 4.0),
+            (3, 1, 7.0),
+            (3, 2, 1.0),
+        ] {
+            coo.push(r, c, v);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn natural_width() {
+        let e = Ell::from_csr(&paper_matrix(), None).unwrap();
+        assert_eq!(e.k, 3);
+        assert_eq!(e.nnz_stored(), 8);
+        assert!(e.padding_ratio() > 0.0);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let csr = paper_matrix();
+        let e = Ell::from_csr(&csr, None).unwrap();
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y0 = [0.0; 4];
+        let mut y1 = [0.0; 4];
+        csr.spmv(&x, &mut y0);
+        e.spmv(&x, &mut y1);
+        assert_eq!(y0, y1);
+    }
+
+    #[test]
+    fn explicit_k_too_small() {
+        let csr = paper_matrix();
+        match Ell::from_csr(&csr, Some(2)) {
+            Err(EllError::RowTooWide { row: 1, nnz: 3, k: 2 }) => {}
+            other => panic!("expected RowTooWide, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bucket_buffers_layout() {
+        let csr = paper_matrix();
+        let e = Ell::from_csr(&csr, None).unwrap();
+        let (cols, data) = e.to_bucket_buffers(8, 4).unwrap();
+        assert_eq!(cols.len(), 32);
+        assert_eq!(data.len(), 32);
+        // row 0 = [(1,5),(2,2),pad,pad]
+        assert_eq!(&cols[0..4], &[1, 2, 0, 0]);
+        assert_eq!(&data[0..4], &[5.0, 2.0, 0.0, 0.0]);
+        // rows beyond n_rows are all padding
+        assert!(data[16..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bucket_too_small_is_none() {
+        let e = Ell::from_csr(&paper_matrix(), None).unwrap();
+        assert!(e.to_bucket_buffers(2, 4).is_none());
+        assert!(e.to_bucket_buffers(8, 2).is_none());
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let e = Ell::from_csr(&Csr::zero(3, 3), None).unwrap();
+        assert_eq!(e.k, 0);
+        let mut y = [1.0; 3];
+        e.spmv(&[1.0; 3], &mut y);
+        assert_eq!(y, [0.0; 3]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Matrix-structure features — the static half of the paper's Table 3
+//! feature set (the dynamic half comes from `counters::Derived`).
+
+use super::csr::Csr;
+
+/// Static features of a sparse matrix (Table 3, "matrix features").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MatrixFeatures {
+    /// Number of rows (`n_rows`).
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub nnz: usize,
+    /// Maximum nonzeros in any row (`nnz_max`).
+    pub nnz_max: usize,
+    /// Average nonzeros per row (`nnz_avg`).
+    pub nnz_avg: f64,
+    /// Population variance of nonzeros per row (`nnz_var`).
+    pub nnz_var: f64,
+}
+
+impl MatrixFeatures {
+    pub fn extract(csr: &Csr) -> Self {
+        let n = csr.n_rows;
+        let nnz = csr.nnz();
+        let mut nnz_max = 0usize;
+        let mut sum = 0.0f64;
+        let mut sum_sq = 0.0f64;
+        for r in 0..n {
+            let k = csr.row_nnz(r);
+            nnz_max = nnz_max.max(k);
+            sum += k as f64;
+            sum_sq += (k * k) as f64;
+        }
+        let nnz_avg = if n > 0 { sum / n as f64 } else { 0.0 };
+        let nnz_var = if n > 0 {
+            (sum_sq / n as f64) - nnz_avg * nnz_avg
+        } else {
+            0.0
+        };
+        MatrixFeatures {
+            n_rows: n,
+            n_cols: csr.n_cols,
+            nnz,
+            nnz_max,
+            nnz_avg,
+            nnz_var: nnz_var.max(0.0),
+        }
+    }
+}
+
+/// `job_var` — "maximum # allocated nnz ratio per thread" (Table 3).
+///
+/// Computed from the per-thread nonzero allocation of a schedule. The
+/// theoretical optimum is `1 / n_threads` (0.25 for 4 threads); the
+/// paper flags matrices with `job_var >= 0.45` as imbalance-limited
+/// (exdata_1 reaches 0.992: one thread owns >99% of the work).
+pub fn job_var(thread_nnz: &[usize]) -> f64 {
+    let total: usize = thread_nnz.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let max = *thread_nnz.iter().max().unwrap();
+    max as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    #[test]
+    fn paper_matrix_features() {
+        let mut coo = Coo::new(4, 4);
+        for &(r, c, v) in &[
+            (0, 1, 5.0),
+            (0, 2, 2.0),
+            (1, 0, 6.0),
+            (1, 2, 8.0),
+            (1, 3, 3.0),
+            (2, 2, 4.0),
+            (3, 1, 7.0),
+            (3, 2, 1.0),
+        ] {
+            coo.push(r, c, v);
+        }
+        let f = MatrixFeatures::extract(&coo.to_csr());
+        assert_eq!(f.n_rows, 4);
+        assert_eq!(f.nnz, 8);
+        assert_eq!(f.nnz_max, 3);
+        assert!((f.nnz_avg - 2.0).abs() < 1e-12);
+        // rows = [2,3,1,2]; var = mean(sq) - mean^2 = (4+9+1+4)/4 - 4 = 0.5
+        assert!((f.nnz_var - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_rows_zero_variance() {
+        let f = MatrixFeatures::extract(&Csr::identity(10));
+        assert_eq!(f.nnz_max, 1);
+        assert!((f.nnz_avg - 1.0).abs() < 1e-12);
+        assert!(f.nnz_var.abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let f = MatrixFeatures::extract(&Csr::zero(0, 0));
+        assert_eq!(f.nnz, 0);
+        assert_eq!(f.nnz_avg, 0.0);
+        assert_eq!(f.nnz_var, 0.0);
+    }
+
+    #[test]
+    fn job_var_balanced_and_skewed() {
+        assert!((job_var(&[25, 25, 25, 25]) - 0.25).abs() < 1e-12);
+        assert!((job_var(&[99, 1, 0, 0]) - 0.99).abs() < 1e-12);
+        assert_eq!(job_var(&[0, 0]), 0.0);
+        assert_eq!(job_var(&[100]), 1.0);
+    }
+}

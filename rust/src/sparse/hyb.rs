@@ -1,0 +1,121 @@
+//! HYB (hybrid ELL + COO) — Bell & Garland's format (paper ref [4]),
+//! included as a baseline: the ELL part holds up to `k` nonzeros per
+//! row (regular bulk), the COO part holds the overflow (irregular tail).
+
+use super::coo::Coo;
+use super::csr::Csr;
+use super::ell::Ell;
+
+#[derive(Clone, Debug)]
+pub struct Hyb {
+    pub ell: Ell,
+    pub coo: Coo,
+}
+
+impl Hyb {
+    /// Split at width `k`: first `k` nonzeros of each row go to ELL,
+    /// the rest to COO. `k = ceil(nnz_avg)` is the usual choice.
+    pub fn from_csr(csr: &Csr, k: usize) -> Self {
+        let mut cols = vec![0u32; csr.n_rows * k];
+        let mut data = vec![0.0f64; csr.n_rows * k];
+        let mut coo = Coo::new(csr.n_rows, csr.n_cols);
+        for r in 0..csr.n_rows {
+            let (rc, rv) = csr.row(r);
+            let in_ell = rc.len().min(k);
+            let base = r * k;
+            cols[base..base + in_ell].copy_from_slice(&rc[..in_ell]);
+            data[base..base + in_ell].copy_from_slice(&rv[..in_ell]);
+            for i in in_ell..rc.len() {
+                coo.push(r, rc[i] as usize, rv[i]);
+            }
+        }
+        Hyb {
+            ell: Ell {
+                n_rows: csr.n_rows,
+                n_cols: csr.n_cols,
+                k,
+                cols,
+                data,
+            },
+            coo,
+        }
+    }
+
+    /// Default split width: ceil(average nonzeros per row).
+    pub fn auto_k(csr: &Csr) -> usize {
+        if csr.n_rows == 0 {
+            return 0;
+        }
+        (csr.nnz() as f64 / csr.n_rows as f64).ceil() as usize
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.ell.nnz_stored() + self.coo.nnz()
+    }
+
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.ell.spmv(x, y);
+        for i in 0..self.coo.nnz() {
+            y[self.coo.rows[i] as usize] +=
+                self.coo.vals[i] * x[self.coo.cols[i] as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_csr(rng: &mut Pcg32, n: usize, nnz: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.gen_range(n), rng.gen_range(n), rng.gen_f64() + 0.1);
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn matches_csr_various_k() {
+        let mut rng = Pcg32::new(31);
+        let csr = random_csr(&mut rng, 50, 400);
+        let x: Vec<f64> = (0..50).map(|_| rng.gen_f64()).collect();
+        let mut want = vec![0.0; 50];
+        csr.spmv(&x, &mut want);
+        for k in [0, 1, 2, 4, 16, 64] {
+            let h = Hyb::from_csr(&csr, k);
+            assert_eq!(h.nnz(), csr.nnz(), "k={k}");
+            let mut got = vec![0.0; 50];
+            h.spmv(&x, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_k_reasonable() {
+        let mut rng = Pcg32::new(37);
+        let csr = random_csr(&mut rng, 100, 500);
+        let k = Hyb::auto_k(&csr);
+        assert!(k >= 1 && k <= csr.max_row_nnz().max(1));
+        assert_eq!(Hyb::auto_k(&Csr::zero(0, 0)), 0);
+    }
+
+    #[test]
+    fn skewed_row_goes_to_coo() {
+        let mut coo = Coo::new(8, 8);
+        for c in 0..8 {
+            coo.push(0, c, 1.0); // heavy row
+        }
+        coo.push(5, 5, 2.0);
+        let csr = coo.to_csr();
+        let h = Hyb::from_csr(&csr, 2);
+        assert_eq!(h.coo.nnz(), 6); // 8 - 2 overflow
+        let x = vec![1.0; 8];
+        let mut y = vec![0.0; 8];
+        h.spmv(&x, &mut y);
+        assert_eq!(y[0], 8.0);
+        assert_eq!(y[5], 2.0);
+    }
+}

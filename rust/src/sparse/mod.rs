@@ -1,0 +1,26 @@
+//! Sparse matrix storage formats and conversions.
+//!
+//! The paper targets CSR (§2.2) and its load-balanced successor CSR5
+//! (Liu & Vinter, ICS'15; paper §5.2.1). ELL/HYB are included because
+//! they are the forms the TPU (Pallas) compute path consumes
+//! (DESIGN.md §Hardware-Adaptation), and COO is the interchange format
+//! every generator produces first.
+
+pub mod coo;
+pub mod csr;
+pub mod csr5;
+pub mod dia;
+pub mod ell;
+pub mod features;
+pub mod hyb;
+pub mod mm;
+pub mod sell;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use csr5::Csr5;
+pub use dia::Dia;
+pub use ell::Ell;
+pub use features::MatrixFeatures;
+pub use hyb::Hyb;
+pub use sell::SellCSigma;

@@ -1,0 +1,269 @@
+//! SELL-C-σ (Kreutzer, Hager, Wellein, Fehske, Bishop — SIAM J. Sci.
+//! Comput. 2014; the paper's reference [19]).
+//!
+//! Rows are sorted by length inside windows of σ rows, then packed
+//! into chunks of C rows padded to the chunk-local maximum. Compared
+//! with ELL, padding waste is bounded by the σ-window's length spread;
+//! compared with CSR, the chunk layout is SIMD/vector friendly. The
+//! paper's related work positions it as the cross-platform
+//! load-balance format; we include it as a baseline the
+//! `format_select` pipeline can choose.
+
+use super::csr::Csr;
+
+#[derive(Clone, Debug)]
+pub struct SellCSigma {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Chunk height (C) — rows per chunk.
+    pub c: usize,
+    /// Sorting window (σ) — must be a multiple of C.
+    pub sigma: usize,
+    /// Width (padded row length) of each chunk.
+    pub chunk_len: Vec<u32>,
+    /// Start offset of each chunk in `cols`/`vals`
+    /// (column-major within the chunk: entry (r, j) of chunk k is at
+    /// `chunk_ptr[k] + j * C + r`).
+    pub chunk_ptr: Vec<usize>,
+    /// Column indices (padding -> 0) and values (padding -> 0.0).
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+    /// Global row id of each packed slot row: `perm[chunk*C + r]`.
+    pub perm: Vec<u32>,
+}
+
+impl SellCSigma {
+    /// Build from CSR with chunk height `c` and sorting window
+    /// `sigma` (rounded up to a multiple of `c`).
+    pub fn from_csr(csr: &Csr, c: usize, sigma: usize) -> SellCSigma {
+        assert!(c > 0 && c <= 64, "chunk height C must be in 1..=64");
+        let sigma = sigma.max(c).div_ceil(c) * c;
+        let n = csr.n_rows;
+        // Sort rows by descending length within each sigma window.
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        for w in perm.chunks_mut(sigma) {
+            w.sort_by_key(|&r| std::cmp::Reverse(csr.row_nnz(r as usize)));
+        }
+        let n_chunks = n.div_ceil(c);
+        let mut chunk_len = Vec::with_capacity(n_chunks);
+        let mut chunk_ptr = Vec::with_capacity(n_chunks + 1);
+        let mut total = 0usize;
+        for k in 0..n_chunks {
+            let rows = &perm[k * c..((k + 1) * c).min(n)];
+            let width = rows
+                .iter()
+                .map(|&r| csr.row_nnz(r as usize))
+                .max()
+                .unwrap_or(0) as u32;
+            chunk_len.push(width);
+            chunk_ptr.push(total);
+            total += width as usize * c;
+        }
+        chunk_ptr.push(total);
+        let mut cols = vec![0u32; total];
+        let mut vals = vec![0.0f64; total];
+        for k in 0..n_chunks {
+            let base = chunk_ptr[k];
+            let width = chunk_len[k] as usize;
+            for r in 0..c {
+                let slot = k * c + r;
+                if slot >= n {
+                    break;
+                }
+                let (rc, rv) = csr.row(perm[slot] as usize);
+                for (j, (&cc, &vv)) in rc.iter().zip(rv).enumerate() {
+                    cols[base + j * c + r] = cc;
+                    vals[base + j * c + r] = vv;
+                }
+                let _ = width;
+            }
+        }
+        SellCSigma {
+            n_rows: n,
+            n_cols: csr.n_cols,
+            c,
+            sigma,
+            chunk_len,
+            chunk_ptr,
+            cols,
+            vals,
+            perm,
+        }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunk_len.len()
+    }
+
+    /// Stored slots (including padding).
+    pub fn stored(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Padding overhead relative to the true nonzero count.
+    pub fn padding_ratio(&self, nnz: usize) -> f64 {
+        if self.stored() == 0 {
+            return 0.0;
+        }
+        1.0 - nnz as f64 / self.stored() as f64
+    }
+
+    /// SpMV: y (natural row order) = A x.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        let c = self.c;
+        for k in 0..self.n_chunks() {
+            let base = self.chunk_ptr[k];
+            let width = self.chunk_len[k] as usize;
+            let rows_in_chunk = c.min(self.n_rows - k * c);
+            // Column-major walk: the vectorizable SELL access pattern.
+            let mut acc = [0.0f64; 64];
+            let acc = &mut acc[..rows_in_chunk];
+            for j in 0..width {
+                let col_base = base + j * c;
+                for (r, a) in acc.iter_mut().enumerate() {
+                    let idx = col_base + r;
+                    *a += self.vals[idx] * x[self.cols[idx] as usize];
+                }
+            }
+            for (r, &a) in acc.iter().enumerate() {
+                y[self.perm[k * c + r] as usize] = a;
+            }
+        }
+    }
+
+    /// SpMV over a chunk range (the threaded unit of work).
+    pub fn spmv_chunks(
+        &self,
+        k0: usize,
+        k1: usize,
+        x: &[f64],
+        y: &mut [f64],
+    ) {
+        let c = self.c;
+        for k in k0..k1.min(self.n_chunks()) {
+            let base = self.chunk_ptr[k];
+            let width = self.chunk_len[k] as usize;
+            let rows_in_chunk = c.min(self.n_rows - k * c);
+            for r in 0..rows_in_chunk {
+                let mut a = 0.0;
+                for j in 0..width {
+                    let idx = base + j * c + r;
+                    a += self.vals[idx] * x[self.cols[idx] as usize];
+                }
+                y[self.perm[k * c + r] as usize] = a;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::rng::Pcg32;
+
+    fn random_csr(rng: &mut Pcg32, n: usize, max_deg: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let deg = rng.gen_range(max_deg + 1);
+            for c in rng.sample_distinct(n, deg.min(n)) {
+                coo.push(r, c, rng.gen_f64() - 0.5);
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn matches_csr_various_geometry() {
+        let mut rng = Pcg32::new(0x5E11);
+        let csr = random_csr(&mut rng, 300, 12);
+        let x: Vec<f64> = (0..300).map(|_| rng.gen_f64()).collect();
+        let mut want = vec![0.0; 300];
+        csr.spmv(&x, &mut want);
+        for (c, sigma) in [(4, 4), (8, 32), (16, 64), (32, 300), (64, 64)] {
+            let s = SellCSigma::from_csr(&csr, c, sigma);
+            let mut got = vec![0.0; 300];
+            s.spmv(&x, &mut got);
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9,
+                    "C={c} sigma={sigma} row {i}: {a} vs {b}"
+                );
+            }
+            // Chunked execution agrees too.
+            let mut got2 = vec![0.0; 300];
+            let half = s.n_chunks() / 2;
+            s.spmv_chunks(0, half, &x, &mut got2);
+            s.spmv_chunks(half, s.n_chunks(), &x, &mut got2);
+            assert_eq!(got, got2, "C={c} sigma={sigma}");
+        }
+    }
+
+    #[test]
+    fn sigma_sorting_cuts_padding_on_skewed_rows() {
+        // Power-law-ish: a few long rows. sigma=1 (no sorting) pads
+        // every chunk to its local max; a large sigma groups the long
+        // rows together.
+        let mut rng = Pcg32::new(0x516A);
+        let n = 256;
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            let deg = if r % 37 == 0 { 40 } else { 2 };
+            for c in rng.sample_distinct(n, deg) {
+                coo.push(r, c, 1.0);
+            }
+        }
+        let csr = coo.to_csr();
+        let unsorted = SellCSigma::from_csr(&csr, 8, 8);
+        let sorted = SellCSigma::from_csr(&csr, 8, 256);
+        assert!(
+            sorted.stored() < unsorted.stored(),
+            "sigma sorting should cut padding: {} vs {}",
+            sorted.stored(),
+            unsorted.stored()
+        );
+        assert!(sorted.padding_ratio(csr.nnz()) < 0.4);
+    }
+
+    #[test]
+    fn perm_is_permutation_and_window_local() {
+        let mut rng = Pcg32::new(3);
+        let csr = random_csr(&mut rng, 128, 6);
+        let s = SellCSigma::from_csr(&csr, 4, 16);
+        let mut seen = vec![false; 128];
+        for (slot, &r) in s.perm.iter().enumerate() {
+            assert!(!seen[r as usize]);
+            seen[r as usize] = true;
+            // Row stays within its sigma window.
+            assert_eq!(slot / 16, r as usize / 16, "slot {slot} row {r}");
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn ragged_tail_handled() {
+        let mut rng = Pcg32::new(5);
+        let csr = random_csr(&mut rng, 101, 5); // n not divisible by C
+        let s = SellCSigma::from_csr(&csr, 8, 32);
+        let x = vec![1.0; 101];
+        let mut want = vec![0.0; 101];
+        let mut got = vec![0.0; 101];
+        csr.spmv(&x, &mut want);
+        s.spmv(&x, &mut got);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = Csr::zero(10, 10);
+        let s = SellCSigma::from_csr(&csr, 4, 8);
+        let x = vec![1.0; 10];
+        let mut y = vec![9.0; 10];
+        s.spmv(&x, &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,133 @@
+//! Wall-clock micro-bench harness (criterion is not available offline).
+//!
+//! Implements the paper's measurement protocol: repeat until the 95%
+//! confidence interval of the mean is within a target fraction (the
+//! paper uses 5%) of the mean, with a warm-up phase and iteration caps.
+
+use std::time::Instant;
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop when ci95 half-width / mean falls below this.
+    pub target_rel_ci: f64,
+    /// Hard wall-clock cap per benchmark (seconds).
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            target_rel_ci: 0.05,
+            max_seconds: 10.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub ci95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12.6}s ±{:>10.6}s  ({} iters, min {:.6}s)",
+            self.name, self.mean_s, self.ci95_s, self.iters, self.min_s
+        )
+    }
+}
+
+/// Run `f` under the measurement protocol and return timing stats.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    cfg: &BenchConfig,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let started = Instant::now();
+    let mut samples: Vec<f64> = Vec::with_capacity(cfg.max_iters);
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        let n = samples.len();
+        if n >= cfg.min_iters {
+            let m = stats::mean(&samples);
+            let hw = stats::ci95_half_width(&samples);
+            let rel = if m > 0.0 { hw / m } else { 0.0 };
+            if rel <= cfg.target_rel_ci
+                || n >= cfg.max_iters
+                || started.elapsed().as_secs_f64() > cfg.max_seconds
+            {
+                break;
+            }
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: stats::mean(&samples),
+        ci95_s: stats::ci95_half_width(&samples),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            target_rel_ci: 0.5,
+            max_seconds: 2.0,
+        };
+        let mut acc = 0u64;
+        let r = bench("spin", &cfg, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 4,
+            target_rel_ci: 0.0, // unattainable -> must stop at cap
+            max_seconds: 60.0,
+        };
+        let r = bench("noop", &cfg, || {});
+        assert!(r.iters <= 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline (only the `xla` crate's
+//! dependency tree is vendored), so the pieces a crates.io project would
+//! pull in — PRNG, JSON, CLI parsing, a bench harness, property-testing
+//! helpers — are implemented here from scratch.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod testkit;

@@ -1,0 +1,199 @@
+//! Statistics helpers shared by the harness, the model, and reports.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance; 0 for empty input.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Geometric mean of strictly-positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Half-width of the 95% confidence interval of the mean
+/// (normal approximation — the paper's stopping rule for timing runs).
+pub fn ci95_half_width(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::INFINITY;
+    }
+    let sd = {
+        let m = mean(xs);
+        let s2 = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        s2.sqrt()
+    };
+    1.96 * sd / (xs.len() as f64).sqrt()
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        0.0
+    } else {
+        num / (dx * dy).sqrt()
+    }
+}
+
+/// Equal-width binned averages over [min, max] — the paper's Fig 6
+/// "integral histogram of the speedup results" (bar charts b/d/f).
+///
+/// Returns (bin_center, mean_of_ys_in_bin, count) for non-empty bins.
+pub fn binned_mean(
+    xs: &[f64],
+    ys: &[f64],
+    bins: usize,
+) -> Vec<(f64, f64, usize)> {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() || bins == 0 {
+        return vec![];
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let width = if hi > lo { (hi - lo) / bins as f64 } else { 1.0 };
+    let mut sums = vec![0.0; bins];
+    let mut counts = vec![0usize; bins];
+    for (x, y) in xs.iter().zip(ys) {
+        let mut b = ((x - lo) / width) as usize;
+        if b >= bins {
+            b = bins - 1;
+        }
+        sums[b] += y;
+        counts[b] += 1;
+    }
+    (0..bins)
+        .filter(|&b| counts[b] > 0)
+        .map(|b| {
+            (
+                lo + (b as f64 + 0.5) * width,
+                sums[b] / counts[b] as f64,
+                counts[b],
+            )
+        })
+        .collect()
+}
+
+/// Min-max normalization to [0,1] (the paper normalizes nnz_var for
+/// Fig 6 e/f).
+pub fn minmax_normalize(xs: &[f64]) -> Vec<f64> {
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !(hi > lo) {
+        return vec![0.0; xs.len()];
+    }
+    xs.iter().map(|x| (x - lo) / (hi - lo)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        let xs = [1.0, 4.0];
+        assert!((geomean(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..1000).map(|i| (i % 10) as f64).collect();
+        assert!(ci95_half_width(&b) < ci95_half_width(&a));
+        assert!(ci95_half_width(&[1.0]).is_infinite());
+    }
+
+    #[test]
+    fn pearson_signs() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        let zs: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-9);
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binned_mean_partitions() {
+        let xs = [0.0, 0.1, 0.9, 1.0];
+        let ys = [1.0, 2.0, 3.0, 4.0];
+        let bins = binned_mean(&xs, &ys, 2);
+        assert_eq!(bins.len(), 2);
+        assert_eq!(bins[0].2 + bins[1].2, 4);
+        assert!((bins[0].1 - 1.5).abs() < 1e-9);
+        assert!((bins[1].1 - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn minmax_unit_range() {
+        let n = minmax_normalize(&[2.0, 4.0, 6.0]);
+        assert_eq!(n, vec![0.0, 0.5, 1.0]);
+        assert_eq!(minmax_normalize(&[3.0, 3.0]), vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,182 @@
+//! ASCII/markdown table rendering for the bench harness — every bench
+//! target prints the same rows/series the paper's tables and figures
+//! report.
+
+/// A simple column-aligned table with a title.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for wi in &w {
+            sep.push_str(&format!("{:-<width$}|", "", width = wi + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+/// Format helpers used across the benches.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+pub fn fx(x: f64) -> String {
+    format!("{x:.2}x")
+}
+pub fn gflops(x: f64) -> String {
+    format!("{x:.3} Gflops")
+}
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// A text "series" line for figure-shaped outputs: name followed by
+/// (x, y) points, one figure series per line.
+pub fn series(name: &str, points: &[(f64, f64)]) -> String {
+    let body: Vec<String> =
+        points.iter().map(|(x, y)| format!("({x:.3},{y:.3})")).collect();
+    format!("series {name}: {}", body.join(" "))
+}
+
+/// Sparkline-ish ASCII scatter for quick visual inspection in terminals
+/// (rows = value buckets, cols = x buckets).
+pub fn ascii_scatter(
+    xs: &[f64],
+    ys: &[f64],
+    cols: usize,
+    rows: usize,
+) -> String {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return String::new();
+    }
+    let (xmin, xmax) = xs
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| {
+            (lo.min(v), hi.max(v))
+        });
+    let (ymin, ymax) = ys
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &v| {
+            (lo.min(v), hi.max(v))
+        });
+    let mut grid = vec![vec![b' '; cols]; rows];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let cx = if xmax > xmin {
+            (((x - xmin) / (xmax - xmin)) * (cols - 1) as f64) as usize
+        } else {
+            0
+        };
+        let cy = if ymax > ymin {
+            (((y - ymin) / (ymax - ymin)) * (rows - 1) as f64) as usize
+        } else {
+            0
+        };
+        grid[rows - 1 - cy][cx] = b'*';
+    }
+    let mut out = String::new();
+    out.push_str(&format!("  y in [{ymin:.2}, {ymax:.2}]\n"));
+    for row in grid {
+        out.push_str("  |");
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(cols));
+    out.push('\n');
+    out.push_str(&format!("  x in [{xmin:.3}, {xmax:.3}]\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new("Table 2", &["#threads", "speedup"]);
+        t.row(vec!["1".into(), "1.00x".into()]);
+        t.row(vec!["4".into(), "1.93x".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Table 2"));
+        assert!(md.contains("| 1.93x"));
+        assert_eq!(md.lines().count(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_bad_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn scatter_contains_points() {
+        let s = ascii_scatter(&[0.0, 1.0], &[0.0, 1.0], 10, 5);
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn series_format() {
+        let s = series("ft2000", &[(1.0, 1.0), (2.0, 1.5)]);
+        assert!(s.starts_with("series ft2000:"));
+        assert!(s.contains("(2.000,1.500)"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration: the paper's headline shapes must hold end-to-end.
+//! (Each test runs the full simulate→profile pipeline; corpus-level
+//! checks use the tiny suite to stay fast.)
+
+use ft2000_spmv::coordinator::{
+    build_dataset, profile_matrix, Campaign, ProfileConfig,
+};
+use ft2000_spmv::corpus::suite::SuiteSpec;
+use ft2000_spmv::corpus::NamedMatrix;
+use ft2000_spmv::mlmodel::{Forest, ForestParams};
+use ft2000_spmv::reorder::locality_reorder;
+use ft2000_spmv::sched::Schedule;
+use ft2000_spmv::sim::topology::Topology;
+use ft2000_spmv::util::rng::Pcg32;
+
+/// Table 4 ordering: exdata_1 flat < conf5/appu (gather-limited) <
+/// debr (streams) < asia_osm; and exdata_1 ~1.0x.
+#[test]
+fn table4_ordering() {
+    let cfg = ProfileConfig::default();
+    let sp = |m: NamedMatrix| {
+        profile_matrix(&m.generate(), m.name(), &cfg).max_speedup()
+    };
+    let exdata = sp(NamedMatrix::Exdata1);
+    let conf5 = sp(NamedMatrix::Conf5_4_8x8_20);
+    let appu = sp(NamedMatrix::Appu);
+    let debr = sp(NamedMatrix::Debr);
+    let asia = sp(NamedMatrix::AsiaOsm);
+    assert!((0.9..1.15).contains(&exdata), "exdata_1 ~1.0x: {exdata}");
+    assert!(exdata < conf5 && exdata < appu, "imbalance worst");
+    assert!(conf5 < debr, "gather-limited below streaming: {conf5} vs {debr}");
+    assert!(appu < debr, "gather-limited below streaming: {appu} vs {debr}");
+    assert!(debr < asia + 0.8, "asia in the same band or above: {debr} vs {asia}");
+}
+
+/// Fig 2: Xeon saturates by 4 threads; FT-2000+ keeps climbing to 16.
+#[test]
+fn fig2_shapes() {
+    let csr = NamedMatrix::Bone010.generate();
+    let threads = vec![1, 2, 4, 8, 16];
+    let xeon = profile_matrix(
+        &csr,
+        "bone010",
+        &ProfileConfig {
+            topo: Topology::xeon_e5_2692(),
+            threads: threads.clone(),
+            ..Default::default()
+        },
+    );
+    let ft = profile_matrix(
+        &csr,
+        "bone010",
+        &ProfileConfig { threads, ..Default::default() },
+    );
+    // Xeon: 4 -> 16 threads gains little.
+    let xeon_gain = xeon.gflops[4] / xeon.gflops[2];
+    assert!(xeon_gain < 1.35, "xeon must flatten after 4: {xeon_gain}");
+    // FT: 4 -> 16 threads gains a lot (new core-groups).
+    let ft_gain = ft.gflops[4] / ft.gflops[2];
+    assert!(ft_gain > 2.0, "ft must keep scaling: {ft_gain}");
+    // FT overtakes Xeon by 16 threads.
+    assert!(ft.gflops[4] > xeon.gflops[4]);
+}
+
+/// Fig 7: CSR5 rescues exdata_1.
+#[test]
+fn fig7_csr5_rescue() {
+    let csr = NamedMatrix::Exdata1.generate();
+    let base =
+        profile_matrix(&csr, "x", &ProfileConfig::default()).max_speedup();
+    let csr5 = profile_matrix(
+        &csr,
+        "x",
+        &ProfileConfig {
+            schedule: Schedule::Csr5Tiles { tile_nnz: 256 },
+            ..Default::default()
+        },
+    )
+    .max_speedup();
+    assert!(csr5 > base * 1.3, "CSR5 {csr5} must rescue CSR {base}");
+}
+
+/// Fig 8: private L2 beats one core-group broadly; conf5 reaches ~3.6x.
+#[test]
+fn fig8_private_l2() {
+    let conf5 = NamedMatrix::Conf5_4_8x8_20.generate();
+    let g = profile_matrix(&conf5, "c", &ProfileConfig::default())
+        .max_speedup();
+    let p = profile_matrix(&conf5, "c", &ProfileConfig::private_l2())
+        .max_speedup();
+    assert!(p > 3.0, "private-L2 conf5: {p}");
+    assert!(p > g + 1.0, "gap: {g} -> {p}");
+}
+
+/// Table 5: locality reorder lifts 64-thread throughput substantially.
+#[test]
+fn table5_locality_reorder() {
+    let mut rng = Pcg32::new(0x10CA11);
+    let n = 64 * 1600; // smaller than the bench but same structure
+    let synth =
+        ft2000_spmv::corpus::generators::poor_locality(n, 4, 64, &mut rng);
+    let plan = locality_reorder(&synth, 64);
+    let fixed = plan.apply(&synth);
+    let cfg = ProfileConfig { threads: vec![1, 64], ..Default::default() };
+    let a = profile_matrix(&synth, "synth", &cfg);
+    let b = profile_matrix(&fixed, "fixed", &cfg);
+    assert!(
+        b.gflops[1] > 1.4 * a.gflops[1],
+        "64-thread Gflops must improve >40%: {} -> {}",
+        a.gflops[1],
+        b.gflops[1]
+    );
+    assert!(b.gflops[0] > a.gflops[0], "single-thread improves too");
+}
+
+/// §4.2: the trained model ranks job_var as the dominant factor.
+#[test]
+fn model_finds_imbalance_factor() {
+    let profiles =
+        Campaign::new(SuiteSpec::tiny(), ProfileConfig::default()).run();
+    let data = build_dataset(&profiles);
+    let forest = Forest::fit(
+        &data,
+        ForestParams { n_trees: 10, ..Default::default() },
+    );
+    let ranked = forest.ranked_features();
+    let top3: Vec<&str> =
+        ranked.iter().take(3).map(|(n, _)| n.as_str()).collect();
+    assert!(
+        top3.contains(&"job_var"),
+        "job_var must rank top-3: {ranked:?}"
+    );
+}
+
+/// Table 2 band: tiny-corpus 4-thread average lands in a sane range
+/// (sub-linear, clearly above 1).
+#[test]
+fn table2_band() {
+    let profiles =
+        Campaign::new(SuiteSpec::tiny(), ProfileConfig::default()).run();
+    let avg = ft2000_spmv::util::stats::mean(
+        &profiles.iter().map(|p| p.max_speedup()).collect::<Vec<_>>(),
+    );
+    assert!(
+        (0.9..3.0).contains(&avg),
+        "tiny-corpus average 4t speedup out of band: {avg}"
+    );
+}

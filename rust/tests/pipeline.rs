@@ -1,0 +1,118 @@
+//! Integration: coordinator pipeline pieces working together —
+//! campaign → dataset → model → advisor → reports.
+
+use ft2000_spmv::coordinator::advisor::{diagnose, Advice};
+use ft2000_spmv::coordinator::{
+    build_dataset, profile_matrix, report, Campaign, ProfileConfig,
+    FEATURE_NAMES,
+};
+use ft2000_spmv::corpus::suite::SuiteSpec;
+use ft2000_spmv::corpus::NamedMatrix;
+use ft2000_spmv::mlmodel::{Forest, ForestParams, Tree, TreeParams};
+use ft2000_spmv::sched::Schedule;
+
+fn tiny_profiles() -> Vec<ft2000_spmv::coordinator::MatrixProfile> {
+    Campaign::new(SuiteSpec::tiny(), ProfileConfig::default()).run()
+}
+
+#[test]
+fn campaign_to_model_roundtrip() {
+    let profiles = tiny_profiles();
+    let data = build_dataset(&profiles);
+    assert_eq!(data.n_features(), FEATURE_NAMES.len());
+    assert_eq!(data.len(), profiles.len());
+    // Both model types train and predict finite values.
+    let tree = Tree::fit(&data, TreeParams::default());
+    let forest = Forest::fit(
+        &data,
+        ForestParams { n_trees: 5, ..Default::default() },
+    );
+    for row in &data.x {
+        assert!(tree.predict(row).is_finite());
+        assert!(forest.predict(row).is_finite());
+    }
+    // Rendering is non-empty and mentions a real feature.
+    let txt = tree.render();
+    assert!(txt.contains("speedup ="), "{txt}");
+}
+
+#[test]
+fn reports_cover_all_matrices() {
+    let profiles = tiny_profiles();
+    let mut csv = Vec::new();
+    report::write_csv(&mut csv, &profiles).unwrap();
+    let text = String::from_utf8(csv).unwrap();
+    assert_eq!(text.lines().count(), profiles.len() + 1);
+    for p in &profiles {
+        assert!(text.contains(&p.name), "missing {} in csv", p.name);
+    }
+    assert!(!report::table2_average_speedups(&profiles).is_empty());
+    assert!(!report::fig4_distribution(&profiles).is_empty());
+}
+
+#[test]
+fn advisor_end_to_end_improves_flagged_matrices() {
+    // Every matrix the advisor flags for CSR5 must actually improve
+    // under CSR5 in the simulator (the §5.2.1 loop, closed).
+    let profiles = tiny_profiles();
+    let suite = SuiteSpec::tiny();
+    let entries = suite.entries();
+    let mut checked = 0;
+    for (i, p) in profiles.iter().enumerate() {
+        if p.derived.job_var < 0.45 {
+            continue;
+        }
+        let m = suite.materialize(&entries[i]);
+        let advice = diagnose(&m.csr, p);
+        assert!(
+            advice.contains(&Advice::UseCsr5),
+            "{}: job_var {} must trigger CSR5 advice",
+            p.name,
+            p.derived.job_var
+        );
+        let after = profile_matrix(
+            &m.csr,
+            &m.name,
+            &ProfileConfig {
+                schedule: Schedule::Csr5Tiles { tile_nnz: 256 },
+                ..Default::default()
+            },
+        );
+        assert!(
+            after.max_speedup() > p.max_speedup() * 0.95,
+            "{}: CSR5 should not regress ({} -> {})",
+            p.name,
+            p.max_speedup(),
+            after.max_speedup()
+        );
+        checked += 1;
+    }
+    assert!(checked > 0, "tiny corpus must contain imbalance cases");
+}
+
+#[test]
+fn named_matrices_have_distinct_diagnoses() {
+    let cfg = ProfileConfig::default();
+    let mut kinds = std::collections::HashSet::new();
+    for m in NamedMatrix::ALL {
+        let csr = m.generate();
+        let p = profile_matrix(&csr, m.name(), &cfg);
+        for a in diagnose(&csr, &p) {
+            kinds.insert(format!("{a:?}"));
+        }
+    }
+    // The six case studies must span at least three advice kinds.
+    assert!(kinds.len() >= 3, "diagnoses too uniform: {kinds:?}");
+}
+
+#[test]
+fn campaign_deterministic() {
+    let a = tiny_profiles();
+    let b = tiny_profiles();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.speedups, y.speedups);
+        assert_eq!(x.counters_1t, y.counters_1t);
+    }
+}

@@ -1,0 +1,198 @@
+//! Cross-module property tests (deterministic seeds via
+//! `util::testkit::check`).
+
+use ft2000_spmv::coordinator::{simulate_point, ProfileConfig};
+use ft2000_spmv::corpus::generators::MatrixClass;
+use ft2000_spmv::exec;
+use ft2000_spmv::prop_assert;
+use ft2000_spmv::reorder::locality_reorder;
+use ft2000_spmv::sched::{partition, Schedule};
+use ft2000_spmv::sim::topology::Placement;
+use ft2000_spmv::sparse::{Coo, Csr, Csr5, Ell, Hyb, MatrixFeatures};
+use ft2000_spmv::util::rng::Pcg32;
+use ft2000_spmv::util::testkit::check;
+
+fn random_csr(rng: &mut Pcg32) -> Csr {
+    let n = 8 + rng.gen_range(300);
+    let mut coo = Coo::new(n, n);
+    let nnz = 1 + rng.gen_range(n * 6);
+    for _ in 0..nnz {
+        coo.push(rng.gen_range(n), rng.gen_range(n), rng.gen_f64() - 0.5);
+    }
+    coo.to_csr()
+}
+
+fn random_schedule(rng: &mut Pcg32) -> Schedule {
+    match rng.gen_range(4) {
+        0 => Schedule::CsrRowStatic,
+        1 => Schedule::CsrRowBalanced,
+        2 => Schedule::Csr5Tiles { tile_nnz: 1 + rng.gen_range(128) },
+        _ => Schedule::CsrDynamic { chunk: 1 + rng.gen_range(32) },
+    }
+}
+
+#[test]
+fn partitions_conserve_nonzeros() {
+    check("partition-conserves-nnz", 40, |rng| {
+        let csr = random_csr(rng);
+        let sched = random_schedule(rng);
+        let nt = 1 + rng.gen_range(8);
+        let p = partition(&csr, sched, nt);
+        if let Err(e) = p.validate(&csr) {
+            return Err(format!("{sched:?} nt={nt}: {e}"));
+        }
+        let total: usize = p.thread_nnz(&csr).iter().sum();
+        prop_assert!(
+            total == csr.nnz(),
+            "{sched:?} nt={nt}: {total} != {}",
+            csr.nnz()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn all_formats_agree_on_spmv() {
+    check("formats-agree", 30, |rng| {
+        let csr = random_csr(rng);
+        let n = csr.n_rows;
+        let x: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+        let mut want = vec![0.0; n];
+        csr.spmv(&x, &mut want);
+        let close = |got: &[f64], what: &str| -> Result<(), String> {
+            for (i, (a, b)) in want.iter().zip(got).enumerate() {
+                if (a - b).abs() > 1e-9 * (1.0 + a.abs()) {
+                    return Err(format!("{what} row {i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        };
+        let c5 = Csr5::from_csr(&csr, 1 + rng.gen_range(64));
+        let mut y = vec![0.0; n];
+        c5.spmv(&x, &mut y);
+        close(&y, "csr5")?;
+        let ell = Ell::from_csr(&csr, None).map_err(|e| e.to_string())?;
+        ell.spmv(&x, &mut y);
+        close(&y, "ell")?;
+        let h = Hyb::from_csr(&csr, Hyb::auto_k(&csr));
+        h.spmv(&x, &mut y);
+        close(&y, "hyb")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn simulation_counters_sane_across_configs() {
+    check("sim-counter-invariants", 15, |rng| {
+        let class = MatrixClass::ALL[rng.gen_range(MatrixClass::ALL.len())];
+        let csr = class.generate(
+            64 + rng.gen_range(1500),
+            500 + rng.gen_range(8000),
+            rng.next_u64(),
+        );
+        let cfg = ProfileConfig {
+            schedule: random_schedule(rng),
+            placement: if rng.gen_range(2) == 0 {
+                Placement::CoreGroupFirst
+            } else {
+                Placement::PrivateL2
+            },
+            ..Default::default()
+        };
+        let nt = 1 + rng.gen_range(8);
+        let (res, thread_nnz) = simulate_point(&csr, &cfg, nt);
+        prop_assert!(res.per_thread.len() == nt);
+        prop_assert!(thread_nnz.len() == nt);
+        for (t, c) in res.per_thread.iter().enumerate() {
+            prop_assert!(c.l1_dcm <= c.l1_dca, "t{t}: l1_dcm > l1_dca");
+            prop_assert!(c.l2_dca == c.l1_dcm, "t{t}: l2_dca != l1_dcm");
+            prop_assert!(c.l2_dcm <= c.l2_dca, "t{t}: l2_dcm > l2_dca");
+            prop_assert!(
+                c.fr_ins <= c.tot_ins,
+                "t{t}: fp ins exceed total"
+            );
+        }
+        prop_assert!(res.timing.wall_seconds > 0.0);
+        let slowest = res
+            .timing
+            .per_thread_cycles
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max);
+        prop_assert!(
+            res.timing.wall_cycles >= slowest,
+            "wall below slowest thread"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn reorder_preserves_spmv_semantics() {
+    check("reorder-preserves-spmv", 25, |rng| {
+        let csr = random_csr(rng);
+        let n = csr.n_rows;
+        let plan = locality_reorder(&csr, 1 + rng.gen_range(64));
+        let permuted = plan.apply(&csr);
+        prop_assert!(permuted.nnz() == csr.nnz());
+        prop_assert!(permuted.validate().is_ok());
+        let x: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+        let mut y0 = vec![0.0; n];
+        let mut y1 = vec![0.0; n];
+        csr.spmv(&x, &mut y0);
+        permuted.spmv(&x, &mut y1);
+        let inv = plan.inverse();
+        for r in 0..n {
+            prop_assert!(
+                (y0[r] - y1[inv[r]]).abs() < 1e-9,
+                "row {r} mismatch after reorder"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn threaded_exec_matches_reference_everywhere() {
+    check("exec-matches-ref", 20, |rng| {
+        let class = MatrixClass::ALL[rng.gen_range(MatrixClass::ALL.len())];
+        let csr = class.generate(
+            32 + rng.gen_range(400),
+            100 + rng.gen_range(3000),
+            rng.next_u64(),
+        );
+        let x: Vec<f64> =
+            (0..csr.n_cols).map(|_| rng.gen_f64() - 0.5).collect();
+        let want = exec::spmv_sequential(&csr, &x).y;
+        let got = exec::spmv_threaded(
+            &csr,
+            &x,
+            random_schedule(rng),
+            1 + rng.gen_range(6),
+        );
+        for (i, (a, b)) in want.iter().zip(&got.y).enumerate() {
+            prop_assert!(
+                (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                "row {i}: {a} vs {b}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn features_are_finite_and_consistent() {
+    check("features-finite", 30, |rng| {
+        let csr = random_csr(rng);
+        let f = MatrixFeatures::extract(&csr);
+        prop_assert!(f.nnz == csr.nnz());
+        prop_assert!(f.nnz_max <= f.nnz.max(1));
+        prop_assert!(f.nnz_avg.is_finite() && f.nnz_avg >= 0.0);
+        prop_assert!(f.nnz_var.is_finite() && f.nnz_var >= 0.0);
+        prop_assert!(
+            (f.nnz_avg * f.n_rows as f64 - f.nnz as f64).abs() < 1e-6,
+            "avg inconsistent"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,120 @@
+//! Integration: PJRT runtime vs native executor over the AOT
+//! artifacts. Requires `make artifacts` (skips with a message when the
+//! directory is absent, so `cargo test` works in a fresh checkout).
+
+use ft2000_spmv::corpus::generators;
+use ft2000_spmv::runtime::Runtime;
+use ft2000_spmv::sparse::{Csr, Ell};
+use ft2000_spmv::util::rng::Pcg32;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping runtime integration: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime init"))
+}
+
+fn check_spmv(rt: &Runtime, csr: &Csr, rng: &mut Pcg32, what: &str) {
+    let x: Vec<f64> = (0..csr.n_cols).map(|_| rng.gen_f64() - 0.5).collect();
+    let mut want = vec![0.0; csr.n_rows];
+    csr.spmv(&x, &mut want);
+    let got = rt.spmv(csr, &x).expect("pjrt spmv");
+    assert_eq!(got.len(), csr.n_rows);
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert!(
+            (a - b).abs() / (1.0 + a.abs()) < 1e-4,
+            "{what} row {i}: native {a} vs pjrt {b}"
+        );
+    }
+}
+
+#[test]
+fn ell_kernel_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::new(1);
+    let csr = generators::banded(1000, 7, &mut rng);
+    check_spmv(&rt, &csr, &mut rng, "banded");
+}
+
+#[test]
+fn seg_kernel_handles_wide_rows() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::new(2);
+    // One giant row: ELL would need K = 1500; the seg bucket takes it.
+    let csr = generators::dense_row_block(1500, 12_000, &mut rng);
+    assert!(csr.max_row_nnz() > 64);
+    check_spmv(&rt, &csr, &mut rng, "dense-row-block");
+}
+
+#[test]
+fn kernel_routing_covers_classes() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::new(3);
+    for (name, csr) in [
+        ("random", generators::random_uniform(2000, 12, &mut rng)),
+        ("stencil", generators::stencil(1024, 5)),
+        ("road", generators::road_network(4000, &mut rng)),
+        ("powerlaw", generators::power_law(1500, 6.0, 1.6, &mut rng)),
+    ] {
+        check_spmv(&rt, &csr, &mut rng, name);
+    }
+}
+
+#[test]
+fn power_iteration_graph_runs() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::new(4);
+    let csr = generators::banded(2048, 5, &mut rng);
+    let ell = Ell::from_csr(&csr, None).unwrap();
+    let x0 = vec![1.0 / (2048.0f64).sqrt(); 2048];
+    let (v, rayleigh) = rt.power_iter(&ell, &x0).expect("power iter");
+    assert_eq!(v.len(), 2048);
+    let norm: f64 = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-3, "normalized output: {norm}");
+    assert!(rayleigh.is_finite());
+}
+
+#[test]
+fn empty_and_identity_edge_cases() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::new(5);
+    let identity = Csr::identity(512);
+    check_spmv(&rt, &identity, &mut rng, "identity");
+    // All-zero matrix through the seg path.
+    let zero = Csr::zero(512, 512);
+    let x = vec![1.0; 512];
+    let got = rt.spmv_seg(&zero, &x).expect("zero spmv");
+    assert!(got.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn spmm_matches_per_vector_spmv() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg32::new(6);
+    let csr = generators::banded(2000, 9, &mut rng);
+    let ell = Ell::from_csr(&csr, None).unwrap();
+    let vectors: Vec<Vec<f64>> = (0..5)
+        .map(|_| (0..csr.n_cols).map(|_| rng.gen_f64() - 0.5).collect())
+        .collect();
+    let block = rt.spmm_ell(&ell, &vectors).expect("spmm");
+    assert_eq!(block.len(), 5);
+    for (j, x) in vectors.iter().enumerate() {
+        let single = rt.spmv_ell(&ell, x).expect("spmv");
+        for (r, (a, b)) in single.iter().zip(&block[j]).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                "vector {j} row {r}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rejects_oversized_matrices() {
+    let Some(rt) = runtime() else { return };
+    // Larger than any bucket: must error, not crash.
+    let big = Csr::identity(1_000_000);
+    let x = vec![0.0; 1_000_000];
+    assert!(rt.spmv(&big, &x).is_err());
+}
