@@ -1,0 +1,115 @@
+//! §Serve — wall-clock throughput of the batched serving path.
+//!
+//! Two questions the serving layer must answer affirmatively on the
+//! host:
+//!
+//! 1. Does coalescing `b` concurrent requests into one
+//!    `exec::spmm_threaded` launch beat `b` back-to-back SpMV calls?
+//!    (It should: one dispatch, A streamed once per column block.)
+//! 2. What does the end-to-end engine sustain under Zipf traffic,
+//!    open- and closed-loop?
+//!
+//! Scale with `FT2000_SUITE=tiny|fast|full` (default fast).
+
+mod common;
+
+use ft2000_spmv::exec;
+use ft2000_spmv::service::{
+    replay, Arrivals, MatrixRegistry, PlanConfig, Planner, Popularity,
+    ReplayConfig, ServeEngine, WorkloadSpec,
+};
+use ft2000_spmv::util::bench::{bench, black_box, BenchConfig};
+use ft2000_spmv::util::table::Table;
+
+fn main() {
+    common::banner(
+        "§Serve",
+        "batched SpMM vs repeated SpMV; engine throughput under Zipf traffic",
+    );
+    let suite = common::suite_from_env();
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&suite, Some(12));
+    let engine =
+        ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
+
+    // --- 1: batching win ------------------------------------------------
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 30,
+        target_rel_ci: 0.1,
+        max_seconds: 2.0,
+    };
+    let mut chosen = ids.clone();
+    chosen.sort_by_key(|&id| {
+        std::cmp::Reverse(engine.registry.entry(id).csr.nnz())
+    });
+    chosen.dedup();
+    chosen.truncate(3);
+    let mut t = Table::new(
+        "Batched SpMM vs N sequential SpMV calls (cached plan, 4 threads)",
+        &["matrix", "nnz", "batch", "spmm Gflops", "Nx spmv Gflops", "win"],
+    );
+    for &id in &chosen {
+        let entry = engine.registry.entry(id);
+        let (plan, _) = engine.plans.plan_for(entry.fingerprint, &entry.csr);
+        let nnz = entry.csr.nnz();
+        let x = vec![1.0f64; entry.csr.n_cols];
+        for b in [1usize, 2, 4, 8, 16, 32] {
+            let xs_refs: Vec<&[f64]> =
+                (0..b).map(|_| x.as_slice()).collect();
+            let packed = exec::pack_vectors(&xs_refs);
+            let spmm = bench("spmm", &cfg, || {
+                black_box(plan.execute_batch(&entry.csr, &packed, b));
+            });
+            let spmv = bench("spmv", &cfg, || {
+                for _ in 0..b {
+                    black_box(plan.execute(&entry.csr, &x));
+                }
+            });
+            let flops = 2.0 * nnz as f64 * b as f64;
+            t.row(vec![
+                entry.name.clone(),
+                nnz.to_string(),
+                b.to_string(),
+                format!("{:.3}", flops / spmm.mean_s / 1e9),
+                format!("{:.3}", flops / spmv.mean_s / 1e9),
+                format!("{:.2}x", spmv.mean_s / spmm.mean_s),
+            ]);
+        }
+    }
+    t.print();
+
+    // --- 2: end-to-end engine under traffic -----------------------------
+    for (label, arrivals) in [
+        ("open-loop 4k req/s", Arrivals::Open { rate: 4000.0 }),
+        ("closed-loop 16 clients", Arrivals::Closed { clients: 16 }),
+    ] {
+        let mut reg = MatrixRegistry::new();
+        let ids = reg.register_suite(&suite, Some(12));
+        let engine = ServeEngine::new(
+            reg,
+            Planner::Heuristic,
+            PlanConfig::default(),
+        );
+        let spec = WorkloadSpec {
+            requests: 1500,
+            popularity: Popularity::Zipf { s: 1.2 },
+            arrivals,
+            seed: 0x5EED_2019,
+        };
+        let report =
+            replay(&engine, &ids, &spec, &ReplayConfig::default())
+                .expect("replay");
+        println!(
+            "{label:<24} {:>9.1} req/s  p50 {:>8.3} ms  p99 {:>8.3} ms  \
+             mean batch {:>5.2}  hit rate {:>5.1}%  ({:.2} Gflops measured)",
+            report.throughput_rps(),
+            report.stats.latency_percentile(50.0),
+            report.stats.latency_percentile(99.0),
+            report.stats.mean_batch(),
+            100.0 * report.hit_rate(),
+            report.stats.executed_gflops(),
+        );
+    }
+}

@@ -5,6 +5,8 @@
 //! ft2000-spmv train   [--suite tiny|fast|full] [--trees N]
 //! ft2000-spmv analyze (--named NAME | --mtx PATH)
 //! ft2000-spmv verify  [--artifacts DIR]
+//! ft2000-spmv serve-bench [--suite S] [--matrices N] [--batches 1,2,4,8,16] [--workers W]
+//! ft2000-spmv replay  [--suite S] [--pattern uniform|zipf|bursty] [--requests N] [--clients C] ...
 //! ft2000-spmv info
 //! ```
 
@@ -43,8 +45,46 @@ pub enum Command {
     Report { source: MatrixSource, out: Option<String> },
     /// Export the synthetic corpus as MatrixMarket files.
     Export { suite: SuiteSpec, dir: String },
+    /// Batched-serving microbenchmark: SpMM vs repeated SpMV, plus a
+    /// live worker-pool throughput run.
+    ServeBench {
+        suite: SuiteSpec,
+        matrices: usize,
+        batches: Vec<usize>,
+        workers: usize,
+    },
+    /// Deterministic traffic replay through the serving engine.
+    Replay {
+        suite: SuiteSpec,
+        pattern: TrafficPattern,
+        requests: usize,
+        matrices: usize,
+        max_batch: usize,
+        /// 0 = open loop at `rate`; >0 = closed loop with this many
+        /// clients.
+        clients: usize,
+        rate: f64,
+        seed: u64,
+        planner: PlannerKind,
+        json: Option<String>,
+    },
     /// Print topology/provenance info.
     Info,
+}
+
+/// Traffic shape of the `replay` subcommand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrafficPattern {
+    Uniform,
+    Zipf,
+    Bursty,
+}
+
+/// Plan-decision mode of the serving engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannerKind {
+    Heuristic,
+    Learned,
 }
 
 #[derive(Clone, Debug)]
@@ -54,7 +94,7 @@ pub enum MatrixSource {
 }
 
 pub fn usage() -> &'static str {
-    "usage: ft2000-spmv <sweep|train|analyze|verify|info> [options]\n\
+    "usage: ft2000-spmv <sweep|train|analyze|verify|report|export|serve-bench|replay|info> [options]\n\
      \n\
      sweep    --suite tiny|fast|full   corpus scale (default fast)\n\
      \u{20}        --schedule csr|balanced|csr5|dynamic\n\
@@ -67,6 +107,15 @@ pub fn usage() -> &'static str {
      verify   --artifacts DIR        (default ./artifacts)\n\
      report   --named NAME | --mtx PATH  [--out FILE]\n\
      export   --suite tiny|fast|full --dir PATH\n\
+     serve-bench --suite tiny|fast|full --matrices N (default 6)\n\
+     \u{20}        --batches 1,2,4,8,16  --workers W (default 2)\n\
+     replay   --suite tiny|fast|full   corpus scale (default fast)\n\
+     \u{20}        --pattern uniform|zipf|bursty (default zipf)\n\
+     \u{20}        --requests N (default 2000)  --matrices N (default 32)\n\
+     \u{20}        --max-batch B (default 16)\n\
+     \u{20}        --clients C (default 0 = open loop) --rate R (default 4000)\n\
+     \u{20}        --seed S  --planner heuristic|learned (default learned)\n\
+     \u{20}        --json PATH          dump the report as JSON\n\
      info"
 }
 
@@ -132,6 +181,68 @@ fn parse_threads(flags: &HashMap<String, String>) -> Result<Vec<usize>> {
         bail!("--threads must start with 1 (the speedup baseline)");
     }
     Ok(out)
+}
+
+fn parse_usize(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: usize,
+) -> Result<usize> {
+    flags
+        .get(key)
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(|_| anyhow!("bad --{key}"))
+        .map(|v| v.unwrap_or(default))
+}
+
+fn parse_f64(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: f64,
+) -> Result<f64> {
+    flags
+        .get(key)
+        .map(|s| s.parse())
+        .transpose()
+        .map_err(|_| anyhow!("bad --{key}"))
+        .map(|v| v.unwrap_or(default))
+}
+
+fn parse_batches(flags: &HashMap<String, String>) -> Result<Vec<usize>> {
+    let raw = flags
+        .get("batches")
+        .map(String::as_str)
+        .unwrap_or("1,2,4,8,16");
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        let b: usize = part
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad batch size '{part}'"))?;
+        if b == 0 {
+            bail!("batch sizes must be >= 1");
+        }
+        out.push(b);
+    }
+    Ok(out)
+}
+
+fn parse_pattern(flags: &HashMap<String, String>) -> Result<TrafficPattern> {
+    match flags.get("pattern").map(String::as_str).unwrap_or("zipf") {
+        "uniform" => Ok(TrafficPattern::Uniform),
+        "zipf" => Ok(TrafficPattern::Zipf),
+        "bursty" => Ok(TrafficPattern::Bursty),
+        other => bail!("unknown pattern '{other}' (uniform|zipf|bursty)"),
+    }
+}
+
+fn parse_planner(flags: &HashMap<String, String>) -> Result<PlannerKind> {
+    match flags.get("planner").map(String::as_str).unwrap_or("learned") {
+        "heuristic" => Ok(PlannerKind::Heuristic),
+        "learned" => Ok(PlannerKind::Learned),
+        other => bail!("unknown planner '{other}' (heuristic|learned)"),
+    }
 }
 
 fn parse_named(name: &str) -> Result<NamedMatrix> {
@@ -206,6 +317,29 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 .cloned()
                 .ok_or_else(|| anyhow!("export needs --dir PATH"))?,
         },
+        "serve-bench" => Command::ServeBench {
+            suite: parse_suite(&flags)?,
+            matrices: parse_usize(&flags, "matrices", 6)?.max(1),
+            batches: parse_batches(&flags)?,
+            workers: parse_usize(&flags, "workers", 2)?.max(1),
+        },
+        "replay" => Command::Replay {
+            suite: parse_suite(&flags)?,
+            pattern: parse_pattern(&flags)?,
+            requests: parse_usize(&flags, "requests", 2000)?.max(1),
+            matrices: parse_usize(&flags, "matrices", 32)?.max(1),
+            max_batch: parse_usize(&flags, "max-batch", 16)?.max(1),
+            clients: parse_usize(&flags, "clients", 0)?,
+            rate: parse_f64(&flags, "rate", 4000.0)?,
+            seed: flags
+                .get("seed")
+                .map(|s| s.parse())
+                .transpose()
+                .map_err(|_| anyhow!("bad --seed"))?
+                .unwrap_or(0x5EED_2019),
+            planner: parse_planner(&flags)?,
+            json: flags.get("json").cloned(),
+        },
         "info" => Command::Info,
         other => bail!("unknown command '{other}'\n{}", usage()),
     };
@@ -278,6 +412,76 @@ mod tests {
         assert!(matches!(cli.command, Command::Export { .. }));
         assert!(parse(&sv(&["export"])).is_err());
         assert!(parse(&sv(&["report"])).is_err());
+    }
+
+    #[test]
+    fn parses_serve_bench_defaults() {
+        let cli = parse(&sv(&["serve-bench"])).unwrap();
+        match cli.command {
+            Command::ServeBench { matrices, batches, workers, .. } => {
+                assert_eq!(matrices, 6);
+                assert_eq!(batches, vec![1, 2, 4, 8, 16]);
+                assert_eq!(workers, 2);
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse(&sv(&["serve-bench", "--batches", "0,2"])).is_err());
+        assert!(parse(&sv(&["serve-bench", "--batches", "x"])).is_err());
+    }
+
+    #[test]
+    fn parses_replay_defaults_and_flags() {
+        let cli = parse(&sv(&["replay"])).unwrap();
+        match cli.command {
+            Command::Replay {
+                pattern,
+                requests,
+                matrices,
+                max_batch,
+                clients,
+                planner,
+                json,
+                ..
+            } => {
+                assert_eq!(pattern, TrafficPattern::Zipf);
+                assert_eq!(requests, 2000);
+                assert_eq!(matrices, 32);
+                assert_eq!(max_batch, 16);
+                assert_eq!(clients, 0);
+                assert_eq!(planner, PlannerKind::Learned);
+                assert!(json.is_none());
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "replay",
+            "--suite",
+            "tiny",
+            "--pattern",
+            "bursty",
+            "--clients",
+            "8",
+            "--planner",
+            "heuristic",
+            "--requests",
+            "100",
+            "--json",
+            "/tmp/replay.json",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Replay { pattern, clients, planner, requests, json, .. } => {
+                assert_eq!(pattern, TrafficPattern::Bursty);
+                assert_eq!(clients, 8);
+                assert_eq!(planner, PlannerKind::Heuristic);
+                assert_eq!(requests, 100);
+                assert_eq!(json.as_deref(), Some("/tmp/replay.json"));
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse(&sv(&["replay", "--pattern", "nope"])).is_err());
+        assert!(parse(&sv(&["replay", "--planner", "nope"])).is_err());
+        assert!(parse(&sv(&["replay", "--requests", "abc"])).is_err());
     }
 
     #[test]

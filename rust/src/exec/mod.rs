@@ -136,6 +136,155 @@ pub fn spmv_sequential(csr: &Csr, x: &[f64]) -> ExecResult {
     ExecResult { y, wall_seconds: t0.elapsed().as_secs_f64(), threads: 1 }
 }
 
+/// Width of one column block of the batched-vector SpMM kernel: the
+/// accumulator tile lives in registers, and every nonzero of `A` is
+/// loaded once per block instead of once per vector.
+pub const SPMM_COL_BLOCK: usize = 8;
+
+/// Result of one batched (multi-vector) SpMM execution:
+/// `Y = A X` for a block of `batch` dense vectors.
+#[derive(Clone, Debug)]
+pub struct SpmmResult {
+    /// Vector-interleaved outputs: `y[r * batch + j]` is row `r` of
+    /// output vector `j` (same layout as the `xs` input).
+    pub y: Vec<f64>,
+    pub n_rows: usize,
+    pub batch: usize,
+    pub wall_seconds: f64,
+    pub threads: usize,
+}
+
+impl SpmmResult {
+    /// Extract output vector `j` as a contiguous `Vec`.
+    pub fn column(&self, j: usize) -> Vec<f64> {
+        assert!(j < self.batch);
+        (0..self.n_rows).map(|r| self.y[r * self.batch + j]).collect()
+    }
+
+    pub fn gflops(&self, nnz: usize) -> f64 {
+        2.0 * nnz as f64 * self.batch as f64 / self.wall_seconds / 1e9
+    }
+}
+
+/// Interleave a slice of equal-length vectors into the
+/// `xs[i * batch + j]` layout the SpMM kernels consume.
+pub fn pack_vectors<T: AsRef<[f64]>>(vectors: &[T]) -> Vec<f64> {
+    let batch = vectors.len();
+    assert!(batch > 0, "need at least one vector");
+    let n = vectors[0].as_ref().len();
+    let mut xs = vec![0.0f64; n * batch];
+    for (j, v) in vectors.iter().enumerate() {
+        let v = v.as_ref();
+        assert_eq!(v.len(), n, "vector length mismatch");
+        for (i, &val) in v.iter().enumerate() {
+            xs[i * batch + j] = val;
+        }
+    }
+    xs
+}
+
+/// The column-blocked SpMM inner kernel over a row range: for each
+/// block of `SPMM_COL_BLOCK` vectors, each nonzero `A[r,c]` is read
+/// once and multiplied against the block's contiguous slice of `x`
+/// row `c` — the batched-serving analog of the CSR row kernel.
+fn spmm_rows_blocked(
+    csr: &Csr,
+    xs: &[f64],
+    batch: usize,
+    r0: usize,
+    r1: usize,
+    y: &mut [f64],
+) {
+    let mut jb = 0;
+    while jb < batch {
+        let bw = (batch - jb).min(SPMM_COL_BLOCK);
+        let mut acc = [0.0f64; SPMM_COL_BLOCK];
+        for r in r0..r1 {
+            acc[..bw].fill(0.0);
+            for i in csr.ptr[r]..csr.ptr[r + 1] {
+                let a = csr.data[i];
+                let xoff = csr.indices[i] as usize * batch + jb;
+                for (t, slot) in acc[..bw].iter_mut().enumerate() {
+                    *slot += a * xs[xoff + t];
+                }
+            }
+            let yoff = r * batch + jb;
+            y[yoff..yoff + bw].copy_from_slice(&acc[..bw]);
+        }
+        jb += bw;
+    }
+}
+
+/// Multi-threaded batched SpMM: `Y = A X` for `batch` interleaved
+/// vectors (`xs[i * batch + j]`), threads over row partitions.
+///
+/// Tile (CSR5) schedules have no multi-vector kernel; they are
+/// remapped to `CsrRowBalanced`, the row-space schedule with the same
+/// load-balancing intent, so a cached tile plan still serves batches.
+pub fn spmm_threaded(
+    csr: &Csr,
+    xs: &[f64],
+    batch: usize,
+    schedule: Schedule,
+    n_threads: usize,
+) -> SpmmResult {
+    assert!(batch > 0, "batch must be >= 1");
+    assert_eq!(xs.len(), csr.n_cols * batch, "xs length != n_cols * batch");
+    let schedule = match schedule {
+        Schedule::Csr5Tiles { .. } => Schedule::CsrRowBalanced,
+        s => s,
+    };
+    let part = partition(csr, schedule, n_threads);
+    debug_assert!(part.validate(csr).is_ok());
+    let per_thread = match part {
+        Partition::Rows { per_thread } => per_thread,
+        Partition::Tiles { .. } => unreachable!("tile schedules remapped"),
+    };
+    let mut y = vec![0.0f64; csr.n_rows * batch];
+    let ptr = SendPtr(y.as_mut_ptr());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for ranges in &per_thread {
+            let ptr = &ptr;
+            s.spawn(move || {
+                // SAFETY: row ranges are disjoint across threads
+                // (Partition::validate), and row r owns the disjoint
+                // slice y[r*batch .. (r+1)*batch].
+                let yslice = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0, csr.n_rows * batch)
+                };
+                for &(r0, r1) in ranges {
+                    spmm_rows_blocked(csr, xs, batch, r0, r1, yslice);
+                }
+            });
+        }
+    });
+    SpmmResult {
+        y,
+        n_rows: csr.n_rows,
+        batch,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        threads: per_thread.len(),
+    }
+}
+
+/// Sequential batched SpMM reference (timing symmetry with
+/// [`spmv_sequential`]).
+pub fn spmm_sequential(csr: &Csr, xs: &[f64], batch: usize) -> SpmmResult {
+    assert!(batch > 0, "batch must be >= 1");
+    assert_eq!(xs.len(), csr.n_cols * batch, "xs length != n_cols * batch");
+    let mut y = vec![0.0f64; csr.n_rows * batch];
+    let t0 = Instant::now();
+    spmm_rows_blocked(csr, xs, batch, 0, csr.n_rows, &mut y);
+    SpmmResult {
+        y,
+        n_rows: csr.n_rows,
+        batch,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        threads: 1,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,5 +394,66 @@ mod tests {
         let x = vec![1.0; 256];
         let r = spmv_threaded(&csr, &x, Schedule::CsrRowStatic, 2);
         assert!(r.gflops(csr.nnz()) > 0.0);
+    }
+
+    fn random_vectors(rng: &mut Pcg32, n: usize, batch: usize) -> Vec<Vec<f64>> {
+        (0..batch)
+            .map(|_| (0..n).map(|_| rng.gen_f64() - 0.5).collect())
+            .collect()
+    }
+
+    #[test]
+    fn spmm_matches_per_vector_spmv() {
+        let mut rng = Pcg32::new(0x5B33);
+        let csr = random_csr(&mut rng, 300, 5);
+        // Batch sizes straddling the column block width.
+        for batch in [1usize, 2, 7, 8, 9, 16] {
+            let vectors = random_vectors(&mut rng, 300, batch);
+            let xs = pack_vectors(&vectors);
+            for sched in [
+                Schedule::CsrRowStatic,
+                Schedule::CsrRowBalanced,
+                Schedule::CsrDynamic { chunk: 16 },
+                Schedule::Csr5Tiles { tile_nnz: 32 }, // remapped to rows
+            ] {
+                for nt in [1, 3, 4] {
+                    let got = spmm_threaded(&csr, &xs, batch, sched, nt);
+                    assert_eq!(got.batch, batch);
+                    for (j, x) in vectors.iter().enumerate() {
+                        let want = spmv_sequential(&csr, x).y;
+                        assert_close(&got.column(j), &want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_sequential_matches_threaded() {
+        let mut rng = Pcg32::new(0x5B34);
+        let csr = random_csr(&mut rng, 200, 6);
+        let vectors = random_vectors(&mut rng, 200, 5);
+        let xs = pack_vectors(&vectors);
+        let seq = spmm_sequential(&csr, &xs, 5);
+        let par = spmm_threaded(&csr, &xs, 5, Schedule::CsrRowBalanced, 4);
+        assert_close(&seq.y, &par.y);
+        assert_eq!(seq.threads, 1);
+        assert!(seq.gflops(csr.nnz()) > 0.0);
+    }
+
+    #[test]
+    fn spmm_empty_matrix() {
+        let csr = Csr::zero(10, 10);
+        let xs = vec![1.0; 10 * 3];
+        let r = spmm_threaded(&csr, &xs, 3, Schedule::CsrRowStatic, 4);
+        assert!(r.y.iter().all(|&v| v == 0.0));
+        assert_eq!(r.y.len(), 30);
+    }
+
+    #[test]
+    fn pack_vectors_interleaves() {
+        let xs = pack_vectors(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        // x[i * batch + j]: element i of vector j.
+        assert_eq!(xs, vec![1.0, 3.0, 2.0, 4.0]);
     }
 }

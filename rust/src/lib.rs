@@ -23,7 +23,12 @@
 //! * [`coordinator`] — campaign orchestration: sweeps, datasets,
 //!   reports;
 //! * [`runtime`] — PJRT execution of the AOT-compiled Pallas SpMV
-//!   kernels in `artifacts/` (python never runs at request time).
+//!   kernels in `artifacts/` (python never runs at request time;
+//!   native f32 fallback without the `pjrt` feature);
+//! * [`service`] — the serving layer: matrix registry, per-matrix
+//!   plan cache, batched request executor (same-matrix coalescing
+//!   into multi-vector SpMM), deterministic traffic replay, and
+//!   serving telemetry.
 
 pub mod analysis;
 pub mod cli;
@@ -35,6 +40,7 @@ pub mod mlmodel;
 pub mod reorder;
 pub mod runtime;
 pub mod sched;
+pub mod service;
 pub mod sim;
 pub mod solver;
 pub mod sparse;

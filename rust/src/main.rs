@@ -3,16 +3,25 @@
 
 use anyhow::Result;
 
-use ft2000_spmv::cli::{self, Cli, Command, MatrixSource};
+use ft2000_spmv::cli::{
+    self, Cli, Command, MatrixSource, PlannerKind, TrafficPattern,
+};
 use ft2000_spmv::coordinator::{
     build_dataset, profile_matrix, report, Campaign, ProfileConfig,
 };
 use ft2000_spmv::corpus::suite::SuiteSpec;
+use ft2000_spmv::exec;
 use ft2000_spmv::mlmodel::{Forest, ForestParams};
 use ft2000_spmv::runtime::Runtime;
 use ft2000_spmv::sched::Schedule;
+use ft2000_spmv::service::{
+    self, serve_queue, Arrivals, MatrixRegistry, PlanConfig, Planner,
+    Popularity, ReplayConfig, Request, RequestQueue, ServeEngine,
+    WorkloadSpec,
+};
 use ft2000_spmv::sim::topology::{Placement, Topology};
 use ft2000_spmv::sparse::{mm, Csr};
+use ft2000_spmv::util::bench::{bench, black_box, BenchConfig};
 use ft2000_spmv::util::table::Table;
 
 fn main() {
@@ -40,8 +49,207 @@ fn run(cli: Cli) -> Result<()> {
         Command::Verify { artifacts } => verify(&artifacts),
         Command::Report { source, out } => report_cmd(source, out),
         Command::Export { suite, dir } => export(suite, &dir),
+        Command::ServeBench { suite, matrices, batches, workers } => {
+            serve_bench(suite, matrices, batches, workers)
+        }
+        Command::Replay {
+            suite,
+            pattern,
+            requests,
+            matrices,
+            max_batch,
+            clients,
+            rate,
+            seed,
+            planner,
+            json,
+        } => replay_cmd(
+            suite, pattern, requests, matrices, max_batch, clients, rate,
+            seed, planner, json,
+        ),
         Command::Info => info(),
     }
+}
+
+fn serve_bench(
+    suite: SuiteSpec,
+    matrices: usize,
+    batches: Vec<usize>,
+    workers: usize,
+) -> Result<()> {
+    eprintln!("registering {matrices} corpus matrices...");
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&suite, Some(matrices));
+    let engine =
+        ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
+
+    // --- batched SpMM vs repeated single-vector SpMV -----------------
+    let bench_cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 40,
+        target_rel_ci: 0.1,
+        max_seconds: 1.5,
+    };
+    let mut t = Table::new(
+        "Batched SpMM vs repeated single-vector SpMV (cached plans)",
+        &["matrix", "nnz", "batch", "spmm Gflops", "spmv Gflops", "win"],
+    );
+    // The largest matrices: the memory-bound regime where streaming A
+    // once per batch pays most.
+    let mut chosen = ids.clone();
+    chosen.sort_by_key(|&id| {
+        std::cmp::Reverse(engine.registry.entry(id).csr.nnz())
+    });
+    chosen.dedup();
+    chosen.truncate(3);
+    for &id in &chosen {
+        let entry = engine.registry.entry(id);
+        let (plan, _) = engine.plans.plan_for(entry.fingerprint, &entry.csr);
+        let x = vec![1.0f64; entry.csr.n_cols];
+        let nnz = entry.csr.nnz();
+        for &b in &batches {
+            let xs_refs: Vec<&[f64]> = (0..b).map(|_| x.as_slice()).collect();
+            let packed = exec::pack_vectors(&xs_refs);
+            let spmm = bench("spmm", &bench_cfg, || {
+                black_box(plan.execute_batch(&entry.csr, &packed, b));
+            });
+            let spmv = bench("spmv", &bench_cfg, || {
+                for _ in 0..b {
+                    black_box(plan.execute(&entry.csr, &x));
+                }
+            });
+            let flops = 2.0 * nnz as f64 * b as f64;
+            t.row(vec![
+                entry.name.clone(),
+                nnz.to_string(),
+                b.to_string(),
+                format!("{:.3}", flops / spmm.mean_s / 1e9),
+                format!("{:.3}", flops / spmv.mean_s / 1e9),
+                format!("{:.2}x", spmv.mean_s / spmm.mean_s),
+            ]);
+        }
+    }
+    t.print();
+
+    // --- live worker-pool throughput ---------------------------------
+    // Fresh engine so the report's cache/telemetry counters reflect
+    // only the live run, not the microbench warmup above.
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&suite, Some(matrices));
+    let engine =
+        ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
+    let n_req = 512;
+    eprintln!(
+        "live queue: {n_req} zipf requests, {workers} workers, coalescing..."
+    );
+    let wl = WorkloadSpec {
+        requests: n_req,
+        popularity: Popularity::Zipf { s: 1.2 },
+        arrivals: Arrivals::Closed { clients: workers },
+        seed: 0xBEEF,
+    };
+    let seq = wl.generate(ids.len());
+    // One shared input per matrix keeps the queue's memory flat.
+    let inputs: std::collections::HashMap<usize, std::sync::Arc<Vec<f64>>> =
+        ids.iter()
+            .map(|&id| {
+                let n = engine.registry.entry(id).csr.n_cols;
+                (id, std::sync::Arc::new(vec![1.0f64; n]))
+            })
+            .collect();
+    let queue = RequestQueue::new();
+    let t0 = std::time::Instant::now();
+    let served = std::thread::scope(|s| {
+        s.spawn(|| {
+            for r in &seq {
+                let id = ids[r.matrix_idx];
+                queue.push(Request::new(id, inputs[&id].clone()));
+            }
+            queue.close();
+        });
+        serve_queue(&engine, &queue, workers, 16)
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = engine.telemetry.snapshot();
+    let (hits, misses) = engine.plans.stats();
+    service::telemetry::report_table(
+        "Live worker-pool serving report (wall clock)",
+        &stats,
+        hits,
+        misses,
+        wall,
+    )
+    .print();
+    service::telemetry::batch_histogram_table(&stats).print();
+    eprintln!("served {served} requests in {wall:.3}s");
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn replay_cmd(
+    suite: SuiteSpec,
+    pattern: TrafficPattern,
+    requests: usize,
+    matrices: usize,
+    max_batch: usize,
+    clients: usize,
+    rate: f64,
+    seed: u64,
+    planner: PlannerKind,
+    json: Option<String>,
+) -> Result<()> {
+    eprintln!("registering up to {matrices} corpus matrices...");
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&suite, Some(matrices));
+    eprintln!(
+        "registered {} matrices ({} nonzeros total)",
+        reg.len(),
+        reg.total_nnz()
+    );
+    let planner = match planner {
+        PlannerKind::Heuristic => Planner::Heuristic,
+        PlannerKind::Learned => {
+            eprintln!(
+                "training the learned format selector on the tiny suite..."
+            );
+            Planner::train(&SuiteSpec::tiny())
+        }
+    };
+    let engine = ServeEngine::new(reg, planner, PlanConfig::default());
+    let popularity = match pattern {
+        TrafficPattern::Uniform => Popularity::Uniform,
+        TrafficPattern::Zipf | TrafficPattern::Bursty => {
+            Popularity::Zipf { s: 1.2 }
+        }
+    };
+    let arrivals = if clients > 0 {
+        Arrivals::Closed { clients }
+    } else if pattern == TrafficPattern::Bursty {
+        Arrivals::Bursty { rate, burst: 8.0, period_s: 0.5, duty: 0.3 }
+    } else {
+        Arrivals::Open { rate }
+    };
+    let wspec = WorkloadSpec { requests, popularity, arrivals, seed };
+    eprintln!("replaying {requests} requests ({arrivals:?}, {popularity:?}, seed {seed:#x})...");
+    let report = service::replay(
+        &engine,
+        &ids,
+        &wspec,
+        &ReplayConfig { max_batch, ..Default::default() },
+    )?;
+    report.print();
+    println!(
+        "plan cache: {} plans built ({} planner), hit rate {:.1}%",
+        engine.plans.len(),
+        engine.plans.planner_name(),
+        100.0 * report.hit_rate()
+    );
+    if let Some(path) = json {
+        std::fs::write(&path, report.to_json().to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
 }
 
 fn sweep(

@@ -9,6 +9,11 @@
 //! Artifacts are shape-monomorphic *buckets* (`manifest.json`); the
 //! [`Registry`] picks the smallest bucket a matrix fits after padding,
 //! pads the ELL/seg buffers, executes, and un-pads the result.
+//!
+//! The PJRT client lives behind the `pjrt` cargo feature (it needs a
+//! local `xla` bindings crate that is not on crates.io). The default
+//! build substitutes a native f32 interpreter with identical bucket
+//! routing, padding, and error semantics.
 
 use std::path::{Path, PathBuf};
 
@@ -143,12 +148,14 @@ impl Registry {
 }
 
 /// A loaded + compiled artifact, ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Compiled {
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The PJRT runtime: client + lazily compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub registry: Registry,
     client: xla::PjRtClient,
@@ -157,6 +164,7 @@ pub struct Runtime {
     >,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client over the artifact directory.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
@@ -397,8 +405,151 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn wrap(e: xla::Error) -> anyhow::Error {
     anyhow!("xla: {e:?}")
+}
+
+/// Native fallback runtime (built without the `pjrt` feature — the
+/// default in environments without the local `xla` bindings crate).
+///
+/// Routes through the same [`Registry`] buckets, applies the same
+/// padding rules, and accumulates in f32 — so results match the PJRT
+/// artifact path to the tolerances the integration tests already use,
+/// and "no bucket fits" errors are identical. Build with
+/// `--features pjrt` (after adding the local `xla` path dependency to
+/// Cargo.toml) to dispatch to a real PJRT client instead.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub registry: Registry,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Ok(Runtime { registry: Registry::load(artifact_dir)? })
+    }
+
+    pub fn platform(&self) -> String {
+        "native-fallback (f32 interpreter; enable the `pjrt` feature for PJRT)"
+            .into()
+    }
+
+    /// f32 ELL SpMV over the raw (unpadded) ELL buffers.
+    fn ell_spmv_f32(ell: &Ell, xf: &[f32], y: &mut [f32]) {
+        for (r, yr) in y.iter_mut().enumerate() {
+            let base = r * ell.k;
+            let mut acc = 0.0f32;
+            for j in 0..ell.k {
+                acc += ell.data[base + j] as f32
+                    * xf[ell.cols[base + j] as usize];
+            }
+            *yr = acc;
+        }
+    }
+
+    /// y = A x through the ELL kernel semantics (bucket-checked).
+    pub fn spmv_ell(&self, ell: &Ell, x: &[f64]) -> Result<Vec<f64>> {
+        let meta = self
+            .registry
+            .pick_ell(ell.n_rows, ell.k)
+            .ok_or_else(|| {
+                anyhow!("no ELL bucket fits rows={} k={}", ell.n_rows, ell.k)
+            })?
+            .clone();
+        let mut xf = vec![0.0f32; meta.n.max(ell.n_cols)];
+        for (i, &v) in x.iter().enumerate() {
+            xf[i] = v as f32;
+        }
+        let mut y = vec![0.0f32; ell.n_rows];
+        Self::ell_spmv_f32(ell, &xf, &mut y);
+        Ok(y.iter().map(|&v| v as f64).collect())
+    }
+
+    /// y = A x through the segmented-kernel semantics (bucket-checked).
+    pub fn spmv_seg(&self, csr: &Csr, x: &[f64]) -> Result<Vec<f64>> {
+        let nnz = csr.nnz();
+        self.registry.pick_seg(nnz, csr.n_rows).ok_or_else(|| {
+            anyhow!("no seg bucket fits nnz={nnz} rows={}", csr.n_rows)
+        })?;
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut y = vec![0.0f64; csr.n_rows];
+        for (r, yr) in y.iter_mut().enumerate() {
+            let (rc, rv) = csr.row(r);
+            let mut acc = 0.0f32;
+            for (c, v) in rc.iter().zip(rv) {
+                acc += *v as f32 * xf[*c as usize];
+            }
+            *yr = acc as f64;
+        }
+        Ok(y)
+    }
+
+    /// Four normalized power-iteration steps + Rayleigh quotient.
+    pub fn power_iter(&self, ell: &Ell, x0: &[f64]) -> Result<(Vec<f64>, f64)> {
+        self.registry.pick_power(ell.n_rows, ell.k).ok_or_else(|| {
+            anyhow!("no power bucket fits rows={} k={}", ell.n_rows, ell.k)
+        })?;
+        anyhow::ensure!(
+            ell.n_rows == ell.n_cols,
+            "power iteration needs a square matrix"
+        );
+        let mut v: Vec<f32> = x0.iter().map(|&a| a as f32).collect();
+        let mut rayleigh = 0.0f32;
+        for _ in 0..4 {
+            let mut y = vec![0.0f32; ell.n_rows];
+            Self::ell_spmv_f32(ell, &v, &mut y);
+            // v is unit-norm, so v . Av is the Rayleigh quotient.
+            rayleigh = v.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let norm = y.iter().map(|a| a * a).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for a in &mut y {
+                    *a /= norm;
+                }
+            }
+            v = y;
+        }
+        Ok((v.iter().map(|&a| a as f64).collect(), rayleigh as f64))
+    }
+
+    /// Y = A X per-vector through the ELL SpMM kernel semantics.
+    pub fn spmm_ell(
+        &self,
+        ell: &Ell,
+        vectors: &[Vec<f64>],
+    ) -> Result<Vec<Vec<f64>>> {
+        let v = vectors.len();
+        anyhow::ensure!(v > 0, "need at least one vector");
+        for x in vectors {
+            anyhow::ensure!(x.len() == ell.n_cols, "vector length mismatch");
+        }
+        self.registry.pick_spmm(ell.n_rows, ell.k, v).ok_or_else(|| {
+            anyhow!("no SpMM bucket fits rows={} k={} v={v}", ell.n_rows, ell.k)
+        })?;
+        let mut out = Vec::with_capacity(v);
+        for x in vectors {
+            let xf: Vec<f32> = x.iter().map(|&a| a as f32).collect();
+            let mut y = vec![0.0f32; ell.n_rows];
+            Self::ell_spmv_f32(ell, &xf, &mut y);
+            out.push(y.iter().map(|&a| a as f64).collect());
+        }
+        Ok(out)
+    }
+
+    /// Route a CSR matrix to the best kernel: ELL when padding is
+    /// acceptable, the segmented kernel otherwise (identical routing
+    /// to the PJRT build).
+    pub fn spmv(&self, csr: &Csr, x: &[f64]) -> Result<Vec<f64>> {
+        let k = csr.max_row_nnz();
+        let dense_ok = self.registry.pick_ell(csr.n_rows, k).is_some();
+        if dense_ok && k > 0 {
+            let ell = Ell::from_csr(csr, None)
+                .map_err(|e| anyhow!("ell conversion: {e}"))?;
+            self.spmv_ell(&ell, x)
+        } else {
+            self.spmv_seg(csr, x)
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,186 @@
+//! Request queue and coalescing worker pool — the live (wall-clock)
+//! serving path.
+//!
+//! Producers push `y = A x` requests; workers pop the oldest request
+//! together with every other pending request against the *same*
+//! matrix (up to `max_batch`) and execute the group as one
+//! multi-vector SpMM. Deterministic replay (virtual time) lives in
+//! [`super::replay`]; this module is real concurrency for the
+//! `serve-bench` CLI and the throughput bench.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::ServeEngine;
+
+/// One enqueued `y = A x` request. The input vector is shared so many
+/// requests against the same matrix can reuse one allocation.
+pub struct Request {
+    pub matrix_id: usize,
+    pub x: Arc<Vec<f64>>,
+    pub submitted: Instant,
+}
+
+impl Request {
+    pub fn new(matrix_id: usize, x: impl Into<Arc<Vec<f64>>>) -> Self {
+        Request { matrix_id, x: x.into(), submitted: Instant::now() }
+    }
+}
+
+#[derive(Default)]
+struct QueueInner {
+    deque: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Thread-safe FIFO with same-matrix coalescing pops.
+#[derive(Default)]
+pub struct RequestQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+impl RequestQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&self, req: Request) {
+        let mut inner = self.inner.lock().unwrap();
+        assert!(!inner.closed, "push after close");
+        inner.deque.push_back(req);
+        drop(inner);
+        self.cv.notify_one();
+    }
+
+    /// No more pushes; blocked poppers drain and then observe `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().deque.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().deque.is_empty()
+    }
+
+    /// Pop the oldest request plus up to `max_batch - 1` later
+    /// requests against the same matrix (FIFO order preserved).
+    /// Blocks while the queue is open and empty; returns `None` once
+    /// closed and drained.
+    pub fn pop_batch(&self, max_batch: usize) -> Option<Vec<Request>> {
+        let max_batch = max_batch.max(1);
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(first) = inner.deque.pop_front() {
+                let wanted = first.matrix_id;
+                let mut batch = vec![first];
+                let mut rest = VecDeque::with_capacity(inner.deque.len());
+                while let Some(r) = inner.deque.pop_front() {
+                    if r.matrix_id == wanted && batch.len() < max_batch {
+                        batch.push(r);
+                    } else {
+                        rest.push_back(r);
+                    }
+                }
+                inner.deque = rest;
+                return Some(batch);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+}
+
+/// Drain `queue` with `workers` threads executing coalesced batches
+/// on `engine` until the queue is closed and empty. Latencies
+/// (submit → batch completion, wall clock) and batch stats land in
+/// the engine's telemetry. Returns the number of requests served.
+pub fn serve_queue(
+    engine: &ServeEngine,
+    queue: &RequestQueue,
+    workers: usize,
+    max_batch: usize,
+) -> usize {
+    let served = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers.max(1) {
+            s.spawn(|| {
+                while let Some(batch) = queue.pop_batch(max_batch) {
+                    let id = batch[0].matrix_id;
+                    let xs: Vec<&[f64]> =
+                        batch.iter().map(|r| r.x.as_slice()).collect();
+
+                    engine
+                        .execute_batch(id, &xs)
+                        .expect("registered matrix id");
+                    let done = Instant::now();
+                    for r in &batch {
+                        engine.telemetry.record_latency_ms(
+                            done.duration_since(r.submitted).as_secs_f64()
+                                * 1e3,
+                        );
+                    }
+                    served.fetch_add(
+                        batch.len(),
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                }
+            });
+        }
+    });
+    served.into_inner()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize) -> Request {
+        Request::new(id, vec![0.0])
+    }
+
+    #[test]
+    fn pop_batch_coalesces_same_matrix() {
+        let q = RequestQueue::new();
+        for id in [7, 7, 3, 7, 3] {
+            q.push(req(id));
+        }
+        q.close();
+        let b1 = q.pop_batch(8).unwrap();
+        assert_eq!(b1.iter().map(|r| r.matrix_id).collect::<Vec<_>>(), [7; 3]);
+        let b2 = q.pop_batch(8).unwrap();
+        assert_eq!(b2.iter().map(|r| r.matrix_id).collect::<Vec<_>>(), [3; 2]);
+        assert!(q.pop_batch(8).is_none());
+    }
+
+    #[test]
+    fn pop_batch_respects_max() {
+        let q = RequestQueue::new();
+        for _ in 0..5 {
+            q.push(req(1));
+        }
+        q.close();
+        assert_eq!(q.pop_batch(2).unwrap().len(), 2);
+        assert_eq!(q.pop_batch(2).unwrap().len(), 2);
+        assert_eq!(q.pop_batch(2).unwrap().len(), 1);
+        assert!(q.pop_batch(2).is_none());
+    }
+
+    #[test]
+    fn close_unblocks_poppers() {
+        let q = RequestQueue::new();
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.pop_batch(4));
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            q.close();
+            assert!(h.join().unwrap().is_none());
+        });
+    }
+}

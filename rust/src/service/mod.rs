@@ -1,0 +1,206 @@
+//! Batched SpMV serving subsystem — the request path of the engine.
+//!
+//! The paper's conclusion (and SpChar's after it) is that the right
+//! format/schedule/thread placement for SpMV is a *per-matrix*
+//! decision. A characterization harness makes that decision once per
+//! experiment; a serving system must make it once per *matrix* and
+//! then sustain heavy request traffic against it. This module adds
+//! that layer:
+//!
+//! * [`registry`] — content-fingerprinted store of loaded matrices
+//!   with precomputed features (load once, serve forever);
+//! * [`plan`] — per-fingerprint memoized execution plans: schedule
+//!   choice (heuristic thresholds or the learned
+//!   `coordinator::format_select` tree), thread count/placement, and
+//!   the pre-converted CSR5 structure when tiles win — with hit/miss
+//!   accounting;
+//! * [`batch`] — request queue + worker pool that coalesces
+//!   concurrent `y = A x` requests against the same matrix into one
+//!   multi-vector `exec::spmm_threaded` launch (single-vector
+//!   `spmv_threaded` for singletons);
+//! * [`workload`] — deterministic open-loop (Poisson, bursty) and
+//!   closed-loop traffic generators with uniform or Zipf matrix
+//!   popularity;
+//! * [`replay`] — virtual-time replay of a workload through the
+//!   engine: deterministic latency percentiles from an explicit cost
+//!   model, real kernel executions for measured throughput;
+//! * [`telemetry`] — the serving report (throughput, p50/p95/p99,
+//!   batch histogram, plan-cache hit rate) in table and JSON form.
+
+pub mod batch;
+pub mod plan;
+pub mod registry;
+pub mod replay;
+pub mod telemetry;
+pub mod workload;
+
+pub use batch::{serve_queue, Request, RequestQueue};
+pub use plan::{build_plan, Plan, PlanCache, PlanConfig, PlannedFormat, Planner};
+pub use registry::{fingerprint, MatrixEntry, MatrixRegistry};
+pub use replay::{replay, CostModel, ReplayConfig, ReplayReport};
+pub use telemetry::{ServeStats, Telemetry};
+pub use workload::{Arrivals, GenRequest, Popularity, WorkloadSpec};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::exec;
+use crate::sched::Schedule;
+
+/// Outcome of one (possibly coalesced) execution.
+pub struct BatchOutcome {
+    /// One output vector per request, in request order.
+    pub ys: Vec<Vec<f64>>,
+    pub wall_seconds: f64,
+    pub plan_hit: bool,
+    pub schedule: Schedule,
+    pub threads: usize,
+}
+
+/// The serving engine: registry + plan cache + telemetry. Shared by
+/// reference across worker threads (all interior state is locked).
+pub struct ServeEngine {
+    pub registry: MatrixRegistry,
+    pub plans: PlanCache,
+    pub telemetry: Telemetry,
+}
+
+impl ServeEngine {
+    pub fn new(
+        registry: MatrixRegistry,
+        planner: Planner,
+        cfg: PlanConfig,
+    ) -> Self {
+        ServeEngine {
+            registry,
+            plans: PlanCache::new(planner, cfg),
+            telemetry: Telemetry::new(),
+        }
+    }
+
+    /// Execute a coalesced group of `y = A x` requests against one
+    /// registered matrix. `xs.len() == 1` takes the single-vector
+    /// path; larger groups run as one multi-vector SpMM. Records
+    /// batch telemetry; latency accounting is the caller's (it knows
+    /// arrival times).
+    pub fn execute_batch(
+        &self,
+        matrix_id: usize,
+        xs: &[&[f64]],
+    ) -> Result<BatchOutcome> {
+        ensure!(!xs.is_empty(), "empty batch");
+        let entry = self
+            .registry
+            .get(matrix_id)
+            .ok_or_else(|| anyhow!("unknown matrix id {matrix_id}"))?;
+        for x in xs {
+            ensure!(
+                x.len() == entry.csr.n_cols,
+                "vector length {} != n_cols {} for matrix {}",
+                x.len(),
+                entry.csr.n_cols,
+                entry.name
+            );
+        }
+        let (plan, plan_hit) =
+            self.plans.plan_for(entry.fingerprint, &entry.csr);
+        let (ys, wall_seconds, threads) = if xs.len() == 1 {
+            let r = plan.execute(&entry.csr, xs[0]);
+            (vec![r.y], r.wall_seconds, r.threads)
+        } else {
+            let packed = exec::pack_vectors(xs);
+            let r = plan.execute_batch(&entry.csr, &packed, xs.len());
+            let ys = (0..xs.len()).map(|j| r.column(j)).collect();
+            (ys, r.wall_seconds, r.threads)
+        };
+        self.telemetry.record_batch(
+            matrix_id,
+            xs.len(),
+            wall_seconds,
+            2.0 * entry.csr.nnz() as f64 * xs.len() as f64,
+        );
+        Ok(BatchOutcome {
+            ys,
+            wall_seconds,
+            plan_hit,
+            schedule: plan.schedule,
+            threads,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generators;
+    use crate::util::rng::Pcg32;
+
+    fn engine_with(csrs: Vec<(&str, crate::sparse::Csr)>) -> ServeEngine {
+        let mut reg = MatrixRegistry::new();
+        for (name, csr) in csrs {
+            reg.register(name, csr);
+        }
+        ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default())
+    }
+
+    #[test]
+    fn engine_serves_singletons_and_batches() {
+        let mut rng = Pcg32::new(0xE0E0);
+        let csr = generators::random_uniform(200, 6, &mut rng);
+        let mut want = vec![0.0; 200];
+        let x: Vec<f64> = (0..200).map(|_| rng.gen_f64()).collect();
+        csr.spmv(&x, &mut want);
+        let engine = engine_with(vec![("m", csr)]);
+
+        let single = engine.execute_batch(0, &[&x]).unwrap();
+        assert!(!single.plan_hit, "first request must build the plan");
+        assert_eq!(single.ys.len(), 1);
+
+        let batch = engine.execute_batch(0, &[&x, &x, &x]).unwrap();
+        assert!(batch.plan_hit, "second request must hit the plan cache");
+        assert_eq!(batch.ys.len(), 3);
+        for y in single.ys.iter().chain(&batch.ys) {
+            for (i, (a, b)) in want.iter().zip(y).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                    "row {i}: {a} vs {b}"
+                );
+            }
+        }
+        let s = engine.telemetry.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 2);
+        assert_eq!(engine.plans.stats(), (1, 1));
+    }
+
+    #[test]
+    fn engine_rejects_bad_requests() {
+        let mut rng = Pcg32::new(0xE0E1);
+        let csr = generators::banded(64, 3, &mut rng);
+        let engine = engine_with(vec![("m", csr)]);
+        assert!(engine.execute_batch(9, &[&[0.0; 64]]).is_err());
+        assert!(engine.execute_batch(0, &[&[0.0; 5]]).is_err());
+        assert!(engine.execute_batch(0, &[]).is_err());
+    }
+
+    #[test]
+    fn worker_pool_end_to_end() {
+        let mut rng = Pcg32::new(0xE0E2);
+        let a = generators::banded(128, 3, &mut rng);
+        let b = generators::random_uniform(128, 4, &mut rng);
+        let engine = engine_with(vec![("a", a), ("b", b)]);
+        let queue = RequestQueue::new();
+        for i in 0..40 {
+            queue.push(Request::new(i % 2, vec![1.0; 128]));
+        }
+        queue.close();
+        let served = serve_queue(&engine, &queue, 2, 8);
+        assert_eq!(served, 40);
+        let s = engine.telemetry.snapshot();
+        assert_eq!(s.requests, 40);
+        assert_eq!(s.latencies_ms.len(), 40);
+        assert!(s.batches < 40, "coalescing must form some batches");
+        let (hits, misses) = engine.plans.stats();
+        assert_eq!(misses, 2, "one plan build per matrix");
+        assert!(hits > 0);
+    }
+}

@@ -1,0 +1,373 @@
+//! Per-matrix execution plans, memoized by content fingerprint.
+//!
+//! The paper's conclusion is that format/schedule choice must be made
+//! per matrix from its structure; SpChar (Sgherzi et al., 2023)
+//! argues the same with decision trees. Planning is expensive — it
+//! extracts static features, may run a learned selector, and converts
+//! the matrix to CSR5 when tiles win — so a serving deployment does
+//! it once on first request and reuses the plan for every subsequent
+//! request against the same fingerprint.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::format_select::{
+    candidates, label_matrix, static_features, FormatSelector,
+};
+use crate::corpus::suite::SuiteSpec;
+use crate::exec::{self, ExecResult, SpmmResult};
+use crate::sched::{partition, Partition, Schedule};
+use crate::sim::topology::Placement;
+use crate::sparse::{Csr, Csr5};
+
+/// Materialized storage format of a plan — conversion paid at plan
+/// build, not per request.
+#[derive(Clone, Debug)]
+pub enum PlannedFormat {
+    /// Serve straight from the registered CSR.
+    Csr,
+    /// Pre-converted CSR5 tiling (kept alongside the CSR).
+    Csr5(Arc<Csr5>),
+}
+
+/// One matrix's cached execution plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub schedule: Schedule,
+    pub n_threads: usize,
+    pub placement: Placement,
+    pub format: PlannedFormat,
+    /// Static feature vector the decision was made from (empty for
+    /// the all-zero matrix, which short-circuits to CSR static).
+    pub features: Vec<f64>,
+}
+
+impl Plan {
+    pub fn format_name(&self) -> String {
+        self.schedule.name()
+    }
+
+    /// Execute a single-vector request under this plan. Tile plans
+    /// reuse the pre-converted CSR5 (no per-request conversion).
+    pub fn execute(&self, csr: &Csr, x: &[f64]) -> ExecResult {
+        match (&self.format, self.schedule) {
+            (PlannedFormat::Csr5(c5), Schedule::Csr5Tiles { .. }) => {
+                let part = partition(csr, self.schedule, self.n_threads);
+                match part {
+                    Partition::Tiles { per_thread, .. } => {
+                        exec::spmv_csr5_threaded(c5, x, &per_thread)
+                    }
+                    Partition::Rows { .. } => {
+                        unreachable!("tile schedule yields tile partition")
+                    }
+                }
+            }
+            _ => exec::spmv_threaded(csr, x, self.schedule, self.n_threads),
+        }
+    }
+
+    /// Execute a coalesced batch of requests as one multi-vector SpMM
+    /// (`xs` in the interleaved `exec::pack_vectors` layout).
+    pub fn execute_batch(
+        &self,
+        csr: &Csr,
+        xs: &[f64],
+        batch: usize,
+    ) -> SpmmResult {
+        exec::spmm_threaded(csr, xs, batch, self.schedule, self.n_threads)
+    }
+}
+
+/// Plan-construction parameters shared by all matrices of a service.
+#[derive(Clone, Debug)]
+pub struct PlanConfig {
+    /// Threads per kernel launch. Defaults to 4 — one FT-2000+
+    /// core-group, and machine-independent so plans are reproducible.
+    pub n_threads: usize,
+    pub placement: Placement,
+    /// Tile size used when a CSR5 schedule is chosen.
+    pub csr5_tile_nnz: usize,
+}
+
+impl Default for PlanConfig {
+    fn default() -> Self {
+        PlanConfig {
+            n_threads: 4,
+            placement: Placement::CoreGroupFirst,
+            csr5_tile_nnz: 256,
+        }
+    }
+}
+
+/// How schedules are decided at plan-build time.
+pub enum Planner {
+    /// Static-feature thresholds (the paper's §5 decision rules:
+    /// `job_var >= 0.45` flags imbalance-limited matrices).
+    Heuristic,
+    /// Learned classification tree over static features
+    /// (`coordinator::format_select` trained on simulated labels).
+    Learned(FormatSelector),
+}
+
+impl Planner {
+    /// Train the learned selector on a (small) synthetic suite. The
+    /// labels come from the FT-2000+ simulator, so training cost
+    /// scales with the suite; `SuiteSpec::tiny()` trains in seconds.
+    pub fn train(spec: &SuiteSpec) -> Planner {
+        let samples: Vec<_> = spec
+            .entries()
+            .iter()
+            .map(|e| {
+                let m = spec.materialize(e);
+                label_matrix(&m.csr, &e.name)
+            })
+            .collect();
+        Planner::Learned(FormatSelector::train(&samples))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Planner::Heuristic => "heuristic",
+            Planner::Learned(_) => "learned",
+        }
+    }
+
+    /// Pure function of the matrix content: the schedule this planner
+    /// picks. Determinism here is what makes cached plans stable
+    /// across runs (tested in `tests/properties.rs`). `features` is
+    /// the `static_features` vector, computed once by the caller and
+    /// shared with both decision modes.
+    fn choose(&self, features: &[f64], tile_nnz: usize) -> Schedule {
+        let picked = match self {
+            Planner::Heuristic => {
+                // static_features order: [n_rows, nnz_avg, nnz_var,
+                // nnz_max_ratio, job_var_static, locality, x_miss_l1].
+                let job_var = features[4];
+                if job_var >= 0.45 {
+                    Schedule::Csr5Tiles { tile_nnz }
+                } else if job_var >= 0.30 {
+                    Schedule::CsrRowBalanced
+                } else {
+                    Schedule::CsrRowStatic
+                }
+            }
+            Planner::Learned(sel) => {
+                let cands = candidates();
+                let k = sel.tree.predict(features);
+                cands[k.min(cands.len() - 1)]
+            }
+        };
+        // Normalize the tile size to the service-wide configuration.
+        match picked {
+            Schedule::Csr5Tiles { .. } => Schedule::Csr5Tiles { tile_nnz },
+            s => s,
+        }
+    }
+}
+
+/// Build one plan (no caching — see [`PlanCache`]).
+pub fn build_plan(planner: &Planner, cfg: &PlanConfig, csr: &Csr) -> Plan {
+    if csr.nnz() == 0 {
+        // Degenerate matrix: nothing to balance, nothing to convert.
+        return Plan {
+            schedule: Schedule::CsrRowStatic,
+            n_threads: cfg.n_threads,
+            placement: cfg.placement,
+            format: PlannedFormat::Csr,
+            features: Vec::new(),
+        };
+    }
+    let features = static_features(csr);
+    let schedule = planner.choose(&features, cfg.csr5_tile_nnz);
+    let format = match schedule {
+        Schedule::Csr5Tiles { tile_nnz } => {
+            PlannedFormat::Csr5(Arc::new(Csr5::from_csr(csr, tile_nnz)))
+        }
+        _ => PlannedFormat::Csr,
+    };
+    Plan {
+        schedule,
+        n_threads: cfg.n_threads,
+        placement: cfg.placement,
+        format,
+        features,
+    }
+}
+
+#[derive(Default)]
+struct CacheInner {
+    plans: HashMap<u64, Arc<Plan>>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Thread-safe memoization of plans by matrix fingerprint, with
+/// hit/miss accounting (the serving report's cache line).
+pub struct PlanCache {
+    planner: Planner,
+    cfg: PlanConfig,
+    inner: Mutex<CacheInner>,
+}
+
+impl PlanCache {
+    pub fn new(planner: Planner, cfg: PlanConfig) -> Self {
+        PlanCache { planner, cfg, inner: Mutex::new(CacheInner::default()) }
+    }
+
+    pub fn config(&self) -> &PlanConfig {
+        &self.cfg
+    }
+
+    pub fn planner_name(&self) -> &'static str {
+        self.planner.name()
+    }
+
+    /// Get the plan for `fingerprint`, building it from `csr` on the
+    /// first request. Returns `(plan, hit)`. The (expensive) build
+    /// runs outside the lock; if two threads race on the same new
+    /// fingerprint the first insert wins — both builds produce the
+    /// identical plan, so the race is benign.
+    pub fn plan_for(&self, fp: u64, csr: &Csr) -> (Arc<Plan>, bool) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(p) = inner.plans.get(&fp) {
+                let p = p.clone();
+                inner.hits += 1;
+                return (p, true);
+            }
+        }
+        let built = Arc::new(build_plan(&self.planner, &self.cfg, csr));
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(p) = inner.plans.get(&fp) {
+            // Lost the build race: the winner's identical plan is
+            // already cached, so this request still counts as a hit
+            // (misses == distinct plan builds).
+            let p = p.clone();
+            inner.hits += 1;
+            return (p, true);
+        }
+        inner.misses += 1;
+        inner.plans.insert(fp, built.clone());
+        (built, false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().plans.is_empty()
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{generators, NamedMatrix};
+    use crate::service::registry::fingerprint;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn heuristic_picks_csr5_for_imbalance() {
+        let csr = NamedMatrix::Exdata1.generate();
+        let plan =
+            build_plan(&Planner::Heuristic, &PlanConfig::default(), &csr);
+        assert!(
+            matches!(plan.schedule, Schedule::Csr5Tiles { .. }),
+            "exdata_1 (one thread owns >99% of nnz) must get tiles: {:?}",
+            plan.schedule
+        );
+        assert!(matches!(plan.format, PlannedFormat::Csr5(_)));
+    }
+
+    #[test]
+    fn heuristic_keeps_csr_for_regular() {
+        let csr = generators::stencil(4096, 5);
+        let plan =
+            build_plan(&Planner::Heuristic, &PlanConfig::default(), &csr);
+        assert_eq!(plan.schedule, Schedule::CsrRowStatic);
+        assert!(matches!(plan.format, PlannedFormat::Csr));
+    }
+
+    #[test]
+    fn plan_execution_matches_reference() {
+        let mut rng = Pcg32::new(0x9A17);
+        for csr in [
+            NamedMatrix::Exdata1.generate(),
+            generators::random_uniform(500, 8, &mut rng),
+            Csr::zero(64, 64),
+        ] {
+            let plan =
+                build_plan(&Planner::Heuristic, &PlanConfig::default(), &csr);
+            let x: Vec<f64> =
+                (0..csr.n_cols).map(|_| rng.gen_f64() - 0.5).collect();
+            let mut want = vec![0.0; csr.n_rows];
+            csr.spmv(&x, &mut want);
+            let got = plan.execute(&csr, &x);
+            for (i, (a, b)) in want.iter().zip(&got.y).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                    "row {i}: {a} vs {b} under {:?}",
+                    plan.schedule
+                );
+            }
+            // Batch path agrees column-by-column.
+            let xs = exec::pack_vectors(&[x.clone(), x.clone()]);
+            let batch = plan.execute_batch(&csr, &xs, 2);
+            for j in 0..2 {
+                for (i, (a, b)) in
+                    want.iter().zip(&batch.column(j)).enumerate()
+                {
+                    assert!(
+                        (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                        "batch col {j} row {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let mut rng = Pcg32::new(0x9A18);
+        let a = generators::banded(256, 3, &mut rng);
+        let b = generators::random_uniform(256, 4, &mut rng);
+        let cache =
+            PlanCache::new(Planner::Heuristic, PlanConfig::default());
+        let (fa, fb) = (fingerprint(&a), fingerprint(&b));
+        let (_, h1) = cache.plan_for(fa, &a);
+        let (_, h2) = cache.plan_for(fa, &a);
+        let (_, h3) = cache.plan_for(fb, &b);
+        assert!(!h1 && h2 && !h3);
+        assert_eq!(cache.stats(), (1, 2));
+        assert_eq!(cache.len(), 2);
+        assert!((cache.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_plan_is_stable() {
+        let csr = NamedMatrix::Exdata1.generate();
+        let fp = fingerprint(&csr);
+        let cache =
+            PlanCache::new(Planner::Heuristic, PlanConfig::default());
+        let (p1, _) = cache.plan_for(fp, &csr);
+        let (p2, _) = cache.plan_for(fp, &csr);
+        assert!(Arc::ptr_eq(&p1, &p2), "second request must reuse the plan");
+        assert_eq!(p1.schedule, p2.schedule);
+    }
+}

@@ -1,0 +1,216 @@
+//! Matrix registry — content-fingerprinted store of servable matrices.
+//!
+//! A serving deployment loads each matrix once (from the synthetic
+//! corpus or a MatrixMarket file), pays the feature-extraction cost
+//! once, and addresses it by a stable id afterwards. Registration is
+//! idempotent: re-registering identical content returns the existing
+//! id, so the plan cache keyed by fingerprint never rebuilds a plan
+//! for a matrix it has already seen under another name.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::corpus::suite::SuiteSpec;
+use crate::sparse::{mm, Csr, MatrixFeatures};
+
+/// Content fingerprint of a CSR matrix: FNV-1a over the dimensions,
+/// row pointers, column indices, and value bit patterns. Stable
+/// across processes (no address-dependent state), so plans keyed by
+/// it are reproducible run to run.
+pub fn fingerprint(csr: &Csr) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    mix(csr.n_rows as u64);
+    mix(csr.n_cols as u64);
+    mix(csr.nnz() as u64);
+    for &p in &csr.ptr {
+        mix(p as u64);
+    }
+    for &c in &csr.indices {
+        mix(c as u64);
+    }
+    for &v in &csr.data {
+        mix(v.to_bits());
+    }
+    h
+}
+
+/// One registered matrix with its precomputed serving metadata.
+#[derive(Clone, Debug)]
+pub struct MatrixEntry {
+    pub id: usize,
+    pub name: String,
+    pub fingerprint: u64,
+    pub csr: Csr,
+    pub features: MatrixFeatures,
+}
+
+/// The registry: id-addressable, deduplicated by content fingerprint.
+#[derive(Clone, Debug, Default)]
+pub struct MatrixRegistry {
+    entries: Vec<MatrixEntry>,
+    by_fingerprint: HashMap<u64, usize>,
+    by_name: HashMap<String, usize>,
+}
+
+impl MatrixRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Register a matrix; returns its id. Identical content (same
+    /// fingerprint) is deduplicated to the first id, regardless of
+    /// name.
+    pub fn register(&mut self, name: &str, csr: Csr) -> usize {
+        let fp = fingerprint(&csr);
+        if let Some(&id) = self.by_fingerprint.get(&fp) {
+            self.by_name.entry(name.to_string()).or_insert(id);
+            return id;
+        }
+        let id = self.entries.len();
+        let features = MatrixFeatures::extract(&csr);
+        self.entries.push(MatrixEntry {
+            id,
+            name: name.to_string(),
+            fingerprint: fp,
+            csr,
+            features,
+        });
+        self.by_fingerprint.insert(fp, id);
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn get(&self, id: usize) -> Option<&MatrixEntry> {
+        self.entries.get(id)
+    }
+
+    /// Panicking accessor for ids handed out by this registry.
+    pub fn entry(&self, id: usize) -> &MatrixEntry {
+        &self.entries[id]
+    }
+
+    pub fn lookup_name(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn ids(&self) -> Vec<usize> {
+        (0..self.entries.len()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &MatrixEntry> {
+        self.entries.iter()
+    }
+
+    pub fn total_nnz(&self) -> usize {
+        self.entries.iter().map(|e| e.csr.nnz()).sum()
+    }
+
+    /// Register up to `limit` matrices of a synthetic suite, sampled
+    /// with a deterministic stride so every structural class is
+    /// represented (suite entries are grouped by class). Returns the
+    /// registered ids in sampling order.
+    pub fn register_suite(
+        &mut self,
+        spec: &SuiteSpec,
+        limit: Option<usize>,
+    ) -> Vec<usize> {
+        let entries = spec.entries();
+        let total = entries.len();
+        let take = limit.unwrap_or(total).min(total).max(1);
+        let mut ids = Vec::with_capacity(take);
+        for i in 0..take {
+            let e = &entries[i * total / take];
+            let m = spec.materialize(e);
+            ids.push(self.register(&e.name, m.csr));
+        }
+        ids
+    }
+
+    /// Register a MatrixMarket file under its path as the name.
+    pub fn register_mtx(&mut self, path: &str) -> Result<usize> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {path}"))?;
+        let csr = mm::read_csr(f).map_err(|e| anyhow!("{path}: {e}"))?;
+        Ok(self.register(path, csr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generators;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn fingerprint_distinguishes_content() {
+        let mut rng = Pcg32::new(7);
+        let a = generators::banded(64, 3, &mut rng);
+        let b = generators::banded(64, 3, &mut rng); // different values
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_eq!(fingerprint(&a), fingerprint(&a.clone()));
+        // A value flip must change the fingerprint.
+        let mut c = a.clone();
+        c.data[0] += 1.0;
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+    }
+
+    #[test]
+    fn register_deduplicates_by_content() {
+        let mut rng = Pcg32::new(9);
+        let m = generators::random_uniform(128, 4, &mut rng);
+        let mut reg = MatrixRegistry::new();
+        let a = reg.register("first", m.clone());
+        let b = reg.register("alias", m);
+        assert_eq!(a, b);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.lookup_name("first"), Some(a));
+        assert_eq!(reg.lookup_name("alias"), Some(a));
+        assert_eq!(reg.entry(a).features.nnz, reg.entry(a).csr.nnz());
+    }
+
+    #[test]
+    fn register_suite_covers_classes() {
+        let mut reg = MatrixRegistry::new();
+        let spec = SuiteSpec::tiny();
+        let ids = reg.register_suite(&spec, Some(9));
+        assert_eq!(ids.len(), 9);
+        assert_eq!(reg.len(), 9);
+        // Stride sampling across class-grouped entries: names span
+        // more than one structural class.
+        let classes: std::collections::HashSet<String> = reg
+            .iter()
+            .map(|e| e.name.rsplitn(2, '_').nth(1).unwrap_or("").to_string())
+            .collect();
+        assert!(classes.len() >= 5, "classes: {classes:?}");
+    }
+
+    #[test]
+    fn register_suite_is_deterministic() {
+        let spec = SuiteSpec::tiny();
+        let mut a = MatrixRegistry::new();
+        let mut b = MatrixRegistry::new();
+        a.register_suite(&spec, Some(6));
+        b.register_suite(&spec, Some(6));
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.fingerprint, y.fingerprint);
+            assert_eq!(x.name, y.name);
+        }
+    }
+}

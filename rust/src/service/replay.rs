@@ -1,0 +1,491 @@
+//! Virtual-time replay of a workload through the serve engine.
+//!
+//! The queueing timeline (arrivals, batch formation, service,
+//! completion) runs in *virtual* time with an explicit cost model, so
+//! a replay with a fixed seed produces bit-identical batch
+//! composition and latency percentiles on any machine — the property
+//! the acceptance tests pin. The kernels still really execute
+//! (verifying the serving path and measuring achieved Gflops); the
+//! measured-throughput row of the report is the only
+//! machine-dependent output.
+//!
+//! Single virtual server, FIFO queue, same-matrix coalescing up to
+//! `max_batch` after a fixed batching window — the policy the live
+//! worker pool in [`super::batch`] implements in wall-clock time.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{ensure, Result};
+
+use crate::exec::SPMM_COL_BLOCK;
+use crate::util::json::Json;
+
+use super::telemetry::{batch_histogram_table, report_json, report_table};
+use super::workload::{Arrivals, GenRequest, WorkloadSpec};
+use super::{ServeEngine, ServeStats};
+
+/// Deterministic service-time model of one batched dispatch.
+///
+/// `dispatch` is the fixed per-launch cost (queue pop, plan lookup,
+/// thread wake). The kernel term charges streaming the matrix once
+/// per column block of the batch plus one FMA per nonzero per vector,
+/// divided across threads — the same structure as
+/// `exec::spmm_threaded`, which is why batching wins: one dispatch
+/// and one matrix stream serve many vectors.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub dispatch_s: f64,
+    /// Seconds per nonzero to stream A (per column block).
+    pub stream_a_s: f64,
+    /// Seconds per nonzero per vector for the FMA + x access.
+    pub fma_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { dispatch_s: 30e-6, stream_a_s: 0.4e-9, fma_s: 0.15e-9 }
+    }
+}
+
+impl CostModel {
+    pub fn service_s(&self, nnz: usize, batch: usize, threads: usize) -> f64 {
+        let blocks = batch.div_ceil(SPMM_COL_BLOCK).max(1) as f64;
+        let th = threads.max(1) as f64;
+        self.dispatch_s
+            + (nnz as f64 * blocks * self.stream_a_s
+                + nnz as f64 * batch as f64 * self.fma_s)
+                / th
+    }
+}
+
+/// Replay policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayConfig {
+    /// Largest same-matrix group one dispatch may coalesce.
+    pub max_batch: usize,
+    /// Virtual wait after the server frees up, letting concurrent
+    /// arrivals accumulate into a batch (open-loop modes).
+    pub batch_window_s: f64,
+    /// Really execute the kernels (measures achieved Gflops and
+    /// exercises the full serving path). `false` replays the queueing
+    /// model only.
+    pub execute: bool,
+    pub cost: CostModel,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            max_batch: 16,
+            batch_window_s: 200e-6,
+            execute: true,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+/// The finished replay: telemetry snapshot + cache accounting.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub stats: ServeStats,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Virtual makespan (last completion time).
+    pub duration_s: f64,
+    /// Number of matrices the workload was served from.
+    pub matrices: usize,
+}
+
+impl ReplayReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.duration_s > 0.0 {
+            self.stats.requests as f64 / self.duration_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn print(&self) {
+        report_table(
+            format!(
+                "Serving replay report ({} matrices served)",
+                self.matrices
+            ),
+            &self.stats,
+            self.cache_hits,
+            self.cache_misses,
+            self.duration_s,
+        )
+        .print();
+        if self.stats.batches > 0 {
+            batch_histogram_table(&self.stats).print();
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        report_json(
+            &self.stats,
+            self.cache_hits,
+            self.cache_misses,
+            self.duration_s,
+        )
+    }
+}
+
+/// Executes dispatches against the engine, memoizing one
+/// deterministic input vector per matrix.
+struct Dispatcher<'a> {
+    engine: &'a ServeEngine,
+    /// Maps workload matrix index -> registry id.
+    ids: &'a [usize],
+    execute: bool,
+    inputs: HashMap<usize, Vec<f64>>,
+}
+
+impl Dispatcher<'_> {
+    /// Dispatch a coalesced group of `size` requests against matrix
+    /// `matrix_idx`; returns `(threads, nnz)` for the cost model.
+    fn run(&mut self, matrix_idx: usize, size: usize) -> (usize, usize) {
+        let id = self.ids[matrix_idx];
+        let entry = self.engine.registry.entry(id);
+        let nnz = entry.csr.nnz();
+        if self.execute {
+            let n_cols = entry.csr.n_cols;
+            let x = self
+                .inputs
+                .entry(id)
+                .or_insert_with(|| vec![1.0; n_cols]);
+            let xs: Vec<&[f64]> = (0..size).map(|_| x.as_slice()).collect();
+            let out = self
+                .engine
+                .execute_batch(id, &xs)
+                .expect("replay serves only registered ids");
+            (out.threads, nnz)
+        } else {
+            let (plan, _) =
+                self.engine.plans.plan_for(entry.fingerprint, &entry.csr);
+            self.engine.telemetry.record_batch(id, size, 0.0, 0.0);
+            (plan.n_threads, nnz)
+        }
+    }
+}
+
+/// Replay `spec` against the engine over the registered `ids`
+/// (workload matrix index i -> ids[i]). The engine should be fresh —
+/// the report snapshots its cumulative telemetry and cache counters.
+pub fn replay(
+    engine: &ServeEngine,
+    ids: &[usize],
+    spec: &WorkloadSpec,
+    cfg: &ReplayConfig,
+) -> Result<ReplayReport> {
+    ensure!(!ids.is_empty(), "no matrices registered to serve");
+    ensure!(spec.requests > 0, "empty workload");
+    for &id in ids {
+        ensure!(
+            engine.registry.get(id).is_some(),
+            "unknown registry id {id}"
+        );
+    }
+    let reqs = spec.generate(ids.len());
+    let mut d = Dispatcher {
+        engine,
+        ids,
+        execute: cfg.execute,
+        inputs: HashMap::new(),
+    };
+    let duration_s = match spec.arrivals {
+        Arrivals::Closed { clients } => {
+            replay_closed(&mut d, &reqs, clients.max(1), cfg)
+        }
+        _ => replay_open(&mut d, &reqs, cfg),
+    };
+    let stats = engine.telemetry.snapshot();
+    let (cache_hits, cache_misses) = engine.plans.stats();
+    Ok(ReplayReport {
+        stats,
+        cache_hits,
+        cache_misses,
+        duration_s,
+        matrices: ids.len(),
+    })
+}
+
+/// Open-loop replay: arrivals are fixed by the workload; one virtual
+/// server batches what has queued while it was busy (plus the batch
+/// window) and coalesces on the head request's matrix.
+fn replay_open(
+    d: &mut Dispatcher,
+    reqs: &[GenRequest],
+    cfg: &ReplayConfig,
+) -> f64 {
+    let n = reqs.len();
+    let max_batch = cfg.max_batch.max(1);
+    let mut i = 0usize; // next arrival to admit
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut t = 0.0f64; // server-free time
+    let mut makespan = 0.0f64;
+    while i < n || !queue.is_empty() {
+        if queue.is_empty() {
+            // Idle server: jump to the next arrival.
+            t = t.max(reqs[i].arrival_s);
+        }
+        while i < n && reqs[i].arrival_s <= t {
+            queue.push_back(i);
+            i += 1;
+        }
+        // Hold the batch window, admitting late concurrent arrivals.
+        let t_dispatch = t + cfg.batch_window_s;
+        while i < n && reqs[i].arrival_s <= t_dispatch {
+            queue.push_back(i);
+            i += 1;
+        }
+        let head = queue.pop_front().expect("non-empty after admit");
+        let mid = reqs[head].matrix_idx;
+        let mut batch = vec![head];
+        let mut rest = VecDeque::with_capacity(queue.len());
+        for k in queue.drain(..) {
+            if reqs[k].matrix_idx == mid && batch.len() < max_batch {
+                batch.push(k);
+            } else {
+                rest.push_back(k);
+            }
+        }
+        queue = rest;
+        let (threads, nnz) = d.run(mid, batch.len());
+        let completion =
+            t_dispatch + cfg.cost.service_s(nnz, batch.len(), threads);
+        for &k in &batch {
+            d.engine.telemetry.record_latency_ms(
+                (completion - reqs[k].arrival_s) * 1e3,
+            );
+        }
+        t = completion;
+        makespan = completion;
+    }
+    makespan
+}
+
+/// Closed-loop replay: `clients` clients each keep one request
+/// outstanding, re-issuing the moment it completes; the matrix
+/// sequence is consumed in issue order. Concurrency, not an arrival
+/// rate, sets the load — batches form naturally once clients exceed
+/// one.
+fn replay_closed(
+    d: &mut Dispatcher,
+    reqs: &[GenRequest],
+    clients: usize,
+    cfg: &ReplayConfig,
+) -> f64 {
+    let n = reqs.len();
+    let max_batch = cfg.max_batch.max(1);
+    let mut seq = 0usize; // next matrix assignment
+    // Per client: Some((issue_time, matrix_idx)) while a request is
+    // outstanding.
+    let mut outstanding: Vec<Option<(f64, usize)>> = Vec::new();
+    for _ in 0..clients.min(n) {
+        outstanding.push(Some((0.0, reqs[seq].matrix_idx)));
+        seq += 1;
+    }
+    let mut t_free = 0.0f64;
+    let mut completed = 0usize;
+    while completed < n {
+        let earliest = outstanding
+            .iter()
+            .flatten()
+            .map(|o| o.0)
+            .fold(f64::INFINITY, f64::min);
+        let t_start = t_free.max(earliest);
+        // FIFO among requests issued by t_start (ties by client id).
+        let mut waiting: Vec<(f64, usize, usize)> = outstanding
+            .iter()
+            .enumerate()
+            .filter_map(|(c, o)| o.map(|(ti, m)| (ti, c, m)))
+            .filter(|&(ti, _, _)| ti <= t_start)
+            .collect();
+        waiting.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        let mid = waiting[0].2;
+        let batch: Vec<(f64, usize)> = waiting
+            .iter()
+            .filter(|&&(_, _, m)| m == mid)
+            .take(max_batch)
+            .map(|&(ti, c, _)| (ti, c))
+            .collect();
+        let (threads, nnz) = d.run(mid, batch.len());
+        let completion =
+            t_start + cfg.cost.service_s(nnz, batch.len(), threads);
+        for &(issue, c) in &batch {
+            d.engine
+                .telemetry
+                .record_latency_ms((completion - issue) * 1e3);
+            completed += 1;
+            outstanding[c] = if seq < n {
+                let m = reqs[seq].matrix_idx;
+                seq += 1;
+                Some((completion, m))
+            } else {
+                None
+            };
+        }
+        t_free = completion;
+    }
+    t_free
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generators;
+    use crate::service::{
+        MatrixRegistry, PlanConfig, Planner, Popularity, ServeEngine,
+        WorkloadSpec,
+    };
+    use crate::util::rng::Pcg32;
+
+    fn fresh_engine() -> (ServeEngine, Vec<usize>) {
+        let mut rng = Pcg32::new(0xAB1E);
+        let mut reg = MatrixRegistry::new();
+        let ids = vec![
+            reg.register("banded", generators::banded(256, 4, &mut rng)),
+            reg.register(
+                "random",
+                generators::random_uniform(256, 6, &mut rng),
+            ),
+            reg.register(
+                "skewed",
+                generators::dense_row_block(256, 2048, &mut rng),
+            ),
+        ];
+        (
+            ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default()),
+            ids,
+        )
+    }
+
+    fn zipf_spec(requests: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            requests,
+            popularity: Popularity::Zipf { s: 1.2 },
+            arrivals: Arrivals::Open { rate: 20_000.0 },
+            seed: 0x5EED,
+        }
+    }
+
+    #[test]
+    fn open_loop_replay_serves_everything() {
+        let (engine, ids) = fresh_engine();
+        let report = replay(
+            &engine,
+            &ids,
+            &zipf_spec(400),
+            &ReplayConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(report.stats.requests, 400);
+        assert_eq!(report.stats.latencies_ms.len(), 400);
+        assert!(report.duration_s > 0.0);
+        assert!(report.throughput_rps() > 0.0);
+        assert!(report.hit_rate() > 0.0, "repeated matrices must hit");
+        assert!(report.cache_misses as usize <= ids.len());
+        assert!(
+            report.stats.mean_batch() > 1.0,
+            "20k req/s against a 200 us batch window must coalesce: {}",
+            report.stats.mean_batch()
+        );
+        let p50 = report.stats.latency_percentile(50.0);
+        let p99 = report.stats.latency_percentile(99.0);
+        assert!(p50 > 0.0 && p99 >= p50);
+    }
+
+    #[test]
+    fn replay_is_deterministic_across_fresh_engines() {
+        let run = || {
+            let (engine, ids) = fresh_engine();
+            let cfg =
+                ReplayConfig { execute: false, ..ReplayConfig::default() };
+            replay(&engine, &ids, &zipf_spec(300), &cfg).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.stats.batches, b.stats.batches);
+        assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+        assert_eq!(a.cache_hits, b.cache_hits);
+        for (x, y) in a.stats.latencies_ms.iter().zip(&b.stats.latencies_ms)
+        {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Executing the kernels must not change the virtual timeline.
+        let (engine, ids) = fresh_engine();
+        let c = replay(
+            &engine,
+            &ids,
+            &zipf_spec(300),
+            &ReplayConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(a.duration_s.to_bits(), c.duration_s.to_bits());
+        assert_eq!(a.stats.batches, c.stats.batches);
+    }
+
+    #[test]
+    fn closed_loop_batches_with_many_clients() {
+        let (engine, ids) = fresh_engine();
+        let spec = WorkloadSpec {
+            requests: 300,
+            popularity: Popularity::Zipf { s: 1.4 },
+            arrivals: Arrivals::Closed { clients: 12 },
+            seed: 0x5EED,
+        };
+        let report =
+            replay(&engine, &ids, &spec, &ReplayConfig::default()).unwrap();
+        assert_eq!(report.stats.requests, 300);
+        assert!(
+            report.stats.mean_batch() > 1.5,
+            "12 closed-loop clients must coalesce: {}",
+            report.stats.mean_batch()
+        );
+        assert!(report.hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn cost_model_rewards_batching() {
+        let cm = CostModel::default();
+        let per_req_1 = cm.service_s(100_000, 1, 4);
+        let per_req_8 = cm.service_s(100_000, 8, 4) / 8.0;
+        assert!(
+            per_req_8 < per_req_1 / 2.0,
+            "batch of 8 must amortize: {per_req_8} vs {per_req_1}"
+        );
+        // Monotone in batch size.
+        assert!(cm.service_s(1000, 9, 4) > cm.service_s(1000, 8, 4));
+    }
+
+    #[test]
+    fn replay_rejects_bad_input() {
+        let (engine, _) = fresh_engine();
+        assert!(replay(
+            &engine,
+            &[],
+            &zipf_spec(10),
+            &ReplayConfig::default()
+        )
+        .is_err());
+        assert!(replay(
+            &engine,
+            &[99],
+            &zipf_spec(10),
+            &ReplayConfig::default()
+        )
+        .is_err());
+    }
+}

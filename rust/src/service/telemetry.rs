@@ -1,0 +1,278 @@
+//! Serving telemetry — batch/latency/cache accounting surfaced
+//! through `util::table` and `util::json` so the replay harness and
+//! the live worker-pool bench report the same schema.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// Aggregated serving counters (one snapshot == one report).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Batches of size 1 (fell back to single-vector SpMV).
+    pub singletons: u64,
+    /// Batch-size histogram: size -> count of batches.
+    pub batch_hist: BTreeMap<usize, u64>,
+    /// Requests per matrix id.
+    pub per_matrix: BTreeMap<usize, u64>,
+    /// Total measured kernel wall seconds.
+    pub exec_seconds: f64,
+    /// Total executed flops (2 * nnz * batch per dispatch).
+    pub flops: f64,
+    /// Per-request latencies in milliseconds (virtual in replay mode,
+    /// wall-clock in the live worker-pool mode).
+    pub latencies_ms: Vec<f64>,
+}
+
+impl ServeStats {
+    pub fn record_batch(
+        &mut self,
+        matrix_id: usize,
+        size: usize,
+        wall_seconds: f64,
+        flops: f64,
+    ) {
+        self.requests += size as u64;
+        self.batches += 1;
+        if size == 1 {
+            self.singletons += 1;
+        }
+        *self.batch_hist.entry(size).or_insert(0) += 1;
+        *self.per_matrix.entry(matrix_id).or_insert(0) += size as u64;
+        self.exec_seconds += wall_seconds;
+        self.flops += flops;
+    }
+
+    pub fn record_latency_ms(&mut self, ms: f64) {
+        self.latencies_ms.push(ms);
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn executed_gflops(&self) -> f64 {
+        if self.exec_seconds > 0.0 {
+            self.flops / self.exec_seconds / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.latencies_ms, p)
+    }
+}
+
+/// Shared-mutable telemetry for concurrent recorders.
+#[derive(Default)]
+pub struct Telemetry {
+    inner: Mutex<ServeStats>,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(
+        &self,
+        matrix_id: usize,
+        size: usize,
+        wall_seconds: f64,
+        flops: f64,
+    ) {
+        self.inner
+            .lock()
+            .unwrap()
+            .record_batch(matrix_id, size, wall_seconds, flops);
+    }
+
+    pub fn record_latency_ms(&self, ms: f64) {
+        self.inner.lock().unwrap().record_latency_ms(ms);
+    }
+
+    pub fn snapshot(&self) -> ServeStats {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// Render a serving report table from a stats snapshot plus the
+/// plan-cache accounting.
+pub fn report_table(
+    title: impl Into<String>,
+    stats: &ServeStats,
+    cache_hits: u64,
+    cache_misses: u64,
+    duration_s: f64,
+) -> Table {
+    let mut t = Table::new(title, &["metric", "value"]);
+    let thr = if duration_s > 0.0 {
+        stats.requests as f64 / duration_s
+    } else {
+        0.0
+    };
+    t.row(vec!["requests".into(), stats.requests.to_string()]);
+    t.row(vec!["batches".into(), stats.batches.to_string()]);
+    t.row(vec!["mean batch size".into(), format!("{:.2}", stats.mean_batch())]);
+    t.row(vec![
+        "singleton batches".into(),
+        format!(
+            "{} ({:.1}%)",
+            stats.singletons,
+            if stats.batches > 0 {
+                100.0 * stats.singletons as f64 / stats.batches as f64
+            } else {
+                0.0
+            }
+        ),
+    ]);
+    t.row(vec!["duration".into(), format!("{duration_s:.4} s")]);
+    t.row(vec!["throughput".into(), format!("{thr:.1} req/s")]);
+    for (label, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
+        t.row(vec![
+            format!("latency {label}"),
+            format!("{:.3} ms", stats.latency_percentile(p)),
+        ]);
+    }
+    t.row(vec![
+        "latency mean".into(),
+        format!("{:.3} ms", stats::mean(&stats.latencies_ms)),
+    ]);
+    let total = cache_hits + cache_misses;
+    t.row(vec![
+        "plan-cache hit rate".into(),
+        format!(
+            "{:.1}% ({cache_hits}/{total})",
+            if total > 0 {
+                100.0 * cache_hits as f64 / total as f64
+            } else {
+                0.0
+            }
+        ),
+    ]);
+    t.row(vec![
+        "executed".into(),
+        format!(
+            "{:.3} Gflop in {:.4} s kernel time ({:.3} Gflops)",
+            stats.flops / 1e9,
+            stats.exec_seconds,
+            stats.executed_gflops()
+        ),
+    ]);
+    t
+}
+
+/// Batch-size histogram as its own table (the report's second block).
+pub fn batch_histogram_table(stats: &ServeStats) -> Table {
+    let mut t =
+        Table::new("Batch-size histogram", &["batch size", "batches", "share"]);
+    for (&size, &count) in &stats.batch_hist {
+        t.row(vec![
+            size.to_string(),
+            count.to_string(),
+            format!("{:.1}%", 100.0 * count as f64 / stats.batches as f64),
+        ]);
+    }
+    t
+}
+
+/// JSON form of the serving report (machine-readable campaign files).
+pub fn report_json(
+    stats: &ServeStats,
+    cache_hits: u64,
+    cache_misses: u64,
+    duration_s: f64,
+) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("requests".into(), Json::Num(stats.requests as f64));
+    obj.insert("batches".into(), Json::Num(stats.batches as f64));
+    obj.insert("mean_batch".into(), Json::Num(stats.mean_batch()));
+    obj.insert("duration_s".into(), Json::Num(duration_s));
+    obj.insert(
+        "throughput_rps".into(),
+        Json::Num(if duration_s > 0.0 {
+            stats.requests as f64 / duration_s
+        } else {
+            0.0
+        }),
+    );
+    obj.insert(
+        "latency_ms".into(),
+        Json::Obj(
+            [
+                ("p50".to_string(), Json::Num(stats.latency_percentile(50.0))),
+                ("p95".to_string(), Json::Num(stats.latency_percentile(95.0))),
+                ("p99".to_string(), Json::Num(stats.latency_percentile(99.0))),
+                ("mean".to_string(), Json::Num(stats::mean(&stats.latencies_ms))),
+            ]
+            .into_iter()
+            .collect(),
+        ),
+    );
+    obj.insert("cache_hits".into(), Json::Num(cache_hits as f64));
+    obj.insert("cache_misses".into(), Json::Num(cache_misses as f64));
+    obj.insert(
+        "batch_hist".into(),
+        Json::Arr(
+            stats
+                .batch_hist
+                .iter()
+                .map(|(&s, &c)| {
+                    Json::Arr(vec![Json::Num(s as f64), Json::Num(c as f64)])
+                })
+                .collect(),
+        ),
+    );
+    obj.insert("executed_gflops".into(), Json::Num(stats.executed_gflops()));
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let t = Telemetry::new();
+        t.record_batch(0, 4, 0.5, 8e9);
+        t.record_batch(0, 1, 0.5, 1e9);
+        t.record_batch(3, 4, 0.0, 0.0);
+        t.record_latency_ms(1.0);
+        t.record_latency_ms(3.0);
+        let s = t.snapshot();
+        assert_eq!(s.requests, 9);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.singletons, 1);
+        assert_eq!(s.batch_hist.get(&4), Some(&2));
+        assert_eq!(s.per_matrix.get(&0), Some(&5));
+        assert!((s.mean_batch() - 3.0).abs() < 1e-12);
+        assert!((s.executed_gflops() - 9.0).abs() < 1e-12);
+        assert_eq!(s.latency_percentile(100.0), 3.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut s = ServeStats::default();
+        s.record_batch(0, 2, 0.001, 1e6);
+        s.record_latency_ms(0.5);
+        s.record_latency_ms(1.5);
+        let md = report_table("Serving report", &s, 3, 1, 2.0).to_markdown();
+        assert!(md.contains("plan-cache hit rate"));
+        assert!(md.contains("75.0%"));
+        assert!(md.contains("latency p99"));
+        let j = report_json(&s, 3, 1, 2.0);
+        assert_eq!(j.get("cache_hits").unwrap().as_f64(), Some(3.0));
+        assert!(j.get("latency_ms").unwrap().get("p50").is_some());
+        assert!(!batch_histogram_table(&s).is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! Deterministic traffic generators for the replay harness.
+//!
+//! A workload is (a) which matrix each request targets — uniform or
+//! Zipf-skewed popularity over the registered corpus, the skew real
+//! serving traffic shows — and (b) when requests arrive: open-loop
+//! Poisson, open-loop bursty (on/off modulated Poisson), or
+//! closed-loop (a fixed client population, arrivals driven by
+//! completions inside the replay engine). Everything is keyed by an
+//! explicit `util::rng` seed, so a replay is bit-reproducible.
+
+use crate::util::rng::Pcg32;
+
+/// Matrix-popularity distribution over `n` registered matrices.
+#[derive(Clone, Copy, Debug)]
+pub enum Popularity {
+    Uniform,
+    /// Zipf with exponent `s`: rank 0 (the first registered matrix)
+    /// is the most popular.
+    Zipf { s: f64 },
+}
+
+/// Arrival process of the request stream.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Open loop: Poisson arrivals at `rate` requests/second.
+    Open { rate: f64 },
+    /// Open loop, on/off bursts: within each `period_s`, the first
+    /// `duty` fraction arrives at `rate * burst`, the remainder at
+    /// `rate / burst`.
+    Bursty { rate: f64, burst: f64, period_s: f64, duty: f64 },
+    /// Closed loop: `clients` concurrent clients, each issuing its
+    /// next request the moment the previous one completes. Arrival
+    /// times are produced by the replay engine, not the generator.
+    Closed { clients: usize },
+}
+
+/// Full workload specification.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    pub requests: usize,
+    pub popularity: Popularity,
+    pub arrivals: Arrivals,
+    pub seed: u64,
+}
+
+/// One generated request: virtual arrival time (seconds; 0 for
+/// closed-loop, where the replay engine schedules issues) and the
+/// index into the served matrix-id list.
+#[derive(Clone, Copy, Debug)]
+pub struct GenRequest {
+    pub arrival_s: f64,
+    pub matrix_idx: usize,
+}
+
+impl WorkloadSpec {
+    /// Generate the request stream over `n_matrices` registered
+    /// matrices, sorted by arrival time.
+    pub fn generate(&self, n_matrices: usize) -> Vec<GenRequest> {
+        assert!(n_matrices > 0, "empty corpus");
+        let mut rng = Pcg32::new(self.seed);
+        let mut out = Vec::with_capacity(self.requests);
+        let mut t = 0.0f64;
+        for _ in 0..self.requests {
+            let matrix_idx = match self.popularity {
+                Popularity::Uniform => rng.gen_range(n_matrices),
+                Popularity::Zipf { s } => rng.gen_zipf(n_matrices, s),
+            };
+            let arrival_s = match self.arrivals {
+                Arrivals::Open { rate } => {
+                    t += exp_interval(&mut rng, rate);
+                    t
+                }
+                Arrivals::Bursty { rate, burst, period_s, duty } => {
+                    let burst = burst.max(1.0);
+                    let phase = (t / period_s.max(1e-9)).fract();
+                    let r = if phase < duty { rate * burst } else { rate / burst };
+                    t += exp_interval(&mut rng, r);
+                    t
+                }
+                Arrivals::Closed { .. } => 0.0,
+            };
+            out.push(GenRequest { arrival_s, matrix_idx });
+        }
+        out
+    }
+}
+
+/// Exponential inter-arrival sample for a Poisson process.
+fn exp_interval(rng: &mut Pcg32, rate: f64) -> f64 {
+    let rate = rate.max(1e-9);
+    let u = rng.gen_f64();
+    -(1.0 - u).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(pop: Popularity, arr: Arrivals) -> WorkloadSpec {
+        WorkloadSpec { requests: 2000, popularity: pop, arrivals: arr, seed: 42 }
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let s = spec(Popularity::Zipf { s: 1.2 }, Arrivals::Open { rate: 100.0 });
+        let a = s.generate(16);
+        let b = s.generate(16);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.matrix_idx, y.matrix_idx);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn zipf_concentrates_on_head() {
+        let s = spec(Popularity::Zipf { s: 1.3 }, Arrivals::Open { rate: 100.0 });
+        let reqs = s.generate(32);
+        // Continuous-approximation CDF puts ~53% of zipf(1.3) mass on
+        // the first 4 of 32 ranks; uniform would put 12.5%.
+        let head = reqs.iter().filter(|r| r.matrix_idx < 4).count();
+        assert!(
+            head > reqs.len() * 2 / 5,
+            "zipf head share too small: {head}/{}",
+            reqs.len()
+        );
+        assert!(reqs.iter().all(|r| r.matrix_idx < 32));
+    }
+
+    #[test]
+    fn uniform_spreads() {
+        let s = spec(Popularity::Uniform, Arrivals::Open { rate: 100.0 });
+        let reqs = s.generate(8);
+        let mut seen = [false; 8];
+        for r in &reqs {
+            seen[r.matrix_idx] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn open_arrivals_monotone_and_near_rate() {
+        let s = spec(Popularity::Uniform, Arrivals::Open { rate: 500.0 });
+        let reqs = s.generate(4);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        let span = reqs.last().unwrap().arrival_s;
+        let empirical = reqs.len() as f64 / span;
+        assert!(
+            (empirical / 500.0 - 1.0).abs() < 0.2,
+            "empirical rate {empirical} too far from 500"
+        );
+    }
+
+    #[test]
+    fn bursty_has_dense_and_sparse_stretches() {
+        let s = spec(
+            Popularity::Uniform,
+            Arrivals::Bursty { rate: 100.0, burst: 8.0, period_s: 1.0, duty: 0.5 },
+        );
+        let reqs = s.generate(4);
+        // Count arrivals in the on-phase vs off-phase of each period.
+        let (mut on, mut off) = (0usize, 0usize);
+        for r in &reqs {
+            if (r.arrival_s % 1.0) < 0.5 {
+                on += 1;
+            } else {
+                off += 1;
+            }
+        }
+        assert!(on > off * 4, "burstiness not visible: on={on} off={off}");
+    }
+
+    #[test]
+    fn closed_loop_has_zero_arrivals() {
+        let s = spec(Popularity::Uniform, Arrivals::Closed { clients: 8 });
+        assert!(s.generate(4).iter().all(|r| r.arrival_s == 0.0));
+    }
+}

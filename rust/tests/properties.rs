@@ -7,6 +7,7 @@ use ft2000_spmv::exec;
 use ft2000_spmv::prop_assert;
 use ft2000_spmv::reorder::locality_reorder;
 use ft2000_spmv::sched::{partition, Schedule};
+use ft2000_spmv::service;
 use ft2000_spmv::sim::topology::Placement;
 use ft2000_spmv::sparse::{Coo, Csr, Csr5, Ell, Hyb, MatrixFeatures};
 use ft2000_spmv::util::rng::Pcg32;
@@ -176,6 +177,75 @@ fn threaded_exec_matches_reference_everywhere() {
                 "row {i}: {a} vs {b}"
             );
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn spmm_matches_sequential_per_column() {
+    check("spmm-matches-per-column", 20, |rng| {
+        let csr = random_csr(rng);
+        let batch = 1 + rng.gen_range(12);
+        let vectors: Vec<Vec<f64>> = (0..batch)
+            .map(|_| {
+                (0..csr.n_cols).map(|_| rng.gen_f64() - 0.5).collect()
+            })
+            .collect();
+        let xs = exec::pack_vectors(&vectors);
+        let got = exec::spmm_threaded(
+            &csr,
+            &xs,
+            batch,
+            random_schedule(rng),
+            1 + rng.gen_range(6),
+        );
+        for (j, x) in vectors.iter().enumerate() {
+            let want = exec::spmv_sequential(&csr, x).y;
+            let col = got.column(j);
+            for (i, (a, b)) in want.iter().zip(&col).enumerate() {
+                prop_assert!(
+                    (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                    "col {j} row {i}: {a} vs {b}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_is_deterministic_per_fingerprint() {
+    check("plan-deterministic", 10, |rng| {
+        let csr = random_csr(rng);
+        let fp = service::fingerprint(&csr);
+        prop_assert!(
+            service::fingerprint(&csr.clone()) == fp,
+            "fingerprint must be content-addressed"
+        );
+        // Two independent caches (two fresh processes) must build the
+        // identical plan for the same fingerprint.
+        let fresh = || {
+            service::PlanCache::new(
+                service::Planner::Heuristic,
+                service::PlanConfig::default(),
+            )
+        };
+        let (a, b) = (fresh(), fresh());
+        let (pa, first_hit) = a.plan_for(fp, &csr);
+        let (pb, _) = b.plan_for(fp, &csr);
+        prop_assert!(!first_hit, "first request cannot hit");
+        prop_assert!(
+            pa.schedule == pb.schedule,
+            "{:?} vs {:?}",
+            pa.schedule,
+            pb.schedule
+        );
+        prop_assert!(pa.n_threads == pb.n_threads);
+        // A repeat against the same cache hits and returns the very
+        // same plan object.
+        let (pa2, hit) = a.plan_for(fp, &csr);
+        prop_assert!(hit);
+        prop_assert!(std::sync::Arc::ptr_eq(&pa, &pa2));
         Ok(())
     });
 }

@@ -1,0 +1,160 @@
+//! Integration tests of the serving subsystem: registry + plan cache
+//! + batched executor + replay harness, end to end.
+
+use ft2000_spmv::corpus::suite::SuiteSpec;
+use ft2000_spmv::corpus::NamedMatrix;
+use ft2000_spmv::service::{
+    build_plan, replay, Arrivals, MatrixRegistry, PlanConfig, Planner,
+    Popularity, ReplayConfig, ServeEngine, WorkloadSpec,
+};
+use ft2000_spmv::sparse::mm;
+use ft2000_spmv::util::json;
+
+fn tiny_engine(planner: Planner) -> (ServeEngine, Vec<usize>) {
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&SuiteSpec::tiny(), Some(9));
+    (ServeEngine::new(reg, planner, PlanConfig::default()), ids)
+}
+
+#[test]
+fn replay_zipf_open_loop_end_to_end() {
+    let (engine, ids) = tiny_engine(Planner::Heuristic);
+    let spec = WorkloadSpec {
+        requests: 500,
+        popularity: Popularity::Zipf { s: 1.2 },
+        arrivals: Arrivals::Open { rate: 10_000.0 },
+        seed: 0x5EED_2019,
+    };
+    let report =
+        replay(&engine, &ids, &spec, &ReplayConfig::default()).unwrap();
+    assert_eq!(report.stats.requests, 500);
+    assert_eq!(report.stats.latencies_ms.len(), 500);
+    assert!(
+        report.hit_rate() > 0.0,
+        "repeated matrices must hit the plan cache"
+    );
+    assert!(
+        report.cache_misses as usize <= ids.len(),
+        "at most one plan build per matrix"
+    );
+    assert!(report.throughput_rps() > 0.0);
+    let (p50, p99) = (
+        report.stats.latency_percentile(50.0),
+        report.stats.latency_percentile(99.0),
+    );
+    assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+    assert!(report.stats.executed_gflops() > 0.0, "kernels must really run");
+
+    // The JSON report parses with our own parser and round-trips the
+    // headline numbers.
+    let text = report.to_json().to_string();
+    let parsed = json::parse(&text).unwrap();
+    assert_eq!(parsed.get("requests").unwrap().as_usize(), Some(500));
+    assert!(parsed.get("latency_ms").unwrap().get("p99").is_some());
+    assert_eq!(
+        parsed.get("cache_misses").unwrap().as_usize(),
+        Some(report.cache_misses as usize)
+    );
+}
+
+#[test]
+fn replay_bursty_coalesces() {
+    let (engine, ids) = tiny_engine(Planner::Heuristic);
+    let spec = WorkloadSpec {
+        requests: 400,
+        popularity: Popularity::Zipf { s: 1.5 },
+        arrivals: Arrivals::Bursty {
+            rate: 5_000.0,
+            burst: 10.0,
+            period_s: 0.05,
+            duty: 0.3,
+        },
+        seed: 0xB0B0,
+    };
+    let report =
+        replay(&engine, &ids, &spec, &ReplayConfig::default()).unwrap();
+    assert_eq!(report.stats.requests, 400);
+    assert!(
+        report.stats.mean_batch() > 1.1,
+        "bursts against a busy server must coalesce: {}",
+        report.stats.mean_batch()
+    );
+    assert!(!report.stats.batch_hist.is_empty());
+}
+
+#[test]
+fn learned_planner_is_deterministic_and_correct() {
+    let spec = SuiteSpec::tiny();
+    let a = Planner::train(&spec);
+    let b = Planner::train(&spec);
+    for m in NamedMatrix::ALL {
+        let csr = m.generate();
+        let pa = build_plan(&a, &PlanConfig::default(), &csr);
+        let pb = build_plan(&b, &PlanConfig::default(), &csr);
+        assert_eq!(
+            pa.schedule,
+            pb.schedule,
+            "training must be deterministic ({})",
+            m.name()
+        );
+    }
+    // A learned plan must still compute the right answer on the
+    // imbalance pathology.
+    let csr = NamedMatrix::Exdata1.generate();
+    let plan = build_plan(&a, &PlanConfig::default(), &csr);
+    let x: Vec<f64> = (0..csr.n_cols).map(|i| (i % 7) as f64).collect();
+    let mut want = vec![0.0; csr.n_rows];
+    csr.spmv(&x, &mut want);
+    let got = plan.execute(&csr, &x);
+    for (i, (p, q)) in want.iter().zip(&got.y).enumerate() {
+        assert!(
+            (p - q).abs() < 1e-9 * (1.0 + p.abs()),
+            "row {i}: {p} vs {q} under {:?}",
+            plan.schedule
+        );
+    }
+}
+
+#[test]
+fn registry_serves_matrixmarket_files() {
+    let dir = std::env::temp_dir().join("ft2000_service_mtx_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.mtx");
+    let csr = NamedMatrix::Debr.generate();
+    {
+        let mut f =
+            std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        mm::write_csr(&mut f, &csr).unwrap();
+    }
+    let mut reg = MatrixRegistry::new();
+    let id = reg.register_mtx(path.to_str().unwrap()).unwrap();
+    assert_eq!(reg.entry(id).csr.nnz(), csr.nnz());
+    // Same content registered from memory deduplicates onto the same
+    // fingerprint entry.
+    let id2 = reg.register("debr-in-memory", csr.clone());
+    assert_eq!(id, id2);
+
+    let engine =
+        ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
+    let x = vec![1.0; csr.n_cols];
+    let out = engine
+        .execute_batch(id, &[x.as_slice(), x.as_slice()])
+        .unwrap();
+    let mut want = vec![0.0; csr.n_rows];
+    csr.spmv(&x, &mut want);
+    for y in &out.ys {
+        for (i, (p, q)) in want.iter().zip(y).enumerate() {
+            assert!(
+                (p - q).abs() < 1e-9 * (1.0 + p.abs()),
+                "row {i}: {p} vs {q}"
+            );
+        }
+    }
+    assert!(reg_missing_errors());
+}
+
+fn reg_missing_errors() -> bool {
+    MatrixRegistry::new()
+        .register_mtx("/nonexistent/path/m.mtx")
+        .is_err()
+}
