@@ -13,10 +13,14 @@
 
 mod common;
 
+use std::sync::Arc;
+
 use ft2000_spmv::exec;
+use ft2000_spmv::service;
 use ft2000_spmv::service::{
-    replay, Arrivals, MatrixRegistry, PlanConfig, Planner, Popularity,
-    ReplayConfig, ServeEngine, WorkloadSpec,
+    replay, serve_queue, Arrivals, MatrixRegistry, PlacementPolicy,
+    PlanConfig, Planner, Popularity, ReplayConfig, Request, RequestQueue,
+    ServeEngine, ShardConfig, ShardedServer, WorkloadSpec,
 };
 use ft2000_spmv::util::bench::{bench, black_box, BenchConfig};
 use ft2000_spmv::util::table::Table;
@@ -110,6 +114,101 @@ fn main() {
             report.stats.mean_batch(),
             100.0 * report.hit_rate(),
             report.stats.executed_gflops(),
+        );
+    }
+
+    // --- 3: sharded vs global serving, wall clock A/B -------------------
+    // Same Zipf request sequence pushed through (a) one global queue
+    // with one undifferentiated pool — the topology-blind baseline —
+    // and (b) the panel-sharded server (hot matrices replicated, cold
+    // homed, per-shard plan caches). Streaming-percentile telemetry
+    // in both.
+    println!();
+    println!("sharded vs global serving (same traffic, wall clock):");
+    let n_req = 1024usize;
+    let wl = WorkloadSpec {
+        requests: n_req,
+        popularity: Popularity::Zipf { s: 1.2 },
+        arrivals: Arrivals::Closed { clients: 8 },
+        seed: 0x5EED_2019,
+    };
+    for shards in [1usize, 8] {
+        let mut reg = MatrixRegistry::new();
+        let ids = reg.register_suite(&suite, Some(12));
+        let seq = wl.generate(ids.len());
+        let registry = Arc::new(reg);
+        let inputs: std::collections::HashMap<usize, Arc<Vec<f64>>> = ids
+            .iter()
+            .map(|&id| {
+                let n = registry.entry(id).csr.n_cols;
+                (id, Arc::new(vec![1.0f64; n]))
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let (served, merged) = if shards == 1 {
+            let engine = ServeEngine::shared(
+                registry.clone(),
+                Planner::Heuristic,
+                PlanConfig::default(),
+            );
+            let queue = RequestQueue::new();
+            let served = std::thread::scope(|s| {
+                s.spawn(|| {
+                    for r in &seq {
+                        let id = ids[r.matrix_idx];
+                        queue.push(Request::new(id, inputs[&id].clone()));
+                    }
+                    queue.close();
+                });
+                serve_queue(&engine, &queue, 8, 16)
+            });
+            (served, engine.telemetry.snapshot())
+        } else {
+            let weights =
+                wl.popularity.placement_weights(&ids, registry.len());
+            let server = ShardedServer::with_weights(
+                registry.clone(),
+                Planner::Heuristic,
+                PlanConfig::default(),
+                ShardConfig {
+                    shards,
+                    queue_cap: 0,
+                    workers_per_shard: 1,
+                    max_batch: 16,
+                    deadline_ms: 0.0,
+                    policy: PlacementPolicy::HotReplicate { hot: 2 },
+                },
+                &weights,
+            );
+            let served = std::thread::scope(|s| {
+                s.spawn(|| {
+                    for r in &seq {
+                        let id = ids[r.matrix_idx];
+                        server.submit(Request::new(id, inputs[&id].clone()));
+                    }
+                    server.close();
+                });
+                server.serve()
+            });
+            service::telemetry::shard_table(
+                &server.snapshots(t0.elapsed().as_secs_f64()),
+            )
+            .print();
+            (served, server.merged_stats())
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let label = if shards == 1 {
+            "global queue, 8 workers"
+        } else {
+            "8 shards x 1 worker"
+        };
+        println!(
+            "{label:<24} {:>9.1} req/s  p50 {:>8.3} ms  p99 {:>8.3} ms  \
+             mean batch {:>5.2}  ({served} served)",
+            n_req as f64 / wall,
+            merged.latency_percentile(50.0),
+            merged.latency_percentile(99.0),
+            merged.mean_batch(),
         );
     }
 }

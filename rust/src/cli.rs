@@ -17,6 +17,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::corpus::suite::SuiteSpec;
 use crate::corpus::NamedMatrix;
 use crate::sched::Schedule;
+use crate::service::PlacementPolicy;
 use crate::sim::topology::Placement;
 
 /// Parsed command line.
@@ -46,12 +47,19 @@ pub enum Command {
     /// Export the synthetic corpus as MatrixMarket files.
     Export { suite: SuiteSpec, dir: String },
     /// Batched-serving microbenchmark: SpMM vs repeated SpMV, plus a
-    /// live worker-pool throughput run.
+    /// live throughput run — sharded (panel-aware) by default, the
+    /// legacy global queue with `--shards 1`.
     ServeBench {
         suite: SuiteSpec,
         matrices: usize,
         batches: Vec<usize>,
         workers: usize,
+        /// Serving shards (modeled NUMA panels); 1 = legacy global
+        /// queue.
+        shards: usize,
+        /// Per-shard queue capacity (admission control); 0 = unbounded.
+        queue_cap: usize,
+        policy: PlacementPolicy,
     },
     /// Deterministic traffic replay through the serving engine.
     Replay {
@@ -67,6 +75,11 @@ pub enum Command {
         seed: u64,
         planner: PlannerKind,
         json: Option<String>,
+        /// >1 replays the stream through that many virtual panels.
+        shards: usize,
+        /// Virtual admission bound per server; 0 = unbounded.
+        queue_cap: usize,
+        policy: PlacementPolicy,
     },
     /// Print topology/provenance info.
     Info,
@@ -108,13 +121,18 @@ pub fn usage() -> &'static str {
      report   --named NAME | --mtx PATH  [--out FILE]\n\
      export   --suite tiny|fast|full --dir PATH\n\
      serve-bench --suite tiny|fast|full --matrices N (default 6)\n\
-     \u{20}        --batches 1,2,4,8,16  --workers W (default 2)\n\
+     \u{20}        --batches 1,2,4,8,16  --workers W (default 2, per shard)\n\
+     \u{20}        --shards N (default 8; 1 = legacy global queue)\n\
+     \u{20}        --queue-cap N (default 1024; 0 = unbounded)\n\
+     \u{20}        --policy home|replicate [--hot N]  matrix placement\n\
      replay   --suite tiny|fast|full   corpus scale (default fast)\n\
      \u{20}        --pattern uniform|zipf|bursty (default zipf)\n\
      \u{20}        --requests N (default 2000)  --matrices N (default 32)\n\
      \u{20}        --max-batch B (default 16)\n\
      \u{20}        --clients C (default 0 = open loop) --rate R (default 4000)\n\
      \u{20}        --seed S  --planner heuristic|learned (default learned)\n\
+     \u{20}        --shards N (default 1)  --queue-cap N (default 0)\n\
+     \u{20}        --policy home|replicate [--hot N]\n\
      \u{20}        --json PATH          dump the report as JSON\n\
      info"
 }
@@ -245,6 +263,18 @@ fn parse_planner(flags: &HashMap<String, String>) -> Result<PlannerKind> {
     }
 }
 
+fn parse_policy(
+    flags: &HashMap<String, String>,
+) -> Result<PlacementPolicy> {
+    match flags.get("policy").map(String::as_str).unwrap_or("replicate") {
+        "home" => Ok(PlacementPolicy::Home),
+        "replicate" => Ok(PlacementPolicy::HotReplicate {
+            hot: parse_usize(flags, "hot", 2)?,
+        }),
+        other => bail!("unknown policy '{other}' (home|replicate)"),
+    }
+}
+
 fn parse_named(name: &str) -> Result<NamedMatrix> {
     NamedMatrix::ALL
         .into_iter()
@@ -322,6 +352,9 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             matrices: parse_usize(&flags, "matrices", 6)?.max(1),
             batches: parse_batches(&flags)?,
             workers: parse_usize(&flags, "workers", 2)?.max(1),
+            shards: parse_usize(&flags, "shards", 8)?.max(1),
+            queue_cap: parse_usize(&flags, "queue-cap", 1024)?,
+            policy: parse_policy(&flags)?,
         },
         "replay" => Command::Replay {
             suite: parse_suite(&flags)?,
@@ -339,6 +372,9 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 .unwrap_or(0x5EED_2019),
             planner: parse_planner(&flags)?,
             json: flags.get("json").cloned(),
+            shards: parse_usize(&flags, "shards", 1)?.max(1),
+            queue_cap: parse_usize(&flags, "queue-cap", 0)?,
+            policy: parse_policy(&flags)?,
         },
         "info" => Command::Info,
         other => bail!("unknown command '{other}'\n{}", usage()),
@@ -418,15 +454,70 @@ mod tests {
     fn parses_serve_bench_defaults() {
         let cli = parse(&sv(&["serve-bench"])).unwrap();
         match cli.command {
-            Command::ServeBench { matrices, batches, workers, .. } => {
+            Command::ServeBench {
+                matrices,
+                batches,
+                workers,
+                shards,
+                queue_cap,
+                policy,
+                ..
+            } => {
                 assert_eq!(matrices, 6);
                 assert_eq!(batches, vec![1, 2, 4, 8, 16]);
                 assert_eq!(workers, 2);
+                assert_eq!(shards, 8);
+                assert_eq!(queue_cap, 1024);
+                assert_eq!(policy, PlacementPolicy::HotReplicate { hot: 2 });
             }
             _ => panic!("wrong command"),
         }
         assert!(parse(&sv(&["serve-bench", "--batches", "0,2"])).is_err());
         assert!(parse(&sv(&["serve-bench", "--batches", "x"])).is_err());
+    }
+
+    #[test]
+    fn parses_sharding_flags() {
+        let cli = parse(&sv(&[
+            "serve-bench",
+            "--shards",
+            "1",
+            "--queue-cap",
+            "0",
+            "--policy",
+            "home",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::ServeBench { shards, queue_cap, policy, .. } => {
+                assert_eq!(shards, 1);
+                assert_eq!(queue_cap, 0);
+                assert_eq!(policy, PlacementPolicy::Home);
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "replay",
+            "--shards",
+            "8",
+            "--queue-cap",
+            "256",
+            "--policy",
+            "replicate",
+            "--hot",
+            "3",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Replay { shards, queue_cap, policy, .. } => {
+                assert_eq!(shards, 8);
+                assert_eq!(queue_cap, 256);
+                assert_eq!(policy, PlacementPolicy::HotReplicate { hot: 3 });
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse(&sv(&["replay", "--policy", "nope"])).is_err());
+        assert!(parse(&sv(&["serve-bench", "--shards", "x"])).is_err());
     }
 
     #[test]

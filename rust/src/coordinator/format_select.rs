@@ -111,6 +111,7 @@ pub fn label_matrix(csr: &Csr, name: &str) -> LabeledMatrix {
 }
 
 /// The trained selector.
+#[derive(Clone)]
 pub struct FormatSelector {
     pub tree: ClassTree,
 }

@@ -22,8 +22,14 @@ pub struct ExecResult {
 }
 
 impl ExecResult {
+    /// Achieved Gflops; 0 when the timer resolved to zero (tiny
+    /// kernels on coarse clocks must not report `inf`).
     pub fn gflops(&self, nnz: usize) -> f64 {
-        2.0 * nnz as f64 / self.wall_seconds / 1e9
+        if self.wall_seconds > 0.0 {
+            2.0 * nnz as f64 / self.wall_seconds / 1e9
+        } else {
+            0.0
+        }
     }
 }
 
@@ -161,8 +167,13 @@ impl SpmmResult {
         (0..self.n_rows).map(|r| self.y[r * self.batch + j]).collect()
     }
 
+    /// Achieved Gflops; 0 when the timer resolved to zero.
     pub fn gflops(&self, nnz: usize) -> f64 {
-        2.0 * nnz as f64 * self.batch as f64 / self.wall_seconds / 1e9
+        if self.wall_seconds > 0.0 {
+            2.0 * nnz as f64 * self.batch as f64 / self.wall_seconds / 1e9
+        } else {
+            0.0
+        }
     }
 }
 
@@ -394,6 +405,21 @@ mod tests {
         let x = vec![1.0; 256];
         let r = spmv_threaded(&csr, &x, Schedule::CsrRowStatic, 2);
         assert!(r.gflops(csr.nnz()) > 0.0);
+    }
+
+    #[test]
+    fn gflops_guard_zero_wall_time() {
+        let r = ExecResult { y: vec![], wall_seconds: 0.0, threads: 1 };
+        assert_eq!(r.gflops(1_000_000), 0.0);
+        let s = SpmmResult {
+            y: vec![],
+            n_rows: 0,
+            batch: 4,
+            wall_seconds: 0.0,
+            threads: 1,
+        };
+        assert_eq!(s.gflops(1_000_000), 0.0);
+        assert!(s.gflops(1_000_000).is_finite());
     }
 
     fn random_vectors(rng: &mut Pcg32, n: usize, batch: usize) -> Vec<Vec<f64>> {

@@ -27,8 +27,9 @@
 //!   native f32 fallback without the `pjrt` feature);
 //! * [`service`] — the serving layer: matrix registry, per-matrix
 //!   plan cache, batched request executor (same-matrix coalescing
-//!   into multi-vector SpMM), deterministic traffic replay, and
-//!   serving telemetry.
+//!   into multi-vector SpMM), NUMA-panel-sharded serving with
+//!   placement policies and admission control, deterministic traffic
+//!   replay, and serving telemetry with streaming percentiles.
 
 pub mod analysis;
 pub mod cli;

@@ -15,9 +15,9 @@ use ft2000_spmv::mlmodel::{Forest, ForestParams};
 use ft2000_spmv::runtime::Runtime;
 use ft2000_spmv::sched::Schedule;
 use ft2000_spmv::service::{
-    self, serve_queue, Arrivals, MatrixRegistry, PlanConfig, Planner,
-    Popularity, ReplayConfig, Request, RequestQueue, ServeEngine,
-    WorkloadSpec,
+    self, serve_queue, Arrivals, MatrixRegistry, PlacementPolicy,
+    PlanConfig, Planner, Popularity, ReplayConfig, Request, RequestQueue,
+    ServeEngine, ShardConfig, ShardedServer, WorkloadSpec,
 };
 use ft2000_spmv::sim::topology::{Placement, Topology};
 use ft2000_spmv::sparse::{mm, Csr};
@@ -49,9 +49,17 @@ fn run(cli: Cli) -> Result<()> {
         Command::Verify { artifacts } => verify(&artifacts),
         Command::Report { source, out } => report_cmd(source, out),
         Command::Export { suite, dir } => export(suite, &dir),
-        Command::ServeBench { suite, matrices, batches, workers } => {
-            serve_bench(suite, matrices, batches, workers)
-        }
+        Command::ServeBench {
+            suite,
+            matrices,
+            batches,
+            workers,
+            shards,
+            queue_cap,
+            policy,
+        } => serve_bench(
+            suite, matrices, batches, workers, shards, queue_cap, policy,
+        ),
         Command::Replay {
             suite,
             pattern,
@@ -63,10 +71,24 @@ fn run(cli: Cli) -> Result<()> {
             seed,
             planner,
             json,
-        } => replay_cmd(
-            suite, pattern, requests, matrices, max_batch, clients, rate,
-            seed, planner, json,
-        ),
+            shards,
+            queue_cap,
+            policy,
+        } => replay_cmd(ReplayCmd {
+            suite,
+            pattern,
+            requests,
+            matrices,
+            max_batch,
+            clients,
+            rate,
+            seed,
+            planner,
+            json,
+            shards,
+            queue_cap,
+            policy,
+        }),
         Command::Info => info(),
     }
 }
@@ -76,6 +98,9 @@ fn serve_bench(
     matrices: usize,
     batches: Vec<usize>,
     workers: usize,
+    shards: usize,
+    queue_cap: usize,
+    policy: PlacementPolicy,
 ) -> Result<()> {
     eprintln!("registering {matrices} corpus matrices...");
     let mut reg = MatrixRegistry::new();
@@ -132,17 +157,15 @@ fn serve_bench(
     }
     t.print();
 
-    // --- live worker-pool throughput ---------------------------------
-    // Fresh engine so the report's cache/telemetry counters reflect
-    // only the live run, not the microbench warmup above.
+    // --- live throughput ---------------------------------------------
+    // Fresh registry so the report's cache/telemetry counters reflect
+    // only the live run, not the microbench warmup above. One poison
+    // request (unregistered matrix id) rides along in both modes: it
+    // must surface as an error/rejection in the report, never abort
+    // the run.
     let mut reg = MatrixRegistry::new();
     let ids = reg.register_suite(&suite, Some(matrices));
-    let engine =
-        ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
     let n_req = 512;
-    eprintln!(
-        "live queue: {n_req} zipf requests, {workers} workers, coalescing..."
-    );
     let wl = WorkloadSpec {
         requests: n_req,
         popularity: Popularity::Zipf { s: 1.2 },
@@ -150,44 +173,122 @@ fn serve_bench(
         seed: 0xBEEF,
     };
     let seq = wl.generate(ids.len());
-    // One shared input per matrix keeps the queue's memory flat.
+    let poison_id = usize::MAX;
+    // One shared input per matrix keeps the queues' memory flat.
     let inputs: std::collections::HashMap<usize, std::sync::Arc<Vec<f64>>> =
         ids.iter()
             .map(|&id| {
-                let n = engine.registry.entry(id).csr.n_cols;
+                let n = reg.entry(id).csr.n_cols;
                 (id, std::sync::Arc::new(vec![1.0f64; n]))
             })
             .collect();
-    let queue = RequestQueue::new();
-    let t0 = std::time::Instant::now();
-    let served = std::thread::scope(|s| {
-        s.spawn(|| {
-            for r in &seq {
-                let id = ids[r.matrix_idx];
-                queue.push(Request::new(id, inputs[&id].clone()));
-            }
-            queue.close();
+    if shards <= 1 {
+        // Legacy path: one global queue, one undifferentiated pool —
+        // the topology-blind baseline of the A/B.
+        let engine =
+            ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
+        eprintln!(
+            "live global queue: {n_req} zipf requests, {workers} workers..."
+        );
+        let queue = RequestQueue::bounded(queue_cap);
+        let t0 = std::time::Instant::now();
+        let served = std::thread::scope(|s| {
+            s.spawn(|| {
+                for (i, r) in seq.iter().enumerate() {
+                    if i == n_req / 2 {
+                        let _ = queue.try_push(Request::new(
+                            poison_id,
+                            vec![1.0; 8],
+                        ));
+                    }
+                    let id = ids[r.matrix_idx];
+                    if queue
+                        .try_push(Request::new(id, inputs[&id].clone()))
+                        .is_err()
+                    {
+                        engine.telemetry.record_rejected(1);
+                    }
+                }
+                queue.close();
+            });
+            serve_queue(&engine, &queue, workers, 16)
         });
-        serve_queue(&engine, &queue, workers, 16)
-    });
-    let wall = t0.elapsed().as_secs_f64();
-    let stats = engine.telemetry.snapshot();
-    let (hits, misses) = engine.plans.stats();
-    service::telemetry::report_table(
-        "Live worker-pool serving report (wall clock)",
-        &stats,
-        hits,
-        misses,
-        wall,
-    )
-    .print();
-    service::telemetry::batch_histogram_table(&stats).print();
-    eprintln!("served {served} requests in {wall:.3}s");
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = engine.telemetry.snapshot();
+        let (hits, misses) = engine.plans.stats();
+        service::telemetry::report_table(
+            "Live global-queue serving report (wall clock)",
+            &stats,
+            hits,
+            misses,
+            wall,
+        )
+        .print();
+        service::telemetry::batch_histogram_table(&stats).print();
+        eprintln!("served {served} requests in {wall:.3}s");
+    } else {
+        // Sharded path: one shard per modeled panel, matrices placed
+        // by expected request mass (Zipf rank), hot ones replicated.
+        let registry = std::sync::Arc::new(reg);
+        let weights = wl.popularity.placement_weights(&ids, registry.len());
+        let cfg = ShardConfig {
+            shards,
+            queue_cap,
+            workers_per_shard: workers,
+            max_batch: 16,
+            deadline_ms: 0.0,
+            policy,
+        };
+        let server = ShardedServer::with_weights(
+            registry.clone(),
+            Planner::Heuristic,
+            PlanConfig::default(),
+            cfg,
+            &weights,
+        );
+        eprintln!(
+            "live sharded serving: {n_req} zipf requests, {shards} shards x \
+             {workers} workers, queue cap {queue_cap}..."
+        );
+        let t0 = std::time::Instant::now();
+        let served = std::thread::scope(|s| {
+            s.spawn(|| {
+                for (i, r) in seq.iter().enumerate() {
+                    if i == n_req / 2 {
+                        server.submit(Request::new(poison_id, vec![1.0; 8]));
+                    }
+                    let id = ids[r.matrix_idx];
+                    server.submit(Request::new(id, inputs[&id].clone()));
+                }
+                server.close();
+            });
+            server.serve()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        service::telemetry::shard_table(&server.snapshots(wall)).print();
+        let merged = server.merged_stats();
+        let (hits, misses) = server.cache_totals();
+        service::telemetry::report_table(
+            format!("Sharded serving report ({shards} shards, wall clock)"),
+            &merged,
+            hits,
+            misses,
+            wall,
+        )
+        .print();
+        service::telemetry::batch_histogram_table(&merged).print();
+        eprintln!(
+            "served {served} requests in {wall:.3}s \
+             ({} rejected, {} errors)",
+            merged.rejected, merged.errors
+        );
+    }
     Ok(())
 }
 
-#[allow(clippy::too_many_arguments)]
-fn replay_cmd(
+/// Parsed `replay` invocation (bundled: the flag list outgrew a
+/// readable argument list).
+struct ReplayCmd {
     suite: SuiteSpec,
     pattern: TrafficPattern,
     requests: usize,
@@ -198,16 +299,21 @@ fn replay_cmd(
     seed: u64,
     planner: PlannerKind,
     json: Option<String>,
-) -> Result<()> {
-    eprintln!("registering up to {matrices} corpus matrices...");
+    shards: usize,
+    queue_cap: usize,
+    policy: PlacementPolicy,
+}
+
+fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
+    eprintln!("registering up to {} corpus matrices...", cmd.matrices);
     let mut reg = MatrixRegistry::new();
-    let ids = reg.register_suite(&suite, Some(matrices));
+    let ids = reg.register_suite(&cmd.suite, Some(cmd.matrices));
     eprintln!(
         "registered {} matrices ({} nonzeros total)",
         reg.len(),
         reg.total_nnz()
     );
-    let planner = match planner {
+    let planner = match cmd.planner {
         PlannerKind::Heuristic => Planner::Heuristic,
         PlannerKind::Learned => {
             eprintln!(
@@ -216,28 +322,58 @@ fn replay_cmd(
             Planner::train(&SuiteSpec::tiny())
         }
     };
-    let engine = ServeEngine::new(reg, planner, PlanConfig::default());
-    let popularity = match pattern {
+    let popularity = match cmd.pattern {
         TrafficPattern::Uniform => Popularity::Uniform,
         TrafficPattern::Zipf | TrafficPattern::Bursty => {
             Popularity::Zipf { s: 1.2 }
         }
     };
-    let arrivals = if clients > 0 {
-        Arrivals::Closed { clients }
-    } else if pattern == TrafficPattern::Bursty {
-        Arrivals::Bursty { rate, burst: 8.0, period_s: 0.5, duty: 0.3 }
+    let arrivals = if cmd.clients > 0 {
+        Arrivals::Closed { clients: cmd.clients }
+    } else if cmd.pattern == TrafficPattern::Bursty {
+        Arrivals::Bursty {
+            rate: cmd.rate,
+            burst: 8.0,
+            period_s: 0.5,
+            duty: 0.3,
+        }
     } else {
-        Arrivals::Open { rate }
+        Arrivals::Open { rate: cmd.rate }
     };
-    let wspec = WorkloadSpec { requests, popularity, arrivals, seed };
-    eprintln!("replaying {requests} requests ({arrivals:?}, {popularity:?}, seed {seed:#x})...");
-    let report = service::replay(
-        &engine,
-        &ids,
-        &wspec,
-        &ReplayConfig { max_batch, ..Default::default() },
-    )?;
+    let requests = cmd.requests;
+    let wspec =
+        WorkloadSpec { requests, popularity, arrivals, seed: cmd.seed };
+    let rcfg = ReplayConfig {
+        max_batch: cmd.max_batch,
+        queue_cap: cmd.queue_cap,
+        ..Default::default()
+    };
+    eprintln!(
+        "replaying {requests} requests ({arrivals:?}, {popularity:?}, \
+         seed {:#x}, {} shard(s))...",
+        cmd.seed, cmd.shards
+    );
+    if cmd.shards > 1 {
+        let registry = std::sync::Arc::new(reg);
+        let report = service::replay_sharded(
+            registry,
+            &planner,
+            &PlanConfig::default(),
+            &ids,
+            &wspec,
+            &rcfg,
+            cmd.shards,
+            cmd.policy,
+        )?;
+        report.print();
+        if let Some(path) = cmd.json {
+            std::fs::write(&path, report.to_json().to_string())?;
+            eprintln!("wrote {path}");
+        }
+        return Ok(());
+    }
+    let engine = ServeEngine::new(reg, planner, PlanConfig::default());
+    let report = service::replay(&engine, &ids, &wspec, &rcfg)?;
     report.print();
     println!(
         "plan cache: {} plans built ({} planner), hit rate {:.1}%",
@@ -245,7 +381,7 @@ fn replay_cmd(
         engine.plans.planner_name(),
         100.0 * report.hit_rate()
     );
-    if let Some(path) = json {
+    if let Some(path) = cmd.json {
         std::fs::write(&path, report.to_json().to_string())?;
         eprintln!("wrote {path}");
     }

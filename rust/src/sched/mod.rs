@@ -7,6 +7,7 @@
 //! included as baselines the paper mentions ("the overhead of thread
 //! communication with dynamic scheduling is nonnegligible").
 
+use crate::sim::topology::Topology;
 use crate::sparse::{Csr, Csr5};
 
 /// A work schedule for multi-threaded SpMV.
@@ -195,6 +196,36 @@ pub fn partition(csr: &Csr, schedule: Schedule, n_threads: usize) -> Partition {
     }
 }
 
+/// Core range `[c0, c1)` of the modeled NUMA panel(s) that serving
+/// shard `shard` of `n_shards` pins its workers to.
+///
+/// The paper's Fig 1/Fig 3 point: SpMV stops scaling once threads
+/// cross a panel (memory-domain) boundary, so the serving layer maps
+/// one shard per panel. With as many shards as panels (FT-2000+: 8x8)
+/// each shard owns exactly one panel; more shards than panels wrap
+/// round-robin; fewer shards split the panels into contiguous blocks
+/// so every core stays owned by exactly one shard.
+pub fn panel_core_range(
+    topo: &Topology,
+    shard: usize,
+    n_shards: usize,
+) -> (usize, usize) {
+    let span = topo.cores_per_mem_domain.max(1);
+    let panels = (topo.cores / span).max(1);
+    let n_shards = n_shards.max(1);
+    if n_shards >= panels {
+        let panel = shard % panels;
+        (panel * span, (panel + 1) * span)
+    } else {
+        let per = panels / n_shards;
+        let extra = panels % n_shards;
+        let s = shard.min(n_shards - 1);
+        let p0 = s * per + s.min(extra);
+        let p1 = p0 + per + usize::from(s < extra);
+        (p0 * span, p1 * span)
+    }
+}
+
 /// Convenience: build the CSR5 structure matching a tile schedule.
 pub fn csr5_for(csr: &Csr, schedule: Schedule) -> Option<Csr5> {
     match schedule {
@@ -319,6 +350,31 @@ mod tests {
         let p = partition(&csr, Schedule::CsrRowBalanced, 4);
         let jv = job_var(&p.thread_nnz(&csr));
         assert!((jv - 0.25).abs() < 0.02, "uniform should hit 0.25: {jv}");
+    }
+
+    #[test]
+    fn panel_ranges_partition_the_chip() {
+        let topo = Topology::ft2000plus();
+        // One shard per panel: shard i owns panel i's 8 cores.
+        for s in 0..8 {
+            assert_eq!(panel_core_range(&topo, s, 8), (8 * s, 8 * s + 8));
+        }
+        // More shards than panels wrap round-robin.
+        assert_eq!(panel_core_range(&topo, 9, 16), (8, 16));
+        // Fewer shards than panels: contiguous panel blocks covering
+        // every core exactly once.
+        for n_shards in [1usize, 2, 3, 5, 7] {
+            let mut next = 0;
+            for s in 0..n_shards {
+                let (c0, c1) = panel_core_range(&topo, s, n_shards);
+                assert_eq!(c0, next, "shard {s} of {n_shards}");
+                assert!(c1 > c0);
+                assert_eq!(c0 % 8, 0);
+                assert_eq!(c1 % 8, 0);
+                next = c1;
+            }
+            assert_eq!(next, topo.cores, "{n_shards} shards");
+        }
     }
 
     #[test]

@@ -2,13 +2,22 @@
 //! serving path.
 //!
 //! Producers push `y = A x` requests; workers pop the oldest request
-//! together with every other pending request against the *same*
-//! matrix (up to `max_batch`) and execute the group as one
-//! multi-vector SpMM. Deterministic replay (virtual time) lives in
-//! [`super::replay`]; this module is real concurrency for the
-//! `serve-bench` CLI and the throughput bench.
+//! together with the other pending requests against the *same* matrix
+//! (up to `max_batch`) and execute the group as one multi-vector
+//! SpMM. The queue indexes pending requests per matrix id, so a
+//! coalescing pop is O(batch) instead of rebuilding the whole backlog
+//! each time, and it can be constructed with a bounded capacity for
+//! admission control ([`RequestQueue::bounded`] + [`RequestQueue::try_push`]).
+//!
+//! Worker faults are data, not crashes: a request against an
+//! unregistered matrix id (or with a wrong-length vector) is counted
+//! in telemetry as an error outcome and the pool keeps serving.
+//! Deterministic replay (virtual time) lives in [`super::replay`];
+//! this module is real concurrency for the `serve-bench` CLI, the
+//! sharded server in [`super::shard`], and the throughput bench.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -28,30 +37,91 @@ impl Request {
     }
 }
 
+/// Why an admission attempt was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// The queue has been closed.
+    Closed,
+    /// A bounded queue is at capacity — backpressure.
+    Full,
+}
+
 #[derive(Default)]
 struct QueueInner {
-    deque: VecDeque<Request>,
+    /// Arrival order of every admitted request: `(seq, matrix_id)`.
+    /// Entries whose request was already consumed by an earlier
+    /// coalesced batch are skipped lazily on pop (each entry is
+    /// discarded at most once, so pops stay amortized O(batch)).
+    order: VecDeque<(u64, usize)>,
+    /// Pending requests per matrix id, FIFO within a matrix.
+    by_matrix: HashMap<usize, VecDeque<(u64, Request)>>,
+    len: usize,
+    next_seq: u64,
     closed: bool,
 }
 
-/// Thread-safe FIFO with same-matrix coalescing pops.
+/// Thread-safe FIFO with same-matrix coalescing pops and optional
+/// bounded capacity.
 #[derive(Default)]
 pub struct RequestQueue {
     inner: Mutex<QueueInner>,
     cv: Condvar,
+    /// 0 = unbounded.
+    cap: usize,
 }
 
 impl RequestQueue {
+    /// Unbounded queue (pushes never observe backpressure).
     pub fn new() -> Self {
         Self::default()
     }
 
-    pub fn push(&self, req: Request) {
+    /// Bounded queue: at most `cap` pending requests; `try_push`
+    /// returns [`PushError::Full`] beyond that. `cap == 0` means
+    /// unbounded.
+    pub fn bounded(cap: usize) -> Self {
+        RequestQueue { cap, ..Self::default() }
+    }
+
+    /// The configured capacity (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Non-blocking admission: enqueue or report why not. Rejected
+    /// requests are dropped (the caller accounts for them).
+    pub fn try_push(&self, req: Request) -> Result<(), PushError> {
         let mut inner = self.inner.lock().unwrap();
-        assert!(!inner.closed, "push after close");
-        inner.deque.push_back(req);
+        if inner.closed {
+            return Err(PushError::Closed);
+        }
+        if self.cap > 0 && inner.len >= self.cap {
+            return Err(PushError::Full);
+        }
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.order.push_back((seq, req.matrix_id));
+        inner
+            .by_matrix
+            .entry(req.matrix_id)
+            .or_default()
+            .push_back((seq, req));
+        inner.len += 1;
         drop(inner);
         self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Infallible push for unbounded queues; panics after `close` or
+    /// on a full bounded queue (use [`Self::try_push`] there).
+    pub fn push(&self, req: Request) {
+        match self.try_push(req) {
+            Ok(()) => {}
+            Err(PushError::Closed) => panic!("push after close"),
+            Err(PushError::Full) => {
+                panic!("push to a full bounded queue (use try_push)")
+            }
+        }
     }
 
     /// No more pushes; blocked poppers drain and then observe `None`.
@@ -61,11 +131,11 @@ impl RequestQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().deque.len()
+        self.inner.lock().unwrap().len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().deque.is_empty()
+        self.len() == 0
     }
 
     /// Pop the oldest request plus up to `max_batch - 1` later
@@ -76,18 +146,28 @@ impl RequestQueue {
         let max_batch = max_batch.max(1);
         let mut inner = self.inner.lock().unwrap();
         loop {
-            if let Some(first) = inner.deque.pop_front() {
-                let wanted = first.matrix_id;
-                let mut batch = vec![first];
-                let mut rest = VecDeque::with_capacity(inner.deque.len());
-                while let Some(r) = inner.deque.pop_front() {
-                    if r.matrix_id == wanted && batch.len() < max_batch {
-                        batch.push(r);
-                    } else {
-                        rest.push_back(r);
-                    }
+            while let Some(&(seq, mid)) = inner.order.front() {
+                let live = inner
+                    .by_matrix
+                    .get(&mid)
+                    .and_then(|q| q.front())
+                    .is_some_and(|&(s, _)| s == seq);
+                if !live {
+                    // Consumed by an earlier coalesced batch.
+                    inner.order.pop_front();
+                    continue;
                 }
-                inner.deque = rest;
+                inner.order.pop_front();
+                let q = inner.by_matrix.get_mut(&mid).expect("live head");
+                let take = q.len().min(max_batch);
+                let mut batch = Vec::with_capacity(take);
+                for _ in 0..take {
+                    batch.push(q.pop_front().expect("within q.len()").1);
+                }
+                if q.is_empty() {
+                    inner.by_matrix.remove(&mid);
+                }
+                inner.len -= take;
                 return Some(batch);
             }
             if inner.closed {
@@ -98,40 +178,87 @@ impl RequestQueue {
     }
 }
 
+/// One worker loop: drain `queue` into `engine` until closed and
+/// empty. Successful requests land latency samples and bump `served`;
+/// requests past `deadline_ms` (0 = no deadline) are shed; execution
+/// failures (unregistered matrix id, wrong vector length) are counted
+/// as error outcomes — the worker never panics on bad traffic.
+pub(crate) fn drain_worker(
+    engine: &ServeEngine,
+    queue: &RequestQueue,
+    max_batch: usize,
+    deadline_ms: f64,
+    served: &AtomicUsize,
+) {
+    while let Some(mut batch) = queue.pop_batch(max_batch) {
+        if deadline_ms > 0.0 {
+            let now = Instant::now();
+            let before = batch.len();
+            batch.retain(|r| {
+                now.duration_since(r.submitted).as_secs_f64() * 1e3
+                    <= deadline_ms
+            });
+            let shed = before - batch.len();
+            if shed > 0 {
+                engine.telemetry.record_shed(shed as u64);
+            }
+            if batch.is_empty() {
+                continue;
+            }
+        }
+        let id = batch[0].matrix_id;
+        let xs: Vec<&[f64]> = batch.iter().map(|r| r.x.as_slice()).collect();
+        match engine.execute_batch(id, &xs) {
+            Ok(_) => {
+                let done = Instant::now();
+                for r in &batch {
+                    engine.telemetry.record_latency_ms(
+                        done.duration_since(r.submitted).as_secs_f64() * 1e3,
+                    );
+                }
+                served.fetch_add(batch.len(), Ordering::Relaxed);
+            }
+            Err(_) if batch.len() > 1 => {
+                // One poison request (wrong vector length) failed the
+                // coalesced dispatch; isolate it by retrying singly so
+                // the valid co-batched requests still get answers.
+                for r in &batch {
+                    match engine.execute_batch(id, &[r.x.as_slice()]) {
+                        Ok(_) => {
+                            engine.telemetry.record_latency_ms(
+                                r.submitted.elapsed().as_secs_f64() * 1e3,
+                            );
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => engine.telemetry.record_errors(1),
+                    }
+                }
+            }
+            Err(_) => {
+                engine.telemetry.record_errors(1);
+            }
+        }
+    }
+}
+
 /// Drain `queue` with `workers` threads executing coalesced batches
 /// on `engine` until the queue is closed and empty. Latencies
 /// (submit → batch completion, wall clock) and batch stats land in
-/// the engine's telemetry. Returns the number of requests served.
+/// the engine's telemetry; failed requests are counted there as
+/// errors instead of panicking the pool. Returns the number of
+/// requests served successfully.
 pub fn serve_queue(
     engine: &ServeEngine,
     queue: &RequestQueue,
     workers: usize,
     max_batch: usize,
 ) -> usize {
-    let served = std::sync::atomic::AtomicUsize::new(0);
+    let served = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..workers.max(1) {
-            s.spawn(|| {
-                while let Some(batch) = queue.pop_batch(max_batch) {
-                    let id = batch[0].matrix_id;
-                    let xs: Vec<&[f64]> =
-                        batch.iter().map(|r| r.x.as_slice()).collect();
-
-                    engine
-                        .execute_batch(id, &xs)
-                        .expect("registered matrix id");
-                    let done = Instant::now();
-                    for r in &batch {
-                        engine.telemetry.record_latency_ms(
-                            done.duration_since(r.submitted).as_secs_f64()
-                                * 1e3,
-                        );
-                    }
-                    served.fetch_add(
-                        batch.len(),
-                        std::sync::atomic::Ordering::Relaxed,
-                    );
-                }
+            let served = &served;
+            s.spawn(move || {
+                drain_worker(engine, queue, max_batch, 0.0, served);
             });
         }
     });
@@ -144,6 +271,16 @@ mod tests {
 
     fn req(id: usize) -> Request {
         Request::new(id, vec![0.0])
+    }
+
+    /// Request whose payload encodes a producer-side sequence number
+    /// in `x[0]`, so tests can assert FIFO order per matrix.
+    fn seq_req(id: usize, seq: usize) -> Request {
+        Request::new(id, vec![seq as f64])
+    }
+
+    fn seq_of(r: &Request) -> usize {
+        r.x[0] as usize
     }
 
     #[test]
@@ -182,5 +319,140 @@ mod tests {
             q.close();
             assert!(h.join().unwrap().is_none());
         });
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let q = RequestQueue::bounded(3);
+        assert_eq!(q.capacity(), 3);
+        for i in 0..3 {
+            assert_eq!(q.try_push(seq_req(0, i)), Ok(()));
+        }
+        assert_eq!(q.try_push(seq_req(0, 3)), Err(PushError::Full));
+        assert_eq!(q.len(), 3);
+        // Popping frees capacity again.
+        let b = q.pop_batch(2).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(q.try_push(seq_req(1, 4)), Ok(()));
+        q.close();
+        assert_eq!(q.try_push(seq_req(1, 5)), Err(PushError::Closed));
+        // Close with backlog: everything still pending drains.
+        let drained: usize =
+            std::iter::from_fn(|| q.pop_batch(8)).map(|b| b.len()).sum();
+        assert_eq!(drained, 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn single_consumer_sees_fifo_per_matrix_and_drains_backlog() {
+        // Deep interleaved backlog, closed before any pop: the queue
+        // must drain completely, every batch single-matrix, FIFO
+        // within each matrix across batches, ceilings respected.
+        let q = RequestQueue::new();
+        let (matrices, per) = (5usize, 200usize);
+        let mut pushed = vec![0usize; matrices];
+        for i in 0..matrices * per {
+            let id = (i * 7 + i / 3) % matrices; // deterministic shuffle
+            q.push(seq_req(id, pushed[id]));
+            pushed[id] += 1;
+        }
+        q.close();
+        let mut next = vec![0usize; matrices];
+        let mut total = 0usize;
+        while let Some(batch) = q.pop_batch(8) {
+            assert!(!batch.is_empty() && batch.len() <= 8);
+            let id = batch[0].matrix_id;
+            for r in &batch {
+                assert_eq!(r.matrix_id, id, "mixed-matrix batch");
+                assert_eq!(seq_of(r), next[id], "FIFO violated for {id}");
+                next[id] += 1;
+            }
+            total += batch.len();
+        }
+        assert_eq!(total, matrices * per, "close-with-backlog must drain");
+        assert_eq!(next, pushed);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn mpmc_stress_preserves_batching_invariants() {
+        // 4 producers x 4 consumers over 3 matrices with a deep
+        // backlog: every request is popped exactly once, batches never
+        // mix matrices or exceed max_batch, and within a batch each
+        // producer's requests appear in the order it pushed them
+        // (per-matrix FIFO as observed through one coalesced pop).
+        let q = RequestQueue::new();
+        let (producers, per_producer, matrices) = (4usize, 500usize, 3usize);
+        let max_batch = 8usize;
+        let popped: Mutex<Vec<Vec<(usize, usize)>>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            let prod: Vec<_> = (0..producers)
+                .map(|p| {
+                    let q = &q;
+                    s.spawn(move || {
+                        for i in 0..per_producer {
+                            let id = (p + i) % matrices;
+                            // Globally unique tag per request.
+                            q.push(seq_req(id, p * per_producer + i));
+                        }
+                    })
+                })
+                .collect();
+            for _ in 0..4 {
+                let q = &q;
+                let popped = &popped;
+                s.spawn(move || {
+                    while let Some(batch) = q.pop_batch(max_batch) {
+                        let rows: Vec<(usize, usize)> = batch
+                            .iter()
+                            .map(|r| (r.matrix_id, seq_of(r)))
+                            .collect();
+                        popped.lock().unwrap().push(rows);
+                    }
+                });
+            }
+            for h in prod {
+                h.join().unwrap();
+            }
+            q.close();
+        });
+        let popped = popped.into_inner().unwrap();
+        let mut seen_per_matrix: Vec<Vec<usize>> = vec![Vec::new(); matrices];
+        let mut total = 0usize;
+        for batch in &popped {
+            assert!(!batch.is_empty() && batch.len() <= max_batch);
+            let id = batch[0].0;
+            let mut last_of: Vec<Option<usize>> = vec![None; producers];
+            for &(mid, tag) in batch {
+                assert_eq!(mid, id, "mixed-matrix batch");
+                let p = tag / per_producer;
+                if let Some(prev) = last_of[p] {
+                    assert!(
+                        tag > prev,
+                        "producer {p} order broken within a batch"
+                    );
+                }
+                last_of[p] = Some(tag);
+                seen_per_matrix[mid].push(tag);
+                total += 1;
+            }
+        }
+        assert_eq!(total, producers * per_producer, "requests lost or duped");
+        for (mid, seen) in seen_per_matrix.iter_mut().enumerate() {
+            seen.sort_unstable();
+            seen.dedup();
+            let expect: usize = (0..producers)
+                .map(|p| {
+                    (0..per_producer)
+                        .filter(|i| (p + i) % matrices == mid)
+                        .count()
+                })
+                .sum();
+            assert_eq!(
+                seen.len(),
+                expect,
+                "matrix {mid} request multiset wrong"
+            );
+        }
     }
 }

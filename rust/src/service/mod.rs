@@ -14,10 +14,16 @@
 //!   `coordinator::format_select` tree), thread count/placement, and
 //!   the pre-converted CSR5 structure when tiles win — with hit/miss
 //!   accounting;
-//! * [`batch`] — request queue + worker pool that coalesces
-//!   concurrent `y = A x` requests against the same matrix into one
-//!   multi-vector `exec::spmm_threaded` launch (single-vector
-//!   `spmv_threaded` for singletons);
+//! * [`batch`] — per-matrix-indexed request queue (optionally
+//!   bounded) + worker pool that coalesces concurrent `y = A x`
+//!   requests against the same matrix into one multi-vector
+//!   `exec::spmm_threaded` launch (single-vector `spmv_threaded` for
+//!   singletons); bad requests are error outcomes, not panics;
+//! * [`shard`] — the panel-aware sharded server: per-shard queues,
+//!   plan-cache views and telemetry, popularity/size placement with
+//!   hot-matrix replication, bounded-queue admission control and
+//!   deadline shedding (the paper's NUMA-panel topology, Fig 3,
+//!   applied to serving);
 //! * [`workload`] — deterministic open-loop (Poisson, bursty) and
 //!   closed-loop traffic generators with uniform or Zipf matrix
 //!   popularity;
@@ -31,15 +37,25 @@ pub mod batch;
 pub mod plan;
 pub mod registry;
 pub mod replay;
+pub mod shard;
 pub mod telemetry;
 pub mod workload;
 
-pub use batch::{serve_queue, Request, RequestQueue};
+pub use batch::{serve_queue, PushError, Request, RequestQueue};
 pub use plan::{build_plan, Plan, PlanCache, PlanConfig, PlannedFormat, Planner};
 pub use registry::{fingerprint, MatrixEntry, MatrixRegistry};
-pub use replay::{replay, CostModel, ReplayConfig, ReplayReport};
-pub use telemetry::{ServeStats, Telemetry};
+pub use replay::{
+    replay, replay_sharded, CostModel, ReplayConfig, ReplayReport,
+    ShardedReplayReport,
+};
+pub use shard::{
+    Admitted, PlacementPolicy, Shard, ShardConfig, ShardPlacement,
+    ShardedServer,
+};
+pub use telemetry::{ServeStats, ShardSnapshot, Telemetry};
 pub use workload::{Arrivals, GenRequest, Popularity, WorkloadSpec};
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -58,8 +74,11 @@ pub struct BatchOutcome {
 
 /// The serving engine: registry + plan cache + telemetry. Shared by
 /// reference across worker threads (all interior state is locked).
+/// The registry is behind an `Arc` so a sharded deployment can give
+/// every shard its own engine view (private plan cache + telemetry)
+/// over one loaded matrix store.
 pub struct ServeEngine {
-    pub registry: MatrixRegistry,
+    pub registry: Arc<MatrixRegistry>,
     pub plans: PlanCache,
     pub telemetry: Telemetry,
 }
@@ -67,6 +86,15 @@ pub struct ServeEngine {
 impl ServeEngine {
     pub fn new(
         registry: MatrixRegistry,
+        planner: Planner,
+        cfg: PlanConfig,
+    ) -> Self {
+        Self::shared(Arc::new(registry), planner, cfg)
+    }
+
+    /// Engine view over an already-shared registry (one per shard).
+    pub fn shared(
+        registry: Arc<MatrixRegistry>,
         planner: Planner,
         cfg: PlanConfig,
     ) -> Self {
@@ -202,5 +230,37 @@ mod tests {
         let (hits, misses) = engine.plans.stats();
         assert_eq!(misses, 2, "one plan build per matrix");
         assert!(hits > 0);
+    }
+
+    #[test]
+    fn poison_request_does_not_kill_the_pool() {
+        // Regression: a request against an unregistered matrix id used
+        // to `.expect()` inside a scoped worker and abort the whole
+        // server. It must be an error outcome while valid traffic
+        // keeps flowing.
+        let mut rng = Pcg32::new(0xE0E3);
+        let a = generators::banded(96, 3, &mut rng);
+        let engine = engine_with(vec![("a", a)]);
+        let queue = RequestQueue::new();
+        for i in 0..20 {
+            if i == 7 {
+                queue.push(Request::new(999, vec![1.0; 96])); // poison id
+            }
+            if i == 13 {
+                queue.push(Request::new(0, vec![1.0; 5])); // bad length
+            }
+            queue.push(Request::new(0, vec![1.0; 96]));
+        }
+        queue.close();
+        let served = serve_queue(&engine, &queue, 2, 4);
+        assert_eq!(served, 20, "valid traffic must all be served");
+        let s = engine.telemetry.snapshot();
+        assert_eq!(s.requests, 20);
+        assert!(
+            s.errors >= 2,
+            "both poison requests must be counted: {}",
+            s.errors
+        );
+        assert_eq!(s.digest.count, 20, "latencies only for served requests");
     }
 }

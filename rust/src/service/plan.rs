@@ -99,7 +99,10 @@ impl Default for PlanConfig {
     }
 }
 
-/// How schedules are decided at plan-build time.
+/// How schedules are decided at plan-build time. `Clone` so a sharded
+/// service can hand every shard its own planner for an independent
+/// per-shard plan-cache view.
+#[derive(Clone)]
 pub enum Planner {
     /// Static-feature thresholds (the paper's §5 decision rules:
     /// `job_var >= 0.45` flags imbalance-limited matrices).

@@ -14,13 +14,22 @@
 //! worker pool in [`super::batch`] implements in wall-clock time.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use crate::exec::SPMM_COL_BLOCK;
+use crate::sched::panel_core_range;
+use crate::sim::topology::Topology;
 use crate::util::json::Json;
 
-use super::telemetry::{batch_histogram_table, report_json, report_table};
+use super::plan::{PlanConfig, Planner};
+use super::registry::MatrixRegistry;
+use super::shard::{PlacementPolicy, ShardPlacement};
+use super::telemetry::{
+    batch_histogram_table, report_json, report_table, shard_table,
+    ShardSnapshot,
+};
 use super::workload::{Arrivals, GenRequest, WorkloadSpec};
 use super::{ServeEngine, ServeStats};
 
@@ -66,6 +75,11 @@ pub struct ReplayConfig {
     /// Virtual wait after the server frees up, letting concurrent
     /// arrivals accumulate into a batch (open-loop modes).
     pub batch_window_s: f64,
+    /// Admission bound on the virtual queue (open-loop modes):
+    /// arrivals beyond this many pending requests are rejected and
+    /// counted, mirroring the live bounded [`super::RequestQueue`].
+    /// 0 = unbounded.
+    pub queue_cap: usize,
     /// Really execute the kernels (measures achieved Gflops and
     /// exercises the full serving path). `false` replays the queueing
     /// model only.
@@ -78,6 +92,7 @@ impl Default for ReplayConfig {
         ReplayConfig {
             max_batch: 16,
             batch_window_s: 200e-6,
+            queue_cap: 0,
             execute: true,
             cost: CostModel::default(),
         }
@@ -220,6 +235,200 @@ pub fn replay(
     })
 }
 
+/// A finished sharded replay: one [`ReplayReport`] per shard plus the
+/// parallel makespan.
+#[derive(Clone, Debug)]
+pub struct ShardedReplayReport {
+    pub shards: Vec<ReplayReport>,
+    /// Modeled panel core ranges, parallel to `shards`.
+    pub cores: Vec<(usize, usize)>,
+    /// Makespan of the slowest shard (shards run in parallel).
+    pub duration_s: f64,
+}
+
+impl ShardedReplayReport {
+    /// Fleet roll-up across all shards.
+    pub fn merged(&self) -> ReplayReport {
+        let mut stats = ServeStats::default();
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let mut matrices = 0usize;
+        for r in &self.shards {
+            stats.merge(&r.stats);
+            hits += r.cache_hits;
+            misses += r.cache_misses;
+            matrices = matrices.max(r.matrices);
+        }
+        ReplayReport {
+            stats,
+            cache_hits: hits,
+            cache_misses: misses,
+            duration_s: self.duration_s,
+            matrices,
+        }
+    }
+
+    pub fn snapshots(&self) -> Vec<ShardSnapshot> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ShardSnapshot {
+                shard: i,
+                cores: self.cores[i],
+                stats: r.stats.clone(),
+                cache_hits: r.cache_hits,
+                cache_misses: r.cache_misses,
+                duration_s: r.duration_s,
+            })
+            .collect()
+    }
+
+    pub fn print(&self) {
+        shard_table(&self.snapshots()).print();
+        let merged = self.merged();
+        report_table(
+            format!(
+                "Sharded serving replay report ({} shards, merged)",
+                self.shards.len()
+            ),
+            &merged.stats,
+            merged.cache_hits,
+            merged.cache_misses,
+            self.duration_s,
+        )
+        .print();
+        if merged.stats.batches > 0 {
+            batch_histogram_table(&merged.stats).print();
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let merged = self.merged();
+        let mut obj = match merged.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!("report_json returns an object"),
+        };
+        obj.insert(
+            "shards".into(),
+            Json::Arr(self.shards.iter().map(|r| r.to_json()).collect()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// Sharded virtual-time replay: the generated request stream is
+/// routed to `shards` virtual panels by a [`ShardPlacement`] built
+/// from the workload's popularity weights (hot matrices replicated,
+/// cold ones homed), and each shard replays its sub-stream on its own
+/// engine view (shared registry, private plan cache) in parallel
+/// virtual time. The A/B against `replay` (one global server) is the
+/// point: same traffic, topology-aware vs topology-blind serving.
+#[allow(clippy::too_many_arguments)]
+pub fn replay_sharded(
+    registry: Arc<MatrixRegistry>,
+    planner: &Planner,
+    plan_cfg: &PlanConfig,
+    ids: &[usize],
+    spec: &WorkloadSpec,
+    cfg: &ReplayConfig,
+    shards: usize,
+    policy: PlacementPolicy,
+) -> Result<ShardedReplayReport> {
+    ensure!(!ids.is_empty(), "no matrices registered to serve");
+    ensure!(spec.requests > 0, "empty workload");
+    for &id in ids {
+        ensure!(registry.get(id).is_some(), "unknown registry id {id}");
+    }
+    let shards = shards.max(1);
+    let weights: Vec<f64> =
+        (0..ids.len()).map(|rank| spec.popularity.weight(rank)).collect();
+    let placement = ShardPlacement::build(ids, &weights, shards, policy);
+    let reqs = spec.generate(ids.len());
+    let mut per_shard: Vec<Vec<GenRequest>> = vec![Vec::new(); shards];
+    // Replicated (and unknown) matrices round-robin on their own
+    // counter — counting homed traffic too would alias periodic hot
+    // requests onto one shard.
+    let mut rr_hot = 0usize;
+    for r in &reqs {
+        let shard = match placement.home(ids[r.matrix_idx]) {
+            Some(s) => s,
+            None => {
+                let s = rr_hot % shards;
+                rr_hot += 1;
+                s
+            }
+        };
+        per_shard[shard].push(*r);
+    }
+    // Closed loop: split the client population across the non-empty
+    // shards proportionally to their traffic share, preserving the
+    // total when `clients >= non-empty shards` (below that each
+    // active shard still needs one virtual client to make progress,
+    // which inflates modeled concurrency — unavoidable in a
+    // split-population model).
+    let clients_per: Vec<usize> = match spec.arrivals {
+        Arrivals::Closed { clients } => {
+            let active: Vec<usize> = (0..shards)
+                .filter(|&s| !per_shard[s].is_empty())
+                .collect();
+            let mut by_size = active.clone();
+            by_size.sort_by_key(|&s| {
+                (std::cmp::Reverse(per_shard[s].len()), s)
+            });
+            let clients = clients.max(1);
+            let (base, rem) = if active.is_empty() {
+                (0, 0)
+            } else {
+                (clients / active.len(), clients % active.len())
+            };
+            let mut per = vec![0usize; shards];
+            for (rank, &s) in by_size.iter().enumerate() {
+                per[s] = (base + usize::from(rank < rem)).max(1);
+            }
+            per
+        }
+        _ => vec![0; shards],
+    };
+    let topo = Topology::ft2000plus();
+    let mut out = Vec::with_capacity(shards);
+    let mut cores = Vec::with_capacity(shards);
+    let mut makespan = 0.0f64;
+    for (s, sub) in per_shard.iter().enumerate() {
+        cores.push(panel_core_range(&topo, s, shards));
+        let engine = ServeEngine::shared(
+            registry.clone(),
+            planner.clone(),
+            plan_cfg.clone(),
+        );
+        let duration_s = if sub.is_empty() {
+            0.0
+        } else {
+            let mut d = Dispatcher {
+                engine: &engine,
+                ids,
+                execute: cfg.execute,
+                inputs: HashMap::new(),
+            };
+            match spec.arrivals {
+                Arrivals::Closed { .. } => {
+                    replay_closed(&mut d, sub, clients_per[s], cfg)
+                }
+                _ => replay_open(&mut d, sub, cfg),
+            }
+        };
+        makespan = makespan.max(duration_s);
+        let stats = engine.telemetry.snapshot();
+        let (cache_hits, cache_misses) = engine.plans.stats();
+        out.push(ReplayReport {
+            stats,
+            cache_hits,
+            cache_misses,
+            duration_s,
+            matrices: ids.len(),
+        });
+    }
+    Ok(ShardedReplayReport { shards: out, cores, duration_s: makespan })
+}
+
 /// Open-loop replay: arrivals are fixed by the workload; one virtual
 /// server batches what has queued while it was busy (plus the batch
 /// window) and coalesces on the head request's matrix.
@@ -230,6 +439,7 @@ fn replay_open(
 ) -> f64 {
     let n = reqs.len();
     let max_batch = cfg.max_batch.max(1);
+    let cap = cfg.queue_cap;
     let mut i = 0usize; // next arrival to admit
     let mut queue: VecDeque<usize> = VecDeque::new();
     let mut t = 0.0f64; // server-free time
@@ -240,13 +450,21 @@ fn replay_open(
             t = t.max(reqs[i].arrival_s);
         }
         while i < n && reqs[i].arrival_s <= t {
-            queue.push_back(i);
+            if cap > 0 && queue.len() >= cap {
+                d.engine.telemetry.record_rejected(1);
+            } else {
+                queue.push_back(i);
+            }
             i += 1;
         }
         // Hold the batch window, admitting late concurrent arrivals.
         let t_dispatch = t + cfg.batch_window_s;
         while i < n && reqs[i].arrival_s <= t_dispatch {
-            queue.push_back(i);
+            if cap > 0 && queue.len() >= cap {
+                d.engine.telemetry.record_rejected(1);
+            } else {
+                queue.push_back(i);
+            }
             i += 1;
         }
         let head = queue.pop_front().expect("non-empty after admit");
@@ -468,6 +686,102 @@ mod tests {
         );
         // Monotone in batch size.
         assert!(cm.service_s(1000, 9, 4) > cm.service_s(1000, 8, 4));
+    }
+
+    #[test]
+    fn bounded_virtual_queue_sheds_overload() {
+        let (engine, ids) = fresh_engine();
+        // Absurd arrival rate against a tiny admission bound: most of
+        // the stream must be rejected, the rest served normally.
+        let spec = WorkloadSpec {
+            requests: 500,
+            popularity: Popularity::Zipf { s: 1.2 },
+            arrivals: Arrivals::Open { rate: 10_000_000.0 },
+            seed: 0x5EED,
+        };
+        let cfg = ReplayConfig {
+            queue_cap: 4,
+            execute: false,
+            ..ReplayConfig::default()
+        };
+        let report = replay(&engine, &ids, &spec, &cfg).unwrap();
+        assert!(report.stats.rejected > 0, "cap 4 must reject");
+        assert_eq!(
+            report.stats.requests + report.stats.rejected,
+            500,
+            "every request either served or rejected"
+        );
+        // Unbounded default still serves everything.
+        let (engine2, ids2) = fresh_engine();
+        let cfg = ReplayConfig { execute: false, ..ReplayConfig::default() };
+        let r2 = replay(&engine2, &ids2, &spec, &cfg).unwrap();
+        assert_eq!(r2.stats.rejected, 0);
+        assert_eq!(r2.stats.requests, 500);
+    }
+
+    #[test]
+    fn sharded_replay_serves_everything_deterministically() {
+        use std::sync::Arc;
+
+        use crate::service::shard::PlacementPolicy;
+
+        let run = || {
+            let mut rng = Pcg32::new(0xAB1E);
+            let mut reg = MatrixRegistry::new();
+            let ids = vec![
+                reg.register("banded", generators::banded(256, 4, &mut rng)),
+                reg.register(
+                    "random",
+                    generators::random_uniform(256, 6, &mut rng),
+                ),
+                reg.register(
+                    "skewed",
+                    generators::dense_row_block(256, 2048, &mut rng),
+                ),
+            ];
+            let cfg =
+                ReplayConfig { execute: false, ..ReplayConfig::default() };
+            replay_sharded(
+                Arc::new(reg),
+                &Planner::Heuristic,
+                &PlanConfig::default(),
+                &ids,
+                &zipf_spec(400),
+                &cfg,
+                8,
+                PlacementPolicy::HotReplicate { hot: 1 },
+            )
+            .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.shards.len(), 8);
+        let merged = a.merged();
+        assert_eq!(merged.stats.requests, 400, "no request lost in routing");
+        assert_eq!(merged.stats.rejected, 0);
+        assert!(a.duration_s > 0.0);
+        // Hot matrix 0 (zipf head) is replicated: several shards see it.
+        let shards_with_head = a
+            .shards
+            .iter()
+            .filter(|r| r.stats.per_matrix.contains_key(&0))
+            .count();
+        assert!(
+            shards_with_head >= 4,
+            "replicated head on {shards_with_head} shards only"
+        );
+        // Deterministic: same seed, same timeline, bit for bit.
+        assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+        for (x, y) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(x.stats.batches, y.stats.batches);
+            assert_eq!(x.duration_s.to_bits(), y.duration_s.to_bits());
+        }
+        // The merged JSON carries the per-shard array.
+        let j = a.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(400));
+        assert_eq!(
+            j.get("shards").unwrap().as_arr().map(|a| a.len()),
+            Some(8)
+        );
     }
 
     #[test]

@@ -1,0 +1,539 @@
+//! Sharded, panel-aware serving — the topology-conscious request path.
+//!
+//! The paper's core scalability finding is that FT-2000+ SpMV stops
+//! scaling the moment threads cross one of the chip's 8 NUMA panels:
+//! memory traffic that leaves the local panel pays DCU hops and
+//! remote-DRAM latency. A serving engine built around one global
+//! queue and one undifferentiated worker pool is exactly that
+//! anti-pattern — every worker touches every matrix, so the working
+//! set sprays across all panels. This module shards the engine the
+//! way the chip is sharded:
+//!
+//! * one shard per modeled panel (default 8, like FT-2000+), each
+//!   with its own bounded [`RequestQueue`], pinned worker set
+//!   (modeled via [`crate::sched::panel_core_range`]), and its own
+//!   [`PlanCache`] + [`Telemetry`] view — no cross-shard locks on the
+//!   hot path;
+//! * a [`ShardPlacement`] policy that routes matrices to shards by
+//!   popularity/size: hot matrices are replicated across all shards
+//!   (they would overload any single panel), cold ones are homed to
+//!   exactly one shard by weighted bin packing (their CSR stays in
+//!   one panel's DRAM domain);
+//! * an admission controller: bounded per-shard queues reject excess
+//!   load ([`Admitted::Rejected`], counted in telemetry), and an
+//!   optional per-request deadline sheds stale backlog at pop time —
+//!   overload degrades throughput, it never panics the server.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::sched::panel_core_range;
+use crate::sim::topology::Topology;
+
+use super::batch::{drain_worker, PushError, Request, RequestQueue};
+use super::plan::{PlanConfig, Planner};
+use super::registry::MatrixRegistry;
+use super::telemetry::{ServeStats, ShardSnapshot};
+use super::ServeEngine;
+
+/// How matrices are assigned to shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Every matrix homed to exactly one shard (weighted bin packing:
+    /// heaviest matrices first onto the lightest shard).
+    Home,
+    /// The `hot` heaviest matrices replicated on every shard
+    /// (round-robin routed); the rest homed as in [`Self::Home`].
+    HotReplicate { hot: usize },
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Assignment {
+    Replicated,
+    Homed(usize),
+}
+
+/// The materialized matrix -> shard map.
+#[derive(Clone, Debug)]
+pub struct ShardPlacement {
+    shards: usize,
+    assignment: HashMap<usize, Assignment>,
+}
+
+impl ShardPlacement {
+    /// Build the placement for `ids` with per-matrix weights (request
+    /// mass, bytes, ... — only the ordering matters). Deterministic:
+    /// ties break on the lower matrix id.
+    pub fn build(
+        ids: &[usize],
+        weights: &[f64],
+        shards: usize,
+        policy: PlacementPolicy,
+    ) -> ShardPlacement {
+        assert_eq!(ids.len(), weights.len(), "one weight per matrix");
+        let shards = shards.max(1);
+        let mut ranked: Vec<(usize, f64)> =
+            ids.iter().copied().zip(weights.iter().copied()).collect();
+        ranked.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        });
+        let hot = match policy {
+            PlacementPolicy::Home => 0,
+            PlacementPolicy::HotReplicate { hot } => hot.min(ranked.len()),
+        };
+        let mut assignment = HashMap::with_capacity(ranked.len());
+        for &(id, _) in ranked.iter().take(hot) {
+            assignment.insert(id, Assignment::Replicated);
+        }
+        // Weighted bin packing for the cold tail: heaviest first onto
+        // the currently lightest shard.
+        let mut load = vec![0.0f64; shards];
+        for &(id, w) in ranked.iter().skip(hot) {
+            let s = (0..shards)
+                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                .unwrap_or(0);
+            load[s] += w.max(0.0);
+            assignment.insert(id, Assignment::Homed(s));
+        }
+        ShardPlacement { shards, assignment }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard a request against `matrix_id` is routed to. `salt`
+    /// spreads replicated (and unknown) matrices round-robin; homed
+    /// matrices always land on their home shard.
+    pub fn route(&self, matrix_id: usize, salt: usize) -> usize {
+        match self.assignment.get(&matrix_id) {
+            Some(Assignment::Homed(s)) => *s,
+            // Unknown ids still get a shard — the shard's executor
+            // rejects them as an error outcome, never a panic.
+            Some(Assignment::Replicated) | None => salt % self.shards,
+        }
+    }
+
+    pub fn is_replicated(&self, matrix_id: usize) -> bool {
+        matches!(
+            self.assignment.get(&matrix_id),
+            Some(Assignment::Replicated)
+        )
+    }
+
+    /// The home shard of a non-replicated matrix.
+    pub fn home(&self, matrix_id: usize) -> Option<usize> {
+        match self.assignment.get(&matrix_id) {
+            Some(Assignment::Homed(s)) => Some(*s),
+            _ => None,
+        }
+    }
+
+    /// Number of matrices homed to each shard.
+    pub fn homed_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.shards];
+        for a in self.assignment.values() {
+            if let Assignment::Homed(s) = a {
+                counts[*s] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Number of replicated (hot) matrices.
+    pub fn replicated_count(&self) -> usize {
+        self.assignment
+            .values()
+            .filter(|a| matches!(a, Assignment::Replicated))
+            .count()
+    }
+}
+
+/// Knobs of the sharded server.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Number of shards (modeled panels). FT-2000+ has 8.
+    pub shards: usize,
+    /// Per-shard queue capacity; 0 = unbounded (no admission control).
+    pub queue_cap: usize,
+    /// Worker threads per shard. The default of 2 workers x 4 plan
+    /// threads saturates one 8-core panel.
+    pub workers_per_shard: usize,
+    /// Largest same-matrix group one dispatch may coalesce.
+    pub max_batch: usize,
+    /// Shed requests older than this at pop time; 0 disables.
+    pub deadline_ms: f64,
+    pub policy: PlacementPolicy,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 8,
+            queue_cap: 1024,
+            workers_per_shard: 2,
+            max_batch: 16,
+            deadline_ms: 0.0,
+            policy: PlacementPolicy::HotReplicate { hot: 2 },
+        }
+    }
+}
+
+/// Outcome of one admission attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admitted {
+    /// Enqueued on this shard.
+    Shard(usize),
+    /// Refused by this shard's admission control (queue full or
+    /// closed); already counted in the shard's telemetry.
+    Rejected { shard: usize },
+}
+
+impl Admitted {
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, Admitted::Rejected { .. })
+    }
+}
+
+/// One shard: its own engine view (shared registry, private plan
+/// cache + telemetry), its own queue, its modeled panel cores.
+pub struct Shard {
+    pub engine: ServeEngine,
+    pub queue: RequestQueue,
+    /// Modeled panel core range `[c0, c1)` (see
+    /// [`crate::sched::panel_core_range`]); workers are *modeled* as
+    /// pinned there — std has no affinity API, the point is that each
+    /// shard's working set stays disjoint.
+    pub cores: (usize, usize),
+}
+
+/// The sharded serving engine.
+pub struct ShardedServer {
+    registry: Arc<MatrixRegistry>,
+    pub shards: Vec<Shard>,
+    pub placement: ShardPlacement,
+    pub cfg: ShardConfig,
+    rr: AtomicUsize,
+}
+
+impl ShardedServer {
+    /// Build with matrices weighted by size (nnz) — the placement
+    /// signal when traffic popularity is unknown.
+    pub fn new(
+        registry: Arc<MatrixRegistry>,
+        planner: Planner,
+        plan_cfg: PlanConfig,
+        cfg: ShardConfig,
+    ) -> Self {
+        let weights: Vec<f64> =
+            registry.iter().map(|e| e.csr.nnz() as f64).collect();
+        Self::with_weights(registry, planner, plan_cfg, cfg, &weights)
+    }
+
+    /// Build with explicit per-matrix weights (indexed by registry
+    /// id), e.g. expected request mass from a Zipf popularity model.
+    pub fn with_weights(
+        registry: Arc<MatrixRegistry>,
+        planner: Planner,
+        plan_cfg: PlanConfig,
+        mut cfg: ShardConfig,
+        weights: &[f64],
+    ) -> Self {
+        assert_eq!(
+            weights.len(),
+            registry.len(),
+            "one weight per registered matrix"
+        );
+        cfg.shards = cfg.shards.max(1);
+        let ids = registry.ids();
+        let placement =
+            ShardPlacement::build(&ids, weights, cfg.shards, cfg.policy);
+        let topo = Topology::ft2000plus();
+        let shards = (0..cfg.shards)
+            .map(|i| Shard {
+                engine: ServeEngine::shared(
+                    registry.clone(),
+                    planner.clone(),
+                    plan_cfg.clone(),
+                ),
+                queue: RequestQueue::bounded(cfg.queue_cap),
+                cores: panel_core_range(&topo, i, cfg.shards),
+            })
+            .collect();
+        ShardedServer {
+            registry,
+            shards,
+            placement,
+            cfg,
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn registry(&self) -> &MatrixRegistry {
+        &self.registry
+    }
+
+    /// Route and enqueue one request. Replicated (and unknown)
+    /// matrices round-robin on a counter that only they advance, so a
+    /// periodic hot/cold interleaving in the producer cannot alias
+    /// every hot request onto one shard. Rejections (bounded queue
+    /// full, or closed) are counted in the owning shard's telemetry
+    /// and reported — admission control, not a panic.
+    pub fn submit(&self, req: Request) -> Admitted {
+        let shard = match self.placement.home(req.matrix_id) {
+            Some(s) => s,
+            None => {
+                self.rr.fetch_add(1, Ordering::Relaxed) % self.cfg.shards
+            }
+        };
+        match self.shards[shard].queue.try_push(req) {
+            Ok(()) => Admitted::Shard(shard),
+            Err(PushError::Full) | Err(PushError::Closed) => {
+                self.shards[shard].engine.telemetry.record_rejected(1);
+                Admitted::Rejected { shard }
+            }
+        }
+    }
+
+    /// No more submissions; workers drain the backlogs and exit.
+    pub fn close(&self) {
+        for s in &self.shards {
+            s.queue.close();
+        }
+    }
+
+    /// Run every shard's worker set until all queues are closed and
+    /// drained. Returns the number of requests served successfully
+    /// (errors/shed/rejected are in the per-shard telemetry).
+    pub fn serve(&self) -> usize {
+        let served = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for shard in &self.shards {
+                for _ in 0..self.cfg.workers_per_shard.max(1) {
+                    let served = &served;
+                    let cfg = self.cfg;
+                    s.spawn(move || {
+                        drain_worker(
+                            &shard.engine,
+                            &shard.queue,
+                            cfg.max_batch,
+                            cfg.deadline_ms,
+                            served,
+                        );
+                    });
+                }
+            }
+        });
+        served.into_inner()
+    }
+
+    /// Per-shard report rows for [`super::telemetry::shard_table`].
+    pub fn snapshots(&self, duration_s: f64) -> Vec<ShardSnapshot> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let (cache_hits, cache_misses) = s.engine.plans.stats();
+                ShardSnapshot {
+                    shard: i,
+                    cores: s.cores,
+                    stats: s.engine.telemetry.snapshot(),
+                    cache_hits,
+                    cache_misses,
+                    duration_s,
+                }
+            })
+            .collect()
+    }
+
+    /// Fleet roll-up of all shard stats.
+    pub fn merged_stats(&self) -> ServeStats {
+        let mut merged = ServeStats::default();
+        for s in &self.shards {
+            merged.merge(&s.engine.telemetry.snapshot());
+        }
+        merged
+    }
+
+    /// Total (hits, misses) across the per-shard plan caches.
+    pub fn cache_totals(&self) -> (u64, u64) {
+        self.shards.iter().fold((0, 0), |(h, m), s| {
+            let (sh, sm) = s.engine.plans.stats();
+            (h + sh, m + sm)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generators;
+    use crate::util::rng::Pcg32;
+
+    fn registry(n: usize) -> Arc<MatrixRegistry> {
+        let mut rng = Pcg32::new(0x5AAD);
+        let mut reg = MatrixRegistry::new();
+        for i in 0..n {
+            reg.register(
+                &format!("m{i}"),
+                generators::random_uniform(96 + i, 4, &mut rng),
+            );
+        }
+        Arc::new(reg)
+    }
+
+    #[test]
+    fn placement_replicates_hot_and_homes_cold() {
+        let ids: Vec<usize> = (0..12).collect();
+        // Zipf-ish weights: id 0 heaviest.
+        let weights: Vec<f64> =
+            (0..12).map(|i| 1.0 / (i + 1) as f64).collect();
+        let p = ShardPlacement::build(
+            &ids,
+            &weights,
+            4,
+            PlacementPolicy::HotReplicate { hot: 2 },
+        );
+        assert_eq!(p.shards(), 4);
+        assert!(p.is_replicated(0) && p.is_replicated(1));
+        assert_eq!(p.replicated_count(), 2);
+        assert!(!p.is_replicated(2));
+        // Replicated matrices spread round-robin over the salt.
+        let routes: Vec<usize> = (0..8).map(|s| p.route(0, s)).collect();
+        assert_eq!(routes, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        // Homed matrices stick to one shard regardless of salt.
+        let home = p.home(5).unwrap();
+        for salt in 0..8 {
+            assert_eq!(p.route(5, salt), home);
+        }
+        // Cold tail is spread: every shard homes someone.
+        let counts = p.homed_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        // Unknown ids route somewhere valid instead of panicking.
+        assert!(p.route(usize::MAX, 7) < 4);
+    }
+
+    #[test]
+    fn placement_home_policy_replicates_nothing() {
+        let ids: Vec<usize> = (0..6).collect();
+        let weights = vec![1.0; 6];
+        let p =
+            ShardPlacement::build(&ids, &weights, 3, PlacementPolicy::Home);
+        assert_eq!(p.replicated_count(), 0);
+        assert_eq!(p.homed_counts(), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn sharded_server_serves_and_survives_poison() {
+        let reg = registry(6);
+        let cfg = ShardConfig {
+            shards: 4,
+            queue_cap: 0,
+            workers_per_shard: 1,
+            ..ShardConfig::default()
+        };
+        let server = ShardedServer::new(
+            reg.clone(),
+            Planner::Heuristic,
+            PlanConfig::default(),
+            cfg,
+        );
+        let n_valid = 120usize;
+        let served = std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..n_valid {
+                    let id = i % reg.len();
+                    let n = reg.entry(id).csr.n_cols;
+                    let a = server.submit(Request::new(id, vec![1.0; n]));
+                    assert!(!a.is_rejected());
+                }
+                // Poison: unknown matrix id mixed into valid traffic.
+                server.submit(Request::new(usize::MAX, vec![1.0; 8]));
+                server.close();
+            });
+            server.serve()
+        });
+        assert_eq!(served, n_valid);
+        let merged = server.merged_stats();
+        assert_eq!(merged.requests, n_valid as u64);
+        assert_eq!(merged.errors, 1, "poison must be an error outcome");
+        assert_eq!(merged.rejected, 0);
+        assert_eq!(merged.digest.count, n_valid as u64);
+        // Every shard that homes a matrix saw its traffic.
+        for (i, snap) in server.snapshots(1.0).iter().enumerate() {
+            if server.placement.homed_counts()[i] > 0 {
+                assert!(
+                    snap.stats.requests > 0,
+                    "shard {i} homed matrices but served nothing"
+                );
+            }
+            assert_eq!(snap.cores.1 - snap.cores.0, 16, "4 shards x 2 panels");
+        }
+    }
+
+    #[test]
+    fn bounded_queues_reject_overload() {
+        let reg = registry(2);
+        let cfg = ShardConfig {
+            shards: 2,
+            queue_cap: 4,
+            workers_per_shard: 1,
+            policy: PlacementPolicy::Home,
+            ..ShardConfig::default()
+        };
+        let server = ShardedServer::new(
+            reg.clone(),
+            Planner::Heuristic,
+            PlanConfig::default(),
+            cfg,
+        );
+        // No workers running: fill one home shard past capacity.
+        let id = 0usize;
+        let n = reg.entry(id).csr.n_cols;
+        let mut rejected = 0usize;
+        for _ in 0..10 {
+            if server.submit(Request::new(id, vec![1.0; n])).is_rejected() {
+                rejected += 1;
+            }
+        }
+        assert_eq!(rejected, 6, "cap 4 must reject the excess");
+        server.close();
+        let served = server.serve();
+        assert_eq!(served, 4);
+        let merged = server.merged_stats();
+        assert_eq!(merged.rejected, 6);
+        assert_eq!(merged.requests, 4);
+    }
+
+    #[test]
+    fn deadline_sheds_stale_backlog() {
+        let reg = registry(1);
+        let cfg = ShardConfig {
+            shards: 1,
+            queue_cap: 0,
+            workers_per_shard: 1,
+            deadline_ms: 5.0,
+            ..ShardConfig::default()
+        };
+        let server = ShardedServer::new(
+            reg.clone(),
+            Planner::Heuristic,
+            PlanConfig::default(),
+            cfg,
+        );
+        let n = reg.entry(0).csr.n_cols;
+        for _ in 0..8 {
+            server.submit(Request::new(0, vec![1.0; n]));
+        }
+        // Let the backlog go stale past the 5 ms deadline, then serve.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        server.close();
+        let served = server.serve();
+        assert_eq!(served, 0, "stale backlog must be shed, not served");
+        let merged = server.merged_stats();
+        assert_eq!(merged.shed, 8);
+        assert_eq!(merged.requests, 0);
+    }
+}

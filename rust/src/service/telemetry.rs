@@ -1,13 +1,90 @@
 //! Serving telemetry — batch/latency/cache accounting surfaced
-//! through `util::table` and `util::json` so the replay harness and
-//! the live worker-pool bench report the same schema.
+//! through `util::table` and `util::json` so the replay harness, the
+//! live worker pool, and the sharded server report the same schema.
+//!
+//! Latency percentiles are tracked two ways at once: an exact sample
+//! reservoir capped at [`LATENCY_RESERVOIR_CAP`] entries, and a
+//! constant-memory streaming digest (three P² estimators for
+//! p50/p95/p99). Below the cap the report is exact; past it —
+//! million-request replays — memory stays flat and the digest answers.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::util::json::Json;
-use crate::util::stats;
+use crate::util::stats::{self, P2Quantile};
 use crate::util::table::Table;
+
+/// Exact latency samples retained per stats object; the streaming
+/// digest keeps percentiles accurate past this.
+pub const LATENCY_RESERVOIR_CAP: usize = 65_536;
+
+/// Constant-memory latency summary: count/mean/max exactly, and
+/// p50/p95/p99 via streaming P² estimators.
+#[derive(Clone, Debug)]
+pub struct LatencyDigest {
+    pub count: u64,
+    pub sum_ms: f64,
+    pub max_ms: f64,
+    p50: P2Quantile,
+    p95: P2Quantile,
+    p99: P2Quantile,
+}
+
+impl Default for LatencyDigest {
+    fn default() -> Self {
+        LatencyDigest {
+            count: 0,
+            sum_ms: 0.0,
+            max_ms: 0.0,
+            p50: P2Quantile::new(0.50),
+            p95: P2Quantile::new(0.95),
+            p99: P2Quantile::new(0.99),
+        }
+    }
+}
+
+impl LatencyDigest {
+    pub fn observe(&mut self, ms: f64) {
+        self.count += 1;
+        self.sum_ms += ms;
+        self.max_ms = self.max_ms.max(ms);
+        self.p50.observe(ms);
+        self.p95.observe(ms);
+        self.p99.observe(ms);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+
+    /// Streaming estimate for the tracked percentiles (50/95/99);
+    /// `None` for any other `p`.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        for est in [&self.p50, &self.p95, &self.p99] {
+            if (est.p() * 100.0 - p).abs() < 1e-9 {
+                return Some(est.quantile());
+            }
+        }
+        None
+    }
+
+    /// Fold another digest in. Count/mean/max merge exactly; the
+    /// percentile estimators blend approximately (see
+    /// [`P2Quantile::merge`]).
+    pub fn merge(&mut self, other: &LatencyDigest) {
+        self.count += other.count;
+        self.sum_ms += other.sum_ms;
+        self.max_ms = self.max_ms.max(other.max_ms);
+        self.p50.merge(&other.p50);
+        self.p95.merge(&other.p95);
+        self.p99.merge(&other.p99);
+    }
+}
 
 /// Aggregated serving counters (one snapshot == one report).
 #[derive(Clone, Debug, Default)]
@@ -25,8 +102,19 @@ pub struct ServeStats {
     /// Total executed flops (2 * nnz * batch per dispatch).
     pub flops: f64,
     /// Per-request latencies in milliseconds (virtual in replay mode,
-    /// wall-clock in the live worker-pool mode).
+    /// wall-clock in the live worker-pool mode), capped at
+    /// [`LATENCY_RESERVOIR_CAP`] samples — the digest carries the
+    /// percentiles beyond that.
     pub latencies_ms: Vec<f64>,
+    /// Streaming latency summary (exact count/mean/max, P² p50/95/99).
+    pub digest: LatencyDigest,
+    /// Requests refused at admission (bounded queue full / closed).
+    pub rejected: u64,
+    /// Requests dropped by deadline-based load shedding.
+    pub shed: u64,
+    /// Requests that reached execution and failed (unregistered
+    /// matrix id, wrong vector length) — reported, never a panic.
+    pub errors: u64,
 }
 
 impl ServeStats {
@@ -49,7 +137,22 @@ impl ServeStats {
     }
 
     pub fn record_latency_ms(&mut self, ms: f64) {
-        self.latencies_ms.push(ms);
+        self.digest.observe(ms);
+        if self.latencies_ms.len() < LATENCY_RESERVOIR_CAP {
+            self.latencies_ms.push(ms);
+        }
+    }
+
+    pub fn record_rejected(&mut self, n: u64) {
+        self.rejected += n;
+    }
+
+    pub fn record_shed(&mut self, n: u64) {
+        self.shed += n;
+    }
+
+    pub fn record_errors(&mut self, n: u64) {
+        self.errors += n;
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -68,8 +171,47 @@ impl ServeStats {
         }
     }
 
+    /// Mean latency — exact at any scale (tracked by the digest).
+    pub fn latency_mean(&self) -> f64 {
+        self.digest.mean()
+    }
+
+    /// Latency percentile: exact while the reservoir holds every
+    /// sample, streaming (P², for p in {50, 95, 99}) once samples
+    /// have been dropped.
     pub fn latency_percentile(&self, p: f64) -> f64 {
+        if self.digest.count > self.latencies_ms.len() as u64 {
+            if let Some(est) = self.digest.percentile(p) {
+                return est;
+            }
+        }
         stats::percentile(&self.latencies_ms, p)
+    }
+
+    /// Fold another stats object in (per-shard -> fleet roll-up).
+    /// Counters merge exactly; percentiles stay exact while the
+    /// merged reservoir holds every sample.
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.singletons += other.singletons;
+        for (&size, &count) in &other.batch_hist {
+            *self.batch_hist.entry(size).or_insert(0) += count;
+        }
+        for (&id, &count) in &other.per_matrix {
+            *self.per_matrix.entry(id).or_insert(0) += count;
+        }
+        self.exec_seconds += other.exec_seconds;
+        self.flops += other.flops;
+        for &ms in &other.latencies_ms {
+            if self.latencies_ms.len() < LATENCY_RESERVOIR_CAP {
+                self.latencies_ms.push(ms);
+            }
+        }
+        self.digest.merge(&other.digest);
+        self.rejected += other.rejected;
+        self.shed += other.shed;
+        self.errors += other.errors;
     }
 }
 
@@ -101,9 +243,73 @@ impl Telemetry {
         self.inner.lock().unwrap().record_latency_ms(ms);
     }
 
+    pub fn record_rejected(&self, n: u64) {
+        self.inner.lock().unwrap().record_rejected(n);
+    }
+
+    pub fn record_shed(&self, n: u64) {
+        self.inner.lock().unwrap().record_shed(n);
+    }
+
+    pub fn record_errors(&self, n: u64) {
+        self.inner.lock().unwrap().record_errors(n);
+    }
+
     pub fn snapshot(&self) -> ServeStats {
         self.inner.lock().unwrap().clone()
     }
+}
+
+/// One shard's slice of a serving run, for the per-shard report.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    /// Modeled FT-2000+ panel core range `[c0, c1)` the shard's
+    /// workers pin to.
+    pub cores: (usize, usize),
+    pub stats: ServeStats,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub duration_s: f64,
+}
+
+/// Per-shard stats table (shard = modeled NUMA panel).
+pub fn shard_table(snaps: &[ShardSnapshot]) -> Table {
+    let mut t = Table::new(
+        "Per-shard serving stats (shard = modeled FT-2000+ panel)",
+        &[
+            "shard", "cores", "req", "rej", "shed", "err", "req/s",
+            "p50 ms", "p95 ms", "p99 ms", "batch", "hit%",
+        ],
+    );
+    for s in snaps {
+        let thr = if s.duration_s > 0.0 {
+            s.stats.requests as f64 / s.duration_s
+        } else {
+            0.0
+        };
+        let total = s.cache_hits + s.cache_misses;
+        let hit = if total > 0 {
+            100.0 * s.cache_hits as f64 / total as f64
+        } else {
+            0.0
+        };
+        t.row(vec![
+            s.shard.to_string(),
+            format!("{}-{}", s.cores.0, s.cores.1.saturating_sub(1)),
+            s.stats.requests.to_string(),
+            s.stats.rejected.to_string(),
+            s.stats.shed.to_string(),
+            s.stats.errors.to_string(),
+            format!("{thr:.0}"),
+            format!("{:.3}", s.stats.latency_percentile(50.0)),
+            format!("{:.3}", s.stats.latency_percentile(95.0)),
+            format!("{:.3}", s.stats.latency_percentile(99.0)),
+            format!("{:.2}", s.stats.mean_batch()),
+            format!("{hit:.1}"),
+        ]);
+    }
+    t
 }
 
 /// Render a serving report table from a stats snapshot plus the
@@ -136,6 +342,9 @@ pub fn report_table(
             }
         ),
     ]);
+    t.row(vec!["rejected (admission)".into(), stats.rejected.to_string()]);
+    t.row(vec!["shed (deadline)".into(), stats.shed.to_string()]);
+    t.row(vec!["exec errors".into(), stats.errors.to_string()]);
     t.row(vec!["duration".into(), format!("{duration_s:.4} s")]);
     t.row(vec!["throughput".into(), format!("{thr:.1} req/s")]);
     for (label, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
@@ -146,7 +355,7 @@ pub fn report_table(
     }
     t.row(vec![
         "latency mean".into(),
-        format!("{:.3} ms", stats::mean(&stats.latencies_ms)),
+        format!("{:.3} ms", stats.latency_mean()),
     ]);
     let total = cache_hits + cache_misses;
     t.row(vec![
@@ -176,11 +385,14 @@ pub fn report_table(
 pub fn batch_histogram_table(stats: &ServeStats) -> Table {
     let mut t =
         Table::new("Batch-size histogram", &["batch size", "batches", "share"]);
+    // `batches` is normally the histogram total; guard the division
+    // so a hand-built or empty snapshot prints 0%, never NaN%.
+    let denom = stats.batches.max(1) as f64;
     for (&size, &count) in &stats.batch_hist {
         t.row(vec![
             size.to_string(),
             count.to_string(),
-            format!("{:.1}%", 100.0 * count as f64 / stats.batches as f64),
+            format!("{:.1}%", 100.0 * count as f64 / denom),
         ]);
     }
     t
@@ -197,6 +409,9 @@ pub fn report_json(
     obj.insert("requests".into(), Json::Num(stats.requests as f64));
     obj.insert("batches".into(), Json::Num(stats.batches as f64));
     obj.insert("mean_batch".into(), Json::Num(stats.mean_batch()));
+    obj.insert("rejected".into(), Json::Num(stats.rejected as f64));
+    obj.insert("shed".into(), Json::Num(stats.shed as f64));
+    obj.insert("errors".into(), Json::Num(stats.errors as f64));
     obj.insert("duration_s".into(), Json::Num(duration_s));
     obj.insert(
         "throughput_rps".into(),
@@ -213,7 +428,7 @@ pub fn report_json(
                 ("p50".to_string(), Json::Num(stats.latency_percentile(50.0))),
                 ("p95".to_string(), Json::Num(stats.latency_percentile(95.0))),
                 ("p99".to_string(), Json::Num(stats.latency_percentile(99.0))),
-                ("mean".to_string(), Json::Num(stats::mean(&stats.latencies_ms))),
+                ("mean".to_string(), Json::Num(stats.latency_mean())),
             ]
             .into_iter()
             .collect(),
@@ -249,6 +464,9 @@ mod tests {
         t.record_batch(3, 4, 0.0, 0.0);
         t.record_latency_ms(1.0);
         t.record_latency_ms(3.0);
+        t.record_rejected(2);
+        t.record_shed(1);
+        t.record_errors(4);
         let s = t.snapshot();
         assert_eq!(s.requests, 9);
         assert_eq!(s.batches, 3);
@@ -258,6 +476,9 @@ mod tests {
         assert!((s.mean_batch() - 3.0).abs() < 1e-12);
         assert!((s.executed_gflops() - 9.0).abs() < 1e-12);
         assert_eq!(s.latency_percentile(100.0), 3.0);
+        assert_eq!((s.rejected, s.shed, s.errors), (2, 1, 4));
+        assert_eq!(s.digest.count, 2);
+        assert!((s.latency_mean() - 2.0).abs() < 1e-12);
     }
 
     #[test]
@@ -266,13 +487,95 @@ mod tests {
         s.record_batch(0, 2, 0.001, 1e6);
         s.record_latency_ms(0.5);
         s.record_latency_ms(1.5);
+        s.record_errors(1);
         let md = report_table("Serving report", &s, 3, 1, 2.0).to_markdown();
         assert!(md.contains("plan-cache hit rate"));
         assert!(md.contains("75.0%"));
         assert!(md.contains("latency p99"));
+        assert!(md.contains("exec errors"));
         let j = report_json(&s, 3, 1, 2.0);
         assert_eq!(j.get("cache_hits").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("errors").unwrap().as_f64(), Some(1.0));
         assert!(j.get("latency_ms").unwrap().get("p50").is_some());
         assert!(!batch_histogram_table(&s).is_empty());
+    }
+
+    #[test]
+    fn empty_histogram_has_no_nan() {
+        // A snapshot with histogram entries but batches forced to 0
+        // (hand-built) must not print NaN%.
+        let mut s = ServeStats::default();
+        s.batch_hist.insert(4, 2);
+        let md = batch_histogram_table(&s).to_markdown();
+        assert!(!md.contains("NaN"), "histogram rendered NaN: {md}");
+        let empty = ServeStats::default();
+        let md = report_table("r", &empty, 0, 0, 0.0).to_markdown();
+        assert!(!md.contains("NaN"), "empty report rendered NaN: {md}");
+    }
+
+    #[test]
+    fn reservoir_caps_but_digest_keeps_counting() {
+        let mut s = ServeStats::default();
+        let n = LATENCY_RESERVOIR_CAP + 10_000;
+        let mut state = 0x1234_5678_u64;
+        for _ in 0..n {
+            // xorshift latencies in (0, 10).
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let ms = (state % 10_000) as f64 / 1000.0;
+            s.record_latency_ms(ms);
+        }
+        assert_eq!(s.latencies_ms.len(), LATENCY_RESERVOIR_CAP);
+        assert_eq!(s.digest.count, n as u64);
+        // Percentiles answer from the streaming digest, near-uniform.
+        let p50 = s.latency_percentile(50.0);
+        let p99 = s.latency_percentile(99.0);
+        assert!((p50 - 5.0).abs() < 0.5, "p50 {p50}");
+        assert!(p99 > 9.0 && p99 <= 10.0, "p99 {p99}");
+        assert!(s.latency_mean() > 0.0);
+    }
+
+    #[test]
+    fn merge_rolls_up_shards() {
+        let mut a = ServeStats::default();
+        a.record_batch(0, 2, 0.1, 1e9);
+        a.record_latency_ms(1.0);
+        a.record_rejected(1);
+        let mut b = ServeStats::default();
+        b.record_batch(1, 3, 0.1, 2e9);
+        b.record_latency_ms(2.0);
+        b.record_latency_ms(4.0);
+        b.record_errors(2);
+        a.merge(&b);
+        assert_eq!(a.requests, 5);
+        assert_eq!(a.batches, 2);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.errors, 2);
+        assert_eq!(a.digest.count, 3);
+        assert_eq!(a.latencies_ms.len(), 3);
+        assert!((a.latency_mean() - 7.0 / 3.0).abs() < 1e-12);
+        assert_eq!(a.per_matrix.get(&1), Some(&3));
+        assert_eq!(a.latency_percentile(100.0), 4.0);
+    }
+
+    #[test]
+    fn shard_table_renders() {
+        let mut s = ServeStats::default();
+        s.record_batch(0, 2, 0.01, 1e6);
+        s.record_latency_ms(1.0);
+        s.record_latency_ms(2.0);
+        let snap = ShardSnapshot {
+            shard: 3,
+            cores: (24, 32),
+            stats: s,
+            cache_hits: 1,
+            cache_misses: 1,
+            duration_s: 0.5,
+        };
+        let md = shard_table(&[snap]).to_markdown();
+        assert!(md.contains("24-31"));
+        assert!(md.contains("50.0"));
+        assert!(!md.contains("NaN"));
     }
 }

@@ -19,14 +19,43 @@ pub enum Popularity {
     Zipf { s: f64 },
 }
 
+impl Popularity {
+    /// Relative request mass of popularity rank `rank` (rank 0 is the
+    /// most popular matrix) — the weight shard-placement policies use
+    /// to decide which matrices are hot enough to replicate.
+    pub fn weight(&self, rank: usize) -> f64 {
+        match self {
+            Popularity::Uniform => 1.0,
+            Popularity::Zipf { s } => ((rank + 1) as f64).powf(-s),
+        }
+    }
+
+    /// Per-registry-id placement weights for a corpus served in rank
+    /// order: `weights[ids[rank]]` accumulates the request mass of
+    /// every rank mapped to that id (registration may deduplicate
+    /// several ranks onto one id). The shard-placement input.
+    pub fn placement_weights(
+        &self,
+        ids: &[usize],
+        registry_len: usize,
+    ) -> Vec<f64> {
+        let mut weights = vec![0.0f64; registry_len];
+        for (rank, &id) in ids.iter().enumerate() {
+            weights[id] += self.weight(rank);
+        }
+        weights
+    }
+}
+
 /// Arrival process of the request stream.
 #[derive(Clone, Copy, Debug)]
 pub enum Arrivals {
     /// Open loop: Poisson arrivals at `rate` requests/second.
     Open { rate: f64 },
     /// Open loop, on/off bursts: within each `period_s`, the first
-    /// `duty` fraction arrives at `rate * burst`, the remainder at
-    /// `rate / burst`.
+    /// `duty` fraction (clamped to `[0, 1]` at generation) arrives at
+    /// `rate * burst`, the remainder at `rate / burst`. `period_s`
+    /// must be positive.
     Bursty { rate: f64, burst: f64, period_s: f64, duty: f64 },
     /// Closed loop: `clients` concurrent clients, each issuing its
     /// next request the moment the previous one completes. Arrival
@@ -57,6 +86,12 @@ impl WorkloadSpec {
     /// matrices, sorted by arrival time.
     pub fn generate(&self, n_matrices: usize) -> Vec<GenRequest> {
         assert!(n_matrices > 0, "empty corpus");
+        if let Arrivals::Bursty { period_s, .. } = self.arrivals {
+            assert!(
+                period_s > 0.0,
+                "bursty arrivals need period_s > 0, got {period_s}"
+            );
+        }
         let mut rng = Pcg32::new(self.seed);
         let mut out = Vec::with_capacity(self.requests);
         let mut t = 0.0f64;
@@ -71,8 +106,12 @@ impl WorkloadSpec {
                     t
                 }
                 Arrivals::Bursty { rate, burst, period_s, duty } => {
+                    // duty outside [0,1] would silently degenerate to
+                    // always-on (>1) or always-off (<0); clamp it so
+                    // the on/off structure survives bad configs.
+                    let duty = duty.clamp(0.0, 1.0);
                     let burst = burst.max(1.0);
-                    let phase = (t / period_s.max(1e-9)).fract();
+                    let phase = (t / period_s).fract();
                     let r = if phase < duty { rate * burst } else { rate / burst };
                     t += exp_interval(&mut rng, r);
                     t
@@ -170,6 +209,62 @@ mod tests {
             }
         }
         assert!(on > off * 4, "burstiness not visible: on={on} off={off}");
+    }
+
+    #[test]
+    fn bursty_duty_clamps_to_unit_interval() {
+        let gen = |duty: f64| {
+            spec(
+                Popularity::Uniform,
+                Arrivals::Bursty {
+                    rate: 200.0,
+                    burst: 4.0,
+                    period_s: 1.0,
+                    duty,
+                },
+            )
+            .generate(4)
+        };
+        // duty > 1 must behave exactly like duty == 1 (always-on), not
+        // silently degenerate to some other phase arithmetic.
+        let (hi, one) = (gen(1.5), gen(1.0));
+        for (a, b) in hi.iter().zip(&one) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(a.matrix_idx, b.matrix_idx);
+        }
+        // duty < 0 must behave exactly like duty == 0 (always-off).
+        let (lo, zero) = (gen(-0.3), gen(0.0));
+        for (a, b) in lo.iter().zip(&zero) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        }
+        // And the two edges really differ: always-on runs burst^2
+        // faster than always-off.
+        let span_on = hi.last().unwrap().arrival_s;
+        let span_off = lo.last().unwrap().arrival_s;
+        assert!(
+            span_off > span_on * 8.0,
+            "on-span {span_on} vs off-span {span_off}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "period_s > 0")]
+    fn bursty_rejects_nonpositive_period() {
+        spec(
+            Popularity::Uniform,
+            Arrivals::Bursty { rate: 10.0, burst: 2.0, period_s: 0.0, duty: 0.5 },
+        )
+        .generate(2);
+    }
+
+    #[test]
+    fn popularity_weights_rank_matrices() {
+        let z = Popularity::Zipf { s: 1.2 };
+        assert!(z.weight(0) > z.weight(1));
+        assert!(z.weight(1) > z.weight(7));
+        assert!((z.weight(0) - 1.0).abs() < 1e-12);
+        let u = Popularity::Uniform;
+        assert_eq!(u.weight(0), u.weight(100));
     }
 
     #[test]

@@ -123,6 +123,180 @@ pub fn binned_mean(
         .collect()
 }
 
+/// Streaming quantile estimator — the P² algorithm (Jain & Chlamtac,
+/// CACM 1985). Five markers track the running quantile in O(1) memory,
+/// so serving telemetry can report p50/p95/p99 over million-request
+/// replays without storing every latency sample.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    p: f64,
+    n: u64,
+    /// Marker heights (quantile estimates at the marker positions).
+    q: [f64; 5],
+    /// Actual marker positions (1-based ranks).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    des: [f64; 5],
+    /// Desired-position increments per observation.
+    inc: [f64; 5],
+    /// The first five samples, kept verbatim for exact small-n output.
+    init: [f64; 5],
+}
+
+impl P2Quantile {
+    /// Estimator for the `p`-quantile, `p` in [0, 1].
+    pub fn new(p: f64) -> Self {
+        let p = p.clamp(0.0, 1.0);
+        P2Quantile {
+            p,
+            n: 0,
+            q: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            des: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            inc: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            init: [0.0; 5],
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// The quantile this estimator tracks (in [0, 1]).
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if self.n < 5 {
+            self.init[self.n as usize] = x;
+            self.n += 1;
+            if self.n == 5 {
+                let mut s = self.init;
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                self.q = s;
+            }
+            return;
+        }
+        // Locate the marker cell containing x, extending the extremes.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= self.q[k + 1] {
+                k += 1;
+            }
+            k
+        };
+        for pos in self.pos.iter_mut().skip(k + 1) {
+            *pos += 1.0;
+        }
+        for (des, inc) in self.des.iter_mut().zip(self.inc) {
+            *des += inc;
+        }
+        // Nudge interior markers toward their desired positions with
+        // the piecewise-parabolic (P²) height update.
+        for i in 1..4 {
+            let d = self.des[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let s = d.signum();
+                let qp = self.parabolic(i, s);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, s)
+                };
+                self.pos[i] += s;
+            }
+        }
+        self.n += 1;
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let q = &self.q;
+        let np = &self.pos;
+        q[i] + s / (np[i + 1] - np[i - 1])
+            * ((np[i] - np[i - 1] + s) * (q[i + 1] - q[i])
+                / (np[i + 1] - np[i])
+                + (np[i + 1] - np[i] - s) * (q[i] - q[i - 1])
+                    / (np[i] - np[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + s * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate. Exact (interpolated) while fewer than five
+    /// samples have been observed; 0 for no samples.
+    pub fn quantile(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if self.n < 5 {
+            let mut v = self.init[..self.n as usize].to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return percentile(&v, self.p * 100.0);
+        }
+        self.q[2]
+    }
+
+    /// Fold another estimator of the same quantile into this one.
+    /// Exact when either side is still in its small-n buffer; once
+    /// both are warm the marker heights are blended by sample weight —
+    /// approximate, and P² self-corrects as more samples arrive.
+    pub fn merge(&mut self, other: &P2Quantile) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        if other.n < 5 {
+            for &x in &other.init[..other.n as usize] {
+                self.observe(x);
+            }
+            return;
+        }
+        if self.n < 5 {
+            let mut merged = other.clone();
+            for &x in &self.init[..self.n as usize] {
+                merged.observe(x);
+            }
+            *self = merged;
+            return;
+        }
+        let (wa, wb) = (self.n as f64, other.n as f64);
+        let lo = self.q[0].min(other.q[0]);
+        let hi = self.q[4].max(other.q[4]);
+        for (qa, qb) in self.q.iter_mut().zip(other.q) {
+            *qa = (*qa * wa + qb * wb) / (wa + wb);
+        }
+        self.q[0] = lo;
+        self.q[4] = hi;
+        for i in 1..5 {
+            if self.q[i] < self.q[i - 1] {
+                self.q[i] = self.q[i - 1];
+            }
+        }
+        self.n += other.n;
+        // Restart position tracking at the canonical marks for the
+        // combined count (strictly increasing for 0 < p < 1).
+        let nf = self.n as f64;
+        for i in 0..5 {
+            self.pos[i] = 1.0 + self.inc[i] * (nf - 1.0);
+            self.des[i] = self.pos[i];
+        }
+    }
+}
+
 /// Min-max normalization to [0,1] (the paper normalizes nnz_var for
 /// Fig 6 e/f).
 pub fn minmax_normalize(xs: &[f64]) -> Vec<f64> {
@@ -188,6 +362,82 @@ mod tests {
         assert_eq!(bins[0].2 + bins[1].2, 4);
         assert!((bins[0].1 - 1.5).abs() < 1e-9);
         assert!((bins[1].1 - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p2_small_n_is_exact() {
+        let mut q = P2Quantile::new(0.5);
+        assert_eq!(q.quantile(), 0.0);
+        for x in [3.0, 1.0, 2.0] {
+            q.observe(x);
+        }
+        assert_eq!(q.count(), 3);
+        assert_eq!(q.quantile(), 2.0);
+        assert!((q.p() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_tracks_percentiles_of_a_skewed_stream() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(0xB2B2);
+        let mut q50 = P2Quantile::new(0.50);
+        let mut q95 = P2Quantile::new(0.95);
+        let mut q99 = P2Quantile::new(0.99);
+        let mut all = Vec::with_capacity(20_000);
+        for _ in 0..20_000 {
+            // Right-skewed, latency-like distribution.
+            let u = rng.gen_f64();
+            let x = 1.0 + 50.0 * u * u * u;
+            all.push(x);
+            q50.observe(x);
+            q95.observe(x);
+            q99.observe(x);
+        }
+        for (est, p, tol) in
+            [(&q50, 50.0, 0.05), (&q95, 95.0, 0.05), (&q99, 99.0, 0.10)]
+        {
+            let exact = percentile(&all, p);
+            let got = est.quantile();
+            assert!(
+                (got - exact).abs() <= tol * (exact.abs() + 1.0),
+                "p{p}: streaming {got} vs exact {exact}"
+            );
+        }
+        assert_eq!(q50.count(), 20_000);
+    }
+
+    #[test]
+    fn p2_merge_approximates_union() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(0xC3C3);
+        let mut a = P2Quantile::new(0.5);
+        let mut b = P2Quantile::new(0.5);
+        let mut all = Vec::new();
+        for i in 0..10_000 {
+            let x = rng.gen_f64() * 100.0;
+            all.push(x);
+            if i % 2 == 0 {
+                a.observe(x);
+            } else {
+                b.observe(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 10_000);
+        let exact = percentile(&all, 50.0);
+        assert!(
+            (a.quantile() - exact).abs() <= 0.1 * (exact.abs() + 1.0),
+            "merged {} vs exact {exact}",
+            a.quantile()
+        );
+        // Merging into a cold/small estimator stays exact.
+        let mut cold = P2Quantile::new(0.5);
+        cold.merge(&a);
+        assert_eq!(cold.count(), a.count());
+        let mut tiny = P2Quantile::new(0.5);
+        tiny.observe(1.0);
+        tiny.merge(&a);
+        assert_eq!(tiny.count(), 10_001);
     }
 
     #[test]

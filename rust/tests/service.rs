@@ -1,11 +1,14 @@
 //! Integration tests of the serving subsystem: registry + plan cache
 //! + batched executor + replay harness, end to end.
 
+use std::sync::Arc;
+
 use ft2000_spmv::corpus::suite::SuiteSpec;
 use ft2000_spmv::corpus::NamedMatrix;
 use ft2000_spmv::service::{
-    build_plan, replay, Arrivals, MatrixRegistry, PlanConfig, Planner,
-    Popularity, ReplayConfig, ServeEngine, WorkloadSpec,
+    build_plan, replay, replay_sharded, Arrivals, MatrixRegistry,
+    PlacementPolicy, PlanConfig, Planner, Popularity, ReplayConfig, Request,
+    ServeEngine, ShardConfig, ShardedServer, WorkloadSpec,
 };
 use ft2000_spmv::sparse::mm;
 use ft2000_spmv::util::json;
@@ -157,4 +160,126 @@ fn reg_missing_errors() -> bool {
     MatrixRegistry::new()
         .register_mtx("/nonexistent/path/m.mtx")
         .is_err()
+}
+
+#[test]
+fn sharded_server_survives_poison_and_reports_per_shard() {
+    // The serve-bench acceptance path end to end: suite corpus, 8
+    // shards, Zipf traffic with one poison request (unregistered id)
+    // mixed in. The run must finish, count the poison as an error,
+    // and produce per-shard streaming-percentile telemetry.
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&SuiteSpec::tiny(), Some(9));
+    let registry = Arc::new(reg);
+    let wl = WorkloadSpec {
+        requests: 300,
+        popularity: Popularity::Zipf { s: 1.2 },
+        arrivals: Arrivals::Closed { clients: 4 },
+        seed: 0xFEED,
+    };
+    let seq = wl.generate(ids.len());
+    let weights = wl.popularity.placement_weights(&ids, registry.len());
+    let server = ShardedServer::with_weights(
+        registry.clone(),
+        Planner::Heuristic,
+        PlanConfig::default(),
+        ShardConfig {
+            shards: 8,
+            queue_cap: 0,
+            workers_per_shard: 1,
+            max_batch: 16,
+            deadline_ms: 0.0,
+            policy: PlacementPolicy::HotReplicate { hot: 2 },
+        },
+        &weights,
+    );
+    let served = std::thread::scope(|s| {
+        s.spawn(|| {
+            for (i, r) in seq.iter().enumerate() {
+                if i == 150 {
+                    server.submit(Request::new(usize::MAX, vec![1.0; 4]));
+                }
+                let id = ids[r.matrix_idx];
+                let n = registry.entry(id).csr.n_cols;
+                server.submit(Request::new(id, vec![1.0; n]));
+            }
+            server.close();
+        });
+        server.serve()
+    });
+    assert_eq!(served, 300, "all valid requests served");
+    let merged = server.merged_stats();
+    assert_eq!(merged.requests, 300);
+    assert_eq!(merged.errors, 1, "poison counted, not fatal");
+    assert_eq!(merged.rejected, 0, "unbounded queues reject nothing");
+    assert_eq!(merged.digest.count, 300);
+    assert!(merged.latency_percentile(99.0) >= merged.latency_percentile(50.0));
+    // The hot head is replicated; at least half the shards served it.
+    let hot_id = ids[0];
+    assert!(server.placement.is_replicated(hot_id));
+    let snaps = server.snapshots(1.0);
+    assert_eq!(snaps.len(), 8);
+    let shards_with_head = snaps
+        .iter()
+        .filter(|s| s.stats.per_matrix.contains_key(&hot_id))
+        .count();
+    assert!(shards_with_head >= 4, "head on {shards_with_head}/8 shards");
+    // Each shard owns one modeled panel of 8 cores.
+    for s in &snaps {
+        assert_eq!(s.cores.1 - s.cores.0, 8);
+    }
+    // Per-shard plan caches build at most one plan per matrix.
+    let (_, misses) = server.cache_totals();
+    assert!(misses <= (ids.len() * 8) as u64);
+    // The shard table renders without NaN.
+    let md = ft2000_spmv::service::telemetry::shard_table(&snaps)
+        .to_markdown();
+    assert!(!md.contains("NaN"), "{md}");
+}
+
+#[test]
+fn sharded_replay_matches_global_request_totals() {
+    // A/B harness invariant: the same workload replayed through one
+    // global virtual server and through 8 virtual panels serves the
+    // same request population (routing must lose nothing).
+    let spec = WorkloadSpec {
+        requests: 600,
+        popularity: Popularity::Zipf { s: 1.2 },
+        arrivals: Arrivals::Open { rate: 20_000.0 },
+        seed: 0x5EED_2019,
+    };
+    let cfg = ReplayConfig { execute: false, ..ReplayConfig::default() };
+
+    let (engine, ids) = tiny_engine(Planner::Heuristic);
+    let global = replay(&engine, &ids, &spec, &cfg).unwrap();
+    assert_eq!(global.stats.requests, 600);
+
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&SuiteSpec::tiny(), Some(9));
+    let sharded = replay_sharded(
+        Arc::new(reg),
+        &Planner::Heuristic,
+        &PlanConfig::default(),
+        &ids,
+        &spec,
+        &cfg,
+        8,
+        PlacementPolicy::HotReplicate { hot: 2 },
+    )
+    .unwrap();
+    let merged = sharded.merged();
+    assert_eq!(merged.stats.requests, 600);
+    assert_eq!(merged.stats.rejected, 0);
+    assert!(sharded.duration_s > 0.0 && global.duration_s > 0.0);
+    // Every shard's own timeline ends no later than the fleet
+    // makespan, and the fleet served the same population the global
+    // server did — the A/B compares like with like.
+    for r in &sharded.shards {
+        assert!(r.duration_s <= sharded.duration_s);
+    }
+    assert_eq!(merged.stats.requests, global.stats.requests);
+    // JSON report carries per-shard entries.
+    let j = sharded.to_json();
+    assert_eq!(j.get("shards").unwrap().as_arr().map(|a| a.len()), Some(8));
+    assert_eq!(j.get("requests").unwrap().as_usize(), Some(600));
 }
