@@ -15,6 +15,17 @@ pub fn suite_from_env() -> SuiteSpec {
     }
 }
 
+/// Quick-mode toggle for CI smoke runs: set `FT2000_QUICK=1` to
+/// shrink request counts and iteration budgets so a bench target
+/// finishes in seconds while still exercising its full code path.
+#[allow(dead_code)] // not every bench target has a quick mode
+pub fn quick_from_env() -> bool {
+    matches!(
+        std::env::var("FT2000_QUICK").as_deref(),
+        Ok("1") | Ok("true") | Ok("yes")
+    )
+}
+
 pub fn banner(id: &str, paper: &str) {
     println!("\n=== {id} ===");
     println!("paper reference: {paper}\n");

@@ -1,6 +1,6 @@
 //! §Serve — wall-clock throughput of the batched serving path.
 //!
-//! Two questions the serving layer must answer affirmatively on the
+//! Three questions the serving layer must answer affirmatively on the
 //! host:
 //!
 //! 1. Does coalescing `b` concurrent requests into one
@@ -8,8 +8,13 @@
 //!    (It should: one dispatch, A streamed once per column block.)
 //! 2. What does the end-to-end engine sustain under Zipf traffic,
 //!    open- and closed-loop?
+//! 3. Does the persistent executor pool beat per-request thread
+//!    spawning? (It should: small/medium SpMV kernels are dominated
+//!    by parallel-runtime overhead, which the pool pays once.)
 //!
-//! Scale with `FT2000_SUITE=tiny|fast|full` (default fast).
+//! Scale with `FT2000_SUITE=tiny|fast|full` (default fast); set
+//! `FT2000_QUICK=1` for the CI smoke mode (tiny request counts, full
+//! code paths).
 
 mod common;
 
@@ -28,9 +33,11 @@ use ft2000_spmv::util::table::Table;
 fn main() {
     common::banner(
         "§Serve",
-        "batched SpMM vs repeated SpMV; engine throughput under Zipf traffic",
+        "batched SpMM vs repeated SpMV; engine throughput under Zipf \
+         traffic; pooled vs spawn dispatch",
     );
     let suite = common::suite_from_env();
+    let quick = common::quick_from_env();
     let mut reg = MatrixRegistry::new();
     let ids = reg.register_suite(&suite, Some(12));
     let engine =
@@ -40,16 +47,18 @@ fn main() {
     let cfg = BenchConfig {
         warmup_iters: 1,
         min_iters: 3,
-        max_iters: 30,
+        max_iters: if quick { 5 } else { 30 },
         target_rel_ci: 0.1,
-        max_seconds: 2.0,
+        max_seconds: if quick { 0.25 } else { 2.0 },
     };
     let mut chosen = ids.clone();
     chosen.sort_by_key(|&id| {
         std::cmp::Reverse(engine.registry.entry(id).csr.nnz())
     });
     chosen.dedup();
-    chosen.truncate(3);
+    chosen.truncate(if quick { 1 } else { 3 });
+    let batch_sizes: &[usize] =
+        if quick { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
     let mut t = Table::new(
         "Batched SpMM vs N sequential SpMV calls (cached plan, 4 threads)",
         &["matrix", "nnz", "batch", "spmm Gflops", "Nx spmv Gflops", "win"],
@@ -59,7 +68,7 @@ fn main() {
         let (plan, _) = engine.plans.plan_for(entry.fingerprint, &entry.csr);
         let nnz = entry.csr.nnz();
         let x = vec![1.0f64; entry.csr.n_cols];
-        for b in [1usize, 2, 4, 8, 16, 32] {
+        for &b in batch_sizes {
             let xs_refs: Vec<&[f64]> =
                 (0..b).map(|_| x.as_slice()).collect();
             let packed = exec::pack_vectors(&xs_refs);
@@ -91,13 +100,13 @@ fn main() {
     ] {
         let mut reg = MatrixRegistry::new();
         let ids = reg.register_suite(&suite, Some(12));
-        let engine = ServeEngine::new(
+        let engine = ServeEngine::pooled(
             reg,
             Planner::Heuristic,
             PlanConfig::default(),
         );
         let spec = WorkloadSpec {
-            requests: 1500,
+            requests: if quick { 200 } else { 1500 },
             popularity: Popularity::Zipf { s: 1.2 },
             arrivals,
             seed: 0x5EED_2019,
@@ -117,15 +126,72 @@ fn main() {
         );
     }
 
-    // --- 3: sharded vs global serving, wall clock A/B -------------------
+    // --- 3: pooled vs spawn dispatch, wall clock A/B ---------------------
+    // The tax this PR removes: same Zipf closed-loop stream, same
+    // coalescing drain loop; (a) per-request scoped threads — the old
+    // hot path — and (b) the persistent executor pool. The corpus is
+    // dominated by small/medium matrices, so dispatch overhead (not
+    // kernel work) decides the gap.
+    println!();
+    println!("pooled vs spawn dispatch (same traffic, wall clock):");
+    let n_req = if quick { 256 } else { 2048 };
+    let wl = WorkloadSpec {
+        requests: n_req,
+        popularity: Popularity::Zipf { s: 1.2 },
+        arrivals: Arrivals::Closed { clients: 4 },
+        seed: 0x900D,
+    };
+    let mut rps = Vec::new();
+    for pooled in [false, true] {
+        let mut reg = MatrixRegistry::new();
+        let ids = reg.register_suite(&suite, Some(12));
+        let seq = wl.generate(ids.len());
+        let registry = Arc::new(reg);
+        let inputs: std::collections::HashMap<usize, Arc<Vec<f64>>> = ids
+            .iter()
+            .map(|&id| {
+                let n = registry.entry(id).csr.n_cols;
+                (id, Arc::new(vec![1.0f64; n]))
+            })
+            .collect();
+        let engine = ServeEngine::shared_with_mode(
+            pooled,
+            registry.clone(),
+            Planner::Heuristic,
+            PlanConfig::default(),
+        );
+        let queue = RequestQueue::new();
+        let t0 = std::time::Instant::now();
+        let served = std::thread::scope(|s| {
+            s.spawn(|| {
+                for r in &seq {
+                    let id = ids[r.matrix_idx];
+                    queue.push(Request::new(id, inputs[&id].clone()));
+                }
+                queue.close();
+            });
+            serve_queue(&engine, &queue, 4, 16)
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let label = if pooled { "pool dispatch" } else { "spawn dispatch" };
+        let throughput = served as f64 / wall;
+        println!(
+            "{label:<24} {throughput:>9.1} req/s  ({served} served in \
+             {wall:.3}s)",
+        );
+        rps.push(throughput);
+    }
+    println!("pooled/spawn throughput ratio: {:.2}x", rps[1] / rps[0]);
+
+    // --- 4: sharded vs global serving, wall clock A/B -------------------
     // Same Zipf request sequence pushed through (a) one global queue
     // with one undifferentiated pool — the topology-blind baseline —
     // and (b) the panel-sharded server (hot matrices replicated, cold
-    // homed, per-shard plan caches). Streaming-percentile telemetry
-    // in both.
+    // homed, per-shard plan caches + panel-pinned executor pools).
+    // Streaming-percentile telemetry in both.
     println!();
     println!("sharded vs global serving (same traffic, wall clock):");
-    let n_req = 1024usize;
+    let n_req = if quick { 256usize } else { 1024 };
     let wl = WorkloadSpec {
         requests: n_req,
         popularity: Popularity::Zipf { s: 1.2 },
@@ -146,7 +212,7 @@ fn main() {
             .collect();
         let t0 = std::time::Instant::now();
         let (served, merged) = if shards == 1 {
-            let engine = ServeEngine::shared(
+            let engine = ServeEngine::shared_pooled(
                 registry.clone(),
                 Planner::Heuristic,
                 PlanConfig::default(),
@@ -177,6 +243,7 @@ fn main() {
                     max_batch: 16,
                     deadline_ms: 0.0,
                     policy: PlacementPolicy::HotReplicate { hot: 2 },
+                    pooled: true,
                 },
                 &weights,
             );

@@ -60,6 +60,9 @@ pub enum Command {
         /// Per-shard queue capacity (admission control); 0 = unbounded.
         queue_cap: usize,
         policy: PlacementPolicy,
+        /// Persistent executor pool (`--pool`, default) vs per-request
+        /// scoped threads (`--spawn`).
+        pooled: bool,
     },
     /// Deterministic traffic replay through the serving engine.
     Replay {
@@ -80,6 +83,9 @@ pub enum Command {
         /// Virtual admission bound per server; 0 = unbounded.
         queue_cap: usize,
         policy: PlacementPolicy,
+        /// Pool-backed kernel execution (`--pool`, default) vs
+        /// per-request scoped threads (`--spawn`).
+        pooled: bool,
     },
     /// Print topology/provenance info.
     Info,
@@ -125,6 +131,8 @@ pub fn usage() -> &'static str {
      \u{20}        --shards N (default 8; 1 = legacy global queue)\n\
      \u{20}        --queue-cap N (default 1024; 0 = unbounded)\n\
      \u{20}        --policy home|replicate [--hot N]  matrix placement\n\
+     \u{20}        --pool | --spawn     persistent executor pool (default)\n\
+     \u{20}                             vs per-request scoped threads\n\
      replay   --suite tiny|fast|full   corpus scale (default fast)\n\
      \u{20}        --pattern uniform|zipf|bursty (default zipf)\n\
      \u{20}        --requests N (default 2000)  --matrices N (default 32)\n\
@@ -133,9 +141,13 @@ pub fn usage() -> &'static str {
      \u{20}        --seed S  --planner heuristic|learned (default learned)\n\
      \u{20}        --shards N (default 1)  --queue-cap N (default 0)\n\
      \u{20}        --policy home|replicate [--hot N]\n\
+     \u{20}        --pool | --spawn     executor dispatch mode (pool default)\n\
      \u{20}        --json PATH          dump the report as JSON\n\
      info"
 }
+
+/// Flags that take no value (presence toggles).
+const BOOL_FLAGS: &[&str] = &["pool", "spawn"];
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
@@ -143,6 +155,11 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     while i < args.len() {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
+            if BOOL_FLAGS.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+                continue;
+            }
             let val = args
                 .get(i + 1)
                 .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
@@ -153,6 +170,16 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
         }
     }
     Ok(flags)
+}
+
+/// Executor dispatch mode: `--pool` (persistent per-shard executor
+/// pool, the default) vs `--spawn` (per-request scoped threads, the
+/// legacy baseline of the A/B).
+fn parse_pooled(flags: &HashMap<String, String>) -> Result<bool> {
+    if flags.contains_key("pool") && flags.contains_key("spawn") {
+        bail!("--pool and --spawn are mutually exclusive");
+    }
+    Ok(!flags.contains_key("spawn"))
 }
 
 fn parse_suite(flags: &HashMap<String, String>) -> Result<SuiteSpec> {
@@ -355,6 +382,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             shards: parse_usize(&flags, "shards", 8)?.max(1),
             queue_cap: parse_usize(&flags, "queue-cap", 1024)?,
             policy: parse_policy(&flags)?,
+            pooled: parse_pooled(&flags)?,
         },
         "replay" => Command::Replay {
             suite: parse_suite(&flags)?,
@@ -375,6 +403,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             shards: parse_usize(&flags, "shards", 1)?.max(1),
             queue_cap: parse_usize(&flags, "queue-cap", 0)?,
             policy: parse_policy(&flags)?,
+            pooled: parse_pooled(&flags)?,
         },
         "info" => Command::Info,
         other => bail!("unknown command '{other}'\n{}", usage()),
@@ -461,6 +490,7 @@ mod tests {
                 shards,
                 queue_cap,
                 policy,
+                pooled,
                 ..
             } => {
                 assert_eq!(matrices, 6);
@@ -469,11 +499,43 @@ mod tests {
                 assert_eq!(shards, 8);
                 assert_eq!(queue_cap, 1024);
                 assert_eq!(policy, PlacementPolicy::HotReplicate { hot: 2 });
+                assert!(pooled, "pooled execution is the default");
             }
             _ => panic!("wrong command"),
         }
         assert!(parse(&sv(&["serve-bench", "--batches", "0,2"])).is_err());
         assert!(parse(&sv(&["serve-bench", "--batches", "x"])).is_err());
+    }
+
+    #[test]
+    fn parses_pool_spawn_toggle() {
+        for (args, want) in [
+            (vec!["serve-bench"], true),
+            (vec!["serve-bench", "--pool"], true),
+            (vec!["serve-bench", "--spawn"], false),
+        ] {
+            let cli = parse(&sv(&args)).unwrap();
+            match cli.command {
+                Command::ServeBench { pooled, .. } => {
+                    assert_eq!(pooled, want, "{args:?}")
+                }
+                _ => panic!("wrong command"),
+            }
+        }
+        let cli = parse(&sv(&["replay", "--spawn", "--requests", "10"]))
+            .unwrap();
+        match cli.command {
+            Command::Replay { pooled, requests, .. } => {
+                assert!(!pooled);
+                assert_eq!(requests, 10, "value flags still parse after a \
+                     boolean flag");
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(
+            parse(&sv(&["serve-bench", "--pool", "--spawn"])).is_err(),
+            "--pool and --spawn are mutually exclusive"
+        );
     }
 
     #[test]

@@ -6,6 +6,19 @@
 //! rows are CSR5 range-boundary carries, which are merged by the
 //! calling thread after the join (exactly the CSR5 algorithm's
 //! cross-thread reduction step).
+//!
+//! Every executor comes in two dispatch modes behind one entry point:
+//! handed a [`pool::ExecPool`] it runs on the pool's resident workers
+//! (the serving hot path — no per-request thread spawn); handed
+//! `None` it falls back to `std::thread::scope` (one-shot CLI and
+//! bench paths where a resident pool has nothing to amortize).
+//! Partition slots with no rows are skipped in both modes, and the
+//! result reports the *effective* worker count, so scalability curves
+//! at `n_threads > n_rows` aren't skewed by idle spawns.
+
+pub mod pool;
+
+pub use pool::ExecPool;
 
 use std::time::Instant;
 
@@ -18,6 +31,8 @@ use crate::sparse::{Csr, Csr5};
 pub struct ExecResult {
     pub y: Vec<f64>,
     pub wall_seconds: f64,
+    /// Effective parallelism: workers that had nonempty row/tile
+    /// ranges (not the configured thread count).
     pub threads: usize,
 }
 
@@ -33,17 +48,77 @@ impl ExecResult {
     }
 }
 
-/// Disjoint-range mutable view of `y` for scoped threads.
+/// Disjoint-range mutable view for concurrent slot workers.
 ///
-/// SAFETY: callers must hand each thread ranges that do not overlap
-/// with any other thread's ranges — guaranteed by
-/// `Partition::validate`, which rejects double-covered rows.
-struct SendPtr(*mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+/// SAFETY: callers must hand each slot writes that do not overlap
+/// with any other slot's — guaranteed by `Partition::validate`, which
+/// rejects double-covered rows, and by slot-indexed output cells.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
 
-/// Multi-threaded CSR SpMV under any row partition.
+/// A row-range list that carries at least one row — the slot filter
+/// shared by the executors and by `Plan::effective_threads`, so the
+/// replay cost model can never drift from what execution reports.
+fn slot_has_rows(ranges: &[(usize, usize)]) -> bool {
+    ranges.iter().any(|&(r0, r1)| r1 > r0)
+}
+
+/// Effective parallelism of a row partition: slots that carry work,
+/// floored at 1 (what `ExecResult.threads`/`SpmmResult.threads`
+/// report).
+pub fn effective_row_slots(per_thread: &[Vec<(usize, usize)>]) -> usize {
+    per_thread
+        .iter()
+        .filter(|ranges| slot_has_rows(ranges))
+        .count()
+        .max(1)
+}
+
+/// Effective parallelism of a tile partition, floored at 1.
+pub fn effective_tile_slots(per_thread: &[(usize, usize)]) -> usize {
+    per_thread.iter().filter(|&&(t0, t1)| t1 > t0).count().max(1)
+}
+
+/// Run `work(slot)` for every slot: on the pool's resident workers
+/// when one is supplied, otherwise on freshly scoped threads (the
+/// one-shot fallback). Returns once every slot completed.
+fn dispatch(
+    pool: Option<&ExecPool>,
+    n_slots: usize,
+    work: &(dyn Fn(usize) + Sync),
+) {
+    match pool {
+        Some(p) => p.run(n_slots, work),
+        None => match n_slots {
+            0 => {}
+            1 => work(0),
+            _ => {
+                std::thread::scope(|s| {
+                    for i in 0..n_slots {
+                        s.spawn(move || work(i));
+                    }
+                });
+            }
+        },
+    }
+}
+
+/// Multi-threaded CSR SpMV under any row partition (spawn fallback;
+/// see [`spmv_threaded_on`] for the pooled serving path).
 pub fn spmv_threaded(
+    csr: &Csr,
+    x: &[f64],
+    schedule: Schedule,
+    n_threads: usize,
+) -> ExecResult {
+    spmv_threaded_on(None, csr, x, schedule, n_threads)
+}
+
+/// Multi-threaded CSR SpMV: partition under `schedule`, then execute
+/// on `pool` (or scoped threads when `None`).
+pub fn spmv_threaded_on(
+    pool: Option<&ExecPool>,
     csr: &Csr,
     x: &[f64],
     schedule: Schedule,
@@ -52,77 +127,105 @@ pub fn spmv_threaded(
     assert_eq!(x.len(), csr.n_cols);
     let part = partition(csr, schedule, n_threads);
     debug_assert!(part.validate(csr).is_ok());
+    spmv_partitioned(pool, csr, x, &part)
+}
+
+/// Execute a *pre-materialized* partition — the serving hot path:
+/// plans memoize their partition at build time and requests skip the
+/// (prefix-bisection / tiling) partitioning work entirely.
+pub fn spmv_partitioned(
+    pool: Option<&ExecPool>,
+    csr: &Csr,
+    x: &[f64],
+    part: &Partition,
+) -> ExecResult {
     match part {
         Partition::Rows { per_thread } => {
-            spmv_rows_threaded(csr, x, &per_thread)
+            spmv_rows_on(pool, csr, x, per_thread)
         }
         Partition::Tiles { tile_nnz, per_thread } => {
-            let csr5 = Csr5::from_csr(csr, tile_nnz);
-            spmv_csr5_threaded(&csr5, x, &per_thread)
+            let csr5 = Csr5::from_csr(csr, *tile_nnz);
+            spmv_csr5_on(pool, &csr5, x, per_thread)
         }
     }
 }
 
-fn spmv_rows_threaded(
+/// CSR SpMV over explicit per-slot row ranges. Slots with no rows are
+/// skipped; `threads` reports the effective worker count.
+pub fn spmv_rows_on(
+    pool: Option<&ExecPool>,
     csr: &Csr,
     x: &[f64],
     per_thread: &[Vec<(usize, usize)>],
 ) -> ExecResult {
+    assert_eq!(x.len(), csr.n_cols);
+    let active: Vec<&[(usize, usize)]> = per_thread
+        .iter()
+        .map(|ranges| ranges.as_slice())
+        .filter(|ranges| slot_has_rows(ranges))
+        .collect();
     let mut y = vec![0.0f64; csr.n_rows];
     let ptr = SendPtr(y.as_mut_ptr());
     let t0 = Instant::now();
-    std::thread::scope(|s| {
-        for ranges in per_thread {
-            let ptr = &ptr;
-            s.spawn(move || {
-                // SAFETY: ranges are disjoint across threads
-                // (Partition::validate) — each y[r] is written by
-                // exactly one thread.
-                let yslice = unsafe {
-                    std::slice::from_raw_parts_mut(ptr.0, csr.n_rows)
-                };
-                for &(r0, r1) in ranges {
-                    csr.spmv_rows(r0, r1, x, yslice);
-                }
-            });
+    let work = |slot: usize| {
+        // SAFETY: ranges are disjoint across slots
+        // (Partition::validate) — each y[r] is written by exactly
+        // one worker.
+        let yslice =
+            unsafe { std::slice::from_raw_parts_mut(ptr.0, csr.n_rows) };
+        for &(r0, r1) in active[slot] {
+            csr.spmv_rows(r0, r1, x, yslice);
         }
-    });
+    };
+    dispatch(pool, active.len(), &work);
     ExecResult {
         y,
         wall_seconds: t0.elapsed().as_secs_f64(),
-        threads: per_thread.len(),
+        threads: active.len().max(1),
     }
 }
 
 /// Multi-threaded CSR5 SpMV over tile ranges, with post-join carry
-/// merge.
+/// merge (spawn fallback; see [`spmv_csr5_on`]).
 pub fn spmv_csr5_threaded(
     csr5: &Csr5,
     x: &[f64],
     per_thread: &[(usize, usize)],
 ) -> ExecResult {
+    spmv_csr5_on(None, csr5, x, per_thread)
+}
+
+/// CSR5 SpMV over tile ranges on an optional pool. Empty tile ranges
+/// are skipped; boundary-row carries are merged by the calling thread
+/// after the latch (the CSR5 cross-thread reduction step).
+pub fn spmv_csr5_on(
+    pool: Option<&ExecPool>,
+    csr5: &Csr5,
+    x: &[f64],
+    per_thread: &[(usize, usize)],
+) -> ExecResult {
+    let active: Vec<(usize, usize)> = per_thread
+        .iter()
+        .copied()
+        .filter(|&(t0, t1)| t1 > t0)
+        .collect();
     let mut y = vec![0.0f64; csr5.n_rows];
-    let ptr = SendPtr(y.as_mut_ptr());
+    let mut carries: Vec<Vec<TileCarry>> = vec![Vec::new(); active.len()];
+    let yptr = SendPtr(y.as_mut_ptr());
+    let cptr = SendPtr(carries.as_mut_ptr());
     let t0 = Instant::now();
-    let carries: Vec<Vec<TileCarry>> = std::thread::scope(|s| {
-        let handles: Vec<_> = per_thread
-            .iter()
-            .map(|&(a, b)| {
-                let ptr = &ptr;
-                s.spawn(move || {
-                    // SAFETY: spmv_tiles writes only rows fully
-                    // contained in its tile range; boundary rows are
-                    // returned as carries, not written.
-                    let yslice = unsafe {
-                        std::slice::from_raw_parts_mut(ptr.0, csr5.n_rows)
-                    };
-                    csr5.spmv_tiles(a, b, x, yslice)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    for cs in carries {
+    let work = |slot: usize| {
+        // SAFETY: spmv_tiles writes only rows fully contained in its
+        // tile range; boundary rows come back as carries. Each slot
+        // writes its own carries cell.
+        let yslice =
+            unsafe { std::slice::from_raw_parts_mut(yptr.0, csr5.n_rows) };
+        let (a, b) = active[slot];
+        let got = csr5.spmv_tiles(a, b, x, yslice);
+        unsafe { *cptr.0.add(slot) = got };
+    };
+    dispatch(pool, active.len(), &work);
+    for cs in &carries {
         for c in cs {
             y[c.row] += c.value;
         }
@@ -130,7 +233,7 @@ pub fn spmv_csr5_threaded(
     ExecResult {
         y,
         wall_seconds: t0.elapsed().as_secs_f64(),
-        threads: per_thread.len(),
+        threads: active.len().max(1),
     }
 }
 
@@ -157,7 +260,13 @@ pub struct SpmmResult {
     pub n_rows: usize,
     pub batch: usize,
     pub wall_seconds: f64,
+    /// Effective parallelism (workers with nonempty row ranges).
     pub threads: usize,
+    /// The schedule that actually executed. Tile (CSR5) plans remap
+    /// to [`Schedule::CsrRowBalanced`] for multi-vector batches —
+    /// telemetry reports this field, not the plan's nominal schedule,
+    /// so replay tables stop attributing SpMM throughput to CSR5.
+    pub schedule: Schedule,
 }
 
 impl SpmmResult {
@@ -226,12 +335,20 @@ fn spmm_rows_blocked(
     }
 }
 
+/// The row-space schedule a batched SpMM actually runs under. Tile
+/// (CSR5) schedules have no multi-vector kernel; they remap to
+/// `CsrRowBalanced`, the row-space schedule with the same
+/// load-balancing intent.
+pub fn effective_spmm_schedule(schedule: Schedule) -> Schedule {
+    match schedule {
+        Schedule::Csr5Tiles { .. } => Schedule::CsrRowBalanced,
+        s => s,
+    }
+}
+
 /// Multi-threaded batched SpMM: `Y = A X` for `batch` interleaved
-/// vectors (`xs[i * batch + j]`), threads over row partitions.
-///
-/// Tile (CSR5) schedules have no multi-vector kernel; they are
-/// remapped to `CsrRowBalanced`, the row-space schedule with the same
-/// load-balancing intent, so a cached tile plan still serves batches.
+/// vectors (`xs[i * batch + j]`), threads over row partitions (spawn
+/// fallback; see [`spmm_threaded_on`]).
 pub fn spmm_threaded(
     csr: &Csr,
     xs: &[f64],
@@ -239,43 +356,69 @@ pub fn spmm_threaded(
     schedule: Schedule,
     n_threads: usize,
 ) -> SpmmResult {
-    assert!(batch > 0, "batch must be >= 1");
-    assert_eq!(xs.len(), csr.n_cols * batch, "xs length != n_cols * batch");
-    let schedule = match schedule {
-        Schedule::Csr5Tiles { .. } => Schedule::CsrRowBalanced,
-        s => s,
-    };
+    spmm_threaded_on(None, csr, xs, batch, schedule, n_threads)
+}
+
+/// Batched SpMM on an optional pool: partition under the effective
+/// (row-space) schedule, then execute.
+pub fn spmm_threaded_on(
+    pool: Option<&ExecPool>,
+    csr: &Csr,
+    xs: &[f64],
+    batch: usize,
+    schedule: Schedule,
+    n_threads: usize,
+) -> SpmmResult {
+    let schedule = effective_spmm_schedule(schedule);
     let part = partition(csr, schedule, n_threads);
     debug_assert!(part.validate(csr).is_ok());
     let per_thread = match part {
         Partition::Rows { per_thread } => per_thread,
         Partition::Tiles { .. } => unreachable!("tile schedules remapped"),
     };
+    spmm_partitioned(pool, csr, xs, batch, &per_thread, schedule)
+}
+
+/// Batched SpMM over a *pre-materialized* row partition — the serving
+/// hot path (plans memoize `per_thread` at build time). `schedule` is
+/// recorded on the result as the effective executed schedule.
+pub fn spmm_partitioned(
+    pool: Option<&ExecPool>,
+    csr: &Csr,
+    xs: &[f64],
+    batch: usize,
+    per_thread: &[Vec<(usize, usize)>],
+    schedule: Schedule,
+) -> SpmmResult {
+    assert!(batch > 0, "batch must be >= 1");
+    assert_eq!(xs.len(), csr.n_cols * batch, "xs length != n_cols * batch");
+    let active: Vec<&[(usize, usize)]> = per_thread
+        .iter()
+        .map(|ranges| ranges.as_slice())
+        .filter(|ranges| slot_has_rows(ranges))
+        .collect();
     let mut y = vec![0.0f64; csr.n_rows * batch];
     let ptr = SendPtr(y.as_mut_ptr());
     let t0 = Instant::now();
-    std::thread::scope(|s| {
-        for ranges in &per_thread {
-            let ptr = &ptr;
-            s.spawn(move || {
-                // SAFETY: row ranges are disjoint across threads
-                // (Partition::validate), and row r owns the disjoint
-                // slice y[r*batch .. (r+1)*batch].
-                let yslice = unsafe {
-                    std::slice::from_raw_parts_mut(ptr.0, csr.n_rows * batch)
-                };
-                for &(r0, r1) in ranges {
-                    spmm_rows_blocked(csr, xs, batch, r0, r1, yslice);
-                }
-            });
+    let work = |slot: usize| {
+        // SAFETY: row ranges are disjoint across slots
+        // (Partition::validate), and row r owns the disjoint slice
+        // y[r*batch .. (r+1)*batch].
+        let yslice = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0, csr.n_rows * batch)
+        };
+        for &(r0, r1) in active[slot] {
+            spmm_rows_blocked(csr, xs, batch, r0, r1, yslice);
         }
-    });
+    };
+    dispatch(pool, active.len(), &work);
     SpmmResult {
         y,
         n_rows: csr.n_rows,
         batch,
         wall_seconds: t0.elapsed().as_secs_f64(),
-        threads: per_thread.len(),
+        threads: active.len().max(1),
+        schedule,
     }
 }
 
@@ -293,6 +436,7 @@ pub fn spmm_sequential(csr: &Csr, xs: &[f64], batch: usize) -> SpmmResult {
         batch,
         wall_seconds: t0.elapsed().as_secs_f64(),
         threads: 1,
+        schedule: Schedule::CsrRowStatic,
     }
 }
 
@@ -342,6 +486,55 @@ mod tests {
                 assert_eq!(got.threads, nt);
             }
         }
+    }
+
+    #[test]
+    fn pooled_matches_spawn_and_sequential() {
+        let mut rng = Pcg32::new(0xB001);
+        let csr = random_csr(&mut rng, 400, 5);
+        let x: Vec<f64> = (0..400).map(|_| rng.gen_f64()).collect();
+        let want = spmv_sequential(&csr, &x).y;
+        let pool = ExecPool::new(4);
+        for sched in [
+            Schedule::CsrRowStatic,
+            Schedule::CsrRowBalanced,
+            Schedule::Csr5Tiles { tile_nnz: 32 },
+            Schedule::CsrDynamic { chunk: 16 },
+        ] {
+            for nt in [1, 3, 8] {
+                let pooled =
+                    spmv_threaded_on(Some(&pool), &csr, &x, sched, nt);
+                let spawned = spmv_threaded(&csr, &x, sched, nt);
+                assert_close(&pooled.y, &want);
+                assert_close(&pooled.y, &spawned.y);
+                assert_eq!(pooled.threads, spawned.threads, "{sched:?}");
+            }
+        }
+        assert_eq!(pool.n_workers(), 4, "pool must not grow");
+    }
+
+    #[test]
+    fn empty_partition_slots_are_skipped() {
+        // More threads than rows: the surplus slots have no rows and
+        // must neither spawn nor count toward effective parallelism.
+        let csr = Csr::identity(3);
+        let x = vec![1.0; 3];
+        for sched in [
+            Schedule::CsrRowStatic,
+            Schedule::CsrRowBalanced,
+            Schedule::CsrDynamic { chunk: 1 },
+        ] {
+            let r = spmv_threaded(&csr, &x, sched, 8);
+            assert_eq!(r.y, vec![1.0; 3], "{sched:?}");
+            assert!(
+                r.threads <= 3,
+                "{sched:?}: {} effective workers for 3 rows",
+                r.threads
+            );
+        }
+        let s = spmm_threaded(&csr, &x, 1, Schedule::CsrRowStatic, 8);
+        assert!(s.threads <= 3, "spmm: {} workers for 3 rows", s.threads);
+        assert_close(&s.y, &x);
     }
 
     #[test]
@@ -417,6 +610,7 @@ mod tests {
             batch: 4,
             wall_seconds: 0.0,
             threads: 1,
+            schedule: Schedule::CsrRowStatic,
         };
         assert_eq!(s.gflops(1_000_000), 0.0);
         assert!(s.gflops(1_000_000).is_finite());
@@ -451,6 +645,64 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn spmm_records_effective_schedule() {
+        let mut rng = Pcg32::new(0x5B35);
+        let csr = random_csr(&mut rng, 128, 4);
+        let xs = vec![1.0; 128 * 2];
+        let tiled = spmm_threaded(
+            &csr,
+            &xs,
+            2,
+            Schedule::Csr5Tiles { tile_nnz: 32 },
+            4,
+        );
+        assert_eq!(
+            tiled.schedule,
+            Schedule::CsrRowBalanced,
+            "tile plans remap to the balanced row schedule for SpMM"
+        );
+        let rows = spmm_threaded(&csr, &xs, 2, Schedule::CsrRowStatic, 4);
+        assert_eq!(rows.schedule, Schedule::CsrRowStatic);
+        assert_eq!(
+            effective_spmm_schedule(Schedule::Csr5Tiles { tile_nnz: 7 }),
+            Schedule::CsrRowBalanced
+        );
+        assert_eq!(
+            effective_spmm_schedule(Schedule::CsrDynamic { chunk: 4 }),
+            Schedule::CsrDynamic { chunk: 4 }
+        );
+    }
+
+    #[test]
+    fn spmm_pooled_matches_spawn() {
+        let mut rng = Pcg32::new(0x5B36);
+        let csr = random_csr(&mut rng, 200, 5);
+        let pool = ExecPool::new(3);
+        for batch in [1usize, 7, 8, 9] {
+            let vectors = random_vectors(&mut rng, 200, batch);
+            let xs = pack_vectors(&vectors);
+            let pooled = spmm_threaded_on(
+                Some(&pool),
+                &csr,
+                &xs,
+                batch,
+                Schedule::CsrRowBalanced,
+                4,
+            );
+            let spawned = spmm_threaded(
+                &csr,
+                &xs,
+                batch,
+                Schedule::CsrRowBalanced,
+                4,
+            );
+            assert_close(&pooled.y, &spawned.y);
+            assert_eq!(pooled.threads, spawned.threads);
+            assert_eq!(pooled.schedule, spawned.schedule);
         }
     }
 

@@ -1,0 +1,429 @@
+//! Persistent panel-pinned executor pool.
+//!
+//! The paper's point about parallel-runtime overheads ("the overhead
+//! of thread communication ... is nonnegligible") cuts both ways: the
+//! serving hot path used to pay it on *every* request by spawning
+//! fresh OS threads through `std::thread::scope`. For the
+//! small/medium matrices a request-serving engine mostly sees, the
+//! spawn+join tax rivals the kernel itself. An [`ExecPool`] pays it
+//! once: workers are created at pool construction, (modeled) pinned
+//! to a panel's core range, and reused across requests via a
+//! Condvar-latch handoff — a dispatch is one lock, one wake, one
+//! join-latch wait, no thread creation.
+//!
+//! Work items are *slots* (partition indices). A job publishes a
+//! slot-indexed closure plus a slot count; the dispatching thread and
+//! every resident worker pull slot indices under the pool mutex until
+//! none remain, so a pool narrower than the partition still covers
+//! every slot, and a partition narrower than the pool leaves the
+//! excess workers parked. The dispatcher participates in the work and
+//! only returns once every slot has completed, which is what makes
+//! handing non-`'static` borrows to the resident workers sound (the
+//! same contract as `std::thread::scope`, without the spawn).
+//!
+//! Concurrent dispatches from different threads (e.g. two queue
+//! workers sharing one shard's pool) serialize on an internal lock:
+//! one panel's cores can only run one kernel at a time anyway, and
+//! serializing keeps the job slot single-owner.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased, lifetime-erased slot closure. Only ever dereferenced
+/// while the dispatching `run` call is blocked on the job's
+/// completion latch, which keeps the borrow alive.
+#[derive(Clone, Copy)]
+struct RawWork(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are
+// fine) and `run` guarantees it outlives every use (see module docs).
+unsafe impl Send for RawWork {}
+
+/// One published job: a slot closure, how many slots it has, and the
+/// claim/completion cursors of the latch.
+struct Job {
+    work: RawWork,
+    n_slots: usize,
+    /// Next unclaimed slot index.
+    next: usize,
+    /// Slots whose closure has returned (or unwound).
+    completed: usize,
+    /// A slot closure panicked; `run` re-raises after the latch.
+    panicked: bool,
+}
+
+struct State {
+    /// Bumped once per published job so parked workers can tell a new
+    /// job from the one they already drained.
+    epoch: u64,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The dispatcher parks here until `completed == n_slots`.
+    done_cv: Condvar,
+}
+
+impl Shared {
+    /// Lock the pool state, recovering from poisoning. The guarded
+    /// sections are pure field updates that cannot themselves panic;
+    /// recovery is defense in depth so an unforeseen poisoning (e.g.
+    /// a panicking panic-hook) degrades gracefully instead of
+    /// cascading `unwrap` failures through every worker.
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Claim the next unclaimed slot of the current job, if any.
+    fn claim(st: &mut State) -> Option<(RawWork, usize)> {
+        let job = st.job.as_mut()?;
+        if job.next >= job.n_slots {
+            return None;
+        }
+        let slot = job.next;
+        job.next += 1;
+        Some((job.work, slot))
+    }
+
+    /// Run one claimed slot outside the lock, then record completion.
+    fn complete(&self, raw: RawWork, slot: usize) {
+        // SAFETY: `run` holds the dispatch lock and blocks on the
+        // completion latch until this increment lands, so the
+        // borrowed closure is still alive here.
+        let work = unsafe { &*raw.0 };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || work(slot),
+        ))
+        .is_ok();
+        let mut st = self.lock();
+        if let Some(job) = st.job.as_mut() {
+            job.completed += 1;
+            if !ok {
+                job.panicked = true;
+            }
+            if job.completed == job.n_slots {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// A persistent worker pool for the threaded SpMV/SpMM executors.
+///
+/// Construction spawns the workers once; [`ExecPool::run`] reuses
+/// them for every subsequent dispatch. Dropping the pool shuts the
+/// workers down and joins them.
+pub struct ExecPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes dispatches: the job slot is single-owner.
+    dispatch: Mutex<()>,
+    /// Modeled core range `[c0, c1)` the workers are pinned to (the
+    /// same modeling convention as `service::shard` — std exposes no
+    /// affinity API; what matters is the sizing and the disjointness
+    /// across pools).
+    cores: Option<(usize, usize)>,
+    jobs: AtomicU64,
+}
+
+impl ExecPool {
+    /// Pool with `n_workers` resident workers, unpinned.
+    pub fn new(n_workers: usize) -> Self {
+        Self::build(n_workers.max(1), None)
+    }
+
+    /// Pool whose workers are (modeled) pinned to the core range
+    /// `[c0, c1)` — one worker per core, the per-shard sizing rule
+    /// (`sched::panel_core_range` hands each shard its panel block).
+    pub fn pinned(cores: (usize, usize)) -> Self {
+        let width = cores.1.saturating_sub(cores.0).max(1);
+        Self::build(width, Some(cores))
+    }
+
+    fn build(n_workers: usize, cores: Option<(usize, usize)>) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..n_workers)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        ExecPool {
+            shared,
+            handles,
+            dispatch: Mutex::new(()),
+            cores,
+            jobs: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of resident workers. Constant for the pool's lifetime —
+    /// the reuse stress test pins this.
+    pub fn n_workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// The modeled core range the workers are pinned to, if any.
+    pub fn cores(&self) -> Option<(usize, usize)> {
+        self.cores
+    }
+
+    /// Jobs dispatched so far (monotone; telemetry/tests).
+    pub fn jobs_dispatched(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Execute `work(slot)` for every `slot in 0..n_slots` across the
+    /// resident workers plus the calling thread, returning once every
+    /// slot has completed. Slots must be safe to run concurrently
+    /// (the executors hand each slot disjoint output rows).
+    ///
+    /// Panics if any slot closure panicked (after the latch, so the
+    /// pool stays consistent and reusable).
+    pub fn run(&self, n_slots: usize, work: &(dyn Fn(usize) + Sync)) {
+        if n_slots == 0 {
+            return;
+        }
+        let _dispatch = self
+            .dispatch
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        if n_slots == 1 {
+            // Single-slot fast path: run inline on the dispatcher —
+            // no job publication, no worker wakeups. Tiny matrices
+            // (the common serving case) pay one lock, zero context
+            // switches.
+            work(0);
+            return;
+        }
+        let raw = erase(work);
+        {
+            let mut st = self.shared.lock();
+            st.epoch += 1;
+            st.job = Some(Job {
+                work: raw,
+                n_slots,
+                next: 0,
+                completed: 0,
+                panicked: false,
+            });
+        }
+        // The dispatcher claims one slot itself, so n_slots - 1
+        // helpers suffice; waking the whole pool for a narrow job
+        // would just stampede the state mutex. A worker that misses a
+        // notification (busy finishing the previous job) still finds
+        // the new epoch when it re-locks, so targeted wakeups cannot
+        // strand work.
+        if n_slots - 1 >= self.handles.len() {
+            self.shared.work_cv.notify_all();
+        } else {
+            for _ in 0..n_slots - 1 {
+                self.shared.work_cv.notify_one();
+            }
+        }
+        // Participate: claim slots alongside the workers, then wait
+        // out the latch. With zero live workers the dispatcher alone
+        // still drains every slot — `run` can never deadlock.
+        let panicked = loop {
+            let mut st = self.shared.lock();
+            if let Some((w, slot)) = Shared::claim(&mut st) {
+                drop(st);
+                self.shared.complete(w, slot);
+                continue;
+            }
+            let done = loop {
+                let job = st.job.as_ref().expect("job owned by dispatcher");
+                if job.completed == job.n_slots {
+                    break job.panicked;
+                }
+                st = self
+                    .shared
+                    .done_cv
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            };
+            st.job = None;
+            break done;
+        };
+        if panicked {
+            panic!("ExecPool: a slot closure panicked during dispatch");
+        }
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        self.shared.lock().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Erase the borrow lifetime of a slot closure so it can sit in the
+/// pool's (`'static`) job slot.
+///
+/// SAFETY contract (upheld by [`ExecPool::run`]): the caller must not
+/// return until every use of the erased pointer has completed — the
+/// completion latch is what enforces it, exactly like
+/// `std::thread::scope`'s implicit join.
+fn erase<'a>(work: &'a (dyn Fn(usize) + Sync + 'a)) -> RawWork {
+    let short: *const (dyn Fn(usize) + Sync + 'a) = work;
+    // SAFETY: layout-identical fat pointers; only the lifetime bound
+    // on the trait object changes.
+    let long: *const (dyn Fn(usize) + Sync + 'static) =
+        unsafe { std::mem::transmute(short) };
+    RawWork(long)
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let mut st = shared.lock();
+        loop {
+            if st.shutdown {
+                return;
+            }
+            if st.epoch != seen_epoch && st.job.is_some() {
+                break;
+            }
+            st = shared
+                .work_cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        seen_epoch = st.epoch;
+        while let Some((w, slot)) = Shared::claim(&mut st) {
+            drop(st);
+            shared.complete(w, slot);
+            st = shared.lock();
+        }
+        drop(st);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn covers_every_slot_once() {
+        let pool = ExecPool::new(4);
+        for n_slots in [0usize, 1, 3, 4, 7, 64] {
+            let hits: Vec<AtomicUsize> =
+                (0..n_slots).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n_slots, &|s| {
+                hits[s].fetch_add(1, Ordering::Relaxed);
+            });
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(
+                    h.load(Ordering::Relaxed),
+                    1,
+                    "slot {s} of {n_slots}"
+                );
+            }
+        }
+        assert_eq!(pool.jobs_dispatched(), 5, "n_slots == 0 is a no-op");
+    }
+
+    #[test]
+    fn reuses_the_same_workers_across_many_jobs() {
+        let pool = ExecPool::new(3);
+        assert_eq!(pool.n_workers(), 3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..500 {
+            pool.run(5, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 2500);
+        assert_eq!(pool.n_workers(), 3, "worker set must not grow");
+        assert_eq!(pool.jobs_dispatched(), 500);
+    }
+
+    #[test]
+    fn borrows_local_state_like_scoped_threads() {
+        let pool = ExecPool::new(2);
+        let mut out = vec![0usize; 16];
+        {
+            struct SendPtr(*mut usize);
+            unsafe impl Send for SendPtr {}
+            unsafe impl Sync for SendPtr {}
+            let ptr = SendPtr(out.as_mut_ptr());
+            pool.run(16, &|s| {
+                // SAFETY: each slot writes its own element.
+                unsafe { *ptr.0.add(s) = s * s };
+            });
+        }
+        for (s, v) in out.iter().enumerate() {
+            assert_eq!(*v, s * s);
+        }
+    }
+
+    #[test]
+    fn concurrent_dispatchers_serialize_safely() {
+        let pool = ExecPool::new(2);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        pool.run(3, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 3);
+    }
+
+    #[test]
+    fn pinned_pool_sizes_from_core_range() {
+        let pool = ExecPool::pinned((8, 16));
+        assert_eq!(pool.n_workers(), 8);
+        assert_eq!(pool.cores(), Some((8, 16)));
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn panicking_slot_does_not_wedge_the_pool() {
+        let pool = ExecPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|s| {
+                if s == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "slot panic must propagate to the dispatcher");
+        // The pool is still serviceable afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(6, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 6);
+    }
+}

@@ -57,8 +57,10 @@ fn run(cli: Cli) -> Result<()> {
             shards,
             queue_cap,
             policy,
+            pooled,
         } => serve_bench(
             suite, matrices, batches, workers, shards, queue_cap, policy,
+            pooled,
         ),
         Command::Replay {
             suite,
@@ -74,6 +76,7 @@ fn run(cli: Cli) -> Result<()> {
             shards,
             queue_cap,
             policy,
+            pooled,
         } => replay_cmd(ReplayCmd {
             suite,
             pattern,
@@ -88,11 +91,13 @@ fn run(cli: Cli) -> Result<()> {
             shards,
             queue_cap,
             policy,
+            pooled,
         }),
         Command::Info => info(),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_bench(
     suite: SuiteSpec,
     matrices: usize,
@@ -101,12 +106,18 @@ fn serve_bench(
     shards: usize,
     queue_cap: usize,
     policy: PlacementPolicy,
+    pooled: bool,
 ) -> Result<()> {
     eprintln!("registering {matrices} corpus matrices...");
     let mut reg = MatrixRegistry::new();
     let ids = reg.register_suite(&suite, Some(matrices));
-    let engine =
-        ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
+    let engine = ServeEngine::with_mode(
+        pooled,
+        reg,
+        Planner::Heuristic,
+        PlanConfig::default(),
+    );
+    let mode = if pooled { "pool" } else { "spawn" };
 
     // --- batched SpMM vs repeated single-vector SpMV -----------------
     let bench_cfg = BenchConfig {
@@ -117,7 +128,10 @@ fn serve_bench(
         max_seconds: 1.5,
     };
     let mut t = Table::new(
-        "Batched SpMM vs repeated single-vector SpMV (cached plans)",
+        format!(
+            "Batched SpMM vs repeated single-vector SpMV \
+             (cached plans, {mode} dispatch)"
+        ),
         &["matrix", "nnz", "batch", "spmm Gflops", "spmv Gflops", "win"],
     );
     // The largest matrices: the memory-bound regime where streaming A
@@ -137,11 +151,16 @@ fn serve_bench(
             let xs_refs: Vec<&[f64]> = (0..b).map(|_| x.as_slice()).collect();
             let packed = exec::pack_vectors(&xs_refs);
             let spmm = bench("spmm", &bench_cfg, || {
-                black_box(plan.execute_batch(&entry.csr, &packed, b));
+                black_box(plan.execute_batch_on(
+                    &entry.csr,
+                    &packed,
+                    b,
+                    engine.pool(),
+                ));
             });
             let spmv = bench("spmv", &bench_cfg, || {
                 for _ in 0..b {
-                    black_box(plan.execute(&entry.csr, &x));
+                    black_box(plan.execute_on(&entry.csr, &x, engine.pool()));
                 }
             });
             let flops = 2.0 * nnz as f64 * b as f64;
@@ -183,12 +202,17 @@ fn serve_bench(
             })
             .collect();
     if shards <= 1 {
-        // Legacy path: one global queue, one undifferentiated pool —
-        // the topology-blind baseline of the A/B.
-        let engine =
-            ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
+        // Legacy path: one global queue, one undifferentiated worker
+        // set — the topology-blind baseline of the A/B.
+        let engine = ServeEngine::with_mode(
+            pooled,
+            reg,
+            Planner::Heuristic,
+            PlanConfig::default(),
+        );
         eprintln!(
-            "live global queue: {n_req} zipf requests, {workers} workers..."
+            "live global queue ({mode} dispatch): {n_req} zipf requests, \
+             {workers} workers..."
         );
         let queue = RequestQueue::bounded(queue_cap);
         let t0 = std::time::Instant::now();
@@ -238,6 +262,7 @@ fn serve_bench(
             max_batch: 16,
             deadline_ms: 0.0,
             policy,
+            pooled,
         };
         let server = ShardedServer::with_weights(
             registry.clone(),
@@ -247,8 +272,8 @@ fn serve_bench(
             &weights,
         );
         eprintln!(
-            "live sharded serving: {n_req} zipf requests, {shards} shards x \
-             {workers} workers, queue cap {queue_cap}..."
+            "live sharded serving ({mode} dispatch): {n_req} zipf requests, \
+             {shards} shards x {workers} workers, queue cap {queue_cap}..."
         );
         let t0 = std::time::Instant::now();
         let served = std::thread::scope(|s| {
@@ -302,6 +327,7 @@ struct ReplayCmd {
     shards: usize,
     queue_cap: usize,
     policy: PlacementPolicy,
+    pooled: bool,
 }
 
 fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
@@ -346,12 +372,15 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
     let rcfg = ReplayConfig {
         max_batch: cmd.max_batch,
         queue_cap: cmd.queue_cap,
+        pooled: cmd.pooled,
         ..Default::default()
     };
     eprintln!(
         "replaying {requests} requests ({arrivals:?}, {popularity:?}, \
-         seed {:#x}, {} shard(s))...",
-        cmd.seed, cmd.shards
+         seed {:#x}, {} shard(s), {} dispatch)...",
+        cmd.seed,
+        cmd.shards,
+        if cmd.pooled { "pool" } else { "spawn" }
     );
     if cmd.shards > 1 {
         let registry = std::sync::Arc::new(reg);
@@ -372,7 +401,8 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
         }
         return Ok(());
     }
-    let engine = ServeEngine::new(reg, planner, PlanConfig::default());
+    let engine =
+        ServeEngine::with_mode(cmd.pooled, reg, planner, PlanConfig::default());
     let report = service::replay(&engine, &ids, &wspec, &rcfg)?;
     report.print();
     println!(

@@ -121,9 +121,27 @@ impl Partition {
     }
 }
 
+thread_local! {
+    /// Per-thread count of partition materializations — the
+    /// regression probe for "a served request never re-partitions":
+    /// plans memoize their [`Partition`] at build time, so repeated
+    /// plan executions must leave this counter untouched on the
+    /// serving thread (pinned by `service::plan` tests).
+    static PARTITION_CALLS: std::cell::Cell<u64> =
+        const { std::cell::Cell::new(0) };
+}
+
+/// Number of [`partition`] calls made by the *current thread* so far.
+/// Monotone; compare two readings to assert a code path did (or did
+/// not) re-partition.
+pub fn partition_calls() -> u64 {
+    PARTITION_CALLS.with(|c| c.get())
+}
+
 /// Build the partition of `csr` for `n_threads` under `schedule`.
 pub fn partition(csr: &Csr, schedule: Schedule, n_threads: usize) -> Partition {
     assert!(n_threads > 0);
+    PARTITION_CALLS.with(|c| c.set(c.get() + 1));
     match schedule {
         Schedule::CsrRowStatic => {
             let n = csr.n_rows;

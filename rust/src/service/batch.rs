@@ -9,6 +9,11 @@
 //! each time, and it can be constructed with a bounded capacity for
 //! admission control ([`RequestQueue::bounded`] + [`RequestQueue::try_push`]).
 //!
+//! Kernel dispatch mode is the engine's: a pooled [`super::ServeEngine`]
+//! runs every drained batch on its persistent `exec::ExecPool` workers
+//! (no per-request thread spawn), a spawn-mode engine falls back to
+//! scoped threads — the drain loop is identical either way.
+//!
 //! Worker faults are data, not crashes: a request against an
 //! unregistered matrix id (or with a wrong-length vector) is counted
 //! in telemetry as an error outcome and the pool keeps serving.

@@ -59,7 +59,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::exec;
+use crate::exec::{self, ExecPool};
 use crate::sched::Schedule;
 
 /// Outcome of one (possibly coalesced) execution.
@@ -68,22 +68,36 @@ pub struct BatchOutcome {
     pub ys: Vec<Vec<f64>>,
     pub wall_seconds: f64,
     pub plan_hit: bool,
+    /// The *effective executed* schedule: batched dispatches against
+    /// tile (CSR5) plans report the `CsrRowBalanced` remap they
+    /// actually ran, not the plan's nominal tile schedule.
     pub schedule: Schedule,
     pub threads: usize,
 }
 
-/// The serving engine: registry + plan cache + telemetry. Shared by
-/// reference across worker threads (all interior state is locked).
-/// The registry is behind an `Arc` so a sharded deployment can give
-/// every shard its own engine view (private plan cache + telemetry)
-/// over one loaded matrix store.
+/// The serving engine: registry + plan cache + telemetry + (when
+/// serving) a persistent executor pool. Shared by reference across
+/// worker threads (all interior state is locked). The registry is
+/// behind an `Arc` so a sharded deployment can give every shard its
+/// own engine view (private plan cache + telemetry) over one loaded
+/// matrix store.
+///
+/// A pooled engine executes every request on its resident
+/// [`ExecPool`] workers — the hot path pays no per-request thread
+/// spawn and no re-partitioning (plans memoize their partition). The
+/// spawn-mode constructors keep the scoped-thread fallback for
+/// one-shot CLI paths and as the A/B baseline.
 pub struct ServeEngine {
     pub registry: Arc<MatrixRegistry>,
     pub plans: PlanCache,
     pub telemetry: Telemetry,
+    pool: Option<ExecPool>,
 }
 
 impl ServeEngine {
+    /// Spawn-mode engine (scoped threads per request) — the one-shot
+    /// fallback and A/B baseline. Serving deployments should prefer
+    /// [`ServeEngine::pooled`].
     pub fn new(
         registry: MatrixRegistry,
         planner: Planner,
@@ -92,7 +106,7 @@ impl ServeEngine {
         Self::shared(Arc::new(registry), planner, cfg)
     }
 
-    /// Engine view over an already-shared registry (one per shard).
+    /// Spawn-mode engine view over an already-shared registry.
     pub fn shared(
         registry: Arc<MatrixRegistry>,
         planner: Planner,
@@ -102,7 +116,98 @@ impl ServeEngine {
             registry,
             plans: PlanCache::new(planner, cfg),
             telemetry: Telemetry::new(),
+            pool: None,
         }
+    }
+
+    /// Engine with a persistent executor pool sized to the plan
+    /// thread count — requests reuse the resident workers.
+    ///
+    /// Trade-off: the pool serializes dispatches, so a *global*
+    /// pooled engine shared by several queue workers runs one kernel
+    /// at a time (plan-width wide). That wins whenever dispatch
+    /// overhead dominates — the small/medium-matrix traffic a serving
+    /// engine mostly sees — but for compute-heavy corpora on wide
+    /// hosts the sharded deployment is the right shape: one pinned
+    /// pool per shard keeps kernels concurrent across panels
+    /// ([`ShardedServer`], the `serve-bench` default).
+    pub fn pooled(
+        registry: MatrixRegistry,
+        planner: Planner,
+        cfg: PlanConfig,
+    ) -> Self {
+        Self::shared_pooled(Arc::new(registry), planner, cfg)
+    }
+
+    /// Pooled engine view over an already-shared registry (see
+    /// [`ServeEngine::pooled`] for the serialization trade-off).
+    pub fn shared_pooled(
+        registry: Arc<MatrixRegistry>,
+        planner: Planner,
+        cfg: PlanConfig,
+    ) -> Self {
+        let pool = ExecPool::new(cfg.n_threads.max(1));
+        let mut engine = Self::shared(registry, planner, cfg);
+        engine.pool = Some(pool);
+        engine
+    }
+
+    /// Pooled engine view whose workers are (modeled) pinned to the
+    /// core range `[c0, c1)` — one worker per core. The per-shard
+    /// constructor: `service::shard` hands each shard its
+    /// `sched::panel_core_range` block.
+    ///
+    /// Plans built by a pinned engine partition one slot per panel
+    /// core (`n_threads` is widened to the core-range size), so a
+    /// single dispatch saturates the panel's resident workers —
+    /// without this, pool-serialized 4-wide kernels would leave half
+    /// an 8-core panel parked and lose to the spawn baseline's
+    /// oversubscription.
+    pub fn shared_pinned(
+        registry: Arc<MatrixRegistry>,
+        planner: Planner,
+        mut cfg: PlanConfig,
+        cores: (usize, usize),
+    ) -> Self {
+        cfg.n_threads = cores.1.saturating_sub(cores.0).max(1);
+        let pool = ExecPool::pinned(cores);
+        let mut engine = Self::shared(registry, planner, cfg);
+        engine.pool = Some(pool);
+        engine
+    }
+
+    /// Engine in the given dispatch mode — the CLI's `--pool` /
+    /// `--spawn` toggle in constructor form.
+    pub fn with_mode(
+        pooled: bool,
+        registry: MatrixRegistry,
+        planner: Planner,
+        cfg: PlanConfig,
+    ) -> Self {
+        Self::shared_with_mode(pooled, Arc::new(registry), planner, cfg)
+    }
+
+    /// [`ServeEngine::with_mode`] over an already-shared registry.
+    pub fn shared_with_mode(
+        pooled: bool,
+        registry: Arc<MatrixRegistry>,
+        planner: Planner,
+        cfg: PlanConfig,
+    ) -> Self {
+        if pooled {
+            Self::shared_pooled(registry, planner, cfg)
+        } else {
+            Self::shared(registry, planner, cfg)
+        }
+    }
+
+    /// The engine's resident executor pool, if it serves pooled.
+    pub fn pool(&self) -> Option<&ExecPool> {
+        self.pool.as_ref()
+    }
+
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
     }
 
     /// Execute a coalesced group of `y = A x` requests against one
@@ -131,28 +236,25 @@ impl ServeEngine {
         }
         let (plan, plan_hit) =
             self.plans.plan_for(entry.fingerprint, &entry.csr);
+        let pool = self.pool.as_ref();
         let (ys, wall_seconds, threads) = if xs.len() == 1 {
-            let r = plan.execute(&entry.csr, xs[0]);
+            let r = plan.execute_on(&entry.csr, xs[0], pool);
             (vec![r.y], r.wall_seconds, r.threads)
         } else {
             let packed = exec::pack_vectors(xs);
-            let r = plan.execute_batch(&entry.csr, &packed, xs.len());
+            let r = plan.execute_batch_on(&entry.csr, &packed, xs.len(), pool);
             let ys = (0..xs.len()).map(|j| r.column(j)).collect();
             (ys, r.wall_seconds, r.threads)
         };
+        let schedule = plan.effective_schedule(xs.len());
         self.telemetry.record_batch(
             matrix_id,
             xs.len(),
             wall_seconds,
             2.0 * entry.csr.nnz() as f64 * xs.len() as f64,
+            &schedule.name(),
         );
-        Ok(BatchOutcome {
-            ys,
-            wall_seconds,
-            plan_hit,
-            schedule: plan.schedule,
-            threads,
-        })
+        Ok(BatchOutcome { ys, wall_seconds, plan_hit, schedule, threads })
     }
 }
 
@@ -201,6 +303,60 @@ mod tests {
     }
 
     #[test]
+    fn pooled_engine_matches_spawn_and_reuses_workers() {
+        let mut rng = Pcg32::new(0xE0E4);
+        let csr = generators::random_uniform(200, 6, &mut rng);
+        let x: Vec<f64> = (0..200).map(|_| rng.gen_f64()).collect();
+        let mut want = vec![0.0; 200];
+        csr.spmv(&x, &mut want);
+        let mut reg = MatrixRegistry::new();
+        reg.register("m", csr);
+        let engine =
+            ServeEngine::pooled(reg, Planner::Heuristic, PlanConfig::default());
+        assert!(engine.is_pooled());
+        let workers = engine.pool().unwrap().n_workers();
+        for _ in 0..25 {
+            let out = engine.execute_batch(0, &[&x, &x]).unwrap();
+            for y in &out.ys {
+                for (i, (a, b)) in want.iter().zip(y).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                        "row {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+        // Many small requests, zero thread growth: the reuse contract.
+        assert_eq!(engine.pool().unwrap().n_workers(), workers);
+        assert!(engine.pool().unwrap().jobs_dispatched() >= 25);
+    }
+
+    #[test]
+    fn batched_tile_plan_reports_effective_schedule() {
+        // exdata_1 gets a CSR5 tile plan; batched dispatches remap to
+        // CsrRowBalanced and telemetry must attribute them there.
+        let csr = crate::corpus::NamedMatrix::Exdata1.generate();
+        let n = csr.n_cols;
+        let engine = engine_with(vec![("exdata", csr)]);
+        let x = vec![1.0f64; n];
+        let single = engine.execute_batch(0, &[&x]).unwrap();
+        assert!(
+            matches!(single.schedule, Schedule::Csr5Tiles { .. }),
+            "singletons run the plan schedule: {:?}",
+            single.schedule
+        );
+        let batch = engine.execute_batch(0, &[&x, &x]).unwrap();
+        assert_eq!(
+            batch.schedule,
+            Schedule::CsrRowBalanced,
+            "batches must report the executed row-space remap"
+        );
+        let s = engine.telemetry.snapshot();
+        assert_eq!(s.per_schedule.get("csr-balanced"), Some(&2));
+        assert_eq!(s.per_schedule.values().sum::<u64>(), 3);
+    }
+
+    #[test]
     fn engine_rejects_bad_requests() {
         let mut rng = Pcg32::new(0xE0E1);
         let csr = generators::banded(64, 3, &mut rng);
@@ -230,6 +386,42 @@ mod tests {
         let (hits, misses) = engine.plans.stats();
         assert_eq!(misses, 2, "one plan build per matrix");
         assert!(hits > 0);
+    }
+
+    #[test]
+    fn pooled_worker_pool_end_to_end() {
+        // Same drain loop as worker_pool_end_to_end, but the engine
+        // executes on its resident ExecPool: many small requests, no
+        // per-request spawn, identical serving semantics.
+        let mut rng = Pcg32::new(0xE0E5);
+        let a = generators::banded(128, 3, &mut rng);
+        let b = generators::random_uniform(128, 4, &mut rng);
+        let mut reg = MatrixRegistry::new();
+        reg.register("a", a);
+        reg.register("b", b);
+        let engine =
+            ServeEngine::pooled(reg, Planner::Heuristic, PlanConfig::default());
+        let workers_before = engine.pool().unwrap().n_workers();
+        let queue = RequestQueue::new();
+        for i in 0..40 {
+            queue.push(Request::new(i % 2, vec![1.0; 128]));
+        }
+        queue.close();
+        let served = serve_queue(&engine, &queue, 2, 8);
+        assert_eq!(served, 40);
+        let s = engine.telemetry.snapshot();
+        assert_eq!(s.requests, 40);
+        assert_eq!(s.latencies_ms.len(), 40);
+        let pool = engine.pool().unwrap();
+        assert_eq!(
+            pool.n_workers(),
+            workers_before,
+            "40 requests must not grow the resident worker set"
+        );
+        assert!(
+            pool.jobs_dispatched() > 0,
+            "drained batches must run on the pool"
+        );
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::coordinator::format_select::{
     candidates, label_matrix, static_features, FormatSelector,
 };
 use crate::corpus::suite::SuiteSpec;
-use crate::exec::{self, ExecResult, SpmmResult};
+use crate::exec::{self, ExecPool, ExecResult, SpmmResult};
 use crate::sched::{partition, Partition, Schedule};
 use crate::sim::topology::Placement;
 use crate::sparse::{Csr, Csr5};
@@ -31,6 +31,14 @@ pub enum PlannedFormat {
 }
 
 /// One matrix's cached execution plan.
+///
+/// Everything a served request needs is materialized at build time:
+/// the storage format (CSR5 conversion), the [`Partition`] for the
+/// single-vector path, and the row partition + effective schedule for
+/// the batched SpMM path (tile plans remap to `CsrRowBalanced`
+/// there). A request is then: look up the plan, hand the cached
+/// ranges to resident workers — no per-request partitioning, no
+/// prefix bisection, no tiling.
 #[derive(Clone, Debug)]
 pub struct Plan {
     pub schedule: Schedule,
@@ -40,6 +48,13 @@ pub struct Plan {
     /// Static feature vector the decision was made from (empty for
     /// the all-zero matrix, which short-circuits to CSR static).
     pub features: Vec<f64>,
+    /// Materialized single-vector partition under `schedule`.
+    pub partition: Partition,
+    /// Effective schedule of the batched SpMM path (see
+    /// [`exec::effective_spmm_schedule`]).
+    pub spmm_schedule: Schedule,
+    /// Materialized row partition for the batched SpMM path.
+    pub spmm_partition: Vec<Vec<(usize, usize)>>,
 }
 
 impl Plan {
@@ -47,34 +62,96 @@ impl Plan {
         self.schedule.name()
     }
 
-    /// Execute a single-vector request under this plan. Tile plans
-    /// reuse the pre-converted CSR5 (no per-request conversion).
-    pub fn execute(&self, csr: &Csr, x: &[f64]) -> ExecResult {
-        match (&self.format, self.schedule) {
-            (PlannedFormat::Csr5(c5), Schedule::Csr5Tiles { .. }) => {
-                let part = partition(csr, self.schedule, self.n_threads);
-                match part {
-                    Partition::Tiles { per_thread, .. } => {
-                        exec::spmv_csr5_threaded(c5, x, &per_thread)
-                    }
-                    Partition::Rows { .. } => {
-                        unreachable!("tile schedule yields tile partition")
-                    }
-                }
+    /// The schedule a dispatch of `batch` coalesced requests actually
+    /// executes — what telemetry should attribute throughput to.
+    pub fn effective_schedule(&self, batch: usize) -> Schedule {
+        if batch > 1 {
+            self.spmm_schedule
+        } else {
+            self.schedule
+        }
+    }
+
+    /// Effective parallelism of a dispatch of `batch` requests: the
+    /// number of partition slots that actually carry work, computed
+    /// with the executors' own slot filter
+    /// ([`exec::effective_row_slots`]/[`exec::effective_tile_slots`])
+    /// so it always matches what `ExecResult.threads` /
+    /// `SpmmResult.threads` report — the replay cost model is
+    /// identical whether or not kernels really run.
+    pub fn effective_threads(&self, batch: usize) -> usize {
+        if batch > 1 {
+            return exec::effective_row_slots(&self.spmm_partition);
+        }
+        match &self.partition {
+            Partition::Rows { per_thread } => {
+                exec::effective_row_slots(per_thread)
             }
-            _ => exec::spmv_threaded(csr, x, self.schedule, self.n_threads),
+            Partition::Tiles { per_thread, .. } => {
+                exec::effective_tile_slots(per_thread)
+            }
+        }
+    }
+
+    /// Execute a single-vector request under this plan (spawn
+    /// fallback; serving paths use [`Plan::execute_on`] with a pool).
+    pub fn execute(&self, csr: &Csr, x: &[f64]) -> ExecResult {
+        self.execute_on(csr, x, None)
+    }
+
+    /// Execute a single-vector request on the given pool's resident
+    /// workers (scoped threads when `None`). Tile plans reuse the
+    /// pre-converted CSR5 and the memoized tile partition — a served
+    /// request never converts or re-partitions.
+    pub fn execute_on(
+        &self,
+        csr: &Csr,
+        x: &[f64],
+        pool: Option<&ExecPool>,
+    ) -> ExecResult {
+        match (&self.format, &self.partition) {
+            (PlannedFormat::Csr5(c5), Partition::Tiles { per_thread, .. }) => {
+                exec::spmv_csr5_on(pool, c5, x, per_thread)
+            }
+            (_, Partition::Rows { per_thread }) => {
+                exec::spmv_rows_on(pool, csr, x, per_thread)
+            }
+            (PlannedFormat::Csr, Partition::Tiles { .. }) => {
+                unreachable!("tile plans carry their pre-converted CSR5")
+            }
         }
     }
 
     /// Execute a coalesced batch of requests as one multi-vector SpMM
-    /// (`xs` in the interleaved `exec::pack_vectors` layout).
+    /// (`xs` in the interleaved `exec::pack_vectors` layout; spawn
+    /// fallback).
     pub fn execute_batch(
         &self,
         csr: &Csr,
         xs: &[f64],
         batch: usize,
     ) -> SpmmResult {
-        exec::spmm_threaded(csr, xs, batch, self.schedule, self.n_threads)
+        self.execute_batch_on(csr, xs, batch, None)
+    }
+
+    /// Batched SpMM on the given pool, over the memoized row
+    /// partition (tile plans pre-remapped to `CsrRowBalanced` at
+    /// build time).
+    pub fn execute_batch_on(
+        &self,
+        csr: &Csr,
+        xs: &[f64],
+        batch: usize,
+        pool: Option<&ExecPool>,
+    ) -> SpmmResult {
+        exec::spmm_partitioned(
+            pool,
+            csr,
+            xs,
+            batch,
+            &self.spmm_partition,
+            self.spmm_schedule,
+        )
     }
 }
 
@@ -168,25 +245,37 @@ impl Planner {
     }
 }
 
-/// Build one plan (no caching — see [`PlanCache`]).
+/// Build one plan (no caching — see [`PlanCache`]). All the
+/// per-matrix work — feature extraction, schedule choice, CSR5
+/// conversion, and partition materialization for both the SpMV and
+/// SpMM paths — happens here, once, so plan execution is pure
+/// dispatch.
 pub fn build_plan(planner: &Planner, cfg: &PlanConfig, csr: &Csr) -> Plan {
-    if csr.nnz() == 0 {
+    let (schedule, features) = if csr.nnz() == 0 {
         // Degenerate matrix: nothing to balance, nothing to convert.
-        return Plan {
-            schedule: Schedule::CsrRowStatic,
-            n_threads: cfg.n_threads,
-            placement: cfg.placement,
-            format: PlannedFormat::Csr,
-            features: Vec::new(),
-        };
-    }
-    let features = static_features(csr);
-    let schedule = planner.choose(&features, cfg.csr5_tile_nnz);
+        (Schedule::CsrRowStatic, Vec::new())
+    } else {
+        let features = static_features(csr);
+        (planner.choose(&features, cfg.csr5_tile_nnz), features)
+    };
     let format = match schedule {
         Schedule::Csr5Tiles { tile_nnz } => {
             PlannedFormat::Csr5(Arc::new(Csr5::from_csr(csr, tile_nnz)))
         }
         _ => PlannedFormat::Csr,
+    };
+    let part = partition(csr, schedule, cfg.n_threads);
+    debug_assert!(part.validate(csr).is_ok());
+    let spmm_schedule = exec::effective_spmm_schedule(schedule);
+    let spmm_partition = match (&part, spmm_schedule == schedule) {
+        // Row-space plans serve batches from the same partition.
+        (Partition::Rows { per_thread }, true) => per_thread.clone(),
+        _ => match partition(csr, spmm_schedule, cfg.n_threads) {
+            Partition::Rows { per_thread } => per_thread,
+            Partition::Tiles { .. } => {
+                unreachable!("effective SpMM schedules are row-space")
+            }
+        },
     };
     Plan {
         schedule,
@@ -194,6 +283,9 @@ pub fn build_plan(planner: &Planner, cfg: &PlanConfig, csr: &Csr) -> Plan {
         placement: cfg.placement,
         format,
         features,
+        partition: part,
+        spmm_schedule,
+        spmm_partition,
     }
 }
 
@@ -342,6 +434,88 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn plan_partition_is_computed_exactly_once() {
+        // The bugfix this PR pins: Plan::execute used to re-partition
+        // (including the full CsrRowBalanced prefix bisection) on
+        // every request. The thread-local sched counter must not move
+        // across repeated executions of a built plan.
+        let mut rng = Pcg32::new(0x9A19);
+        for csr in [
+            NamedMatrix::Exdata1.generate(), // tile plan
+            generators::random_uniform(400, 6, &mut rng), // row plan
+        ] {
+            let plan =
+                build_plan(&Planner::Heuristic, &PlanConfig::default(), &csr);
+            let x = vec![1.0f64; csr.n_cols];
+            let xs = exec::pack_vectors(&[&x, &x, &x]);
+            let before = crate::sched::partition_calls();
+            for _ in 0..5 {
+                let _ = plan.execute(&csr, &x);
+                let _ = plan.execute_batch(&csr, &xs, 3);
+            }
+            let pool = exec::ExecPool::new(2);
+            for _ in 0..3 {
+                let _ = plan.execute_on(&csr, &x, Some(&pool));
+                let _ = plan.execute_batch_on(&csr, &xs, 3, Some(&pool));
+            }
+            assert_eq!(
+                crate::sched::partition_calls(),
+                before,
+                "served requests must reuse the memoized partition"
+            );
+        }
+    }
+
+    #[test]
+    fn tile_plans_memoize_row_partition_for_batches() {
+        let csr = NamedMatrix::Exdata1.generate();
+        let plan =
+            build_plan(&Planner::Heuristic, &PlanConfig::default(), &csr);
+        assert!(matches!(plan.schedule, Schedule::Csr5Tiles { .. }));
+        assert!(matches!(plan.partition, Partition::Tiles { .. }));
+        assert_eq!(plan.spmm_schedule, Schedule::CsrRowBalanced);
+        assert_eq!(plan.spmm_partition.len(), plan.n_threads);
+        assert_eq!(plan.effective_schedule(1), plan.schedule);
+        assert_eq!(plan.effective_schedule(4), Schedule::CsrRowBalanced);
+        // The memoized SpMM row partition covers every row once.
+        let rows =
+            Partition::Rows { per_thread: plan.spmm_partition.clone() };
+        assert!(rows.validate(&csr).is_ok());
+    }
+
+    #[test]
+    fn effective_threads_match_executed_counts() {
+        // The replay cost model uses Plan::effective_threads; it must
+        // equal what the executors report, including when the
+        // configured width exceeds the available rows.
+        let mut rng = Pcg32::new(0x9A20);
+        for csr in [
+            Csr::identity(2), // 2 rows under a 4-thread config
+            NamedMatrix::Exdata1.generate(),
+            generators::random_uniform(300, 5, &mut rng),
+        ] {
+            let plan =
+                build_plan(&Planner::Heuristic, &PlanConfig::default(), &csr);
+            let x = vec![1.0f64; csr.n_cols];
+            let got = plan.execute(&csr, &x);
+            assert_eq!(
+                plan.effective_threads(1),
+                got.threads,
+                "single-vector count under {:?}",
+                plan.schedule
+            );
+            let xs = exec::pack_vectors(&[&x, &x, &x]);
+            let batch = plan.execute_batch(&csr, &xs, 3);
+            assert_eq!(
+                plan.effective_threads(3),
+                batch.threads,
+                "batched count under {:?}",
+                plan.spmm_schedule
+            );
         }
     }
 

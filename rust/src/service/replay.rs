@@ -84,6 +84,15 @@ pub struct ReplayConfig {
     /// exercises the full serving path). `false` replays the queueing
     /// model only.
     pub execute: bool,
+    /// Engines built *by the replay harness* (the virtual panels of
+    /// [`replay_sharded`]) carry a persistent executor pool pinned to
+    /// their panel core range and plan panel-wide kernels; `false`
+    /// keeps the per-request scoped-thread baseline with the default
+    /// plan width. (For [`replay`] the caller supplies the engine and
+    /// this knob is moot.) Each mode is deterministic; the modeled
+    /// service times differ because pinned engines partition one slot
+    /// per panel core.
+    pub pooled: bool,
     pub cost: CostModel,
 }
 
@@ -94,6 +103,7 @@ impl Default for ReplayConfig {
             batch_window_s: 200e-6,
             queue_cap: 0,
             execute: true,
+            pooled: true,
             cost: CostModel::default(),
         }
     }
@@ -188,8 +198,17 @@ impl Dispatcher<'_> {
         } else {
             let (plan, _) =
                 self.engine.plans.plan_for(entry.fingerprint, &entry.csr);
-            self.engine.telemetry.record_batch(id, size, 0.0, 0.0);
-            (plan.n_threads, nnz)
+            self.engine.telemetry.record_batch(
+                id,
+                size,
+                0.0,
+                0.0,
+                &plan.effective_schedule(size).name(),
+            );
+            // Effective (not configured) parallelism, the same count
+            // the executed path reports — execute=true and model-only
+            // replays of one seed share a bit-identical timeline.
+            (plan.effective_threads(size), nnz)
         }
     }
 }
@@ -393,12 +412,31 @@ pub fn replay_sharded(
     let mut cores = Vec::with_capacity(shards);
     let mut makespan = 0.0f64;
     for (s, sub) in per_shard.iter().enumerate() {
-        cores.push(panel_core_range(&topo, s, shards));
-        let engine = ServeEngine::shared(
-            registry.clone(),
-            planner.clone(),
-            plan_cfg.clone(),
-        );
+        let shard_cores = panel_core_range(&topo, s, shards);
+        cores.push(shard_cores);
+        let engine = if cfg.pooled && cfg.execute {
+            ServeEngine::shared_pinned(
+                registry.clone(),
+                planner.clone(),
+                plan_cfg.clone(),
+                shard_cores,
+            )
+        } else if cfg.pooled {
+            // Model-only pooled replay: plan panel-wide exactly like
+            // the pinned engine (the width is what the cost model
+            // sees), but skip spawning a resident pool no kernel
+            // will ever run on.
+            let mut wide = plan_cfg.clone();
+            wide.n_threads =
+                shard_cores.1.saturating_sub(shard_cores.0).max(1);
+            ServeEngine::shared(registry.clone(), planner.clone(), wide)
+        } else {
+            ServeEngine::shared(
+                registry.clone(),
+                planner.clone(),
+                plan_cfg.clone(),
+            )
+        };
         let duration_s = if sub.is_empty() {
             0.0
         } else {

@@ -165,6 +165,11 @@ pub struct ShardConfig {
     /// Shed requests older than this at pop time; 0 disables.
     pub deadline_ms: f64,
     pub policy: PlacementPolicy,
+    /// Serve on a persistent per-shard executor pool, one resident
+    /// worker per panel core (default). `false` falls back to
+    /// per-request scoped threads — the A/B baseline and the legacy
+    /// behavior.
+    pub pooled: bool,
 }
 
 impl Default for ShardConfig {
@@ -176,6 +181,7 @@ impl Default for ShardConfig {
             max_batch: 16,
             deadline_ms: 0.0,
             policy: PlacementPolicy::HotReplicate { hot: 2 },
+            pooled: true,
         }
     }
 }
@@ -197,14 +203,16 @@ impl Admitted {
 }
 
 /// One shard: its own engine view (shared registry, private plan
-/// cache + telemetry), its own queue, its modeled panel cores.
+/// cache + telemetry + persistent executor pool when
+/// [`ShardConfig::pooled`]), its own queue, its modeled panel cores.
 pub struct Shard {
     pub engine: ServeEngine,
     pub queue: RequestQueue,
     /// Modeled panel core range `[c0, c1)` (see
-    /// [`crate::sched::panel_core_range`]); workers are *modeled* as
-    /// pinned there — std has no affinity API, the point is that each
-    /// shard's working set stays disjoint.
+    /// [`crate::sched::panel_core_range`]); the shard's executor pool
+    /// is sized one worker per core and *modeled* as pinned there —
+    /// std has no affinity API, the point is that each shard's
+    /// working set (and resident worker set) stays disjoint.
     pub cores: (usize, usize),
 }
 
@@ -251,14 +259,30 @@ impl ShardedServer {
             ShardPlacement::build(&ids, weights, cfg.shards, cfg.policy);
         let topo = Topology::ft2000plus();
         let shards = (0..cfg.shards)
-            .map(|i| Shard {
-                engine: ServeEngine::shared(
-                    registry.clone(),
-                    planner.clone(),
-                    plan_cfg.clone(),
-                ),
-                queue: RequestQueue::bounded(cfg.queue_cap),
-                cores: panel_core_range(&topo, i, cfg.shards),
+            .map(|i| {
+                let cores = panel_core_range(&topo, i, cfg.shards);
+                // Pooled shards get a persistent executor pool sized
+                // by (and modeled-pinned to) their panel core range;
+                // requests reuse those workers instead of spawning.
+                let engine = if cfg.pooled {
+                    ServeEngine::shared_pinned(
+                        registry.clone(),
+                        planner.clone(),
+                        plan_cfg.clone(),
+                        cores,
+                    )
+                } else {
+                    ServeEngine::shared(
+                        registry.clone(),
+                        planner.clone(),
+                        plan_cfg.clone(),
+                    )
+                };
+                Shard {
+                    engine,
+                    queue: RequestQueue::bounded(cfg.queue_cap),
+                    cores,
+                }
             })
             .collect();
         ShardedServer {
@@ -471,6 +495,42 @@ mod tests {
             }
             assert_eq!(snap.cores.1 - snap.cores.0, 16, "4 shards x 2 panels");
         }
+    }
+
+    #[test]
+    fn pooled_shards_pin_pools_to_their_panels() {
+        let reg = registry(4);
+        let server = ShardedServer::new(
+            reg.clone(),
+            Planner::Heuristic,
+            PlanConfig::default(),
+            ShardConfig {
+                shards: 4,
+                workers_per_shard: 1,
+                ..ShardConfig::default()
+            },
+        );
+        for shard in &server.shards {
+            let pool = shard.engine.pool().expect("pooled by default");
+            assert_eq!(pool.cores(), Some(shard.cores));
+            assert_eq!(
+                pool.n_workers(),
+                shard.cores.1 - shard.cores.0,
+                "one resident worker per panel core"
+            );
+        }
+        // Spawn mode builds no pools (the A/B baseline).
+        let spawn = ShardedServer::new(
+            reg,
+            Planner::Heuristic,
+            PlanConfig::default(),
+            ShardConfig {
+                shards: 2,
+                pooled: false,
+                ..ShardConfig::default()
+            },
+        );
+        assert!(spawn.shards.iter().all(|s| s.engine.pool().is_none()));
     }
 
     #[test]

@@ -97,6 +97,11 @@ pub struct ServeStats {
     pub batch_hist: BTreeMap<usize, u64>,
     /// Requests per matrix id.
     pub per_matrix: BTreeMap<usize, u64>,
+    /// Requests per *effective executed* schedule name. Batched
+    /// dispatches against tile (CSR5) plans run the CsrRowBalanced
+    /// remap — this map records what actually ran, so replay tables
+    /// stop attributing SpMM throughput to CSR5.
+    pub per_schedule: BTreeMap<String, u64>,
     /// Total measured kernel wall seconds.
     pub exec_seconds: f64,
     /// Total executed flops (2 * nnz * batch per dispatch).
@@ -118,12 +123,17 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Record one dispatched (possibly coalesced) batch. `schedule`
+    /// is the *effective executed* schedule name (see
+    /// [`crate::service::Plan::effective_schedule`]), not the plan's
+    /// nominal one.
     pub fn record_batch(
         &mut self,
         matrix_id: usize,
         size: usize,
         wall_seconds: f64,
         flops: f64,
+        schedule: &str,
     ) {
         self.requests += size as u64;
         self.batches += 1;
@@ -132,6 +142,8 @@ impl ServeStats {
         }
         *self.batch_hist.entry(size).or_insert(0) += 1;
         *self.per_matrix.entry(matrix_id).or_insert(0) += size as u64;
+        *self.per_schedule.entry(schedule.to_string()).or_insert(0) +=
+            size as u64;
         self.exec_seconds += wall_seconds;
         self.flops += flops;
     }
@@ -201,6 +213,9 @@ impl ServeStats {
         for (&id, &count) in &other.per_matrix {
             *self.per_matrix.entry(id).or_insert(0) += count;
         }
+        for (name, &count) in &other.per_schedule {
+            *self.per_schedule.entry(name.clone()).or_insert(0) += count;
+        }
         self.exec_seconds += other.exec_seconds;
         self.flops += other.flops;
         for &ms in &other.latencies_ms {
@@ -232,11 +247,12 @@ impl Telemetry {
         size: usize,
         wall_seconds: f64,
         flops: f64,
+        schedule: &str,
     ) {
         self.inner
             .lock()
             .unwrap()
-            .record_batch(matrix_id, size, wall_seconds, flops);
+            .record_batch(matrix_id, size, wall_seconds, flops, schedule);
     }
 
     pub fn record_latency_ms(&self, ms: f64) {
@@ -342,6 +358,17 @@ pub fn report_table(
             }
         ),
     ]);
+    if !stats.per_schedule.is_empty() {
+        t.row(vec![
+            "served by schedule (effective)".into(),
+            stats
+                .per_schedule
+                .iter()
+                .map(|(name, count)| format!("{name}: {count}"))
+                .collect::<Vec<_>>()
+                .join(", "),
+        ]);
+    }
     t.row(vec!["rejected (admission)".into(), stats.rejected.to_string()]);
     t.row(vec!["shed (deadline)".into(), stats.shed.to_string()]);
     t.row(vec!["exec errors".into(), stats.errors.to_string()]);
@@ -448,6 +475,16 @@ pub fn report_json(
                 .collect(),
         ),
     );
+    obj.insert(
+        "per_schedule".into(),
+        Json::Obj(
+            stats
+                .per_schedule
+                .iter()
+                .map(|(name, &count)| (name.clone(), Json::Num(count as f64)))
+                .collect(),
+        ),
+    );
     obj.insert("executed_gflops".into(), Json::Num(stats.executed_gflops()));
     Json::Obj(obj)
 }
@@ -459,9 +496,9 @@ mod tests {
     #[test]
     fn stats_accumulate() {
         let t = Telemetry::new();
-        t.record_batch(0, 4, 0.5, 8e9);
-        t.record_batch(0, 1, 0.5, 1e9);
-        t.record_batch(3, 4, 0.0, 0.0);
+        t.record_batch(0, 4, 0.5, 8e9, "csr-balanced");
+        t.record_batch(0, 1, 0.5, 1e9, "csr5-t256");
+        t.record_batch(3, 4, 0.0, 0.0, "csr-balanced");
         t.record_latency_ms(1.0);
         t.record_latency_ms(3.0);
         t.record_rejected(2);
@@ -473,6 +510,8 @@ mod tests {
         assert_eq!(s.singletons, 1);
         assert_eq!(s.batch_hist.get(&4), Some(&2));
         assert_eq!(s.per_matrix.get(&0), Some(&5));
+        assert_eq!(s.per_schedule.get("csr-balanced"), Some(&8));
+        assert_eq!(s.per_schedule.get("csr5-t256"), Some(&1));
         assert!((s.mean_batch() - 3.0).abs() < 1e-12);
         assert!((s.executed_gflops() - 9.0).abs() < 1e-12);
         assert_eq!(s.latency_percentile(100.0), 3.0);
@@ -484,7 +523,7 @@ mod tests {
     #[test]
     fn report_renders() {
         let mut s = ServeStats::default();
-        s.record_batch(0, 2, 0.001, 1e6);
+        s.record_batch(0, 2, 0.001, 1e6, "csr-static");
         s.record_latency_ms(0.5);
         s.record_latency_ms(1.5);
         s.record_errors(1);
@@ -493,10 +532,15 @@ mod tests {
         assert!(md.contains("75.0%"));
         assert!(md.contains("latency p99"));
         assert!(md.contains("exec errors"));
+        assert!(md.contains("csr-static: 2"), "effective schedule row: {md}");
         let j = report_json(&s, 3, 1, 2.0);
         assert_eq!(j.get("cache_hits").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("errors").unwrap().as_f64(), Some(1.0));
         assert!(j.get("latency_ms").unwrap().get("p50").is_some());
+        assert_eq!(
+            j.get("per_schedule").unwrap().get("csr-static").unwrap().as_f64(),
+            Some(2.0)
+        );
         assert!(!batch_histogram_table(&s).is_empty());
     }
 
@@ -539,11 +583,11 @@ mod tests {
     #[test]
     fn merge_rolls_up_shards() {
         let mut a = ServeStats::default();
-        a.record_batch(0, 2, 0.1, 1e9);
+        a.record_batch(0, 2, 0.1, 1e9, "csr-static");
         a.record_latency_ms(1.0);
         a.record_rejected(1);
         let mut b = ServeStats::default();
-        b.record_batch(1, 3, 0.1, 2e9);
+        b.record_batch(1, 3, 0.1, 2e9, "csr-balanced");
         b.record_latency_ms(2.0);
         b.record_latency_ms(4.0);
         b.record_errors(2);
@@ -556,13 +600,15 @@ mod tests {
         assert_eq!(a.latencies_ms.len(), 3);
         assert!((a.latency_mean() - 7.0 / 3.0).abs() < 1e-12);
         assert_eq!(a.per_matrix.get(&1), Some(&3));
+        assert_eq!(a.per_schedule.get("csr-static"), Some(&2));
+        assert_eq!(a.per_schedule.get("csr-balanced"), Some(&3));
         assert_eq!(a.latency_percentile(100.0), 4.0);
     }
 
     #[test]
     fn shard_table_renders() {
         let mut s = ServeStats::default();
-        s.record_batch(0, 2, 0.01, 1e6);
+        s.record_batch(0, 2, 0.01, 1e6, "csr-static");
         s.record_latency_ms(1.0);
         s.record_latency_ms(2.0);
         let snap = ShardSnapshot {

@@ -214,6 +214,140 @@ fn spmm_matches_sequential_per_column() {
 }
 
 #[test]
+fn pooled_executors_match_scoped_and_sequential() {
+    // The executor-pool property: for any schedule and thread count,
+    // running on a persistent pool and running on per-call scoped
+    // threads produce the same answer as the sequential reference —
+    // for SpMV and for batch sizes straddling SPMM_COL_BLOCK.
+    let pool = exec::ExecPool::new(4);
+    check("pooled==scoped==sequential", 15, |rng| {
+        let csr = random_csr(rng);
+        let sched = random_schedule(rng);
+        let nt = 1 + rng.gen_range(8);
+        let x: Vec<f64> =
+            (0..csr.n_cols).map(|_| rng.gen_f64() - 0.5).collect();
+        let want = exec::spmv_sequential(&csr, &x).y;
+        let pooled = exec::spmv_threaded_on(Some(&pool), &csr, &x, sched, nt);
+        let scoped = exec::spmv_threaded(&csr, &x, sched, nt);
+        prop_assert!(
+            pooled.threads == scoped.threads,
+            "effective threads diverge: pooled {} vs scoped {} \
+             ({sched:?} nt={nt})",
+            pooled.threads,
+            scoped.threads
+        );
+        for (i, (p, q)) in pooled.y.iter().zip(&want).enumerate() {
+            prop_assert!(
+                (p - q).abs() < 1e-9 * (1.0 + p.abs()),
+                "pooled row {i}: {p} vs {q} under {sched:?} nt={nt}"
+            );
+        }
+        for (i, (p, q)) in scoped.y.iter().zip(&pooled.y).enumerate() {
+            prop_assert!(
+                p.to_bits() == q.to_bits(),
+                "scoped row {i} diverges bitwise from pooled: {p} vs {q}"
+            );
+        }
+        // Batched path straddling the column block width.
+        let batch = exec::SPMM_COL_BLOCK - 1 + rng.gen_range(3);
+        let vectors: Vec<Vec<f64>> = (0..batch)
+            .map(|_| {
+                (0..csr.n_cols).map(|_| rng.gen_f64() - 0.5).collect()
+            })
+            .collect();
+        let xs = exec::pack_vectors(&vectors);
+        let pooled =
+            exec::spmm_threaded_on(Some(&pool), &csr, &xs, batch, sched, nt);
+        let scoped = exec::spmm_threaded(&csr, &xs, batch, sched, nt);
+        prop_assert!(
+            pooled.schedule == scoped.schedule
+                && pooled.threads == scoped.threads,
+            "spmm metadata diverges under {sched:?} nt={nt}"
+        );
+        for (j, x) in vectors.iter().enumerate() {
+            let want = exec::spmv_sequential(&csr, x).y;
+            let col = pooled.column(j);
+            for (i, (a, b)) in want.iter().zip(&col).enumerate() {
+                prop_assert!(
+                    (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                    "pooled spmm col {j} row {i}: {a} vs {b}"
+                );
+            }
+        }
+        for (i, (p, q)) in scoped.y.iter().zip(&pooled.y).enumerate() {
+            prop_assert!(
+                p.to_bits() == q.to_bits(),
+                "spmm element {i} diverges bitwise: {p} vs {q}"
+            );
+        }
+        Ok(())
+    });
+    assert_eq!(pool.n_workers(), 4, "the pool never grows");
+}
+
+#[test]
+fn pooled_executors_skip_empty_slots_when_threads_exceed_rows() {
+    // Thread counts far beyond the row count: surplus slots are
+    // empty; both dispatch modes must skip them and report the same
+    // effective parallelism.
+    let pool = exec::ExecPool::new(8);
+    for n in [1usize, 2, 3, 5] {
+        let csr = Csr::identity(n);
+        let x = vec![2.0; n];
+        for sched in [
+            Schedule::CsrRowStatic,
+            Schedule::CsrRowBalanced,
+            Schedule::CsrDynamic { chunk: 1 },
+            Schedule::Csr5Tiles { tile_nnz: 2 },
+        ] {
+            for nt in [n + 1, 16] {
+                let pooled =
+                    exec::spmv_threaded_on(Some(&pool), &csr, &x, sched, nt);
+                let scoped = exec::spmv_threaded(&csr, &x, sched, nt);
+                assert_eq!(pooled.y, vec![2.0; n], "{sched:?} nt={nt}");
+                assert_eq!(pooled.y, scoped.y);
+                assert_eq!(pooled.threads, scoped.threads);
+                assert!(
+                    pooled.threads <= n.max(1),
+                    "{sched:?} nt={nt}: {} effective workers for {n} rows",
+                    pooled.threads
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_reuse_stress_many_small_requests() {
+    // The reuse contract: hundreds of small dispatches on one pool,
+    // zero thread growth, every job accounted for.
+    let pool = exec::ExecPool::new(4);
+    let mut rng = Pcg32::new(0x5700);
+    let csr = random_csr(&mut rng);
+    let x: Vec<f64> = (0..csr.n_cols).map(|_| rng.gen_f64()).collect();
+    let want = exec::spmv_sequential(&csr, &x).y;
+    let jobs_before = pool.jobs_dispatched();
+    let iters = 300usize;
+    for i in 0..iters {
+        let sched = random_schedule(&mut rng);
+        let got = exec::spmv_threaded_on(Some(&pool), &csr, &x, sched, 4);
+        assert_eq!(got.y.len(), want.len(), "iter {i}");
+        for (r, (p, q)) in got.y.iter().zip(&want).enumerate() {
+            assert!(
+                (p - q).abs() < 1e-9 * (1.0 + p.abs()),
+                "iter {i} row {r}: {p} vs {q} under {sched:?}"
+            );
+        }
+    }
+    assert_eq!(pool.n_workers(), 4, "no thread-count growth");
+    assert_eq!(
+        pool.jobs_dispatched() - jobs_before,
+        iters as u64,
+        "one pool job per request"
+    );
+}
+
+#[test]
 fn plan_is_deterministic_per_fingerprint() {
     check("plan-deterministic", 10, |rng| {
         let csr = random_csr(rng);

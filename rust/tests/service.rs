@@ -190,6 +190,7 @@ fn sharded_server_survives_poison_and_reports_per_shard() {
             max_batch: 16,
             deadline_ms: 0.0,
             policy: PlacementPolicy::HotReplicate { hot: 2 },
+            pooled: true,
         },
         &weights,
     );
@@ -208,8 +209,24 @@ fn sharded_server_survives_poison_and_reports_per_shard() {
         server.serve()
     });
     assert_eq!(served, 300, "all valid requests served");
+    // Pooled by default: every shard carries a persistent executor
+    // pool pinned to its panel, and all kernel work ran on it.
+    for shard in &server.shards {
+        let pool = shard.engine.pool().expect("shards are pooled");
+        assert_eq!(pool.cores(), Some(shard.cores));
+    }
+    let jobs: u64 = server
+        .shards
+        .iter()
+        .map(|s| s.engine.pool().unwrap().jobs_dispatched())
+        .sum();
+    assert!(jobs > 0, "dispatches must run on the shard pools");
     let merged = server.merged_stats();
     assert_eq!(merged.requests, 300);
+    assert!(
+        !merged.per_schedule.is_empty(),
+        "effective executed schedules must be recorded"
+    );
     assert_eq!(merged.errors, 1, "poison counted, not fatal");
     assert_eq!(merged.rejected, 0, "unbounded queues reject nothing");
     assert_eq!(merged.digest.count, 300);
