@@ -26,6 +26,27 @@ pub fn quick_from_env() -> bool {
     )
 }
 
+/// Optional section filter: `FT2000_SECTION=<name>` runs only the
+/// matching section of a multi-section bench target;
+/// `FT2000_SECTION=-<name>` runs everything *except* it (CI smoke
+/// splits a bench across steps without running any section twice).
+#[allow(dead_code)] // not every bench target is sectioned
+pub fn section_from_env() -> Option<String> {
+    std::env::var("FT2000_SECTION").ok().filter(|s| !s.is_empty())
+}
+
+/// Should the section named `name` run under the current filter?
+#[allow(dead_code)]
+pub fn section_enabled(name: &str) -> bool {
+    match section_from_env() {
+        Some(filter) => match filter.strip_prefix('-') {
+            Some(excluded) => excluded != name,
+            None => filter == name,
+        },
+        None => true,
+    }
+}
+
 pub fn banner(id: &str, paper: &str) {
     println!("\n=== {id} ===");
     println!("paper reference: {paper}\n");

@@ -11,15 +11,20 @@
 //! 3. Does the persistent executor pool beat per-request thread
 //!    spawning? (It should: small/medium SpMV kernels are dominated
 //!    by parallel-runtime overhead, which the pool pays once.)
+//! 4. Does online autotuning beat the static planner on the same
+//!    traffic? (Deterministic virtual-time A/B — see section 5.)
 //!
 //! Scale with `FT2000_SUITE=tiny|fast|full` (default fast); set
 //! `FT2000_QUICK=1` for the CI smoke mode (tiny request counts, full
-//! code paths).
+//! code paths, convergence assertions in section 5). Run a single
+//! section with `FT2000_SECTION=batch|traffic|pool|shard|autotune`,
+//! or everything but one with `FT2000_SECTION=-<name>`.
 
 mod common;
 
 use std::sync::Arc;
 
+use ft2000_spmv::autotune::{autotune_table, AutotuneConfig};
 use ft2000_spmv::exec;
 use ft2000_spmv::service;
 use ft2000_spmv::service::{
@@ -34,66 +39,91 @@ fn main() {
     common::banner(
         "§Serve",
         "batched SpMM vs repeated SpMV; engine throughput under Zipf \
-         traffic; pooled vs spawn dispatch",
+         traffic; pooled vs spawn dispatch; static vs tuned plans",
     );
     let suite = common::suite_from_env();
     let quick = common::quick_from_env();
-    let mut reg = MatrixRegistry::new();
-    let ids = reg.register_suite(&suite, Some(12));
-    let engine =
-        ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
 
     // --- 1: batching win ------------------------------------------------
-    let cfg = BenchConfig {
-        warmup_iters: 1,
-        min_iters: 3,
-        max_iters: if quick { 5 } else { 30 },
-        target_rel_ci: 0.1,
-        max_seconds: if quick { 0.25 } else { 2.0 },
-    };
-    let mut chosen = ids.clone();
-    chosen.sort_by_key(|&id| {
-        std::cmp::Reverse(engine.registry.entry(id).csr.nnz())
-    });
-    chosen.dedup();
-    chosen.truncate(if quick { 1 } else { 3 });
-    let batch_sizes: &[usize] =
-        if quick { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
-    let mut t = Table::new(
-        "Batched SpMM vs N sequential SpMV calls (cached plan, 4 threads)",
-        &["matrix", "nnz", "batch", "spmm Gflops", "Nx spmv Gflops", "win"],
-    );
-    for &id in &chosen {
-        let entry = engine.registry.entry(id);
-        let (plan, _) = engine.plans.plan_for(entry.fingerprint, &entry.csr);
-        let nnz = entry.csr.nnz();
-        let x = vec![1.0f64; entry.csr.n_cols];
-        for &b in batch_sizes {
-            let xs_refs: Vec<&[f64]> =
-                (0..b).map(|_| x.as_slice()).collect();
-            let packed = exec::pack_vectors(&xs_refs);
-            let spmm = bench("spmm", &cfg, || {
-                black_box(plan.execute_batch(&entry.csr, &packed, b));
-            });
-            let spmv = bench("spmv", &cfg, || {
-                for _ in 0..b {
-                    black_box(plan.execute(&entry.csr, &x));
-                }
-            });
-            let flops = 2.0 * nnz as f64 * b as f64;
-            t.row(vec![
-                entry.name.clone(),
-                nnz.to_string(),
-                b.to_string(),
-                format!("{:.3}", flops / spmm.mean_s / 1e9),
-                format!("{:.3}", flops / spmv.mean_s / 1e9),
-                format!("{:.2}x", spmv.mean_s / spmm.mean_s),
-            ]);
+    if common::section_enabled("batch") {
+        let mut reg = MatrixRegistry::new();
+        let ids = reg.register_suite(&suite, Some(12));
+        let engine =
+            ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: if quick { 5 } else { 30 },
+            target_rel_ci: 0.1,
+            max_seconds: if quick { 0.25 } else { 2.0 },
+        };
+        let mut chosen = ids.clone();
+        chosen.sort_by_key(|&id| {
+            std::cmp::Reverse(engine.registry.entry(id).csr.nnz())
+        });
+        chosen.dedup();
+        chosen.truncate(if quick { 1 } else { 3 });
+        let batch_sizes: &[usize] =
+            if quick { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
+        let mut t = Table::new(
+            "Batched SpMM vs N sequential SpMV calls (cached plan, 4 \
+             threads)",
+            &["matrix", "nnz", "batch", "spmm Gflops", "Nx spmv Gflops", "win"],
+        );
+        for &id in &chosen {
+            let entry = engine.registry.entry(id);
+            let (plan, _) =
+                engine.plans.plan_for(entry.fingerprint, &entry.csr);
+            let nnz = entry.csr.nnz();
+            let x = vec![1.0f64; entry.csr.n_cols];
+            for &b in batch_sizes {
+                let xs_refs: Vec<&[f64]> =
+                    (0..b).map(|_| x.as_slice()).collect();
+                let packed = exec::pack_vectors(&xs_refs);
+                let spmm = bench("spmm", &cfg, || {
+                    black_box(plan.execute_batch(&entry.csr, &packed, b));
+                });
+                let spmv = bench("spmv", &cfg, || {
+                    for _ in 0..b {
+                        black_box(plan.execute(&entry.csr, &x));
+                    }
+                });
+                let flops = 2.0 * nnz as f64 * b as f64;
+                t.row(vec![
+                    entry.name.clone(),
+                    nnz.to_string(),
+                    b.to_string(),
+                    format!("{:.3}", flops / spmm.mean_s / 1e9),
+                    format!("{:.3}", flops / spmv.mean_s / 1e9),
+                    format!("{:.2}x", spmv.mean_s / spmm.mean_s),
+                ]);
+            }
         }
+        t.print();
     }
-    t.print();
 
     // --- 2: end-to-end engine under traffic -----------------------------
+    if common::section_enabled("traffic") {
+        section_traffic(&suite, quick);
+    }
+
+    // --- 3: pooled vs spawn dispatch, wall clock A/B ---------------------
+    if common::section_enabled("pool") {
+        section_pool(&suite, quick);
+    }
+
+    // --- 4: sharded vs global serving, wall clock A/B -------------------
+    if common::section_enabled("shard") {
+        section_shard(&suite, quick);
+    }
+
+    // --- 5: static vs tuned plans, virtual-time A/B ----------------------
+    if common::section_enabled("autotune") {
+        section_autotune(&suite, quick);
+    }
+}
+
+fn section_traffic(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
     for (label, arrivals) in [
         ("open-loop 4k req/s", Arrivals::Open { rate: 4000.0 }),
         ("closed-loop 16 clients", Arrivals::Closed { clients: 16 }),
@@ -125,13 +155,14 @@ fn main() {
             report.stats.executed_gflops(),
         );
     }
+}
 
-    // --- 3: pooled vs spawn dispatch, wall clock A/B ---------------------
-    // The tax this PR removes: same Zipf closed-loop stream, same
-    // coalescing drain loop; (a) per-request scoped threads — the old
-    // hot path — and (b) the persistent executor pool. The corpus is
-    // dominated by small/medium matrices, so dispatch overhead (not
-    // kernel work) decides the gap.
+// Pooled vs spawn dispatch, wall clock A/B. The tax PR 3 removed:
+// same Zipf closed-loop stream, same coalescing drain loop; (a)
+// per-request scoped threads — the old hot path — and (b) the
+// persistent executor pool. The corpus is dominated by small/medium
+// matrices, so dispatch overhead (not kernel work) decides the gap.
+fn section_pool(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
     println!();
     println!("pooled vs spawn dispatch (same traffic, wall clock):");
     let n_req = if quick { 256 } else { 2048 };
@@ -182,13 +213,15 @@ fn main() {
         rps.push(throughput);
     }
     println!("pooled/spawn throughput ratio: {:.2}x", rps[1] / rps[0]);
+}
 
-    // --- 4: sharded vs global serving, wall clock A/B -------------------
-    // Same Zipf request sequence pushed through (a) one global queue
-    // with one undifferentiated pool — the topology-blind baseline —
-    // and (b) the panel-sharded server (hot matrices replicated, cold
-    // homed, per-shard plan caches + panel-pinned executor pools).
-    // Streaming-percentile telemetry in both.
+// Sharded vs global serving, wall clock A/B. Same Zipf request
+// sequence pushed through (a) one global queue with one
+// undifferentiated pool — the topology-blind baseline — and (b) the
+// panel-sharded server (hot matrices replicated, cold homed,
+// per-shard plan caches + panel-pinned executor pools).
+// Streaming-percentile telemetry in both.
+fn section_shard(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
     println!();
     println!("sharded vs global serving (same traffic, wall clock):");
     let n_req = if quick { 256usize } else { 1024 };
@@ -244,6 +277,7 @@ fn main() {
                     deadline_ms: 0.0,
                     policy: PlacementPolicy::HotReplicate { hot: 2 },
                     pooled: true,
+                    tune: None,
                 },
                 &weights,
             );
@@ -276,6 +310,93 @@ fn main() {
             merged.latency_percentile(50.0),
             merged.latency_percentile(99.0),
             merged.mean_batch(),
+        );
+    }
+}
+
+// Static vs tuned plans, A/B over the *virtual-time* replay: the same
+// closed-loop Zipf stream served once with frozen static plans and
+// once with the online autotuner exploring the (schedule x thread)
+// ladder on the deterministic cost model. One client keeps every
+// dispatch a singleton, so the A/B isolates the plan choice — and the
+// whole comparison is bit-reproducible, which lets quick mode assert
+// convergence (the CI autotune smoke step).
+fn section_autotune(
+    suite: &ft2000_spmv::corpus::suite::SuiteSpec,
+    quick: bool,
+) {
+    println!();
+    println!("static vs tuned plan serving (virtual-time replay A/B):");
+    let spec = WorkloadSpec {
+        requests: if quick { 1200 } else { 4000 },
+        popularity: Popularity::Zipf { s: 1.2 },
+        arrivals: Arrivals::Closed { clients: 1 },
+        seed: 0x7E57_5EED,
+    };
+    let rcfg = ReplayConfig { execute: false, ..ReplayConfig::default() };
+    let mut t = Table::new(
+        "Static vs tuned plan serving (same Zipf stream, virtual time)",
+        &["mode", "req/s", "p50 ms", "p99 ms", "mean ms", "promotions"],
+    );
+    let mut reports = Vec::new();
+    for tuned in [false, true] {
+        let mut reg = MatrixRegistry::new();
+        let ids = reg.register_suite(suite, Some(8));
+        let engine = ServeEngine::new(
+            reg,
+            Planner::Heuristic,
+            PlanConfig::default(),
+        );
+        let engine = if tuned {
+            engine.with_tuner(AutotuneConfig {
+                wall_clock: false,
+                ..AutotuneConfig::default()
+            })
+        } else {
+            engine
+        };
+        let report = replay(&engine, &ids, &spec, &rcfg).expect("replay");
+        let promotions: u64 = report
+            .autotune
+            .as_ref()
+            .map(|s| s.iter().map(|x| x.promotions).sum())
+            .unwrap_or(0);
+        t.row(vec![
+            if tuned { "tuned".into() } else { "static".to_string() },
+            format!("{:.1}", report.throughput_rps()),
+            format!("{:.4}", report.stats.latency_percentile(50.0)),
+            format!("{:.4}", report.stats.latency_percentile(99.0)),
+            format!("{:.4}", report.stats.latency_mean()),
+            promotions.to_string(),
+        ]);
+        if tuned {
+            if let Some(summaries) = &report.autotune {
+                autotune_table(summaries).print();
+            }
+        }
+        reports.push((report, promotions));
+    }
+    t.print();
+    let static_rps = reports[0].0.throughput_rps();
+    let tuned_rps = reports[1].0.throughput_rps();
+    let promotions = reports[1].1;
+    println!(
+        "tuned/static throughput ratio: {:.3}x ({promotions} promotions)",
+        tuned_rps / static_rps
+    );
+    if quick {
+        // The CI smoke contract: on the quick corpus the tuner must
+        // find at least one better-than-static variant and must not
+        // lose throughput to the static baseline overall (exploration
+        // cost included).
+        assert!(
+            promotions >= 1,
+            "autotune smoke: no promotion on the quick corpus"
+        );
+        assert!(
+            tuned_rps >= static_rps,
+            "autotune smoke: tuned serving lost to static \
+             ({tuned_rps:.1} vs {static_rps:.1} req/s)"
         );
     }
 }

@@ -1,0 +1,242 @@
+//! Candidate-variant construction: the (format × schedule ×
+//! thread-count) ladder a [`super::Tuner`] explores around the static
+//! planner's pick.
+//!
+//! The paper's scalability result shapes the ladder: speedup plateaus
+//! well before all FT-2000+ cores are used, and *where* it plateaus is
+//! matrix-dependent. So the thread dimension is a geometric ladder
+//! around the static pick (bounded by the serving shard's panel core
+//! range), and [`knee_index`] implements the plateau hunt — among
+//! statistically comparable arms, prefer the one using the fewest
+//! cores, because cores past the knee add cost and nothing else.
+
+use crate::sched::Schedule;
+
+/// One candidate execution configuration: a schedule (which implies
+/// the storage format — CSR5 tiles pre-convert) and a kernel width.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Variant {
+    pub schedule: Schedule,
+    pub n_threads: usize,
+}
+
+impl Variant {
+    pub fn name(&self) -> String {
+        format!("{}@{}t", self.schedule.name(), self.n_threads)
+    }
+}
+
+/// Geometric thread ladder around `static_threads`: `{1, s/2, s, 2s,
+/// 4s}` clamped to `[1, max_threads]`, sorted and deduplicated. The
+/// static width is always present.
+pub fn thread_ladder(static_threads: usize, max_threads: usize) -> Vec<usize> {
+    let s = static_threads.max(1);
+    let max = max_threads.max(1);
+    let mut ladder = vec![1, s / 2, s, s * 2, s * 4];
+    ladder.retain(|&t| t >= 1);
+    for t in &mut ladder {
+        *t = (*t).min(max);
+    }
+    ladder.sort_unstable();
+    ladder.dedup();
+    ladder
+}
+
+/// The candidate schedules explored around `static_schedule`. The two
+/// row-space schedules are always present (they are free — no format
+/// conversion); the CSR5 tile format is kept as a candidate only when
+/// the static planner already picked it, so exploration never pays a
+/// per-variant tile conversion the planner's prior voted against.
+pub fn schedule_candidates(
+    static_schedule: Schedule,
+    tile_nnz: usize,
+) -> Vec<Schedule> {
+    let mut out = vec![static_schedule];
+    for s in [
+        Schedule::CsrRowStatic,
+        Schedule::CsrRowBalanced,
+        Schedule::Csr5Tiles { tile_nnz },
+    ] {
+        let keep = match s {
+            Schedule::Csr5Tiles { .. } => {
+                matches!(static_schedule, Schedule::Csr5Tiles { .. })
+            }
+            _ => true,
+        };
+        if keep && !out.contains(&s) {
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// The full candidate set: schedules × thread ladder, with the static
+/// (schedule, width) pair guaranteed at index 0 — the arm every
+/// promotion decision is measured against.
+pub fn candidates(
+    static_schedule: Schedule,
+    tile_nnz: usize,
+    static_threads: usize,
+    max_threads: usize,
+) -> Vec<Variant> {
+    let static_threads = static_threads.max(1);
+    let static_variant =
+        Variant { schedule: static_schedule, n_threads: static_threads };
+    let mut out = vec![static_variant];
+    for schedule in schedule_candidates(static_schedule, tile_nnz) {
+        for &n_threads in &thread_ladder(static_threads, max_threads) {
+            let v = Variant { schedule, n_threads };
+            if !out.contains(&v) {
+                out.push(v);
+            }
+        }
+    }
+    out
+}
+
+/// The plateau knee: among arms with a measured mean (`None` = not
+/// yet warmed up), find the best mean, then return the index of the
+/// *fewest-thread* arm whose mean is within `tol` of it (ties break
+/// to the lowest index). `None` when no arm is warmed up.
+pub fn knee_index(
+    variants: &[Variant],
+    means: &[Option<f64>],
+    tol: f64,
+) -> Option<usize> {
+    assert_eq!(variants.len(), means.len());
+    let best = means
+        .iter()
+        .flatten()
+        .copied()
+        .fold(f64::INFINITY, f64::min);
+    if !best.is_finite() {
+        return None;
+    }
+    let cutoff = best * (1.0 + tol.max(0.0));
+    let mut pick: Option<usize> = None;
+    for (i, m) in means.iter().enumerate() {
+        let Some(m) = m else { continue };
+        if *m <= cutoff {
+            let better = match pick {
+                None => true,
+                Some(p) => variants[i].n_threads < variants[p].n_threads,
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+    }
+    pick
+}
+
+/// Numeric schedule code for the observation dataset (a tree split on
+/// "which schedule ran" needs an ordinal, not a string).
+pub fn schedule_code(s: Schedule) -> f64 {
+    match s {
+        Schedule::CsrRowStatic => 0.0,
+        Schedule::CsrRowBalanced => 1.0,
+        Schedule::Csr5Tiles { .. } => 2.0,
+        Schedule::CsrDynamic { .. } => 3.0,
+    }
+}
+
+/// Inverse of [`Schedule::name`] for snapshot warm starts
+/// ("csr-static", "csr-balanced", "csr5-t256", "csr-dyn64").
+pub fn schedule_from_name(name: &str) -> Option<Schedule> {
+    match name {
+        "csr-static" => Some(Schedule::CsrRowStatic),
+        "csr-balanced" => Some(Schedule::CsrRowBalanced),
+        _ => {
+            if let Some(t) = name.strip_prefix("csr5-t") {
+                t.parse().ok().map(|tile_nnz| Schedule::Csr5Tiles { tile_nnz })
+            } else if let Some(c) = name.strip_prefix("csr-dyn") {
+                c.parse().ok().map(|chunk| Schedule::CsrDynamic { chunk })
+            } else {
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_brackets_the_static_width() {
+        assert_eq!(thread_ladder(4, 16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(thread_ladder(4, 8), vec![1, 2, 4, 8]);
+        assert_eq!(thread_ladder(1, 4), vec![1, 2, 4]);
+        assert_eq!(thread_ladder(8, 8), vec![1, 4, 8]);
+        assert_eq!(thread_ladder(0, 0), vec![1], "degenerate bounds clamp");
+    }
+
+    #[test]
+    fn candidates_start_with_the_static_pick() {
+        let tile = Schedule::Csr5Tiles { tile_nnz: 256 };
+        let cands = candidates(tile, 256, 4, 16);
+        assert_eq!(
+            cands[0],
+            Variant { schedule: tile, n_threads: 4 },
+            "static pick must be arm 0"
+        );
+        // Tile static pick keeps the CSR5 format in the ladder.
+        assert!(cands
+            .iter()
+            .any(|v| matches!(v.schedule, Schedule::Csr5Tiles { .. })
+                && v.n_threads == 16));
+        // No duplicates.
+        for (i, a) in cands.iter().enumerate() {
+            assert!(!cands[i + 1..].contains(a), "duplicate {a:?}");
+        }
+    }
+
+    #[test]
+    fn row_static_pick_skips_tile_conversion() {
+        let cands = candidates(Schedule::CsrRowStatic, 256, 4, 8);
+        assert!(
+            cands
+                .iter()
+                .all(|v| !matches!(v.schedule, Schedule::Csr5Tiles { .. })),
+            "no speculative CSR5 conversion: {cands:?}"
+        );
+        assert!(cands
+            .iter()
+            .any(|v| v.schedule == Schedule::CsrRowBalanced));
+    }
+
+    #[test]
+    fn knee_prefers_fewest_threads_within_tolerance() {
+        let variants: Vec<Variant> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&t| Variant {
+                schedule: Schedule::CsrRowStatic,
+                n_threads: t,
+            })
+            .collect();
+        // 4 threads is fastest, but 2 threads is within 3%: the knee
+        // stops paying for the extra cores.
+        let means =
+            vec![Some(2.0), Some(1.02), Some(1.0), Some(1.4)];
+        assert_eq!(knee_index(&variants, &means, 0.03), Some(1));
+        // Tighter tolerance keeps the true minimum.
+        assert_eq!(knee_index(&variants, &means, 0.001), Some(2));
+        // Unwarmed arms are ignored; all-unwarmed has no knee.
+        let partial = vec![None, None, Some(1.0), None];
+        assert_eq!(knee_index(&variants, &partial, 0.1), Some(2));
+        assert_eq!(knee_index(&variants, &[None, None, None, None], 0.1), None);
+    }
+
+    #[test]
+    fn schedule_names_roundtrip() {
+        for s in [
+            Schedule::CsrRowStatic,
+            Schedule::CsrRowBalanced,
+            Schedule::Csr5Tiles { tile_nnz: 128 },
+            Schedule::CsrDynamic { chunk: 32 },
+        ] {
+            assert_eq!(schedule_from_name(&s.name()), Some(s));
+        }
+        assert_eq!(schedule_from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,1037 @@
+//! Online plan autotuning — closed-loop refinement of per-matrix
+//! execution plans from measured serving latency.
+//!
+//! The paper's central result is that the best (format, schedule,
+//! thread count) for SpMV is matrix-dependent and that speedup
+//! plateaus well before all FT-2000+ cores are used. The static
+//! planner in [`crate::service::plan`] encodes that result as a
+//! *prior* — a heuristic or a learned tree over static features — but
+//! it decides once and never looks at what actually happened at
+//! runtime. This module treats every registered matrix's plan as a
+//! live hypothesis instead:
+//!
+//! * a [`Tuner`] per matrix fingerprint holds a candidate ladder of
+//!   plan variants ([`ladder`]: schedule × thread-count around the
+//!   static pick, bounded by the serving shard's panel core range);
+//! * an explore/exploit [`policy`] (epsilon-greedy or UCB1) picks
+//!   which variant each dispatch runs, fed by measured per-request
+//!   latencies (wall-clock in live serving, the deterministic cost
+//!   model in virtual-time replay);
+//! * promotion hunts the paper's speedup-plateau knee
+//!   ([`ladder::knee_index`]): among statistically comparable arms
+//!   the fewest-thread one wins, so the fleet stops paying for cores
+//!   past the plateau. Winners are installed into the serving
+//!   [`PlanCache`](crate::service::PlanCache) via its versioned
+//!   `replace` API;
+//! * demotion re-opens exploration when traffic shifts regime
+//!   ([`observe::BatchDrift`] on the batch-width EWMA — coalescing
+//!   changes the *effective executed* schedule, so a promotion from
+//!   one regime may not survive another);
+//! * every observation also lands in an [`observe::ObservationLog`]
+//!   ([`crate::mlmodel::Dataset`]) so the offline regression-tree
+//!   planner can be retrained from production measurements;
+//! * the whole tuning state snapshots to JSON ([`Autotuner::to_json`])
+//!   and warm-starts a later run ([`Autotuner::warm_start`]).
+
+pub mod ladder;
+pub mod observe;
+pub mod policy;
+
+pub use ladder::{candidates, knee_index, schedule_from_name, Variant};
+pub use observe::{BatchDrift, ObservationLog};
+pub use policy::{ArmStats, Policy};
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::mlmodel::Dataset;
+use crate::service::plan::{
+    build_plan_with_csr5, Plan, PlanConfig, PlannedFormat,
+};
+use crate::sparse::Csr;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+
+/// Tuning knobs shared by every per-matrix tuner of an engine.
+#[derive(Clone, Copy, Debug)]
+pub struct AutotuneConfig {
+    pub policy: Policy,
+    /// Minimum pulls before an arm's mean can win a promotion.
+    pub warmup: u64,
+    /// Fractional latency improvement a challenger needs over the
+    /// currently chosen arm to be promoted (damping against noise).
+    pub min_gain: f64,
+    /// Arms within this fraction of the best mean are "at the
+    /// plateau"; the fewest-thread one is preferred (the knee hunt).
+    pub knee_tol: f64,
+    /// EWMA smoothing of the observed batch width.
+    pub drift_alpha: f64,
+    /// Relative batch-width drift from the promotion-time anchor that
+    /// demotes the chosen variant and re-opens exploration.
+    pub drift_ratio: f64,
+    /// Thread-ladder upper bound — a sharded engine passes its panel
+    /// core-range width so tuning never plans past its panel.
+    pub max_threads: usize,
+    /// Hard cap on arms per tuner (hill-climb extension bound).
+    pub max_arms: usize,
+    /// `true`: the engine self-observes kernel wall time (live
+    /// serving). `false`: an external caller feeds observations (the
+    /// deterministic virtual-time replay).
+    pub wall_clock: bool,
+    /// Seed of the per-tuner exploration RNG (xored with the matrix
+    /// fingerprint, so tuners explore independently but
+    /// reproducibly).
+    pub seed: u64,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> Self {
+        AutotuneConfig {
+            policy: Policy::EpsilonGreedy { epsilon: 0.1 },
+            warmup: 2,
+            min_gain: 0.02,
+            knee_tol: 0.05,
+            drift_alpha: 0.2,
+            drift_ratio: 0.5,
+            max_threads: 16,
+            max_arms: 24,
+            wall_clock: true,
+            seed: 0x7E57_7E57,
+        }
+    }
+}
+
+impl AutotuneConfig {
+    /// Clamp the thread-ladder bound to a panel core range `[c0, c1)`
+    /// — shared by the live sharded server and the replay harness so
+    /// a shard's tuner can never plan past its own panel.
+    pub fn bounded_to_cores(mut self, cores: (usize, usize)) -> Self {
+        let span = cores.1.saturating_sub(cores.0).max(1);
+        self.max_threads = self.max_threads.min(span).max(1);
+        self
+    }
+}
+
+/// Warm-start state for one fingerprint, parsed from a JSON snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct TunerSnapshot {
+    pub name: String,
+    /// (schedule name, threads) of the arm that was chosen.
+    pub chosen: Option<(String, usize)>,
+    pub promotions: u64,
+    pub demotions: u64,
+    pub batch_ewma: f64,
+    pub batch_anchor: f64,
+    /// (schedule name, threads, pulls, mean_ms, m2) per arm.
+    pub arms: Vec<(String, usize, u64, f64, f64)>,
+}
+
+/// One matrix's live tuning state.
+pub struct Tuner {
+    fingerprint: u64,
+    name: String,
+    variants: Vec<Variant>,
+    arms: Vec<ArmStats>,
+    /// Lazily built plan per variant (arm 0 = the static plan).
+    plans: Vec<Option<Arc<Plan>>>,
+    /// Static feature vector carried over from the static plan (the
+    /// observation rows lead with it).
+    features: Vec<f64>,
+    static_idx: usize,
+    chosen: usize,
+    /// Set by a warm start that restored a non-static `chosen`: the
+    /// serving cache does not yet hold that variant, so the next
+    /// observation after the variant's plan is (re)built hands it
+    /// back for a `PlanCache::replace` — the promotion survives the
+    /// restart.
+    pending_install: bool,
+    promotions: u64,
+    demotions: u64,
+    drift: BatchDrift,
+    rng: Pcg32,
+}
+
+impl Tuner {
+    fn new(
+        fingerprint: u64,
+        name: &str,
+        static_plan: &Arc<Plan>,
+        cfg: &AutotuneConfig,
+        plan_cfg: &PlanConfig,
+        warm: Option<&TunerSnapshot>,
+    ) -> Tuner {
+        let tile_nnz = match static_plan.schedule {
+            crate::sched::Schedule::Csr5Tiles { tile_nnz } => tile_nnz,
+            _ => plan_cfg.csr5_tile_nnz,
+        };
+        let variants = candidates(
+            static_plan.schedule,
+            tile_nnz,
+            static_plan.n_threads,
+            cfg.max_threads.max(1),
+        );
+        let n = variants.len();
+        let mut tuner = Tuner {
+            fingerprint,
+            name: name.to_string(),
+            variants,
+            arms: vec![ArmStats::default(); n],
+            plans: vec![None; n],
+            features: static_plan.features.clone(),
+            static_idx: 0,
+            chosen: 0,
+            pending_install: false,
+            promotions: 0,
+            demotions: 0,
+            drift: BatchDrift::new(cfg.drift_alpha, cfg.drift_ratio),
+            rng: Pcg32::new(cfg.seed ^ fingerprint),
+        };
+        tuner.plans[0] = Some(static_plan.clone());
+        if let Some(w) = warm {
+            tuner.apply_snapshot(w, cfg);
+        }
+        tuner
+    }
+
+    fn find_variant(&self, schedule_name: &str, threads: usize) -> Option<usize> {
+        self.variants.iter().position(|v| {
+            v.n_threads == threads && v.schedule.name() == schedule_name
+        })
+    }
+
+    fn apply_snapshot(&mut self, w: &TunerSnapshot, cfg: &AutotuneConfig) {
+        // Tile arms may only re-enter a ladder that already carries
+        // tiles (static pick was CSR5) — a snapshot from a different
+        // planner must not smuggle speculative conversions back in.
+        let ladder_has_tiles = self
+            .variants
+            .iter()
+            .any(|v| matches!(v.schedule, crate::sched::Schedule::Csr5Tiles { .. }));
+        for (sched, threads, pulls, mean, m2) in &w.arms {
+            let idx = match self.find_variant(sched, *threads) {
+                Some(i) => Some(i),
+                None => match schedule_from_name(sched) {
+                    // A hill-climb-discovered variant from the earlier
+                    // run: re-adopt it if it still fits the bounds.
+                    Some(schedule)
+                        if *threads <= cfg.max_threads.max(1)
+                            && self.variants.len() < cfg.max_arms
+                            && (ladder_has_tiles
+                                || !matches!(
+                                    schedule,
+                                    crate::sched::Schedule::Csr5Tiles { .. }
+                                )) =>
+                    {
+                        self.variants
+                            .push(Variant { schedule, n_threads: *threads });
+                        self.arms.push(ArmStats::default());
+                        self.plans.push(None);
+                        Some(self.variants.len() - 1)
+                    }
+                    _ => None,
+                },
+            };
+            if let Some(i) = idx {
+                self.arms[i] = ArmStats::restored(*pulls, *mean, *m2);
+            }
+        }
+        if let Some((sched, threads)) = &w.chosen {
+            if let Some(i) = self.find_variant(sched, *threads) {
+                self.chosen = i;
+                // The restored winner must be re-installed into the
+                // (fresh) serving plan cache once its plan is rebuilt.
+                self.pending_install = i != self.static_idx;
+            }
+        }
+        self.promotions = w.promotions;
+        self.demotions = w.demotions;
+        self.drift = BatchDrift::restored(
+            cfg.drift_alpha,
+            cfg.drift_ratio,
+            w.batch_ewma,
+            w.batch_anchor,
+        );
+    }
+
+    /// Pick the arm the next dispatch runs (explore/exploit).
+    fn select(&mut self, policy: &Policy) -> usize {
+        policy.select(&self.arms, &mut self.rng)
+    }
+
+    /// Fold one measured dispatch in; returns the plan that should
+    /// now be served from the cache when the chosen arm changed
+    /// (promotion or demotion) or a warm-started winner finished
+    /// rebuilding, `None` otherwise.
+    fn observe(
+        &mut self,
+        arm: usize,
+        per_request_ms: f64,
+        batch: usize,
+        cfg: &AutotuneConfig,
+    ) -> Option<Arc<Plan>> {
+        self.arms[arm].observe(per_request_ms);
+        // Regime shift: the batch-width EWMA left the promotion-time
+        // anchor — demote to the static plan and re-open exploration
+        // with decayed evidence.
+        if self.drift.observe(batch) && self.chosen != self.static_idx {
+            self.chosen = self.static_idx;
+            self.pending_install = false;
+            self.demotions += 1;
+            self.drift.release();
+            for a in &mut self.arms {
+                a.decay();
+            }
+            return self.plans[self.static_idx].clone();
+        }
+        // Warm start restored a winner the fresh cache doesn't hold:
+        // hand it over as soon as its plan exists again.
+        if self.pending_install {
+            if let Some(p) = self.plans[self.chosen].clone() {
+                self.pending_install = false;
+                return Some(p);
+            }
+        }
+        self.maybe_extend_ladder(cfg);
+        self.maybe_switch(cfg)
+    }
+
+    /// Hill-climb: when the best warmed arm sits at the top of its
+    /// schedule's thread ladder, extend the ladder one doubling (the
+    /// plateau has not been found yet).
+    fn maybe_extend_ladder(&mut self, cfg: &AutotuneConfig) {
+        if self.variants.len() >= cfg.max_arms {
+            return;
+        }
+        let mut best: Option<usize> = None;
+        for (i, a) in self.arms.iter().enumerate() {
+            if a.pulls < cfg.warmup {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => a.mean_ms < self.arms[b].mean_ms,
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let Some(b) = best else { return };
+        let v = self.variants[b];
+        let next = v.n_threads.saturating_mul(2);
+        if next > cfg.max_threads.max(1) {
+            return;
+        }
+        let topped = !self
+            .variants
+            .iter()
+            .any(|o| o.schedule == v.schedule && o.n_threads > v.n_threads);
+        if topped {
+            let candidate =
+                Variant { schedule: v.schedule, n_threads: next };
+            if !self.variants.contains(&candidate) {
+                self.variants.push(candidate);
+                self.arms.push(ArmStats::default());
+                self.plans.push(None);
+            }
+        }
+    }
+
+    /// Promotion/demotion decision: knee-adjusted best warmed arm vs
+    /// the currently chosen one.
+    fn maybe_switch(&mut self, cfg: &AutotuneConfig) -> Option<Arc<Plan>> {
+        // The baseline needs at least the one pull the initial sweep
+        // guarantees it (challengers still need `warmup` pulls, and
+        // `min_gain` damps a noisy single-pull baseline).
+        if self.arms[self.static_idx].pulls == 0 {
+            return None;
+        }
+        let means: Vec<Option<f64>> = self
+            .arms
+            .iter()
+            .map(|a| (a.pulls >= cfg.warmup).then_some(a.mean_ms))
+            .collect();
+        let knee = knee_index(&self.variants, &means, cfg.knee_tol)?;
+        if knee == self.chosen {
+            return None;
+        }
+        let current = if self.arms[self.chosen].pulls > 0 {
+            self.arms[self.chosen].mean_ms
+        } else {
+            f64::INFINITY
+        };
+        let challenger = means[knee]?;
+        if challenger >= current * (1.0 - cfg.min_gain) {
+            return None;
+        }
+        // A warm-started arm may have statistics but no plan yet; the
+        // switch waits until the arm is selected (and built) again.
+        let plan = self.plans[knee].clone()?;
+        self.chosen = knee;
+        self.pending_install = false;
+        if knee == self.static_idx {
+            self.demotions += 1;
+            self.drift.release();
+        } else {
+            self.promotions += 1;
+            self.drift.anchor();
+        }
+        Some(plan)
+    }
+
+    fn summary(&self) -> TunerSummary {
+        TunerSummary {
+            fingerprint: self.fingerprint,
+            name: self.name.clone(),
+            static_variant: self.variants[self.static_idx],
+            chosen_variant: self.variants[self.chosen],
+            static_mean_ms: self.arms[self.static_idx].mean_ms,
+            chosen_mean_ms: self.arms[self.chosen].mean_ms,
+            observations: self.arms.iter().map(|a| a.pulls).sum(),
+            arms: self.variants.len(),
+            promotions: self.promotions,
+            demotions: self.demotions,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "fingerprint".into(),
+            Json::Str(format!("{:#x}", self.fingerprint)),
+        );
+        obj.insert("name".into(), Json::Str(self.name.clone()));
+        let chosen = self.variants[self.chosen];
+        obj.insert(
+            "chosen_schedule".into(),
+            Json::Str(chosen.schedule.name()),
+        );
+        obj.insert(
+            "chosen_threads".into(),
+            Json::Num(chosen.n_threads as f64),
+        );
+        obj.insert("promotions".into(), Json::Num(self.promotions as f64));
+        obj.insert("demotions".into(), Json::Num(self.demotions as f64));
+        obj.insert("batch_ewma".into(), Json::Num(self.drift.ewma()));
+        obj.insert("batch_anchor".into(), Json::Num(self.drift.anchored()));
+        obj.insert(
+            "arms".into(),
+            Json::Arr(
+                self.variants
+                    .iter()
+                    .zip(&self.arms)
+                    .map(|(v, a)| {
+                        Json::Obj(
+                            [
+                                (
+                                    "schedule".to_string(),
+                                    Json::Str(v.schedule.name()),
+                                ),
+                                (
+                                    "threads".to_string(),
+                                    Json::Num(v.n_threads as f64),
+                                ),
+                                (
+                                    "pulls".to_string(),
+                                    Json::Num(a.pulls as f64),
+                                ),
+                                (
+                                    "mean_ms".to_string(),
+                                    Json::Num(a.mean_ms),
+                                ),
+                                ("m2".to_string(), Json::Num(a.m2())),
+                            ]
+                            .into_iter()
+                            .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// One tuner's headline state, for reports and acceptance checks.
+#[derive(Clone, Debug)]
+pub struct TunerSummary {
+    pub fingerprint: u64,
+    pub name: String,
+    pub static_variant: Variant,
+    pub chosen_variant: Variant,
+    pub static_mean_ms: f64,
+    pub chosen_mean_ms: f64,
+    pub observations: u64,
+    pub arms: usize,
+    pub promotions: u64,
+    pub demotions: u64,
+}
+
+impl TunerSummary {
+    /// Did tuning land somewhere other than the static pick?
+    pub fn diverged(&self) -> bool {
+        self.chosen_variant != self.static_variant
+    }
+}
+
+/// Thread-safe registry of per-matrix tuners — one per serving
+/// engine, shared across its workers.
+pub struct Autotuner {
+    cfg: AutotuneConfig,
+    plan_cfg: PlanConfig,
+    inner: Mutex<HashMap<u64, Tuner>>,
+    log: Mutex<ObservationLog>,
+    warm: HashMap<u64, TunerSnapshot>,
+}
+
+impl Autotuner {
+    pub fn new(cfg: AutotuneConfig, plan_cfg: PlanConfig) -> Self {
+        Autotuner {
+            cfg,
+            plan_cfg,
+            inner: Mutex::new(HashMap::new()),
+            log: Mutex::new(ObservationLog::new()),
+            warm: HashMap::new(),
+        }
+    }
+
+    /// Seed tuners from a previous run's [`Autotuner::to_json`]
+    /// snapshot: arm statistics, chosen variants, and hill-climb
+    /// ladder extensions are restored lazily as matrices reappear.
+    pub fn warm_start(mut self, snapshot: &Json) -> Self {
+        let Some(tuners) = snapshot.get("tuners").and_then(Json::as_arr)
+        else {
+            return self;
+        };
+        for t in tuners {
+            let Some(fp) = t
+                .get("fingerprint")
+                .and_then(Json::as_str)
+                .and_then(parse_fingerprint)
+            else {
+                continue;
+            };
+            let mut snap = TunerSnapshot {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                promotions: t
+                    .get("promotions")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0) as u64,
+                demotions: t
+                    .get("demotions")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0) as u64,
+                batch_ewma: t
+                    .get("batch_ewma")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                batch_anchor: t
+                    .get("batch_anchor")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                ..TunerSnapshot::default()
+            };
+            if let (Some(s), Some(th)) = (
+                t.get("chosen_schedule").and_then(Json::as_str),
+                t.get("chosen_threads").and_then(Json::as_usize),
+            ) {
+                snap.chosen = Some((s.to_string(), th));
+            }
+            if let Some(arms) = t.get("arms").and_then(Json::as_arr) {
+                for a in arms {
+                    let (Some(s), Some(th)) = (
+                        a.get("schedule").and_then(Json::as_str),
+                        a.get("threads").and_then(Json::as_usize),
+                    ) else {
+                        continue;
+                    };
+                    snap.arms.push((
+                        s.to_string(),
+                        th,
+                        a.get("pulls").and_then(Json::as_f64).unwrap_or(0.0)
+                            as u64,
+                        a.get("mean_ms")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
+                        a.get("m2").and_then(Json::as_f64).unwrap_or(0.0),
+                    ));
+                }
+            }
+            self.warm.insert(fp, snap);
+        }
+        self
+    }
+
+    pub fn config(&self) -> &AutotuneConfig {
+        &self.cfg
+    }
+
+    /// Does the owning engine self-observe kernel wall time?
+    pub fn wall_clock(&self) -> bool {
+        self.cfg.wall_clock
+    }
+
+    /// Select the plan variant the next dispatch against `fp` runs.
+    /// Creates the tuner (ladder seeded around `static_plan`) on first
+    /// sight. Returns the variant's plan and the arm index to feed
+    /// back to [`Autotuner::observe`].
+    ///
+    /// The expensive part — building a not-yet-materialized variant
+    /// plan (partitioning, and for CSR5 arms the tile structure,
+    /// shared from the static plan's conversion) — runs *outside* the
+    /// tuner mutex, the same discipline as `PlanCache::plan_for`; a
+    /// concurrent identical build is a benign race (first insert
+    /// wins). Arm indices are stable (arms are only ever appended),
+    /// so the re-locked insert targets the same slot.
+    pub fn plan_for(
+        &self,
+        fp: u64,
+        name: &str,
+        static_plan: &Arc<Plan>,
+        csr: &Csr,
+    ) -> (Arc<Plan>, usize) {
+        let (arm, build_ctx) = {
+            let mut inner = self.inner.lock().unwrap();
+            let tuner = inner.entry(fp).or_insert_with(|| {
+                Tuner::new(
+                    fp,
+                    name,
+                    static_plan,
+                    &self.cfg,
+                    &self.plan_cfg,
+                    self.warm.get(&fp),
+                )
+            });
+            let arm = tuner.select(&self.cfg.policy);
+            match &tuner.plans[arm] {
+                // Post-warmup fast path: no clones beyond the Arc.
+                Some(p) => return (p.clone(), arm),
+                None => (
+                    arm,
+                    (
+                        tuner.variants[arm],
+                        tuner.features.clone(),
+                        tuner.plans[tuner.static_idx].clone(),
+                    ),
+                ),
+            }
+        };
+        let (variant, features, tuner_static) = build_ctx;
+        // Tile arms reuse the static plan's converted CSR5 structure
+        // (the ladder only carries tiles when the static pick did).
+        let shared_csr5 = tuner_static.as_ref().and_then(|p| match &p.format {
+            PlannedFormat::Csr5(c5) => Some(c5.clone()),
+            _ => None,
+        });
+        let built = Arc::new(build_plan_with_csr5(
+            &self.plan_cfg,
+            csr,
+            variant.schedule,
+            variant.n_threads,
+            features,
+            shared_csr5,
+        ));
+        let mut inner = self.inner.lock().unwrap();
+        let tuner = inner.get_mut(&fp).expect("tuner created above");
+        let plan = match &tuner.plans[arm] {
+            Some(p) => p.clone(),
+            None => {
+                tuner.plans[arm] = Some(built.clone());
+                built
+            }
+        };
+        (plan, arm)
+    }
+
+    /// Feed one measured dispatch back: `per_request_ms` is the
+    /// per-request share of the dispatch latency, `batch` its
+    /// coalesced width. Returns the plan the serving cache should now
+    /// install (via [`crate::service::PlanCache::replace`]) when the
+    /// observation triggered a promotion or demotion.
+    pub fn observe(
+        &self,
+        fp: u64,
+        arm: usize,
+        per_request_ms: f64,
+        batch: usize,
+    ) -> Option<Arc<Plan>> {
+        if !per_request_ms.is_finite() || per_request_ms < 0.0 {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let tuner = inner.get_mut(&fp)?;
+        if arm >= tuner.arms.len() {
+            return None;
+        }
+        self.log.lock().unwrap().record(
+            &tuner.features,
+            &tuner.variants[arm],
+            batch,
+            per_request_ms,
+        );
+        tuner.observe(arm, per_request_ms, batch, &self.cfg)
+    }
+
+    /// The tuner's currently chosen plan for `fp`, when it differs
+    /// from the static arm and has been built — what a plan-cache
+    /// rebuild (LRU eviction) must re-install so the promoted winner
+    /// survives eviction instead of silently reverting to the static
+    /// plan.
+    pub fn chosen_plan(&self, fp: u64) -> Option<Arc<Plan>> {
+        let inner = self.inner.lock().unwrap();
+        let t = inner.get(&fp)?;
+        if t.chosen == t.static_idx {
+            return None;
+        }
+        t.plans[t.chosen].clone()
+    }
+
+    /// Number of matrices under tuning.
+    pub fn tuner_count(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// (total promotions, total demotions) across all tuners.
+    pub fn totals(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        inner.values().fold((0, 0), |(p, d), t| {
+            (p + t.promotions, d + t.demotions)
+        })
+    }
+
+    /// Per-matrix summaries, sorted by matrix name then fingerprint
+    /// (stable report order).
+    pub fn summaries(&self) -> Vec<TunerSummary> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<TunerSummary> =
+            inner.values().map(Tuner::summary).collect();
+        out.sort_by(|a, b| {
+            a.name.cmp(&b.name).then(a.fingerprint.cmp(&b.fingerprint))
+        });
+        out
+    }
+
+    /// Clone-out of the accumulated observation dataset (the
+    /// retraining input for the offline planner).
+    pub fn dataset(&self) -> Dataset {
+        self.log.lock().unwrap().snapshot()
+    }
+
+    /// Rows in the observation log — O(1), unlike
+    /// [`Autotuner::dataset`], which clones the rows out.
+    pub fn dataset_len(&self) -> usize {
+        self.log.lock().unwrap().len()
+    }
+
+    /// Full tuning state as JSON (see [`Autotuner::warm_start`]).
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut tuners: Vec<&Tuner> = inner.values().collect();
+        tuners.sort_by_key(|t| t.fingerprint);
+        let mut obj = BTreeMap::new();
+        obj.insert("policy".into(), Json::Str(self.cfg.policy.name()));
+        obj.insert(
+            "tuners".into(),
+            Json::Arr(tuners.iter().map(|t| t.to_json()).collect()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+fn parse_fingerprint(s: &str) -> Option<u64> {
+    let hex = s.strip_prefix("0x").unwrap_or(s);
+    u64::from_str_radix(hex, 16).ok()
+}
+
+/// The autotune report table (the CLI's `autotune-report` output and
+/// the tuned replay's extra block).
+pub fn autotune_table(summaries: &[TunerSummary]) -> Table {
+    let mut t = Table::new(
+        "Autotune report (per-matrix plan tuning)",
+        &[
+            "matrix", "static plan", "static ms", "tuned plan", "tuned ms",
+            "obs", "arms", "promo", "demo",
+        ],
+    );
+    for s in summaries {
+        t.row(vec![
+            s.name.clone(),
+            s.static_variant.name(),
+            format!("{:.4}", s.static_mean_ms),
+            if s.diverged() {
+                s.chosen_variant.name()
+            } else {
+                format!("{} (=static)", s.chosen_variant.name())
+            },
+            format!("{:.4}", s.chosen_mean_ms),
+            s.observations.to_string(),
+            s.arms.to_string(),
+            s.promotions.to_string(),
+            s.demotions.to_string(),
+        ]);
+    }
+    t
+}
+
+/// JSON form of the summaries (rides inside the replay report).
+pub fn autotune_json(summaries: &[TunerSummary]) -> Json {
+    Json::Arr(
+        summaries
+            .iter()
+            .map(|s| {
+                Json::Obj(
+                    [
+                        (
+                            "fingerprint".to_string(),
+                            Json::Str(format!("{:#x}", s.fingerprint)),
+                        ),
+                        ("name".to_string(), Json::Str(s.name.clone())),
+                        (
+                            "static_plan".to_string(),
+                            Json::Str(s.static_variant.name()),
+                        ),
+                        (
+                            "tuned_plan".to_string(),
+                            Json::Str(s.chosen_variant.name()),
+                        ),
+                        (
+                            "static_mean_ms".to_string(),
+                            Json::Num(s.static_mean_ms),
+                        ),
+                        (
+                            "tuned_mean_ms".to_string(),
+                            Json::Num(s.chosen_mean_ms),
+                        ),
+                        (
+                            "observations".to_string(),
+                            Json::Num(s.observations as f64),
+                        ),
+                        (
+                            "promotions".to_string(),
+                            Json::Num(s.promotions as f64),
+                        ),
+                        (
+                            "demotions".to_string(),
+                            Json::Num(s.demotions as f64),
+                        ),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::generators;
+    use crate::service::plan::{build_plan, Planner};
+    use crate::util::rng::Pcg32 as TestRng;
+
+    fn setup() -> (Csr, Arc<Plan>, u64) {
+        let mut rng = TestRng::new(0xA7A7);
+        let csr = generators::random_uniform(400, 6, &mut rng);
+        let plan = Arc::new(build_plan(
+            &Planner::Heuristic,
+            &PlanConfig::default(),
+            &csr,
+        ));
+        let fp = crate::service::registry::fingerprint(&csr);
+        (csr, plan, fp)
+    }
+
+    /// Synthetic latency model with a knee: per-thread sync cost plus
+    /// work that stops scaling at 4 threads — 2 threads is optimal for
+    /// small work, 4 for large.
+    fn modeled_ms(threads: usize, work_ms: f64) -> f64 {
+        let eff = threads.min(4).max(1) as f64;
+        0.03 + 0.002 * (threads as f64 - 1.0) + work_ms / eff
+    }
+
+    fn drive(
+        tuner: &Autotuner,
+        csr: &Csr,
+        plan: &Arc<Plan>,
+        fp: u64,
+        rounds: usize,
+        work_ms: f64,
+        batch: usize,
+    ) -> u64 {
+        let mut replaced = 0;
+        for _ in 0..rounds {
+            let (p, arm) = tuner.plan_for(fp, "m", plan, csr);
+            let ms = modeled_ms(p.n_threads, work_ms);
+            if tuner.observe(fp, arm, ms, batch).is_some() {
+                replaced += 1;
+            }
+        }
+        replaced
+    }
+
+    #[test]
+    fn tuner_finds_the_thread_knee() {
+        let (csr, plan, fp) = setup();
+        assert_eq!(plan.n_threads, 4, "static default is one core group");
+        let tuner =
+            Autotuner::new(AutotuneConfig::default(), PlanConfig::default());
+        // Small work: the sync term dominates past 1-2 threads, so the
+        // knee is *below* the static pick of 4.
+        let replaced = drive(&tuner, &csr, &plan, fp, 150, 0.01, 1);
+        assert!(replaced >= 1, "a better variant must be promoted");
+        let summaries = tuner.summaries();
+        let s = &summaries[0];
+        assert!(s.diverged(), "tuned pick must leave the static plan");
+        assert!(
+            s.chosen_variant.n_threads < 4,
+            "small work must tune below the static width, got {}",
+            s.chosen_variant.n_threads
+        );
+        assert!(
+            s.chosen_mean_ms <= s.static_mean_ms,
+            "promotion must not regress: {} vs {}",
+            s.chosen_mean_ms,
+            s.static_mean_ms
+        );
+        let (promos, _) = tuner.totals();
+        assert!(promos >= 1);
+        assert_eq!(tuner.tuner_count(), 1);
+        // Observations accumulated for retraining.
+        let d = tuner.dataset();
+        assert_eq!(d.len(), 150);
+        assert_eq!(d.n_features(), observe::BASE_FEATURES + 3);
+    }
+
+    #[test]
+    fn batch_drift_demotes_and_reopens() {
+        let (csr, plan, fp) = setup();
+        let cfg = AutotuneConfig {
+            drift_ratio: 0.3,
+            ..AutotuneConfig::default()
+        };
+        let tuner = Autotuner::new(cfg, PlanConfig::default());
+        drive(&tuner, &csr, &plan, fp, 120, 0.01, 1);
+        let before = tuner.summaries();
+        assert!(
+            before[0].diverged(),
+            "setup: promotion must have happened"
+        );
+        // Traffic regime flips from singletons to wide batches: the
+        // EWMA leaves the promotion anchor and the tuner demotes.
+        drive(&tuner, &csr, &plan, fp, 50, 0.01, 16);
+        let (_, demotions) = tuner.totals();
+        assert!(demotions >= 1, "batch-width drift must demote");
+    }
+
+    #[test]
+    fn snapshot_roundtrip_warm_starts() {
+        let (csr, plan, fp) = setup();
+        let tuner =
+            Autotuner::new(AutotuneConfig::default(), PlanConfig::default());
+        drive(&tuner, &csr, &plan, fp, 150, 0.01, 1);
+        let snap = tuner.to_json();
+        let text = snap.to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let warm =
+            Autotuner::new(AutotuneConfig::default(), PlanConfig::default())
+                .warm_start(&parsed);
+        // A few requests re-materialize the tuner with its history
+        // (observations match each arm's modeled cost, so arm means —
+        // and therefore the chosen variant — are unchanged), and the
+        // restored winner must be handed back for a cache re-install
+        // as soon as its plan is rebuilt.
+        let installs = drive(&warm, &csr, &plan, fp, 20, 0.01, 1);
+        assert!(
+            installs >= 1,
+            "the warm-started winner must be re-installed into the cache"
+        );
+        let (olds, news) = (tuner.summaries(), warm.summaries());
+        let (old, new) = (&olds[0], &news[0]);
+        assert_eq!(old.chosen_variant, new.chosen_variant);
+        assert_eq!(old.promotions, new.promotions);
+        assert!(
+            new.observations >= old.observations,
+            "warm start must carry the pull history"
+        );
+    }
+
+    #[test]
+    fn tuning_is_deterministic_for_a_seed() {
+        let (csr, plan, fp) = setup();
+        let run = || {
+            let tuner = Autotuner::new(
+                AutotuneConfig::default(),
+                PlanConfig::default(),
+            );
+            let mut picks = Vec::new();
+            for _ in 0..80 {
+                let (p, arm) = tuner.plan_for(fp, "m", &plan, &csr);
+                picks.push(arm);
+                tuner.observe(fp, arm, modeled_ms(p.n_threads, 0.02), 2);
+            }
+            (picks, tuner.summaries()[0].chosen_variant)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.0, b.0, "arm sequence must be reproducible");
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn ucb_policy_also_converges() {
+        let (csr, plan, fp) = setup();
+        let cfg = AutotuneConfig {
+            policy: Policy::Ucb1 { c: 0.5 },
+            ..AutotuneConfig::default()
+        };
+        let tuner = Autotuner::new(cfg, PlanConfig::default());
+        drive(&tuner, &csr, &plan, fp, 200, 0.01, 1);
+        let summaries = tuner.summaries();
+        let s = &summaries[0];
+        assert!(s.diverged());
+        assert!(s.chosen_variant.n_threads < 4);
+    }
+
+    #[test]
+    fn chosen_plan_survives_cache_eviction_semantics() {
+        let (csr, plan, fp) = setup();
+        let tuner =
+            Autotuner::new(AutotuneConfig::default(), PlanConfig::default());
+        // Unknown fingerprints and un-diverged tuners expose nothing.
+        assert!(tuner.chosen_plan(0xDEAD).is_none());
+        let (_, arm) = tuner.plan_for(fp, "m", &plan, &csr);
+        tuner.observe(fp, arm, modeled_ms(plan.n_threads, 0.01), 1);
+        assert!(
+            tuner.chosen_plan(fp).is_none(),
+            "chosen == static must not offer a replacement"
+        );
+        // After promotion, the winner is available for a cache
+        // rebuild (the LRU-eviction re-install path).
+        drive(&tuner, &csr, &plan, fp, 150, 0.01, 1);
+        let winner = tuner.chosen_plan(fp).expect("promoted winner");
+        let summaries = tuner.summaries();
+        assert_eq!(winner.n_threads, summaries[0].chosen_variant.n_threads);
+    }
+
+    #[test]
+    fn report_renders_and_observation_guards_hold() {
+        let (csr, plan, fp) = setup();
+        let tuner =
+            Autotuner::new(AutotuneConfig::default(), PlanConfig::default());
+        drive(&tuner, &csr, &plan, fp, 30, 0.01, 1);
+        let summaries = tuner.summaries();
+        let md = autotune_table(&summaries).to_markdown();
+        assert!(md.contains("Autotune report"));
+        let j = autotune_json(&summaries);
+        assert_eq!(j.as_arr().map(|a| a.len()), Some(1));
+        // Bad feedback is ignored, never a panic.
+        assert!(tuner.observe(0xDEAD, 0, 1.0, 1).is_none());
+        assert!(tuner.observe(fp, 9999, 1.0, 1).is_none());
+        assert!(tuner.observe(fp, 0, f64::NAN, 1).is_none());
+        assert!(tuner.observe(fp, 0, -1.0, 1).is_none());
+    }
+}

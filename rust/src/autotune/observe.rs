@@ -1,0 +1,228 @@
+//! Observation plumbing: every measured dispatch becomes (a) an arm
+//! update in the tuner and (b) a supervised sample for retraining the
+//! offline planner.
+//!
+//! The paper's regression tree is trained on simulated labels; a
+//! serving deployment sees the real thing. [`ObservationLog`]
+//! accumulates `(static features, n_threads, batch, schedule) ->
+//! per-request latency` rows into an [`mlmodel::Dataset`] so the
+//! `coordinator::format_select` tree can periodically be refit from
+//! production measurements — the offline model becomes the prior, not
+//! the verdict. [`BatchDrift`] watches the traffic's batch-width EWMA
+//! and flags when it moves far from where a promotion was decided
+//! (batched dispatches execute a different effective schedule than
+//! singletons — see `per_schedule` telemetry — so a promotion decided
+//! under one batching regime may not survive another).
+
+use crate::mlmodel::Dataset;
+
+use super::ladder::{schedule_code, Variant};
+
+/// Length of the `coordinator::format_select::static_features` vector
+/// the observation rows lead with (zero-padded for degenerate
+/// matrices whose plans carry no features).
+pub const BASE_FEATURES: usize = 7;
+
+/// Rows retained before the log stops growing (bounds memory on
+/// million-request runs; the tuner's arm statistics keep streaming).
+pub const DATASET_CAP: usize = 65_536;
+
+/// Feature schema of the observation dataset.
+pub fn feature_names() -> Vec<String> {
+    vec![
+        "n_rows".into(),
+        "nnz_avg".into(),
+        "nnz_var".into(),
+        "nnz_max_ratio".into(),
+        "job_var".into(),
+        "locality".into(),
+        "x_miss_l1".into(),
+        "n_threads".into(),
+        "batch".into(),
+        "schedule".into(),
+    ]
+}
+
+/// Bounded accumulator of supervised observations.
+#[derive(Clone, Debug)]
+pub struct ObservationLog {
+    data: Dataset,
+    dropped: u64,
+}
+
+impl Default for ObservationLog {
+    fn default() -> Self {
+        ObservationLog { data: Dataset::new(feature_names()), dropped: 0 }
+    }
+}
+
+impl ObservationLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one measured dispatch. `features` is the plan's static
+    /// feature vector (may be empty; padded to [`BASE_FEATURES`]).
+    pub fn record(
+        &mut self,
+        features: &[f64],
+        variant: &Variant,
+        batch: usize,
+        per_request_ms: f64,
+    ) {
+        if self.data.len() >= DATASET_CAP {
+            self.dropped += 1;
+            return;
+        }
+        let mut row = Vec::with_capacity(BASE_FEATURES + 3);
+        row.extend(features.iter().copied().take(BASE_FEATURES));
+        while row.len() < BASE_FEATURES {
+            row.push(0.0);
+        }
+        row.push(variant.n_threads as f64);
+        row.push(batch as f64);
+        row.push(schedule_code(variant.schedule));
+        self.data.push(row, per_request_ms);
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Observations discarded after the cap was reached.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Clone-out of the accumulated dataset (retraining input).
+    pub fn snapshot(&self) -> Dataset {
+        self.data.clone()
+    }
+}
+
+/// EWMA batch-width drift detector: anchored at promotion time,
+/// trips when the traffic's coalescing behavior moves `ratio` away
+/// from the anchor.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchDrift {
+    alpha: f64,
+    ratio: f64,
+    ewma: f64,
+    anchor: f64,
+    seen: bool,
+}
+
+impl BatchDrift {
+    pub fn new(alpha: f64, ratio: f64) -> Self {
+        BatchDrift {
+            alpha: alpha.clamp(0.0, 1.0),
+            ratio: ratio.max(0.0),
+            ewma: 0.0,
+            anchor: 0.0,
+            seen: false,
+        }
+    }
+
+    /// Fold one dispatch's batch width in; returns `true` when the
+    /// EWMA has drifted past the anchored reference (only while
+    /// anchored).
+    pub fn observe(&mut self, batch: usize) -> bool {
+        let b = batch.max(1) as f64;
+        if !self.seen {
+            self.ewma = b;
+            self.seen = true;
+        } else {
+            self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * b;
+        }
+        self.anchor > 0.0
+            && (self.ewma - self.anchor).abs() / self.anchor > self.ratio
+    }
+
+    /// Freeze the current EWMA as the reference regime (called at
+    /// promotion time).
+    pub fn anchor(&mut self) {
+        self.anchor = self.ewma.max(1.0);
+    }
+
+    /// Drop the reference (called at demotion).
+    pub fn release(&mut self) {
+        self.anchor = 0.0;
+    }
+
+    pub fn ewma(&self) -> f64 {
+        self.ewma
+    }
+
+    pub fn anchored(&self) -> f64 {
+        self.anchor
+    }
+
+    /// Restore from snapshot fields.
+    pub fn restored(alpha: f64, ratio: f64, ewma: f64, anchor: f64) -> Self {
+        BatchDrift {
+            alpha: alpha.clamp(0.0, 1.0),
+            ratio: ratio.max(0.0),
+            ewma,
+            anchor,
+            seen: ewma > 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Schedule;
+
+    #[test]
+    fn log_pads_and_schemas_rows() {
+        let mut log = ObservationLog::new();
+        let v = Variant { schedule: Schedule::CsrRowBalanced, n_threads: 2 };
+        log.record(&[], &v, 4, 0.5); // degenerate: empty features pad
+        log.record(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], &v, 1, 0.25);
+        let d = log.snapshot();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.n_features(), BASE_FEATURES + 3);
+        assert_eq!(d.x[0][..BASE_FEATURES], [0.0; BASE_FEATURES]);
+        assert_eq!(d.x[1][0], 1.0);
+        assert_eq!(d.x[0][BASE_FEATURES], 2.0); // n_threads
+        assert_eq!(d.x[0][BASE_FEATURES + 1], 4.0); // batch
+        assert_eq!(d.x[0][BASE_FEATURES + 2], 1.0); // csr-balanced
+        assert_eq!(d.y, vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn log_caps_and_counts_drops() {
+        let mut log = ObservationLog::new();
+        let v = Variant { schedule: Schedule::CsrRowStatic, n_threads: 1 };
+        for _ in 0..DATASET_CAP + 10 {
+            log.record(&[0.0; BASE_FEATURES], &v, 1, 1.0);
+        }
+        assert_eq!(log.len(), DATASET_CAP);
+        assert_eq!(log.dropped(), 10);
+    }
+
+    #[test]
+    fn drift_trips_only_when_anchored_and_moved() {
+        let mut d = BatchDrift::new(0.5, 0.5);
+        for _ in 0..10 {
+            assert!(!d.observe(4), "unanchored drift must not trip");
+        }
+        d.anchor();
+        assert!((d.anchored() - 4.0).abs() < 1e-9);
+        assert!(!d.observe(4), "stable traffic stays anchored");
+        // Batch width collapses to singletons: EWMA halves fast at
+        // alpha 0.5 and crosses the 50% ratio.
+        let mut tripped = false;
+        for _ in 0..10 {
+            tripped |= d.observe(1);
+        }
+        assert!(tripped, "regime change must trip the detector");
+        d.release();
+        assert!(!d.observe(1), "released detector never trips");
+    }
+}

@@ -1,0 +1,213 @@
+//! Explore/exploit policies over plan-variant arms.
+//!
+//! Each registered matrix's [`super::Tuner`] holds one arm per
+//! candidate plan variant; a policy picks which arm the next dispatch
+//! runs. Both policies are deterministic given the tuner's seeded RNG
+//! and the observation sequence, which is what keeps a tuned
+//! virtual-time replay bit-reproducible.
+
+use crate::util::rng::Pcg32;
+
+/// Streaming latency statistics of one plan-variant arm (Welford's
+/// online mean/variance — constant memory at any pull count).
+#[derive(Clone, Debug, Default)]
+pub struct ArmStats {
+    pub pulls: u64,
+    pub mean_ms: f64,
+    m2: f64,
+}
+
+impl ArmStats {
+    /// Restore an arm from snapshot fields (JSON warm start).
+    pub fn restored(pulls: u64, mean_ms: f64, m2: f64) -> ArmStats {
+        ArmStats { pulls, mean_ms, m2: m2.max(0.0) }
+    }
+
+    pub fn observe(&mut self, ms: f64) {
+        self.pulls += 1;
+        let delta = ms - self.mean_ms;
+        self.mean_ms += delta / self.pulls as f64;
+        self.m2 += delta * (ms - self.mean_ms);
+    }
+
+    /// Sample variance of the observed latencies (0 below 2 pulls).
+    pub fn variance(&self) -> f64 {
+        if self.pulls < 2 {
+            0.0
+        } else {
+            self.m2 / (self.pulls - 1) as f64
+        }
+    }
+
+    /// Internal Welford accumulator (snapshot serialization).
+    pub fn m2(&self) -> f64 {
+        self.m2
+    }
+
+    /// Halve the evidence weight — demotion re-opens exploration
+    /// without forgetting everything the arm has learned.
+    pub fn decay(&mut self) {
+        self.pulls /= 2;
+        self.m2 /= 2.0;
+    }
+}
+
+/// Arm-selection policy. Latencies are *costs*: both policies
+/// minimize.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Policy {
+    /// With probability `epsilon` pick a uniform random arm, else the
+    /// lowest observed mean (ties to the lowest index).
+    EpsilonGreedy { epsilon: f64 },
+    /// UCB1 adapted to minimization: pick the arm minimizing
+    /// `mean - c * scale * sqrt(2 ln N / n)`, where `scale` is the
+    /// mean of the arm means (latencies are not in [0, 1], so the
+    /// confidence radius is normalized to the problem's latency
+    /// scale).
+    Ucb1 { c: f64 },
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::EpsilonGreedy { epsilon } => {
+                format!("epsilon-greedy({epsilon:.2})")
+            }
+            Policy::Ucb1 { c } => format!("ucb1({c:.2})"),
+        }
+    }
+
+    /// Pick the next arm to pull. Arms with zero pulls are swept first
+    /// in index order (the deterministic warmup pass both policies
+    /// share).
+    pub fn select(&self, arms: &[ArmStats], rng: &mut Pcg32) -> usize {
+        assert!(!arms.is_empty(), "policy needs at least one arm");
+        if let Some(i) = arms.iter().position(|a| a.pulls == 0) {
+            return i;
+        }
+        match self {
+            Policy::EpsilonGreedy { epsilon } => {
+                if rng.gen_f64() < *epsilon {
+                    rng.gen_range(arms.len())
+                } else {
+                    argmin_mean(arms)
+                }
+            }
+            Policy::Ucb1 { c } => {
+                let total: u64 = arms.iter().map(|a| a.pulls).sum();
+                let scale = arms.iter().map(|a| a.mean_ms).sum::<f64>()
+                    / arms.len() as f64;
+                let ln_total = (total.max(1) as f64).ln();
+                let mut best = 0usize;
+                let mut best_score = f64::INFINITY;
+                for (i, a) in arms.iter().enumerate() {
+                    let bonus = c
+                        * scale
+                        * (2.0 * ln_total / a.pulls as f64).sqrt();
+                    let score = a.mean_ms - bonus;
+                    if score < best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+fn argmin_mean(arms: &[ArmStats]) -> usize {
+    let mut best = 0usize;
+    for (i, a) in arms.iter().enumerate().skip(1) {
+        if a.mean_ms < arms[best].mean_ms {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arms_with_means(means: &[f64], pulls: u64) -> Vec<ArmStats> {
+        means
+            .iter()
+            .map(|&m| ArmStats::restored(pulls, m, 0.0))
+            .collect()
+    }
+
+    #[test]
+    fn welford_mean_and_variance() {
+        let mut a = ArmStats::default();
+        for ms in [1.0, 2.0, 3.0, 4.0] {
+            a.observe(ms);
+        }
+        assert_eq!(a.pulls, 4);
+        assert!((a.mean_ms - 2.5).abs() < 1e-12);
+        assert!((a.variance() - 5.0 / 3.0).abs() < 1e-12);
+        a.decay();
+        assert_eq!(a.pulls, 2);
+        assert!((a.mean_ms - 2.5).abs() < 1e-12, "decay keeps the mean");
+    }
+
+    #[test]
+    fn unpulled_arms_are_swept_first() {
+        let mut rng = Pcg32::new(1);
+        let mut arms = arms_with_means(&[5.0, 1.0, 3.0], 2);
+        arms[2] = ArmStats::default();
+        for policy in [
+            Policy::EpsilonGreedy { epsilon: 0.5 },
+            Policy::Ucb1 { c: 1.0 },
+        ] {
+            assert_eq!(policy.select(&arms, &mut rng), 2, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn greedy_exploits_the_best_mean() {
+        let mut rng = Pcg32::new(2);
+        let arms = arms_with_means(&[5.0, 1.0, 3.0], 4);
+        let policy = Policy::EpsilonGreedy { epsilon: 0.0 };
+        for _ in 0..10 {
+            assert_eq!(policy.select(&arms, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn epsilon_explores_sometimes() {
+        let mut rng = Pcg32::new(3);
+        let arms = arms_with_means(&[5.0, 1.0, 3.0], 4);
+        let policy = Policy::EpsilonGreedy { epsilon: 0.5 };
+        let picks: Vec<usize> =
+            (0..200).map(|_| policy.select(&arms, &mut rng)).collect();
+        assert!(picks.iter().any(|&i| i != 1), "must explore");
+        let best = picks.iter().filter(|&&i| i == 1).count();
+        assert!(best > 100, "must still mostly exploit: {best}/200");
+    }
+
+    #[test]
+    fn ucb_revisits_underexplored_arms() {
+        let mut rng = Pcg32::new(4);
+        // Arm 0 is slightly worse but barely pulled: the confidence
+        // bonus must send UCB back to it.
+        let mut arms = arms_with_means(&[1.2, 1.0], 1);
+        arms[1].pulls = 1000;
+        let policy = Policy::Ucb1 { c: 1.0 };
+        assert_eq!(policy.select(&arms, &mut rng), 0);
+        // Once evidence accumulates, the better mean wins.
+        arms[0].pulls = 1000;
+        assert_eq!(policy.select(&arms, &mut rng), 1);
+    }
+
+    #[test]
+    fn selection_is_deterministic_for_a_seed() {
+        let arms = arms_with_means(&[2.0, 1.0, 1.5], 3);
+        let run = |seed: u64| -> Vec<usize> {
+            let mut rng = Pcg32::new(seed);
+            let policy = Policy::EpsilonGreedy { epsilon: 0.3 };
+            (0..50).map(|_| policy.select(&arms, &mut rng)).collect()
+        };
+        assert_eq!(run(7), run(7));
+    }
+}

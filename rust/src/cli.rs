@@ -63,6 +63,10 @@ pub enum Command {
         /// Persistent executor pool (`--pool`, default) vs per-request
         /// scoped threads (`--spawn`).
         pooled: bool,
+        /// Plan-cache capacity (entries, LRU); 0 = unbounded.
+        plan_cache_cap: usize,
+        /// Online plan autotuning from measured wall-clock latency.
+        tune: bool,
     },
     /// Deterministic traffic replay through the serving engine.
     Replay {
@@ -86,9 +90,26 @@ pub enum Command {
         /// Pool-backed kernel execution (`--pool`, default) vs
         /// per-request scoped threads (`--spawn`).
         pooled: bool,
+        /// Plan-cache capacity (entries, LRU); 0 = unbounded.
+        plan_cache_cap: usize,
+        /// Online plan autotuning on the deterministic virtual clock;
+        /// the replay prints an autotune report after the serving
+        /// report.
+        tune: bool,
+        tune_policy: TunePolicyKind,
+        /// JSON tuning-state path: loaded (warm start) if it exists,
+        /// written back after the replay. Single-shard replays only.
+        tune_state: Option<String>,
     },
     /// Print topology/provenance info.
     Info,
+}
+
+/// Explore/exploit policy of the `--tune` flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunePolicyKind {
+    Epsilon,
+    Ucb,
 }
 
 /// Traffic shape of the `replay` subcommand.
@@ -133,6 +154,8 @@ pub fn usage() -> &'static str {
      \u{20}        --policy home|replicate [--hot N]  matrix placement\n\
      \u{20}        --pool | --spawn     persistent executor pool (default)\n\
      \u{20}                             vs per-request scoped threads\n\
+     \u{20}        --plan-cache-cap N (default 0 = unbounded; LRU)\n\
+     \u{20}        --tune               online plan autotuning (wall clock)\n\
      replay   --suite tiny|fast|full   corpus scale (default fast)\n\
      \u{20}        --pattern uniform|zipf|bursty (default zipf)\n\
      \u{20}        --requests N (default 2000)  --matrices N (default 32)\n\
@@ -142,12 +165,16 @@ pub fn usage() -> &'static str {
      \u{20}        --shards N (default 1)  --queue-cap N (default 0)\n\
      \u{20}        --policy home|replicate [--hot N]\n\
      \u{20}        --pool | --spawn     executor dispatch mode (pool default)\n\
+     \u{20}        --plan-cache-cap N (default 0 = unbounded; LRU)\n\
+     \u{20}        --tune               online plan autotuning + report\n\
+     \u{20}        --tune-policy epsilon|ucb (default epsilon)\n\
+     \u{20}        --tune-state PATH    JSON warm start / snapshot (1 shard)\n\
      \u{20}        --json PATH          dump the report as JSON\n\
      info"
 }
 
 /// Flags that take no value (presence toggles).
-const BOOL_FLAGS: &[&str] = &["pool", "spawn"];
+const BOOL_FLAGS: &[&str] = &["pool", "spawn", "tune"];
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
@@ -302,6 +329,16 @@ fn parse_policy(
     }
 }
 
+fn parse_tune_policy(
+    flags: &HashMap<String, String>,
+) -> Result<TunePolicyKind> {
+    match flags.get("tune-policy").map(String::as_str).unwrap_or("epsilon") {
+        "epsilon" => Ok(TunePolicyKind::Epsilon),
+        "ucb" => Ok(TunePolicyKind::Ucb),
+        other => bail!("unknown tune policy '{other}' (epsilon|ucb)"),
+    }
+}
+
 fn parse_named(name: &str) -> Result<NamedMatrix> {
     NamedMatrix::ALL
         .into_iter()
@@ -383,6 +420,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             queue_cap: parse_usize(&flags, "queue-cap", 1024)?,
             policy: parse_policy(&flags)?,
             pooled: parse_pooled(&flags)?,
+            plan_cache_cap: parse_usize(&flags, "plan-cache-cap", 0)?,
+            tune: flags.contains_key("tune"),
         },
         "replay" => Command::Replay {
             suite: parse_suite(&flags)?,
@@ -404,6 +443,10 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             queue_cap: parse_usize(&flags, "queue-cap", 0)?,
             policy: parse_policy(&flags)?,
             pooled: parse_pooled(&flags)?,
+            plan_cache_cap: parse_usize(&flags, "plan-cache-cap", 0)?,
+            tune: flags.contains_key("tune"),
+            tune_policy: parse_tune_policy(&flags)?,
+            tune_state: flags.get("tune-state").cloned(),
         },
         "info" => Command::Info,
         other => bail!("unknown command '{other}'\n{}", usage()),
@@ -635,6 +678,71 @@ mod tests {
         assert!(parse(&sv(&["replay", "--pattern", "nope"])).is_err());
         assert!(parse(&sv(&["replay", "--planner", "nope"])).is_err());
         assert!(parse(&sv(&["replay", "--requests", "abc"])).is_err());
+    }
+
+    #[test]
+    fn parses_tune_flags() {
+        let cli = parse(&sv(&["replay"])).unwrap();
+        match cli.command {
+            Command::Replay {
+                tune,
+                tune_policy,
+                tune_state,
+                plan_cache_cap,
+                ..
+            } => {
+                assert!(!tune, "tuning is opt-in");
+                assert_eq!(tune_policy, TunePolicyKind::Epsilon);
+                assert!(tune_state.is_none());
+                assert_eq!(plan_cache_cap, 0);
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "replay",
+            "--tune",
+            "--tune-policy",
+            "ucb",
+            "--tune-state",
+            "/tmp/tune.json",
+            "--plan-cache-cap",
+            "64",
+            "--requests",
+            "50",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Replay {
+                tune,
+                tune_policy,
+                tune_state,
+                plan_cache_cap,
+                requests,
+                ..
+            } => {
+                assert!(tune);
+                assert_eq!(tune_policy, TunePolicyKind::Ucb);
+                assert_eq!(tune_state.as_deref(), Some("/tmp/tune.json"));
+                assert_eq!(plan_cache_cap, 64);
+                assert_eq!(requests, 50, "value flags parse after --tune");
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "serve-bench",
+            "--tune",
+            "--plan-cache-cap",
+            "8",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::ServeBench { tune, plan_cache_cap, .. } => {
+                assert!(tune);
+                assert_eq!(plan_cache_cap, 8);
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse(&sv(&["replay", "--tune-policy", "nope"])).is_err());
     }
 
     #[test]

@@ -46,6 +46,12 @@ impl ExecResult {
             0.0
         }
     }
+
+    /// Measured latency of the one request this execution served, in
+    /// milliseconds — the autotuner's observation unit.
+    pub fn per_request_ms(&self) -> f64 {
+        self.wall_seconds * 1e3
+    }
 }
 
 /// Disjoint-range mutable view for concurrent slot workers.
@@ -283,6 +289,13 @@ impl SpmmResult {
         } else {
             0.0
         }
+    }
+
+    /// Measured per-request share of this coalesced dispatch, in
+    /// milliseconds — what the autotuner records per served vector so
+    /// batched and singleton observations stay comparable.
+    pub fn per_request_ms(&self) -> f64 {
+        self.wall_seconds * 1e3 / self.batch.max(1) as f64
     }
 }
 
@@ -598,6 +611,21 @@ mod tests {
         let x = vec![1.0; 256];
         let r = spmv_threaded(&csr, &x, Schedule::CsrRowStatic, 2);
         assert!(r.gflops(csr.nnz()) > 0.0);
+    }
+
+    #[test]
+    fn per_request_ms_normalizes_by_batch() {
+        let r = ExecResult { y: vec![], wall_seconds: 0.002, threads: 1 };
+        assert!((r.per_request_ms() - 2.0).abs() < 1e-12);
+        let s = SpmmResult {
+            y: vec![],
+            n_rows: 0,
+            batch: 4,
+            wall_seconds: 0.002,
+            threads: 2,
+            schedule: Schedule::CsrRowStatic,
+        };
+        assert!((s.per_request_ms() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -29,9 +29,16 @@
 //!   plan cache, batched request executor (same-matrix coalescing
 //!   into multi-vector SpMM), NUMA-panel-sharded serving with
 //!   placement policies and admission control, deterministic traffic
-//!   replay, and serving telemetry with streaming percentiles.
+//!   replay, and serving telemetry with streaming percentiles;
+//! * [`autotune`] — online closed-loop plan tuning: per-matrix
+//!   explore/exploit over plan variants (epsilon-greedy / UCB1) fed
+//!   by measured serving latency, knee-hunting thread-count
+//!   hill-climb, promotion into the versioned plan cache, drift-based
+//!   demotion, JSON snapshots, and observation datasets for
+//!   retraining the offline planner.
 
 pub mod analysis;
+pub mod autotune;
 pub mod cli;
 pub mod coordinator;
 pub mod corpus;

@@ -3,8 +3,12 @@
 
 use anyhow::Result;
 
+use ft2000_spmv::autotune::{
+    autotune_table, AutotuneConfig, Autotuner, Policy,
+};
 use ft2000_spmv::cli::{
     self, Cli, Command, MatrixSource, PlannerKind, TrafficPattern,
+    TunePolicyKind,
 };
 use ft2000_spmv::coordinator::{
     build_dataset, profile_matrix, report, Campaign, ProfileConfig,
@@ -58,9 +62,11 @@ fn run(cli: Cli) -> Result<()> {
             queue_cap,
             policy,
             pooled,
+            plan_cache_cap,
+            tune,
         } => serve_bench(
             suite, matrices, batches, workers, shards, queue_cap, policy,
-            pooled,
+            pooled, plan_cache_cap, tune,
         ),
         Command::Replay {
             suite,
@@ -77,6 +83,10 @@ fn run(cli: Cli) -> Result<()> {
             queue_cap,
             policy,
             pooled,
+            plan_cache_cap,
+            tune,
+            tune_policy,
+            tune_state,
         } => replay_cmd(ReplayCmd {
             suite,
             pattern,
@@ -92,9 +102,18 @@ fn run(cli: Cli) -> Result<()> {
             queue_cap,
             policy,
             pooled,
+            plan_cache_cap,
+            tune,
+            tune_policy,
+            tune_state,
         }),
         Command::Info => info(),
     }
+}
+
+/// Wall-clock tuning config of the live `serve-bench --tune` path.
+fn live_tune_config() -> AutotuneConfig {
+    AutotuneConfig::default()
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -107,15 +126,19 @@ fn serve_bench(
     queue_cap: usize,
     policy: PlacementPolicy,
     pooled: bool,
+    plan_cache_cap: usize,
+    tune: bool,
 ) -> Result<()> {
     eprintln!("registering {matrices} corpus matrices...");
+    let plan_cfg =
+        PlanConfig { cache_cap: plan_cache_cap, ..PlanConfig::default() };
     let mut reg = MatrixRegistry::new();
     let ids = reg.register_suite(&suite, Some(matrices));
     let engine = ServeEngine::with_mode(
         pooled,
         reg,
         Planner::Heuristic,
-        PlanConfig::default(),
+        plan_cfg.clone(),
     );
     let mode = if pooled { "pool" } else { "spawn" };
 
@@ -208,8 +231,13 @@ fn serve_bench(
             pooled,
             reg,
             Planner::Heuristic,
-            PlanConfig::default(),
+            plan_cfg.clone(),
         );
+        let engine = if tune {
+            engine.with_tuner(live_tune_config())
+        } else {
+            engine
+        };
         eprintln!(
             "live global queue ({mode} dispatch): {n_req} zipf requests, \
              {workers} workers..."
@@ -249,6 +277,16 @@ fn serve_bench(
         )
         .print();
         service::telemetry::batch_histogram_table(&stats).print();
+        if let Some(t) = engine.tuner() {
+            autotune_table(&t.summaries()).print();
+            let (promos, demos) = t.totals();
+            eprintln!(
+                "autotune: {} tuners, {promos} promotions, {demos} \
+                 demotions, {} observations logged",
+                t.tuner_count(),
+                t.dataset_len()
+            );
+        }
         eprintln!("served {served} requests in {wall:.3}s");
     } else {
         // Sharded path: one shard per modeled panel, matrices placed
@@ -263,11 +301,12 @@ fn serve_bench(
             deadline_ms: 0.0,
             policy,
             pooled,
+            tune: if tune { Some(live_tune_config()) } else { None },
         };
         let server = ShardedServer::with_weights(
             registry.clone(),
             Planner::Heuristic,
-            PlanConfig::default(),
+            plan_cfg.clone(),
             cfg,
             &weights,
         );
@@ -302,6 +341,14 @@ fn serve_bench(
         )
         .print();
         service::telemetry::batch_histogram_table(&merged).print();
+        if tune {
+            autotune_table(&server.autotune_summaries()).print();
+            let (promos, demos) = server.autotune_totals();
+            eprintln!(
+                "autotune: {promos} promotions, {demos} demotions \
+                 across {shards} shards"
+            );
+        }
         eprintln!(
             "served {served} requests in {wall:.3}s \
              ({} rejected, {} errors)",
@@ -328,6 +375,24 @@ struct ReplayCmd {
     queue_cap: usize,
     policy: PlacementPolicy,
     pooled: bool,
+    plan_cache_cap: usize,
+    tune: bool,
+    tune_policy: TunePolicyKind,
+    tune_state: Option<String>,
+}
+
+/// Virtual-clock tuning config of the `replay --tune` path: the cost
+/// model feeds observations, so the run is deterministic per seed.
+fn replay_tune_config(cmd: &ReplayCmd) -> AutotuneConfig {
+    AutotuneConfig {
+        policy: match cmd.tune_policy {
+            TunePolicyKind::Epsilon => Policy::EpsilonGreedy { epsilon: 0.1 },
+            TunePolicyKind::Ucb => Policy::Ucb1 { c: 1.0 },
+        },
+        wall_clock: false,
+        seed: cmd.seed,
+        ..AutotuneConfig::default()
+    }
 }
 
 fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
@@ -369,25 +434,41 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
     let requests = cmd.requests;
     let wspec =
         WorkloadSpec { requests, popularity, arrivals, seed: cmd.seed };
+    let plan_cfg = PlanConfig {
+        cache_cap: cmd.plan_cache_cap,
+        ..PlanConfig::default()
+    };
     let rcfg = ReplayConfig {
         max_batch: cmd.max_batch,
         queue_cap: cmd.queue_cap,
         pooled: cmd.pooled,
+        tune: if cmd.tune && cmd.shards > 1 {
+            Some(replay_tune_config(&cmd))
+        } else {
+            None
+        },
         ..Default::default()
     };
     eprintln!(
         "replaying {requests} requests ({arrivals:?}, {popularity:?}, \
-         seed {:#x}, {} shard(s), {} dispatch)...",
+         seed {:#x}, {} shard(s), {} dispatch{})...",
         cmd.seed,
         cmd.shards,
-        if cmd.pooled { "pool" } else { "spawn" }
+        if cmd.pooled { "pool" } else { "spawn" },
+        if cmd.tune { ", tuned" } else { "" }
     );
     if cmd.shards > 1 {
+        if cmd.tune_state.is_some() {
+            eprintln!(
+                "note: --tune-state applies to single-shard replays only \
+                 (per-shard tuners are built by the harness); ignoring it"
+            );
+        }
         let registry = std::sync::Arc::new(reg);
         let report = service::replay_sharded(
             registry,
             &planner,
-            &PlanConfig::default(),
+            &plan_cfg,
             &ids,
             &wspec,
             &rcfg,
@@ -401,8 +482,34 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
         }
         return Ok(());
     }
+    if !cmd.tune && cmd.tune_state.is_some() {
+        eprintln!("note: --tune-state does nothing without --tune");
+    }
     let engine =
-        ServeEngine::with_mode(cmd.pooled, reg, planner, PlanConfig::default());
+        ServeEngine::with_mode(cmd.pooled, reg, planner, plan_cfg.clone());
+    let engine = if cmd.tune {
+        let mut tuner =
+            Autotuner::new(replay_tune_config(&cmd), plan_cfg.clone());
+        if let Some(path) = &cmd.tune_state {
+            match std::fs::read_to_string(path) {
+                Ok(text) => match ft2000_spmv::util::json::parse(&text) {
+                    Ok(snapshot) => {
+                        tuner = tuner.warm_start(&snapshot);
+                        eprintln!("warm-started tuning state from {path}");
+                    }
+                    Err(e) => eprintln!(
+                        "ignoring unparsable tune state {path}: {e}"
+                    ),
+                },
+                Err(_) => {
+                    eprintln!("no tune state at {path} yet (cold start)")
+                }
+            }
+        }
+        engine.with_tuner_state(tuner)
+    } else {
+        engine
+    };
     let report = service::replay(&engine, &ids, &wspec, &rcfg)?;
     report.print();
     println!(
@@ -411,6 +518,20 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
         engine.plans.planner_name(),
         100.0 * report.hit_rate()
     );
+    if let Some(t) = engine.tuner() {
+        let (promos, demos) = t.totals();
+        println!(
+            "autotune: {} tuners, {promos} promotions, {demos} demotions, \
+             {} observations logged ({} policy)",
+            t.tuner_count(),
+            t.dataset_len(),
+            t.config().policy.name()
+        );
+        if let Some(path) = &cmd.tune_state {
+            std::fs::write(path, t.to_json().to_string())?;
+            eprintln!("wrote tuning state to {path}");
+        }
+    }
     if let Some(path) = cmd.json {
         std::fs::write(&path, report.to_json().to_string())?;
         eprintln!("wrote {path}");

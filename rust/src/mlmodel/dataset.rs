@@ -56,6 +56,18 @@ impl Dataset {
     pub fn column(&self, f: usize) -> Vec<f64> {
         self.x.iter().map(|row| row[f]).collect()
     }
+
+    /// Append every row of `other` (same schema required) — how the
+    /// per-shard autotune observation logs merge into one retraining
+    /// set for the offline planner.
+    pub fn extend(&mut self, other: &Dataset) {
+        assert_eq!(
+            self.feature_names, other.feature_names,
+            "datasets must share a feature schema to merge"
+        );
+        self.x.extend(other.x.iter().cloned());
+        self.y.extend(other.y.iter().copied());
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +114,23 @@ mod tests {
         let c = d.column(1);
         assert_eq!(c[0], 10.0);
         assert_eq!(c[9], 1.0);
+    }
+
+    #[test]
+    fn extend_merges_rows() {
+        let mut a = toy();
+        let b = toy();
+        a.extend(&b);
+        assert_eq!(a.len(), 20);
+        assert_eq!(a.x[10], b.x[0]);
+        assert_eq!(a.y[19], b.y[9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature schema")]
+    fn extend_rejects_schema_mismatch() {
+        let mut a = toy();
+        let b = Dataset::new(vec!["other".into()]);
+        a.extend(&b);
     }
 }

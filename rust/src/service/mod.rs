@@ -42,7 +42,10 @@ pub mod telemetry;
 pub mod workload;
 
 pub use batch::{serve_queue, PushError, Request, RequestQueue};
-pub use plan::{build_plan, Plan, PlanCache, PlanConfig, PlannedFormat, Planner};
+pub use plan::{
+    build_plan, build_plan_with, Plan, PlanCache, PlanConfig, PlannedFormat,
+    Planner,
+};
 pub use registry::{fingerprint, MatrixEntry, MatrixRegistry};
 pub use replay::{
     replay, replay_sharded, CostModel, ReplayConfig, ReplayReport,
@@ -59,6 +62,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, ensure, Result};
 
+use crate::autotune::{AutotuneConfig, Autotuner};
 use crate::exec::{self, ExecPool};
 use crate::sched::Schedule;
 
@@ -73,6 +77,10 @@ pub struct BatchOutcome {
     /// actually ran, not the plan's nominal tile schedule.
     pub schedule: Schedule,
     pub threads: usize,
+    /// When the engine autotunes: the tuner arm this dispatch ran, to
+    /// feed back to [`Autotuner::observe`] from an external clock
+    /// (the virtual-time replay).
+    pub arm: Option<usize>,
 }
 
 /// The serving engine: registry + plan cache + telemetry + (when
@@ -92,6 +100,7 @@ pub struct ServeEngine {
     pub plans: PlanCache,
     pub telemetry: Telemetry,
     pool: Option<ExecPool>,
+    tuner: Option<Autotuner>,
 }
 
 impl ServeEngine {
@@ -117,6 +126,7 @@ impl ServeEngine {
             plans: PlanCache::new(planner, cfg),
             telemetry: Telemetry::new(),
             pool: None,
+            tuner: None,
         }
     }
 
@@ -210,6 +220,70 @@ impl ServeEngine {
         self.pool.is_some()
     }
 
+    /// Enable online plan autotuning: every dispatch becomes an
+    /// explore/exploit pull over plan variants, and measured latency
+    /// feeds promotions back into the plan cache. The tuner's variant
+    /// plans are built from this engine's own [`PlanConfig`], so a
+    /// panel-pinned engine tunes within its panel width.
+    pub fn with_tuner(mut self, cfg: AutotuneConfig) -> Self {
+        let plan_cfg = self.plans.config().clone();
+        self.tuner = Some(Autotuner::new(cfg, plan_cfg));
+        self
+    }
+
+    /// Attach an already-constructed (e.g. JSON-warm-started) tuner.
+    pub fn with_tuner_state(mut self, tuner: Autotuner) -> Self {
+        self.tuner = Some(tuner);
+        self
+    }
+
+    pub fn tuner(&self) -> Option<&Autotuner> {
+        self.tuner.as_ref()
+    }
+
+    pub fn is_tuned(&self) -> bool {
+        self.tuner.is_some()
+    }
+
+    /// Resolve the plan one dispatch against `entry` should run —
+    /// shared by the live path ([`ServeEngine::execute_batch`]) and
+    /// the virtual-time replay's model-only dispatcher so both obey
+    /// the same rules. Returns `(plan, cache hit, tuner arm)`:
+    ///
+    /// * the cache lookup consults the tuner's promoted winner first,
+    ///   so an LRU-evicted promotion is re-installed directly
+    ///   ([`PlanCache::hit_or_install`]) instead of rebuilding (and
+    ///   then discarding) the static plan;
+    /// * on a tuned engine the returned plan is the tuner's
+    ///   explore/exploit pick; the cached plan stays the baseline arm
+    ///   every promotion is judged against.
+    pub(crate) fn plan_for_dispatch(
+        &self,
+        entry: &MatrixEntry,
+    ) -> (Arc<Plan>, bool, Option<usize>) {
+        let winner = self
+            .tuner
+            .as_ref()
+            .and_then(|t| t.chosen_plan(entry.fingerprint));
+        let (plan, plan_hit) = match winner {
+            Some(w) => self.plans.hit_or_install(entry.fingerprint, w),
+            None => self.plans.plan_for(entry.fingerprint, &entry.csr),
+        };
+        let (plan, arm) = match &self.tuner {
+            Some(t) => {
+                let (p, a) = t.plan_for(
+                    entry.fingerprint,
+                    &entry.name,
+                    &plan,
+                    &entry.csr,
+                );
+                (p, Some(a))
+            }
+            None => (plan, None),
+        };
+        (plan, plan_hit, arm)
+    }
+
     /// Execute a coalesced group of `y = A x` requests against one
     /// registered matrix. `xs.len() == 1` takes the single-vector
     /// path; larger groups run as one multi-vector SpMM. Records
@@ -234,17 +308,18 @@ impl ServeEngine {
                 entry.name
             );
         }
-        let (plan, plan_hit) =
-            self.plans.plan_for(entry.fingerprint, &entry.csr);
+        let (plan, plan_hit, arm) = self.plan_for_dispatch(entry);
         let pool = self.pool.as_ref();
-        let (ys, wall_seconds, threads) = if xs.len() == 1 {
+        let (ys, wall_seconds, threads, per_request_ms) = if xs.len() == 1 {
             let r = plan.execute_on(&entry.csr, xs[0], pool);
-            (vec![r.y], r.wall_seconds, r.threads)
+            let ms = r.per_request_ms();
+            (vec![r.y], r.wall_seconds, r.threads, ms)
         } else {
             let packed = exec::pack_vectors(xs);
             let r = plan.execute_batch_on(&entry.csr, &packed, xs.len(), pool);
+            let ms = r.per_request_ms();
             let ys = (0..xs.len()).map(|j| r.column(j)).collect();
-            (ys, r.wall_seconds, r.threads)
+            (ys, r.wall_seconds, r.threads, ms)
         };
         let schedule = plan.effective_schedule(xs.len());
         self.telemetry.record_batch(
@@ -254,7 +329,19 @@ impl ServeEngine {
             2.0 * entry.csr.nnz() as f64 * xs.len() as f64,
             &schedule.name(),
         );
-        Ok(BatchOutcome { ys, wall_seconds, plan_hit, schedule, threads })
+        // Close the loop on the engine's own clock (live serving).
+        // External-clock tuners (virtual-time replay) are fed by the
+        // caller instead — see `replay::Dispatcher`.
+        if let (Some(t), Some(a)) = (&self.tuner, arm) {
+            if t.wall_clock() {
+                if let Some(promoted) =
+                    t.observe(entry.fingerprint, a, per_request_ms, xs.len())
+                {
+                    self.plans.replace(entry.fingerprint, promoted);
+                }
+            }
+        }
+        Ok(BatchOutcome { ys, wall_seconds, plan_hit, schedule, threads, arm })
     }
 }
 
@@ -354,6 +441,46 @@ mod tests {
         let s = engine.telemetry.snapshot();
         assert_eq!(s.per_schedule.get("csr-balanced"), Some(&2));
         assert_eq!(s.per_schedule.values().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn tuned_engine_stays_correct_while_exploring() {
+        use crate::autotune::AutotuneConfig;
+
+        let mut rng = Pcg32::new(0xE0E6);
+        let csr = generators::random_uniform(300, 6, &mut rng);
+        let x: Vec<f64> = (0..300).map(|_| rng.gen_f64()).collect();
+        let mut want = vec![0.0; 300];
+        csr.spmv(&x, &mut want);
+        let mut reg = MatrixRegistry::new();
+        reg.register("m", csr);
+        let engine =
+            ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default())
+                .with_tuner(AutotuneConfig::default());
+        assert!(engine.is_tuned());
+        for i in 0..40 {
+            let out = if i % 3 == 0 {
+                engine.execute_batch(0, &[&x, &x]).unwrap()
+            } else {
+                engine.execute_batch(0, &[&x]).unwrap()
+            };
+            assert!(out.arm.is_some(), "tuned dispatches report their arm");
+            for y in &out.ys {
+                for (r, (a, b)) in want.iter().zip(y).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                        "row {r}: {a} vs {b} while exploring"
+                    );
+                }
+            }
+        }
+        let tuner = engine.tuner().unwrap();
+        assert_eq!(tuner.tuner_count(), 1);
+        let summaries = tuner.summaries();
+        let s = &summaries[0];
+        assert_eq!(s.observations, 40, "every dispatch must be observed");
+        assert!(s.arms > 1, "the ladder must hold real alternatives");
+        assert!(!tuner.dataset().is_empty());
     }
 
     #[test]

@@ -164,6 +164,10 @@ pub struct PlanConfig {
     pub placement: Placement,
     /// Tile size used when a CSR5 schedule is chosen.
     pub csr5_tile_nnz: usize,
+    /// Plan-cache capacity in entries; 0 = unbounded. Bounded caches
+    /// evict least-recently-used plans (evicted fingerprints rebuild
+    /// on their next request).
+    pub cache_cap: usize,
 }
 
 impl Default for PlanConfig {
@@ -172,6 +176,7 @@ impl Default for PlanConfig {
             n_threads: 4,
             placement: Placement::CoreGroupFirst,
             csr5_tile_nnz: 256,
+            cache_cap: 0,
         }
     }
 }
@@ -258,19 +263,57 @@ pub fn build_plan(planner: &Planner, cfg: &PlanConfig, csr: &Csr) -> Plan {
         let features = static_features(csr);
         (planner.choose(&features, cfg.csr5_tile_nnz), features)
     };
+    build_plan_with(cfg, csr, schedule, cfg.n_threads, features)
+}
+
+/// Build a plan for an *explicit* (schedule, thread count) pair — the
+/// autotuner's candidate-variant constructor. Performs the same
+/// materialization as [`build_plan`] (CSR5 conversion, SpMV + SpMM
+/// partitions) but skips the planner decision; `features` is the
+/// already-extracted static feature vector (may be empty). Degenerate
+/// all-zero matrices are normalized to the CSR static schedule — no
+/// variant can improve on a no-op.
+pub fn build_plan_with(
+    cfg: &PlanConfig,
+    csr: &Csr,
+    schedule: Schedule,
+    n_threads: usize,
+    features: Vec<f64>,
+) -> Plan {
+    build_plan_with_csr5(cfg, csr, schedule, n_threads, features, None)
+}
+
+/// [`build_plan_with`] reusing an already-converted CSR5 structure
+/// when the schedule needs tiles and the tile size matches — the
+/// autotuner's thread ladder shares one conversion across all its
+/// CSR5 arms instead of converting per arm.
+pub fn build_plan_with_csr5(
+    cfg: &PlanConfig,
+    csr: &Csr,
+    schedule: Schedule,
+    n_threads: usize,
+    features: Vec<f64>,
+    shared_csr5: Option<Arc<Csr5>>,
+) -> Plan {
+    let schedule =
+        if csr.nnz() == 0 { Schedule::CsrRowStatic } else { schedule };
+    let n_threads = n_threads.max(1);
     let format = match schedule {
         Schedule::Csr5Tiles { tile_nnz } => {
-            PlannedFormat::Csr5(Arc::new(Csr5::from_csr(csr, tile_nnz)))
+            PlannedFormat::Csr5(match shared_csr5 {
+                Some(c5) if c5.tile_nnz == tile_nnz => c5,
+                _ => Arc::new(Csr5::from_csr(csr, tile_nnz)),
+            })
         }
         _ => PlannedFormat::Csr,
     };
-    let part = partition(csr, schedule, cfg.n_threads);
+    let part = partition(csr, schedule, n_threads);
     debug_assert!(part.validate(csr).is_ok());
     let spmm_schedule = exec::effective_spmm_schedule(schedule);
     let spmm_partition = match (&part, spmm_schedule == schedule) {
         // Row-space plans serve batches from the same partition.
         (Partition::Rows { per_thread }, true) => per_thread.clone(),
-        _ => match partition(csr, spmm_schedule, cfg.n_threads) {
+        _ => match partition(csr, spmm_schedule, n_threads) {
             Partition::Rows { per_thread } => per_thread,
             Partition::Tiles { .. } => {
                 unreachable!("effective SpMM schedules are row-space")
@@ -279,7 +322,7 @@ pub fn build_plan(planner: &Planner, cfg: &PlanConfig, csr: &Csr) -> Plan {
     };
     Plan {
         schedule,
-        n_threads: cfg.n_threads,
+        n_threads,
         placement: cfg.placement,
         format,
         features,
@@ -289,15 +332,73 @@ pub fn build_plan(planner: &Planner, cfg: &PlanConfig, csr: &Csr) -> Plan {
     }
 }
 
+/// One cached plan plus its bookkeeping: a monotonically increasing
+/// `version` (bumped by [`PlanCache::replace`] when the autotuner
+/// promotes a better variant) and an LRU recency stamp.
+struct CacheEntry {
+    plan: Arc<Plan>,
+    version: u64,
+    last_used: u64,
+}
+
 #[derive(Default)]
 struct CacheInner {
-    plans: HashMap<u64, Arc<Plan>>,
+    plans: HashMap<u64, CacheEntry>,
     hits: u64,
     misses: u64,
+    evictions: u64,
+    replacements: u64,
+    /// Recency clock: bumped on every touch (LRU order).
+    tick: u64,
+}
+
+impl CacheInner {
+    fn touch(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Lookup + LRU stamp + hit accounting in one pass.
+    fn hit(&mut self, fp: u64) -> Option<Arc<Plan>> {
+        let t = self.touch();
+        let e = self.plans.get_mut(&fp)?;
+        e.last_used = t;
+        self.hits += 1;
+        Some(e.plan.clone())
+    }
+
+    /// Evict least-recently-used entries (never `keep`) until the
+    /// cache fits `cap`. `cap == 0` means unbounded.
+    fn evict_to_cap(&mut self, cap: usize, keep: u64) {
+        if cap == 0 {
+            return;
+        }
+        while self.plans.len() > cap {
+            let victim = self
+                .plans
+                .iter()
+                .filter(|(&fp, _)| fp != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&fp, _)| fp);
+            match victim {
+                Some(fp) => {
+                    self.plans.remove(&fp);
+                    self.evictions += 1;
+                }
+                None => break, // only `keep` left; cap 0 handled above
+            }
+        }
+    }
 }
 
 /// Thread-safe memoization of plans by matrix fingerprint, with
 /// hit/miss accounting (the serving report's cache line).
+///
+/// Optionally bounded ([`PlanConfig::cache_cap`]): at capacity the
+/// least-recently-used entry is evicted and its fingerprint simply
+/// rebuilds (as a counted miss) on its next request. Entries are
+/// versioned so the online autotuner can [`PlanCache::replace`] a
+/// promoted variant in place and observers can tell the plan changed.
 pub struct PlanCache {
     planner: Planner,
     cfg: PlanConfig,
@@ -317,6 +418,11 @@ impl PlanCache {
         self.planner.name()
     }
 
+    /// Configured capacity (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.cfg.cache_cap
+    }
+
     /// Get the plan for `fingerprint`, building it from `csr` on the
     /// first request. Returns `(plan, hit)`. The (expensive) build
     /// runs outside the lock; if two threads race on the same new
@@ -325,25 +431,78 @@ impl PlanCache {
     pub fn plan_for(&self, fp: u64, csr: &Csr) -> (Arc<Plan>, bool) {
         {
             let mut inner = self.inner.lock().unwrap();
-            if let Some(p) = inner.plans.get(&fp) {
-                let p = p.clone();
-                inner.hits += 1;
+            if let Some(p) = inner.hit(fp) {
                 return (p, true);
             }
         }
         let built = Arc::new(build_plan(&self.planner, &self.cfg, csr));
         let mut inner = self.inner.lock().unwrap();
-        if let Some(p) = inner.plans.get(&fp) {
+        if let Some(p) = inner.hit(fp) {
             // Lost the build race: the winner's identical plan is
             // already cached, so this request still counts as a hit
             // (misses == distinct plan builds).
-            let p = p.clone();
-            inner.hits += 1;
             return (p, true);
         }
         inner.misses += 1;
-        inner.plans.insert(fp, built.clone());
+        let t = inner.touch();
+        inner.plans.insert(
+            fp,
+            CacheEntry { plan: built.clone(), version: 1, last_used: t },
+        );
+        inner.evict_to_cap(self.cfg.cache_cap, fp);
         (built, false)
+    }
+
+    /// Cache probe with an externally supplied fallback plan (the
+    /// autotuner's promoted winner): a present entry is a normal hit;
+    /// an absent one — e.g. after LRU eviction — installs `plan` as a
+    /// counted miss *without* rebuilding the static plan. Returns
+    /// `(served plan, hit)` like [`PlanCache::plan_for`].
+    pub fn hit_or_install(&self, fp: u64, plan: Arc<Plan>) -> (Arc<Plan>, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(p) = inner.hit(fp) {
+            return (p, true);
+        }
+        inner.misses += 1;
+        let t = inner.touch();
+        inner.plans.insert(
+            fp,
+            CacheEntry { plan: plan.clone(), version: 1, last_used: t },
+        );
+        inner.evict_to_cap(self.cfg.cache_cap, fp);
+        (plan, false)
+    }
+
+    /// Install `plan` as the served plan for `fp`, bumping the entry
+    /// version — the autotuner's promotion (and demotion) hook. Does
+    /// not count as a hit or a miss; returns the new version.
+    pub fn replace(&self, fp: u64, plan: Arc<Plan>) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let t = inner.touch();
+        inner.replacements += 1;
+        match inner.plans.get_mut(&fp) {
+            Some(e) => {
+                e.plan = plan;
+                e.version += 1;
+                e.last_used = t;
+                e.version
+            }
+            None => {
+                // Promoting into a slot the LRU already evicted:
+                // (re)install at version 1.
+                inner.plans.insert(
+                    fp,
+                    CacheEntry { plan, version: 1, last_used: t },
+                );
+                inner.evict_to_cap(self.cfg.cache_cap, fp);
+                1
+            }
+        }
+    }
+
+    /// Version of the cached entry for `fp` (bumped by `replace`).
+    pub fn version(&self, fp: u64) -> Option<u64> {
+        self.inner.lock().unwrap().plans.get(&fp).map(|e| e.version)
     }
 
     pub fn len(&self) -> usize {
@@ -360,12 +519,25 @@ impl PlanCache {
         (inner.hits, inner.misses)
     }
 
-    pub fn hit_rate(&self) -> f64 {
+    /// LRU evictions so far.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    /// Autotuner plan replacements so far.
+    pub fn replacements(&self) -> u64 {
+        self.inner.lock().unwrap().replacements
+    }
+
+    /// Hit rate over all lookups, or `None` before the first lookup —
+    /// an empty cache has no rate, and telemetry renders it as `n/a`
+    /// instead of a misleading 0%.
+    pub fn hit_rate(&self) -> Option<f64> {
         let (h, m) = self.stats();
         if h + m == 0 {
-            0.0
+            None
         } else {
-            h as f64 / (h + m) as f64
+            Some(h as f64 / (h + m) as f64)
         }
     }
 }
@@ -520,6 +692,45 @@ mod tests {
     }
 
     #[test]
+    fn variant_builder_shares_the_csr5_conversion() {
+        let csr = NamedMatrix::Exdata1.generate();
+        let cfg = PlanConfig::default();
+        let static_plan = build_plan(&Planner::Heuristic, &cfg, &csr);
+        let PlannedFormat::Csr5(c5) = &static_plan.format else {
+            panic!("exdata_1 must get a tile plan")
+        };
+        // Matching tile size: the conversion is shared, not redone.
+        let shared = build_plan_with_csr5(
+            &cfg,
+            &csr,
+            static_plan.schedule,
+            2,
+            Vec::new(),
+            Some(c5.clone()),
+        );
+        match &shared.format {
+            PlannedFormat::Csr5(got) => assert!(
+                Arc::ptr_eq(got, c5),
+                "thread-ladder variants must reuse the tile structure"
+            ),
+            PlannedFormat::Csr => panic!("tile schedule lost its format"),
+        }
+        // Mismatched tile size falls back to a fresh conversion.
+        let fresh = build_plan_with_csr5(
+            &cfg,
+            &csr,
+            Schedule::Csr5Tiles { tile_nnz: 64 },
+            2,
+            Vec::new(),
+            Some(c5.clone()),
+        );
+        match &fresh.format {
+            PlannedFormat::Csr5(got) => assert!(!Arc::ptr_eq(got, c5)),
+            PlannedFormat::Csr => panic!("tile schedule lost its format"),
+        }
+    }
+
+    #[test]
     fn cache_counts_hits_and_misses() {
         let mut rng = Pcg32::new(0x9A18);
         let a = generators::banded(256, 3, &mut rng);
@@ -527,13 +738,143 @@ mod tests {
         let cache =
             PlanCache::new(Planner::Heuristic, PlanConfig::default());
         let (fa, fb) = (fingerprint(&a), fingerprint(&b));
+        assert_eq!(cache.hit_rate(), None, "no lookups yet: n/a, not 0%");
         let (_, h1) = cache.plan_for(fa, &a);
         let (_, h2) = cache.plan_for(fa, &a);
         let (_, h3) = cache.plan_for(fb, &b);
         assert!(!h1 && h2 && !h3);
         assert_eq!(cache.stats(), (1, 2));
         assert_eq!(cache.len(), 2);
-        assert!((cache.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(
+            (cache.hit_rate().unwrap() - 1.0 / 3.0).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn bounded_cache_evicts_lru_and_rebuilds() {
+        let mut rng = Pcg32::new(0x9A21);
+        let mats: Vec<_> = (0..3)
+            .map(|i| generators::random_uniform(128 + i, 4, &mut rng))
+            .collect();
+        let fps: Vec<u64> = mats.iter().map(fingerprint).collect();
+        let cache = PlanCache::new(
+            Planner::Heuristic,
+            PlanConfig { cache_cap: 2, ..PlanConfig::default() },
+        );
+        assert_eq!(cache.capacity(), 2);
+        cache.plan_for(fps[0], &mats[0]); // miss
+        cache.plan_for(fps[1], &mats[1]); // miss
+        cache.plan_for(fps[0], &mats[0]); // hit: 0 is now most recent
+        cache.plan_for(fps[2], &mats[2]); // miss, evicts LRU entry 1
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.version(fps[1]).is_none(), "1 was least recent");
+        assert!(cache.version(fps[0]).is_some());
+        // The evicted fingerprint rebuilds as a fresh miss.
+        let (_, hit) = cache.plan_for(fps[1], &mats[1]);
+        assert!(!hit);
+        assert_eq!(cache.stats(), (1, 4));
+        assert_eq!(cache.evictions(), 2, "rebuild evicted the next LRU");
+    }
+
+    #[test]
+    fn replace_bumps_version_in_place() {
+        let mut rng = Pcg32::new(0x9A22);
+        let csr = generators::random_uniform(200, 5, &mut rng);
+        let fp = fingerprint(&csr);
+        let cache =
+            PlanCache::new(Planner::Heuristic, PlanConfig::default());
+        let (original, _) = cache.plan_for(fp, &csr);
+        assert_eq!(cache.version(fp), Some(1));
+        let variant = Arc::new(build_plan_with(
+            &PlanConfig::default(),
+            &csr,
+            Schedule::CsrRowBalanced,
+            2,
+            original.features.clone(),
+        ));
+        assert_eq!(cache.replace(fp, variant.clone()), 2);
+        assert_eq!(cache.version(fp), Some(2));
+        assert_eq!(cache.replacements(), 1);
+        let (served, hit) = cache.plan_for(fp, &csr);
+        assert!(hit, "replace must not disturb hit accounting");
+        assert!(Arc::ptr_eq(&served, &variant));
+        assert_eq!(served.n_threads, 2);
+        // Replacing an absent fingerprint installs at version 1.
+        assert_eq!(cache.replace(0xDEAD, variant), 1);
+    }
+
+    #[test]
+    fn hit_or_install_serves_hits_and_installs_misses() {
+        let mut rng = Pcg32::new(0x9A24);
+        let csr = generators::random_uniform(150, 4, &mut rng);
+        let fp = fingerprint(&csr);
+        let cache =
+            PlanCache::new(Planner::Heuristic, PlanConfig::default());
+        let (cached, _) = cache.plan_for(fp, &csr);
+        let variant = Arc::new(build_plan_with(
+            &PlanConfig::default(),
+            &csr,
+            Schedule::CsrRowBalanced,
+            2,
+            Vec::new(),
+        ));
+        // Present entry: a normal hit serving the cached plan, not
+        // the supplied fallback.
+        let (p, hit) = cache.hit_or_install(fp, variant.clone());
+        assert!(hit);
+        assert!(Arc::ptr_eq(&p, &cached));
+        // Absent entry (e.g. LRU-evicted): the fallback is installed
+        // as a counted miss — no static rebuild happened.
+        let (p2, hit2) = cache.hit_or_install(0xF00D, variant.clone());
+        assert!(!hit2);
+        assert!(Arc::ptr_eq(&p2, &variant));
+        assert_eq!(cache.version(0xF00D), Some(1));
+        assert_eq!(
+            cache.stats(),
+            (1, 2),
+            "one hit, one build miss, one install miss"
+        );
+    }
+
+    #[test]
+    fn build_plan_with_matches_reference_across_variants() {
+        let mut rng = Pcg32::new(0x9A23);
+        let csr = generators::random_uniform(300, 6, &mut rng);
+        let x: Vec<f64> =
+            (0..csr.n_cols).map(|_| rng.gen_f64() - 0.5).collect();
+        let mut want = vec![0.0; csr.n_rows];
+        csr.spmv(&x, &mut want);
+        let cfg = PlanConfig::default();
+        for schedule in [
+            Schedule::CsrRowStatic,
+            Schedule::CsrRowBalanced,
+            Schedule::Csr5Tiles { tile_nnz: 64 },
+        ] {
+            for nt in [1usize, 2, 6] {
+                let plan =
+                    build_plan_with(&cfg, &csr, schedule, nt, Vec::new());
+                assert_eq!(plan.n_threads, nt);
+                assert_eq!(plan.schedule, schedule);
+                let got = plan.execute(&csr, &x);
+                for (i, (a, b)) in want.iter().zip(&got.y).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                        "row {i}: {a} vs {b} under {schedule:?} nt={nt}"
+                    );
+                }
+            }
+        }
+        // Zero matrices normalize to CSR static regardless of the ask.
+        let zero = Csr::zero(16, 16);
+        let plan = build_plan_with(
+            &cfg,
+            &zero,
+            Schedule::Csr5Tiles { tile_nnz: 8 },
+            4,
+            Vec::new(),
+        );
+        assert_eq!(plan.schedule, Schedule::CsrRowStatic);
     }
 
     #[test]

@@ -41,6 +41,15 @@ use super::{ServeEngine, ServeStats};
 /// divided across threads — the same structure as
 /// `exec::spmm_threaded`, which is why batching wins: one dispatch
 /// and one matrix stream serve many vectors.
+///
+/// Two terms model the paper's scalability ceiling, and together they
+/// give latency a *knee* in the thread count (what the autotuner's
+/// hill-climb hunts): `sync_s` charges fork/join fan-out per extra
+/// worker, and `sat_threads` caps the parallel speedup of the
+/// memory-bound kernel term at one panel's worth of cores —
+/// FT-2000+ SpMV stops scaling once the local panel's bandwidth
+/// saturates (paper §4), so threads past the knee add sync cost and
+/// nothing else.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
     pub dispatch_s: f64,
@@ -48,22 +57,35 @@ pub struct CostModel {
     pub stream_a_s: f64,
     /// Seconds per nonzero per vector for the FMA + x access.
     pub fma_s: f64,
+    /// Fork/join cost per worker beyond the first.
+    pub sync_s: f64,
+    /// Threads beyond this add no kernel speedup (panel bandwidth
+    /// saturation — 8 cores per FT-2000+ panel).
+    pub sat_threads: usize,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        CostModel { dispatch_s: 30e-6, stream_a_s: 0.4e-9, fma_s: 0.15e-9 }
+        CostModel {
+            dispatch_s: 30e-6,
+            stream_a_s: 0.4e-9,
+            fma_s: 0.15e-9,
+            sync_s: 2e-6,
+            sat_threads: 8,
+        }
     }
 }
 
 impl CostModel {
     pub fn service_s(&self, nnz: usize, batch: usize, threads: usize) -> f64 {
         let blocks = batch.div_ceil(SPMM_COL_BLOCK).max(1) as f64;
-        let th = threads.max(1) as f64;
+        let th = threads.max(1);
+        let eff = th.min(self.sat_threads.max(1)) as f64;
         self.dispatch_s
+            + self.sync_s * (th - 1) as f64
             + (nnz as f64 * blocks * self.stream_a_s
                 + nnz as f64 * batch as f64 * self.fma_s)
-                / th
+                / eff
     }
 }
 
@@ -93,6 +115,13 @@ pub struct ReplayConfig {
     /// service times differ because pinned engines partition one slot
     /// per panel core.
     pub pooled: bool,
+    /// Attach an online autotuner to every engine *built by the
+    /// replay harness* ([`replay_sharded`]'s virtual panels), clocked
+    /// by the deterministic cost model (`wall_clock` is forced off)
+    /// and thread-bounded by each panel's core range. For [`replay`]
+    /// the caller supplies the engine, so it attaches the tuner
+    /// itself ([`ServeEngine::with_tuner`]) and this knob is moot.
+    pub tune: Option<crate::autotune::AutotuneConfig>,
     pub cost: CostModel,
 }
 
@@ -104,6 +133,7 @@ impl Default for ReplayConfig {
             queue_cap: 0,
             execute: true,
             pooled: true,
+            tune: None,
             cost: CostModel::default(),
         }
     }
@@ -119,6 +149,8 @@ pub struct ReplayReport {
     pub duration_s: f64,
     /// Number of matrices the workload was served from.
     pub matrices: usize,
+    /// Per-matrix tuning summaries when the serving engine autotuned.
+    pub autotune: Option<Vec<crate::autotune::TunerSummary>>,
 }
 
 impl ReplayReport {
@@ -154,16 +186,45 @@ impl ReplayReport {
         if self.stats.batches > 0 {
             batch_histogram_table(&self.stats).print();
         }
+        if let Some(summaries) = &self.autotune {
+            if !summaries.is_empty() {
+                crate::autotune::autotune_table(summaries).print();
+            }
+        }
     }
 
     pub fn to_json(&self) -> Json {
-        report_json(
+        let base = report_json(
             &self.stats,
             self.cache_hits,
             self.cache_misses,
             self.duration_s,
-        )
+        );
+        match &self.autotune {
+            Some(summaries) => {
+                let mut obj = match base {
+                    Json::Obj(o) => o,
+                    _ => unreachable!("report_json returns an object"),
+                };
+                obj.insert(
+                    "autotune".into(),
+                    crate::autotune::autotune_json(summaries),
+                );
+                Json::Obj(obj)
+            }
+            None => base,
+        }
     }
+}
+
+/// One dispatched (possibly coalesced) group, as seen by the cost
+/// model and the tuning feedback loop.
+struct Dispatched {
+    threads: usize,
+    nnz: usize,
+    fingerprint: u64,
+    /// Tuner arm this dispatch ran (autotuned engines only).
+    arm: Option<usize>,
 }
 
 /// Executes dispatches against the engine, memoizing one
@@ -178,11 +239,13 @@ struct Dispatcher<'a> {
 
 impl Dispatcher<'_> {
     /// Dispatch a coalesced group of `size` requests against matrix
-    /// `matrix_idx`; returns `(threads, nnz)` for the cost model.
-    fn run(&mut self, matrix_idx: usize, size: usize) -> (usize, usize) {
+    /// `matrix_idx`; returns what the cost model (and the tuner
+    /// feedback) needs.
+    fn run(&mut self, matrix_idx: usize, size: usize) -> Dispatched {
         let id = self.ids[matrix_idx];
         let entry = self.engine.registry.entry(id);
         let nnz = entry.csr.nnz();
+        let fingerprint = entry.fingerprint;
         if self.execute {
             let n_cols = entry.csr.n_cols;
             let x = self
@@ -194,10 +257,13 @@ impl Dispatcher<'_> {
                 .engine
                 .execute_batch(id, &xs)
                 .expect("replay serves only registered ids");
-            (out.threads, nnz)
+            Dispatched { threads: out.threads, nnz, fingerprint, arm: out.arm }
         } else {
-            let (plan, _) =
-                self.engine.plans.plan_for(entry.fingerprint, &entry.csr);
+            // The model-only path resolves its plan through the same
+            // engine helper as the executed path (cache + promoted
+            // winner + tuner arm pick), so both replays of one seed
+            // share a bit-identical timeline by construction.
+            let (plan, _, arm) = self.engine.plan_for_dispatch(entry);
             self.engine.telemetry.record_batch(
                 id,
                 size,
@@ -208,7 +274,31 @@ impl Dispatcher<'_> {
             // Effective (not configured) parallelism, the same count
             // the executed path reports — execute=true and model-only
             // replays of one seed share a bit-identical timeline.
-            (plan.effective_threads(size), nnz)
+            Dispatched {
+                threads: plan.effective_threads(size),
+                nnz,
+                fingerprint,
+                arm,
+            }
+        }
+    }
+
+    /// Close the tuning loop on the *virtual* clock: the modeled
+    /// service time of this dispatch becomes the tuner's observation
+    /// (one per-request share per coalesced request), and promotions
+    /// land in the engine's plan cache. Wall-clock tuners are skipped
+    /// — the engine already observed real time in `execute_batch`.
+    fn feedback(&self, disp: &Dispatched, service_s: f64, batch: usize) {
+        let Some(arm) = disp.arm else { return };
+        let Some(tuner) = self.engine.tuner() else { return };
+        if tuner.wall_clock() {
+            return;
+        }
+        let per_request_ms = service_s * 1e3 / batch.max(1) as f64;
+        if let Some(promoted) =
+            tuner.observe(disp.fingerprint, arm, per_request_ms, batch)
+        {
+            self.engine.plans.replace(disp.fingerprint, promoted);
         }
     }
 }
@@ -251,6 +341,7 @@ pub fn replay(
         cache_misses,
         duration_s,
         matrices: ids.len(),
+        autotune: engine.tuner().map(|t| t.summaries()),
     })
 }
 
@@ -271,11 +362,17 @@ impl ShardedReplayReport {
         let mut stats = ServeStats::default();
         let (mut hits, mut misses) = (0u64, 0u64);
         let mut matrices = 0usize;
+        let mut autotune: Option<Vec<crate::autotune::TunerSummary>> = None;
         for r in &self.shards {
             stats.merge(&r.stats);
             hits += r.cache_hits;
             misses += r.cache_misses;
             matrices = matrices.max(r.matrices);
+            if let Some(s) = &r.autotune {
+                autotune
+                    .get_or_insert_with(Vec::new)
+                    .extend(s.iter().cloned());
+            }
         }
         ReplayReport {
             stats,
@@ -283,6 +380,7 @@ impl ShardedReplayReport {
             cache_misses: misses,
             duration_s: self.duration_s,
             matrices,
+            autotune,
         }
     }
 
@@ -317,6 +415,11 @@ impl ShardedReplayReport {
         .print();
         if merged.stats.batches > 0 {
             batch_histogram_table(&merged.stats).print();
+        }
+        if let Some(summaries) = &merged.autotune {
+            if !summaries.is_empty() {
+                crate::autotune::autotune_table(summaries).print();
+            }
         }
     }
 
@@ -437,6 +540,16 @@ pub fn replay_sharded(
                 plan_cfg.clone(),
             )
         };
+        // Harness-built engines tune on the deterministic virtual
+        // clock, thread-bounded by their panel core range — the
+        // shard's tuner can never plan past its own panel.
+        let engine = match cfg.tune {
+            Some(mut tc) => {
+                tc.wall_clock = false;
+                engine.with_tuner(tc.bounded_to_cores(shard_cores))
+            }
+            None => engine,
+        };
         let duration_s = if sub.is_empty() {
             0.0
         } else {
@@ -462,6 +575,7 @@ pub fn replay_sharded(
             cache_misses,
             duration_s,
             matrices: ids.len(),
+            autotune: engine.tuner().map(|t| t.summaries()),
         });
     }
     Ok(ShardedReplayReport { shards: out, cores, duration_s: makespan })
@@ -517,9 +631,11 @@ fn replay_open(
             }
         }
         queue = rest;
-        let (threads, nnz) = d.run(mid, batch.len());
-        let completion =
-            t_dispatch + cfg.cost.service_s(nnz, batch.len(), threads);
+        let disp = d.run(mid, batch.len());
+        let service_s =
+            cfg.cost.service_s(disp.nnz, batch.len(), disp.threads);
+        d.feedback(&disp, service_s, batch.len());
+        let completion = t_dispatch + service_s;
         for &k in &batch {
             d.engine.telemetry.record_latency_ms(
                 (completion - reqs[k].arrival_s) * 1e3,
@@ -578,9 +694,11 @@ fn replay_closed(
             .take(max_batch)
             .map(|&(ti, c, _)| (ti, c))
             .collect();
-        let (threads, nnz) = d.run(mid, batch.len());
-        let completion =
-            t_start + cfg.cost.service_s(nnz, batch.len(), threads);
+        let disp = d.run(mid, batch.len());
+        let service_s =
+            cfg.cost.service_s(disp.nnz, batch.len(), disp.threads);
+        d.feedback(&disp, service_s, batch.len());
+        let completion = t_start + service_s;
         for &(issue, c) in &batch {
             d.engine
                 .telemetry
@@ -724,6 +842,148 @@ mod tests {
         );
         // Monotone in batch size.
         assert!(cm.service_s(1000, 9, 4) > cm.service_s(1000, 8, 4));
+    }
+
+    #[test]
+    fn cost_model_has_a_thread_knee() {
+        // The paper's plateau: the kernel term stops scaling at
+        // sat_threads while the sync term keeps growing, so latency
+        // is not monotone in the thread count — there is a knee for
+        // the autotuner to find.
+        let cm = CostModel::default();
+        let lat = |t| cm.service_s(200_000, 1, t);
+        assert!(
+            lat(cm.sat_threads) < lat(cm.sat_threads * 4),
+            "past saturation, more threads must cost more"
+        );
+        // And for tiny matrices even the static 4-thread default
+        // loses to a single thread (sync dominates the kernel).
+        assert!(cm.service_s(1_000, 1, 1) < cm.service_s(1_000, 1, 4));
+    }
+
+    #[test]
+    fn tuned_model_replay_promotes_below_static_width() {
+        use crate::autotune::AutotuneConfig;
+
+        // Closed loop with one client: every dispatch is a singleton,
+        // so arm observations measure the thread knee with no
+        // batch-amortization mixing — the cleanest convergence signal.
+        let spec = WorkloadSpec {
+            requests: 800,
+            popularity: Popularity::Zipf { s: 1.2 },
+            arrivals: Arrivals::Closed { clients: 1 },
+            seed: 0x5EED,
+        };
+        let run = || {
+            let (engine, ids) = fresh_engine();
+            let engine = engine.with_tuner(AutotuneConfig {
+                wall_clock: false,
+                ..AutotuneConfig::default()
+            });
+            let cfg =
+                ReplayConfig { execute: false, ..ReplayConfig::default() };
+            replay(&engine, &ids, &spec, &cfg).unwrap()
+        };
+        let (a, b) = (run(), run());
+        let summaries = a.autotune.as_ref().expect("tuned run reports");
+        assert!(!summaries.is_empty());
+        assert!(
+            summaries.iter().any(|s| s.promotions >= 1),
+            "warmed tuners must promote at least once"
+        );
+        // The corpus is small matrices: dispatch + sync dominate, so
+        // the knee sits below the static 4-thread pick — and the
+        // tuned mean must not be worse than the static arm's.
+        let s = summaries
+            .iter()
+            .find(|s| s.diverged())
+            .expect("at least one matrix tunes away from static");
+        assert!(
+            s.chosen_variant.n_threads < s.static_variant.n_threads,
+            "{:?} vs static {:?}",
+            s.chosen_variant,
+            s.static_variant
+        );
+        assert!(
+            s.chosen_mean_ms <= s.static_mean_ms,
+            "tuned {} ms vs static {} ms",
+            s.chosen_mean_ms,
+            s.static_mean_ms
+        );
+        // Tuning decisions ride the virtual clock: bit-reproducible.
+        assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+        let sb = b.autotune.as_ref().unwrap();
+        assert_eq!(summaries.len(), sb.len());
+        for (x, y) in summaries.iter().zip(sb) {
+            assert_eq!(x.chosen_variant, y.chosen_variant);
+            assert_eq!(x.promotions, y.promotions);
+            assert_eq!(x.observations, y.observations);
+        }
+        // The JSON report carries the tuning block.
+        assert!(a.to_json().get("autotune").is_some());
+    }
+
+    #[test]
+    fn tuned_sharded_replay_reports_per_shard_tuning() {
+        use std::sync::Arc;
+
+        use crate::autotune::AutotuneConfig;
+        use crate::service::shard::PlacementPolicy;
+
+        let mut rng = Pcg32::new(0xAB1E);
+        let mut reg = MatrixRegistry::new();
+        let ids = vec![
+            reg.register("banded", generators::banded(256, 4, &mut rng)),
+            reg.register(
+                "random",
+                generators::random_uniform(256, 6, &mut rng),
+            ),
+            reg.register(
+                "skewed",
+                generators::dense_row_block(256, 2048, &mut rng),
+            ),
+        ];
+        let cfg = ReplayConfig {
+            execute: false,
+            tune: Some(AutotuneConfig::default()),
+            ..ReplayConfig::default()
+        };
+        // Two closed-loop clients split over the active shards keep
+        // every dispatch a singleton (clean knee observations).
+        let spec = WorkloadSpec {
+            requests: 800,
+            popularity: Popularity::Zipf { s: 1.2 },
+            arrivals: Arrivals::Closed { clients: 2 },
+            seed: 0x5EED,
+        };
+        let report = replay_sharded(
+            Arc::new(reg),
+            &Planner::Heuristic,
+            &PlanConfig::default(),
+            &ids,
+            &spec,
+            &cfg,
+            4,
+            PlacementPolicy::HotReplicate { hot: 1 },
+        )
+        .unwrap();
+        let merged = report.merged();
+        assert_eq!(merged.stats.requests, 800);
+        let summaries = merged.autotune.as_ref().expect("tuned shards");
+        assert!(!summaries.is_empty());
+        // Panel-bounded ladders: no tuner may choose past its panel
+        // core range (4 shards over 8 panels = 16 cores each).
+        for s in summaries {
+            assert!(
+                s.chosen_variant.n_threads <= 16,
+                "{:?} exceeds the panel bound",
+                s.chosen_variant
+            );
+        }
+        assert!(
+            summaries.iter().any(|s| s.promotions >= 1),
+            "sharded tuners must promote on this corpus"
+        );
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::autotune::AutotuneConfig;
 use crate::sched::panel_core_range;
 use crate::sim::topology::Topology;
 
@@ -170,6 +171,10 @@ pub struct ShardConfig {
     /// per-request scoped threads — the A/B baseline and the legacy
     /// behavior.
     pub pooled: bool,
+    /// Per-shard online autotuning (wall-clock fed): each shard's
+    /// engine explores plan variants thread-bounded by its own panel
+    /// core range and promotes winners into its private plan cache.
+    pub tune: Option<AutotuneConfig>,
 }
 
 impl Default for ShardConfig {
@@ -182,6 +187,7 @@ impl Default for ShardConfig {
             deadline_ms: 0.0,
             policy: PlacementPolicy::HotReplicate { hot: 2 },
             pooled: true,
+            tune: None,
         }
     }
 }
@@ -277,6 +283,16 @@ impl ShardedServer {
                         planner.clone(),
                         plan_cfg.clone(),
                     )
+                };
+                // Tuned shards explore within their own panel: the
+                // thread ladder is clamped to the panel core range, so
+                // a promotion can never plan past the cores the
+                // shard's pool is pinned to.
+                let engine = match cfg.tune {
+                    Some(tc) => {
+                        engine.with_tuner(tc.bounded_to_cores(cores))
+                    }
+                    None => engine,
                 };
                 Shard {
                     engine,
@@ -385,6 +401,30 @@ impl ShardedServer {
         self.shards.iter().fold((0, 0), |(h, m), s| {
             let (sh, sm) = s.engine.plans.stats();
             (h + sh, m + sm)
+        })
+    }
+
+    /// Flattened per-matrix tuning summaries across all tuned shards
+    /// (empty when [`ShardConfig::tune`] is off).
+    pub fn autotune_summaries(&self) -> Vec<crate::autotune::TunerSummary> {
+        self.shards
+            .iter()
+            .flat_map(|s| {
+                s.engine.tuner().map(|t| t.summaries()).unwrap_or_default()
+            })
+            .collect()
+    }
+
+    /// (promotions, demotions) across all tuned shards.
+    pub fn autotune_totals(&self) -> (u64, u64) {
+        self.shards.iter().fold((0, 0), |(p, d), s| {
+            match s.engine.tuner() {
+                Some(t) => {
+                    let (tp, td) = t.totals();
+                    (p + tp, d + td)
+                }
+                None => (p, d),
+            }
         })
     }
 }
@@ -531,6 +571,58 @@ mod tests {
             },
         );
         assert!(spawn.shards.iter().all(|s| s.engine.pool().is_none()));
+    }
+
+    #[test]
+    fn tuned_shards_bound_ladders_to_their_panels() {
+        let reg = registry(3);
+        let server = ShardedServer::new(
+            reg.clone(),
+            Planner::Heuristic,
+            PlanConfig::default(),
+            ShardConfig {
+                shards: 2,
+                queue_cap: 0,
+                workers_per_shard: 1,
+                tune: Some(AutotuneConfig::default()),
+                ..ShardConfig::default()
+            },
+        );
+        for shard in &server.shards {
+            assert!(shard.engine.is_tuned(), "tune flag must reach shards");
+        }
+        let served = std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..60 {
+                    let id = i % reg.len();
+                    let n = reg.entry(id).csr.n_cols;
+                    server.submit(Request::new(id, vec![1.0; n]));
+                }
+                server.close();
+            });
+            server.serve()
+        });
+        assert_eq!(served, 60);
+        let summaries = server.autotune_summaries();
+        assert!(!summaries.is_empty(), "tuned shards must report tuners");
+        // 2 shards over 8 panels = 32 cores each; no variant may plan
+        // wider than its shard's panel range.
+        for s in &summaries {
+            assert!(
+                s.chosen_variant.n_threads <= 32,
+                "{:?} exceeds the panel bound",
+                s.chosen_variant
+            );
+            assert!(s.observations > 0, "wall-clock feedback must flow");
+        }
+        let untuned = ShardedServer::new(
+            reg,
+            Planner::Heuristic,
+            PlanConfig::default(),
+            ShardConfig { shards: 2, ..ShardConfig::default() },
+        );
+        assert!(untuned.autotune_summaries().is_empty());
+        assert_eq!(untuned.autotune_totals(), (0, 0));
     }
 
     #[test]

@@ -305,10 +305,13 @@ pub fn shard_table(snaps: &[ShardSnapshot]) -> Table {
             0.0
         };
         let total = s.cache_hits + s.cache_misses;
+        // A shard that saw no lookups has no hit rate — print n/a so a
+        // cold (but addressed) cache and an idle shard stay
+        // distinguishable.
         let hit = if total > 0 {
-            100.0 * s.cache_hits as f64 / total as f64
+            format!("{:.1}", 100.0 * s.cache_hits as f64 / total as f64)
         } else {
-            0.0
+            "n/a".to_string()
         };
         t.row(vec![
             s.shard.to_string(),
@@ -322,7 +325,7 @@ pub fn shard_table(snaps: &[ShardSnapshot]) -> Table {
             format!("{:.3}", s.stats.latency_percentile(95.0)),
             format!("{:.3}", s.stats.latency_percentile(99.0)),
             format!("{:.2}", s.stats.mean_batch()),
-            format!("{hit:.1}"),
+            hit,
         ]);
     }
     t
@@ -387,14 +390,16 @@ pub fn report_table(
     let total = cache_hits + cache_misses;
     t.row(vec![
         "plan-cache hit rate".into(),
-        format!(
-            "{:.1}% ({cache_hits}/{total})",
-            if total > 0 {
+        // No lookups yet: there is no rate. `n/a` keeps an idle cache
+        // distinguishable from a genuinely cold one at 0%.
+        if total > 0 {
+            format!(
+                "{:.1}% ({cache_hits}/{total})",
                 100.0 * cache_hits as f64 / total as f64
-            } else {
-                0.0
-            }
-        ),
+            )
+        } else {
+            "n/a (0/0)".to_string()
+        },
     ]);
     t.row(vec![
         "executed".into(),
@@ -555,6 +560,24 @@ mod tests {
         let empty = ServeStats::default();
         let md = report_table("r", &empty, 0, 0, 0.0).to_markdown();
         assert!(!md.contains("NaN"), "empty report rendered NaN: {md}");
+        assert!(
+            md.contains("n/a (0/0)"),
+            "zero-lookup cache must render n/a, not 0%: {md}"
+        );
+    }
+
+    #[test]
+    fn idle_shard_hit_rate_is_na() {
+        let snap = ShardSnapshot {
+            shard: 0,
+            cores: (0, 8),
+            stats: ServeStats::default(),
+            cache_hits: 0,
+            cache_misses: 0,
+            duration_s: 1.0,
+        };
+        let md = shard_table(&[snap]).to_markdown();
+        assert!(md.contains("n/a"), "idle shard must render n/a: {md}");
     }
 
     #[test]

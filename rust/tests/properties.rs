@@ -1,12 +1,13 @@
 //! Cross-module property tests (deterministic seeds via
 //! `util::testkit::check`).
 
+use ft2000_spmv::autotune;
 use ft2000_spmv::coordinator::{simulate_point, ProfileConfig};
 use ft2000_spmv::corpus::generators::MatrixClass;
 use ft2000_spmv::exec;
 use ft2000_spmv::prop_assert;
 use ft2000_spmv::reorder::locality_reorder;
-use ft2000_spmv::sched::{partition, Schedule};
+use ft2000_spmv::sched::{partition, Partition, Schedule};
 use ft2000_spmv::service;
 use ft2000_spmv::sim::topology::Placement;
 use ft2000_spmv::sparse::{Coo, Csr, Csr5, Ell, Hyb, MatrixFeatures};
@@ -345,6 +346,87 @@ fn pool_reuse_stress_many_small_requests() {
         iters as u64,
         "one pool job per request"
     );
+}
+
+#[test]
+fn tuner_candidate_plans_match_the_reference() {
+    // Plan-variant equivalence: every candidate the autotuner may
+    // promote must compute the same answer as the sequential
+    // reference — numerically everywhere, and *bitwise* wherever the
+    // executed kernel is row-space (row-partitioned SpMV sums each
+    // row in index order, exactly like the reference; batched SpMM is
+    // always row-space). CSR5 tile variants may associate a
+    // boundary-spanning row's partial sums differently, so they get
+    // the 1e-9 bound plus a bitwise *determinism* check (the same
+    // variant must never produce two different answers).
+    check("tuner-variants==reference", 12, |rng| {
+        let csr = random_csr(rng);
+        let cfg = service::PlanConfig::default();
+        let static_plan =
+            service::build_plan(&service::Planner::Heuristic, &cfg, &csr);
+        let variants = autotune::candidates(
+            static_plan.schedule,
+            cfg.csr5_tile_nnz,
+            static_plan.n_threads,
+            16,
+        );
+        prop_assert!(
+            variants.len() > 1,
+            "the ladder must hold real alternatives"
+        );
+        let x: Vec<f64> =
+            (0..csr.n_cols).map(|_| rng.gen_f64() - 0.5).collect();
+        let want = exec::spmv_sequential(&csr, &x).y;
+        let xs = exec::pack_vectors(&[&x, &x, &x]);
+        for v in &variants {
+            let plan = service::build_plan_with(
+                &cfg,
+                &csr,
+                v.schedule,
+                v.n_threads,
+                static_plan.features.clone(),
+            );
+            let got = plan.execute(&csr, &x);
+            for (i, (a, b)) in want.iter().zip(&got.y).enumerate() {
+                prop_assert!(
+                    (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                    "row {i}: {a} vs {b} under {v:?}"
+                );
+            }
+            if matches!(plan.partition, Partition::Rows { .. }) {
+                for (i, (a, b)) in want.iter().zip(&got.y).enumerate() {
+                    prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "row-space variant {v:?} diverges bitwise at \
+                         row {i}: {a} vs {b}"
+                    );
+                }
+            }
+            // Re-executing the same variant is bitwise deterministic.
+            let again = plan.execute(&csr, &x);
+            for (i, (a, b)) in got.y.iter().zip(&again.y).enumerate() {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "variant {v:?} not deterministic at row {i}"
+                );
+            }
+            // The batched path is always row-space: bitwise identical
+            // to the sequential reference, column by column.
+            let batch = plan.execute_batch(&csr, &xs, 3);
+            for j in 0..3 {
+                for (i, (a, b)) in
+                    want.iter().zip(&batch.column(j)).enumerate()
+                {
+                    prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "batch col {j} row {i} diverges bitwise under \
+                         {v:?}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -3,6 +3,7 @@
 
 use std::sync::Arc;
 
+use ft2000_spmv::autotune::{AutotuneConfig, Policy};
 use ft2000_spmv::corpus::suite::SuiteSpec;
 use ft2000_spmv::corpus::NamedMatrix;
 use ft2000_spmv::service::{
@@ -163,6 +164,89 @@ fn reg_missing_errors() -> bool {
 }
 
 #[test]
+fn tuned_replay_converges_on_the_quick_corpus() {
+    // The PR's acceptance path: `replay --tune` over the Zipf quick
+    // corpus. Closed-loop with one client keeps every dispatch a
+    // singleton, so arm observations measure the cost model's thread
+    // knee exactly and the whole run is deterministic.
+    let spec = WorkloadSpec {
+        requests: 1200,
+        popularity: Popularity::Zipf { s: 1.2 },
+        arrivals: Arrivals::Closed { clients: 1 },
+        seed: 0x7E57_5EED,
+    };
+    let cfg = ReplayConfig { execute: false, ..ReplayConfig::default() };
+    let tune = AutotuneConfig {
+        policy: Policy::EpsilonGreedy { epsilon: 0.05 },
+        wall_clock: false,
+        ..AutotuneConfig::default()
+    };
+
+    let (static_engine, ids) = tiny_engine(Planner::Heuristic);
+    let static_report = replay(&static_engine, &ids, &spec, &cfg).unwrap();
+    assert!(static_report.autotune.is_none(), "untuned runs don't report");
+
+    let (engine, ids) = tiny_engine(Planner::Heuristic);
+    let engine = engine.with_tuner(tune);
+    let report = replay(&engine, &ids, &spec, &cfg).unwrap();
+    assert_eq!(report.stats.requests, 1200);
+
+    let summaries = report.autotune.as_ref().expect("tuned runs report");
+    assert!(!summaries.is_empty());
+    // Convergence: for at least one matrix the tuner's chosen thread
+    // count differs from the static planner's pick...
+    let diverged: Vec<_> = summaries
+        .iter()
+        .filter(|s| {
+            s.chosen_variant.n_threads != s.static_variant.n_threads
+        })
+        .collect();
+    assert!(
+        !diverged.is_empty(),
+        "no matrix tuned away from the static width: {summaries:?}"
+    );
+    // ...and its measured mean latency is no worse than the static
+    // plan's (promotion demands a strict gain, so this is strict).
+    for s in &diverged {
+        assert!(
+            s.chosen_mean_ms <= s.static_mean_ms,
+            "{}: tuned {} ms vs static {} ms",
+            s.name,
+            s.chosen_mean_ms,
+            s.static_mean_ms
+        );
+    }
+    let promotions: u64 = summaries.iter().map(|s| s.promotions).sum();
+    assert!(promotions >= 1, "at least one promotion must occur");
+    // Promotions really landed in the serving plan cache (versioned
+    // replace), so untuned lookups now serve the winner too.
+    assert!(
+        engine.plans.replacements() >= 1,
+        "promotion must install into the plan cache"
+    );
+    // End to end, tuning must not lose to the static baseline (small
+    // exploration tax allowed, converged gain should dominate).
+    assert!(
+        report.throughput_rps() >= 0.98 * static_report.throughput_rps(),
+        "tuned {} req/s vs static {} req/s",
+        report.throughput_rps(),
+        static_report.throughput_rps()
+    );
+    // Observations accumulated for offline-planner retraining.
+    let tuner = engine.tuner().unwrap();
+    assert_eq!(tuner.dataset().len(), report.stats.batches as usize);
+    // And the run is reproducible end to end.
+    let (engine2, ids2) = tiny_engine(Planner::Heuristic);
+    let engine2 = engine2.with_tuner(tune);
+    let report2 = replay(&engine2, &ids2, &spec, &cfg).unwrap();
+    assert_eq!(
+        report.duration_s.to_bits(),
+        report2.duration_s.to_bits(),
+        "tuned replay must be bit-reproducible"
+    );
+}
+
+#[test]
 fn sharded_server_survives_poison_and_reports_per_shard() {
     // The serve-bench acceptance path end to end: suite corpus, 8
     // shards, Zipf traffic with one poison request (unregistered id)
@@ -191,6 +275,7 @@ fn sharded_server_survives_poison_and_reports_per_shard() {
             deadline_ms: 0.0,
             policy: PlacementPolicy::HotReplicate { hot: 2 },
             pooled: true,
+            tune: None,
         },
         &weights,
     );
