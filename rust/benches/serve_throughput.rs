@@ -13,11 +13,18 @@
 //!    by parallel-runtime overhead, which the pool pays once.)
 //! 4. Does online autotuning beat the static planner on the same
 //!    traffic? (Deterministic virtual-time A/B — see section 5.)
+//! 5. Do the PR-5 kernels pay off? Section `kernels` microbenches the
+//!    scalar vs 4x-unrolled CSR row kernel and the packed formats
+//!    (SELL-C-σ, CSR5) per matrix, and snapshots the numbers to
+//!    `BENCH_kernels.json` for the perf trajectory. Section `arena`
+//!    A/Bs the zero-allocation scratch serve path against the
+//!    allocating path (quick mode asserts the arena is no slower).
 //!
 //! Scale with `FT2000_SUITE=tiny|fast|full` (default fast); set
 //! `FT2000_QUICK=1` for the CI smoke mode (tiny request counts, full
 //! code paths, convergence assertions in section 5). Run a single
-//! section with `FT2000_SECTION=batch|traffic|pool|shard|autotune`,
+//! section with
+//! `FT2000_SECTION=batch|traffic|pool|shard|autotune|kernels|arena`,
 //! or everything but one with `FT2000_SECTION=-<name>`.
 
 mod common;
@@ -33,13 +40,15 @@ use ft2000_spmv::service::{
     ServeEngine, ShardConfig, ShardedServer, WorkloadSpec,
 };
 use ft2000_spmv::util::bench::{bench, black_box, BenchConfig};
+use ft2000_spmv::util::json::Json;
 use ft2000_spmv::util::table::Table;
 
 fn main() {
     common::banner(
         "§Serve",
         "batched SpMM vs repeated SpMV; engine throughput under Zipf \
-         traffic; pooled vs spawn dispatch; static vs tuned plans",
+         traffic; pooled vs spawn dispatch; static vs tuned plans; \
+         kernel microbench; arena vs allocating serve path",
     );
     let suite = common::suite_from_env();
     let quick = common::quick_from_env();
@@ -120,6 +129,221 @@ fn main() {
     // --- 5: static vs tuned plans, virtual-time A/B ----------------------
     if common::section_enabled("autotune") {
         section_autotune(&suite, quick);
+    }
+
+    // --- 6: kernel microbench (scalar vs unrolled vs packed formats) -----
+    if common::section_enabled("kernels") {
+        section_kernels(&suite, quick);
+    }
+
+    // --- 7: arena (zero-alloc) vs allocating serve path, wall clock ------
+    if common::section_enabled("arena") {
+        section_arena(&suite, quick);
+    }
+}
+
+// Per-format kernel microbench: the scalar single-accumulator CSR row
+// kernel (the pre-PR-5 baseline) vs the 4x-unrolled fmadd kernel, the
+// SELL-C-σ chunk-vectorized kernel, and CSR5 — sequential, so the
+// numbers isolate the inner loop from dispatch/partitioning. Emits a
+// `BENCH_kernels.json` snapshot for the perf trajectory.
+fn section_kernels(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
+    use ft2000_spmv::sparse::{row_dot_scalar, Csr5, SellCSigma};
+
+    println!();
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: if quick { 8 } else { 40 },
+        target_rel_ci: 0.1,
+        max_seconds: if quick { 0.2 } else { 1.5 },
+    };
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(suite, Some(if quick { 3 } else { 6 }));
+    let mut chosen = ids.clone();
+    chosen.sort_by_key(|&id| std::cmp::Reverse(reg.entry(id).csr.nnz()));
+    chosen.dedup();
+    chosen.truncate(if quick { 2 } else { 4 });
+    let mut t = Table::new(
+        "Kernel microbench (sequential, Gflops; higher is better)",
+        &[
+            "matrix",
+            "nnz",
+            "csr scalar",
+            "csr unrolled",
+            "sell-c8-s64",
+            "csr5-t256",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &id in &chosen {
+        let entry = reg.entry(id);
+        let csr = &entry.csr;
+        let n = csr.n_rows;
+        let nnz = csr.nnz();
+        let flops = 2.0 * nnz as f64;
+        let x = vec![1.0f64; csr.n_cols];
+        let mut y = vec![0.0f64; n];
+        let scalar = bench("csr-scalar", &cfg, || {
+            for r in 0..n {
+                let (cols, vals) = csr.row(r);
+                y[r] = row_dot_scalar(cols, vals, &x);
+            }
+            black_box(&y);
+        });
+        let mut y = vec![0.0f64; n];
+        let unrolled = bench("csr-unrolled", &cfg, || {
+            csr.spmv(&x, &mut y);
+            black_box(&y);
+        });
+        let sell = SellCSigma::from_csr(csr, 8, 64);
+        let mut y = vec![0.0f64; n];
+        let sell_run = bench("sell", &cfg, || {
+            sell.spmv(&x, &mut y);
+            black_box(&y);
+        });
+        let csr5 = Csr5::from_csr(csr, 256);
+        let mut y = vec![0.0f64; n];
+        let csr5_run = bench("csr5", &cfg, || {
+            csr5.spmv(&x, &mut y);
+            black_box(&y);
+        });
+        let gf = |mean_s: f64| flops / mean_s / 1e9;
+        t.row(vec![
+            entry.name.clone(),
+            nnz.to_string(),
+            format!("{:.3}", gf(scalar.mean_s)),
+            format!("{:.3}", gf(unrolled.mean_s)),
+            format!("{:.3}", gf(sell_run.mean_s)),
+            format!("{:.3}", gf(csr5_run.mean_s)),
+        ]);
+        for (kernel, mean_s) in [
+            ("csr-scalar", scalar.mean_s),
+            ("csr-unrolled", unrolled.mean_s),
+            ("sell-c8-s64", sell_run.mean_s),
+            ("csr5-t256", csr5_run.mean_s),
+        ] {
+            rows.push(Json::Obj(
+                [
+                    ("matrix".to_string(), Json::Str(entry.name.clone())),
+                    ("nnz".to_string(), Json::Num(nnz as f64)),
+                    ("kernel".to_string(), Json::Str(kernel.to_string())),
+                    ("mean_s".to_string(), Json::Num(mean_s)),
+                    ("gflops".to_string(), Json::Num(gf(mean_s))),
+                ]
+                .into_iter()
+                .collect(),
+            ));
+        }
+    }
+    t.print();
+    let snapshot = Json::Obj(
+        [
+            ("section".to_string(), Json::Str("kernels".to_string())),
+            (
+                "quick".to_string(),
+                Json::Num(if quick { 1.0 } else { 0.0 }),
+            ),
+            ("rows".to_string(), Json::Arr(rows)),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    let path = std::env::var("FT2000_BENCH_DIR")
+        .map(|d| format!("{d}/BENCH_kernels.json"))
+        .unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    match std::fs::write(&path, snapshot.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+// Arena (zero-alloc scratch) vs allocating serve path: same cached
+// plan, same pooled engine, same inputs. Three rungs:
+//
+// * `plan direct` — bare `plan.execute_on`, a fresh scratch + output
+//   per call (the pre-PR-5 allocation profile, no engine bookkeeping;
+//   informational only — it skips the registry/plan-cache/telemetry
+//   work the engine paths share);
+// * `engine alloc` — `execute_batch`, the materializing engine path
+//   (arena execution + one output clone per request);
+// * `engine arena` — `serve_batch`, the zero-allocation serve path.
+//
+// The quick-mode CI gate compares the two *engine* rungs — identical
+// bookkeeping, so the ratio isolates exactly the per-request output
+// materialization the arena removes and cannot be skewed by lock
+// overhead differences.
+fn section_arena(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
+    println!();
+    println!("arena (zero-alloc) vs allocating serve path (wall clock):");
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 5,
+        max_iters: if quick { 60 } else { 200 },
+        target_rel_ci: 0.05,
+        max_seconds: if quick { 0.6 } else { 2.0 },
+    };
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(suite, Some(6));
+    let engine =
+        ServeEngine::pooled(reg, Planner::Heuristic, PlanConfig::default());
+    // Median-sized matrix: big enough to be a real kernel, small
+    // enough that per-request overhead is visible.
+    let mut by_nnz = ids.clone();
+    by_nnz.sort_by_key(|&id| engine.registry.entry(id).csr.nnz());
+    let id = by_nnz[by_nnz.len() / 2];
+    let entry = engine.registry.entry(id);
+    let (plan, _) = engine.plans.plan_for(entry.fingerprint, &entry.csr);
+    let x = vec![1.0f64; entry.csr.n_cols];
+    let xs1 = [x.as_slice()];
+    let xs8 = [x.as_slice(); 8];
+    // Warm the arena before timing it.
+    for _ in 0..4 {
+        engine.serve_batch(id, &xs1).expect("warmup");
+        engine.serve_batch(id, &xs8).expect("warmup");
+    }
+    let mut report = Vec::new();
+    for (label, batch) in [("batch 1", 1usize), ("batch 8", 8)] {
+        let direct = bench("plan-direct", &cfg, || {
+            if batch == 1 {
+                black_box(plan.execute_on(&entry.csr, &x, engine.pool()));
+            } else {
+                let packed = exec::pack_vectors(&xs8);
+                black_box(plan.execute_batch_on(
+                    &entry.csr,
+                    &packed,
+                    8,
+                    engine.pool(),
+                ));
+            }
+        });
+        let alloc = bench("engine-alloc", &cfg, || {
+            let xs: &[&[f64]] = if batch == 1 { &xs1 } else { &xs8 };
+            black_box(engine.execute_batch(id, xs).expect("serve"));
+        });
+        let arena = bench("engine-arena", &cfg, || {
+            let xs: &[&[f64]] = if batch == 1 { &xs1 } else { &xs8 };
+            black_box(engine.serve_batch(id, xs).expect("serve"));
+        });
+        let ratio = arena.mean_s / alloc.mean_s;
+        println!(
+            "{} ({label:<7}): plan direct {:>9.3} us  engine alloc \
+             {:>9.3} us  engine arena {:>9.3} us  arena/alloc {ratio:.3}x",
+            entry.name,
+            direct.mean_s * 1e6,
+            alloc.mean_s * 1e6,
+            arena.mean_s * 1e6,
+        );
+        report.push((label, ratio));
+    }
+    if quick {
+        for (label, ratio) in report {
+            assert!(
+                ratio <= 1.10,
+                "arena smoke: the zero-alloc serve path must be no \
+                 slower than the materializing path ({label}: {ratio:.3}x)"
+            );
+        }
     }
 }
 

@@ -44,9 +44,13 @@ pub fn thread_ladder(static_threads: usize, max_threads: usize) -> Vec<usize> {
 
 /// The candidate schedules explored around `static_schedule`. The two
 /// row-space schedules are always present (they are free — no format
-/// conversion); the CSR5 tile format is kept as a candidate only when
-/// the static planner already picked it, so exploration never pays a
-/// per-variant tile conversion the planner's prior voted against.
+/// conversion); the packed formats (CSR5 tiles, SELL-C-σ chunks) are
+/// kept as candidates only when the static planner already picked
+/// them, so exploration never pays a per-variant format conversion
+/// the planner's prior voted against. (A packed static pick keeps its
+/// whole thread ladder — `static_schedule` is always the first
+/// schedule here, and [`candidates`] crosses every schedule with the
+/// ladder — so the ladder's conversion is shared across those arms.)
 pub fn schedule_candidates(
     static_schedule: Schedule,
     tile_nnz: usize,
@@ -137,11 +141,13 @@ pub fn schedule_code(s: Schedule) -> f64 {
         Schedule::CsrRowBalanced => 1.0,
         Schedule::Csr5Tiles { .. } => 2.0,
         Schedule::CsrDynamic { .. } => 3.0,
+        Schedule::SellChunks { .. } => 4.0,
     }
 }
 
 /// Inverse of [`Schedule::name`] for snapshot warm starts
-/// ("csr-static", "csr-balanced", "csr5-t256", "csr-dyn64").
+/// ("csr-static", "csr-balanced", "csr5-t256", "csr-dyn64",
+/// "sell-c8-s64").
 pub fn schedule_from_name(name: &str) -> Option<Schedule> {
     match name {
         "csr-static" => Some(Schedule::CsrRowStatic),
@@ -151,6 +157,14 @@ pub fn schedule_from_name(name: &str) -> Option<Schedule> {
                 t.parse().ok().map(|tile_nnz| Schedule::Csr5Tiles { tile_nnz })
             } else if let Some(c) = name.strip_prefix("csr-dyn") {
                 c.parse().ok().map(|chunk| Schedule::CsrDynamic { chunk })
+            } else if let Some(rest) = name.strip_prefix("sell-c") {
+                let (c, sigma) = rest.split_once("-s")?;
+                match (c.parse().ok(), sigma.parse().ok()) {
+                    (Some(c), Some(sigma)) => {
+                        Some(Schedule::SellChunks { c, sigma })
+                    }
+                    _ => None,
+                }
             } else {
                 None
             }
@@ -234,9 +248,35 @@ mod tests {
             Schedule::CsrRowBalanced,
             Schedule::Csr5Tiles { tile_nnz: 128 },
             Schedule::CsrDynamic { chunk: 32 },
+            Schedule::SellChunks { c: 8, sigma: 64 },
+            Schedule::SellChunks { c: 32, sigma: 4096 },
         ] {
             assert_eq!(schedule_from_name(&s.name()), Some(s));
         }
         assert_eq!(schedule_from_name("bogus"), None);
+        assert_eq!(schedule_from_name("sell-c8"), None);
+        assert_eq!(schedule_from_name("sell-cx-sy"), None);
+    }
+
+    #[test]
+    fn sell_static_pick_keeps_its_ladder_without_tiles() {
+        // A SELL static pick explores the SELL thread ladder (shared
+        // conversion) plus the free row-space schedules — but never a
+        // speculative CSR5 conversion.
+        let sell = Schedule::SellChunks { c: 8, sigma: 64 };
+        let cands = candidates(sell, 256, 4, 16);
+        assert_eq!(cands[0], Variant { schedule: sell, n_threads: 4 });
+        assert!(
+            cands.iter().filter(|v| v.schedule == sell).count() >= 3,
+            "the SELL arm family must span the thread ladder: {cands:?}"
+        );
+        assert!(
+            cands
+                .iter()
+                .all(|v| !matches!(v.schedule, Schedule::Csr5Tiles { .. })),
+            "no speculative CSR5 conversion from a SELL pick: {cands:?}"
+        );
+        assert!(cands.iter().any(|v| v.schedule == Schedule::CsrRowStatic));
+        assert_eq!(schedule_code(sell), 4.0);
     }
 }

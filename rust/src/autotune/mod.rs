@@ -46,7 +46,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::mlmodel::Dataset;
 use crate::service::plan::{
-    build_plan_with_csr5, Plan, PlanConfig, PlannedFormat,
+    build_plan_shared, Plan, PlanConfig, SharedFormats,
 };
 use crate::sparse::Csr;
 use crate::util::json::Json;
@@ -201,13 +201,18 @@ impl Tuner {
     }
 
     fn apply_snapshot(&mut self, w: &TunerSnapshot, cfg: &AutotuneConfig) {
-        // Tile arms may only re-enter a ladder that already carries
-        // tiles (static pick was CSR5) — a snapshot from a different
-        // planner must not smuggle speculative conversions back in.
+        // Packed-format arms (CSR5 tiles, SELL chunks) may only
+        // re-enter a ladder that already carries that format (the
+        // static pick chose it) — a snapshot from a different planner
+        // must not smuggle speculative conversions back in.
         let ladder_has_tiles = self
             .variants
             .iter()
             .any(|v| matches!(v.schedule, crate::sched::Schedule::Csr5Tiles { .. }));
+        let ladder_has_sell = self
+            .variants
+            .iter()
+            .any(|v| matches!(v.schedule, crate::sched::Schedule::SellChunks { .. }));
         for (sched, threads, pulls, mean, m2) in &w.arms {
             let idx = match self.find_variant(sched, *threads) {
                 Some(i) => Some(i),
@@ -221,6 +226,11 @@ impl Tuner {
                                 || !matches!(
                                     schedule,
                                     crate::sched::Schedule::Csr5Tiles { .. }
+                                ))
+                            && (ladder_has_sell
+                                || !matches!(
+                                    schedule,
+                                    crate::sched::Schedule::SellChunks { .. }
                                 )) =>
                     {
                         self.variants
@@ -621,19 +631,21 @@ impl Autotuner {
             }
         };
         let (variant, features, tuner_static) = build_ctx;
-        // Tile arms reuse the static plan's converted CSR5 structure
-        // (the ladder only carries tiles when the static pick did).
-        let shared_csr5 = tuner_static.as_ref().and_then(|p| match &p.format {
-            PlannedFormat::Csr5(c5) => Some(c5.clone()),
-            _ => None,
-        });
-        let built = Arc::new(build_plan_with_csr5(
+        // Packed-format arms (CSR5 tiles, SELL chunks) reuse the
+        // static plan's conversion — the ladder only carries a packed
+        // format when the static pick did, so one conversion serves
+        // the whole arm family.
+        let shared = tuner_static
+            .as_deref()
+            .map(SharedFormats::of)
+            .unwrap_or_default();
+        let built = Arc::new(build_plan_shared(
             &self.plan_cfg,
             csr,
             variant.schedule,
             variant.n_threads,
             features,
-            shared_csr5,
+            shared,
         ));
         let mut inner = self.inner.lock().unwrap();
         let tuner = inner.get_mut(&fp).expect("tuner created above");
@@ -1015,6 +1027,47 @@ mod tests {
         let winner = tuner.chosen_plan(fp).expect("promoted winner");
         let summaries = tuner.summaries();
         assert_eq!(winner.n_threads, summaries[0].chosen_variant.n_threads);
+    }
+
+    #[test]
+    fn sell_arms_share_the_static_conversion() {
+        use crate::service::plan::PlannedFormat;
+        use crate::sparse::Coo;
+
+        // 4-thread static split [64, 64, 64, 128] -> job_var 0.4: the
+        // heuristic's SELL band.
+        let mut coo = Coo::new(256, 256);
+        for r in 0..256 {
+            coo.push(r, r, 1.0);
+            if r >= 192 {
+                coo.push(r, (r + 1) % 256, 1.0);
+            }
+        }
+        let csr = coo.to_csr();
+        let plan = Arc::new(build_plan(
+            &Planner::Heuristic,
+            &PlanConfig::default(),
+            &csr,
+        ));
+        let PlannedFormat::Sell(s) = &plan.format else {
+            panic!("setup: expected a SELL static plan, got {:?}", plan.schedule)
+        };
+        let fp = crate::service::registry::fingerprint(&csr);
+        let tuner =
+            Autotuner::new(AutotuneConfig::default(), PlanConfig::default());
+        let mut sell_arms_seen = 0usize;
+        for _ in 0..80 {
+            let (p, arm) = tuner.plan_for(fp, "m", &plan, &csr);
+            if let PlannedFormat::Sell(got) = &p.format {
+                assert!(
+                    Arc::ptr_eq(got, s),
+                    "a SELL ladder arm reconverted instead of sharing"
+                );
+                sell_arms_seen += 1;
+            }
+            tuner.observe(fp, arm, modeled_ms(p.n_threads, 0.01), 1);
+        }
+        assert!(sell_arms_seen > 0, "exploration must pull SELL arms");
     }
 
     #[test]

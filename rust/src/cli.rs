@@ -137,7 +137,7 @@ pub fn usage() -> &'static str {
     "usage: ft2000-spmv <sweep|train|analyze|verify|report|export|serve-bench|replay|info> [options]\n\
      \n\
      sweep    --suite tiny|fast|full   corpus scale (default fast)\n\
-     \u{20}        --schedule csr|balanced|csr5|dynamic\n\
+     \u{20}        --schedule csr|balanced|csr5|dynamic|sell\n\
      \u{20}        --placement group|private\n\
      \u{20}        --threads 1,2,3,4\n\
      \u{20}        --csv PATH           dump per-matrix results\n\
@@ -224,6 +224,7 @@ fn parse_schedule(flags: &HashMap<String, String>) -> Result<Schedule> {
         "balanced" => Ok(Schedule::CsrRowBalanced),
         "csr5" => Ok(Schedule::Csr5Tiles { tile_nnz: 256 }),
         "dynamic" => Ok(Schedule::CsrDynamic { chunk: 64 }),
+        "sell" => Ok(Schedule::SellChunks { c: 8, sigma: 64 }),
         other => bail!("unknown schedule '{other}'"),
     }
 }
@@ -495,6 +496,17 @@ mod tests {
                 assert!(matches!(schedule, Schedule::Csr5Tiles { .. }));
                 assert_eq!(placement, Placement::PrivateL2);
                 assert_eq!(threads, vec![1, 2, 4]);
+            }
+            _ => panic!("wrong command"),
+        }
+    }
+
+    #[test]
+    fn parses_sell_schedule() {
+        let cli = parse(&sv(&["sweep", "--schedule", "sell"])).unwrap();
+        match cli.command {
+            Command::Sweep { schedule, .. } => {
+                assert_eq!(schedule, Schedule::SellChunks { c: 8, sigma: 64 })
             }
             _ => panic!("wrong command"),
         }

@@ -103,6 +103,26 @@ pub fn simulate_point(
                 });
             }
         }
+        Partition::SellChunks { c, sigma, per_thread } => {
+            // Modeled as per-row CSR accesses over each slot's
+            // permuted rows: the memory traffic (A streamed once, x
+            // gathered per nonzero) matches; the intra-chunk SIMD
+            // shuffle is elided, consistent with the CSR5 trace's
+            // simplification.
+            let perm = crate::sparse::sell::sell_perm(csr, *c, *sigma);
+            for (t, &(k0, k1)) in per_thread.iter().enumerate() {
+                let lo = (k0 * c).min(csr.n_rows);
+                let hi = (k1 * c).min(csr.n_rows);
+                let rows: Vec<(usize, usize)> = perm[lo..hi]
+                    .iter()
+                    .map(|&r| (r as usize, r as usize + 1))
+                    .collect();
+                threads.push(ThreadSpec {
+                    gen: Box::new(CsrMultiTrace::new(csr, rows)),
+                    core: cfg.placement.core_of(t, &cfg.topo),
+                });
+            }
+        }
     }
     (simulate(&cfg.topo, threads), thread_nnz)
 }

@@ -5,7 +5,8 @@
 //! Threads write disjoint row ranges of `y`; the only cross-thread
 //! rows are CSR5 range-boundary carries, which are merged by the
 //! calling thread after the join (exactly the CSR5 algorithm's
-//! cross-thread reduction step).
+//! cross-thread reduction step). SELL-C-σ slots own whole chunks,
+//! whose permuted rows are disjoint across slots by construction.
 //!
 //! Every executor comes in two dispatch modes behind one entry point:
 //! handed a [`pool::ExecPool`] it runs on the pool's resident workers
@@ -15,18 +16,28 @@
 //! Partition slots with no rows are skipped in both modes, and the
 //! result reports the *effective* worker count, so scalability curves
 //! at `n_threads > n_rows` aren't skewed by idle spawns.
+//!
+//! And every executor comes in two *allocation* modes: the `*_into`
+//! entry points write outputs into a caller-provided [`Scratch`]
+//! arena (the zero-allocation serving path — buffers are reused
+//! across requests), while the classic entry points allocate a fresh
+//! result per call (one-shot paths) by running the same kernels over
+//! a throwaway scratch and taking its buffers.
 
 pub mod pool;
+pub mod scratch;
 
 pub use pool::ExecPool;
+pub use scratch::Scratch;
 
 use std::time::Instant;
 
 use crate::sched::{partition, Partition, Schedule};
-use crate::sparse::csr5::TileCarry;
+use crate::sparse::csr::fmadd;
+use crate::sparse::sell::SellCSigma;
 use crate::sparse::{Csr, Csr5};
 
-/// Result of one threaded SpMV execution.
+/// Result of one threaded SpMV execution (owning).
 #[derive(Clone, Debug)]
 pub struct ExecResult {
     pub y: Vec<f64>,
@@ -51,6 +62,32 @@ impl ExecResult {
     /// milliseconds — the autotuner's observation unit.
     pub fn per_request_ms(&self) -> f64 {
         self.wall_seconds * 1e3
+    }
+}
+
+/// Result of one `spmv_*_into` execution: the timing/parallelism
+/// metadata, with the output left in the caller's [`Scratch`]
+/// (borrow via [`Scratch::y`], or take via [`ExecStats::into_result`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecStats {
+    pub wall_seconds: f64,
+    /// Effective parallelism (slots that carried work).
+    pub threads: usize,
+}
+
+impl ExecStats {
+    pub fn per_request_ms(&self) -> f64 {
+        self.wall_seconds * 1e3
+    }
+
+    /// Materialize an owning [`ExecResult`] by taking the scratch's
+    /// output buffer (the "take" half of the take-or-borrow story).
+    pub fn into_result(self, scratch: &mut Scratch) -> ExecResult {
+        ExecResult {
+            y: scratch.take_y(),
+            wall_seconds: self.wall_seconds,
+            threads: self.threads,
+        }
     }
 }
 
@@ -81,7 +118,7 @@ pub fn effective_row_slots(per_thread: &[Vec<(usize, usize)>]) -> usize {
         .max(1)
 }
 
-/// Effective parallelism of a tile partition, floored at 1.
+/// Effective parallelism of a tile/chunk partition, floored at 1.
 pub fn effective_tile_slots(per_thread: &[(usize, usize)]) -> usize {
     per_thread.iter().filter(|&&(t0, t1)| t1 > t0).count().max(1)
 }
@@ -110,6 +147,16 @@ fn dispatch(
     }
 }
 
+/// Pre-converted structures a partitioned execution may reuse instead
+/// of rebuilding per call — plans memoize their CSR5/SELL conversion
+/// at build time and hand it here, so the non-plan `spmv_partitioned`
+/// path stops paying per-request conversion too.
+#[derive(Clone, Copy, Default)]
+pub struct Prebuilt<'a> {
+    pub csr5: Option<&'a Csr5>,
+    pub sell: Option<&'a SellCSigma>,
+}
+
 /// Multi-threaded CSR SpMV under any row partition (spawn fallback;
 /// see [`spmv_threaded_on`] for the pooled serving path).
 pub fn spmv_threaded(
@@ -121,8 +168,9 @@ pub fn spmv_threaded(
     spmv_threaded_on(None, csr, x, schedule, n_threads)
 }
 
-/// Multi-threaded CSR SpMV: partition under `schedule`, then execute
-/// on `pool` (or scoped threads when `None`).
+/// Multi-threaded SpMV: partition under `schedule`, convert once when
+/// the schedule needs a packed format, then execute on `pool` (or
+/// scoped threads when `None`).
 pub fn spmv_threaded_on(
     pool: Option<&ExecPool>,
     csr: &Csr,
@@ -133,44 +181,83 @@ pub fn spmv_threaded_on(
     assert_eq!(x.len(), csr.n_cols);
     let part = partition(csr, schedule, n_threads);
     debug_assert!(part.validate(csr).is_ok());
-    spmv_partitioned(pool, csr, x, &part)
+    spmv_partitioned(pool, csr, x, &part, Prebuilt::default())
 }
 
 /// Execute a *pre-materialized* partition — the serving hot path:
 /// plans memoize their partition at build time and requests skip the
-/// (prefix-bisection / tiling) partitioning work entirely.
+/// (prefix-bisection / tiling / chunk-packing) partitioning work
+/// entirely. `prebuilt` supplies already-converted CSR5/SELL
+/// structures (matched on tile size / chunk height before use);
+/// absent ones are converted on the fly (one-shot paths only — a
+/// serving path should always pass its memoized conversion).
 pub fn spmv_partitioned(
     pool: Option<&ExecPool>,
     csr: &Csr,
     x: &[f64],
     part: &Partition,
+    prebuilt: Prebuilt<'_>,
 ) -> ExecResult {
     match part {
         Partition::Rows { per_thread } => {
             spmv_rows_on(pool, csr, x, per_thread)
         }
-        Partition::Tiles { tile_nnz, per_thread } => {
-            let csr5 = Csr5::from_csr(csr, *tile_nnz);
-            spmv_csr5_on(pool, &csr5, x, per_thread)
+        Partition::Tiles { tile_nnz, per_thread } => match prebuilt.csr5 {
+            Some(c5) if c5.tile_nnz == *tile_nnz => {
+                spmv_csr5_on(pool, c5, x, per_thread)
+            }
+            _ => {
+                let csr5 = Csr5::from_csr(csr, *tile_nnz);
+                spmv_csr5_on(pool, &csr5, x, per_thread)
+            }
+        },
+        Partition::SellChunks { c, sigma, per_thread } => {
+            // The prebuilt must match on σ too — a different window
+            // means a different row permutation, and the chunk ranges
+            // of this partition would address the wrong rows.
+            let want_sigma = crate::sparse::sell::normalize_sigma(
+                (*c).max(1),
+                *sigma,
+                csr.n_rows,
+            );
+            match prebuilt.sell {
+                Some(s) if s.c == *c && s.sigma == want_sigma => {
+                    spmv_sell_on(pool, s, x, per_thread)
+                }
+                _ => {
+                    // No clamping here: a hand-built partition with an
+                    // out-of-domain c must hit `from_csr`'s assert
+                    // loudly, not silently convert under a different
+                    // chunking than the ranges were computed for.
+                    let sell = SellCSigma::from_csr(csr, *c, *sigma);
+                    spmv_sell_on(pool, &sell, x, per_thread)
+                }
+            }
         }
     }
 }
 
 /// CSR SpMV over explicit per-slot row ranges. Slots with no rows are
-/// skipped; `threads` reports the effective worker count.
-pub fn spmv_rows_on(
+/// skipped; `threads` reports the effective worker count. Writes into
+/// the caller's scratch (`scratch.y()`), allocation-free once the
+/// scratch is warm.
+pub fn spmv_rows_into(
     pool: Option<&ExecPool>,
     csr: &Csr,
     x: &[f64],
     per_thread: &[Vec<(usize, usize)>],
-) -> ExecResult {
+    scratch: &mut Scratch,
+) -> ExecStats {
     assert_eq!(x.len(), csr.n_cols);
-    let active: Vec<&[(usize, usize)]> = per_thread
-        .iter()
-        .map(|ranges| ranges.as_slice())
-        .filter(|ranges| slot_has_rows(ranges))
-        .collect();
-    let mut y = vec![0.0f64; csr.n_rows];
+    let Scratch { y, active, .. } = scratch;
+    active.clear();
+    for (i, ranges) in per_thread.iter().enumerate() {
+        if slot_has_rows(ranges) {
+            active.push(i);
+        }
+    }
+    let active: &[usize] = active;
+    y.resize(csr.n_rows, 0.0);
     let ptr = SendPtr(y.as_mut_ptr());
     let t0 = Instant::now();
     let work = |slot: usize| {
@@ -179,16 +266,27 @@ pub fn spmv_rows_on(
         // one worker.
         let yslice =
             unsafe { std::slice::from_raw_parts_mut(ptr.0, csr.n_rows) };
-        for &(r0, r1) in active[slot] {
+        for &(r0, r1) in &per_thread[active[slot]] {
             csr.spmv_rows(r0, r1, x, yslice);
         }
     };
     dispatch(pool, active.len(), &work);
-    ExecResult {
-        y,
+    ExecStats {
         wall_seconds: t0.elapsed().as_secs_f64(),
         threads: active.len().max(1),
     }
+}
+
+/// Allocating wrapper over [`spmv_rows_into`] (one-shot paths).
+pub fn spmv_rows_on(
+    pool: Option<&ExecPool>,
+    csr: &Csr,
+    x: &[f64],
+    per_thread: &[Vec<(usize, usize)>],
+) -> ExecResult {
+    let mut scratch = Scratch::new();
+    spmv_rows_into(pool, csr, x, per_thread, &mut scratch)
+        .into_result(&mut scratch)
 }
 
 /// Multi-threaded CSR5 SpMV over tile ranges, with post-join carry
@@ -201,46 +299,118 @@ pub fn spmv_csr5_threaded(
     spmv_csr5_on(None, csr5, x, per_thread)
 }
 
-/// CSR5 SpMV over tile ranges on an optional pool. Empty tile ranges
-/// are skipped; boundary-row carries are merged by the calling thread
-/// after the latch (the CSR5 cross-thread reduction step).
+/// CSR5 SpMV over tile ranges into the caller's scratch. Empty tile
+/// ranges are skipped; boundary-row carries land in reused per-slot
+/// buffers and are merged by the calling thread after the latch (the
+/// CSR5 cross-thread reduction step).
+pub fn spmv_csr5_into(
+    pool: Option<&ExecPool>,
+    csr5: &Csr5,
+    x: &[f64],
+    per_thread: &[(usize, usize)],
+    scratch: &mut Scratch,
+) -> ExecStats {
+    let Scratch { y, active, carries, .. } = scratch;
+    active.clear();
+    for (i, &(t0, t1)) in per_thread.iter().enumerate() {
+        if t1 > t0 {
+            active.push(i);
+        }
+    }
+    let active: &[usize] = active;
+    y.resize(csr5.n_rows, 0.0);
+    // Carries add into y, and rows with no nonzeros are never written
+    // by a tile — the output must start clean.
+    y.fill(0.0);
+    if carries.len() < active.len() {
+        carries.resize_with(active.len(), Vec::new);
+    }
+    let yptr = SendPtr(y.as_mut_ptr());
+    let cptr = SendPtr(carries.as_mut_ptr());
+    let t0 = Instant::now();
+    let work = |slot: usize| {
+        // SAFETY: spmv_tiles_into writes only rows fully contained in
+        // its tile range; boundary rows come back as carries. Each
+        // slot writes its own carries cell.
+        let yslice =
+            unsafe { std::slice::from_raw_parts_mut(yptr.0, csr5.n_rows) };
+        let (a, b) = per_thread[active[slot]];
+        let cs = unsafe { &mut *cptr.0.add(slot) };
+        csr5.spmv_tiles_into(a, b, x, yslice, cs);
+    };
+    dispatch(pool, active.len(), &work);
+    for cs in &carries[..active.len()] {
+        for c in cs {
+            y[c.row] += c.value;
+        }
+    }
+    ExecStats {
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        threads: active.len().max(1),
+    }
+}
+
+/// Allocating wrapper over [`spmv_csr5_into`].
 pub fn spmv_csr5_on(
     pool: Option<&ExecPool>,
     csr5: &Csr5,
     x: &[f64],
     per_thread: &[(usize, usize)],
 ) -> ExecResult {
-    let active: Vec<(usize, usize)> = per_thread
-        .iter()
-        .copied()
-        .filter(|&(t0, t1)| t1 > t0)
-        .collect();
-    let mut y = vec![0.0f64; csr5.n_rows];
-    let mut carries: Vec<Vec<TileCarry>> = vec![Vec::new(); active.len()];
-    let yptr = SendPtr(y.as_mut_ptr());
-    let cptr = SendPtr(carries.as_mut_ptr());
-    let t0 = Instant::now();
-    let work = |slot: usize| {
-        // SAFETY: spmv_tiles writes only rows fully contained in its
-        // tile range; boundary rows come back as carries. Each slot
-        // writes its own carries cell.
-        let yslice =
-            unsafe { std::slice::from_raw_parts_mut(yptr.0, csr5.n_rows) };
-        let (a, b) = active[slot];
-        let got = csr5.spmv_tiles(a, b, x, yslice);
-        unsafe { *cptr.0.add(slot) = got };
-    };
-    dispatch(pool, active.len(), &work);
-    for cs in &carries {
-        for c in cs {
-            y[c.row] += c.value;
+    let mut scratch = Scratch::new();
+    spmv_csr5_into(pool, csr5, x, per_thread, &mut scratch)
+        .into_result(&mut scratch)
+}
+
+/// SELL-C-σ SpMV over chunk ranges into the caller's scratch. Each
+/// slot sweeps its chunks column-major (the vectorizable SELL access
+/// pattern) and scatters per-row sums through `perm` into `y`; chunk
+/// ranges own disjoint permuted rows, so slots never collide.
+pub fn spmv_sell_into(
+    pool: Option<&ExecPool>,
+    sell: &SellCSigma,
+    x: &[f64],
+    per_thread: &[(usize, usize)],
+    scratch: &mut Scratch,
+) -> ExecStats {
+    assert_eq!(x.len(), sell.n_cols);
+    let Scratch { y, active, .. } = scratch;
+    active.clear();
+    for (i, &(k0, k1)) in per_thread.iter().enumerate() {
+        if k1 > k0 {
+            active.push(i);
         }
     }
-    ExecResult {
-        y,
+    let active: &[usize] = active;
+    y.resize(sell.n_rows, 0.0);
+    let ptr = SendPtr(y.as_mut_ptr());
+    let t0 = Instant::now();
+    let work = |slot: usize| {
+        // SAFETY: chunk ranges are disjoint across slots and each
+        // chunk owns `c` distinct rows of the permutation — every
+        // y[perm[slot_row]] is written by exactly one worker.
+        let yslice =
+            unsafe { std::slice::from_raw_parts_mut(ptr.0, sell.n_rows) };
+        let (k0, k1) = per_thread[active[slot]];
+        sell.spmv_chunks(k0, k1, x, yslice);
+    };
+    dispatch(pool, active.len(), &work);
+    ExecStats {
         wall_seconds: t0.elapsed().as_secs_f64(),
         threads: active.len().max(1),
     }
+}
+
+/// Allocating wrapper over [`spmv_sell_into`].
+pub fn spmv_sell_on(
+    pool: Option<&ExecPool>,
+    sell: &SellCSigma,
+    x: &[f64],
+    per_thread: &[(usize, usize)],
+) -> ExecResult {
+    let mut scratch = Scratch::new();
+    spmv_sell_into(pool, sell, x, per_thread, &mut scratch)
+        .into_result(&mut scratch)
 }
 
 /// Sequential reference execution (wrapped for timing symmetry).
@@ -268,10 +438,11 @@ pub struct SpmmResult {
     pub wall_seconds: f64,
     /// Effective parallelism (workers with nonempty row ranges).
     pub threads: usize,
-    /// The schedule that actually executed. Tile (CSR5) plans remap
-    /// to [`Schedule::CsrRowBalanced`] for multi-vector batches —
-    /// telemetry reports this field, not the plan's nominal schedule,
-    /// so replay tables stop attributing SpMM throughput to CSR5.
+    /// The schedule that actually executed. Tile (CSR5) and SELL
+    /// chunk plans remap to [`Schedule::CsrRowBalanced`] for
+    /// multi-vector batches — telemetry reports this field, not the
+    /// plan's nominal schedule, so replay tables stop attributing
+    /// SpMM throughput to formats that never ran it.
     pub schedule: Schedule,
 }
 
@@ -299,13 +470,51 @@ impl SpmmResult {
     }
 }
 
+/// Metadata of one `spmm_into` execution; the outputs stay in the
+/// caller's [`Scratch`] (`scratch.y_batch()`).
+#[derive(Clone, Copy, Debug)]
+pub struct SpmmStats {
+    pub n_rows: usize,
+    pub batch: usize,
+    pub wall_seconds: f64,
+    pub threads: usize,
+    /// Effective executed schedule (see [`SpmmResult::schedule`]).
+    pub schedule: Schedule,
+}
+
+impl SpmmStats {
+    /// Per-request share of the coalesced dispatch, in milliseconds.
+    pub fn per_request_ms(&self) -> f64 {
+        self.wall_seconds * 1e3 / self.batch.max(1) as f64
+    }
+
+    /// Materialize an owning [`SpmmResult`] by taking the scratch's
+    /// batched output buffer.
+    pub fn into_result(self, scratch: &mut Scratch) -> SpmmResult {
+        SpmmResult {
+            y: scratch.take_y_batch(),
+            n_rows: self.n_rows,
+            batch: self.batch,
+            wall_seconds: self.wall_seconds,
+            threads: self.threads,
+            schedule: self.schedule,
+        }
+    }
+}
+
 /// Interleave a slice of equal-length vectors into the
-/// `xs[i * batch + j]` layout the SpMM kernels consume.
-pub fn pack_vectors<T: AsRef<[f64]>>(vectors: &[T]) -> Vec<f64> {
+/// `xs[i * batch + j]` layout the SpMM kernels consume, reusing the
+/// caller's buffer (allocation-free once warm). Panics on ragged
+/// input lengths ("vector length mismatch") — the serving engine
+/// validates lengths before packing, so this is a programmer-error
+/// guard, not a traffic-error path.
+pub fn pack_vectors_into<T: AsRef<[f64]>>(vectors: &[T], xs: &mut Vec<f64>) {
     let batch = vectors.len();
     assert!(batch > 0, "need at least one vector");
     let n = vectors[0].as_ref().len();
-    let mut xs = vec![0.0f64; n * batch];
+    // No clear(): resize alone grows/shrinks, and the loops below
+    // overwrite every element — a warm buffer pays no memset.
+    xs.resize(n * batch, 0.0);
     for (j, v) in vectors.iter().enumerate() {
         let v = v.as_ref();
         assert_eq!(v.len(), n, "vector length mismatch");
@@ -313,13 +522,23 @@ pub fn pack_vectors<T: AsRef<[f64]>>(vectors: &[T]) -> Vec<f64> {
             xs[i * batch + j] = val;
         }
     }
+}
+
+/// Allocating wrapper over [`pack_vectors_into`].
+pub fn pack_vectors<T: AsRef<[f64]>>(vectors: &[T]) -> Vec<f64> {
+    let mut xs = Vec::new();
+    pack_vectors_into(vectors, &mut xs);
     xs
 }
 
 /// The column-blocked SpMM inner kernel over a row range: for each
 /// block of `SPMM_COL_BLOCK` vectors, each nonzero `A[r,c]` is read
 /// once and multiplied against the block's contiguous slice of `x`
-/// row `c` — the batched-serving analog of the CSR row kernel.
+/// row `c`. Row elements follow the crate-wide accumulation
+/// discipline (element `k` -> accumulator `k % 4`, reduced
+/// `(a0+a1)+(a2+a3)` — see [`crate::sparse::csr::row_dot`]), so every
+/// output column is bitwise identical to the single-vector CSR
+/// reference.
 fn spmm_rows_blocked(
     csr: &Csr,
     xs: &[f64],
@@ -331,30 +550,52 @@ fn spmm_rows_blocked(
     let mut jb = 0;
     while jb < batch {
         let bw = (batch - jb).min(SPMM_COL_BLOCK);
-        let mut acc = [0.0f64; SPMM_COL_BLOCK];
+        let mut acc = [[0.0f64; SPMM_COL_BLOCK]; 4];
         for r in r0..r1 {
-            acc[..bw].fill(0.0);
-            for i in csr.ptr[r]..csr.ptr[r + 1] {
-                let a = csr.data[i];
-                let xoff = csr.indices[i] as usize * batch + jb;
-                for (t, slot) in acc[..bw].iter_mut().enumerate() {
-                    *slot += a * xs[xoff + t];
+            for lane in acc.iter_mut() {
+                lane[..bw].fill(0.0);
+            }
+            let (lo, hi) = (csr.ptr[r], csr.ptr[r + 1]);
+            let main = lo + ((hi - lo) & !3);
+            let mut k = lo;
+            while k < main {
+                for (e, lane) in acc.iter_mut().enumerate() {
+                    let a = csr.data[k + e];
+                    let xoff = csr.indices[k + e] as usize * batch + jb;
+                    for (t, slot) in lane[..bw].iter_mut().enumerate() {
+                        *slot = fmadd(a, xs[xoff + t], *slot);
+                    }
                 }
+                k += 4;
+            }
+            let mut e = 0;
+            while k < hi {
+                let a = csr.data[k];
+                let xoff = csr.indices[k] as usize * batch + jb;
+                for (t, slot) in acc[e][..bw].iter_mut().enumerate() {
+                    *slot = fmadd(a, xs[xoff + t], *slot);
+                }
+                e += 1;
+                k += 1;
             }
             let yoff = r * batch + jb;
-            y[yoff..yoff + bw].copy_from_slice(&acc[..bw]);
+            for (t, out) in y[yoff..yoff + bw].iter_mut().enumerate() {
+                *out = (acc[0][t] + acc[1][t]) + (acc[2][t] + acc[3][t]);
+            }
         }
         jb += bw;
     }
 }
 
-/// The row-space schedule a batched SpMM actually runs under. Tile
-/// (CSR5) schedules have no multi-vector kernel; they remap to
-/// `CsrRowBalanced`, the row-space schedule with the same
-/// load-balancing intent.
+/// The row-space schedule a batched SpMM actually runs under. Packed
+/// formats (CSR5 tiles, SELL chunks) have no multi-vector kernel;
+/// they remap to `CsrRowBalanced`, the row-space schedule with the
+/// same load-balancing intent.
 pub fn effective_spmm_schedule(schedule: Schedule) -> Schedule {
     match schedule {
-        Schedule::Csr5Tiles { .. } => Schedule::CsrRowBalanced,
+        Schedule::Csr5Tiles { .. } | Schedule::SellChunks { .. } => {
+            Schedule::CsrRowBalanced
+        }
         s => s,
     }
 }
@@ -387,9 +628,37 @@ pub fn spmm_threaded_on(
     debug_assert!(part.validate(csr).is_ok());
     let per_thread = match part {
         Partition::Rows { per_thread } => per_thread,
-        Partition::Tiles { .. } => unreachable!("tile schedules remapped"),
+        _ => unreachable!("packed-format schedules remapped"),
     };
     spmm_partitioned(pool, csr, xs, batch, &per_thread, schedule)
+}
+
+/// Shared SpMM slot runner: filtered `active` slot indices, kernel
+/// dispatch, wall-clock. Output rows are owned per slot.
+fn spmm_run(
+    pool: Option<&ExecPool>,
+    csr: &Csr,
+    xs: &[f64],
+    batch: usize,
+    per_thread: &[Vec<(usize, usize)>],
+    active: &[usize],
+    y: &mut [f64],
+) -> f64 {
+    let ptr = SendPtr(y.as_mut_ptr());
+    let t0 = Instant::now();
+    let work = |slot: usize| {
+        // SAFETY: row ranges are disjoint across slots
+        // (Partition::validate), and row r owns the disjoint slice
+        // y[r*batch .. (r+1)*batch].
+        let yslice = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0, csr.n_rows * batch)
+        };
+        for &(r0, r1) in &per_thread[active[slot]] {
+            spmm_rows_blocked(csr, xs, batch, r0, r1, yslice);
+        }
+    };
+    dispatch(pool, active.len(), &work);
+    t0.elapsed().as_secs_f64()
 }
 
 /// Batched SpMM over a *pre-materialized* row partition — the serving
@@ -405,31 +674,54 @@ pub fn spmm_partitioned(
 ) -> SpmmResult {
     assert!(batch > 0, "batch must be >= 1");
     assert_eq!(xs.len(), csr.n_cols * batch, "xs length != n_cols * batch");
-    let active: Vec<&[(usize, usize)]> = per_thread
-        .iter()
-        .map(|ranges| ranges.as_slice())
-        .filter(|ranges| slot_has_rows(ranges))
+    let active: Vec<usize> = (0..per_thread.len())
+        .filter(|&i| slot_has_rows(&per_thread[i]))
         .collect();
     let mut y = vec![0.0f64; csr.n_rows * batch];
-    let ptr = SendPtr(y.as_mut_ptr());
-    let t0 = Instant::now();
-    let work = |slot: usize| {
-        // SAFETY: row ranges are disjoint across slots
-        // (Partition::validate), and row r owns the disjoint slice
-        // y[r*batch .. (r+1)*batch].
-        let yslice = unsafe {
-            std::slice::from_raw_parts_mut(ptr.0, csr.n_rows * batch)
-        };
-        for &(r0, r1) in active[slot] {
-            spmm_rows_blocked(csr, xs, batch, r0, r1, yslice);
-        }
-    };
-    dispatch(pool, active.len(), &work);
+    let wall_seconds =
+        spmm_run(pool, csr, xs, batch, per_thread, &active, &mut y);
     SpmmResult {
         y,
         n_rows: csr.n_rows,
         batch,
-        wall_seconds: t0.elapsed().as_secs_f64(),
+        wall_seconds,
+        threads: active.len().max(1),
+        schedule,
+    }
+}
+
+/// Batched SpMM into the caller's scratch: packs the input vectors
+/// into the reused interleave buffer and writes outputs into the
+/// reused batched output buffer — the zero-allocation serving path
+/// for coalesced dispatches. `vectors` must be equal-length (the
+/// engine validates before calling).
+pub fn spmm_into(
+    pool: Option<&ExecPool>,
+    csr: &Csr,
+    vectors: &[&[f64]],
+    per_thread: &[Vec<(usize, usize)>],
+    schedule: Schedule,
+    scratch: &mut Scratch,
+) -> SpmmStats {
+    let batch = vectors.len();
+    assert!(batch > 0, "batch must be >= 1");
+    let Scratch { packed, yb, active, .. } = scratch;
+    pack_vectors_into(vectors, packed);
+    assert_eq!(packed.len(), csr.n_cols * batch, "xs length != n_cols * batch");
+    active.clear();
+    for (i, ranges) in per_thread.iter().enumerate() {
+        if slot_has_rows(ranges) {
+            active.push(i);
+        }
+    }
+    let active: &[usize] = active;
+    yb.resize(csr.n_rows * batch, 0.0);
+    let wall_seconds =
+        spmm_run(pool, csr, packed, batch, per_thread, active, yb);
+    SpmmStats {
+        n_rows: csr.n_rows,
+        batch,
+        wall_seconds,
         threads: active.len().max(1),
         schedule,
     }
@@ -492,12 +784,146 @@ mod tests {
             Schedule::CsrRowBalanced,
             Schedule::Csr5Tiles { tile_nnz: 32 },
             Schedule::CsrDynamic { chunk: 16 },
+            Schedule::SellChunks { c: 8, sigma: 64 },
         ] {
             for nt in [1, 2, 3, 4, 8] {
                 let got = spmv_threaded(&csr, &x, sched, nt);
                 assert_close(&got.y, &want);
-                assert_eq!(got.threads, nt);
+                assert_eq!(got.threads, nt, "{sched:?}");
             }
+        }
+    }
+
+    #[test]
+    fn row_space_and_sell_schedules_match_sequential_bitwise() {
+        // The PR-5 equivalence pin: every kernel that reduces rows in
+        // element order (all row-space schedules, and SELL-C-σ whose
+        // padding is an exact no-op) reproduces the sequential
+        // reference bit for bit. CSR5 may associate boundary-row
+        // partials differently and is excluded (tolerance-tested
+        // above and in tests/properties.rs).
+        let mut rng = Pcg32::new(0xB175);
+        for n in [37usize, 256, 401] {
+            let csr = random_csr(&mut rng, n, 7);
+            let x: Vec<f64> =
+                (0..n).map(|_| rng.gen_f64() - 0.5).collect();
+            let want = spmv_sequential(&csr, &x).y;
+            for sched in [
+                Schedule::CsrRowStatic,
+                Schedule::CsrRowBalanced,
+                Schedule::CsrDynamic { chunk: 8 },
+                Schedule::SellChunks { c: 4, sigma: 16 },
+                Schedule::SellChunks { c: 8, sigma: 64 },
+                Schedule::SellChunks { c: 16, sigma: 16 },
+                Schedule::SellChunks { c: 32, sigma: 4096 },
+            ] {
+                for nt in [1usize, 3, 8] {
+                    let got = spmv_threaded(&csr, &x, sched, nt);
+                    for (i, (a, b)) in want.iter().zip(&got.y).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{sched:?} nt={nt} row {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_allocating_path_bitwise() {
+        // One scratch serving many matrices/partitions in sequence
+        // produces exactly what the allocating path produces — stale
+        // buffer contents must never leak into an output.
+        let mut rng = Pcg32::new(0x5C4A);
+        let pool = ExecPool::new(3);
+        let mut scratch = Scratch::new();
+        for round in 0..12 {
+            let n = 16 + rng.gen_range(300);
+            let csr = random_csr(&mut rng, n, 5);
+            let x: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+            let sched = match round % 3 {
+                0 => Schedule::CsrRowBalanced,
+                1 => Schedule::Csr5Tiles { tile_nnz: 32 },
+                _ => Schedule::SellChunks { c: 8, sigma: 32 },
+            };
+            let part = partition(&csr, sched, 4);
+            let stats = match &part {
+                Partition::Rows { per_thread } => spmv_rows_into(
+                    Some(&pool),
+                    &csr,
+                    &x,
+                    per_thread,
+                    &mut scratch,
+                ),
+                Partition::Tiles { tile_nnz, per_thread } => {
+                    let c5 = Csr5::from_csr(&csr, *tile_nnz);
+                    spmv_csr5_into(
+                        Some(&pool),
+                        &c5,
+                        &x,
+                        per_thread,
+                        &mut scratch,
+                    )
+                }
+                Partition::SellChunks { c, sigma, per_thread } => {
+                    let s = SellCSigma::from_csr(&csr, *c, *sigma);
+                    spmv_sell_into(
+                        Some(&pool),
+                        &s,
+                        &x,
+                        per_thread,
+                        &mut scratch,
+                    )
+                }
+            };
+            let alloc =
+                spmv_partitioned(None, &csr, &x, &part, Prebuilt::default());
+            assert_eq!(stats.threads, alloc.threads, "round {round}");
+            assert_eq!(scratch.y().len(), alloc.y.len());
+            for (i, (a, b)) in alloc.y.iter().zip(scratch.y()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "round {round} ({sched:?}) row {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_partitioned_reuses_prebuilt_structures() {
+        // The satellite fix: a repeatedly-executed tile/chunk
+        // partition no longer converts per call when the caller hands
+        // its memoized structure — and a *mismatched* prebuilt (wrong
+        // tile size / chunk height) is ignored, not trusted.
+        let mut rng = Pcg32::new(0x9B17);
+        let csr = random_csr(&mut rng, 300, 6);
+        let x: Vec<f64> = (0..300).map(|_| rng.gen_f64()).collect();
+        let want = spmv_sequential(&csr, &x).y;
+        let part = partition(&csr, Schedule::Csr5Tiles { tile_nnz: 32 }, 4);
+        let good = Csr5::from_csr(&csr, 32);
+        let wrong = Csr5::from_csr(&csr, 64);
+        for prebuilt in [
+            Prebuilt::default(),
+            Prebuilt { csr5: Some(&good), sell: None },
+            Prebuilt { csr5: Some(&wrong), sell: None },
+        ] {
+            let got = spmv_partitioned(None, &csr, &x, &part, prebuilt);
+            assert_close(&got.y, &want);
+        }
+        let part =
+            partition(&csr, Schedule::SellChunks { c: 8, sigma: 32 }, 4);
+        let good = SellCSigma::from_csr(&csr, 8, 32);
+        let wrong = SellCSigma::from_csr(&csr, 4, 32);
+        for prebuilt in [
+            Prebuilt::default(),
+            Prebuilt { csr5: None, sell: Some(&good) },
+            Prebuilt { csr5: None, sell: Some(&wrong) },
+        ] {
+            let got = spmv_partitioned(None, &csr, &x, &part, prebuilt);
+            assert_close(&got.y, &want);
         }
     }
 
@@ -513,6 +939,7 @@ mod tests {
             Schedule::CsrRowBalanced,
             Schedule::Csr5Tiles { tile_nnz: 32 },
             Schedule::CsrDynamic { chunk: 16 },
+            Schedule::SellChunks { c: 8, sigma: 64 },
         ] {
             for nt in [1, 3, 8] {
                 let pooled =
@@ -536,6 +963,7 @@ mod tests {
             Schedule::CsrRowStatic,
             Schedule::CsrRowBalanced,
             Schedule::CsrDynamic { chunk: 1 },
+            Schedule::SellChunks { c: 1, sigma: 1 },
         ] {
             let r = spmv_threaded(&csr, &x, sched, 8);
             assert_eq!(r.y, vec![1.0; 3], "{sched:?}");
@@ -579,10 +1007,14 @@ mod tests {
             let x: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
             let want = spmv_sequential(&csr, &x).y;
             let nt = 1 + rng.gen_range(8);
-            let sched = match rng.gen_range(4) {
+            let sched = match rng.gen_range(5) {
                 0 => Schedule::CsrRowStatic,
                 1 => Schedule::CsrRowBalanced,
                 2 => Schedule::Csr5Tiles { tile_nnz: 1 + rng.gen_range(64) },
+                3 => Schedule::SellChunks {
+                    c: 1 + rng.gen_range(32),
+                    sigma: 1 + rng.gen_range(128),
+                },
                 _ => Schedule::CsrDynamic { chunk: 1 + rng.gen_range(32) },
             };
             let got = spmv_threaded(&csr, &x, sched, nt);
@@ -601,6 +1033,13 @@ mod tests {
         let csr = Csr::zero(10, 10);
         let x = vec![1.0; 10];
         let r = spmv_threaded(&csr, &x, Schedule::CsrRowStatic, 4);
+        assert!(r.y.iter().all(|&v| v == 0.0));
+        let r = spmv_threaded(
+            &csr,
+            &x,
+            Schedule::SellChunks { c: 4, sigma: 8 },
+            4,
+        );
         assert!(r.y.iter().all(|&v| v == 0.0));
     }
 
@@ -626,6 +1065,32 @@ mod tests {
             schedule: Schedule::CsrRowStatic,
         };
         assert!((s.per_request_ms() - 0.5).abs() < 1e-12);
+        let st = ExecStats { wall_seconds: 0.002, threads: 1 };
+        assert!((st.per_request_ms() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_request_ms_guards_batch_zero() {
+        // A hand-built batch-0 result (nothing was served) must not
+        // divide by zero — the satellite's unspecified-behavior pin.
+        let s = SpmmResult {
+            y: vec![],
+            n_rows: 0,
+            batch: 0,
+            wall_seconds: 0.002,
+            threads: 1,
+            schedule: Schedule::CsrRowStatic,
+        };
+        assert!((s.per_request_ms() - 2.0).abs() < 1e-12);
+        assert!(s.per_request_ms().is_finite());
+        let st = SpmmStats {
+            n_rows: 0,
+            batch: 0,
+            wall_seconds: 0.002,
+            threads: 1,
+            schedule: Schedule::CsrRowStatic,
+        };
+        assert!(st.per_request_ms().is_finite());
     }
 
     #[test]
@@ -663,15 +1128,78 @@ mod tests {
                 Schedule::CsrRowBalanced,
                 Schedule::CsrDynamic { chunk: 16 },
                 Schedule::Csr5Tiles { tile_nnz: 32 }, // remapped to rows
+                Schedule::SellChunks { c: 8, sigma: 32 }, // remapped too
             ] {
                 for nt in [1, 3, 4] {
                     let got = spmm_threaded(&csr, &xs, batch, sched, nt);
                     assert_eq!(got.batch, batch);
                     for (j, x) in vectors.iter().enumerate() {
                         let want = spmv_sequential(&csr, x).y;
-                        assert_close(&got.column(j), &want);
+                        // Shared accumulation discipline: the batched
+                        // kernel reproduces the reference bitwise.
+                        let col = got.column(j);
+                        for (i, (a, b)) in want.iter().zip(&col).enumerate()
+                        {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{sched:?} b{batch} nt{nt} col {j} \
+                                 row {i}: {a} vs {b}"
+                            );
+                        }
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_into_matches_allocating_path() {
+        let mut rng = Pcg32::new(0x5B37);
+        let pool = ExecPool::new(3);
+        let mut scratch = Scratch::new();
+        for batch in [1usize, 3, 8, 11] {
+            let csr = random_csr(&mut rng, 200, 5);
+            let vectors = random_vectors(&mut rng, 200, batch);
+            let refs: Vec<&[f64]> =
+                vectors.iter().map(|v| v.as_slice()).collect();
+            let xs = pack_vectors(&vectors);
+            let part =
+                partition(&csr, Schedule::CsrRowBalanced, 4);
+            let per_thread = match part {
+                Partition::Rows { per_thread } => per_thread,
+                _ => unreachable!(),
+            };
+            let alloc = spmm_partitioned(
+                Some(&pool),
+                &csr,
+                &xs,
+                batch,
+                &per_thread,
+                Schedule::CsrRowBalanced,
+            );
+            let stats = spmm_into(
+                Some(&pool),
+                &csr,
+                &refs,
+                &per_thread,
+                Schedule::CsrRowBalanced,
+                &mut scratch,
+            );
+            assert_eq!(stats.threads, alloc.threads);
+            assert_eq!(stats.batch, alloc.batch);
+            assert_eq!(stats.schedule, alloc.schedule);
+            assert_eq!(scratch.y_batch().len(), alloc.y.len());
+            for (i, (a, b)) in
+                alloc.y.iter().zip(scratch.y_batch()).enumerate()
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "element {i}");
+            }
+            for j in 0..batch {
+                assert_eq!(
+                    scratch.batch_column(200, batch, j),
+                    alloc.column(j)
+                );
             }
         }
     }
@@ -698,6 +1226,11 @@ mod tests {
         assert_eq!(
             effective_spmm_schedule(Schedule::Csr5Tiles { tile_nnz: 7 }),
             Schedule::CsrRowBalanced
+        );
+        assert_eq!(
+            effective_spmm_schedule(Schedule::SellChunks { c: 8, sigma: 64 }),
+            Schedule::CsrRowBalanced,
+            "SELL chunk plans remap for SpMM too"
         );
         assert_eq!(
             effective_spmm_schedule(Schedule::CsrDynamic { chunk: 4 }),
@@ -761,5 +1294,24 @@ mod tests {
         let xs = pack_vectors(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
         // x[i * batch + j]: element i of vector j.
         assert_eq!(xs, vec![1.0, 3.0, 2.0, 4.0]);
+        // The reusing variant overwrites whatever the buffer held.
+        let mut buf = vec![9.0; 17];
+        pack_vectors_into(&[vec![5.0], vec![6.0], vec![7.0]], &mut buf);
+        assert_eq!(buf, vec![5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "vector length mismatch")]
+    fn pack_vectors_panics_on_ragged_lengths() {
+        // The satellite pin: ragged inputs are a programmer error and
+        // must fail loudly (the serving engine validates lengths
+        // before packing, so traffic can never reach this).
+        let _ = pack_vectors(&[vec![1.0, 2.0], vec![3.0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "need at least one vector")]
+    fn pack_vectors_panics_on_empty_batch() {
+        let _ = pack_vectors::<Vec<f64>>(&[]);
     }
 }

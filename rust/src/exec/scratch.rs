@@ -1,0 +1,79 @@
+//! Reusable execution buffers — the zero-allocation serving arena.
+//!
+//! Every `*_into` executor entry point writes its outputs (and keeps
+//! its bookkeeping) in a [`Scratch`] instead of allocating fresh
+//! vectors per request. A serving engine owns a small pool of these
+//! (one is checked out per dispatch), so once traffic has warmed the
+//! buffers to the corpus's maximum sizes, the steady-state serve path
+//! performs **zero heap allocations per request** — the regression
+//! test in `tests/alloc.rs` pins this with a counting allocator.
+//!
+//! The "take-or-borrow" story: after an `*_into` call the caller can
+//! either *borrow* the output ([`Scratch::y`] / [`Scratch::y_batch`],
+//! the hot serving path — nothing is copied) or *take* it
+//! ([`Scratch::take_y`] / [`Scratch::take_y_batch`], the one-shot
+//! paths that must return an owning `ExecResult`; the scratch simply
+//! re-grows on its next use).
+
+use crate::sparse::csr5::TileCarry;
+
+/// Reusable buffers for one in-flight dispatch. All fields retain
+/// their capacity across requests.
+#[derive(Default)]
+pub struct Scratch {
+    /// Single-vector output of the last `spmv_*_into`.
+    pub(crate) y: Vec<f64>,
+    /// Interleaved packed input block of the last `spmm_into`
+    /// (`xs[i * batch + j]`).
+    pub(crate) packed: Vec<f64>,
+    /// Batched output of the last `spmm_into` (`y[r * batch + j]`).
+    pub(crate) yb: Vec<f64>,
+    /// Indices of partition slots that carry work in the current
+    /// dispatch (the executors' empty-slot filter, without the
+    /// per-request `Vec` it used to allocate).
+    pub(crate) active: Vec<usize>,
+    /// Per-slot CSR5 carry buffers; outer length grows to the widest
+    /// tile partition seen, inner vectors are cleared and reused.
+    pub(crate) carries: Vec<Vec<TileCarry>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow the single-vector output of the last `spmv_*_into`.
+    pub fn y(&self) -> &[f64] {
+        &self.y
+    }
+
+    /// Borrow the batched output of the last `spmm_into`
+    /// (vector-interleaved: element `(r, j)` at `r * batch + j`).
+    pub fn y_batch(&self) -> &[f64] {
+        &self.yb
+    }
+
+    /// Take ownership of the single-vector output (leaves an empty
+    /// buffer behind; the scratch re-grows on next use).
+    pub fn take_y(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.y)
+    }
+
+    /// Take ownership of the batched output.
+    pub fn take_y_batch(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.yb)
+    }
+
+    /// Extract output vector `j` of the last `spmm_into` as an owned
+    /// column (the compatibility path for callers that need
+    /// per-request vectors; the serving path borrows instead).
+    pub fn batch_column(
+        &self,
+        n_rows: usize,
+        batch: usize,
+        j: usize,
+    ) -> Vec<f64> {
+        assert!(j < batch);
+        (0..n_rows).map(|r| self.yb[r * batch + j]).collect()
+    }
+}

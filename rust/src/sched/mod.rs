@@ -8,6 +8,7 @@
 //! communication with dynamic scheduling is nonnegligible").
 
 use crate::sim::topology::Topology;
+use crate::sparse::sell::sell_perm;
 use crate::sparse::{Csr, Csr5};
 
 /// A work schedule for multi-threaded SpMV.
@@ -24,6 +25,11 @@ pub enum Schedule {
     /// (modeled deterministically; the runtime overhead is charged by
     /// the timing model per chunk).
     CsrDynamic { chunk: usize },
+    /// SELL-C-σ chunks (σ-window sorted, C-row padded, vectorizable
+    /// column-major layout), split by prefix bisection on chunk
+    /// nonzero counts — the SIMD-friendly load-balance format the
+    /// paper's related work recommends cross-platform.
+    SellChunks { c: usize, sigma: usize },
 }
 
 impl Schedule {
@@ -33,6 +39,7 @@ impl Schedule {
             Schedule::CsrRowBalanced => "csr-balanced".into(),
             Schedule::Csr5Tiles { tile_nnz } => format!("csr5-t{tile_nnz}"),
             Schedule::CsrDynamic { chunk } => format!("csr-dyn{chunk}"),
+            Schedule::SellChunks { c, sigma } => format!("sell-c{c}-s{sigma}"),
         }
     }
 }
@@ -44,6 +51,14 @@ pub enum Partition {
     Rows { per_thread: Vec<Vec<(usize, usize)>> },
     /// Per thread: one tile range `[t0, t1)` over a CSR5 tiling.
     Tiles { tile_nnz: usize, per_thread: Vec<(usize, usize)> },
+    /// Per thread: one chunk range `[k0, k1)` over a SELL-C-σ packing
+    /// (`c`/`sigma` as handed to `SellCSigma::from_csr`; chunk `k`
+    /// owns the rows `sell_perm(csr, c, sigma)[k*c .. (k+1)*c]`).
+    SellChunks {
+        c: usize,
+        sigma: usize,
+        per_thread: Vec<(usize, usize)>,
+    },
 }
 
 impl Partition {
@@ -68,6 +83,20 @@ impl Partition {
                     })
                     .collect()
             }
+            Partition::SellChunks { c, sigma, per_thread } => {
+                let perm = sell_perm(csr, *c, *sigma);
+                per_thread
+                    .iter()
+                    .map(|&(k0, k1)| {
+                        let lo = (k0 * c).min(csr.n_rows);
+                        let hi = (k1 * c).min(csr.n_rows);
+                        perm[lo..hi]
+                            .iter()
+                            .map(|&r| csr.row_nnz(r as usize))
+                            .sum()
+                    })
+                    .collect()
+            }
         }
     }
 
@@ -75,6 +104,7 @@ impl Partition {
         match self {
             Partition::Rows { per_thread } => per_thread.len(),
             Partition::Tiles { per_thread, .. } => per_thread.len(),
+            Partition::SellChunks { per_thread, .. } => per_thread.len(),
         }
     }
 
@@ -114,6 +144,24 @@ impl Partition {
                 }
                 if expect != n_tiles {
                     return Err(format!("covered {expect} of {n_tiles} tiles"));
+                }
+                Ok(())
+            }
+            Partition::SellChunks { c, per_thread, .. } => {
+                let n_chunks = csr.n_rows.div_ceil((*c).max(1));
+                let mut expect = 0usize;
+                for &(k0, k1) in per_thread {
+                    if k0 != expect || k1 < k0 {
+                        return Err(format!(
+                            "chunk ranges not contiguous at ({k0},{k1})"
+                        ));
+                    }
+                    expect = k1;
+                }
+                if expect != n_chunks {
+                    return Err(format!(
+                        "covered {expect} of {n_chunks} chunks"
+                    ));
                 }
                 Ok(())
             }
@@ -210,6 +258,45 @@ pub fn partition(csr: &Csr, schedule: Schedule, n_threads: usize) -> Partition {
                 ranges.sort_unstable();
             }
             Partition::Rows { per_thread }
+        }
+        Schedule::SellChunks { c, sigma } => {
+            // Contiguous chunk ranges balanced by chunk nonzero count
+            // (prefix bisection, like CsrRowBalanced over rows). The
+            // chunk -> row map is the σ-window permutation, shared
+            // with `SellCSigma::from_csr` via `sell_perm`.
+            let c = c.clamp(1, 64);
+            let perm = sell_perm(csr, c, sigma);
+            let n_chunks = csr.n_rows.div_ceil(c);
+            let mut cum = Vec::with_capacity(n_chunks + 1);
+            cum.push(0usize);
+            for k in 0..n_chunks {
+                let hi = ((k + 1) * c).min(csr.n_rows);
+                let nnz_k: usize = perm[k * c..hi]
+                    .iter()
+                    .map(|&r| csr.row_nnz(r as usize))
+                    .sum();
+                cum.push(cum[k] + nnz_k);
+            }
+            let total = *cum.last().unwrap();
+            let mut per_thread = Vec::with_capacity(n_threads);
+            let mut k = 0usize;
+            for t in 0..n_threads {
+                let target = total * (t + 1) / n_threads;
+                let k0 = k;
+                while k < n_chunks && cum[k + 1] <= target {
+                    k += 1;
+                }
+                // Keep every leading thread fed when prefixes are
+                // pathological (one huge chunk), like CsrRowBalanced.
+                if k == k0 && k < n_chunks && t < n_threads - 1 {
+                    k += 1;
+                }
+                if t == n_threads - 1 {
+                    k = n_chunks;
+                }
+                per_thread.push((k0, k));
+            }
+            Partition::SellChunks { c, sigma, per_thread }
         }
     }
 }
@@ -399,5 +486,54 @@ mod tests {
     fn schedule_names() {
         assert_eq!(Schedule::CsrRowStatic.name(), "csr-static");
         assert_eq!(Schedule::Csr5Tiles { tile_nnz: 64 }.name(), "csr5-t64");
+        assert_eq!(
+            Schedule::SellChunks { c: 8, sigma: 64 }.name(),
+            "sell-c8-s64"
+        );
     }
+
+    #[test]
+    fn sell_chunks_partition_covers_and_balances() {
+        let csr = skewed_matrix(256);
+        for nt in [1usize, 2, 4, 7] {
+            let p =
+                partition(&csr, Schedule::SellChunks { c: 8, sigma: 64 }, nt);
+            assert!(p.validate(&csr).is_ok(), "nt={nt}");
+            assert_eq!(p.n_threads(), nt);
+            let nnz = p.thread_nnz(&csr);
+            assert_eq!(nnz.iter().sum::<usize>(), csr.nnz());
+        }
+        // Chunk-nnz bisection beats the static row split on the
+        // skewed matrix (the dense block is one chunk, but the other
+        // threads still get even shares of the rest).
+        let p = partition(&csr, Schedule::SellChunks { c: 4, sigma: 256 }, 4);
+        let jv = job_var(&p.thread_nnz(&csr));
+        let pstat = partition(&csr, Schedule::CsrRowStatic, 4);
+        assert!(
+            jv <= job_var(&pstat.thread_nnz(&csr)),
+            "sell chunks must not be worse than static: {jv}"
+        );
+    }
+
+    #[test]
+    fn sell_chunks_edge_geometry() {
+        // More threads than chunks, empty matrices, pathological σ.
+        let tiny = Csr::identity(3);
+        let p =
+            partition(&tiny, Schedule::SellChunks { c: 8, sigma: 8 }, 6);
+        assert!(p.validate(&tiny).is_ok());
+        let empty = Csr::zero(0, 0);
+        let p = partition(
+            &empty,
+            Schedule::SellChunks { c: 8, sigma: usize::MAX },
+            4,
+        );
+        assert!(p.validate(&empty).is_ok());
+        assert_eq!(p.thread_nnz(&empty), vec![0, 0, 0, 0]);
+        let zeros = Csr::zero(10, 10);
+        let p = partition(&zeros, Schedule::SellChunks { c: 4, sigma: 4 }, 3);
+        assert!(p.validate(&zeros).is_ok());
+        assert_eq!(p.thread_nnz(&zeros).iter().sum::<usize>(), 0);
+    }
+
 }

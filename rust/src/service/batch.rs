@@ -212,8 +212,11 @@ pub(crate) fn drain_worker(
             }
         }
         let id = batch[0].matrix_id;
+        // Serving discards outputs, so the drain loop rides the
+        // engine's scratch-arena path (`serve_batch`) — no per-request
+        // output materialization, no per-dispatch result vectors.
         let xs: Vec<&[f64]> = batch.iter().map(|r| r.x.as_slice()).collect();
-        match engine.execute_batch(id, &xs) {
+        match engine.serve_batch(id, &xs) {
             Ok(_) => {
                 let done = Instant::now();
                 for r in &batch {
@@ -228,7 +231,7 @@ pub(crate) fn drain_worker(
                 // coalesced dispatch; isolate it by retrying singly so
                 // the valid co-batched requests still get answers.
                 for r in &batch {
-                    match engine.execute_batch(id, &[r.x.as_slice()]) {
+                    match engine.serve_batch(id, &[r.x.as_slice()]) {
                         Ok(_) => {
                             engine.telemetry.record_latency_ms(
                                 r.submitted.elapsed().as_secs_f64() * 1e3,

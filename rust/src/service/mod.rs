@@ -43,8 +43,8 @@ pub mod workload;
 
 pub use batch::{serve_queue, PushError, Request, RequestQueue};
 pub use plan::{
-    build_plan, build_plan_with, Plan, PlanCache, PlanConfig, PlannedFormat,
-    Planner,
+    build_plan, build_plan_shared, build_plan_with, Plan, PlanCache,
+    PlanConfig, PlannedFormat, Planner, SharedFormats,
 };
 pub use registry::{fingerprint, MatrixEntry, MatrixRegistry};
 pub use replay::{
@@ -58,28 +58,47 @@ pub use shard::{
 pub use telemetry::{ServeStats, ShardSnapshot, Telemetry};
 pub use workload::{Arrivals, GenRequest, Popularity, WorkloadSpec};
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, ensure, Result};
 
 use crate::autotune::{AutotuneConfig, Autotuner};
-use crate::exec::{self, ExecPool};
+use crate::exec::{ExecPool, Scratch};
 use crate::sched::Schedule;
 
-/// Outcome of one (possibly coalesced) execution.
+/// Outcome of one (possibly coalesced) execution, with materialized
+/// outputs — the compatibility path for callers that consume the
+/// result vectors. The serving drain loops use
+/// [`ServeEngine::serve_batch`] instead, which leaves outputs in the
+/// engine's scratch arena and allocates nothing per request.
 pub struct BatchOutcome {
     /// One output vector per request, in request order.
     pub ys: Vec<Vec<f64>>,
     pub wall_seconds: f64,
     pub plan_hit: bool,
     /// The *effective executed* schedule: batched dispatches against
-    /// tile (CSR5) plans report the `CsrRowBalanced` remap they
-    /// actually ran, not the plan's nominal tile schedule.
+    /// packed-format (CSR5/SELL) plans report the `CsrRowBalanced`
+    /// remap they actually ran, not the plan's nominal schedule.
     pub schedule: Schedule,
     pub threads: usize,
     /// When the engine autotunes: the tuner arm this dispatch ran, to
     /// feed back to [`Autotuner::observe`] from an external clock
     /// (the virtual-time replay).
+    pub arm: Option<usize>,
+}
+
+/// Metadata of one served dispatch whose outputs were written into
+/// (and left in) the engine's scratch arena — everything the serving
+/// loops and the replay cost model need, with zero per-request heap
+/// allocation on the warm path (`tests/alloc.rs` pins this).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchStats {
+    pub wall_seconds: f64,
+    pub plan_hit: bool,
+    /// Effective executed schedule (see [`BatchOutcome::schedule`]).
+    pub schedule: Schedule,
+    pub threads: usize,
+    /// Tuner arm of this dispatch (autotuned engines only).
     pub arm: Option<usize>,
 }
 
@@ -101,6 +120,11 @@ pub struct ServeEngine {
     pub telemetry: Telemetry,
     pool: Option<ExecPool>,
     tuner: Option<Autotuner>,
+    /// Checked-out-per-dispatch scratch arenas (output, packed-x, and
+    /// carry buffers). The pool grows to the engine's peak dispatch
+    /// concurrency and each arena's buffers grow to the corpus's
+    /// largest request — after that, serving allocates nothing.
+    scratch: Mutex<Vec<Scratch>>,
 }
 
 impl ServeEngine {
@@ -127,6 +151,7 @@ impl ServeEngine {
             telemetry: Telemetry::new(),
             pool: None,
             tuner: None,
+            scratch: Mutex::new(Vec::new()),
         }
     }
 
@@ -284,16 +309,26 @@ impl ServeEngine {
         (plan, plan_hit, arm)
     }
 
-    /// Execute a coalesced group of `y = A x` requests against one
-    /// registered matrix. `xs.len() == 1` takes the single-vector
-    /// path; larger groups run as one multi-vector SpMM. Records
-    /// batch telemetry; latency accounting is the caller's (it knows
-    /// arrival times).
-    pub fn execute_batch(
+    /// Check a scratch arena out of the engine's pool (a fresh one
+    /// when all are in flight — the pool grows to peak concurrency,
+    /// then stops allocating).
+    fn take_scratch(&self) -> Scratch {
+        self.scratch.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put_scratch(&self, scratch: Scratch) {
+        self.scratch.lock().unwrap().push(scratch);
+    }
+
+    /// The shared dispatch body: validate, resolve the plan, execute
+    /// into `scratch`, record telemetry, close the tuning loop.
+    /// Allocation-free once the arena and the plan cache are warm.
+    fn dispatch_into(
         &self,
         matrix_id: usize,
         xs: &[&[f64]],
-    ) -> Result<BatchOutcome> {
+        scratch: &mut Scratch,
+    ) -> Result<BatchStats> {
         ensure!(!xs.is_empty(), "empty batch");
         let entry = self
             .registry
@@ -310,24 +345,20 @@ impl ServeEngine {
         }
         let (plan, plan_hit, arm) = self.plan_for_dispatch(entry);
         let pool = self.pool.as_ref();
-        let (ys, wall_seconds, threads, per_request_ms) = if xs.len() == 1 {
-            let r = plan.execute_on(&entry.csr, xs[0], pool);
-            let ms = r.per_request_ms();
-            (vec![r.y], r.wall_seconds, r.threads, ms)
+        let batch = xs.len();
+        let (wall_seconds, threads, per_request_ms) = if batch == 1 {
+            let st = plan.execute_into(&entry.csr, xs[0], pool, scratch);
+            (st.wall_seconds, st.threads, st.per_request_ms())
         } else {
-            let packed = exec::pack_vectors(xs);
-            let r = plan.execute_batch_on(&entry.csr, &packed, xs.len(), pool);
-            let ms = r.per_request_ms();
-            let ys = (0..xs.len()).map(|j| r.column(j)).collect();
-            (ys, r.wall_seconds, r.threads, ms)
+            let st = plan.execute_batch_into(&entry.csr, xs, pool, scratch);
+            (st.wall_seconds, st.threads, st.per_request_ms())
         };
-        let schedule = plan.effective_schedule(xs.len());
         self.telemetry.record_batch(
             matrix_id,
-            xs.len(),
+            batch,
             wall_seconds,
-            2.0 * entry.csr.nnz() as f64 * xs.len() as f64,
-            &schedule.name(),
+            2.0 * entry.csr.nnz() as f64 * batch as f64,
+            plan.effective_schedule_name(batch),
         );
         // Close the loop on the engine's own clock (live serving).
         // External-clock tuners (virtual-time replay) are fed by the
@@ -335,13 +366,71 @@ impl ServeEngine {
         if let (Some(t), Some(a)) = (&self.tuner, arm) {
             if t.wall_clock() {
                 if let Some(promoted) =
-                    t.observe(entry.fingerprint, a, per_request_ms, xs.len())
+                    t.observe(entry.fingerprint, a, per_request_ms, batch)
                 {
                     self.plans.replace(entry.fingerprint, promoted);
                 }
             }
         }
-        Ok(BatchOutcome { ys, wall_seconds, plan_hit, schedule, threads, arm })
+        Ok(BatchStats {
+            wall_seconds,
+            plan_hit,
+            schedule: plan.effective_schedule(batch),
+            threads,
+            arm,
+        })
+    }
+
+    /// Serve a coalesced group of `y = A x` requests against one
+    /// registered matrix, discarding the outputs — the steady-state
+    /// serving path (queue drain loops, replay). Executes into a
+    /// reused scratch arena: **zero heap allocations per request**
+    /// once warm. `xs.len() == 1` takes the single-vector path;
+    /// larger groups run as one multi-vector SpMM. Records batch
+    /// telemetry; latency accounting is the caller's (it knows
+    /// arrival times).
+    pub fn serve_batch(
+        &self,
+        matrix_id: usize,
+        xs: &[&[f64]],
+    ) -> Result<BatchStats> {
+        let mut scratch = self.take_scratch();
+        let res = self.dispatch_into(matrix_id, xs, &mut scratch);
+        self.put_scratch(scratch);
+        res
+    }
+
+    /// [`ServeEngine::serve_batch`] with materialized outputs — for
+    /// callers that consume the result vectors (tests, one-shot CLI
+    /// paths). Pays one output clone per request on top of the
+    /// scratch execution.
+    pub fn execute_batch(
+        &self,
+        matrix_id: usize,
+        xs: &[&[f64]],
+    ) -> Result<BatchOutcome> {
+        let mut scratch = self.take_scratch();
+        let res = self.dispatch_into(matrix_id, xs, &mut scratch);
+        let out = res.map(|stats| {
+            let ys: Vec<Vec<f64>> = if xs.len() == 1 {
+                vec![scratch.y().to_vec()]
+            } else {
+                let n_rows = scratch.y_batch().len() / xs.len();
+                (0..xs.len())
+                    .map(|j| scratch.batch_column(n_rows, xs.len(), j))
+                    .collect()
+            };
+            BatchOutcome {
+                ys,
+                wall_seconds: stats.wall_seconds,
+                plan_hit: stats.plan_hit,
+                schedule: stats.schedule,
+                threads: stats.threads,
+                arm: stats.arm,
+            }
+        });
+        self.put_scratch(scratch);
+        out
     }
 }
 
@@ -416,6 +505,53 @@ mod tests {
         // Many small requests, zero thread growth: the reuse contract.
         assert_eq!(engine.pool().unwrap().n_workers(), workers);
         assert!(engine.pool().unwrap().jobs_dispatched() >= 25);
+    }
+
+    #[test]
+    fn serve_batch_matches_execute_batch_semantics() {
+        // The arena path must be observationally identical to the
+        // materializing path: same plan decisions, same telemetry,
+        // same error outcomes — it just skips the output vectors.
+        let mut rng = Pcg32::new(0xE0E7);
+        let csr = generators::random_uniform(180, 5, &mut rng);
+        let x: Vec<f64> = (0..180).map(|_| rng.gen_f64()).collect();
+        let mut reg = MatrixRegistry::new();
+        reg.register("m", csr);
+        let engine =
+            ServeEngine::pooled(reg, Planner::Heuristic, PlanConfig::default());
+        let first = engine.serve_batch(0, &[&x]).unwrap();
+        assert!(!first.plan_hit, "first dispatch builds the plan");
+        assert!(first.threads >= 1 && first.threads <= 4);
+        let again = engine.serve_batch(0, &[&x, &x, &x]).unwrap();
+        assert!(again.plan_hit);
+        assert_eq!(again.schedule, {
+            let (plan, _) = engine.plans.plan_for(
+                engine.registry.entry(0).fingerprint,
+                &engine.registry.entry(0).csr,
+            );
+            plan.effective_schedule(3)
+        });
+        let s = engine.telemetry.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 2);
+        // Bad traffic errors identically to execute_batch.
+        assert!(engine.serve_batch(9, &[&x]).is_err());
+        assert!(engine.serve_batch(0, &[&x[..5]]).is_err());
+        assert!(engine.serve_batch(0, &[]).is_err());
+        // And the materializing path still returns correct outputs
+        // after arena dispatches warmed the same scratch buffers.
+        let out = engine.execute_batch(0, &[&x, &x]).unwrap();
+        let entry = engine.registry.entry(0);
+        let mut want = vec![0.0; 180];
+        entry.csr.spmv(&x, &mut want);
+        for y in &out.ys {
+            for (i, (a, b)) in want.iter().zip(y).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                    "row {i}: {a} vs {b}"
+                );
+            }
+        }
     }
 
     #[test]

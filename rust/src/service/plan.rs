@@ -15,9 +15,12 @@ use crate::coordinator::format_select::{
     candidates, label_matrix, static_features, FormatSelector,
 };
 use crate::corpus::suite::SuiteSpec;
-use crate::exec::{self, ExecPool, ExecResult, SpmmResult};
+use crate::exec::{
+    self, ExecPool, ExecResult, ExecStats, Scratch, SpmmResult, SpmmStats,
+};
 use crate::sched::{partition, Partition, Schedule};
 use crate::sim::topology::Placement;
+use crate::sparse::sell::{normalize_sigma, SellCSigma};
 use crate::sparse::{Csr, Csr5};
 
 /// Materialized storage format of a plan — conversion paid at plan
@@ -28,6 +31,8 @@ pub enum PlannedFormat {
     Csr,
     /// Pre-converted CSR5 tiling (kept alongside the CSR).
     Csr5(Arc<Csr5>),
+    /// Pre-converted SELL-C-σ packing (kept alongside the CSR).
+    Sell(Arc<SellCSigma>),
 }
 
 /// One matrix's cached execution plan.
@@ -55,6 +60,12 @@ pub struct Plan {
     pub spmm_schedule: Schedule,
     /// Materialized row partition for the batched SpMM path.
     pub spmm_partition: Vec<Vec<(usize, usize)>>,
+    /// Pre-rendered `schedule.name()` — telemetry records per-request
+    /// schedule attribution on the hot path, which must not pay a
+    /// `format!` (or any allocation) per dispatch.
+    pub schedule_name: String,
+    /// Pre-rendered `spmm_schedule.name()`.
+    pub spmm_schedule_name: String,
 }
 
 impl Plan {
@@ -69,6 +80,16 @@ impl Plan {
             self.spmm_schedule
         } else {
             self.schedule
+        }
+    }
+
+    /// Pre-rendered name of [`Plan::effective_schedule`] — the
+    /// allocation-free telemetry key.
+    pub fn effective_schedule_name(&self, batch: usize) -> &str {
+        if batch > 1 {
+            &self.spmm_schedule_name
+        } else {
+            &self.schedule_name
         }
     }
 
@@ -87,7 +108,8 @@ impl Plan {
             Partition::Rows { per_thread } => {
                 exec::effective_row_slots(per_thread)
             }
-            Partition::Tiles { per_thread, .. } => {
+            Partition::Tiles { per_thread, .. }
+            | Partition::SellChunks { per_thread, .. } => {
                 exec::effective_tile_slots(per_thread)
             }
         }
@@ -100,25 +122,45 @@ impl Plan {
     }
 
     /// Execute a single-vector request on the given pool's resident
-    /// workers (scoped threads when `None`). Tile plans reuse the
-    /// pre-converted CSR5 and the memoized tile partition — a served
-    /// request never converts or re-partitions.
+    /// workers (scoped threads when `None`). Packed-format plans
+    /// reuse their pre-converted CSR5/SELL structure and the memoized
+    /// partition — a served request never converts or re-partitions.
     pub fn execute_on(
         &self,
         csr: &Csr,
         x: &[f64],
         pool: Option<&ExecPool>,
     ) -> ExecResult {
+        let mut scratch = Scratch::new();
+        self.execute_into(csr, x, pool, &mut scratch)
+            .into_result(&mut scratch)
+    }
+
+    /// Single-vector execution into a caller-provided scratch arena —
+    /// the zero-allocation serving path (the output stays in
+    /// `scratch.y()`; see `exec::Scratch` for the take-or-borrow
+    /// story).
+    pub fn execute_into(
+        &self,
+        csr: &Csr,
+        x: &[f64],
+        pool: Option<&ExecPool>,
+        scratch: &mut Scratch,
+    ) -> ExecStats {
         match (&self.format, &self.partition) {
             (PlannedFormat::Csr5(c5), Partition::Tiles { per_thread, .. }) => {
-                exec::spmv_csr5_on(pool, c5, x, per_thread)
+                exec::spmv_csr5_into(pool, c5, x, per_thread, scratch)
             }
+            (
+                PlannedFormat::Sell(s),
+                Partition::SellChunks { per_thread, .. },
+            ) => exec::spmv_sell_into(pool, s, x, per_thread, scratch),
             (_, Partition::Rows { per_thread }) => {
-                exec::spmv_rows_on(pool, csr, x, per_thread)
+                exec::spmv_rows_into(pool, csr, x, per_thread, scratch)
             }
-            (PlannedFormat::Csr, Partition::Tiles { .. }) => {
-                unreachable!("tile plans carry their pre-converted CSR5")
-            }
+            _ => unreachable!(
+                "packed-format plans carry their pre-converted structure"
+            ),
         }
     }
 
@@ -135,8 +177,8 @@ impl Plan {
     }
 
     /// Batched SpMM on the given pool, over the memoized row
-    /// partition (tile plans pre-remapped to `CsrRowBalanced` at
-    /// build time).
+    /// partition (packed-format plans pre-remapped to
+    /// `CsrRowBalanced` at build time).
     pub fn execute_batch_on(
         &self,
         csr: &Csr,
@@ -153,6 +195,27 @@ impl Plan {
             self.spmm_schedule,
         )
     }
+
+    /// Batched SpMM into a caller-provided scratch arena: packs the
+    /// request vectors into the reused interleave buffer and leaves
+    /// the outputs in `scratch.y_batch()` — the zero-allocation
+    /// serving path for coalesced dispatches.
+    pub fn execute_batch_into(
+        &self,
+        csr: &Csr,
+        vectors: &[&[f64]],
+        pool: Option<&ExecPool>,
+        scratch: &mut Scratch,
+    ) -> SpmmStats {
+        exec::spmm_into(
+            pool,
+            csr,
+            vectors,
+            &self.spmm_partition,
+            self.spmm_schedule,
+            scratch,
+        )
+    }
 }
 
 /// Plan-construction parameters shared by all matrices of a service.
@@ -164,6 +227,10 @@ pub struct PlanConfig {
     pub placement: Placement,
     /// Tile size used when a CSR5 schedule is chosen.
     pub csr5_tile_nnz: usize,
+    /// Chunk height (C) used when a SELL-C-σ schedule is chosen.
+    pub sell_c: usize,
+    /// Sorting window (σ) used when a SELL-C-σ schedule is chosen.
+    pub sell_sigma: usize,
     /// Plan-cache capacity in entries; 0 = unbounded. Bounded caches
     /// evict least-recently-used plans (evicted fingerprints rebuild
     /// on their next request).
@@ -176,6 +243,8 @@ impl Default for PlanConfig {
             n_threads: 4,
             placement: Placement::CoreGroupFirst,
             csr5_tile_nnz: 256,
+            sell_c: 8,
+            sell_sigma: 64,
             cache_cap: 0,
         }
     }
@@ -222,16 +291,26 @@ impl Planner {
     /// across runs (tested in `tests/properties.rs`). `features` is
     /// the `static_features` vector, computed once by the caller and
     /// shared with both decision modes.
-    fn choose(&self, features: &[f64], tile_nnz: usize) -> Schedule {
+    fn choose(&self, features: &[f64], cfg: &PlanConfig) -> Schedule {
+        let tile_nnz = cfg.csr5_tile_nnz;
         let picked = match self {
             Planner::Heuristic => {
                 // static_features order: [n_rows, nnz_avg, nnz_var,
                 // nnz_max_ratio, job_var_static, locality, x_miss_l1].
                 let job_var = features[4];
                 if job_var >= 0.45 {
+                    // Severe imbalance: only the nnz-even tiling
+                    // rescues it (paper Fig 7).
                     Schedule::Csr5Tiles { tile_nnz }
                 } else if job_var >= 0.30 {
-                    Schedule::CsrRowBalanced
+                    // Moderate imbalance: σ-window sorting evens the
+                    // chunk widths, and the chunk layout vectorizes —
+                    // SELL-C-σ is the related work's cross-platform
+                    // answer for exactly this band.
+                    Schedule::SellChunks {
+                        c: cfg.sell_c,
+                        sigma: cfg.sell_sigma,
+                    }
                 } else {
                     Schedule::CsrRowStatic
                 }
@@ -242,9 +321,13 @@ impl Planner {
                 cands[k.min(cands.len() - 1)]
             }
         };
-        // Normalize the tile size to the service-wide configuration.
+        // Normalize format parameters to the service-wide config.
         match picked {
             Schedule::Csr5Tiles { .. } => Schedule::Csr5Tiles { tile_nnz },
+            Schedule::SellChunks { .. } => Schedule::SellChunks {
+                c: cfg.sell_c.clamp(1, 64),
+                sigma: cfg.sell_sigma.max(1),
+            },
             s => s,
         }
     }
@@ -261,14 +344,44 @@ pub fn build_plan(planner: &Planner, cfg: &PlanConfig, csr: &Csr) -> Plan {
         (Schedule::CsrRowStatic, Vec::new())
     } else {
         let features = static_features(csr);
-        (planner.choose(&features, cfg.csr5_tile_nnz), features)
+        (planner.choose(&features, cfg), features)
     };
     build_plan_with(cfg, csr, schedule, cfg.n_threads, features)
 }
 
+/// Already-converted packed structures a plan build may share instead
+/// of reconverting — the autotuner's thread ladder pays one CSR5 (or
+/// SELL) conversion for the whole arm family.
+#[derive(Clone, Default)]
+pub struct SharedFormats {
+    pub csr5: Option<Arc<Csr5>>,
+    pub sell: Option<Arc<SellCSigma>>,
+}
+
+impl SharedFormats {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Extract the shareable conversion a plan already carries.
+    pub fn of(plan: &Plan) -> Self {
+        match &plan.format {
+            PlannedFormat::Csr5(c5) => SharedFormats {
+                csr5: Some(c5.clone()),
+                ..Self::default()
+            },
+            PlannedFormat::Sell(s) => SharedFormats {
+                sell: Some(s.clone()),
+                ..Self::default()
+            },
+            PlannedFormat::Csr => Self::default(),
+        }
+    }
+}
+
 /// Build a plan for an *explicit* (schedule, thread count) pair — the
 /// autotuner's candidate-variant constructor. Performs the same
-/// materialization as [`build_plan`] (CSR5 conversion, SpMV + SpMM
+/// materialization as [`build_plan`] (format conversion, SpMV + SpMM
 /// partitions) but skips the planner decision; `features` is the
 /// already-extracted static feature vector (may be empty). Degenerate
 /// all-zero matrices are normalized to the CSR static schedule — no
@@ -280,13 +393,18 @@ pub fn build_plan_with(
     n_threads: usize,
     features: Vec<f64>,
 ) -> Plan {
-    build_plan_with_csr5(cfg, csr, schedule, n_threads, features, None)
+    build_plan_shared(
+        cfg,
+        csr,
+        schedule,
+        n_threads,
+        features,
+        SharedFormats::none(),
+    )
 }
 
 /// [`build_plan_with`] reusing an already-converted CSR5 structure
-/// when the schedule needs tiles and the tile size matches — the
-/// autotuner's thread ladder shares one conversion across all its
-/// CSR5 arms instead of converting per arm.
+/// (compatibility shim; see [`build_plan_shared`]).
 pub fn build_plan_with_csr5(
     cfg: &PlanConfig,
     csr: &Csr,
@@ -295,14 +413,55 @@ pub fn build_plan_with_csr5(
     features: Vec<f64>,
     shared_csr5: Option<Arc<Csr5>>,
 ) -> Plan {
-    let schedule =
-        if csr.nnz() == 0 { Schedule::CsrRowStatic } else { schedule };
+    build_plan_shared(
+        cfg,
+        csr,
+        schedule,
+        n_threads,
+        features,
+        SharedFormats { csr5: shared_csr5, sell: None },
+    )
+}
+
+/// [`build_plan_with`] reusing already-converted packed structures
+/// when the schedule matches them (tile size for CSR5; chunk height
+/// and normalized σ for SELL) — the autotuner's ladder shares one
+/// conversion across all arms of a format family instead of
+/// converting per arm.
+pub fn build_plan_shared(
+    cfg: &PlanConfig,
+    csr: &Csr,
+    schedule: Schedule,
+    n_threads: usize,
+    features: Vec<f64>,
+    shared: SharedFormats,
+) -> Plan {
+    let schedule = if csr.nnz() == 0 {
+        Schedule::CsrRowStatic
+    } else {
+        match schedule {
+            // Sanitize degenerate chunk parameters up front so the
+            // format, the partition, and the schedule name agree.
+            Schedule::SellChunks { c, sigma } => Schedule::SellChunks {
+                c: c.clamp(1, 64),
+                sigma: sigma.max(1),
+            },
+            s => s,
+        }
+    };
     let n_threads = n_threads.max(1);
     let format = match schedule {
         Schedule::Csr5Tiles { tile_nnz } => {
-            PlannedFormat::Csr5(match shared_csr5 {
+            PlannedFormat::Csr5(match shared.csr5 {
                 Some(c5) if c5.tile_nnz == tile_nnz => c5,
                 _ => Arc::new(Csr5::from_csr(csr, tile_nnz)),
+            })
+        }
+        Schedule::SellChunks { c, sigma } => {
+            let want_sigma = normalize_sigma(c, sigma, csr.n_rows);
+            PlannedFormat::Sell(match shared.sell {
+                Some(s) if s.c == c && s.sigma == want_sigma => s,
+                _ => Arc::new(SellCSigma::from_csr(csr, c, sigma)),
             })
         }
         _ => PlannedFormat::Csr,
@@ -315,9 +474,7 @@ pub fn build_plan_with_csr5(
         (Partition::Rows { per_thread }, true) => per_thread.clone(),
         _ => match partition(csr, spmm_schedule, n_threads) {
             Partition::Rows { per_thread } => per_thread,
-            Partition::Tiles { .. } => {
-                unreachable!("effective SpMM schedules are row-space")
-            }
+            _ => unreachable!("effective SpMM schedules are row-space"),
         },
     };
     Plan {
@@ -329,6 +486,8 @@ pub fn build_plan_with_csr5(
         partition: part,
         spmm_schedule,
         spmm_partition,
+        schedule_name: schedule.name(),
+        spmm_schedule_name: spmm_schedule.name(),
     }
 }
 
@@ -571,6 +730,102 @@ mod tests {
         assert!(matches!(plan.format, PlannedFormat::Csr));
     }
 
+    /// 4-thread static split [64, 64, 64, 128] -> job_var = 0.4: the
+    /// moderate-imbalance band.
+    fn moderately_imbalanced() -> Csr {
+        let mut coo = crate::sparse::Coo::new(256, 256);
+        for r in 0..256 {
+            coo.push(r, r, 1.0);
+            if r >= 192 {
+                coo.push(r, (r + 1) % 256, 1.0);
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn heuristic_picks_sell_for_moderate_imbalance() {
+        let csr = moderately_imbalanced();
+        let cfg = PlanConfig::default();
+        let plan = build_plan(&Planner::Heuristic, &cfg, &csr);
+        assert!(
+            matches!(plan.schedule, Schedule::SellChunks { .. }),
+            "job_var 0.4 must land in the SELL band: {:?}",
+            plan.schedule
+        );
+        assert!(matches!(plan.format, PlannedFormat::Sell(_)));
+        assert!(matches!(plan.partition, Partition::SellChunks { .. }));
+        assert_eq!(
+            plan.spmm_schedule,
+            Schedule::CsrRowBalanced,
+            "batches remap to the balanced row schedule"
+        );
+        assert_eq!(plan.schedule_name, plan.schedule.name());
+        assert_eq!(plan.effective_schedule_name(1), plan.schedule_name);
+        assert_eq!(plan.effective_schedule_name(4), "csr-balanced");
+        // And it computes the right answer, bitwise vs the reference.
+        let x: Vec<f64> = (0..256).map(|i| (i % 13) as f64 - 6.0).collect();
+        let mut want = vec![0.0; 256];
+        csr.spmv(&x, &mut want);
+        let got = plan.execute(&csr, &x);
+        for (i, (a, b)) in want.iter().zip(&got.y).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "row {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn variant_builder_shares_the_sell_conversion() {
+        let csr = moderately_imbalanced();
+        let cfg = PlanConfig::default();
+        let static_plan = build_plan(&Planner::Heuristic, &cfg, &csr);
+        let PlannedFormat::Sell(s) = &static_plan.format else {
+            panic!("setup: expected a SELL plan")
+        };
+        // Same (c, σ): the conversion is shared, not redone.
+        let shared = build_plan_shared(
+            &cfg,
+            &csr,
+            static_plan.schedule,
+            2,
+            Vec::new(),
+            SharedFormats::of(&static_plan),
+        );
+        match &shared.format {
+            PlannedFormat::Sell(got) => assert!(
+                Arc::ptr_eq(got, s),
+                "thread-ladder variants must reuse the SELL structure"
+            ),
+            _ => panic!("SELL schedule lost its format"),
+        }
+        // A different chunk height falls back to a fresh conversion.
+        let fresh = build_plan_shared(
+            &cfg,
+            &csr,
+            Schedule::SellChunks { c: 4, sigma: 64 },
+            2,
+            Vec::new(),
+            SharedFormats::of(&static_plan),
+        );
+        match &fresh.format {
+            PlannedFormat::Sell(got) => assert!(!Arc::ptr_eq(got, s)),
+            _ => panic!("SELL schedule lost its format"),
+        }
+        // Degenerate chunk parameters are sanitized, not asserted on.
+        let weird = build_plan_shared(
+            &cfg,
+            &csr,
+            Schedule::SellChunks { c: 0, sigma: 0 },
+            2,
+            Vec::new(),
+            SharedFormats::none(),
+        );
+        assert!(
+            matches!(weird.schedule, Schedule::SellChunks { c: 1, sigma: 1 }),
+            "{:?}",
+            weird.schedule
+        );
+    }
+
     #[test]
     fn plan_execution_matches_reference() {
         let mut rng = Pcg32::new(0x9A17);
@@ -619,6 +874,7 @@ mod tests {
         for csr in [
             NamedMatrix::Exdata1.generate(), // tile plan
             generators::random_uniform(400, 6, &mut rng), // row plan
+            moderately_imbalanced(),         // SELL chunk plan
         ] {
             let plan =
                 build_plan(&Planner::Heuristic, &PlanConfig::default(), &csr);
@@ -850,6 +1106,7 @@ mod tests {
             Schedule::CsrRowStatic,
             Schedule::CsrRowBalanced,
             Schedule::Csr5Tiles { tile_nnz: 64 },
+            Schedule::SellChunks { c: 8, sigma: 32 },
         ] {
             for nt in [1usize, 2, 6] {
                 let plan =

@@ -253,9 +253,11 @@ impl Dispatcher<'_> {
                 .entry(id)
                 .or_insert_with(|| vec![1.0; n_cols]);
             let xs: Vec<&[f64]> = (0..size).map(|_| x.as_slice()).collect();
+            // Replay discards outputs too: ride the scratch-arena
+            // serve path, same as the live drain loop.
             let out = self
                 .engine
-                .execute_batch(id, &xs)
+                .serve_batch(id, &xs)
                 .expect("replay serves only registered ids");
             Dispatched { threads: out.threads, nnz, fingerprint, arm: out.arm }
         } else {
@@ -269,7 +271,7 @@ impl Dispatcher<'_> {
                 size,
                 0.0,
                 0.0,
-                &plan.effective_schedule(size).name(),
+                plan.effective_schedule_name(size),
             );
             // Effective (not configured) parallelism, the same count
             // the executed path reports — execute=true and model-only

@@ -142,8 +142,15 @@ impl ServeStats {
         }
         *self.batch_hist.entry(size).or_insert(0) += 1;
         *self.per_matrix.entry(matrix_id).or_insert(0) += size as u64;
-        *self.per_schedule.entry(schedule.to_string()).or_insert(0) +=
-            size as u64;
+        // Look up before inserting: `entry(schedule.to_string())`
+        // would allocate the key String on *every* dispatch; the warm
+        // serving path must only allocate on first sight of a name.
+        match self.per_schedule.get_mut(schedule) {
+            Some(count) => *count += size as u64,
+            None => {
+                self.per_schedule.insert(schedule.to_string(), size as u64);
+            }
+        }
         self.exec_seconds += wall_seconds;
         self.flops += flops;
     }

@@ -1,5 +1,69 @@
 //! CSR — the paper's primary storage format (§2.2, Table 1).
 
+/// Fused (or fused-looking) multiply-add used by every SpMV/SpMM
+/// kernel in the crate. On targets with hardware FMA (aarch64, or
+/// x86-64 built with `+fma`) this is one `f64::mul_add`; elsewhere it
+/// falls back to `acc + a * b` — a software-emulated correctly-rounded
+/// fma would be ~50x slower than the kernel it sits in. Either way the
+/// choice is uniform across *all* kernels of one build, which is what
+/// the bitwise-equivalence property tests pin (they compare kernels
+/// against each other, never against a cross-platform constant).
+#[inline(always)]
+pub fn fmadd(a: f64, b: f64, acc: f64) -> f64 {
+    #[cfg(any(target_feature = "fma", target_arch = "aarch64"))]
+    {
+        a.mul_add(b, acc)
+    }
+    #[cfg(not(any(target_feature = "fma", target_arch = "aarch64")))]
+    {
+        acc + a * b
+    }
+}
+
+/// The shared row-dot accumulation discipline: element `k` of a row
+/// lands in accumulator `k % 4`, and the final sum is
+/// `(a0 + a1) + (a2 + a3)`. Every row-space kernel (sequential CSR,
+/// threaded CSR, SELL-C-σ, batched SpMM) follows this exact order, so
+/// their outputs are bitwise identical by construction — zero-padding
+/// appended to a row (SELL chunks) contributes exact no-ops
+/// (`fmadd(0.0, x, acc) == acc` for finite `x` and the non-negative
+/// zero accumulators this chain produces).
+#[inline]
+pub fn row_dot(cols: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    debug_assert_eq!(cols.len(), vals.len());
+    let n = vals.len();
+    let mut a = [0.0f64; 4];
+    let main = n & !3;
+    let mut k = 0;
+    while k < main {
+        a[0] = fmadd(vals[k], x[cols[k] as usize], a[0]);
+        a[1] = fmadd(vals[k + 1], x[cols[k + 1] as usize], a[1]);
+        a[2] = fmadd(vals[k + 2], x[cols[k + 2] as usize], a[2]);
+        a[3] = fmadd(vals[k + 3], x[cols[k + 3] as usize], a[3]);
+        k += 4;
+    }
+    let mut e = 0;
+    while k < n {
+        a[e] = fmadd(vals[k], x[cols[k] as usize], a[e]);
+        e += 1;
+        k += 1;
+    }
+    (a[0] + a[1]) + (a[2] + a[3])
+}
+
+/// The pre-PR-5 scalar row kernel (single accumulator, plain
+/// multiply-add), kept as the microbench baseline of the `kernels`
+/// bench section. Not bitwise-comparable to [`row_dot`] — different
+/// association order.
+#[inline]
+pub fn row_dot_scalar(cols: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (c, v) in cols.iter().zip(vals) {
+        acc += v * x[*c as usize];
+    }
+    acc
+}
+
 /// Compressed Sparse Row matrix with f64 values (the paper measures
 /// double-precision Gflops on FT-2000+).
 #[derive(Clone, Debug, PartialEq)]
@@ -92,29 +156,23 @@ impl Csr {
     }
 
     /// Sequential SpMV: y = A x. The reference semantics for every
-    /// other executor in the crate.
+    /// other executor in the crate — each row is reduced by the shared
+    /// 4-accumulator [`row_dot`] kernel, so row-space threaded
+    /// executions (and SELL-C-σ) reproduce it bit for bit.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n_cols);
         assert_eq!(y.len(), self.n_rows);
-        for r in 0..self.n_rows {
-            let mut acc = 0.0;
-            for i in self.ptr[r]..self.ptr[r + 1] {
-                acc += self.data[i] * x[self.indices[i] as usize];
-            }
-            y[r] = acc;
-        }
+        self.spmv_rows(0, self.n_rows, x, y);
     }
 
     /// SpMV over a row range [r0, r1) — the unit of work the static
-    /// OpenMP schedule assigns to a thread.
+    /// OpenMP schedule assigns to a thread (4x-unrolled `fmadd` inner
+    /// loop; see [`row_dot`]).
     pub fn spmv_rows(&self, r0: usize, r1: usize, x: &[f64], y: &mut [f64]) {
         debug_assert!(r1 <= self.n_rows && y.len() == self.n_rows);
         for r in r0..r1 {
-            let mut acc = 0.0;
-            for i in self.ptr[r]..self.ptr[r + 1] {
-                acc += self.data[i] * x[self.indices[i] as usize];
-            }
-            y[r] = acc;
+            let (cols, vals) = self.row(r);
+            y[r] = row_dot(cols, vals, x);
         }
     }
 
@@ -296,5 +354,66 @@ mod tests {
     #[test]
     fn working_set_positive() {
         assert!(paper_matrix().working_set_bytes() > 0);
+    }
+
+    #[test]
+    fn row_dot_matches_scalar_and_handles_remainders() {
+        // Lengths 0..=9 straddle the 4x unroll boundary in every way.
+        let mut rng = crate::util::rng::Pcg32::new(0xD07);
+        let x: Vec<f64> = (0..64).map(|_| rng.gen_f64() - 0.5).collect();
+        for len in 0..=9usize {
+            let cols: Vec<u32> =
+                (0..len).map(|_| rng.gen_range(64) as u32).collect();
+            let vals: Vec<f64> =
+                (0..len).map(|_| rng.gen_f64() - 0.5).collect();
+            let unrolled = row_dot(&cols, &vals, &x);
+            let scalar = row_dot_scalar(&cols, &vals, &x);
+            assert!(
+                (unrolled - scalar).abs() < 1e-12 * (1.0 + scalar.abs()),
+                "len {len}: {unrolled} vs {scalar}"
+            );
+        }
+        assert_eq!(row_dot(&[], &[], &x), 0.0);
+    }
+
+    #[test]
+    fn row_dot_ignores_appended_zero_padding_bitwise() {
+        // The SELL padding contract: zero-valued tail elements (col 0)
+        // must be exact no-ops under the shared accumulation order.
+        let mut rng = crate::util::rng::Pcg32::new(0xD08);
+        let x: Vec<f64> = (0..32).map(|_| rng.gen_f64() - 0.5).collect();
+        for len in 1..=7usize {
+            let cols: Vec<u32> =
+                (0..len).map(|_| rng.gen_range(32) as u32).collect();
+            let vals: Vec<f64> =
+                (0..len).map(|_| rng.gen_f64() - 0.5).collect();
+            let base = row_dot(&cols, &vals, &x);
+            for pad in 1..=5usize {
+                let mut pc = cols.clone();
+                let mut pv = vals.clone();
+                for _ in 0..pad {
+                    pc.push(0);
+                    pv.push(0.0);
+                }
+                let padded = row_dot(&pc, &pv, &x);
+                assert_eq!(
+                    padded.to_bits(),
+                    base.to_bits(),
+                    "len {len} pad {pad}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_rows_use_the_shared_row_kernel_bitwise() {
+        let a = paper_matrix();
+        let x = [0.3, -1.7, 2.9, 0.11];
+        let mut y = [0.0; 4];
+        a.spmv(&x, &mut y);
+        for r in 0..4 {
+            let (cols, vals) = a.row(r);
+            assert_eq!(y[r].to_bits(), row_dot(cols, vals, &x).to_bits());
+        }
     }
 }

@@ -127,14 +127,31 @@ impl Csr5 {
         x: &[f64],
         y: &mut [f64],
     ) -> Vec<TileCarry> {
+        let mut carries = Vec::new();
+        self.spmv_tiles_into(t0, t1, x, y, &mut carries);
+        carries
+    }
+
+    /// [`Csr5::spmv_tiles`] appending carries into a caller-provided
+    /// buffer — the zero-allocation serving path reuses one carry
+    /// `Vec` per executor slot across requests (`exec::Scratch`). The
+    /// buffer is cleared first.
+    pub fn spmv_tiles_into(
+        &self,
+        t0: usize,
+        t1: usize,
+        x: &[f64],
+        y: &mut [f64],
+        carries: &mut Vec<TileCarry>,
+    ) {
         assert_eq!(x.len(), self.n_cols);
         assert_eq!(y.len(), self.n_rows);
+        carries.clear();
         let nnz = self.nnz();
         let begin = (t0 * self.tile_nnz).min(nnz);
         let end = (t1 * self.tile_nnz).min(nnz);
-        let mut carries = Vec::new();
         if begin >= end {
-            return carries;
+            return;
         }
         let mut row = self.tile_ptr[t0] as usize;
         let mut acc = 0.0;
@@ -169,7 +186,6 @@ impl Csr5 {
         // Trailing segment: the last row may continue into the next
         // range, so it is always a carry.
         carries.push(TileCarry { row, value: acc });
-        carries
     }
 
     /// Sequential SpMV (single range covering all tiles + merge).

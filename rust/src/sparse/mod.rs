@@ -17,7 +17,7 @@ pub mod mm;
 pub mod sell;
 
 pub use coo::Coo;
-pub use csr::Csr;
+pub use csr::{fmadd, row_dot, row_dot_scalar, Csr};
 pub use csr5::Csr5;
 pub use dia::Dia;
 pub use ell::Ell;

@@ -4,12 +4,47 @@
 //! Rows are sorted by length inside windows of σ rows, then packed
 //! into chunks of C rows padded to the chunk-local maximum. Compared
 //! with ELL, padding waste is bounded by the σ-window's length spread;
-//! compared with CSR, the chunk layout is SIMD/vector friendly. The
-//! paper's related work positions it as the cross-platform
-//! load-balance format; we include it as a baseline the
-//! `format_select` pipeline can choose.
+//! compared with CSR, the chunk layout is SIMD/vector friendly: the
+//! SpMV inner loop walks one *column* of a chunk at a time, touching C
+//! consecutive slots — a unit-stride vectorizable sweep.
+//!
+//! The chunk kernel follows the crate-wide accumulation discipline
+//! (`sparse::csr::row_dot`): element `j` of a row lands in accumulator
+//! `j % 4`, reduced as `(a0 + a1) + (a2 + a3)`. Padding slots hold
+//! value 0.0 against the row's own last column (column 0 for empty
+//! rows), so their `fmadd` contribution is an exact no-op for finite
+//! inputs and a SELL SpMV is **bitwise identical** to the CSR
+//! reference — the property `tests/properties.rs` pins. (Non-finite
+//! inputs poison only rows that genuinely read the offending element,
+//! matching CSR semantics — except all-empty rows packed into a
+//! nonempty chunk, whose padding reads column 0.)
 
-use super::csr::Csr;
+use super::csr::{fmadd, Csr};
+
+/// Round σ to the domain `from_csr` actually sorts over: at least one
+/// chunk (`c`), a whole number of chunks, and no larger than the
+/// matrix itself — a pathological `σ >> n_rows` (including values near
+/// `usize::MAX` that would overflow the naive `div_ceil(σ, c) * c`
+/// round-up) clamps to one whole-matrix window.
+pub fn normalize_sigma(c: usize, sigma: usize, n_rows: usize) -> usize {
+    let c = c.max(1);
+    let whole = n_rows.div_ceil(c).max(1).saturating_mul(c);
+    sigma.clamp(c, whole).div_ceil(c) * c
+}
+
+/// The σ-window row permutation SELL-C-σ packs under: row ids sorted
+/// by descending length within each window of `sigma` rows. `sigma`
+/// is normalized via [`normalize_sigma`]. Shared by `from_csr` and by
+/// `sched::partition`'s chunk balancing, so the two never disagree on
+/// which rows a chunk holds.
+pub fn sell_perm(csr: &Csr, c: usize, sigma: usize) -> Vec<u32> {
+    let sigma = normalize_sigma(c, sigma, csr.n_rows);
+    let mut perm: Vec<u32> = (0..csr.n_rows as u32).collect();
+    for w in perm.chunks_mut(sigma) {
+        w.sort_by_key(|&r| std::cmp::Reverse(csr.row_nnz(r as usize)));
+    }
+    perm
+}
 
 #[derive(Clone, Debug)]
 pub struct SellCSigma {
@@ -17,7 +52,7 @@ pub struct SellCSigma {
     pub n_cols: usize,
     /// Chunk height (C) — rows per chunk.
     pub c: usize,
-    /// Sorting window (σ) — must be a multiple of C.
+    /// Sorting window (σ) — a multiple of C, at most one whole matrix.
     pub sigma: usize,
     /// Width (padded row length) of each chunk.
     pub chunk_len: Vec<u32>,
@@ -34,16 +69,13 @@ pub struct SellCSigma {
 
 impl SellCSigma {
     /// Build from CSR with chunk height `c` and sorting window
-    /// `sigma` (rounded up to a multiple of `c`).
+    /// `sigma` (normalized: rounded up to a multiple of `c`, clamped
+    /// to the matrix height — see [`normalize_sigma`]).
     pub fn from_csr(csr: &Csr, c: usize, sigma: usize) -> SellCSigma {
         assert!(c > 0 && c <= 64, "chunk height C must be in 1..=64");
-        let sigma = sigma.max(c).div_ceil(c) * c;
+        let sigma = normalize_sigma(c, sigma, csr.n_rows);
         let n = csr.n_rows;
-        // Sort rows by descending length within each sigma window.
-        let mut perm: Vec<u32> = (0..n as u32).collect();
-        for w in perm.chunks_mut(sigma) {
-            w.sort_by_key(|&r| std::cmp::Reverse(csr.row_nnz(r as usize)));
-        }
+        let perm = sell_perm(csr, c, sigma);
         let n_chunks = n.div_ceil(c);
         let mut chunk_len = Vec::with_capacity(n_chunks);
         let mut chunk_ptr = Vec::with_capacity(n_chunks + 1);
@@ -75,7 +107,16 @@ impl SellCSigma {
                     cols[base + j * c + r] = cc;
                     vals[base + j * c + r] = vv;
                 }
-                let _ = width;
+                // Padding slots point at the row's own last column
+                // (0 for empty rows): a non-finite x element then
+                // can't poison a row that never references it —
+                // `fmadd(0.0, x[c], acc)` only goes NaN for an x the
+                // row reads anyway. Values stay 0.0, so for finite
+                // inputs padding remains an exact no-op.
+                let pad_col = rc.last().copied().unwrap_or(0);
+                for j in rc.len()..width {
+                    cols[base + j * c + r] = pad_col;
+                }
             }
         }
         SellCSigma {
@@ -112,28 +153,15 @@ impl SellCSigma {
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n_cols);
         assert_eq!(y.len(), self.n_rows);
-        let c = self.c;
-        for k in 0..self.n_chunks() {
-            let base = self.chunk_ptr[k];
-            let width = self.chunk_len[k] as usize;
-            let rows_in_chunk = c.min(self.n_rows - k * c);
-            // Column-major walk: the vectorizable SELL access pattern.
-            let mut acc = [0.0f64; 64];
-            let acc = &mut acc[..rows_in_chunk];
-            for j in 0..width {
-                let col_base = base + j * c;
-                for (r, a) in acc.iter_mut().enumerate() {
-                    let idx = col_base + r;
-                    *a += self.vals[idx] * x[self.cols[idx] as usize];
-                }
-            }
-            for (r, &a) in acc.iter().enumerate() {
-                y[self.perm[k * c + r] as usize] = a;
-            }
-        }
+        self.spmv_chunks(0, self.n_chunks(), x, y);
     }
 
-    /// SpMV over a chunk range (the threaded unit of work).
+    /// SpMV over a chunk range (the threaded unit of work): for each
+    /// chunk, four unit-stride accumulator sweeps walk the chunk
+    /// column-major (the vectorizable SELL access pattern), then the
+    /// per-row sums scatter through `perm` into `y`. Rows covered by
+    /// `[k0, k1)` are written exactly once; other rows are untouched,
+    /// so disjoint chunk ranges compose across threads.
     pub fn spmv_chunks(
         &self,
         k0: usize,
@@ -142,17 +170,49 @@ impl SellCSigma {
         y: &mut [f64],
     ) {
         let c = self.c;
+        // One accumulator block for the whole range; only the
+        // `lane[..rows]` prefix each chunk actually uses is re-zeroed
+        // (a full 4x64 clear per chunk would rival the fmadd work on
+        // sparse rows).
+        let mut acc = [[0.0f64; 64]; 4];
         for k in k0..k1.min(self.n_chunks()) {
             let base = self.chunk_ptr[k];
             let width = self.chunk_len[k] as usize;
-            let rows_in_chunk = c.min(self.n_rows - k * c);
-            for r in 0..rows_in_chunk {
-                let mut a = 0.0;
-                for j in 0..width {
-                    let idx = base + j * c + r;
-                    a += self.vals[idx] * x[self.cols[idx] as usize];
+            let rows = c.min(self.n_rows - k * c);
+            for lane in acc.iter_mut() {
+                lane[..rows].fill(0.0);
+            }
+            // Accumulator j % 4, exactly like `row_dot`; padding slots
+            // contribute exact no-ops (fmadd(0.0, x[0], acc) == acc).
+            let main = width & !3;
+            let mut j = 0;
+            while j < main {
+                for (e, lane) in acc.iter_mut().enumerate() {
+                    let col = base + (j + e) * c;
+                    for (r, a) in lane[..rows].iter_mut().enumerate() {
+                        let i = col + r;
+                        *a = fmadd(
+                            self.vals[i],
+                            x[self.cols[i] as usize],
+                            *a,
+                        );
+                    }
                 }
-                y[self.perm[k * c + r] as usize] = a;
+                j += 4;
+            }
+            let mut e = 0;
+            while j < width {
+                let col = base + j * c;
+                for (r, a) in acc[e][..rows].iter_mut().enumerate() {
+                    let i = col + r;
+                    *a = fmadd(self.vals[i], x[self.cols[i] as usize], *a);
+                }
+                e += 1;
+                j += 1;
+            }
+            for r in 0..rows {
+                y[self.perm[k * c + r] as usize] =
+                    (acc[0][r] + acc[1][r]) + (acc[2][r] + acc[3][r]);
             }
         }
     }
@@ -187,8 +247,9 @@ mod tests {
             let mut got = vec![0.0; 300];
             s.spmv(&x, &mut got);
             for (i, (a, b)) in want.iter().zip(&got).enumerate() {
-                assert!(
-                    (a - b).abs() < 1e-9,
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
                     "C={c} sigma={sigma} row {i}: {a} vs {b}"
                 );
             }
@@ -243,6 +304,60 @@ mod tests {
     }
 
     #[test]
+    fn perm_roundtrip_recovers_row_identity() {
+        // Scattering through perm then gathering through its inverse
+        // is the identity — the property the chunk kernel's
+        // `y[perm[slot]] = sum(slot)` write relies on.
+        let mut rng = Pcg32::new(0x9E12);
+        let csr = random_csr(&mut rng, 97, 7);
+        let s = SellCSigma::from_csr(&csr, 8, 24);
+        assert_eq!(s.perm, sell_perm(&csr, 8, 24), "from_csr shares sell_perm");
+        let mut inv = vec![u32::MAX; 97];
+        for (slot, &r) in s.perm.iter().enumerate() {
+            inv[r as usize] = slot as u32;
+        }
+        for (slot, &r) in s.perm.iter().enumerate() {
+            assert_eq!(inv[r as usize] as usize, slot);
+        }
+        // Each slot's packed row really is the CSR row it claims.
+        for (slot, &r) in s.perm.iter().enumerate() {
+            let (k, p) = (slot / s.c, slot % s.c);
+            let (rc, rv) = csr.row(r as usize);
+            let base = s.chunk_ptr[k];
+            for (j, (&cc, &vv)) in rc.iter().zip(rv).enumerate() {
+                assert_eq!(s.cols[base + j * s.c + p], cc);
+                assert_eq!(s.vals[base + j * s.c + p], vv);
+            }
+        }
+    }
+
+    #[test]
+    fn pathological_sigma_is_clamped() {
+        // σ >> n_rows (including near-overflow values) must clamp to
+        // one whole-matrix window instead of overflowing the round-up.
+        let mut rng = Pcg32::new(7);
+        let csr = random_csr(&mut rng, 50, 5);
+        let x: Vec<f64> = (0..50).map(|_| rng.gen_f64()).collect();
+        let mut want = vec![0.0; 50];
+        csr.spmv(&x, &mut want);
+        for sigma in [usize::MAX, usize::MAX - 3, 1_000_000, 51, 0] {
+            let s = SellCSigma::from_csr(&csr, 8, sigma);
+            assert!(
+                s.sigma % 8 == 0 && s.sigma <= 56,
+                "sigma {} not normalized from {sigma}",
+                s.sigma
+            );
+            let mut got = vec![0.0; 50];
+            s.spmv(&x, &mut got);
+            assert_eq!(got, want, "sigma {sigma}");
+        }
+        assert_eq!(normalize_sigma(8, usize::MAX, 50), 56);
+        assert_eq!(normalize_sigma(8, 0, 50), 8);
+        assert_eq!(normalize_sigma(4, 6, 50), 8, "rounds up to a chunk");
+        assert_eq!(normalize_sigma(8, usize::MAX, 0), 8, "empty matrix");
+    }
+
+    #[test]
     fn ragged_tail_handled() {
         let mut rng = Pcg32::new(5);
         let csr = random_csr(&mut rng, 101, 5); // n not divisible by C
@@ -253,17 +368,38 @@ mod tests {
         csr.spmv(&x, &mut want);
         s.spmv(&x, &mut got);
         for (a, b) in want.iter().zip(&got) {
-            assert!((a - b).abs() < 1e-9);
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
     #[test]
-    fn empty_matrix() {
+    fn empty_matrix_and_empty_chunks() {
         let csr = Csr::zero(10, 10);
         let s = SellCSigma::from_csr(&csr, 4, 8);
+        assert_eq!(s.n_chunks(), 3);
+        assert_eq!(s.stored(), 0, "all-empty rows store nothing");
+        assert!(s.chunk_len.iter().all(|&w| w == 0), "every chunk empty");
         let x = vec![1.0; 10];
         let mut y = vec![9.0; 10];
         s.spmv(&x, &mut y);
         assert!(y.iter().all(|&v| v == 0.0));
+        // A zero-row matrix builds and serves without panicking.
+        let none = SellCSigma::from_csr(&Csr::zero(0, 4), 8, 64);
+        assert_eq!(none.n_chunks(), 0);
+        let mut y0: Vec<f64> = vec![];
+        none.spmv(&[1.0; 4], &mut y0);
+        // A matrix with one empty chunk in the middle (rows 4..8
+        // empty) still writes those rows (to 0.0) through the scatter.
+        let mut coo = Coo::new(12, 12);
+        for r in [0usize, 1, 2, 3, 8, 9] {
+            coo.push(r, r, 2.0);
+        }
+        let sparse = coo.to_csr();
+        let s = SellCSigma::from_csr(&sparse, 4, 4);
+        let mut y = vec![7.0; 12];
+        s.spmv(&[1.0; 12], &mut y);
+        let mut want = vec![0.0; 12];
+        sparse.spmv(&[1.0; 12], &mut want);
+        assert_eq!(y, want, "empty middle chunk must zero its rows");
     }
 }

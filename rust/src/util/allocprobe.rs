@@ -1,0 +1,85 @@
+//! Allocation-counting probe — the zero-allocation regression
+//! instrument (mirroring `sched::partition_calls()` for partitions).
+//!
+//! [`CountingAllocator`] wraps the system allocator and counts every
+//! `alloc`/`realloc` call into a global atomic **and** a per-thread
+//! counter. The library only provides the type and the counters; a
+//! test binary opts in by installing it:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: ft2000_spmv::util::allocprobe::CountingAllocator =
+//!     ft2000_spmv::util::allocprobe::CountingAllocator;
+//! ```
+//!
+//! `tests/alloc.rs` uses it to prove the pooled steady-state serve
+//! path performs zero heap allocations per request. Counters are
+//! monotone; compare two readings around the code under test.
+//! Deallocations are not counted — the property under test is "no
+//! new memory is requested", and frees pair with counted allocs.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static TOTAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap allocations (alloc + realloc) observed process-wide so far.
+/// Always valid to call; stays 0 unless a binary installed
+/// [`CountingAllocator`] as its global allocator.
+pub fn total_allocs() -> u64 {
+    TOTAL_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Heap allocations made by the *current thread* so far (the
+/// `partition_calls()`-style probe). Note that pooled executors run
+/// kernel slots on resident worker threads — cross-thread effects
+/// only show up in [`total_allocs`].
+pub fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+#[inline]
+fn count_one() {
+    TOTAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    // `try_with`: TLS may already be torn down during thread exit;
+    // losing those few counts is fine, panicking in the allocator is
+    // not.
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// System allocator wrapper that counts allocation calls. Install
+/// with `#[global_allocator]` in a test binary (see module docs).
+pub struct CountingAllocator;
+
+// SAFETY: delegates every operation verbatim to `System`; the
+// counters are lock-free and allocation-free.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        count_one();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        count_one();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        count_one();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

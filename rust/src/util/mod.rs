@@ -5,6 +5,7 @@
 //! pull in — PRNG, JSON, CLI parsing, a bench harness, property-testing
 //! helpers — are implemented here from scratch.
 
+pub mod allocprobe;
 pub mod bench;
 pub mod json;
 pub mod rng;

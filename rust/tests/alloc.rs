@@ -1,0 +1,122 @@
+//! Zero-allocation regression test for the pooled steady-state serve
+//! path (the PR-5 tentpole contract).
+//!
+//! A counting global allocator (`util::allocprobe`) is installed for
+//! this test binary only. After warmup — plan caches populated,
+//! scratch arenas grown to the corpus's largest request, telemetry
+//! maps holding every key they will ever hold — repeated
+//! `ServeEngine::serve_batch` dispatches must not allocate at all,
+//! across all three plan families (row-partitioned CSR, CSR5 tiles,
+//! SELL-C-σ chunks) and both the singleton and the coalesced SpMM
+//! path.
+//!
+//! Kept as a single `#[test]` on purpose: the counter is
+//! process-global, and libtest runs sibling tests on concurrent
+//! threads whose allocations would pollute the reading.
+
+use ft2000_spmv::corpus::{generators, NamedMatrix};
+use ft2000_spmv::service::{
+    MatrixRegistry, PlanConfig, Planner, ServeEngine,
+};
+use ft2000_spmv::sparse::Coo;
+use ft2000_spmv::util::allocprobe::{total_allocs, CountingAllocator};
+use ft2000_spmv::util::rng::Pcg32;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// 4-thread static split [64, 64, 64, 128] -> job_var 0.4: lands in
+/// the heuristic's SELL-C-σ band.
+fn sell_band_matrix() -> ft2000_spmv::sparse::Csr {
+    let mut coo = Coo::new(256, 256);
+    for r in 0..256 {
+        coo.push(r, r, 1.0);
+        if r >= 192 {
+            coo.push(r, (r + 1) % 256, 1.0);
+        }
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn pooled_steady_state_serving_allocates_nothing() {
+    // Probe sanity: the counting allocator is really installed.
+    let before = total_allocs();
+    let probe: Vec<u8> = Vec::with_capacity(4096);
+    assert!(
+        total_allocs() > before,
+        "counting allocator not installed — the test would be vacuous"
+    );
+    drop(probe);
+
+    let mut rng = Pcg32::new(0xA110C);
+    let mut reg = MatrixRegistry::new();
+    // One matrix per plan family.
+    let row_id = reg.register("rows", generators::stencil(512, 5));
+    let tile_id = reg.register("tiles", NamedMatrix::Exdata1.generate());
+    let sell_id = reg.register("sell", sell_band_matrix());
+    let engine =
+        ServeEngine::pooled(reg, Planner::Heuristic, PlanConfig::default());
+
+    // The three plan families really are exercised (guards the test
+    // against a future heuristic change silently narrowing coverage).
+    use ft2000_spmv::sched::Schedule;
+    let kinds: Vec<Schedule> = [row_id, tile_id, sell_id]
+        .iter()
+        .map(|&id| {
+            let e = engine.registry.entry(id);
+            engine.plans.plan_for(e.fingerprint, &e.csr).0.schedule
+        })
+        .collect();
+    assert!(matches!(kinds[0], Schedule::CsrRowStatic), "{kinds:?}");
+    assert!(matches!(kinds[1], Schedule::Csr5Tiles { .. }), "{kinds:?}");
+    assert!(matches!(kinds[2], Schedule::SellChunks { .. }), "{kinds:?}");
+
+    // Per-matrix request vectors, allocated up front (request payloads
+    // are the caller's; the contract under test is the engine's).
+    let inputs: Vec<(usize, Vec<f64>)> = [row_id, tile_id, sell_id]
+        .iter()
+        .map(|&id| {
+            let n = engine.registry.entry(id).csr.n_cols;
+            (id, (0..n).map(|_| rng.gen_f64() - 0.5).collect())
+        })
+        .collect();
+
+    let serve_round = |engine: &ServeEngine| {
+        for (id, x) in &inputs {
+            // Singleton dispatch and a coalesced 4-wide SpMM dispatch.
+            engine.serve_batch(*id, &[x.as_slice()]).expect("singleton");
+            engine
+                .serve_batch(
+                    *id,
+                    &[x.as_slice(), x.as_slice(), x.as_slice(), x.as_slice()],
+                )
+                .expect("coalesced");
+        }
+    };
+
+    // Warmup: grow every buffer to its steady-state size — scratch
+    // arenas (output, packed-x, carries), the engine's scratch pool,
+    // telemetry's histogram/per-matrix/per-schedule keys.
+    for _ in 0..8 {
+        serve_round(&engine);
+    }
+
+    // Steady state: not one heap allocation across 40 more rounds
+    // (240 dispatches, 600 served requests).
+    let allocs_before = total_allocs();
+    for _ in 0..40 {
+        serve_round(&engine);
+    }
+    let delta = total_allocs() - allocs_before;
+    assert_eq!(
+        delta, 0,
+        "pooled steady-state serving must be allocation-free, \
+         observed {delta} allocations over 240 dispatches"
+    );
+
+    // The telemetry still recorded everything while allocation-free.
+    let stats = engine.telemetry.snapshot();
+    assert_eq!(stats.requests, 48 * 3 * 5);
+    assert_eq!(stats.batches, 48 * 3 * 2);
+}

@@ -25,10 +25,14 @@ fn random_csr(rng: &mut Pcg32) -> Csr {
 }
 
 fn random_schedule(rng: &mut Pcg32) -> Schedule {
-    match rng.gen_range(4) {
+    match rng.gen_range(5) {
         0 => Schedule::CsrRowStatic,
         1 => Schedule::CsrRowBalanced,
         2 => Schedule::Csr5Tiles { tile_nnz: 1 + rng.gen_range(128) },
+        3 => Schedule::SellChunks {
+            c: 1 + rng.gen_range(64),
+            sigma: 1 + rng.gen_range(256),
+        },
         _ => Schedule::CsrDynamic { chunk: 1 + rng.gen_range(32) },
     }
 }
@@ -177,6 +181,55 @@ fn threaded_exec_matches_reference_everywhere() {
                 (a - b).abs() < 1e-9 * (1.0 + a.abs()),
                 "row {i}: {a} vs {b}"
             );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn unrolled_and_sell_kernels_bitwise_match_sequential() {
+    // The PR-5 kernel contract: every row-space schedule (the
+    // 4x-unrolled fmadd CSR kernel) and every SELL-C-σ geometry (the
+    // chunk-vectorized kernel, whose padding slots are exact no-ops)
+    // reproduce `spmv_sequential` bit for bit, at any thread count.
+    // CSR5 is the one executor allowed to re-associate (boundary-row
+    // carries) and keeps its tolerance bound elsewhere.
+    check("unrolled+sell==sequential-bitwise", 25, |rng| {
+        let csr = random_csr(rng);
+        let n = csr.n_rows;
+        let x: Vec<f64> = (0..n).map(|_| rng.gen_f64() - 0.5).collect();
+        let want = exec::spmv_sequential(&csr, &x).y;
+        let sched = match rng.gen_range(4) {
+            0 => Schedule::CsrRowStatic,
+            1 => Schedule::CsrRowBalanced,
+            2 => Schedule::CsrDynamic { chunk: 1 + rng.gen_range(32) },
+            _ => Schedule::SellChunks {
+                c: 1 + rng.gen_range(64),
+                sigma: 1 + rng.gen_range(512),
+            },
+        };
+        let nt = 1 + rng.gen_range(8);
+        let got = exec::spmv_threaded(&csr, &x, sched, nt);
+        for (i, (a, b)) in want.iter().zip(&got.y).enumerate() {
+            prop_assert!(
+                a.to_bits() == b.to_bits(),
+                "{sched:?} nt={nt} row {i}: {a} vs {b} (bitwise)"
+            );
+        }
+        // And the SELL format's own sequential kernel agrees bitwise
+        // with the CSR reference (padding no-ops, shared fmadd
+        // discipline).
+        if let Schedule::SellChunks { c, sigma } = sched {
+            let sell =
+                ft2000_spmv::sparse::SellCSigma::from_csr(&csr, c, sigma);
+            let mut y = vec![0.0; n];
+            sell.spmv(&x, &mut y);
+            for (i, (a, b)) in want.iter().zip(&y).enumerate() {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "SellCSigma::spmv row {i}: {a} vs {b} (bitwise)"
+                );
+            }
         }
         Ok(())
     });
