@@ -19,12 +19,16 @@
 //!    `BENCH_kernels.json` for the perf trajectory. Section `arena`
 //!    A/Bs the zero-allocation scratch serve path against the
 //!    allocating path (quick mode asserts the arena is no slower).
+//! 6. Is stage tracing cheap enough to leave on? Section `obs` A/Bs
+//!    the serve path with the span recorder detached vs attached at
+//!    full sampling, interleaved so drift cancels, and snapshots the
+//!    tax to `BENCH_obs.json` (quick mode gates it at <= 2%).
 //!
 //! Scale with `FT2000_SUITE=tiny|fast|full` (default fast); set
 //! `FT2000_QUICK=1` for the CI smoke mode (tiny request counts, full
 //! code paths, convergence assertions in section 5). Run a single
 //! section with
-//! `FT2000_SECTION=batch|traffic|pool|shard|autotune|kernels|arena`,
+//! `FT2000_SECTION=batch|traffic|pool|shard|autotune|kernels|arena|obs`,
 //! or everything but one with `FT2000_SECTION=-<name>`.
 
 mod common;
@@ -139,6 +143,124 @@ fn main() {
     // --- 7: arena (zero-alloc) vs allocating serve path, wall clock ------
     if common::section_enabled("arena") {
         section_arena(&suite, quick);
+    }
+
+    // --- 8: tracing overhead A/B (span recorder off vs on) ---------------
+    if common::section_enabled("obs") {
+        section_obs(&suite, quick);
+    }
+}
+
+// Tracing overhead A/B: the same pooled `serve_batch` stream measured
+// with the span recorder detached and attached (full sampling, Wall
+// clock). Two identically-built engines; rounds are interleaved with
+// alternating order so clock drift and thermal state hit both sides
+// equally, and the gated number is the *median* per-round ratio —
+// robust to a stray slow round on shared CI hardware. Emits
+// `BENCH_obs.json` for the perf trajectory; quick mode asserts the
+// tracing tax stays within the 2% observability budget.
+fn section_obs(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
+    use ft2000_spmv::obs::{ClockMode, TraceConfig, TraceRecorder};
+
+    println!();
+    println!("tracing overhead A/B (serve_batch wall clock):");
+    let build = || {
+        let mut reg = MatrixRegistry::new();
+        let ids = reg.register_suite(suite, Some(6));
+        let engine = ServeEngine::pooled(
+            reg,
+            Planner::Heuristic,
+            PlanConfig::default(),
+        );
+        (engine, ids)
+    };
+    let (plain, ids) = build();
+    let (traced, _) = build();
+    let n_lanes = traced.pool().map(|p| p.n_workers() + 1).unwrap_or(1);
+    let traced = traced.with_trace(Arc::new(TraceRecorder::new(
+        TraceConfig::on(),
+        ClockMode::Wall,
+        n_lanes,
+    )));
+    // Median-sized matrix, same selection rule as section `arena`.
+    let mut by_nnz = ids.clone();
+    by_nnz.sort_by_key(|&id| plain.registry.entry(id).csr.nnz());
+    let id = by_nnz[by_nnz.len() / 2];
+    let x = vec![1.0f64; plain.registry.entry(id).csr.n_cols];
+    let xs1 = [x.as_slice()];
+    let xs8 = [x.as_slice(); 8];
+    let round = |engine: &ServeEngine| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..8 {
+            engine.serve_batch(id, &xs1).expect("serve");
+            engine.serve_batch(id, &xs8).expect("serve");
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    // Warm plan caches and scratch arenas on both engines.
+    for _ in 0..6 {
+        round(&plain);
+        round(&traced);
+    }
+    let rounds = if quick { 40 } else { 150 };
+    let (mut total_off, mut total_on) = (0.0f64, 0.0f64);
+    let mut ratios = Vec::with_capacity(rounds);
+    for i in 0..rounds {
+        let (off, on) = if i % 2 == 0 {
+            let off = round(&plain);
+            (off, round(&traced))
+        } else {
+            let on = round(&traced);
+            (round(&plain), on)
+        };
+        total_off += off;
+        total_on += on;
+        ratios.push(on / off);
+    }
+    ratios.sort_by(f64::total_cmp);
+    let median = ratios[ratios.len() / 2];
+    let total_ratio = total_on / total_off;
+    let spans = traced.trace().map(|r| r.spans_recorded()).unwrap_or(0);
+    println!(
+        "untraced {:.3} ms  traced {:.3} ms  total ratio \
+         {total_ratio:.4}x  median round ratio {median:.4}x  ({spans} \
+         spans recorded)",
+        total_off * 1e3,
+        total_on * 1e3,
+    );
+    if let Some(rec) = traced.trace() {
+        rec.flame_table().print();
+    }
+    let snapshot = Json::Obj(
+        [
+            ("section".to_string(), Json::Str("obs".to_string())),
+            (
+                "quick".to_string(),
+                Json::Num(if quick { 1.0 } else { 0.0 }),
+            ),
+            ("rounds".to_string(), Json::Num(rounds as f64)),
+            ("untraced_s".to_string(), Json::Num(total_off)),
+            ("traced_s".to_string(), Json::Num(total_on)),
+            ("total_ratio".to_string(), Json::Num(total_ratio)),
+            ("median_round_ratio".to_string(), Json::Num(median)),
+            ("spans_recorded".to_string(), Json::Num(spans as f64)),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    let path = std::env::var("FT2000_BENCH_DIR")
+        .map(|d| format!("{d}/BENCH_obs.json"))
+        .unwrap_or_else(|_| "BENCH_obs.json".to_string());
+    match std::fs::write(&path, snapshot.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    if quick {
+        assert!(
+            median <= 1.02,
+            "obs smoke: tracing tax exceeded the 2% budget (median \
+             round ratio {median:.4}x over {rounds} interleaved rounds)"
+        );
     }
 }
 
@@ -502,6 +624,7 @@ fn section_shard(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
                     policy: PlacementPolicy::HotReplicate { hot: 2 },
                     pooled: true,
                     tune: None,
+                    trace: None,
                 },
                 &weights,
             );

@@ -38,7 +38,7 @@ pub mod observe;
 pub mod policy;
 
 pub use ladder::{candidates, knee_index, schedule_from_name, Variant};
-pub use observe::{BatchDrift, ObservationLog};
+pub use observe::{BatchDrift, ObservationLog, StageObs};
 pub use policy::{ArmStats, Policy};
 
 use std::collections::{BTreeMap, HashMap};
@@ -671,6 +671,26 @@ impl Autotuner {
         per_request_ms: f64,
         batch: usize,
     ) -> Option<Arc<Plan>> {
+        self.observe_staged(
+            fp,
+            arm,
+            per_request_ms,
+            batch,
+            &StageObs::default(),
+        )
+    }
+
+    /// [`Autotuner::observe`] carrying the dispatch's measured stage
+    /// breakdown (from the span recorder) into the observation
+    /// dataset's extra columns — the arm update itself is identical.
+    pub fn observe_staged(
+        &self,
+        fp: u64,
+        arm: usize,
+        per_request_ms: f64,
+        batch: usize,
+        stages: &StageObs,
+    ) -> Option<Arc<Plan>> {
         if !per_request_ms.is_finite() || per_request_ms < 0.0 {
             return None;
         }
@@ -684,6 +704,7 @@ impl Autotuner {
             &tuner.variants[arm],
             batch,
             per_request_ms,
+            stages,
         );
         tuner.observe(arm, per_request_ms, batch, &self.cfg)
     }
@@ -916,7 +937,30 @@ mod tests {
         // Observations accumulated for retraining.
         let d = tuner.dataset();
         assert_eq!(d.len(), 150);
-        assert_eq!(d.n_features(), observe::BASE_FEATURES + 3);
+        assert_eq!(d.n_features(), observe::BASE_FEATURES + 6);
+    }
+
+    #[test]
+    fn staged_observation_lands_in_dataset_columns() {
+        let (csr, plan, fp) = setup();
+        let tuner =
+            Autotuner::new(AutotuneConfig::default(), PlanConfig::default());
+        let (_, arm) = tuner.plan_for(fp, "m", &plan, &csr);
+        let stages = StageObs {
+            plan_lookup_ms: 0.02,
+            kernel_ms: 0.5,
+            reduce_ms: 0.03,
+        };
+        tuner.observe_staged(fp, arm, 0.6, 1, &stages);
+        let d = tuner.dataset();
+        assert_eq!(d.len(), 1);
+        let row = &d.x[0];
+        assert_eq!(row[row.len() - 3..], [0.02, 0.5, 0.03]);
+        // The unstaged path records zeroed stage columns.
+        tuner.observe(fp, arm, 0.6, 1);
+        let d = tuner.dataset();
+        let row = &d.x[1];
+        assert_eq!(row[row.len() - 3..], [0.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -27,7 +27,9 @@ pub const BASE_FEATURES: usize = 7;
 /// million-request runs; the tuner's arm statistics keep streaming).
 pub const DATASET_CAP: usize = 65_536;
 
-/// Feature schema of the observation dataset.
+/// Feature schema of the observation dataset. The trailing stage
+/// columns come from the span recorder's per-dispatch breakdown
+/// (zero when the dispatch was not staged — e.g. modeled replay).
 pub fn feature_names() -> Vec<String> {
     vec![
         "n_rows".into(),
@@ -40,7 +42,23 @@ pub fn feature_names() -> Vec<String> {
         "n_threads".into(),
         "batch".into(),
         "schedule".into(),
+        "plan_lookup_ms".into(),
+        "kernel_ms".into(),
+        "reduce_ms".into(),
     ]
+}
+
+/// Per-dispatch stage breakdown attached to an observation — the
+/// tracing subsystem's measured decomposition of where a dispatch's
+/// time went, folded into the retraining dataset as extra columns.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageObs {
+    /// Plan-cache lookup (+ tuner arm selection), ms.
+    pub plan_lookup_ms: f64,
+    /// Kernel execution, ms.
+    pub kernel_ms: f64,
+    /// Post-kernel reduction + telemetry accounting, ms.
+    pub reduce_ms: f64,
 }
 
 /// Bounded accumulator of supervised observations.
@@ -62,19 +80,22 @@ impl ObservationLog {
     }
 
     /// Append one measured dispatch. `features` is the plan's static
-    /// feature vector (may be empty; padded to [`BASE_FEATURES`]).
+    /// feature vector (may be empty; padded to [`BASE_FEATURES`]);
+    /// `stages` the dispatch's measured stage breakdown
+    /// ([`StageObs::default`] when none was captured).
     pub fn record(
         &mut self,
         features: &[f64],
         variant: &Variant,
         batch: usize,
         per_request_ms: f64,
+        stages: &StageObs,
     ) {
         if self.data.len() >= DATASET_CAP {
             self.dropped += 1;
             return;
         }
-        let mut row = Vec::with_capacity(BASE_FEATURES + 3);
+        let mut row = Vec::with_capacity(BASE_FEATURES + 6);
         row.extend(features.iter().copied().take(BASE_FEATURES));
         while row.len() < BASE_FEATURES {
             row.push(0.0);
@@ -82,6 +103,9 @@ impl ObservationLog {
         row.push(variant.n_threads as f64);
         row.push(batch as f64);
         row.push(schedule_code(variant.schedule));
+        row.push(stages.plan_lookup_ms.max(0.0));
+        row.push(stages.kernel_ms.max(0.0));
+        row.push(stages.reduce_ms.max(0.0));
         self.data.push(row, per_request_ms);
     }
 
@@ -182,16 +206,32 @@ mod tests {
     fn log_pads_and_schemas_rows() {
         let mut log = ObservationLog::new();
         let v = Variant { schedule: Schedule::CsrRowBalanced, n_threads: 2 };
-        log.record(&[], &v, 4, 0.5); // degenerate: empty features pad
-        log.record(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], &v, 1, 0.25);
+        let none = StageObs::default();
+        // Degenerate: empty features pad, no stage breakdown.
+        log.record(&[], &v, 4, 0.5, &none);
+        let staged = StageObs {
+            plan_lookup_ms: 0.01,
+            kernel_ms: 0.2,
+            reduce_ms: 0.04,
+        };
+        log.record(
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            &v,
+            1,
+            0.25,
+            &staged,
+        );
         let d = log.snapshot();
         assert_eq!(d.len(), 2);
-        assert_eq!(d.n_features(), BASE_FEATURES + 3);
+        assert_eq!(d.n_features(), BASE_FEATURES + 6);
+        assert_eq!(d.n_features(), feature_names().len());
         assert_eq!(d.x[0][..BASE_FEATURES], [0.0; BASE_FEATURES]);
         assert_eq!(d.x[1][0], 1.0);
         assert_eq!(d.x[0][BASE_FEATURES], 2.0); // n_threads
         assert_eq!(d.x[0][BASE_FEATURES + 1], 4.0); // batch
         assert_eq!(d.x[0][BASE_FEATURES + 2], 1.0); // csr-balanced
+        assert_eq!(d.x[0][BASE_FEATURES + 3..], [0.0, 0.0, 0.0]);
+        assert_eq!(d.x[1][BASE_FEATURES + 3..], [0.01, 0.2, 0.04]);
         assert_eq!(d.y, vec![0.5, 0.25]);
     }
 
@@ -200,7 +240,13 @@ mod tests {
         let mut log = ObservationLog::new();
         let v = Variant { schedule: Schedule::CsrRowStatic, n_threads: 1 };
         for _ in 0..DATASET_CAP + 10 {
-            log.record(&[0.0; BASE_FEATURES], &v, 1, 1.0);
+            log.record(
+                &[0.0; BASE_FEATURES],
+                &v,
+                1,
+                1.0,
+                &StageObs::default(),
+            );
         }
         assert_eq!(log.len(), DATASET_CAP);
         assert_eq!(log.dropped(), 10);

@@ -67,6 +67,11 @@ pub enum Command {
         plan_cache_cap: usize,
         /// Online plan autotuning from measured wall-clock latency.
         tune: bool,
+        /// Write a Chrome trace-event JSON of the serving run here
+        /// (enables stage-span tracing).
+        trace_out: Option<String>,
+        /// Write the unified metrics snapshot JSON here.
+        metrics_out: Option<String>,
     },
     /// Deterministic traffic replay through the serving engine.
     Replay {
@@ -100,6 +105,11 @@ pub enum Command {
         /// JSON tuning-state path: loaded (warm start) if it exists,
         /// written back after the replay. Single-shard replays only.
         tune_state: Option<String>,
+        /// Write a Chrome trace-event JSON of the replay (virtual
+        /// timeline) here (enables stage-span tracing).
+        trace_out: Option<String>,
+        /// Write the unified metrics snapshot JSON here.
+        metrics_out: Option<String>,
     },
     /// Print topology/provenance info.
     Info,
@@ -156,6 +166,8 @@ pub fn usage() -> &'static str {
      \u{20}                             vs per-request scoped threads\n\
      \u{20}        --plan-cache-cap N (default 0 = unbounded; LRU)\n\
      \u{20}        --tune               online plan autotuning (wall clock)\n\
+     \u{20}        --trace-out PATH     Chrome trace JSON (enables tracing)\n\
+     \u{20}        --metrics-out PATH   unified metrics snapshot JSON\n\
      replay   --suite tiny|fast|full   corpus scale (default fast)\n\
      \u{20}        --pattern uniform|zipf|bursty (default zipf)\n\
      \u{20}        --requests N (default 2000)  --matrices N (default 32)\n\
@@ -170,6 +182,8 @@ pub fn usage() -> &'static str {
      \u{20}        --tune-policy epsilon|ucb (default epsilon)\n\
      \u{20}        --tune-state PATH    JSON warm start / snapshot (1 shard)\n\
      \u{20}        --json PATH          dump the report as JSON\n\
+     \u{20}        --trace-out PATH     Chrome trace JSON, virtual timeline\n\
+     \u{20}        --metrics-out PATH   unified metrics snapshot JSON\n\
      info"
 }
 
@@ -423,6 +437,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             pooled: parse_pooled(&flags)?,
             plan_cache_cap: parse_usize(&flags, "plan-cache-cap", 0)?,
             tune: flags.contains_key("tune"),
+            trace_out: flags.get("trace-out").cloned(),
+            metrics_out: flags.get("metrics-out").cloned(),
         },
         "replay" => Command::Replay {
             suite: parse_suite(&flags)?,
@@ -448,6 +464,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             tune: flags.contains_key("tune"),
             tune_policy: parse_tune_policy(&flags)?,
             tune_state: flags.get("tune-state").cloned(),
+            trace_out: flags.get("trace-out").cloned(),
+            metrics_out: flags.get("metrics-out").cloned(),
         },
         "info" => Command::Info,
         other => bail!("unknown command '{other}'\n{}", usage()),
@@ -755,6 +773,55 @@ mod tests {
             _ => panic!("wrong command"),
         }
         assert!(parse(&sv(&["replay", "--tune-policy", "nope"])).is_err());
+    }
+
+    #[test]
+    fn parses_observability_flags() {
+        let cli = parse(&sv(&["replay"])).unwrap();
+        match cli.command {
+            Command::Replay { trace_out, metrics_out, .. } => {
+                assert!(trace_out.is_none(), "tracing is opt-in");
+                assert!(metrics_out.is_none());
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "replay",
+            "--trace-out",
+            "/tmp/trace.json",
+            "--metrics-out",
+            "/tmp/metrics.json",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Replay { trace_out, metrics_out, .. } => {
+                assert_eq!(trace_out.as_deref(), Some("/tmp/trace.json"));
+                assert_eq!(
+                    metrics_out.as_deref(),
+                    Some("/tmp/metrics.json")
+                );
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "serve-bench",
+            "--trace-out",
+            "/tmp/sb.json",
+            "--metrics-out",
+            "/tmp/sbm.json",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::ServeBench { trace_out, metrics_out, .. } => {
+                assert_eq!(trace_out.as_deref(), Some("/tmp/sb.json"));
+                assert_eq!(metrics_out.as_deref(), Some("/tmp/sbm.json"));
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(
+            parse(&sv(&["replay", "--trace-out"])).is_err(),
+            "--trace-out needs a value"
+        );
     }
 
     #[test]

@@ -27,8 +27,11 @@
 //! serializing keeps the job slot single-owner.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::obs::{Stage, TraceRecorder};
 
 /// Type-erased, lifetime-erased slot closure. Only ever dereferenced
 /// while the dispatching `run` call is blocked on the job's
@@ -61,12 +64,36 @@ struct State {
     shutdown: bool,
 }
 
+/// Per-lane busy accounting (lane 0 = the dispatching thread, lane
+/// `i + 1` = resident worker `i`). Cheap enough to keep always-on:
+/// two relaxed atomic adds per executed slot.
+struct WorkerTally {
+    /// Slots this lane has executed.
+    slots: AtomicU64,
+    /// Total time this lane spent inside slot closures, ns.
+    busy_ns: AtomicU64,
+}
+
+impl WorkerTally {
+    fn new() -> WorkerTally {
+        WorkerTally {
+            slots: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+        }
+    }
+}
+
 struct Shared {
     state: Mutex<State>,
     /// Workers park here between jobs.
     work_cv: Condvar,
     /// The dispatcher parks here until `completed == n_slots`.
     done_cv: Condvar,
+    /// One tally per lane: `[dispatcher, worker 0, worker 1, ...]`.
+    tallies: Box<[WorkerTally]>,
+    /// Optional span recorder (set once when tracing is enabled);
+    /// absent, the hot path pays a single relaxed load.
+    trace: OnceLock<Arc<TraceRecorder>>,
 }
 
 impl Shared {
@@ -92,16 +119,36 @@ impl Shared {
         Some((job.work, slot))
     }
 
+    /// Record one executed slot against `lane`: busy tally always,
+    /// a per-worker kernel span when a recorder is attached.
+    fn note_done(&self, lane: usize, elapsed: Duration) {
+        let tally = &self.tallies[lane.min(self.tallies.len() - 1)];
+        tally.slots.fetch_add(1, Ordering::Relaxed);
+        tally
+            .busy_ns
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        if let Some(rec) = self.trace.get() {
+            rec.record_elapsed(
+                lane,
+                Stage::Kernel,
+                rec.kernel_ctx(),
+                elapsed.as_secs_f64() * 1e6,
+            );
+        }
+    }
+
     /// Run one claimed slot outside the lock, then record completion.
-    fn complete(&self, raw: RawWork, slot: usize) {
+    fn complete(&self, lane: usize, raw: RawWork, slot: usize) {
         // SAFETY: `run` holds the dispatch lock and blocks on the
         // completion latch until this increment lands, so the
         // borrowed closure is still alive here.
         let work = unsafe { &*raw.0 };
+        let t0 = Instant::now();
         let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
             || work(slot),
         ))
         .is_ok();
+        self.note_done(lane, t0.elapsed());
         let mut st = self.lock();
         if let Some(job) = st.job.as_mut() {
             job.completed += 1;
@@ -131,6 +178,8 @@ pub struct ExecPool {
     /// across pools).
     cores: Option<(usize, usize)>,
     jobs: AtomicU64,
+    /// Construction time, the denominator of busy-share gauges.
+    started: Instant,
 }
 
 impl ExecPool {
@@ -156,11 +205,13 @@ impl ExecPool {
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            tallies: (0..n_workers + 1).map(|_| WorkerTally::new()).collect(),
+            trace: OnceLock::new(),
         });
         let handles = (0..n_workers)
-            .map(|_| {
+            .map(|i| {
                 let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(&shared))
+                std::thread::spawn(move || worker_loop(i + 1, &shared))
             })
             .collect();
         ExecPool {
@@ -169,6 +220,7 @@ impl ExecPool {
             dispatch: Mutex::new(()),
             cores,
             jobs: AtomicU64::new(0),
+            started: Instant::now(),
         }
     }
 
@@ -186,6 +238,32 @@ impl ExecPool {
     /// Jobs dispatched so far (monotone; telemetry/tests).
     pub fn jobs_dispatched(&self) -> u64 {
         self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Attach a span recorder: subsequent slot executions also emit
+    /// per-lane kernel spans. First caller wins (set-once).
+    pub fn set_trace(&self, rec: Arc<TraceRecorder>) {
+        let _ = self.shared.trace.set(rec);
+    }
+
+    /// Per-lane `(slots_executed, busy_seconds)` tallies. Index 0 is
+    /// the dispatching thread, index `i + 1` resident worker `i`.
+    pub fn worker_tallies(&self) -> Vec<(u64, f64)> {
+        self.shared
+            .tallies
+            .iter()
+            .map(|t| {
+                (
+                    t.slots.load(Ordering::Relaxed),
+                    t.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                )
+            })
+            .collect()
+    }
+
+    /// Seconds since the pool was built (busy-share denominator).
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
     }
 
     /// Execute `work(slot)` for every `slot in 0..n_slots` across the
@@ -209,7 +287,9 @@ impl ExecPool {
             // no job publication, no worker wakeups. Tiny matrices
             // (the common serving case) pay one lock, zero context
             // switches.
+            let t0 = Instant::now();
             work(0);
+            self.shared.note_done(0, t0.elapsed());
             return;
         }
         let raw = erase(work);
@@ -244,7 +324,7 @@ impl ExecPool {
             let mut st = self.shared.lock();
             if let Some((w, slot)) = Shared::claim(&mut st) {
                 drop(st);
-                self.shared.complete(w, slot);
+                self.shared.complete(0, w, slot);
                 continue;
             }
             let done = loop {
@@ -293,7 +373,7 @@ fn erase<'a>(work: &'a (dyn Fn(usize) + Sync + 'a)) -> RawWork {
     RawWork(long)
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(lane: usize, shared: &Shared) {
     let mut seen_epoch = 0u64;
     loop {
         let mut st = shared.lock();
@@ -312,7 +392,7 @@ fn worker_loop(shared: &Shared) {
         seen_epoch = st.epoch;
         while let Some((w, slot)) = Shared::claim(&mut st) {
             drop(st);
-            shared.complete(w, slot);
+            shared.complete(lane, w, slot);
             st = shared.lock();
         }
         drop(st);
@@ -406,6 +486,37 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn tallies_and_trace_spans_cover_executed_slots() {
+        use crate::obs::{ClockMode, TraceConfig};
+        let pool = ExecPool::new(2);
+        let rec = Arc::new(TraceRecorder::new(
+            TraceConfig::on(),
+            ClockMode::Wall,
+            pool.n_workers() + 1,
+        ));
+        pool.set_trace(rec.clone());
+        rec.set_kernel_ctx(3);
+        pool.run(1, &|_| {});
+        for _ in 0..20 {
+            pool.run(6, &|_| std::thread::yield_now());
+        }
+        let tallies = pool.worker_tallies();
+        assert_eq!(tallies.len(), 3, "dispatcher lane + 2 worker lanes");
+        let slots: u64 = tallies.iter().map(|(s, _)| s).sum();
+        assert_eq!(slots, 1 + 20 * 6, "every executed slot is tallied");
+        assert!(
+            tallies[0].0 >= 1,
+            "the single-slot fast path runs on the dispatcher lane"
+        );
+        assert!(pool.uptime_s() >= 0.0);
+        // sample = 1: every executed slot also produced a kernel span,
+        // attributed to the schedule context set before dispatch.
+        assert_eq!(rec.spans_recorded(), 121);
+        let cells = rec.flame_cells();
+        assert_eq!(cells[&(Stage::Kernel.index(), 3)].0, 121);
     }
 
     #[test]

@@ -64,6 +64,23 @@ impl Scratch {
         std::mem::take(&mut self.yb)
     }
 
+    /// Heap capacity currently retained by this scratch, in bytes —
+    /// feeds the scratch-arena gauge of the engine's metrics
+    /// snapshot. Grows as traffic warms the buffers, then plateaus
+    /// (the zero-alloc steady state).
+    pub fn footprint_bytes(&self) -> usize {
+        use std::mem::size_of;
+        (self.y.capacity() + self.packed.capacity() + self.yb.capacity())
+            * size_of::<f64>()
+            + self.active.capacity() * size_of::<usize>()
+            + self.carries.capacity() * size_of::<Vec<TileCarry>>()
+            + self
+                .carries
+                .iter()
+                .map(|c| c.capacity() * size_of::<TileCarry>())
+                .sum::<usize>()
+    }
+
     /// Extract output vector `j` of the last `spmm_into` as an owned
     /// column (the compatibility path for callers that need
     /// per-request vectors; the serving path borrows instead).

@@ -35,7 +35,13 @@
 //!   by measured serving latency, knee-hunting thread-count
 //!   hill-climb, promotion into the versioned plan cache, drift-based
 //!   demotion, JSON snapshots, and observation datasets for
-//!   retraining the offline planner.
+//!   retraining the offline planner;
+//! * [`obs`] — serve-path observability: a lock-free stage-span
+//!   recorder (Chrome `trace_event` export, per-stage/per-schedule
+//!   flame table, wall or virtual clock) and a unified metrics
+//!   registry (counters, gauges, log-bucketed histograms) whose
+//!   snapshot schema absorbs the serving/shard/pool/plan-cache/
+//!   autotune surfaces.
 
 pub mod analysis;
 pub mod autotune;
@@ -45,6 +51,7 @@ pub mod corpus;
 pub mod counters;
 pub mod exec;
 pub mod mlmodel;
+pub mod obs;
 pub mod reorder;
 pub mod runtime;
 pub mod sched;

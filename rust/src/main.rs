@@ -16,6 +16,7 @@ use ft2000_spmv::coordinator::{
 use ft2000_spmv::corpus::suite::SuiteSpec;
 use ft2000_spmv::exec;
 use ft2000_spmv::mlmodel::{Forest, ForestParams};
+use ft2000_spmv::obs::{ClockMode, TraceConfig, TraceRecorder};
 use ft2000_spmv::runtime::Runtime;
 use ft2000_spmv::sched::Schedule;
 use ft2000_spmv::service::{
@@ -64,9 +65,11 @@ fn run(cli: Cli) -> Result<()> {
             pooled,
             plan_cache_cap,
             tune,
+            trace_out,
+            metrics_out,
         } => serve_bench(
             suite, matrices, batches, workers, shards, queue_cap, policy,
-            pooled, plan_cache_cap, tune,
+            pooled, plan_cache_cap, tune, trace_out, metrics_out,
         ),
         Command::Replay {
             suite,
@@ -87,6 +90,8 @@ fn run(cli: Cli) -> Result<()> {
             tune,
             tune_policy,
             tune_state,
+            trace_out,
+            metrics_out,
         } => replay_cmd(ReplayCmd {
             suite,
             pattern,
@@ -106,6 +111,8 @@ fn run(cli: Cli) -> Result<()> {
             tune,
             tune_policy,
             tune_state,
+            trace_out,
+            metrics_out,
         }),
         Command::Info => info(),
     }
@@ -128,6 +135,8 @@ fn serve_bench(
     pooled: bool,
     plan_cache_cap: usize,
     tune: bool,
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
 ) -> Result<()> {
     eprintln!("registering {matrices} corpus matrices...");
     let plan_cfg =
@@ -238,6 +247,19 @@ fn serve_bench(
         } else {
             engine
         };
+        let engine = if trace_out.is_some() || metrics_out.is_some() {
+            // Lane 0 is the dispatcher; pool workers get their own
+            // lanes when pooled dispatch is on.
+            let n_lanes =
+                engine.pool().map(|p| p.n_workers() + 1).unwrap_or(1);
+            engine.with_trace(std::sync::Arc::new(TraceRecorder::new(
+                TraceConfig::on(),
+                ClockMode::Wall,
+                n_lanes,
+            )))
+        } else {
+            engine
+        };
         eprintln!(
             "live global queue ({mode} dispatch): {n_req} zipf requests, \
              {workers} workers..."
@@ -287,6 +309,18 @@ fn serve_bench(
                 t.dataset_len()
             );
         }
+        if let Some(rec) = engine.trace() {
+            rec.flame_table().print();
+        }
+        if let Some(path) = &trace_out {
+            let rec = engine.trace().expect("tracing enabled above");
+            std::fs::write(path, rec.export_chrome().to_string())?;
+            eprintln!("wrote {path}");
+        }
+        if let Some(path) = &metrics_out {
+            std::fs::write(path, engine.metrics_snapshot().to_string())?;
+            eprintln!("wrote {path}");
+        }
         eprintln!("served {served} requests in {wall:.3}s");
     } else {
         // Sharded path: one shard per modeled panel, matrices placed
@@ -302,6 +336,11 @@ fn serve_bench(
             policy,
             pooled,
             tune: if tune { Some(live_tune_config()) } else { None },
+            trace: if trace_out.is_some() || metrics_out.is_some() {
+                Some(TraceConfig::on())
+            } else {
+                None
+            },
         };
         let server = ShardedServer::with_weights(
             registry.clone(),
@@ -349,6 +388,17 @@ fn serve_bench(
                  across {shards} shards"
             );
         }
+        if let Some(path) = &trace_out {
+            std::fs::write(path, server.export_chrome().to_string())?;
+            eprintln!("wrote {path}");
+        }
+        if let Some(path) = &metrics_out {
+            std::fs::write(
+                path,
+                server.metrics_snapshot(wall).to_string(),
+            )?;
+            eprintln!("wrote {path}");
+        }
         eprintln!(
             "served {served} requests in {wall:.3}s \
              ({} rejected, {} errors)",
@@ -379,6 +429,8 @@ struct ReplayCmd {
     tune: bool,
     tune_policy: TunePolicyKind,
     tune_state: Option<String>,
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
 }
 
 /// Virtual-clock tuning config of the `replay --tune` path: the cost
@@ -447,6 +499,11 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
         } else {
             None
         },
+        trace: if cmd.trace_out.is_some() || cmd.metrics_out.is_some() {
+            Some(TraceConfig::on())
+        } else {
+            None
+        },
         ..Default::default()
     };
     eprintln!(
@@ -480,6 +537,14 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
             std::fs::write(&path, report.to_json().to_string())?;
             eprintln!("wrote {path}");
         }
+        if let Some(path) = &cmd.trace_out {
+            std::fs::write(path, report.export_chrome().to_string())?;
+            eprintln!("wrote {path}");
+        }
+        if let Some(path) = &cmd.metrics_out {
+            std::fs::write(path, report.metrics_json().to_string())?;
+            eprintln!("wrote {path}");
+        }
         return Ok(());
     }
     if !cmd.tune && cmd.tune_state.is_some() {
@@ -510,6 +575,19 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
     } else {
         engine
     };
+    let engine = if cmd.trace_out.is_some() || cmd.metrics_out.is_some() {
+        // Replay timestamps spans on the virtual clock so the Chrome
+        // trace lines up with the simulated timeline, not wall time.
+        let n_lanes =
+            engine.pool().map(|p| p.n_workers() + 1).unwrap_or(1);
+        engine.with_trace(std::sync::Arc::new(TraceRecorder::new(
+            TraceConfig::on(),
+            ClockMode::Virtual,
+            n_lanes,
+        )))
+    } else {
+        engine
+    };
     let report = service::replay(&engine, &ids, &wspec, &rcfg)?;
     report.print();
     println!(
@@ -534,6 +612,18 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
     }
     if let Some(path) = cmd.json {
         std::fs::write(&path, report.to_json().to_string())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(rec) = engine.trace() {
+        rec.flame_table().print();
+    }
+    if let Some(path) = &cmd.trace_out {
+        let rec = engine.trace().expect("tracing enabled above");
+        std::fs::write(path, rec.export_chrome().to_string())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = &cmd.metrics_out {
+        std::fs::write(path, engine.metrics_snapshot().to_string())?;
         eprintln!("wrote {path}");
     }
     Ok(())

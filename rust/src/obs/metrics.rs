@@ -1,0 +1,338 @@
+//! Unified metrics registry: counters, gauges, and log-bucketed
+//! latency histograms behind one snapshot API with JSON export.
+//!
+//! Instruments are `Arc`-shared: the hot path holds pre-registered
+//! handles and updates them with single atomic operations (no lock,
+//! no allocation, no name lookup); the registry's `Mutex`-guarded
+//! name map is touched only at registration and snapshot time.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Monotone event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-writer-wins instantaneous value (f64 bits in an atomic).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Histogram bucket count: powers of two from [`Histogram::BASE_MS`]
+/// (1 µs) up — 40 buckets reach ~9 minutes, wide enough for any
+/// serve-path latency.
+const N_BUCKETS: usize = 40;
+
+/// Log₂-bucketed latency histogram (milliseconds). Observation is
+/// two atomic adds plus a bit scan; percentiles interpolate within
+/// the bucket's geometric span.
+pub struct Histogram {
+    /// Bucket `i` counts observations in
+    /// `[BASE_MS * 2^i, BASE_MS * 2^(i+1))`; bucket 0 also absorbs
+    /// anything smaller, the last bucket anything larger.
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    /// Sum of observed values, ms (f64 bits accumulated as integer
+    /// µs to stay associative under concurrency).
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Lower edge of bucket 0: 1 µs, in ms.
+    pub const BASE_MS: f64 = 1e-3;
+
+    fn bucket_of(v_ms: f64) -> usize {
+        if v_ms <= Self::BASE_MS {
+            return 0;
+        }
+        let b = (v_ms / Self::BASE_MS).log2().floor() as usize;
+        b.min(N_BUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `i`, ms.
+    fn bucket_lo(i: usize) -> f64 {
+        Self::BASE_MS * (1u64 << i.min(52)) as f64
+    }
+
+    #[inline]
+    pub fn observe(&self, v_ms: f64) {
+        if !v_ms.is_finite() || v_ms < 0.0 {
+            return;
+        }
+        self.buckets[Self::bucket_of(v_ms)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((v_ms * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ms() / n as f64
+        }
+    }
+
+    /// p-th percentile (0..=100) by geometric interpolation inside
+    /// the covering bucket; 0 with no samples. Bucketed, so accurate
+    /// to the bucket's factor-of-two span — the registry's cheap
+    /// estimate next to telemetry's P² digests.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 100.0) / 100.0 * n as f64).max(1.0);
+        let mut seen = 0u64;
+        for i in 0..N_BUCKETS {
+            let c = self.buckets[i].load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if (seen + c) as f64 >= target {
+                let frac = (target - seen as f64) / c as f64;
+                let lo = Self::bucket_lo(i);
+                return lo * 2f64.powf(frac.clamp(0.0, 1.0));
+            }
+            seen += c;
+        }
+        Self::bucket_lo(N_BUCKETS - 1)
+    }
+
+    /// Non-empty buckets as `[lower_edge_ms, count]` pairs.
+    fn buckets_json(&self) -> Json {
+        Json::Arr(
+            (0..N_BUCKETS)
+                .filter_map(|i| {
+                    let c = self.buckets[i].load(Ordering::Relaxed);
+                    (c > 0).then(|| {
+                        Json::Arr(vec![
+                            Json::Num(Self::bucket_lo(i)),
+                            Json::Num(c as f64),
+                        ])
+                    })
+                })
+                .collect(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [
+                ("count".to_string(), Json::Num(self.count() as f64)),
+                ("mean_ms".to_string(), Json::Num(self.mean_ms())),
+                ("p50_ms".to_string(), Json::Num(self.percentile(50.0))),
+                ("p95_ms".to_string(), Json::Num(self.percentile(95.0))),
+                ("p99_ms".to_string(), Json::Num(self.percentile(99.0))),
+                ("buckets".to_string(), self.buckets_json()),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+/// One registered instrument.
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Name → instrument registry. Registration is get-or-create (two
+/// callers registering the same name share the instrument); a name
+/// registered as one kind stays that kind.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered as another kind"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' already registered as another kind"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entry(name.to_string()).or_insert_with(|| {
+            Metric::Histogram(Arc::new(Histogram::default()))
+        }) {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric '{name}' already registered as another kind"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Every instrument's current value as one JSON object.
+    pub fn snapshot(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        Json::Obj(
+            inner
+                .iter()
+                .map(|(name, m)| {
+                    let v = match m {
+                        Metric::Counter(c) => Json::Num(c.get() as f64),
+                        Metric::Gauge(g) => Json::Num(g.get()),
+                        Metric::Histogram(h) => h.to_json(),
+                    };
+                    (name.clone(), v)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("serve.dispatches");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Re-registration shares the instrument.
+        assert_eq!(r.counter("serve.dispatches").get(), 5);
+        let g = r.gauge("pool.occupancy");
+        g.set(0.75);
+        assert_eq!(g.get(), 0.75);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(50.0), 0.0);
+        // 90 fast observations at ~0.1ms, 10 slow at ~100ms.
+        for _ in 0..90 {
+            h.observe(0.1);
+        }
+        for _ in 0..10 {
+            h.observe(100.0);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(
+            (0.05..0.3).contains(&p50),
+            "p50 {p50} must sit in the fast bucket"
+        );
+        assert!(
+            (50.0..300.0).contains(&p99),
+            "p99 {p99} must sit in the slow bucket"
+        );
+        assert!((h.mean_ms() - 10.09).abs() < 0.5, "{}", h.mean_ms());
+        // Guards: junk observations are dropped, not panics.
+        h.observe(f64::NAN);
+        h.observe(-1.0);
+        assert_eq!(h.count(), 100);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(100));
+        assert_eq!(j.get("buckets").unwrap().as_arr().map(|b| b.len()), Some(2));
+    }
+
+    #[test]
+    fn histogram_extremes_clamp_to_edge_buckets() {
+        let h = Histogram::default();
+        h.observe(0.0);
+        h.observe(1e12);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(0.0) >= 0.0);
+        assert!(h.percentile(100.0).is_finite());
+    }
+
+    #[test]
+    fn snapshot_renders_every_kind() {
+        let r = MetricsRegistry::new();
+        r.counter("a.count").add(3);
+        r.gauge("b.gauge").set(1.5);
+        r.histogram("c.lat").observe(2.0);
+        let snap = r.snapshot();
+        let text = snap.to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("a.count").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("b.gauge").unwrap().as_f64(), Some(1.5));
+        assert_eq!(
+            parsed.get("c.lat").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+}

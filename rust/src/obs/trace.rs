@@ -1,0 +1,448 @@
+//! Lock-free stage-span recorder with Chrome `trace_event` export.
+//!
+//! Recording discipline: each lane (dispatcher = lane 0, pool worker
+//! `i` = lane `i + 1`) owns a fixed ring of span slots whose fields
+//! are all atomics. A writer claims a slot with one `fetch_add` on
+//! the lane cursor and stores four words — no locks, no heap, so the
+//! zero-allocation steady-state contract of the serve path survives
+//! with tracing on. Concurrent writers that lap the ring may tear a
+//! slot (fields from two spans); that is a bounded reporting
+//! inaccuracy, never unsoundness, and export happens quiescently
+//! (after the run) in practice.
+//!
+//! Clocks: under live serving spans are stamped with wall time from
+//! a shared epoch; under deterministic replay the harness advances a
+//! virtual clock ([`TraceRecorder::set_virtual_s`]) and spans are
+//! stamped with it. Engine-internal stages (plan lookup, reduce, ...)
+//! always measure their *duration* in wall time — the real cost of
+//! the code — while the timestamp follows the recorder's clock, so a
+//! replayed trace lines up on the virtual timeline.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use super::{Stage, TraceConfig, STAGE_COUNT};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// What clock spans are stamped with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Wall time since the recorder's construction (live serving).
+    Wall,
+    /// A virtual clock the replay harness advances explicitly.
+    Virtual,
+}
+
+/// Schedule attribution code carried by a span: 0 = none, else
+/// `autotune::ladder::schedule_code + 1`.
+pub(crate) const SCHED_NONE: usize = 0;
+
+/// Name of a span's schedule code (see [`SCHED_NONE`]). Mirrors
+/// `autotune::ladder::schedule_code` ordering.
+fn sched_code_name(code: usize) -> &'static str {
+    match code {
+        1 => "csr-static",
+        2 => "csr-balanced",
+        3 => "csr5-tiles",
+        4 => "csr-dynamic",
+        5 => "sell",
+        _ => "-",
+    }
+}
+
+/// One recorded span. All fields atomic so ring wrap-around under
+/// concurrent writers is a benign tear, not a data race.
+struct SpanSlot {
+    /// `Stage::index() + 1`; 0 = slot never written.
+    stage: AtomicUsize,
+    /// Schedule code (see [`sched_code_name`]).
+    sched: AtomicUsize,
+    /// Span start, µs on the recorder's clock (f64 bits).
+    start_us: AtomicU64,
+    /// Span duration, µs (f64 bits).
+    dur_us: AtomicU64,
+}
+
+impl SpanSlot {
+    fn empty() -> SpanSlot {
+        SpanSlot {
+            stage: AtomicUsize::new(0),
+            sched: AtomicUsize::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One lane's span ring.
+struct Lane {
+    next: AtomicUsize,
+    slots: Box<[SpanSlot]>,
+}
+
+impl Lane {
+    fn new(capacity: usize) -> Lane {
+        Lane {
+            next: AtomicUsize::new(0),
+            slots: (0..capacity).map(|_| SpanSlot::empty()).collect(),
+        }
+    }
+}
+
+/// The recorder: per-lane rings + the clock + the sampling counter.
+/// Shared as an `Arc` between the engine, its pool, the queues, and
+/// the replay harness.
+pub struct TraceRecorder {
+    cfg: TraceConfig,
+    mode: ClockMode,
+    epoch: Instant,
+    /// Virtual now, µs (f64 bits) — only meaningful under
+    /// [`ClockMode::Virtual`].
+    virtual_us: AtomicU64,
+    /// Deterministic sampling counter (every `cfg.sample`-th span).
+    counter: AtomicUsize,
+    /// Schedule code of the dispatch currently executing — set by the
+    /// engine before handing work to the pool so per-worker kernel
+    /// spans carry attribution. Under concurrent dispatchers this is
+    /// last-writer-wins: a bounded attribution approximation.
+    kernel_ctx: AtomicUsize,
+    lanes: Box<[Lane]>,
+}
+
+impl TraceRecorder {
+    /// `n_lanes` = 1 (dispatcher only) + the pool worker count when
+    /// per-worker kernel spans are wanted.
+    pub fn new(cfg: TraceConfig, mode: ClockMode, n_lanes: usize) -> Self {
+        let cap = cfg.ring_capacity.max(1);
+        TraceRecorder {
+            cfg,
+            mode,
+            epoch: Instant::now(),
+            virtual_us: AtomicU64::new(0f64.to_bits()),
+            counter: AtomicUsize::new(0),
+            kernel_ctx: AtomicUsize::new(SCHED_NONE),
+            lanes: (0..n_lanes.max(1)).map(|_| Lane::new(cap)).collect(),
+        }
+    }
+
+    pub fn config(&self) -> TraceConfig {
+        self.cfg
+    }
+
+    pub fn mode(&self) -> ClockMode {
+        self.mode
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Current time on the recorder's clock, in µs.
+    pub fn now_us(&self) -> f64 {
+        match self.mode {
+            ClockMode::Wall => self.epoch.elapsed().as_secs_f64() * 1e6,
+            ClockMode::Virtual => {
+                f64::from_bits(self.virtual_us.load(Ordering::Relaxed))
+            }
+        }
+    }
+
+    /// Advance the virtual clock (replay harness only).
+    pub fn set_virtual_s(&self, t_s: f64) {
+        self.virtual_us.store((t_s * 1e6).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Deterministic sampling decision: true for every
+    /// `cfg.sample`-th call (always true at sample <= 1).
+    #[inline]
+    pub fn sampled(&self) -> bool {
+        let s = self.cfg.sample;
+        if s <= 1 {
+            return true;
+        }
+        self.counter.fetch_add(1, Ordering::Relaxed) % s as usize == 0
+    }
+
+    /// Set the schedule attribution for subsequent kernel spans.
+    #[inline]
+    pub fn set_kernel_ctx(&self, sched_code: usize) {
+        self.kernel_ctx.store(sched_code, Ordering::Relaxed);
+    }
+
+    /// The current kernel attribution code.
+    #[inline]
+    pub fn kernel_ctx(&self) -> usize {
+        self.kernel_ctx.load(Ordering::Relaxed)
+    }
+
+    /// Record one span. Lock-free, alloc-free: one `fetch_add` + four
+    /// atomic stores. `lane` is clamped into the lane set; sampling
+    /// must already have been decided (call [`TraceRecorder::sampled`]
+    /// once per span so multi-span paths stay consistent).
+    #[inline]
+    pub fn record(
+        &self,
+        lane: usize,
+        stage: Stage,
+        sched_code: usize,
+        start_us: f64,
+        dur_us: f64,
+    ) {
+        let lane = &self.lanes[lane.min(self.lanes.len() - 1)];
+        let idx = lane.next.fetch_add(1, Ordering::Relaxed);
+        let slot = &lane.slots[idx % lane.slots.len()];
+        slot.stage.store(stage.index() + 1, Ordering::Relaxed);
+        slot.sched.store(sched_code, Ordering::Relaxed);
+        slot.start_us.store(start_us.to_bits(), Ordering::Relaxed);
+        slot.dur_us.store(dur_us.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Convenience: sample-gated span ending now, starting `dur_us`
+    /// earlier on the recorder's clock.
+    #[inline]
+    pub fn record_elapsed(
+        &self,
+        lane: usize,
+        stage: Stage,
+        sched_code: usize,
+        dur_us: f64,
+    ) {
+        if self.sampled() {
+            let now = self.now_us();
+            self.record(lane, stage, sched_code, now - dur_us, dur_us);
+        }
+    }
+
+    /// Spans currently held (post-wrap: the ring capacities).
+    pub fn span_count(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|l| l.next.load(Ordering::Relaxed).min(l.slots.len()))
+            .sum()
+    }
+
+    /// Spans ever recorded, including ones overwritten by ring wrap.
+    pub fn spans_recorded(&self) -> usize {
+        self.lanes.iter().map(|l| l.next.load(Ordering::Relaxed)).sum()
+    }
+
+    fn each_span(&self, mut f: impl FnMut(usize, Stage, usize, f64, f64)) {
+        for (lane_idx, lane) in self.lanes.iter().enumerate() {
+            let held =
+                lane.next.load(Ordering::Relaxed).min(lane.slots.len());
+            for slot in &lane.slots[..held] {
+                let tag = slot.stage.load(Ordering::Relaxed);
+                let Some(stage) = tag.checked_sub(1).and_then(Stage::from_index)
+                else {
+                    continue;
+                };
+                f(
+                    lane_idx,
+                    stage,
+                    slot.sched.load(Ordering::Relaxed),
+                    f64::from_bits(slot.start_us.load(Ordering::Relaxed)),
+                    f64::from_bits(slot.dur_us.load(Ordering::Relaxed)),
+                );
+            }
+        }
+    }
+
+    /// Held spans as Chrome `trace_event` objects (`ph: "X"` complete
+    /// events), `pid` distinguishing shards in a merged export.
+    pub fn chrome_events(&self, pid: usize) -> Vec<Json> {
+        let mut events = Vec::with_capacity(self.span_count());
+        self.each_span(|lane, stage, sched, start_us, dur_us| {
+            let mut args = BTreeMap::new();
+            if sched != SCHED_NONE {
+                args.insert(
+                    "schedule".to_string(),
+                    Json::Str(sched_code_name(sched).to_string()),
+                );
+            }
+            let obj: BTreeMap<String, Json> = [
+                ("name".to_string(), Json::Str(stage.name().to_string())),
+                ("cat".to_string(), Json::Str("serve".to_string())),
+                ("ph".to_string(), Json::Str("X".to_string())),
+                ("ts".to_string(), Json::Num(start_us)),
+                ("dur".to_string(), Json::Num(dur_us)),
+                ("pid".to_string(), Json::Num(pid as f64)),
+                ("tid".to_string(), Json::Num(lane as f64)),
+                ("args".to_string(), Json::Obj(args)),
+            ]
+            .into_iter()
+            .collect();
+            events.push(Json::Obj(obj));
+        });
+        // Stable export order (lanes interleave arbitrarily).
+        events.sort_by(|a, b| {
+            let ts = |e: &Json| {
+                e.get("ts").and_then(Json::as_f64).unwrap_or(0.0)
+            };
+            ts(a).partial_cmp(&ts(b)).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        events
+    }
+
+    /// Full single-recorder Chrome trace document.
+    pub fn export_chrome(&self) -> Json {
+        chrome_document(self.chrome_events(0))
+    }
+
+    /// Aggregate held spans into (stage, schedule) -> (count,
+    /// total_us) cells.
+    pub fn flame_cells(&self) -> BTreeMap<(usize, usize), (u64, f64)> {
+        let mut cells: BTreeMap<(usize, usize), (u64, f64)> =
+            BTreeMap::new();
+        self.each_span(|_, stage, sched, _, dur_us| {
+            let cell = cells.entry((stage.index(), sched)).or_insert((0, 0.0));
+            cell.0 += 1;
+            cell.1 += dur_us;
+        });
+        cells
+    }
+
+    /// The per-stage/per-schedule flame table (serve-path order).
+    pub fn flame_table(&self) -> Table {
+        let cells = self.flame_cells();
+        let total: f64 = cells.values().map(|(_, us)| us).sum();
+        let mut t = Table::new(
+            "Stage flame (per-stage/per-schedule span aggregate)",
+            &["stage", "schedule", "spans", "total ms", "mean us", "share"],
+        );
+        for stage in Stage::all() {
+            for ((si, sched), (count, us)) in &cells {
+                if *si != stage.index() {
+                    continue;
+                }
+                t.row(vec![
+                    stage.name().to_string(),
+                    sched_code_name(*sched).to_string(),
+                    count.to_string(),
+                    format!("{:.3}", us / 1e3),
+                    format!("{:.2}", us / *count as f64),
+                    if total > 0.0 {
+                        format!("{:.1}%", 100.0 * us / total)
+                    } else {
+                        "n/a".to_string()
+                    },
+                ]);
+            }
+        }
+        t
+    }
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("mode", &self.mode)
+            .field("lanes", &self.lanes.len())
+            .field("spans_recorded", &self.spans_recorded())
+            .finish_non_exhaustive()
+    }
+}
+
+/// Wrap trace events into the Chrome trace-document object form
+/// (what `chrome://tracing` and Perfetto open directly).
+pub fn chrome_document(events: Vec<Json>) -> Json {
+    Json::Obj(
+        [
+            (
+                "displayTimeUnit".to_string(),
+                Json::Str("ms".to_string()),
+            ),
+            ("traceEvents".to_string(), Json::Arr(events)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(cap: usize, sample: u32) -> TraceConfig {
+        TraceConfig { enabled: true, sample, ring_capacity: cap }
+    }
+
+    #[test]
+    fn records_and_exports_chrome_events() {
+        let rec = TraceRecorder::new(cfg(16, 1), ClockMode::Virtual, 2);
+        rec.set_virtual_s(1.0);
+        assert_eq!(rec.now_us(), 1e6);
+        rec.record(0, Stage::QueueWait, SCHED_NONE, 0.0, 250.0);
+        rec.record(1, Stage::Kernel, 1, 1e6, 42.0);
+        assert_eq!(rec.span_count(), 2);
+        let doc = rec.export_chrome();
+        let parsed =
+            crate::util::json::parse(&doc.to_string()).expect("valid JSON");
+        let events =
+            parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(
+            events[0].get("name").unwrap().as_str(),
+            Some("queue_wait")
+        );
+        let kernel = &events[1];
+        assert_eq!(kernel.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(kernel.get("tid").unwrap().as_usize(), Some(1));
+        assert_eq!(kernel.get("dur").unwrap().as_f64(), Some(42.0));
+        assert_eq!(
+            kernel.get("args").unwrap().get("schedule").unwrap().as_str(),
+            Some("csr-static")
+        );
+    }
+
+    #[test]
+    fn ring_wraps_without_growing() {
+        let rec = TraceRecorder::new(cfg(4, 1), ClockMode::Wall, 1);
+        for i in 0..100 {
+            rec.record(0, Stage::Kernel, SCHED_NONE, i as f64, 1.0);
+        }
+        assert_eq!(rec.span_count(), 4);
+        assert_eq!(rec.spans_recorded(), 100);
+        // The ring holds the most recent writes at wrapped indices.
+        let cells = rec.flame_cells();
+        assert_eq!(cells[&(Stage::Kernel.index(), 0)].0, 4);
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let rec = TraceRecorder::new(cfg(64, 4), ClockMode::Wall, 1);
+        let picks: Vec<bool> = (0..12).map(|_| rec.sampled()).collect();
+        assert_eq!(
+            picks,
+            (0..12).map(|i| i % 4 == 0).collect::<Vec<_>>()
+        );
+        let all = TraceRecorder::new(cfg(64, 1), ClockMode::Wall, 1);
+        assert!((0..12).all(|_| all.sampled()));
+    }
+
+    #[test]
+    fn flame_table_aggregates_by_stage_and_schedule() {
+        let rec = TraceRecorder::new(cfg(64, 1), ClockMode::Virtual, 1);
+        rec.record(0, Stage::Kernel, 1, 0.0, 10.0);
+        rec.record(0, Stage::Kernel, 1, 10.0, 30.0);
+        rec.record(0, Stage::Kernel, 5, 40.0, 5.0);
+        rec.record(0, Stage::Reduce, SCHED_NONE, 45.0, 5.0);
+        let cells = rec.flame_cells();
+        assert_eq!(cells[&(Stage::Kernel.index(), 1)], (2, 40.0));
+        assert_eq!(cells[&(Stage::Kernel.index(), 5)], (1, 5.0));
+        let md = rec.flame_table().to_markdown();
+        assert!(md.contains("kernel"));
+        assert!(md.contains("csr-static"));
+        assert!(md.contains("sell"));
+        assert!(md.contains("reduce"));
+    }
+
+    #[test]
+    fn kernel_ctx_is_shared_attribution() {
+        let rec = TraceRecorder::new(cfg(8, 1), ClockMode::Wall, 1);
+        assert_eq!(rec.kernel_ctx(), SCHED_NONE);
+        rec.set_kernel_ctx(3);
+        assert_eq!(rec.kernel_ctx(), 3);
+    }
+}

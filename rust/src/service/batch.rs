@@ -211,6 +211,23 @@ pub(crate) fn drain_worker(
                 continue;
             }
         }
+        // Queue wait (enqueue stamp -> dispatch) is accounted apart
+        // from service time: a fast kernel behind a deep backlog and a
+        // slow kernel on an idle queue are different problems.
+        let t_dispatch = Instant::now();
+        for r in &batch {
+            let wait_ms =
+                t_dispatch.duration_since(r.submitted).as_secs_f64() * 1e3;
+            engine.telemetry.record_queue_wait_ms(wait_ms);
+            if let Some(rec) = engine.trace() {
+                rec.record_elapsed(
+                    0,
+                    crate::obs::Stage::QueueWait,
+                    crate::obs::trace::SCHED_NONE,
+                    wait_ms * 1e3,
+                );
+            }
+        }
         let id = batch[0].matrix_id;
         // Serving discards outputs, so the drain loop rides the
         // engine's scratch-arena path (`serve_batch`) — no per-request

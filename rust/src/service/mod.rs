@@ -58,13 +58,17 @@ pub use shard::{
 pub use telemetry::{ServeStats, ShardSnapshot, Telemetry};
 pub use workload::{Arrivals, GenRequest, Popularity, WorkloadSpec};
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::autotune::{AutotuneConfig, Autotuner};
+use crate::autotune::{AutotuneConfig, Autotuner, StageObs};
 use crate::exec::{ExecPool, Scratch};
+use crate::obs::{Counter, Histogram, MetricsRegistry, Stage, TraceRecorder};
 use crate::sched::Schedule;
+use crate::util::json::Json;
 
 /// Outcome of one (possibly coalesced) execution, with materialized
 /// outputs — the compatibility path for callers that consume the
@@ -125,6 +129,40 @@ pub struct ServeEngine {
     /// concurrency and each arena's buffers grow to the corpus's
     /// largest request — after that, serving allocates nothing.
     scratch: Mutex<Vec<Scratch>>,
+    /// Optional stage-span recorder ([`ServeEngine::with_trace`]).
+    trace: Option<Arc<TraceRecorder>>,
+    /// The unified metrics registry behind
+    /// [`ServeEngine::metrics_snapshot`].
+    metrics: MetricsRegistry,
+    /// Pre-registered hot-path instrument handles (atomic updates
+    /// only — no name lookup, no lock, no allocation per dispatch).
+    obs: EngineObs,
+}
+
+/// The engine's pre-registered instrument handles.
+struct EngineObs {
+    /// Dispatches served (batches, not requests).
+    dispatches: Arc<Counter>,
+    /// Per-request latency share of each dispatch.
+    latency_ms: Arc<Histogram>,
+    /// Cumulative µs spent per stage, indexed by [`Stage::index`]
+    /// (only the engine-measured stages accumulate here).
+    stage_us: Vec<Arc<Counter>>,
+}
+
+impl EngineObs {
+    fn new(metrics: &MetricsRegistry) -> EngineObs {
+        EngineObs {
+            dispatches: metrics.counter("serve.dispatches"),
+            latency_ms: metrics.histogram("serve.per_request_ms"),
+            stage_us: Stage::all()
+                .iter()
+                .map(|s| {
+                    metrics.counter(&format!("serve.stage.{}.us", s.name()))
+                })
+                .collect(),
+        }
+    }
 }
 
 impl ServeEngine {
@@ -145,6 +183,8 @@ impl ServeEngine {
         planner: Planner,
         cfg: PlanConfig,
     ) -> Self {
+        let metrics = MetricsRegistry::new();
+        let obs = EngineObs::new(&metrics);
         ServeEngine {
             registry,
             plans: PlanCache::new(planner, cfg),
@@ -152,6 +192,9 @@ impl ServeEngine {
             pool: None,
             tuner: None,
             scratch: Mutex::new(Vec::new()),
+            trace: None,
+            metrics,
+            obs,
         }
     }
 
@@ -270,6 +313,29 @@ impl ServeEngine {
         self.tuner.is_some()
     }
 
+    /// Attach a stage-span recorder: dispatches emit plan-lookup /
+    /// partition / kernel / reduce / autotune-observe spans, and a
+    /// pooled engine's workers emit per-lane kernel spans. Without a
+    /// recorder the dispatch path pays one `Option` branch.
+    pub fn with_trace(mut self, rec: Arc<TraceRecorder>) -> Self {
+        if let Some(pool) = &self.pool {
+            pool.set_trace(rec.clone());
+        }
+        self.trace = Some(rec);
+        self
+    }
+
+    /// The attached span recorder, if tracing is on.
+    pub fn trace(&self) -> Option<&Arc<TraceRecorder>> {
+        self.trace.as_ref()
+    }
+
+    /// The engine's unified metrics registry (see
+    /// [`ServeEngine::metrics_snapshot`] for the one-call export).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
     /// Resolve the plan one dispatch against `entry` should run —
     /// shared by the live path ([`ServeEngine::execute_batch`]) and
     /// the virtual-time replay's model-only dispatcher so both obey
@@ -343,9 +409,31 @@ impl ServeEngine {
                 entry.name
             );
         }
+        let t_lookup = Instant::now();
         let (plan, plan_hit, arm) = self.plan_for_dispatch(entry);
-        let pool = self.pool.as_ref();
+        let lookup_s = t_lookup.elapsed().as_secs_f64();
         let batch = xs.len();
+        // Schedule attribution code of this dispatch (0 = none, else
+        // `ladder::schedule_code + 1`) — also the pool workers'
+        // kernel-span context.
+        let sched_code = crate::autotune::ladder::schedule_code(
+            plan.effective_schedule(batch),
+        ) as usize
+            + 1;
+        if let Some(rec) = &self.trace {
+            if rec.sampled() {
+                let us = lookup_s * 1e6;
+                let now = rec.now_us();
+                rec.record(0, Stage::PlanLookup, sched_code, now - us, us);
+                if !plan_hit {
+                    // A miss spent the lookup interval building the
+                    // plan: partitioning + format conversion.
+                    rec.record(0, Stage::Partition, sched_code, now - us, us);
+                }
+            }
+            rec.set_kernel_ctx(sched_code);
+        }
+        let pool = self.pool.as_ref();
         let (wall_seconds, threads, per_request_ms) = if batch == 1 {
             let st = plan.execute_into(&entry.csr, xs[0], pool, scratch);
             (st.wall_seconds, st.threads, st.per_request_ms())
@@ -353,6 +441,19 @@ impl ServeEngine {
             let st = plan.execute_batch_into(&entry.csr, xs, pool, scratch);
             (st.wall_seconds, st.threads, st.per_request_ms())
         };
+        if let Some(rec) = &self.trace {
+            // Pool workers emit their own per-lane kernel spans; an
+            // unpooled dispatch records the whole kernel at lane 0.
+            if self.pool.is_none() {
+                rec.record_elapsed(
+                    0,
+                    Stage::Kernel,
+                    sched_code,
+                    wall_seconds * 1e6,
+                );
+            }
+        }
+        let t_reduce = Instant::now();
         self.telemetry.record_batch(
             matrix_id,
             batch,
@@ -360,16 +461,49 @@ impl ServeEngine {
             2.0 * entry.csr.nnz() as f64 * batch as f64,
             plan.effective_schedule_name(batch),
         );
+        let reduce_s = t_reduce.elapsed().as_secs_f64();
+        if let Some(rec) = &self.trace {
+            rec.record_elapsed(0, Stage::Reduce, sched_code, reduce_s * 1e6);
+        }
+        self.obs.dispatches.inc();
+        self.obs.latency_ms.observe(per_request_ms);
+        self.obs.stage_us[Stage::PlanLookup.index()]
+            .add((lookup_s * 1e6) as u64);
+        self.obs.stage_us[Stage::Kernel.index()]
+            .add((wall_seconds * 1e6) as u64);
+        self.obs.stage_us[Stage::Reduce.index()]
+            .add((reduce_s * 1e6) as u64);
         // Close the loop on the engine's own clock (live serving).
         // External-clock tuners (virtual-time replay) are fed by the
         // caller instead — see `replay::Dispatcher`.
         if let (Some(t), Some(a)) = (&self.tuner, arm) {
             if t.wall_clock() {
-                if let Some(promoted) =
-                    t.observe(entry.fingerprint, a, per_request_ms, batch)
-                {
+                let stages = StageObs {
+                    plan_lookup_ms: lookup_s * 1e3,
+                    kernel_ms: wall_seconds * 1e3,
+                    reduce_ms: reduce_s * 1e3,
+                };
+                let t_obs = Instant::now();
+                if let Some(promoted) = t.observe_staged(
+                    entry.fingerprint,
+                    a,
+                    per_request_ms,
+                    batch,
+                    &stages,
+                ) {
                     self.plans.replace(entry.fingerprint, promoted);
                 }
+                let obs_s = t_obs.elapsed().as_secs_f64();
+                if let Some(rec) = &self.trace {
+                    rec.record_elapsed(
+                        0,
+                        Stage::AutotuneObserve,
+                        sched_code,
+                        obs_s * 1e6,
+                    );
+                }
+                self.obs.stage_us[Stage::AutotuneObserve.index()]
+                    .add((obs_s * 1e6) as u64);
             }
         }
         Ok(BatchStats {
@@ -431,6 +565,134 @@ impl ServeEngine {
         });
         self.put_scratch(scratch);
         out
+    }
+
+    /// One unified snapshot of every observability surface the engine
+    /// carries — serving stats (including queue wait), plan-cache
+    /// counters, executor-pool occupancy, autotune state, and the raw
+    /// instrument registry — under one stable schema
+    /// (`ft2000.metrics.v1`). Throughput inside `serve` uses the
+    /// pool's uptime when pooled (0 otherwise; callers holding a real
+    /// measurement window use `telemetry::report_json` directly).
+    pub fn metrics_snapshot(&self) -> Json {
+        let stats = self.telemetry.snapshot();
+        let (hits, misses) = self.plans.stats();
+        let duration_s = self.pool.as_ref().map_or(0.0, ExecPool::uptime_s);
+        // Refresh the gauges the instrument registry also reports.
+        let scratch_bytes: usize = {
+            let arenas = self.scratch.lock().unwrap();
+            arenas.iter().map(Scratch::footprint_bytes).sum()
+        };
+        self.metrics
+            .gauge("serve.scratch.bytes")
+            .set(scratch_bytes as f64);
+        let pool_json = self.pool.as_ref().map(|pool| {
+            let up = pool.uptime_s();
+            let lanes: Vec<Json> = pool
+                .worker_tallies()
+                .into_iter()
+                .enumerate()
+                .map(|(i, (slots, busy_s))| {
+                    let share = if up > 0.0 { busy_s / up } else { 0.0 };
+                    self.metrics
+                        .gauge(&format!("pool.lane{i}.busy_share"))
+                        .set(share);
+                    Json::Obj(
+                        [
+                            ("lane".to_string(), Json::Num(i as f64)),
+                            ("slots".to_string(), Json::Num(slots as f64)),
+                            ("busy_s".to_string(), Json::Num(busy_s)),
+                            ("busy_share".to_string(), Json::Num(share)),
+                        ]
+                        .into_iter()
+                        .collect(),
+                    )
+                })
+                .collect();
+            Json::Obj(
+                [
+                    (
+                        "workers".to_string(),
+                        Json::Num(pool.n_workers() as f64),
+                    ),
+                    (
+                        "jobs".to_string(),
+                        Json::Num(pool.jobs_dispatched() as f64),
+                    ),
+                    ("uptime_s".to_string(), Json::Num(up)),
+                    ("lanes".to_string(), Json::Arr(lanes)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        });
+        let tune_json = self.tuner.as_ref().map(|t| {
+            let (promotions, demotions) = t.totals();
+            Json::Obj(
+                [
+                    (
+                        "tuners".to_string(),
+                        Json::Num(t.tuner_count() as f64),
+                    ),
+                    (
+                        "promotions".to_string(),
+                        Json::Num(promotions as f64),
+                    ),
+                    ("demotions".to_string(), Json::Num(demotions as f64)),
+                    (
+                        "dataset_rows".to_string(),
+                        Json::Num(t.dataset_len() as f64),
+                    ),
+                    (
+                        "summaries".to_string(),
+                        crate::autotune::autotune_json(&t.summaries()),
+                    ),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        });
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "schema".to_string(),
+            Json::Str("ft2000.metrics.v1".to_string()),
+        );
+        obj.insert(
+            "serve".to_string(),
+            telemetry::report_json(&stats, hits, misses, duration_s),
+        );
+        obj.insert(
+            "plan_cache".to_string(),
+            Json::Obj(
+                [
+                    ("hits".to_string(), Json::Num(hits as f64)),
+                    ("misses".to_string(), Json::Num(misses as f64)),
+                    (
+                        "hit_rate".to_string(),
+                        self.plans.hit_rate().map_or(Json::Null, Json::Num),
+                    ),
+                    (
+                        "evictions".to_string(),
+                        Json::Num(self.plans.evictions() as f64),
+                    ),
+                    (
+                        "replacements".to_string(),
+                        Json::Num(self.plans.replacements() as f64),
+                    ),
+                    ("len".to_string(), Json::Num(self.plans.len() as f64)),
+                    (
+                        "capacity".to_string(),
+                        Json::Num(self.plans.capacity() as f64),
+                    ),
+                ]
+                .into_iter()
+                .collect(),
+            ),
+        );
+        obj.insert("pool".to_string(), pool_json.unwrap_or(Json::Null));
+        obj.insert("autotune".to_string(), tune_json.unwrap_or(Json::Null));
+        obj.insert("registry".to_string(), self.metrics.snapshot());
+        Json::Obj(obj)
     }
 }
 
@@ -617,6 +879,93 @@ mod tests {
         assert_eq!(s.observations, 40, "every dispatch must be observed");
         assert!(s.arms > 1, "the ladder must hold real alternatives");
         assert!(!tuner.dataset().is_empty());
+    }
+
+    #[test]
+    fn metrics_snapshot_unifies_every_surface() {
+        use crate::obs::{ClockMode, Stage, TraceConfig, TraceRecorder};
+        let mut rng = Pcg32::new(0xE0E8);
+        let csr = generators::random_uniform(160, 5, &mut rng);
+        let x: Vec<f64> = (0..160).map(|_| rng.gen_f64()).collect();
+        let mut reg = MatrixRegistry::new();
+        reg.register("m", csr);
+        let rec = Arc::new(TraceRecorder::new(
+            TraceConfig::on(),
+            ClockMode::Wall,
+            5,
+        ));
+        let engine =
+            ServeEngine::pooled(reg, Planner::Heuristic, PlanConfig::default())
+                .with_tuner(crate::autotune::AutotuneConfig::default())
+                .with_trace(rec.clone());
+        for _ in 0..12 {
+            engine.serve_batch(0, &[&x]).unwrap();
+            engine.serve_batch(0, &[&x, &x]).unwrap();
+        }
+        engine.telemetry.record_queue_wait_ms(0.2);
+        let snap = engine.metrics_snapshot();
+        let parsed = crate::util::json::parse(&snap.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("schema").unwrap().as_str(),
+            Some("ft2000.metrics.v1")
+        );
+        let serve = parsed.get("serve").unwrap();
+        assert_eq!(serve.get("requests").unwrap().as_usize(), Some(36));
+        assert_eq!(
+            serve
+                .get("queue_wait_ms")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_usize(),
+            Some(1)
+        );
+        let pc = parsed.get("plan_cache").unwrap();
+        assert_eq!(pc.get("misses").unwrap().as_usize(), Some(1));
+        assert!(pc.get("hits").unwrap().as_usize().unwrap() > 0);
+        let pool = parsed.get("pool").unwrap();
+        assert!(
+            pool.get("lanes").unwrap().as_arr().unwrap().len() >= 2,
+            "dispatcher lane + at least one worker lane"
+        );
+        let tune = parsed.get("autotune").unwrap();
+        assert_eq!(tune.get("tuners").unwrap().as_usize(), Some(1));
+        assert_eq!(tune.get("dataset_rows").unwrap().as_usize(), Some(24));
+        let reg_snap = parsed.get("registry").unwrap();
+        assert_eq!(
+            reg_snap.get("serve.dispatches").unwrap().as_usize(),
+            Some(24)
+        );
+        assert_eq!(
+            reg_snap
+                .get("serve.per_request_ms")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_usize(),
+            Some(24)
+        );
+        assert!(
+            reg_snap.get("serve.scratch.bytes").unwrap().as_f64().unwrap()
+                > 0.0,
+            "warmed arenas must report a footprint"
+        );
+        // The dispatch path recorded its engine-side stage spans, and
+        // the pool its kernel spans.
+        let cells = rec.flame_cells();
+        for stage in [
+            Stage::PlanLookup,
+            Stage::Partition,
+            Stage::Kernel,
+            Stage::Reduce,
+            Stage::AutotuneObserve,
+        ] {
+            assert!(
+                cells.keys().any(|(s, _)| *s == stage.index()),
+                "missing {} spans",
+                stage.name()
+            );
+        }
     }
 
     #[test]

@@ -15,10 +15,14 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::autotune::StageObs;
 use crate::exec::SPMM_COL_BLOCK;
+use crate::obs::trace::SCHED_NONE;
+use crate::obs::{chrome_document, ClockMode, Stage, TraceRecorder};
 use crate::sched::panel_core_range;
 use crate::sim::topology::Topology;
 use crate::util::json::Json;
@@ -122,6 +126,15 @@ pub struct ReplayConfig {
     /// the caller supplies the engine, so it attaches the tuner
     /// itself ([`ServeEngine::with_tuner`]) and this knob is moot.
     pub tune: Option<crate::autotune::AutotuneConfig>,
+    /// Attach a *virtual-clock* span recorder to every engine built
+    /// by the replay harness ([`replay_sharded`]'s panels): spans are
+    /// stamped on the deterministic replay timeline and exported per
+    /// shard via [`ShardedReplayReport::export_chrome`]. For
+    /// [`replay`] the caller supplies the engine, so it attaches the
+    /// recorder itself ([`ServeEngine::with_trace`], mode
+    /// [`ClockMode::Virtual`]); the harness drives whatever recorder
+    /// the engine carries.
+    pub trace: Option<crate::obs::TraceConfig>,
     pub cost: CostModel,
 }
 
@@ -134,6 +147,7 @@ impl Default for ReplayConfig {
             execute: true,
             pooled: true,
             tune: None,
+            trace: None,
             cost: CostModel::default(),
         }
     }
@@ -265,7 +279,41 @@ impl Dispatcher<'_> {
             // engine helper as the executed path (cache + promoted
             // winner + tuner arm pick), so both replays of one seed
             // share a bit-identical timeline by construction.
-            let (plan, _, arm) = self.engine.plan_for_dispatch(entry);
+            let t_lookup = Instant::now();
+            let (plan, plan_hit, arm) = self.engine.plan_for_dispatch(entry);
+            let lookup_us = t_lookup.elapsed().as_secs_f64() * 1e6;
+            let sched = crate::autotune::ladder::schedule_code(
+                plan.effective_schedule(size),
+            ) as usize
+                + 1;
+            // The executed path's spans come from the engine; the
+            // model path records its own so traced model-only
+            // replays still decompose by stage. Durations are the
+            // real (wall) cost of the code; timestamps follow the
+            // recorder's virtual clock.
+            if let Some(rec) = self.engine.trace() {
+                rec.set_kernel_ctx(sched);
+                if rec.sampled() {
+                    let now = rec.now_us();
+                    rec.record(
+                        0,
+                        Stage::PlanLookup,
+                        sched,
+                        now - lookup_us,
+                        lookup_us,
+                    );
+                    if !plan_hit {
+                        rec.record(
+                            0,
+                            Stage::Partition,
+                            sched,
+                            now - lookup_us,
+                            lookup_us,
+                        );
+                    }
+                }
+            }
+            let t_reduce = Instant::now();
             self.engine.telemetry.record_batch(
                 id,
                 size,
@@ -273,6 +321,14 @@ impl Dispatcher<'_> {
                 0.0,
                 plan.effective_schedule_name(size),
             );
+            if let Some(rec) = self.engine.trace() {
+                rec.record_elapsed(
+                    0,
+                    Stage::Reduce,
+                    sched,
+                    t_reduce.elapsed().as_secs_f64() * 1e6,
+                );
+            }
             // Effective (not configured) parallelism, the same count
             // the executed path reports — execute=true and model-only
             // replays of one seed share a bit-identical timeline.
@@ -297,9 +353,27 @@ impl Dispatcher<'_> {
             return;
         }
         let per_request_ms = service_s * 1e3 / batch.max(1) as f64;
-        if let Some(promoted) =
-            tuner.observe(disp.fingerprint, arm, per_request_ms, batch)
-        {
+        // The modeled service time is all kernel as far as the stage
+        // columns go — the model has no measured lookup/reduce split.
+        let stages =
+            StageObs { kernel_ms: service_s * 1e3, ..StageObs::default() };
+        let t0 = Instant::now();
+        let promoted = tuner.observe_staged(
+            disp.fingerprint,
+            arm,
+            per_request_ms,
+            batch,
+            &stages,
+        );
+        if let Some(rec) = self.engine.trace() {
+            rec.record_elapsed(
+                0,
+                Stage::AutotuneObserve,
+                SCHED_NONE,
+                t0.elapsed().as_secs_f64() * 1e6,
+            );
+        }
+        if let Some(promoted) = promoted {
             self.engine.plans.replace(disp.fingerprint, promoted);
         }
     }
@@ -356,6 +430,14 @@ pub struct ShardedReplayReport {
     pub cores: Vec<(usize, usize)>,
     /// Makespan of the slowest shard (shards run in parallel).
     pub duration_s: f64,
+    /// Per-shard virtual-clock span recorders when
+    /// [`ReplayConfig::trace`] was on (parallel to `shards`; empty
+    /// otherwise).
+    pub traces: Vec<Arc<TraceRecorder>>,
+    /// Per-shard unified engine metrics snapshots
+    /// ([`ServeEngine::metrics_snapshot`]), captured before the
+    /// harness engines wound down (parallel to `shards`).
+    pub metrics: Vec<Json>,
 }
 
 impl ShardedReplayReport {
@@ -437,6 +519,43 @@ impl ShardedReplayReport {
         );
         Json::Obj(obj)
     }
+
+    /// Merge every shard's spans into one Chrome `trace_event`
+    /// document, `pid` = shard index (empty when tracing was off).
+    pub fn export_chrome(&self) -> Json {
+        let mut events = Vec::new();
+        for (i, rec) in self.traces.iter().enumerate() {
+            events.extend(rec.chrome_events(i));
+        }
+        chrome_document(events)
+    }
+
+    /// Fleet metrics document mirroring
+    /// `ShardedServer::metrics_snapshot`: merged serve roll-up plus
+    /// the per-shard engine snapshots under one schema tag.
+    pub fn metrics_json(&self) -> Json {
+        let merged = self.merged();
+        Json::Obj(
+            [
+                (
+                    "schema".to_string(),
+                    Json::Str("ft2000.metrics.sharded.v1".to_string()),
+                ),
+                (
+                    "serve".to_string(),
+                    report_json(
+                        &merged.stats,
+                        merged.cache_hits,
+                        merged.cache_misses,
+                        self.duration_s,
+                    ),
+                ),
+                ("shards".to_string(), Json::Arr(self.metrics.clone())),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
 }
 
 /// Sharded virtual-time replay: the generated request stream is
@@ -515,6 +634,8 @@ pub fn replay_sharded(
     let topo = Topology::ft2000plus();
     let mut out = Vec::with_capacity(shards);
     let mut cores = Vec::with_capacity(shards);
+    let mut traces = Vec::new();
+    let mut metrics = Vec::with_capacity(shards);
     let mut makespan = 0.0f64;
     for (s, sub) in per_shard.iter().enumerate() {
         let shard_cores = panel_core_range(&topo, s, shards);
@@ -552,6 +673,23 @@ pub fn replay_sharded(
             }
             None => engine,
         };
+        // Traced shards carry a virtual-clock recorder the replay
+        // loops advance; lane 0 is the dispatcher, lanes 1..=W the
+        // shard pool's workers (when kernels really execute).
+        let trace = cfg.trace.filter(|t| t.enabled).map(|t| {
+            Arc::new(TraceRecorder::new(
+                t,
+                ClockMode::Virtual,
+                shard_cores.1.saturating_sub(shard_cores.0) + 1,
+            ))
+        });
+        let engine = match &trace {
+            Some(rec) => engine.with_trace(rec.clone()),
+            None => engine,
+        };
+        if let Some(rec) = trace {
+            traces.push(rec);
+        }
         let duration_s = if sub.is_empty() {
             0.0
         } else {
@@ -571,6 +709,7 @@ pub fn replay_sharded(
         makespan = makespan.max(duration_s);
         let stats = engine.telemetry.snapshot();
         let (cache_hits, cache_misses) = engine.plans.stats();
+        metrics.push(engine.metrics_snapshot());
         out.push(ReplayReport {
             stats,
             cache_hits,
@@ -580,7 +719,13 @@ pub fn replay_sharded(
             autotune: engine.tuner().map(|t| t.summaries()),
         });
     }
-    Ok(ShardedReplayReport { shards: out, cores, duration_s: makespan })
+    Ok(ShardedReplayReport {
+        shards: out,
+        cores,
+        duration_s: makespan,
+        traces,
+        metrics,
+    })
 }
 
 /// Open-loop replay: arrivals are fixed by the workload; one virtual
@@ -594,6 +739,7 @@ fn replay_open(
     let n = reqs.len();
     let max_batch = cfg.max_batch.max(1);
     let cap = cfg.queue_cap;
+    let rec = d.engine.trace().cloned();
     let mut i = 0usize; // next arrival to admit
     let mut queue: VecDeque<usize> = VecDeque::new();
     let mut t = 0.0f64; // server-free time
@@ -609,6 +755,11 @@ fn replay_open(
             } else {
                 queue.push_back(i);
             }
+            if let Some(rec) = &rec {
+                // Instantaneous admission decision at arrival time.
+                rec.set_virtual_s(reqs[i].arrival_s);
+                rec.record_elapsed(0, Stage::Admission, SCHED_NONE, 0.0);
+            }
             i += 1;
         }
         // Hold the batch window, admitting late concurrent arrivals.
@@ -618,6 +769,10 @@ fn replay_open(
                 d.engine.telemetry.record_rejected(1);
             } else {
                 queue.push_back(i);
+            }
+            if let Some(rec) = &rec {
+                rec.set_virtual_s(reqs[i].arrival_s);
+                rec.record_elapsed(0, Stage::Admission, SCHED_NONE, 0.0);
             }
             i += 1;
         }
@@ -633,11 +788,41 @@ fn replay_open(
             }
         }
         queue = rest;
+        // Queue wait ends at dispatch: stamp it (and the virtual
+        // clock the engine's own spans will read) before running.
+        if let Some(rec) = &rec {
+            rec.set_virtual_s(t_dispatch);
+        }
+        for &k in &batch {
+            let wait_ms = (t_dispatch - reqs[k].arrival_s).max(0.0) * 1e3;
+            d.engine.telemetry.record_queue_wait_ms(wait_ms);
+            if let Some(rec) = &rec {
+                rec.record_elapsed(
+                    0,
+                    Stage::QueueWait,
+                    SCHED_NONE,
+                    wait_ms * 1e3,
+                );
+            }
+        }
         let disp = d.run(mid, batch.len());
         let service_s =
             cfg.cost.service_s(disp.nnz, batch.len(), disp.threads);
         d.feedback(&disp, service_s, batch.len());
         let completion = t_dispatch + service_s;
+        if let Some(rec) = &rec {
+            rec.set_virtual_s(completion);
+            // Executed replays get real kernel spans from the engine;
+            // the model path records the modeled span instead.
+            if !d.execute {
+                rec.record_elapsed(
+                    0,
+                    Stage::Kernel,
+                    rec.kernel_ctx(),
+                    service_s * 1e6,
+                );
+            }
+        }
         for &k in &batch {
             d.engine.telemetry.record_latency_ms(
                 (completion - reqs[k].arrival_s) * 1e3,
@@ -662,6 +847,7 @@ fn replay_closed(
 ) -> f64 {
     let n = reqs.len();
     let max_batch = cfg.max_batch.max(1);
+    let rec = d.engine.trace().cloned();
     let mut seq = 0usize; // next matrix assignment
     // Per client: Some((issue_time, matrix_idx)) while a request is
     // outstanding.
@@ -669,6 +855,11 @@ fn replay_closed(
     for _ in 0..clients.min(n) {
         outstanding.push(Some((0.0, reqs[seq].matrix_idx)));
         seq += 1;
+        if let Some(rec) = &rec {
+            // Client issue = admission on the virtual timeline.
+            rec.set_virtual_s(0.0);
+            rec.record_elapsed(0, Stage::Admission, SCHED_NONE, 0.0);
+        }
     }
     let mut t_free = 0.0f64;
     let mut completed = 0usize;
@@ -696,11 +887,39 @@ fn replay_closed(
             .take(max_batch)
             .map(|&(ti, c, _)| (ti, c))
             .collect();
+        // Queue wait ends when service starts; the engine's own
+        // spans read the virtual clock set here.
+        if let Some(rec) = &rec {
+            rec.set_virtual_s(t_start);
+        }
+        for &(issue, _) in &batch {
+            let wait_ms = (t_start - issue).max(0.0) * 1e3;
+            d.engine.telemetry.record_queue_wait_ms(wait_ms);
+            if let Some(rec) = &rec {
+                rec.record_elapsed(
+                    0,
+                    Stage::QueueWait,
+                    SCHED_NONE,
+                    wait_ms * 1e3,
+                );
+            }
+        }
         let disp = d.run(mid, batch.len());
         let service_s =
             cfg.cost.service_s(disp.nnz, batch.len(), disp.threads);
         d.feedback(&disp, service_s, batch.len());
         let completion = t_start + service_s;
+        if let Some(rec) = &rec {
+            rec.set_virtual_s(completion);
+            if !d.execute {
+                rec.record_elapsed(
+                    0,
+                    Stage::Kernel,
+                    rec.kernel_ctx(),
+                    service_s * 1e6,
+                );
+            }
+        }
         for &(issue, c) in &batch {
             d.engine
                 .telemetry
@@ -709,6 +928,11 @@ fn replay_closed(
             outstanding[c] = if seq < n {
                 let m = reqs[seq].matrix_idx;
                 seq += 1;
+                if let Some(rec) = &rec {
+                    // Re-issue: the next admission lands at this
+                    // completion time.
+                    rec.record_elapsed(0, Stage::Admission, SCHED_NONE, 0.0);
+                }
                 Some((completion, m))
             } else {
                 None
@@ -986,6 +1210,132 @@ mod tests {
             summaries.iter().any(|s| s.promotions >= 1),
             "sharded tuners must promote on this corpus"
         );
+    }
+
+    #[test]
+    fn traced_model_replay_covers_every_stage() {
+        use crate::autotune::AutotuneConfig;
+        use crate::obs::TraceConfig;
+
+        let spec = zipf_spec(300);
+        let cfg = ReplayConfig { execute: false, ..ReplayConfig::default() };
+        let tuned = || {
+            let (engine, ids) = fresh_engine();
+            let engine = engine.with_tuner(AutotuneConfig {
+                wall_clock: false,
+                ..AutotuneConfig::default()
+            });
+            (engine, ids)
+        };
+        // Untraced baseline timeline.
+        let (engine, ids) = tuned();
+        let base = replay(&engine, &ids, &spec, &cfg).unwrap();
+
+        let (engine, ids) = tuned();
+        let rec = Arc::new(TraceRecorder::new(
+            TraceConfig::on(),
+            ClockMode::Virtual,
+            1,
+        ));
+        let engine = engine.with_trace(rec.clone());
+        let report = replay(&engine, &ids, &spec, &cfg).unwrap();
+        // Tracing must not perturb the deterministic timeline.
+        assert_eq!(
+            report.duration_s.to_bits(),
+            base.duration_s.to_bits(),
+            "tracing changed the virtual timeline"
+        );
+        // Queue wait is digested for every served request.
+        assert_eq!(report.stats.queue_wait.count, 300);
+        // The export is valid JSON and names all seven stage tags.
+        let doc = rec.export_chrome();
+        let parsed = crate::util::json::parse(&doc.to_string())
+            .expect("chrome export must be parseable JSON");
+        let events =
+            parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        let names: std::collections::BTreeSet<&str> = events
+            .iter()
+            .filter_map(|e| e.get("name").and_then(Json::as_str))
+            .collect();
+        for stage in Stage::all() {
+            assert!(
+                names.contains(stage.name()),
+                "stage {} missing from the trace",
+                stage.name()
+            );
+        }
+        // Spans sit on the virtual timeline, inside the makespan
+        // (durations are wall-measured, so starts may dip slightly
+        // below zero on the very first dispatches).
+        let limit = report.duration_s * 1e6 + 1.0;
+        for e in events {
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts <= limit, "span ts {ts} past the makespan");
+        }
+    }
+
+    #[test]
+    fn traced_sharded_replay_exports_merged_documents() {
+        use std::sync::Arc;
+
+        use crate::obs::TraceConfig;
+        use crate::service::shard::PlacementPolicy;
+
+        let mut rng = Pcg32::new(0xAB1E);
+        let mut reg = MatrixRegistry::new();
+        let ids = vec![
+            reg.register("banded", generators::banded(256, 4, &mut rng)),
+            reg.register(
+                "random",
+                generators::random_uniform(256, 6, &mut rng),
+            ),
+            reg.register(
+                "skewed",
+                generators::dense_row_block(256, 2048, &mut rng),
+            ),
+        ];
+        let cfg = ReplayConfig {
+            execute: false,
+            trace: Some(TraceConfig::on()),
+            ..ReplayConfig::default()
+        };
+        let report = replay_sharded(
+            Arc::new(reg),
+            &Planner::Heuristic,
+            &PlanConfig::default(),
+            &ids,
+            &zipf_spec(400),
+            &cfg,
+            4,
+            PlacementPolicy::HotReplicate { hot: 1 },
+        )
+        .unwrap();
+        assert_eq!(report.traces.len(), 4, "one recorder per shard");
+        assert_eq!(report.metrics.len(), 4, "one snapshot per shard");
+        // One merged Chrome document; pid identifies the shard.
+        let doc = report.export_chrome();
+        let events =
+            doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(!events.is_empty());
+        let pids: std::collections::BTreeSet<usize> = events
+            .iter()
+            .map(|e| e.get("pid").and_then(Json::as_usize).unwrap())
+            .collect();
+        assert!(pids.len() >= 2, "several shards must contribute spans");
+        // Fleet metrics document wraps the per-shard snapshots.
+        let m = report.metrics_json();
+        assert_eq!(
+            m.get("schema").and_then(Json::as_str),
+            Some("ft2000.metrics.sharded.v1")
+        );
+        assert_eq!(
+            m.get("shards").and_then(Json::as_arr).map(|a| a.len()),
+            Some(4)
+        );
+        assert!(m.get("serve").and_then(|s| s.get("requests")).is_some());
+        // Queue wait flows into the merged digest under replay too.
+        assert_eq!(report.merged().stats.queue_wait.count, 400);
     }
 
     #[test]

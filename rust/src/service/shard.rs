@@ -24,13 +24,18 @@
 //!   optional per-request deadline sheds stale backlog at pop time —
 //!   overload degrades throughput, it never panics the server.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::autotune::AutotuneConfig;
+use crate::obs::{
+    chrome_document, ClockMode, Stage, TraceConfig, TraceRecorder,
+};
 use crate::sched::panel_core_range;
 use crate::sim::topology::Topology;
+use crate::util::json::Json;
 
 use super::batch::{drain_worker, PushError, Request, RequestQueue};
 use super::plan::{PlanConfig, Planner};
@@ -175,6 +180,12 @@ pub struct ShardConfig {
     /// engine explores plan variants thread-bounded by its own panel
     /// core range and promotes winners into its private plan cache.
     pub tune: Option<AutotuneConfig>,
+    /// Stage-level span tracing: each shard gets its own wall-clock
+    /// [`TraceRecorder`] (one ring per pool lane), merged into a
+    /// single Chrome document by [`ShardedServer::export_chrome`]
+    /// with `pid` = shard index. `None` (the default) records
+    /// nothing and costs nothing on the hot path.
+    pub trace: Option<TraceConfig>,
 }
 
 impl Default for ShardConfig {
@@ -188,6 +199,7 @@ impl Default for ShardConfig {
             policy: PlacementPolicy::HotReplicate { hot: 2 },
             pooled: true,
             tune: None,
+            trace: None,
         }
     }
 }
@@ -220,6 +232,8 @@ pub struct Shard {
     /// std has no affinity API, the point is that each shard's
     /// working set (and resident worker set) stays disjoint.
     pub cores: (usize, usize),
+    /// This shard's span recorder when [`ShardConfig::trace`] is on.
+    pub trace: Option<Arc<TraceRecorder>>,
 }
 
 /// The sharded serving engine.
@@ -294,10 +308,25 @@ impl ShardedServer {
                     }
                     None => engine,
                 };
+                // Traced shards carry their own wall-clock recorder:
+                // lane 0 is the dispatcher, lanes 1..=W the shard's
+                // pool workers (one per panel core).
+                let trace = cfg.trace.filter(|t| t.enabled).map(|t| {
+                    Arc::new(TraceRecorder::new(
+                        t,
+                        ClockMode::Wall,
+                        cores.1 - cores.0 + 1,
+                    ))
+                });
+                let engine = match &trace {
+                    Some(rec) => engine.with_trace(rec.clone()),
+                    None => engine,
+                };
                 Shard {
                     engine,
                     queue: RequestQueue::bounded(cfg.queue_cap),
                     cores,
+                    trace,
                 }
             })
             .collect();
@@ -321,19 +350,31 @@ impl ShardedServer {
     /// full, or closed) are counted in the owning shard's telemetry
     /// and reported — admission control, not a panic.
     pub fn submit(&self, req: Request) -> Admitted {
+        let t0 = Instant::now();
         let shard = match self.placement.home(req.matrix_id) {
             Some(s) => s,
             None => {
                 self.rr.fetch_add(1, Ordering::Relaxed) % self.cfg.shards
             }
         };
-        match self.shards[shard].queue.try_push(req) {
+        let admitted = match self.shards[shard].queue.try_push(req) {
             Ok(()) => Admitted::Shard(shard),
             Err(PushError::Full) | Err(PushError::Closed) => {
                 self.shards[shard].engine.telemetry.record_rejected(1);
                 Admitted::Rejected { shard }
             }
+        };
+        // Admission span (routing + enqueue/reject) on the routed
+        // shard's dispatcher lane — rejections are admissions too.
+        if let Some(rec) = &self.shards[shard].trace {
+            rec.record_elapsed(
+                0,
+                Stage::Admission,
+                crate::obs::trace::SCHED_NONE,
+                t0.elapsed().as_secs_f64() * 1e6,
+            );
         }
+        admitted
     }
 
     /// No more submissions; workers drain the backlogs and exit.
@@ -426,6 +467,64 @@ impl ShardedServer {
                 None => (p, d),
             }
         })
+    }
+
+    /// Per-shard span recorders (empty when tracing is off).
+    pub fn traces(&self) -> Vec<Arc<TraceRecorder>> {
+        self.shards.iter().filter_map(|s| s.trace.clone()).collect()
+    }
+
+    /// Total spans recorded across all shard recorders.
+    pub fn spans_recorded(&self) -> usize {
+        self.shards
+            .iter()
+            .filter_map(|s| s.trace.as_ref())
+            .map(|r| r.spans_recorded())
+            .sum()
+    }
+
+    /// Merge every shard's spans into one Chrome `trace_event`
+    /// document, `pid` = shard index so chrome://tracing groups each
+    /// shard's lanes as its own process row.
+    pub fn export_chrome(&self) -> Json {
+        let mut events = Vec::new();
+        for (i, s) in self.shards.iter().enumerate() {
+            if let Some(rec) = &s.trace {
+                events.extend(rec.chrome_events(i));
+            }
+        }
+        chrome_document(events)
+    }
+
+    /// Fleet metrics document: merged serve roll-up plus every
+    /// shard's unified [`ServeEngine::metrics_snapshot`] under one
+    /// schema tag.
+    pub fn metrics_snapshot(&self, duration_s: f64) -> Json {
+        let (hits, misses) = self.cache_totals();
+        let mut doc = BTreeMap::new();
+        doc.insert(
+            "schema".to_string(),
+            Json::Str("ft2000.metrics.sharded.v1".to_string()),
+        );
+        doc.insert(
+            "serve".to_string(),
+            super::telemetry::report_json(
+                &self.merged_stats(),
+                hits,
+                misses,
+                duration_s,
+            ),
+        );
+        doc.insert(
+            "shards".to_string(),
+            Json::Arr(
+                self.shards
+                    .iter()
+                    .map(|s| s.engine.metrics_snapshot())
+                    .collect(),
+            ),
+        );
+        Json::Obj(doc)
     }
 }
 
@@ -623,6 +722,88 @@ mod tests {
         );
         assert!(untuned.autotune_summaries().is_empty());
         assert_eq!(untuned.autotune_totals(), (0, 0));
+    }
+
+    #[test]
+    fn traced_shards_record_spans_and_export_one_document() {
+        let reg = registry(4);
+        let server = ShardedServer::new(
+            reg.clone(),
+            Planner::Heuristic,
+            PlanConfig::default(),
+            ShardConfig {
+                shards: 2,
+                queue_cap: 0,
+                workers_per_shard: 1,
+                trace: Some(TraceConfig::on()),
+                ..ShardConfig::default()
+            },
+        );
+        assert_eq!(server.traces().len(), 2, "one recorder per shard");
+        let served = std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..40 {
+                    let id = i % reg.len();
+                    let n = reg.entry(id).csr.n_cols;
+                    server.submit(Request::new(id, vec![1.0; n]));
+                }
+                server.close();
+            });
+            server.serve()
+        });
+        assert_eq!(served, 40);
+        // Admission stamps at submit, QueueWait at dispatch, Kernel
+        // inside the shard pools — all three must surface somewhere
+        // across the fleet's recorders.
+        let mut stages = std::collections::BTreeSet::new();
+        for rec in server.traces() {
+            for ((stage, _), _) in rec.flame_cells() {
+                stages.insert(stage);
+            }
+        }
+        for want in [Stage::Admission, Stage::QueueWait, Stage::Kernel] {
+            assert!(
+                stages.contains(&want.index()),
+                "missing {} spans across shards",
+                want.name()
+            );
+        }
+        assert!(server.spans_recorded() >= 3 * 40);
+        // One merged Chrome document; pid identifies the shard.
+        let doc = server.export_chrome();
+        let events =
+            doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(events.len() >= 3 * 40);
+        let pids: std::collections::BTreeSet<usize> = events
+            .iter()
+            .map(|e| e.get("pid").and_then(Json::as_usize).unwrap())
+            .collect();
+        assert_eq!(pids.len(), 2, "both shards must contribute spans");
+        // Fleet metrics: merged roll-up plus one engine snapshot per
+        // shard under the sharded schema tag.
+        let m = server.metrics_snapshot(1.0);
+        assert_eq!(
+            m.get("schema").and_then(Json::as_str),
+            Some("ft2000.metrics.sharded.v1")
+        );
+        let shards = m.get("shards").and_then(Json::as_arr).unwrap();
+        assert_eq!(shards.len(), 2);
+        for s in shards {
+            assert_eq!(
+                s.get("schema").and_then(Json::as_str),
+                Some("ft2000.metrics.v1")
+            );
+        }
+        assert!(m.get("serve").and_then(|s| s.get("requests")).is_some());
+        // Untraced servers carry no recorders and export nothing.
+        let quiet = ShardedServer::new(
+            reg,
+            Planner::Heuristic,
+            PlanConfig::default(),
+            ShardConfig { shards: 2, ..ShardConfig::default() },
+        );
+        assert!(quiet.traces().is_empty());
+        assert_eq!(quiet.spans_recorded(), 0);
     }
 
     #[test]

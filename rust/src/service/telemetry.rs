@@ -113,6 +113,13 @@ pub struct ServeStats {
     pub latencies_ms: Vec<f64>,
     /// Streaming latency summary (exact count/mean/max, P² p50/95/99).
     pub digest: LatencyDigest,
+    /// Streaming enqueue-to-dispatch wait summary, tracked separately
+    /// from service time: requests are stamped at enqueue (live
+    /// queues) or arrival (virtual replay timelines) and the wait is
+    /// observed when their batch is popped for dispatch. End-to-end
+    /// latency = queue wait + service; this digest makes the split
+    /// visible.
+    pub queue_wait: LatencyDigest,
     /// Requests refused at admission (bounded queue full / closed).
     pub rejected: u64,
     /// Requests dropped by deadline-based load shedding.
@@ -160,6 +167,11 @@ impl ServeStats {
         if self.latencies_ms.len() < LATENCY_RESERVOIR_CAP {
             self.latencies_ms.push(ms);
         }
+    }
+
+    /// Record one request's enqueue-to-dispatch wait.
+    pub fn record_queue_wait_ms(&mut self, ms: f64) {
+        self.queue_wait.observe(ms);
     }
 
     pub fn record_rejected(&mut self, n: u64) {
@@ -231,6 +243,7 @@ impl ServeStats {
             }
         }
         self.digest.merge(&other.digest);
+        self.queue_wait.merge(&other.queue_wait);
         self.rejected += other.rejected;
         self.shed += other.shed;
         self.errors += other.errors;
@@ -264,6 +277,10 @@ impl Telemetry {
 
     pub fn record_latency_ms(&self, ms: f64) {
         self.inner.lock().unwrap().record_latency_ms(ms);
+    }
+
+    pub fn record_queue_wait_ms(&self, ms: f64) {
+        self.inner.lock().unwrap().record_queue_wait_ms(ms);
     }
 
     pub fn record_rejected(&self, n: u64) {
@@ -302,7 +319,8 @@ pub fn shard_table(snaps: &[ShardSnapshot]) -> Table {
         "Per-shard serving stats (shard = modeled FT-2000+ panel)",
         &[
             "shard", "cores", "req", "rej", "shed", "err", "req/s",
-            "p50 ms", "p95 ms", "p99 ms", "batch", "hit%",
+            "p50 ms", "p95 ms", "p99 ms", "qw p50", "qw p95", "batch",
+            "hit%",
         ],
     );
     for s in snaps {
@@ -331,6 +349,14 @@ pub fn shard_table(snaps: &[ShardSnapshot]) -> Table {
             format!("{:.3}", s.stats.latency_percentile(50.0)),
             format!("{:.3}", s.stats.latency_percentile(95.0)),
             format!("{:.3}", s.stats.latency_percentile(99.0)),
+            format!(
+                "{:.3}",
+                s.stats.queue_wait.percentile(50.0).unwrap_or(0.0)
+            ),
+            format!(
+                "{:.3}",
+                s.stats.queue_wait.percentile(95.0).unwrap_or(0.0)
+            ),
             format!("{:.2}", s.stats.mean_batch()),
             hit,
         ]);
@@ -394,6 +420,15 @@ pub fn report_table(
         "latency mean".into(),
         format!("{:.3} ms", stats.latency_mean()),
     ]);
+    for (label, p) in [("p50", 50.0), ("p95", 95.0)] {
+        t.row(vec![
+            format!("queue wait {label}"),
+            format!(
+                "{:.3} ms",
+                stats.queue_wait.percentile(p).unwrap_or(0.0)
+            ),
+        ]);
+    }
     let total = cache_hits + cache_misses;
     t.row(vec![
         "plan-cache hit rate".into(),
@@ -468,6 +503,32 @@ pub fn report_json(
                 ("p95".to_string(), Json::Num(stats.latency_percentile(95.0))),
                 ("p99".to_string(), Json::Num(stats.latency_percentile(99.0))),
                 ("mean".to_string(), Json::Num(stats.latency_mean())),
+            ]
+            .into_iter()
+            .collect(),
+        ),
+    );
+    obj.insert(
+        "queue_wait_ms".into(),
+        Json::Obj(
+            [
+                (
+                    "p50".to_string(),
+                    Json::Num(
+                        stats.queue_wait.percentile(50.0).unwrap_or(0.0),
+                    ),
+                ),
+                (
+                    "p95".to_string(),
+                    Json::Num(
+                        stats.queue_wait.percentile(95.0).unwrap_or(0.0),
+                    ),
+                ),
+                ("mean".to_string(), Json::Num(stats.queue_wait.mean())),
+                (
+                    "count".to_string(),
+                    Json::Num(stats.queue_wait.count as f64),
+                ),
             ]
             .into_iter()
             .collect(),
@@ -608,6 +669,51 @@ mod tests {
         assert!((p50 - 5.0).abs() < 0.5, "p50 {p50}");
         assert!(p99 > 9.0 && p99 <= 10.0, "p99 {p99}");
         assert!(s.latency_mean() > 0.0);
+    }
+
+    #[test]
+    fn queue_wait_is_tracked_separately_from_service() {
+        let t = Telemetry::new();
+        for i in 0..20 {
+            t.record_queue_wait_ms(0.1 * (i + 1) as f64);
+            t.record_latency_ms(5.0);
+        }
+        let s = t.snapshot();
+        assert_eq!(s.queue_wait.count, 20);
+        assert_eq!(s.digest.count, 20);
+        let p50 = s.queue_wait.percentile(50.0).unwrap();
+        let p95 = s.queue_wait.percentile(95.0).unwrap();
+        assert!((0.5..=1.6).contains(&p50), "queue-wait p50 {p50}");
+        assert!(p95 >= p50, "p95 {p95} < p50 {p50}");
+        assert!((s.queue_wait.mean() - 1.05).abs() < 1e-9);
+        // Waits never leak into the service-latency digest.
+        assert_eq!(s.latency_percentile(50.0), 5.0);
+        // Surfaces: report rows + JSON block + shard columns.
+        let md = report_table("r", &s, 0, 0, 1.0).to_markdown();
+        assert!(md.contains("queue wait p50"), "{md}");
+        assert!(md.contains("queue wait p95"), "{md}");
+        let j = report_json(&s, 0, 0, 1.0);
+        let qw = j.get("queue_wait_ms").expect("queue_wait_ms block");
+        assert_eq!(qw.get("count").unwrap().as_usize(), Some(20));
+        assert!(qw.get("p50").unwrap().as_f64().unwrap() > 0.0);
+        let snap = ShardSnapshot {
+            shard: 0,
+            cores: (0, 8),
+            stats: s,
+            cache_hits: 0,
+            cache_misses: 0,
+            duration_s: 1.0,
+        };
+        let md = shard_table(&[snap]).to_markdown();
+        assert!(md.contains("qw p50"), "{md}");
+        // Merge folds the wait digests too.
+        let mut a = ServeStats::default();
+        a.record_queue_wait_ms(1.0);
+        let mut b = ServeStats::default();
+        b.record_queue_wait_ms(3.0);
+        a.merge(&b);
+        assert_eq!(a.queue_wait.count, 2);
+        assert!((a.queue_wait.mean() - 2.0).abs() < 1e-12);
     }
 
     #[test]

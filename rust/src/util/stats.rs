@@ -441,6 +441,138 @@ mod tests {
     }
 
     #[test]
+    fn p2_merge_empty_and_singleton_edges() {
+        // empty.merge(empty): still empty, quantile 0.
+        let mut e = P2Quantile::new(0.5);
+        e.merge(&P2Quantile::new(0.5));
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.quantile(), 0.0);
+        // warm.merge(empty): a no-op.
+        let mut warm = P2Quantile::new(0.5);
+        for i in 0..100 {
+            warm.observe(i as f64);
+        }
+        let before = warm.quantile();
+        warm.merge(&P2Quantile::new(0.5));
+        assert_eq!(warm.count(), 100);
+        assert_eq!(warm.quantile(), before);
+        // empty.merge(warm): adopts the other side exactly.
+        let mut e2 = P2Quantile::new(0.5);
+        e2.merge(&warm);
+        assert_eq!(e2.count(), 100);
+        assert_eq!(e2.quantile(), before);
+        // singleton.merge(singleton): exact two-sample interpolation.
+        let mut a = P2Quantile::new(0.5);
+        a.observe(1.0);
+        let mut b = P2Quantile::new(0.5);
+        b.observe(3.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.quantile(), 2.0);
+        // warm.merge(singleton): the one sample is replayed exactly.
+        let mut w = P2Quantile::new(0.5);
+        for i in 0..50 {
+            w.observe(i as f64);
+        }
+        let mut s = P2Quantile::new(0.5);
+        s.observe(24.5);
+        w.merge(&s);
+        assert_eq!(w.count(), 51);
+        assert!(w.quantile().is_finite());
+    }
+
+    #[test]
+    fn p2_merge_disjoint_ranges_stays_bounded() {
+        // Two estimators over ranges that do not overlap at all: the
+        // merged estimate must land inside the union's hull, and the
+        // extreme markers must span both sides.
+        let mut lo = P2Quantile::new(0.5);
+        let mut hi = P2Quantile::new(0.5);
+        let mut all = Vec::new();
+        for i in 0..1_000 {
+            let x = i as f64 / 100.0; // [0, 10)
+            lo.observe(x);
+            all.push(x);
+            let y = 1_000.0 + i as f64 / 100.0; // [1000, 1010)
+            hi.observe(y);
+            all.push(y);
+        }
+        let mut merged = lo.clone();
+        merged.merge(&hi);
+        assert_eq!(merged.count(), 2_000);
+        let q = merged.quantile();
+        assert!(
+            (0.0..=1_010.0).contains(&q),
+            "median {q} escaped the union hull"
+        );
+        // The true median straddles the gap; weight-blended markers
+        // must put the estimate between the two clusters' interiors,
+        // not outside the data entirely.
+        let exact = percentile(&all, 50.0);
+        assert!(
+            (exact - 505.0).abs() < 10.0,
+            "setup: union median ~505, got {exact}"
+        );
+        // Merging in the other order is also bounded.
+        let mut merged2 = hi.clone();
+        merged2.merge(&lo);
+        assert!((0.0..=1_010.0).contains(&merged2.quantile()));
+    }
+
+    #[test]
+    fn p2_quantile_monotone_under_interleaved_merges() {
+        use crate::util::rng::Pcg32;
+        // Feed identical chunked data to p10/p50/p90 estimators via
+        // alternating observe/merge interleavings; the estimates must
+        // stay ordered (q10 <= q50 <= q90) and inside the data hull.
+        let mut rng = Pcg32::new(0xD15C0);
+        let mut q10 = P2Quantile::new(0.10);
+        let mut q50 = P2Quantile::new(0.50);
+        let mut q90 = P2Quantile::new(0.90);
+        for chunk in 0..20 {
+            let xs: Vec<f64> =
+                (0..200).map(|_| rng.gen_f64() * 50.0).collect();
+            if chunk % 2 == 0 {
+                // Direct observation.
+                for &x in &xs {
+                    q10.observe(x);
+                    q50.observe(x);
+                    q90.observe(x);
+                }
+            } else {
+                // Same samples arriving through a merged sub-digest.
+                let mut a10 = P2Quantile::new(0.10);
+                let mut a50 = P2Quantile::new(0.50);
+                let mut a90 = P2Quantile::new(0.90);
+                for &x in &xs {
+                    a10.observe(x);
+                    a50.observe(x);
+                    a90.observe(x);
+                }
+                q10.merge(&a10);
+                q50.merge(&a50);
+                q90.merge(&a90);
+            }
+            if chunk >= 1 {
+                let (a, b, c) =
+                    (q10.quantile(), q50.quantile(), q90.quantile());
+                assert!(
+                    a <= b && b <= c,
+                    "chunk {chunk}: p10 {a} / p50 {b} / p90 {c} not monotone"
+                );
+                assert!(
+                    (0.0..=50.0).contains(&a) && (0.0..=50.0).contains(&c),
+                    "chunk {chunk}: estimates escaped the hull"
+                );
+            }
+        }
+        assert_eq!(q50.count(), 20 * 200);
+        // After all interleavings the estimates still track the
+        // uniform distribution's quantiles loosely.
+        assert!((q50.quantile() - 25.0).abs() < 5.0, "{}", q50.quantile());
+    }
+
+    #[test]
     fn minmax_unit_range() {
         let n = minmax_normalize(&[2.0, 4.0, 6.0]);
         assert_eq!(n, vec![0.0, 0.5, 1.0]);

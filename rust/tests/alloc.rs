@@ -10,11 +10,19 @@
 //! SELL-C-σ chunks) and both the singleton and the coalesced SpMM
 //! path.
 //!
+//! Stage tracing (PR 6) is enabled on the engine under test: span
+//! recording rides the hot path through pre-sized atomic ring
+//! buffers, so the zero-allocation contract must hold with the
+//! recorder attached, not just with observability off.
+//!
 //! Kept as a single `#[test]` on purpose: the counter is
 //! process-global, and libtest runs sibling tests on concurrent
 //! threads whose allocations would pollute the reading.
 
+use std::sync::Arc;
+
 use ft2000_spmv::corpus::{generators, NamedMatrix};
+use ft2000_spmv::obs::{ClockMode, TraceConfig, TraceRecorder};
 use ft2000_spmv::service::{
     MatrixRegistry, PlanConfig, Planner, ServeEngine,
 };
@@ -57,6 +65,14 @@ fn pooled_steady_state_serving_allocates_nothing() {
     let sell_id = reg.register("sell", sell_band_matrix());
     let engine =
         ServeEngine::pooled(reg, Planner::Heuristic, PlanConfig::default());
+    // Tracing on, at full sampling: spans must land in the pre-sized
+    // rings without touching the heap.
+    let n_lanes = engine.pool().map(|p| p.n_workers() + 1).unwrap_or(1);
+    let engine = engine.with_trace(Arc::new(TraceRecorder::new(
+        TraceConfig::on(),
+        ClockMode::Wall,
+        n_lanes,
+    )));
 
     // The three plan families really are exercised (guards the test
     // against a future heuristic change silently narrowing coverage).
@@ -103,16 +119,29 @@ fn pooled_steady_state_serving_allocates_nothing() {
     }
 
     // Steady state: not one heap allocation across 40 more rounds
-    // (240 dispatches, 600 served requests).
+    // (240 dispatches, 600 served requests) — with tracing enabled.
     let allocs_before = total_allocs();
+    let spans_before =
+        engine.trace().map(|r| r.spans_recorded()).unwrap_or(0);
     for _ in 0..40 {
         serve_round(&engine);
     }
     let delta = total_allocs() - allocs_before;
     assert_eq!(
         delta, 0,
-        "pooled steady-state serving must be allocation-free, \
-         observed {delta} allocations over 240 dispatches"
+        "pooled steady-state serving (tracing on) must be \
+         allocation-free, observed {delta} allocations over 240 \
+         dispatches"
+    );
+    let spans = engine
+        .trace()
+        .map(|r| r.spans_recorded())
+        .unwrap_or(0)
+        .saturating_sub(spans_before);
+    assert!(
+        spans >= 240,
+        "the recorder must have been live during the measured window \
+         (saw {spans} new spans), else the zero-alloc claim is vacuous"
     );
 
     // The telemetry still recorded everything while allocation-free.

@@ -276,6 +276,7 @@ fn sharded_server_survives_poison_and_reports_per_shard() {
             policy: PlacementPolicy::HotReplicate { hot: 2 },
             pooled: true,
             tune: None,
+            trace: None,
         },
         &weights,
     );
