@@ -1,0 +1,143 @@
+//! §Check — cost of the serve-path structural validation seam.
+//!
+//! The dispatcher runs `check::quick_plan_check` on every request
+//! when `PlanConfig::validate` is on (the debug-build default). This
+//! bench A/Bs serving with validation on vs off across the three
+//! plan families (CSR rows, CSR5 tiles, SELL-C-sigma chunks) so the
+//! per-dispatch tax is a measured number, not folklore, and also
+//! prices the full offline verifier (`check_csr` + `check_plan`) for
+//! the `ft2000-spmv check` sweep.
+//!
+//! Scale with `FT2000_SUITE=tiny|fast|full` (default fast); set
+//! `FT2000_QUICK=1` for the CI smoke mode.
+
+mod common;
+
+use ft2000_spmv::check;
+use ft2000_spmv::sched::Schedule;
+use ft2000_spmv::service::{
+    build_plan_with, MatrixRegistry, PlanConfig, Planner, ServeEngine,
+};
+use ft2000_spmv::util::bench::{bench, black_box, BenchConfig};
+use ft2000_spmv::util::table::Table;
+
+fn main() {
+    common::banner(
+        "§Check",
+        "serve-path validation overhead (quick_plan_check per dispatch)",
+    );
+    let quick = common::quick_from_env();
+    let suite = common::suite_from_env();
+    let bench_cfg = if quick {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            target_rel_ci: 0.2,
+            max_seconds: 0.5,
+        }
+    } else {
+        BenchConfig {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 60,
+            target_rel_ci: 0.1,
+            max_seconds: 2.0,
+        }
+    };
+    let matrices = if quick { 3 } else { 6 };
+
+    // --- per-dispatch A/B: validate on vs off ------------------------
+    // Same corpus sample, same planner, same pooled dispatch; the only
+    // delta is the `quick_plan_check` call inside `dispatch_into`.
+    let schedules: &[(&str, Schedule)] = &[
+        ("csr", Schedule::CsrRowStatic),
+        ("csr5", Schedule::Csr5Tiles { tile_nnz: 256 }),
+        ("sell", Schedule::SellChunks { c: 8, sigma: 64 }),
+    ];
+    let mut t = Table::new(
+        "Serve-path validation tax (validate on vs off, pooled dispatch)",
+        &["matrix", "nnz", "off us/req", "on us/req", "tax"],
+    );
+    let mut worst_tax = 0.0f64;
+    let ids = {
+        let mut reg = MatrixRegistry::new();
+        reg.register_suite(&suite, Some(matrices))
+    };
+    let build = |validate: bool| {
+        let mut reg = MatrixRegistry::new();
+        reg.register_suite(&suite, Some(matrices));
+        ServeEngine::pooled(
+            reg,
+            Planner::Heuristic,
+            PlanConfig { validate, ..PlanConfig::default() },
+        )
+    };
+    let engine_off = build(false);
+    let engine_on = build(true);
+    for &id in &ids {
+        let entry = engine_off.registry.entry(id);
+        let x = vec![1.0f64; entry.csr.n_cols];
+        // Warm both plan caches outside the timed region.
+        let _ = engine_off.serve_batch(id, &[x.as_slice()]);
+        let _ = engine_on.serve_batch(id, &[x.as_slice()]);
+        let off = bench("off", &bench_cfg, || {
+            black_box(engine_off.serve_batch(id, &[x.as_slice()]).unwrap());
+        });
+        let on = bench("on", &bench_cfg, || {
+            black_box(engine_on.serve_batch(id, &[x.as_slice()]).unwrap());
+        });
+        let tax = on.mean_s / off.mean_s - 1.0;
+        worst_tax = worst_tax.max(tax);
+        t.row(vec![
+            entry.name.clone(),
+            entry.csr.nnz().to_string(),
+            format!("{:.2}", off.mean_s * 1e6),
+            format!("{:.2}", on.mean_s * 1e6),
+            format!("{:+.1}%", tax * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "worst per-dispatch validation tax: {:+.1}% (O(slots) pointer \
+         walk, no allocation)",
+        worst_tax * 100.0
+    );
+
+    // --- offline verifier cost ---------------------------------------
+    // What the `ft2000-spmv check` sweep pays per matrix: the full
+    // format verifier plus a plan build + plan verifier, per schedule
+    // family.
+    let mut t = Table::new(
+        "Offline verifier cost per matrix (check_csr + check_plan)",
+        &["matrix", "nnz", "check_csr us", "plan family", "check_plan us"],
+    );
+    for &id in ids.iter().take(if quick { 2 } else { 3 }) {
+        let entry = engine_off.registry.entry(id);
+        let csr = &entry.csr;
+        let rc = bench("check_csr", &bench_cfg, || {
+            black_box(check::check_csr(&entry.name, csr));
+        });
+        for (fname, sched) in schedules {
+            let cfg = PlanConfig::default();
+            let plan = build_plan_with(
+                &cfg,
+                csr,
+                *sched,
+                cfg.n_threads,
+                Vec::new(),
+            );
+            let rp = bench("check_plan", &bench_cfg, || {
+                black_box(check::check_plan(&entry.name, &plan, csr));
+            });
+            t.row(vec![
+                entry.name.clone(),
+                csr.nnz().to_string(),
+                format!("{:.2}", rc.mean_s * 1e6),
+                fname.to_string(),
+                format!("{:.2}", rp.mean_s * 1e6),
+            ]);
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,313 @@
+//! Self-hosted source lint for the ft2000-spmv crate — no external
+//! dependencies, no toolchain plugins: a line-level scanner over
+//! `src/` that enforces the repo's safety and hot-path conventions.
+//!
+//! Rules (waivable per site with a `lint:allow(<rule>)` comment on
+//! the offending line or within the five lines above it):
+//!
+//! * `safety-comment` — every `unsafe` block, `unsafe impl`, and
+//!   `unsafe fn` must carry a `// SAFETY:` comment within the eight
+//!   preceding lines.
+//! * `unsafe-scope` — `unsafe` is only permitted in `exec/` (the
+//!   disjoint-slot executors and the pool) and
+//!   `util/allocprobe.rs` (the counting global allocator).
+//! * `hot-alloc` — inside `fn *_into` kernels (the zero-allocation
+//!   serve path), `Vec::new`, `vec!`, `.to_vec()`, and `.collect()`
+//!   are banned.
+//! * `no-unwrap` — non-test code in `service/` and `exec/` must not
+//!   call `.unwrap()` / `.expect(` (poison-recovering locks and
+//!   counted error outcomes instead).
+//! * `raw-clock` — `Instant::now` is banned outside the clock seams
+//!   (deterministic modules: `sparse/`, `sched/`, `sim/`,
+//!   `autotune/`, `mlmodel/`, `corpus/`, `counters/`, `solver/`,
+//!   `reorder/`, `analysis/`, `coordinator/`, `check/`).
+//! * `crate-attrs` — `lib.rs` must carry
+//!   `#![deny(unsafe_op_in_unsafe_fn)]`.
+//!
+//! Exit status: 0 when clean, 1 when any finding survives (printed
+//! one per line as `path:line: rule: message`). CI runs this next to
+//! clippy; unlike clippy it needs nothing but the sources.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Modules that must stay deterministic / virtual-clocked.
+const CLOCK_BANNED: &[&str] = &[
+    "sparse/",
+    "sched/",
+    "sim/",
+    "autotune/",
+    "mlmodel/",
+    "corpus/",
+    "counters/",
+    "solver/",
+    "reorder/",
+    "analysis/",
+    "coordinator/",
+    "check/",
+];
+
+/// Lines a waiver comment may precede its target by.
+const WAIVER_WINDOW: usize = 5;
+
+/// Lines a `SAFETY:` comment may precede its `unsafe` site by.
+const SAFETY_WINDOW: usize = 8;
+
+struct Finding {
+    path: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+        });
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs(&root, &mut files) {
+        eprintln!("ft2000-lint: walking {}: {e}", root.display());
+        return ExitCode::from(2);
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    let mut saw_lib_attr = false;
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rel == "bin/ft2000-lint.rs" {
+            continue; // rule patterns appear verbatim in this file
+        }
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("ft2000-lint: reading {rel}: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        if rel == "lib.rs" && text.contains("#![deny(unsafe_op_in_unsafe_fn)]")
+        {
+            saw_lib_attr = true;
+        }
+        scan_file(&rel, &text, &mut findings);
+    }
+    if !saw_lib_attr {
+        findings.push(Finding {
+            path: "lib.rs".into(),
+            line: 1,
+            rule: "crate-attrs",
+            msg: "missing #![deny(unsafe_op_in_unsafe_fn)]".into(),
+        });
+    }
+    if findings.is_empty() {
+        println!("ft2000-lint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        for f in &findings {
+            println!("{}:{}: {}: {}", f.path, f.line, f.rule, f.msg);
+        }
+        println!("ft2000-lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// The code part of a line: everything before a `//` comment. Naive
+/// about `//` inside string literals — that can only hide code from
+/// the scanner (no false findings), and the repo has none on banned
+/// constructs.
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// `needle` present in `hay` with identifier-boundary on both sides.
+fn has_token(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(i) = hay[from..].find(needle) {
+        let start = from + i;
+        let end = start + needle.len();
+        let pre_ok = start == 0
+            || !hay[..start]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let post_ok = !hay[end..]
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn waived(lines: &[&str], i: usize, rule: &str) -> bool {
+    let tag = format!("lint:allow({rule})");
+    let lo = i.saturating_sub(WAIVER_WINDOW);
+    lines[lo..=i].iter().any(|l| l.contains(&tag))
+}
+
+fn has_safety_comment(lines: &[&str], i: usize) -> bool {
+    let lo = i.saturating_sub(SAFETY_WINDOW);
+    lines[lo..=i].iter().any(|l| l.contains("SAFETY:"))
+}
+
+/// Does this code line declare a function whose name ends in `_into`?
+fn declares_into_fn(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(i) = code[from..].find("fn ") {
+        let start = from + i;
+        // Word boundary before `fn`.
+        let pre_ok = start == 0
+            || !code[..start]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if pre_ok {
+            let rest = &code[start + 3..];
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if name.ends_with("_into") {
+                return true;
+            }
+        }
+        from = start + 3;
+    }
+    false
+}
+
+fn scan_file(rel: &str, text: &str, findings: &mut Vec<Finding>) {
+    let lines: Vec<&str> = text.lines().collect();
+    let in_exec = rel.starts_with("exec/");
+    let unsafe_ok = in_exec || rel == "util/allocprobe.rs";
+    let unwrap_banned = in_exec || rel.starts_with("service/");
+    let clock_banned = CLOCK_BANNED.iter().any(|m| rel.starts_with(m));
+    let mut in_tests = false;
+    let mut depth: i64 = 0;
+    let mut into_pending = false;
+    let mut into_active = false;
+    let mut into_base: i64 = 0;
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        findings.push(Finding { path: rel.to_string(), line, rule, msg });
+    };
+    for (i, &raw) in lines.iter().enumerate() {
+        let ln = i + 1;
+        let trimmed = raw.trim_start();
+        if trimmed.starts_with("#[cfg(test)]") {
+            // Repo convention: the test module is the tail of the
+            // file, so hot-path and unwrap rules stop here.
+            in_tests = true;
+        }
+        let code = code_part(raw);
+
+        if has_token(code, "unsafe") {
+            if !unsafe_ok && !waived(&lines, i, "unsafe-scope") {
+                push(
+                    ln,
+                    "unsafe-scope",
+                    format!(
+                        "`unsafe` outside exec/ and util/allocprobe.rs \
+                         in {rel}"
+                    ),
+                );
+            }
+            if !has_safety_comment(&lines, i)
+                && !waived(&lines, i, "safety-comment")
+            {
+                push(
+                    ln,
+                    "safety-comment",
+                    "`unsafe` without a `// SAFETY:` comment within 8 \
+                     lines above"
+                        .to_string(),
+                );
+            }
+        }
+
+        if !in_tests
+            && unwrap_banned
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+            && !waived(&lines, i, "no-unwrap")
+        {
+            push(
+                ln,
+                "no-unwrap",
+                "unwrap/expect in serve-path module (recover or return \
+                 a counted error)"
+                    .to_string(),
+            );
+        }
+
+        if clock_banned
+            && code.contains("Instant::now")
+            && !waived(&lines, i, "raw-clock")
+        {
+            push(
+                ln,
+                "raw-clock",
+                "raw Instant::now in a deterministic module (take time \
+                 through a clock seam)"
+                    .to_string(),
+            );
+        }
+
+        if into_active
+            && !in_tests
+            && (code.contains("Vec::new")
+                || code.contains("vec!")
+                || code.contains(".to_vec()")
+                || code.contains(".collect()"))
+            && !waived(&lines, i, "hot-alloc")
+        {
+            push(
+                ln,
+                "hot-alloc",
+                "allocation in a `*_into` kernel (reuse the scratch \
+                 arena)"
+                    .to_string(),
+            );
+        }
+
+        // Function-extent tracking for the hot-alloc rule.
+        if !into_active && !in_tests && declares_into_fn(code) {
+            into_pending = true;
+            into_base = depth;
+        }
+        let opens = code.matches('{').count() as i64;
+        let closes = code.matches('}').count() as i64;
+        if into_pending && opens > 0 {
+            into_pending = false;
+            into_active = true;
+        }
+        depth += opens - closes;
+        if into_active && depth <= into_base {
+            into_active = false;
+        }
+    }
+}

@@ -1,0 +1,1383 @@
+//! Structural invariant verifier — the installation contract for
+//! every sparse format, partition, and plan in the serving engine.
+//!
+//! The paper's characterization (and the autotune/mlmodel dataset
+//! built on top of it) is only as trustworthy as the structures
+//! feeding it labels: a mis-covered partition or a corrupted SELL
+//! permutation silently poisons served results long before anything
+//! panics. This module makes the implicit invariants explicit and
+//! machine-checkable, at three costs:
+//!
+//! * **Deep checks** (`check_csr`, `check_csr5_vs_csr`, `check_plan`,
+//!   ...) — O(nnz) sweeps producing a [`CheckReport`] with one
+//!   [`Finding`] per violated invariant. Used at registry
+//!   registration, by the `ft2000-spmv check` CLI sweep, and by the
+//!   corruption property tests.
+//! * **[`quick_plan_check`]** — an O(slots), allocation-free subset
+//!   run on the serve path when `PlanConfig::validate` is set
+//!   (default: debug builds). It checks the *cross-structure
+//!   agreements* a cached plan could violate (family, parameters,
+//!   coverage totals), not per-nonzero content.
+//! * **`check::interleave`** — a deterministic schedule-permutation
+//!   harness for the lock-free executor pool and trace rings.
+//!
+//! Checks never panic on corrupt input: every content scan is gated
+//! on the structural checks it depends on (e.g. `csr.row()` is only
+//! called once `ptr` is known monotone and in-bounds).
+
+pub mod interleave;
+
+use crate::exec;
+use crate::sched::{Partition, Schedule};
+use crate::service::plan::{Plan, PlanCache, PlannedFormat};
+use crate::sparse::sell::normalize_sigma;
+use crate::sparse::{Coo, Csr, Csr5, Dia, Ell, Hyb, SellCSigma};
+
+/// One violated invariant: which structure, which invariant, and the
+/// first offending site (checks report the first violation per
+/// invariant, not every occurrence — a corrupt 1M-nnz array should
+/// produce one line, not a million).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// What was being checked (matrix name, "plan", ...).
+    pub subject: String,
+    /// Stable invariant tag, e.g. `ptr-monotone`, `perm-permutation`.
+    pub invariant: &'static str,
+    /// Human-readable first-offender detail.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}: {}", self.subject, self.invariant, self.detail)
+    }
+}
+
+/// Outcome of a verification pass: the findings plus how many
+/// invariants were evaluated (so "clean" is distinguishable from
+/// "checked nothing").
+#[derive(Clone, Debug, Default)]
+pub struct CheckReport {
+    pub findings: Vec<Finding>,
+    pub checked: usize,
+}
+
+impl CheckReport {
+    pub fn new() -> Self {
+        CheckReport::default()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Fold another report into this one.
+    pub fn merge(&mut self, other: CheckReport) {
+        self.checked += other.checked;
+        self.findings.extend(other.findings);
+    }
+
+    /// Record one invariant evaluation; on failure the (lazily
+    /// rendered) detail becomes a [`Finding`]. Returns `ok` so
+    /// callers can gate dependent checks.
+    fn check(
+        &mut self,
+        ok: bool,
+        subject: &str,
+        invariant: &'static str,
+        detail: impl FnOnce() -> String,
+    ) -> bool {
+        self.checked += 1;
+        if !ok {
+            self.findings.push(Finding {
+                subject: subject.to_string(),
+                invariant,
+                detail: detail(),
+            });
+        }
+        ok
+    }
+}
+
+impl std::fmt::Display for CheckReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_clean() {
+            return write!(f, "clean ({} invariants)", self.checked);
+        }
+        writeln!(
+            f,
+            "{} finding(s) over {} invariants:",
+            self.findings.len(),
+            self.checked
+        )?;
+        for fd in &self.findings {
+            writeln!(f, "  {fd}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Shared row-pointer discipline (CSR and the CSR5 copy of it):
+/// length `n_rows + 1`, starts at 0, non-decreasing, ends at `nnz`.
+/// Returns whether `ptr` is safe to index rows through.
+fn check_row_ptr(
+    r: &mut CheckReport,
+    subject: &str,
+    ptr: &[usize],
+    n_rows: usize,
+    nnz: usize,
+) -> bool {
+    if !r.check(ptr.len() == n_rows + 1, subject, "ptr-len", || {
+        format!("ptr length {} != n_rows + 1 = {}", ptr.len(), n_rows + 1)
+    }) {
+        return false;
+    }
+    let start = r.check(ptr[0] == 0, subject, "ptr-start", || {
+        format!("ptr[0] = {} != 0", ptr[0])
+    });
+    let mono = r.check(
+        ptr.windows(2).all(|w| w[0] <= w[1]),
+        subject,
+        "ptr-monotone",
+        || {
+            let i = ptr.windows(2).position(|w| w[0] > w[1]).unwrap_or(0);
+            format!("ptr[{}] = {} > ptr[{}] = {}", i, ptr[i], i + 1, ptr[i + 1])
+        },
+    );
+    let end = r.check(ptr[n_rows] == nnz, subject, "ptr-end", || {
+        format!("ptr[n_rows] = {} != nnz = {}", ptr[n_rows], nnz)
+    });
+    start && mono && end
+}
+
+/// Exactly-once row coverage for a `Rows`-shaped slot list (shared by
+/// the single-vector `Partition::Rows` check and the memoized SpMM
+/// row partition of every plan).
+fn check_rows_cover(
+    r: &mut CheckReport,
+    subject: &str,
+    invariant: &'static str,
+    per_thread: &[Vec<(usize, usize)>],
+    n_rows: usize,
+) {
+    let mut covered = vec![false; n_rows];
+    for (slot, ranges) in per_thread.iter().enumerate() {
+        for &(r0, r1) in ranges {
+            if !r.check(r0 <= r1 && r1 <= n_rows, subject, invariant, || {
+                format!("slot {slot}: bad range ({r0},{r1}) of {n_rows} rows")
+            }) {
+                return;
+            }
+            for row in r0..r1 {
+                if covered[row] {
+                    r.check(false, subject, invariant, || {
+                        format!("row {row} covered twice (slot {slot})")
+                    });
+                    return;
+                }
+                covered[row] = true;
+            }
+        }
+    }
+    r.check(
+        covered.iter().all(|&c| c),
+        subject,
+        invariant,
+        || {
+            let row = covered.iter().position(|&c| !c).unwrap_or(0);
+            format!("row {row} uncovered")
+        },
+    );
+}
+
+/// CSR: row pointer discipline, in-bounds strictly-increasing columns
+/// per row, finite values.
+pub fn check_csr(subject: &str, a: &Csr) -> CheckReport {
+    let mut r = CheckReport::new();
+    let nnz = a.data.len();
+    r.check(a.indices.len() == nnz, subject, "arrays-aligned", || {
+        format!("indices len {} != data len {}", a.indices.len(), nnz)
+    });
+    let ptr_ok = check_row_ptr(&mut r, subject, &a.ptr, a.n_rows, nnz);
+    r.check(
+        a.indices.iter().all(|&c| (c as usize) < a.n_cols),
+        subject,
+        "col-bounds",
+        || {
+            let i = a
+                .indices
+                .iter()
+                .position(|&c| (c as usize) >= a.n_cols)
+                .unwrap_or(0);
+            format!(
+                "nonzero {i}: col {} >= n_cols {}",
+                a.indices[i], a.n_cols
+            )
+        },
+    );
+    r.check(
+        a.data.iter().all(|v| v.is_finite()),
+        subject,
+        "val-finite",
+        || {
+            let i =
+                a.data.iter().position(|v| !v.is_finite()).unwrap_or(0);
+            format!("nonzero {i}: value {} not finite", a.data[i])
+        },
+    );
+    if ptr_ok && a.indices.len() == nnz {
+        let sorted = (0..a.n_rows).find_map(|row| {
+            let cols = &a.indices[a.ptr[row]..a.ptr[row + 1]];
+            cols.windows(2)
+                .any(|w| w[0] >= w[1])
+                .then_some(row)
+        });
+        r.check(sorted.is_none(), subject, "col-sorted", || {
+            format!(
+                "row {}: columns not strictly increasing",
+                sorted.unwrap_or(0)
+            )
+        });
+    }
+    r
+}
+
+/// COO: aligned parallel arrays, in-bounds coordinates, finite values.
+pub fn check_coo(subject: &str, a: &Coo) -> CheckReport {
+    let mut r = CheckReport::new();
+    let n = a.vals.len();
+    let aligned = r.check(
+        a.rows.len() == n && a.cols.len() == n,
+        subject,
+        "arrays-aligned",
+        || {
+            format!(
+                "rows/cols/vals lengths {}/{}/{}",
+                a.rows.len(),
+                a.cols.len(),
+                n
+            )
+        },
+    );
+    if !aligned {
+        return r;
+    }
+    r.check(
+        a.rows.iter().all(|&x| (x as usize) < a.n_rows),
+        subject,
+        "row-bounds",
+        || {
+            let i = a
+                .rows
+                .iter()
+                .position(|&x| (x as usize) >= a.n_rows)
+                .unwrap_or(0);
+            format!("entry {i}: row {} >= n_rows {}", a.rows[i], a.n_rows)
+        },
+    );
+    r.check(
+        a.cols.iter().all(|&x| (x as usize) < a.n_cols),
+        subject,
+        "col-bounds",
+        || {
+            let i = a
+                .cols
+                .iter()
+                .position(|&x| (x as usize) >= a.n_cols)
+                .unwrap_or(0);
+            format!("entry {i}: col {} >= n_cols {}", a.cols[i], a.n_cols)
+        },
+    );
+    r.check(
+        a.vals.iter().all(|v| v.is_finite()),
+        subject,
+        "val-finite",
+        || {
+            let i =
+                a.vals.iter().position(|v| !v.is_finite()).unwrap_or(0);
+            format!("entry {i}: value {} not finite", a.vals[i])
+        },
+    );
+    r
+}
+
+/// ELL: `[n_rows][k]` layout sizes, in-bounds columns, finite values.
+pub fn check_ell(subject: &str, e: &Ell) -> CheckReport {
+    let mut r = CheckReport::new();
+    let want = e.n_rows * e.k;
+    let sized = r.check(
+        e.cols.len() == want && e.data.len() == want,
+        subject,
+        "layout-size",
+        || {
+            format!(
+                "cols/data lengths {}/{} != n_rows*k = {}",
+                e.cols.len(),
+                e.data.len(),
+                want
+            )
+        },
+    );
+    if !sized {
+        return r;
+    }
+    r.check(
+        e.cols.iter().all(|&c| (c as usize) < e.n_cols.max(1)),
+        subject,
+        "col-bounds",
+        || {
+            let i = e
+                .cols
+                .iter()
+                .position(|&c| (c as usize) >= e.n_cols.max(1))
+                .unwrap_or(0);
+            format!("slot {i}: col {} >= n_cols {}", e.cols[i], e.n_cols)
+        },
+    );
+    r.check(
+        e.data.iter().all(|v| v.is_finite()),
+        subject,
+        "val-finite",
+        || {
+            let i =
+                e.data.iter().position(|v| !v.is_finite()).unwrap_or(0);
+            format!("slot {i}: value {} not finite", e.data[i])
+        },
+    );
+    r
+}
+
+/// DIA: lane layout size, strictly ascending in-range offsets,
+/// out-of-band lane slots exactly zero, finite values.
+pub fn check_dia(subject: &str, d: &Dia) -> CheckReport {
+    let mut r = CheckReport::new();
+    let n = d.n_rows;
+    let sized = r.check(
+        d.vals.len() == d.offsets.len() * n,
+        subject,
+        "layout-size",
+        || {
+            format!(
+                "vals length {} != n_diags*n_rows = {}",
+                d.vals.len(),
+                d.offsets.len() * n
+            )
+        },
+    );
+    r.check(
+        d.offsets.windows(2).all(|w| w[0] < w[1]),
+        subject,
+        "offsets-ascending",
+        || {
+            let i = d
+                .offsets
+                .windows(2)
+                .position(|w| w[0] >= w[1])
+                .unwrap_or(0);
+            format!(
+                "offsets[{}] = {} >= offsets[{}] = {}",
+                i,
+                d.offsets[i],
+                i + 1,
+                d.offsets[i + 1]
+            )
+        },
+    );
+    r.check(
+        d.offsets.iter().all(|&o| {
+            (o as i64) > -(n as i64) && (o as i64) < d.n_cols as i64
+        }),
+        subject,
+        "offsets-range",
+        || {
+            let o = d
+                .offsets
+                .iter()
+                .find(|&&o| {
+                    (o as i64) <= -(n as i64) || (o as i64) >= d.n_cols as i64
+                })
+                .copied()
+                .unwrap_or(0);
+            format!("offset {o} never intersects a {n}x{} matrix", d.n_cols)
+        },
+    );
+    if !sized {
+        return r;
+    }
+    let band = (0..d.offsets.len()).find_map(|di| {
+        let off = d.offsets[di] as i64;
+        (0..n).find_map(|row| {
+            let c = row as i64 + off;
+            let out = c < 0 || c >= d.n_cols as i64;
+            (out && d.vals[di * n + row] != 0.0).then_some((di, row))
+        })
+    });
+    r.check(band.is_none(), subject, "out-of-band-zero", || {
+        let (di, row) = band.unwrap_or((0, 0));
+        format!(
+            "diagonal {} row {row}: out-of-band slot holds {}",
+            d.offsets[di],
+            d.vals[di * n + row]
+        )
+    });
+    r.check(
+        d.vals.iter().all(|v| v.is_finite()),
+        subject,
+        "val-finite",
+        || {
+            let i =
+                d.vals.iter().position(|v| !v.is_finite()).unwrap_or(0);
+            format!("slot {i}: value {} not finite", d.vals[i])
+        },
+    );
+    r
+}
+
+/// HYB: the ELL and COO halves individually, plus dimension agreement.
+pub fn check_hyb(subject: &str, h: &Hyb) -> CheckReport {
+    let mut r = check_ell(subject, &h.ell);
+    r.merge(check_coo(subject, &h.coo));
+    r.check(
+        h.ell.n_rows == h.coo.n_rows && h.ell.n_cols == h.coo.n_cols,
+        subject,
+        "halves-dims",
+        || {
+            format!(
+                "ell {}x{} vs coo {}x{}",
+                h.ell.n_rows, h.ell.n_cols, h.coo.n_rows, h.coo.n_cols
+            )
+        },
+    );
+    r
+}
+
+/// CSR5: embedded row pointer, tile descriptor lengths, and the exact
+/// descriptor semantics of `Csr5::from_csr` — `bit_flag[i]` iff `i`
+/// starts a non-empty row, `tile_ptr[t]` names the row containing the
+/// tile's first nonzero, `y_off` is the exclusive prefix of row
+/// starts per tile, `seg_off[t]` iff the tile opens mid-row.
+pub fn check_csr5(subject: &str, a: &Csr5) -> CheckReport {
+    let mut r = CheckReport::new();
+    let nnz = a.data.len();
+    let aligned = r.check(
+        a.indices.len() == nnz && a.bit_flag.len() == nnz,
+        subject,
+        "arrays-aligned",
+        || {
+            format!(
+                "indices/bit_flag lengths {}/{} != data len {}",
+                a.indices.len(),
+                a.bit_flag.len(),
+                nnz
+            )
+        },
+    );
+    let tile_ok = r.check(a.tile_nnz > 0, subject, "tile-nnz-positive", || {
+        "tile_nnz = 0".to_string()
+    });
+    let ptr_ok = check_row_ptr(&mut r, subject, &a.ptr, a.n_rows, nnz);
+    r.check(
+        a.indices.iter().all(|&c| (c as usize) < a.n_cols),
+        subject,
+        "col-bounds",
+        || {
+            let i = a
+                .indices
+                .iter()
+                .position(|&c| (c as usize) >= a.n_cols)
+                .unwrap_or(0);
+            format!(
+                "nonzero {i}: col {} >= n_cols {}",
+                a.indices[i], a.n_cols
+            )
+        },
+    );
+    r.check(
+        a.data.iter().all(|v| v.is_finite()),
+        subject,
+        "val-finite",
+        || {
+            let i =
+                a.data.iter().position(|v| !v.is_finite()).unwrap_or(0);
+            format!("nonzero {i}: value {} not finite", a.data[i])
+        },
+    );
+    if !(aligned && tile_ok && ptr_ok) {
+        return r;
+    }
+    let n_tiles = nnz.div_ceil(a.tile_nnz).max(1);
+    let desc = r.check(
+        a.tile_ptr.len() == n_tiles
+            && a.y_off.len() == n_tiles
+            && a.seg_off.len() == n_tiles,
+        subject,
+        "descriptor-len",
+        || {
+            format!(
+                "tile_ptr/y_off/seg_off lengths {}/{}/{} != n_tiles {}",
+                a.tile_ptr.len(),
+                a.y_off.len(),
+                a.seg_off.len(),
+                n_tiles
+            )
+        },
+    );
+    if !desc {
+        return r;
+    }
+    // Recompute the descriptors from the (validated) row pointer and
+    // compare — the stored arrays must agree with `from_csr`.
+    let mut expect_flag = vec![false; nnz];
+    for row in 0..a.n_rows {
+        if a.ptr[row] < a.ptr[row + 1] {
+            expect_flag[a.ptr[row]] = true;
+        }
+    }
+    r.check(a.bit_flag == expect_flag, subject, "bit-flag", || {
+        let i = a
+            .bit_flag
+            .iter()
+            .zip(&expect_flag)
+            .position(|(g, w)| g != w)
+            .unwrap_or(0);
+        format!(
+            "bit_flag[{i}] = {} but nonzero {i} {} a row",
+            a.bit_flag[i],
+            if expect_flag[i] { "starts" } else { "does not start" }
+        )
+    });
+    let mut tile_ptr_bad = None;
+    let mut seg_off_bad = None;
+    let mut y_off_bad = None;
+    let mut starts_before = 0u32;
+    for t in 0..n_tiles {
+        let begin = t * a.tile_nnz;
+        if begin < nnz {
+            let row = a.tile_ptr[t] as usize;
+            let contains = row < a.n_rows
+                && a.ptr[row] <= begin
+                && begin < a.ptr[row + 1];
+            if !contains && tile_ptr_bad.is_none() {
+                tile_ptr_bad = Some(t);
+            }
+            if a.seg_off[t] != !expect_flag[begin] && seg_off_bad.is_none() {
+                seg_off_bad = Some(t);
+            }
+        } else {
+            if a.tile_ptr[t] as usize != a.n_rows.saturating_sub(1)
+                && tile_ptr_bad.is_none()
+            {
+                tile_ptr_bad = Some(t);
+            }
+            if a.seg_off[t] && seg_off_bad.is_none() {
+                seg_off_bad = Some(t);
+            }
+        }
+        if a.y_off[t] != starts_before && y_off_bad.is_none() {
+            y_off_bad = Some(t);
+        }
+        let end = ((t + 1) * a.tile_nnz).min(nnz);
+        starts_before += expect_flag[begin.min(nnz)..end]
+            .iter()
+            .filter(|&&b| b)
+            .count() as u32;
+    }
+    r.check(tile_ptr_bad.is_none(), subject, "tile-ptr-row", || {
+        let t = tile_ptr_bad.unwrap_or(0);
+        format!(
+            "tile {t}: tile_ptr {} does not contain nonzero {}",
+            a.tile_ptr[t],
+            t * a.tile_nnz
+        )
+    });
+    r.check(seg_off_bad.is_none(), subject, "seg-off", || {
+        let t = seg_off_bad.unwrap_or(0);
+        format!("tile {t}: seg_off {} contradicts bit_flag", a.seg_off[t])
+    });
+    r.check(y_off_bad.is_none(), subject, "y-off-prefix", || {
+        let t = y_off_bad.unwrap_or(0);
+        format!("tile {t}: y_off {} is not the row-start prefix", a.y_off[t])
+    });
+    r
+}
+
+/// CSR5 against the CSR it claims to mirror: dimensions plus the
+/// verbatim `ptr`/`indices`/`data` copies (values bitwise).
+pub fn check_csr5_vs_csr(subject: &str, a: &Csr5, csr: &Csr) -> CheckReport {
+    let mut r = check_csr5(subject, a);
+    r.check(
+        a.n_rows == csr.n_rows && a.n_cols == csr.n_cols,
+        subject,
+        "dims",
+        || {
+            format!(
+                "csr5 {}x{} vs csr {}x{}",
+                a.n_rows, a.n_cols, csr.n_rows, csr.n_cols
+            )
+        },
+    );
+    r.check(a.ptr == csr.ptr, subject, "ptr-verbatim", || {
+        "csr5 row pointer differs from the source CSR".to_string()
+    });
+    r.check(a.indices == csr.indices, subject, "indices-verbatim", || {
+        let i = a
+            .indices
+            .iter()
+            .zip(&csr.indices)
+            .position(|(x, y)| x != y)
+            .unwrap_or(a.indices.len().min(csr.indices.len()));
+        format!("first divergence from the source CSR at nonzero {i}")
+    });
+    r.check(
+        a.data.len() == csr.data.len()
+            && a.data
+                .iter()
+                .zip(&csr.data)
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+        subject,
+        "data-verbatim",
+        || {
+            let i = a
+                .data
+                .iter()
+                .zip(&csr.data)
+                .position(|(x, y)| x.to_bits() != y.to_bits())
+                .unwrap_or(a.data.len().min(csr.data.len()));
+            format!("first value divergence from the source CSR at {i}")
+        },
+    );
+    r
+}
+
+/// SELL-C-σ structure: C domain, σ normalized, chunk prefix
+/// consistency, perm-is-a-permutation with σ-window locality,
+/// in-bounds columns, finite values.
+pub fn check_sell(subject: &str, s: &SellCSigma) -> CheckReport {
+    let mut r = CheckReport::new();
+    if !r.check(s.c >= 1 && s.c <= 64, subject, "c-domain", || {
+        format!("chunk height C = {} outside 1..=64", s.c)
+    }) {
+        return r;
+    }
+    let sigma_ok = r.check(
+        s.sigma == normalize_sigma(s.c, s.sigma, s.n_rows),
+        subject,
+        "sigma-normalized",
+        || {
+            format!(
+                "sigma = {} != normalize_sigma = {}",
+                s.sigma,
+                normalize_sigma(s.c, s.sigma, s.n_rows)
+            )
+        },
+    );
+    let n_chunks = s.n_rows.div_ceil(s.c);
+    let counts = r.check(
+        s.chunk_len.len() == n_chunks && s.chunk_ptr.len() == n_chunks + 1,
+        subject,
+        "chunk-count",
+        || {
+            format!(
+                "chunk_len/chunk_ptr lengths {}/{} for {} chunks",
+                s.chunk_len.len(),
+                s.chunk_ptr.len(),
+                n_chunks
+            )
+        },
+    );
+    r.check(
+        s.cols.len() == s.vals.len(),
+        subject,
+        "arrays-aligned",
+        || format!("cols len {} != vals len {}", s.cols.len(), s.vals.len()),
+    );
+    if counts {
+        let prefix_bad = (0..n_chunks).find(|&k| {
+            s.chunk_ptr[k + 1].checked_sub(s.chunk_ptr[k])
+                != Some(s.chunk_len[k] as usize * s.c)
+        });
+        let prefix_ok = r.check(
+            s.chunk_ptr[0] == 0 && prefix_bad.is_none(),
+            subject,
+            "chunk-prefix",
+            || match prefix_bad {
+                Some(k) => format!(
+                    "chunk {k}: ptr delta != chunk_len[{k}] * C = {}",
+                    s.chunk_len[k] as usize * s.c
+                ),
+                None => format!("chunk_ptr[0] = {} != 0", s.chunk_ptr[0]),
+            },
+        );
+        r.check(
+            !prefix_ok || s.chunk_ptr[n_chunks] == s.cols.len(),
+            subject,
+            "chunk-total",
+            || {
+                format!(
+                    "chunk_ptr[last] = {} != cols len {}",
+                    s.chunk_ptr[n_chunks],
+                    s.cols.len()
+                )
+            },
+        );
+    }
+    let perm_len = r.check(
+        s.perm.len() == s.n_rows,
+        subject,
+        "perm-len",
+        || format!("perm len {} != n_rows {}", s.perm.len(), s.n_rows),
+    );
+    if perm_len {
+        let mut seen = vec![false; s.n_rows];
+        let mut perm_bad = None;
+        for (slot, &row) in s.perm.iter().enumerate() {
+            if (row as usize) >= s.n_rows || seen[row as usize] {
+                perm_bad = Some(slot);
+                break;
+            }
+            seen[row as usize] = true;
+        }
+        r.check(perm_bad.is_none(), subject, "perm-permutation", || {
+            let slot = perm_bad.unwrap_or(0);
+            format!(
+                "slot {slot}: row {} out of bounds or repeated",
+                s.perm[slot]
+            )
+        });
+        if sigma_ok && perm_bad.is_none() {
+            let window_bad = s
+                .perm
+                .iter()
+                .enumerate()
+                .find(|(slot, &row)| row as usize / s.sigma != slot / s.sigma);
+            r.check(window_bad.is_none(), subject, "perm-window", || {
+                let (slot, &row) = window_bad.unwrap_or((0, &0));
+                format!("slot {slot}: row {row} left its sigma window")
+            });
+        }
+    }
+    r.check(
+        s.cols.iter().all(|&c| (c as usize) < s.n_cols.max(1)),
+        subject,
+        "col-bounds",
+        || {
+            let i = s
+                .cols
+                .iter()
+                .position(|&c| (c as usize) >= s.n_cols.max(1))
+                .unwrap_or(0);
+            format!("slot {i}: col {} >= n_cols {}", s.cols[i], s.n_cols)
+        },
+    );
+    r.check(
+        s.vals.iter().all(|v| v.is_finite()),
+        subject,
+        "val-finite",
+        || {
+            let i =
+                s.vals.iter().position(|v| !v.is_finite()).unwrap_or(0);
+            format!("slot {i}: value {} not finite", s.vals[i])
+        },
+    );
+    r
+}
+
+/// SELL-C-σ against the CSR it claims to pack: chunk widths are the
+/// per-chunk row maxima, packed content is bitwise the CSR rows, and
+/// padding is an exact no-op (value 0.0 against the row's own last
+/// column — 0 for empty rows and ghost lanes past the last row).
+pub fn check_sell_vs_csr(
+    subject: &str,
+    s: &SellCSigma,
+    csr: &Csr,
+) -> CheckReport {
+    let mut r = check_sell(subject, s);
+    r.check(
+        s.n_rows == csr.n_rows && s.n_cols == csr.n_cols,
+        subject,
+        "dims",
+        || {
+            format!(
+                "sell {}x{} vs csr {}x{}",
+                s.n_rows, s.n_cols, csr.n_rows, csr.n_cols
+            )
+        },
+    );
+    if !r.is_clean() {
+        return r;
+    }
+    let base_csr = check_csr(subject, csr);
+    if !base_csr.is_clean() {
+        r.merge(base_csr);
+        return r;
+    }
+    let n_chunks = s.n_chunks();
+    let mut width_bad = None;
+    let mut content_bad = None;
+    let mut padding_bad = None;
+    for k in 0..n_chunks {
+        let width = s.chunk_len[k] as usize;
+        let base = s.chunk_ptr[k];
+        let rows = s.c.min(s.n_rows - k * s.c);
+        let max_nnz = (0..rows)
+            .map(|p| csr.row_nnz(s.perm[k * s.c + p] as usize))
+            .max()
+            .unwrap_or(0);
+        if width != max_nnz && width_bad.is_none() {
+            width_bad = Some((k, width, max_nnz));
+        }
+        for p in 0..s.c {
+            let lanes = if p < rows {
+                let row = s.perm[k * s.c + p] as usize;
+                let (rc, rv) = csr.row(row);
+                let take = rc.len().min(width);
+                for j in 0..take {
+                    let at = base + j * s.c + p;
+                    if (s.cols[at] != rc[j]
+                        || s.vals[at].to_bits() != rv[j].to_bits())
+                        && content_bad.is_none()
+                    {
+                        content_bad = Some((k, row, j));
+                    }
+                }
+                (take, rc.last().copied().unwrap_or(0))
+            } else {
+                // Ghost lane past the last row of a ragged tail
+                // chunk: stays at the zero-initialized fill.
+                (0, 0)
+            };
+            let (from, pad_col) = lanes;
+            for j in from..width {
+                let at = base + j * s.c + p;
+                if (s.vals[at] != 0.0 || s.cols[at] != pad_col)
+                    && padding_bad.is_none()
+                {
+                    padding_bad = Some((k, p, j));
+                }
+            }
+        }
+    }
+    r.check(width_bad.is_none(), subject, "chunk-width", || {
+        let (k, width, max_nnz) = width_bad.unwrap_or((0, 0, 0));
+        format!("chunk {k}: width {width} != max row nnz {max_nnz}")
+    });
+    r.check(content_bad.is_none(), subject, "content-verbatim", || {
+        let (k, row, j) = content_bad.unwrap_or((0, 0, 0));
+        format!("chunk {k}: packed row {row} diverges from CSR at col {j}")
+    });
+    r.check(padding_bad.is_none(), subject, "padding-no-op", || {
+        let (k, p, j) = padding_bad.unwrap_or((0, 0, 0));
+        format!("chunk {k} lane {p} slot {j}: padding is not a no-op")
+    });
+    r
+}
+
+/// Partition: parameter domains plus exactly-once coverage of the
+/// row/tile/chunk space (via `Partition::validate`, with the
+/// divide-by-zero hazards it assumes away checked first).
+pub fn check_partition(
+    subject: &str,
+    p: &Partition,
+    csr: &Csr,
+) -> CheckReport {
+    let mut r = CheckReport::new();
+    match p {
+        Partition::Tiles { tile_nnz, .. } => {
+            // `Partition::validate` divides by tile_nnz.
+            if !r.check(*tile_nnz > 0, subject, "tile-nnz-positive", || {
+                "tile_nnz = 0".to_string()
+            }) {
+                return r;
+            }
+        }
+        Partition::SellChunks { c, .. } => {
+            r.check(*c >= 1 && *c <= 64, subject, "c-domain", || {
+                format!("chunk height C = {c} outside 1..=64")
+            });
+        }
+        Partition::Rows { .. } => {}
+    }
+    match p.validate(csr) {
+        Ok(()) => {
+            r.checked += 1;
+        }
+        Err(e) => {
+            r.check(false, subject, "coverage", || e);
+        }
+    }
+    r
+}
+
+/// Full plan verification: schedule ↔ partition ↔ format parameter
+/// agreement, the materialized format against the source CSR, slot
+/// coverage for both the single-vector and the memoized SpMM
+/// partitions, and the pre-rendered names — everything a cached plan
+/// promises the executor.
+pub fn check_plan(subject: &str, plan: &Plan, csr: &Csr) -> CheckReport {
+    let mut r = CheckReport::new();
+    r.check(plan.n_threads >= 1, subject, "threads-positive", || {
+        "plan has zero threads".to_string()
+    });
+    r.check(
+        plan.partition.n_threads() == plan.n_threads,
+        subject,
+        "slot-count",
+        || {
+            format!(
+                "partition has {} slots for {} threads",
+                plan.partition.n_threads(),
+                plan.n_threads
+            )
+        },
+    );
+    r.check(
+        plan.spmm_partition.len() == plan.n_threads,
+        subject,
+        "spmm-slot-count",
+        || {
+            format!(
+                "spmm partition has {} slots for {} threads",
+                plan.spmm_partition.len(),
+                plan.n_threads
+            )
+        },
+    );
+    // Schedule ↔ partition family and parameters. The partition keeps
+    // the schedule's σ verbatim (un-normalized) — `sched::partition`
+    // passes it through and `sell_perm` re-normalizes internally.
+    let family_ok = match (plan.schedule, &plan.partition) {
+        (
+            Schedule::CsrRowStatic
+            | Schedule::CsrRowBalanced
+            | Schedule::CsrDynamic { .. },
+            Partition::Rows { .. },
+        ) => true,
+        (
+            Schedule::Csr5Tiles { tile_nnz },
+            Partition::Tiles { tile_nnz: pt, .. },
+        ) => *pt == tile_nnz,
+        (
+            Schedule::SellChunks { c, sigma },
+            Partition::SellChunks { c: pc, sigma: ps, .. },
+        ) => *pc == c && *ps == sigma,
+        _ => false,
+    };
+    r.check(family_ok, subject, "schedule-partition", || {
+        format!(
+            "partition family/parameters disagree with schedule {}",
+            plan.schedule.name()
+        )
+    });
+    // Schedule ↔ materialized format. The format stores the
+    // *normalized* σ (what `SellCSigma::from_csr` rounds to).
+    let format_ok = match (plan.schedule, &plan.format) {
+        (
+            Schedule::CsrRowStatic
+            | Schedule::CsrRowBalanced
+            | Schedule::CsrDynamic { .. },
+            PlannedFormat::Csr,
+        ) => true,
+        (Schedule::Csr5Tiles { tile_nnz }, PlannedFormat::Csr5(a)) => {
+            a.tile_nnz == tile_nnz
+        }
+        (Schedule::SellChunks { c, sigma }, PlannedFormat::Sell(s)) => {
+            s.c == c && s.sigma == normalize_sigma(c, sigma, csr.n_rows)
+        }
+        _ => false,
+    };
+    r.check(format_ok, subject, "schedule-format", || {
+        format!(
+            "materialized format disagrees with schedule {}",
+            plan.schedule.name()
+        )
+    });
+    match &plan.format {
+        PlannedFormat::Csr => {}
+        PlannedFormat::Csr5(a) => r.merge(check_csr5_vs_csr(subject, a, csr)),
+        PlannedFormat::Sell(s) => r.merge(check_sell_vs_csr(subject, s, csr)),
+    }
+    r.merge(check_partition(subject, &plan.partition, csr));
+    r.check(
+        plan.spmm_schedule == exec::effective_spmm_schedule(plan.schedule),
+        subject,
+        "spmm-schedule",
+        || {
+            format!(
+                "spmm schedule {} is not the effective remap {}",
+                plan.spmm_schedule.name(),
+                exec::effective_spmm_schedule(plan.schedule).name()
+            )
+        },
+    );
+    check_rows_cover(
+        &mut r,
+        subject,
+        "spmm-coverage",
+        &plan.spmm_partition,
+        csr.n_rows,
+    );
+    r.check(
+        plan.schedule_name == plan.schedule.name(),
+        subject,
+        "schedule-name",
+        || {
+            format!(
+                "pre-rendered name {:?} != {:?}",
+                plan.schedule_name,
+                plan.schedule.name()
+            )
+        },
+    );
+    r.check(
+        plan.spmm_schedule_name == plan.spmm_schedule.name(),
+        subject,
+        "spmm-schedule-name",
+        || {
+            format!(
+                "pre-rendered spmm name {:?} != {:?}",
+                plan.spmm_schedule_name,
+                plan.spmm_schedule.name()
+            )
+        },
+    );
+    r
+}
+
+/// Plan cache bookkeeping: entry versions start at 1 and only move by
+/// `replace` (so the sum of per-entry bumps is bounded by the global
+/// replacement counter), and a bounded cache never overfills.
+pub fn check_plan_cache(subject: &str, cache: &PlanCache) -> CheckReport {
+    let mut r = CheckReport::new();
+    let versions = cache.versions();
+    let zero = versions.iter().find(|&&(_, v)| v == 0);
+    r.check(zero.is_none(), subject, "version-positive", || {
+        let (fp, _) = zero.copied().unwrap_or((0, 0));
+        format!("fingerprint {fp:x}: entry version 0 (must start at 1)")
+    });
+    let bumps: u64 = versions.iter().map(|&(_, v)| v.saturating_sub(1)).sum();
+    r.check(
+        bumps <= cache.replacements(),
+        subject,
+        "version-monotone",
+        || {
+            format!(
+                "{} version bumps exceed {} recorded replacements",
+                bumps,
+                cache.replacements()
+            )
+        },
+    );
+    r.check(
+        cache.capacity() == 0 || cache.len() <= cache.capacity(),
+        subject,
+        "capacity",
+        || {
+            format!(
+                "{} entries in a cache capped at {}",
+                cache.len(),
+                cache.capacity()
+            )
+        },
+    );
+    r
+}
+
+/// Allocation-free plan sanity for the serve path (the
+/// `PlanConfig::validate` seam): O(partition slots), no heap, no
+/// per-nonzero scans. Checks the cross-structure agreements a cached
+/// plan could violate — schedule/partition/format family and
+/// parameters, slot counts, and coverage *totals* (contiguity for
+/// tile/chunk ranges, row-count sum for row ranges; the deep
+/// exactly-once bitmap lives in [`check_plan`]).
+pub fn quick_plan_check(plan: &Plan, csr: &Csr) -> Result<(), &'static str> {
+    if plan.n_threads == 0 {
+        return Err("plan has zero threads");
+    }
+    match (plan.schedule, &plan.partition) {
+        (
+            Schedule::CsrRowStatic
+            | Schedule::CsrRowBalanced
+            | Schedule::CsrDynamic { .. },
+            Partition::Rows { per_thread },
+        ) => {
+            if !matches!(plan.format, PlannedFormat::Csr) {
+                return Err("row schedule with a converted format");
+            }
+            if per_thread.len() != plan.n_threads {
+                return Err("partition slot count != n_threads");
+            }
+            let mut covered = 0usize;
+            for ranges in per_thread {
+                for &(r0, r1) in ranges {
+                    if r0 > r1 || r1 > csr.n_rows {
+                        return Err("row range out of bounds");
+                    }
+                    covered += r1 - r0;
+                }
+            }
+            if covered != csr.n_rows {
+                return Err("row partition does not cover the matrix");
+            }
+        }
+        (
+            Schedule::Csr5Tiles { tile_nnz },
+            Partition::Tiles { tile_nnz: pt, per_thread },
+        ) => {
+            if *pt == 0 {
+                return Err("tile partition with tile_nnz = 0");
+            }
+            if *pt != tile_nnz {
+                return Err("tile size disagrees with schedule");
+            }
+            if per_thread.len() != plan.n_threads {
+                return Err("partition slot count != n_threads");
+            }
+            let n_tiles = csr.nnz().div_ceil(*pt).max(1);
+            let mut expect = 0usize;
+            for &(t0, t1) in per_thread {
+                if t0 != expect || t1 < t0 {
+                    return Err("tile ranges not contiguous");
+                }
+                expect = t1;
+            }
+            if expect != n_tiles {
+                return Err("tile partition does not cover the matrix");
+            }
+            match &plan.format {
+                PlannedFormat::Csr5(a) => {
+                    if a.tile_nnz != *pt
+                        || a.n_rows != csr.n_rows
+                        || a.n_cols != csr.n_cols
+                        || a.data.len() != csr.data.len()
+                    {
+                        return Err("csr5 format disagrees with the matrix");
+                    }
+                }
+                _ => return Err("csr5 schedule without a csr5 format"),
+            }
+        }
+        (
+            Schedule::SellChunks { c, sigma },
+            Partition::SellChunks { c: pc, sigma: ps, per_thread },
+        ) => {
+            if *pc != c || *ps != sigma {
+                return Err("sell partition parameters disagree");
+            }
+            if c == 0 || c > 64 {
+                return Err("sell chunk height outside 1..=64");
+            }
+            if per_thread.len() != plan.n_threads {
+                return Err("partition slot count != n_threads");
+            }
+            let n_chunks = csr.n_rows.div_ceil(c);
+            let mut expect = 0usize;
+            for &(k0, k1) in per_thread {
+                if k0 != expect || k1 < k0 {
+                    return Err("chunk ranges not contiguous");
+                }
+                expect = k1;
+            }
+            if expect != n_chunks {
+                return Err("chunk partition does not cover the matrix");
+            }
+            match &plan.format {
+                PlannedFormat::Sell(s) => {
+                    if s.c != c
+                        || s.sigma != normalize_sigma(c, sigma, csr.n_rows)
+                        || s.n_rows != csr.n_rows
+                        || s.n_cols != csr.n_cols
+                        || s.perm.len() != csr.n_rows
+                    {
+                        return Err("sell format disagrees with the matrix");
+                    }
+                }
+                _ => return Err("sell schedule without a sell format"),
+            }
+        }
+        _ => return Err("schedule/partition family mismatch"),
+    }
+    if plan.spmm_schedule != exec::effective_spmm_schedule(plan.schedule) {
+        return Err("spmm schedule is not the effective remap");
+    }
+    if plan.spmm_partition.len() != plan.n_threads {
+        return Err("spmm partition slot count != n_threads");
+    }
+    let mut covered = 0usize;
+    for ranges in &plan.spmm_partition {
+        for &(r0, r1) in ranges {
+            if r0 > r1 || r1 > csr.n_rows {
+                return Err("spmm row range out of bounds");
+            }
+            covered += r1 - r0;
+        }
+    }
+    if covered != csr.n_rows {
+        return Err("spmm partition does not cover the matrix");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::plan::{build_plan, PlanConfig, Planner};
+    use crate::sparse::Coo;
+    use crate::util::rng::Pcg32;
+
+    fn random_csr(rng: &mut Pcg32, n: usize, max_deg: usize) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for r in 0..n {
+            for c in rng.sample_distinct(n, rng.gen_range(max_deg + 1)) {
+                coo.push(r, c, rng.gen_f64() - 0.5);
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn clean_structures_pass() {
+        let mut rng = Pcg32::new(0xC0DE);
+        let csr = random_csr(&mut rng, 200, 9);
+        assert!(check_csr("m", &csr).is_clean());
+        let a = Csr5::from_csr(&csr, 64);
+        assert!(check_csr5_vs_csr("m", &a, &csr).is_clean());
+        let s = SellCSigma::from_csr(&csr, 8, 32);
+        assert!(check_sell_vs_csr("m", &s, &csr).is_clean());
+        let e = Ell::from_csr(&csr, None).unwrap();
+        assert!(check_ell("m", &e).is_clean());
+        let h = Hyb::from_csr(&csr, 3);
+        assert!(check_hyb("m", &h).is_clean());
+        // Empty matrix edge: every checker is total on it.
+        let z = Csr::zero(0, 0);
+        assert!(check_csr("z", &z).is_clean());
+        assert!(check_csr5_vs_csr("z", &Csr5::from_csr(&z, 4), &z).is_clean());
+    }
+
+    #[test]
+    fn corrupt_csr_names_the_invariant() {
+        let mut rng = Pcg32::new(1);
+        let base = random_csr(&mut rng, 64, 6);
+        let mut a = base.clone();
+        a.ptr[10] = a.ptr[11] + 1;
+        let r = check_csr("m", &a);
+        assert!(r.findings.iter().any(|f| f.invariant == "ptr-monotone"), "{r}");
+        let mut b = base.clone();
+        b.indices[0] = 64;
+        let r = check_csr("m", &b);
+        assert!(r.findings.iter().any(|f| f.invariant == "col-bounds"), "{r}");
+        let mut c = base.clone();
+        c.data[3] = f64::NAN;
+        let r = check_csr("m", &c);
+        assert!(r.findings.iter().any(|f| f.invariant == "val-finite"), "{r}");
+    }
+
+    #[test]
+    fn corrupt_csr5_descriptors_are_caught() {
+        let mut rng = Pcg32::new(2);
+        let csr = random_csr(&mut rng, 100, 8);
+        let base = Csr5::from_csr(&csr, 32);
+        let cases: [(fn(&mut Csr5), &str); 4] = [
+            (|a| a.bit_flag[0] = !a.bit_flag[0], "bit-flag"),
+            (|a| a.tile_ptr[1] = a.n_rows as u32 + 7, "tile-ptr-row"),
+            (|a| a.y_off[1] = a.y_off[1].wrapping_add(3), "y-off-prefix"),
+            (|a| a.seg_off[0] = !a.seg_off[0], "seg-off"),
+        ];
+        for (mutate, want) in cases {
+            let mut a = base.clone();
+            mutate(&mut a);
+            let r = check_csr5("m", &a);
+            assert!(
+                r.findings.iter().any(|f| f.invariant == want),
+                "expected {want}: {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_sell_is_caught() {
+        let mut rng = Pcg32::new(3);
+        let csr = random_csr(&mut rng, 120, 7);
+        let base = SellCSigma::from_csr(&csr, 8, 32);
+        let mut a = base.clone();
+        a.perm.swap(0, 40); // crosses a sigma window
+        let r = check_sell("m", &a);
+        assert!(r.findings.iter().any(|f| f.invariant == "perm-window"), "{r}");
+        let mut b = base.clone();
+        b.perm[0] = b.perm[1];
+        let r = check_sell("m", &b);
+        assert!(
+            r.findings.iter().any(|f| f.invariant == "perm-permutation"),
+            "{r}"
+        );
+        let mut c = base.clone();
+        if let Some(v) = c.vals.iter_mut().find(|v| **v == 0.0) {
+            *v = 1.5; // padding slot no longer a no-op
+            let r = check_sell_vs_csr("m", &c, &csr);
+            assert!(!r.is_clean());
+        }
+        let mut d = base;
+        d.chunk_ptr[1] += 8;
+        let r = check_sell("m", &d);
+        assert!(r.findings.iter().any(|f| f.invariant == "chunk-prefix"), "{r}");
+    }
+
+    #[test]
+    fn partition_and_plan_checks() {
+        let mut rng = Pcg32::new(4);
+        let csr = random_csr(&mut rng, 150, 6);
+        let plan = build_plan(&Planner::Heuristic, &PlanConfig::default(), &csr);
+        assert!(check_plan("m", &plan, &csr).is_clean());
+        assert!(quick_plan_check(&plan, &csr).is_ok());
+
+        // Overlapping slots.
+        let p = Partition::Rows {
+            per_thread: vec![vec![(0, 80)], vec![(70, 150)]],
+        };
+        let r = check_partition("m", &p, &csr);
+        assert!(r.findings.iter().any(|f| f.invariant == "coverage"), "{r}");
+        // Zero tile size must not panic the checker.
+        let p = Partition::Tiles { tile_nnz: 0, per_thread: vec![(0, 1)] };
+        let r = check_partition("m", &p, &csr);
+        assert!(
+            r.findings.iter().any(|f| f.invariant == "tile-nnz-positive"),
+            "{r}"
+        );
+
+        // A plan whose memoized spmm partition lost a row.
+        let mut bad = plan.clone();
+        if let Some(last) = bad
+            .spmm_partition
+            .iter_mut()
+            .rev()
+            .find_map(|ranges| ranges.last_mut())
+        {
+            last.1 -= 1;
+        }
+        assert!(quick_plan_check(&bad, &csr).is_err());
+        let r = check_plan("m", &bad, &csr);
+        assert!(
+            r.findings.iter().any(|f| f.invariant == "spmm-coverage"),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn quick_check_matches_deep_check_on_family_mismatch() {
+        let mut rng = Pcg32::new(5);
+        let csr = random_csr(&mut rng, 90, 5);
+        let plan = build_plan(&Planner::Heuristic, &PlanConfig::default(), &csr);
+        let mut bad = plan.clone();
+        bad.schedule = Schedule::Csr5Tiles { tile_nnz: 64 };
+        assert!(quick_plan_check(&bad, &csr).is_err());
+        assert!(!check_plan("m", &bad, &csr).is_clean());
+    }
+
+    #[test]
+    fn report_display_is_stable() {
+        let mut r = CheckReport::new();
+        assert!(r.is_clean());
+        r.check(false, "mat", "ptr-monotone", || "ptr[1] > ptr[2]".into());
+        let text = format!("{r}");
+        assert!(text.contains("mat: ptr-monotone: ptr[1] > ptr[2]"), "{text}");
+    }
+}

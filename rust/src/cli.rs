@@ -7,6 +7,7 @@
 //! ft2000-spmv verify  [--artifacts DIR]
 //! ft2000-spmv serve-bench [--suite S] [--matrices N] [--batches 1,2,4,8,16] [--workers W]
 //! ft2000-spmv replay  [--suite S] [--pattern uniform|zipf|bursty] [--requests N] [--clients C] ...
+//! ft2000-spmv check   [--suite S] [--matrices N] [--seed S] [--quick]
 //! ft2000-spmv info
 //! ```
 
@@ -111,6 +112,17 @@ pub enum Command {
         /// Write the unified metrics snapshot JSON here.
         metrics_out: Option<String>,
     },
+    /// Structural check sweep: run the invariant verifier over the
+    /// corpus, every plan family, the plan cache, and the
+    /// interleaving harness; exit nonzero on any finding.
+    Check {
+        suite: SuiteSpec,
+        matrices: usize,
+        /// Seed of the interleaving-harness schedule permutations.
+        seed: u64,
+        /// Short harness mode for CI smokes.
+        quick: bool,
+    },
     /// Print topology/provenance info.
     Info,
 }
@@ -144,7 +156,7 @@ pub enum MatrixSource {
 }
 
 pub fn usage() -> &'static str {
-    "usage: ft2000-spmv <sweep|train|analyze|verify|report|export|serve-bench|replay|info> [options]\n\
+    "usage: ft2000-spmv <sweep|train|analyze|verify|report|export|serve-bench|replay|check|info> [options]\n\
      \n\
      sweep    --suite tiny|fast|full   corpus scale (default fast)\n\
      \u{20}        --schedule csr|balanced|csr5|dynamic|sell\n\
@@ -184,11 +196,14 @@ pub fn usage() -> &'static str {
      \u{20}        --json PATH          dump the report as JSON\n\
      \u{20}        --trace-out PATH     Chrome trace JSON, virtual timeline\n\
      \u{20}        --metrics-out PATH   unified metrics snapshot JSON\n\
+     check    --suite tiny|fast|full   corpus scale (default tiny)\n\
+     \u{20}        --matrices N (default 8)  --seed S\n\
+     \u{20}        --quick              short interleaving-harness mode\n\
      info"
 }
 
 /// Flags that take no value (presence toggles).
-const BOOL_FLAGS: &[&str] = &["pool", "spawn", "tune"];
+const BOOL_FLAGS: &[&str] = &["pool", "spawn", "tune", "quick"];
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
@@ -466,6 +481,23 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             tune_state: flags.get("tune-state").cloned(),
             trace_out: flags.get("trace-out").cloned(),
             metrics_out: flags.get("metrics-out").cloned(),
+        },
+        "check" => Command::Check {
+            // The sweep's default scale is `tiny`: every structural
+            // class is present and a CI smoke finishes in seconds.
+            suite: if flags.contains_key("suite") {
+                parse_suite(&flags)?
+            } else {
+                SuiteSpec::tiny()
+            },
+            matrices: parse_usize(&flags, "matrices", 8)?.max(1),
+            seed: flags
+                .get("seed")
+                .map(|s| s.parse())
+                .transpose()
+                .map_err(|_| anyhow!("bad --seed"))?
+                .unwrap_or(0xC8EC_2019),
+            quick: flags.contains_key("quick"),
         },
         "info" => Command::Info,
         other => bail!("unknown command '{other}'\n{}", usage()),
@@ -822,6 +854,40 @@ mod tests {
             parse(&sv(&["replay", "--trace-out"])).is_err(),
             "--trace-out needs a value"
         );
+    }
+
+    #[test]
+    fn parses_check() {
+        let cli = parse(&sv(&["check"])).unwrap();
+        match cli.command {
+            Command::Check { suite, matrices, quick, .. } => {
+                assert_eq!(suite.per_class, SuiteSpec::tiny().per_class);
+                assert_eq!(matrices, 8);
+                assert!(!quick, "quick mode is opt-in");
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "check",
+            "--suite",
+            "fast",
+            "--matrices",
+            "3",
+            "--seed",
+            "7",
+            "--quick",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Check { suite, matrices, seed, quick } => {
+                assert_eq!(suite.per_class, SuiteSpec::fast().per_class);
+                assert_eq!(matrices, 3);
+                assert_eq!(seed, 7);
+                assert!(quick);
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse(&sv(&["check", "--matrices", "x"])).is_err());
     }
 
     #[test]

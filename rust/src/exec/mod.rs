@@ -97,7 +97,11 @@ impl ExecStats {
 /// with any other slot's — guaranteed by `Partition::validate`, which
 /// rejects double-covered rows, and by slot-indexed output cells.
 struct SendPtr<T>(*mut T);
+// SAFETY: see type docs — slots never write overlapping ranges, so
+// sending the pointer to worker threads cannot create aliased &mut.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: shared references to the wrapper only expose the raw
+// pointer value; all dereferences are slot-disjoint (type docs).
 unsafe impl<T> Sync for SendPtr<T> {}
 
 /// A row-range list that carries at least one row — the slot filter
@@ -323,6 +327,9 @@ pub fn spmv_csr5_into(
     // by a tile — the output must start clean.
     y.fill(0.0);
     if carries.len() < active.len() {
+        // One-time scratch growth to the slot count; steady-state
+        // serving re-enters with capacity already in place (pinned by
+        // tests/alloc.rs). lint:allow(hot-alloc)
         carries.resize_with(active.len(), Vec::new);
     }
     let yptr = SendPtr(y.as_mut_ptr());
@@ -335,6 +342,8 @@ pub fn spmv_csr5_into(
         let yslice =
             unsafe { std::slice::from_raw_parts_mut(yptr.0, csr5.n_rows) };
         let (a, b) = per_thread[active[slot]];
+        // SAFETY: `slot < active.len() <= carries.len()` and each
+        // slot dereferences only its own carries cell — no aliasing.
         let cs = unsafe { &mut *cptr.0.add(slot) };
         csr5.spmv_tiles_into(a, b, x, yslice, cs);
     };

@@ -328,6 +328,10 @@ impl ExecPool {
                 continue;
             }
             let done = loop {
+                // Invariant: `job` is Some from publish until the
+                // dispatcher (here) takes it after the completion
+                // latch below — no other thread clears it.
+                // lint:allow(no-unwrap)
                 let job = st.job.as_ref().expect("job owned by dispatcher");
                 if job.completed == job.n_slots {
                     break job.panicked;
@@ -445,7 +449,11 @@ mod tests {
         let mut out = vec![0usize; 16];
         {
             struct SendPtr(*mut usize);
+            // SAFETY: slots write disjoint elements of `out`, which
+            // outlives the (latched) `run` call.
             unsafe impl Send for SendPtr {}
+            // SAFETY: only the raw pointer value is shared; every
+            // dereference targets a slot-owned element.
             unsafe impl Sync for SendPtr {}
             let ptr = SendPtr(out.as_mut_ptr());
             pool.run(16, &|s| {

@@ -1,5 +1,12 @@
 //! # ft2000-spmv
 //!
+// Every `unsafe` operation must sit in an explicit `unsafe { }` block
+// even inside `unsafe fn`, and every such block carries a `// SAFETY:`
+// comment (warned here, promoted to an error by `-D warnings` in CI;
+// `ft2000-lint` enforces the comment rule without a toolchain).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+//!
 //! Reproduction of *"Characterizing Scalability of Sparse Matrix-Vector
 //! Multiplications on Phytium FT-2000+ Many-cores"* (Chen, Fang, Xu,
 //! Chen, Wang — IJPP 2019).
@@ -41,10 +48,17 @@
 //!   flame table, wall or virtual clock) and a unified metrics
 //!   registry (counters, gauges, log-bucketed histograms) whose
 //!   snapshot schema absorbs the serving/shard/pool/plan-cache/
-//!   autotune surfaces.
+//!   autotune surfaces;
+//! * [`check`] — the static-analysis/correctness layer: structural
+//!   invariant verifiers for every sparse format and for
+//!   partitions/plans/plan-cache versions (`CheckReport` findings,
+//!   wired into registry admission, dispatch validation, and the
+//!   `ft2000-spmv check` CLI) plus a deterministic interleaving
+//!   harness for the lock-free pool + trace rings.
 
 pub mod analysis;
 pub mod autotune;
+pub mod check;
 pub mod cli;
 pub mod coordinator;
 pub mod corpus;

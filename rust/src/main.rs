@@ -114,8 +114,139 @@ fn run(cli: Cli) -> Result<()> {
             trace_out,
             metrics_out,
         }),
+        Command::Check { suite, matrices, seed, quick } => {
+            check_cmd(suite, matrices, seed, quick)
+        }
         Command::Info => info(),
     }
+}
+
+/// `ft2000-spmv check` — sweep the structural invariant verifier over
+/// the corpus, every plan family the planner can emit, the plan
+/// cache, the live serve path (validation seam + trace rings), and
+/// the deterministic interleaving harness. Exits nonzero on any
+/// finding, so CI can gate on it.
+fn check_cmd(
+    suite: SuiteSpec,
+    matrices: usize,
+    seed: u64,
+    quick: bool,
+) -> Result<()> {
+    use ft2000_spmv::check::{self, interleave, CheckReport, Finding};
+    use ft2000_spmv::service::{build_plan_with, PlannedFormat};
+
+    eprintln!("check: registering {matrices} corpus matrices...");
+    let plan_cfg = PlanConfig { validate: true, ..PlanConfig::default() };
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&suite, Some(matrices));
+    let engine =
+        ServeEngine::pooled(reg, Planner::Heuristic, plan_cfg.clone());
+    let n_lanes = engine.pool().map(|p| p.n_workers() + 1).unwrap_or(1);
+    let engine = engine.with_trace(std::sync::Arc::new(TraceRecorder::new(
+        TraceConfig::on(),
+        ClockMode::Wall,
+        n_lanes,
+    )));
+
+    // Every schedule family the planner can emit, verified per matrix
+    // (format structure, partition coverage, memoized schedule).
+    let families = [
+        Schedule::CsrRowStatic,
+        Schedule::CsrRowBalanced,
+        Schedule::Csr5Tiles { tile_nnz: plan_cfg.csr5_tile_nnz },
+        Schedule::CsrDynamic { chunk: 64 },
+        Schedule::SellChunks {
+            c: plan_cfg.sell_c,
+            sigma: plan_cfg.sell_sigma,
+        },
+    ];
+    let mut report = CheckReport::new();
+    for &id in &ids {
+        let entry = engine.registry.entry(id);
+        report.merge(check::check_csr(&entry.name, &entry.csr));
+        for sched in families {
+            let plan = build_plan_with(
+                &plan_cfg,
+                &entry.csr,
+                sched,
+                plan_cfg.n_threads,
+                Vec::new(),
+            );
+            let subject = format!("{}:{}", entry.name, plan.schedule_name);
+            report.merge(check::check_plan(&subject, &plan, &entry.csr));
+            match &plan.format {
+                PlannedFormat::Csr5(c5) => report.merge(
+                    check::check_csr5_vs_csr(&subject, c5, &entry.csr),
+                ),
+                PlannedFormat::Sell(s) => report.merge(
+                    check::check_sell_vs_csr(&subject, s, &entry.csr),
+                ),
+                PlannedFormat::Csr => {}
+            }
+        }
+        // One request through the live serve path: exercises the
+        // `quick_plan_check` dispatch seam and fills the trace rings
+        // that are validated below.
+        let x = vec![1.0f64; entry.csr.n_cols];
+        if let Err(e) = engine.serve_batch(id, &[x.as_slice()]) {
+            report.findings.push(Finding {
+                subject: entry.name.clone(),
+                invariant: "serve-dispatch",
+                detail: format!("{e:#}"),
+            });
+        }
+        report.checked += 1;
+    }
+    report.merge(check::check_plan_cache("plan-cache", &engine.plans));
+    if let Some(rec) = engine.trace() {
+        for detail in rec.validate() {
+            report.findings.push(Finding {
+                subject: "serve-trace".into(),
+                invariant: "trace-well-formed",
+                detail,
+            });
+        }
+        report.checked += 1;
+    }
+
+    let icfg = if quick {
+        interleave::InterleaveConfig::quick(seed)
+    } else {
+        interleave::InterleaveConfig::full(seed)
+    };
+    eprintln!(
+        "check: interleaving harness ({} mode, seed {seed:#x})...",
+        if quick { "quick" } else { "full" }
+    );
+    report.merge(interleave::run(&icfg));
+
+    if report.is_clean() {
+        println!(
+            "check: clean — {} invariants over {} matrices x {} plan \
+             families, plan cache, serve trace, interleaving harness",
+            report.checked,
+            ids.len(),
+            families.len()
+        );
+        return Ok(());
+    }
+    let mut t = Table::new(
+        format!("Structural check findings ({})", report.findings.len()),
+        &["subject", "invariant", "detail"],
+    );
+    for f in &report.findings {
+        t.row(vec![
+            f.subject.clone(),
+            f.invariant.to_string(),
+            f.detail.clone(),
+        ]);
+    }
+    t.print();
+    anyhow::bail!(
+        "{} finding(s) across {} checked invariants",
+        report.findings.len(),
+        report.checked
+    )
 }
 
 /// Wall-clock tuning config of the live `serve-bench --tune` path.

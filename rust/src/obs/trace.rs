@@ -228,6 +228,106 @@ impl TraceRecorder {
         self.lanes.iter().map(|l| l.next.load(Ordering::Relaxed)).sum()
     }
 
+    /// Well-formedness validation of the recorded rings — reused by
+    /// the deterministic interleaving harness (`check::interleave`)
+    /// and the `ft2000-spmv check` CLI smoke. Returns one message per
+    /// violation; empty means clean.
+    ///
+    /// Assumes the recorder's own usage discipline: quiescence at
+    /// validation time and one writer per lane (dispatcher = lane 0,
+    /// worker `i` = lane `i + 1`). Under it, every slot inside a
+    /// lane's held window must decode to a known stage (a zero tag
+    /// there is a torn or lost record), carry a known schedule code
+    /// and finite non-negative timestamps, and per-lane span *end*
+    /// times must be non-decreasing in ring order (oldest to newest
+    /// through a wrap) — spans are recorded at their end, so a
+    /// backwards end-time means reordered or torn records. Slots
+    /// beyond the cursor of an unwrapped lane must be untouched.
+    /// Spans are Chrome `ph:"X"` complete events (begin/end balanced
+    /// by construction), so no begin/end pairing check is needed.
+    pub fn validate(&self) -> Vec<String> {
+        const MAX_FINDINGS: usize = 64;
+        let mut findings = Vec::new();
+        for (li, lane) in self.lanes.iter().enumerate() {
+            let next = lane.next.load(Ordering::Relaxed);
+            let len = lane.slots.len();
+            let held = next.min(len);
+            let mut prev_end = f64::NEG_INFINITY;
+            for k in 0..held {
+                // Oldest-to-newest: a wrapped ring starts at the
+                // cursor, an unwrapped one at slot 0.
+                let pos = if next <= len { k } else { (next + k) % len };
+                let slot = &lane.slots[pos];
+                let tag = slot.stage.load(Ordering::Relaxed);
+                match tag.checked_sub(1).and_then(Stage::from_index) {
+                    None if tag == 0 => {
+                        findings.push(format!(
+                            "lane {li} slot {pos}: torn or lost record \
+                             inside the held window"
+                        ));
+                        continue;
+                    }
+                    None => {
+                        findings.push(format!(
+                            "lane {li} slot {pos}: unknown stage tag {tag}"
+                        ));
+                        continue;
+                    }
+                    Some(_) => {}
+                }
+                let sched = slot.sched.load(Ordering::Relaxed);
+                if sched > 5 {
+                    findings.push(format!(
+                        "lane {li} slot {pos}: invalid schedule code {sched}"
+                    ));
+                }
+                let start =
+                    f64::from_bits(slot.start_us.load(Ordering::Relaxed));
+                let dur = f64::from_bits(slot.dur_us.load(Ordering::Relaxed));
+                if !start.is_finite()
+                    || start < 0.0
+                    || !dur.is_finite()
+                    || dur < 0.0
+                {
+                    findings.push(format!(
+                        "lane {li} slot {pos}: bad timestamp/duration \
+                         ({start} us + {dur} us)"
+                    ));
+                    continue;
+                }
+                let end = start + dur;
+                // 1 ns slack: `record_elapsed` derives start as
+                // `now - dur`, so re-adding can round by an ulp.
+                if end + 1e-3 < prev_end {
+                    findings.push(format!(
+                        "lane {li} slot {pos}: end time went backwards \
+                         ({end} us after {prev_end} us)"
+                    ));
+                }
+                prev_end = prev_end.max(end);
+            }
+            if next < len {
+                for (pos, slot) in lane.slots.iter().enumerate().skip(held) {
+                    if slot.stage.load(Ordering::Relaxed) != 0 {
+                        findings.push(format!(
+                            "lane {li} slot {pos}: record beyond the lane \
+                             cursor {next}"
+                        ));
+                    }
+                }
+            }
+            if findings.len() > MAX_FINDINGS {
+                break;
+            }
+        }
+        if findings.len() > MAX_FINDINGS {
+            let extra = findings.len() - MAX_FINDINGS;
+            findings.truncate(MAX_FINDINGS);
+            findings.push(format!("... {extra} more finding(s) suppressed"));
+        }
+        findings
+    }
+
     fn each_span(&self, mut f: impl FnMut(usize, Stage, usize, f64, f64)) {
         for (lane_idx, lane) in self.lanes.iter().enumerate() {
             let held =
@@ -436,6 +536,49 @@ mod tests {
         assert!(md.contains("csr-static"));
         assert!(md.contains("sell"));
         assert!(md.contains("reduce"));
+    }
+
+    #[test]
+    fn validate_accepts_clean_rings_including_wraps() {
+        let rec = TraceRecorder::new(cfg(4, 1), ClockMode::Virtual, 2);
+        for i in 0..10 {
+            rec.set_virtual_s(i as f64);
+            rec.record(0, Stage::Kernel, 1, i as f64 * 1e6, 5.0);
+        }
+        rec.record(1, Stage::Reduce, SCHED_NONE, 3.0, 1.0);
+        let f = rec.validate();
+        assert!(f.is_empty(), "{f:?}");
+        // An untouched recorder is also clean.
+        let idle = TraceRecorder::new(cfg(4, 1), ClockMode::Wall, 3);
+        assert!(idle.validate().is_empty());
+    }
+
+    #[test]
+    fn validate_flags_malformed_records() {
+        // Bad schedule code and a NaN duration on one record.
+        let rec = TraceRecorder::new(cfg(8, 1), ClockMode::Virtual, 1);
+        rec.record(0, Stage::Kernel, 9, 10.0, f64::NAN);
+        let f = rec.validate();
+        assert!(f.iter().any(|m| m.contains("schedule code")), "{f:?}");
+        assert!(f.iter().any(|m| m.contains("duration")), "{f:?}");
+        // Per-lane end times must not go backwards.
+        let rec = TraceRecorder::new(cfg(8, 1), ClockMode::Virtual, 1);
+        rec.record(0, Stage::Kernel, 1, 100.0, 1.0);
+        rec.record(0, Stage::Kernel, 1, 0.0, 1.0);
+        let f = rec.validate();
+        assert!(f.iter().any(|m| m.contains("backwards")), "{f:?}");
+        // A zeroed tag inside the held window reads as a torn record.
+        let rec = TraceRecorder::new(cfg(8, 1), ClockMode::Virtual, 1);
+        rec.record(0, Stage::Kernel, 1, 0.0, 1.0);
+        rec.record(0, Stage::Reduce, 1, 1.0, 1.0);
+        rec.lanes[0].slots[0].stage.store(0, Ordering::Relaxed);
+        let f = rec.validate();
+        assert!(f.iter().any(|m| m.contains("torn")), "{f:?}");
+        // A write past the cursor of an unwrapped lane is flagged.
+        let rec = TraceRecorder::new(cfg(8, 1), ClockMode::Virtual, 1);
+        rec.lanes[0].slots[5].stage.store(2, Ordering::Relaxed);
+        let f = rec.validate();
+        assert!(f.iter().any(|m| m.contains("beyond")), "{f:?}");
     }
 
     #[test]

@@ -93,10 +93,19 @@ impl RequestQueue {
         self.cap
     }
 
+    /// Lock the queue state, recovering from poison: the inner state
+    /// is only touched by short panic-free sections, so it stays
+    /// consistent even if a peer thread died mid-serve.
+    fn state(&self) -> std::sync::MutexGuard<'_, QueueInner> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Non-blocking admission: enqueue or report why not. Rejected
     /// requests are dropped (the caller accounts for them).
     pub fn try_push(&self, req: Request) -> Result<(), PushError> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.state();
         if inner.closed {
             return Err(PushError::Closed);
         }
@@ -131,12 +140,12 @@ impl RequestQueue {
 
     /// No more pushes; blocked poppers drain and then observe `None`.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.state().closed = true;
         self.cv.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len
+        self.state().len
     }
 
     pub fn is_empty(&self) -> bool {
@@ -149,7 +158,7 @@ impl RequestQueue {
     /// closed and drained.
     pub fn pop_batch(&self, max_batch: usize) -> Option<Vec<Request>> {
         let max_batch = max_batch.max(1);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.state();
         loop {
             while let Some(&(seq, mid)) = inner.order.front() {
                 let live = inner
@@ -163,10 +172,13 @@ impl RequestQueue {
                     continue;
                 }
                 inner.order.pop_front();
+                // `live` above proved this queue exists and its head
+                // matches `seq`. lint:allow(no-unwrap)
                 let q = inner.by_matrix.get_mut(&mid).expect("live head");
                 let take = q.len().min(max_batch);
                 let mut batch = Vec::with_capacity(take);
                 for _ in 0..take {
+                    // `take <= q.len()`. lint:allow(no-unwrap)
                     batch.push(q.pop_front().expect("within q.len()").1);
                 }
                 if q.is_empty() {
@@ -178,7 +190,10 @@ impl RequestQueue {
             if inner.closed {
                 return None;
             }
-            inner = self.cv.wait(inner).unwrap();
+            inner = self
+                .cv
+                .wait(inner)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 }

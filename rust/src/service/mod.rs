@@ -379,11 +379,18 @@ impl ServeEngine {
     /// when all are in flight — the pool grows to peak concurrency,
     /// then stops allocating).
     fn take_scratch(&self) -> Scratch {
-        self.scratch.lock().unwrap().pop().unwrap_or_default()
+        self.scratch
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .pop()
+            .unwrap_or_default()
     }
 
     fn put_scratch(&self, scratch: Scratch) {
-        self.scratch.lock().unwrap().push(scratch);
+        self.scratch
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .push(scratch);
     }
 
     /// The shared dispatch body: validate, resolve the plan, execute
@@ -411,6 +418,19 @@ impl ServeEngine {
         }
         let t_lookup = Instant::now();
         let (plan, plan_hit, arm) = self.plan_for_dispatch(entry);
+        // Structural sanity gate (alloc-free, O(partition slots); on
+        // by default in debug builds — `PlanConfig::validate`). A
+        // corrupted plan becomes a counted error outcome on this
+        // request instead of an out-of-bounds kernel write.
+        if self.plans.config().validate {
+            if let Err(why) = crate::check::quick_plan_check(&plan, &entry.csr)
+            {
+                return Err(anyhow!(
+                    "plan validation failed for matrix {}: {why}",
+                    entry.name
+                ));
+            }
+        }
         let lookup_s = t_lookup.elapsed().as_secs_f64();
         let batch = xs.len();
         // Schedule attribution code of this dispatch (0 = none, else
@@ -580,7 +600,10 @@ impl ServeEngine {
         let duration_s = self.pool.as_ref().map_or(0.0, ExecPool::uptime_s);
         // Refresh the gauges the instrument registry also reports.
         let scratch_bytes: usize = {
-            let arenas = self.scratch.lock().unwrap();
+            let arenas = self
+                .scratch
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             arenas.iter().map(Scratch::footprint_bytes).sum()
         };
         self.metrics

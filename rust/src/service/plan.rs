@@ -235,6 +235,12 @@ pub struct PlanConfig {
     /// evict least-recently-used plans (evicted fingerprints rebuild
     /// on their next request).
     pub cache_cap: usize,
+    /// Run the alloc-free structural sanity check
+    /// (`check::quick_plan_check`) on every dispatch. Defaults to on
+    /// in debug builds and off in release (where the verifier is
+    /// reachable via `ft2000-spmv check` and registry admission
+    /// instead of the hot path).
+    pub validate: bool,
 }
 
 impl Default for PlanConfig {
@@ -246,6 +252,7 @@ impl Default for PlanConfig {
             sell_c: 8,
             sell_sigma: 64,
             cache_cap: 0,
+            validate: cfg!(debug_assertions),
         }
     }
 }
@@ -569,6 +576,16 @@ impl PlanCache {
         PlanCache { planner, cfg, inner: Mutex::new(CacheInner::default()) }
     }
 
+    /// Lock the cache state, recovering from poison: the inner map is
+    /// only mutated through short, panic-free bookkeeping sections, so
+    /// a poisoned mutex (a panicked peer elsewhere in the process)
+    /// leaves it consistent.
+    fn state(&self) -> std::sync::MutexGuard<'_, CacheInner> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     pub fn config(&self) -> &PlanConfig {
         &self.cfg
     }
@@ -589,13 +606,13 @@ impl PlanCache {
     /// identical plan, so the race is benign.
     pub fn plan_for(&self, fp: u64, csr: &Csr) -> (Arc<Plan>, bool) {
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.state();
             if let Some(p) = inner.hit(fp) {
                 return (p, true);
             }
         }
         let built = Arc::new(build_plan(&self.planner, &self.cfg, csr));
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.state();
         if let Some(p) = inner.hit(fp) {
             // Lost the build race: the winner's identical plan is
             // already cached, so this request still counts as a hit
@@ -618,7 +635,7 @@ impl PlanCache {
     /// counted miss *without* rebuilding the static plan. Returns
     /// `(served plan, hit)` like [`PlanCache::plan_for`].
     pub fn hit_or_install(&self, fp: u64, plan: Arc<Plan>) -> (Arc<Plan>, bool) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.state();
         if let Some(p) = inner.hit(fp) {
             return (p, true);
         }
@@ -636,7 +653,7 @@ impl PlanCache {
     /// version — the autotuner's promotion (and demotion) hook. Does
     /// not count as a hit or a miss; returns the new version.
     pub fn replace(&self, fp: u64, plan: Arc<Plan>) -> u64 {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.state();
         let t = inner.touch();
         inner.replacements += 1;
         match inner.plans.get_mut(&fp) {
@@ -661,31 +678,42 @@ impl PlanCache {
 
     /// Version of the cached entry for `fp` (bumped by `replace`).
     pub fn version(&self, fp: u64) -> Option<u64> {
-        self.inner.lock().unwrap().plans.get(&fp).map(|e| e.version)
+        self.state().plans.get(&fp).map(|e| e.version)
+    }
+
+    /// `(fingerprint, version)` of every cached entry — the
+    /// verifier's view for the version-monotonicity invariant
+    /// (`check::check_plan_cache`). Unordered.
+    pub fn versions(&self) -> Vec<(u64, u64)> {
+        self.state()
+            .plans
+            .iter()
+            .map(|(&fp, e)| (fp, e.version))
+            .collect()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().plans.len()
+        self.state().plans.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().plans.is_empty()
+        self.state().plans.is_empty()
     }
 
     /// (hits, misses) so far.
     pub fn stats(&self) -> (u64, u64) {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.state();
         (inner.hits, inner.misses)
     }
 
     /// LRU evictions so far.
     pub fn evictions(&self) -> u64 {
-        self.inner.lock().unwrap().evictions
+        self.state().evictions
     }
 
     /// Autotuner plan replacements so far.
     pub fn replacements(&self) -> u64 {
-        self.inner.lock().unwrap().replacements
+        self.state().replacements
     }
 
     /// Hit rate over all lookups, or `None` before the first lookup —

@@ -11,6 +11,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::check::{self, CheckReport};
 use crate::corpus::suite::SuiteSpec;
 use crate::sparse::{mm, Csr, MatrixFeatures};
 
@@ -59,6 +60,9 @@ pub struct MatrixRegistry {
     entries: Vec<MatrixEntry>,
     by_fingerprint: HashMap<u64, usize>,
     by_name: HashMap<String, usize>,
+    /// Matrices rejected by admission checking
+    /// ([`MatrixRegistry::try_register`]) — counted, never served.
+    rejected: usize,
 }
 
 impl MatrixRegistry {
@@ -74,10 +78,38 @@ impl MatrixRegistry {
         self.entries.is_empty()
     }
 
+    /// Matrices refused by [`MatrixRegistry::try_register`] so far.
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// Checked admission: run the structural verifier
+    /// (`check::check_csr`) and register only clean matrices. A bad
+    /// matrix is a counted rejection (see
+    /// [`MatrixRegistry::rejected`]) carrying the findings — never a
+    /// panic and never a served entry.
+    pub fn try_register(
+        &mut self,
+        name: &str,
+        csr: Csr,
+    ) -> std::result::Result<usize, CheckReport> {
+        let report = check::check_csr(name, &csr);
+        if !report.is_clean() {
+            self.rejected += 1;
+            return Err(report);
+        }
+        Ok(self.register(name, csr))
+    }
+
     /// Register a matrix; returns its id. Identical content (same
     /// fingerprint) is deduplicated to the first id, regardless of
-    /// name.
+    /// name. Trusted-input path (synthetic corpus, roundtrips);
+    /// untrusted loads go through [`MatrixRegistry::try_register`].
     pub fn register(&mut self, name: &str, csr: Csr) -> usize {
+        debug_assert!(
+            check::check_csr(name, &csr).is_clean(),
+            "register() is for trusted input; use try_register"
+        );
         let fp = fingerprint(&csr);
         if let Some(&id) = self.by_fingerprint.get(&fp) {
             self.by_name.entry(name.to_string()).or_insert(id);
@@ -144,11 +176,15 @@ impl MatrixRegistry {
     }
 
     /// Register a MatrixMarket file under its path as the name.
+    /// Untrusted input: the parsed matrix passes through
+    /// [`MatrixRegistry::try_register`], so a structurally corrupt
+    /// file is a counted error, not a later kernel panic.
     pub fn register_mtx(&mut self, path: &str) -> Result<usize> {
         let f = std::fs::File::open(path)
             .with_context(|| format!("opening {path}"))?;
         let csr = mm::read_csr(f).map_err(|e| anyhow!("{path}: {e}"))?;
-        Ok(self.register(path, csr))
+        self.try_register(path, csr)
+            .map_err(|report| anyhow!("{path}: rejected: {report}"))
     }
 }
 
@@ -183,6 +219,28 @@ mod tests {
         assert_eq!(reg.lookup_name("first"), Some(a));
         assert_eq!(reg.lookup_name("alias"), Some(a));
         assert_eq!(reg.entry(a).features.nnz, reg.entry(a).csr.nnz());
+    }
+
+    #[test]
+    fn try_register_rejects_corrupt_matrices_as_counted_errors() {
+        let mut rng = Pcg32::new(11);
+        let good = generators::random_uniform(64, 4, &mut rng);
+        let mut bad = good.clone();
+        bad.indices[0] = 64; // column out of bounds
+        let mut reg = MatrixRegistry::new();
+        let report = reg.try_register("bad", bad).unwrap_err();
+        assert!(!report.is_clean());
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.invariant == "col-bounds"));
+        assert_eq!(reg.rejected(), 1);
+        assert_eq!(reg.len(), 0, "rejected matrices are never served");
+        // Clean content still admits.
+        let id = reg.try_register("good", good).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.rejected(), 1);
+        assert!(reg.get(id).is_some());
     }
 
     #[test]

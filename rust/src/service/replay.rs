@@ -269,6 +269,8 @@ impl Dispatcher<'_> {
             let xs: Vec<&[f64]> = (0..size).map(|_| x.as_slice()).collect();
             // Replay discards outputs too: ride the scratch-arena
             // serve path, same as the live drain loop.
+            // Replay traffic is generated against the registry, so
+            // every id resolves. lint:allow(no-unwrap)
             let out = self
                 .engine
                 .serve_batch(id, &xs)
@@ -776,6 +778,8 @@ fn replay_open(
             }
             i += 1;
         }
+        // The admit loop above pushed at least one entry.
+        // lint:allow(no-unwrap)
         let head = queue.pop_front().expect("non-empty after admit");
         let mid = reqs[head].matrix_idx;
         let mut batch = vec![head];
@@ -878,7 +882,9 @@ fn replay_closed(
             .filter(|&(ti, _, _)| ti <= t_start)
             .collect();
         waiting.sort_by(|a, b| {
-            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
         });
         let mid = waiting[0].2;
         let batch: Vec<(f64, usize)> = waiting

@@ -82,7 +82,9 @@ impl ShardPlacement {
         let mut ranked: Vec<(usize, f64)> =
             ids.iter().copied().zip(weights.iter().copied()).collect();
         ranked.sort_by(|a, b| {
-            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
         });
         let hot = match policy {
             PlacementPolicy::Home => 0,
@@ -97,7 +99,11 @@ impl ShardPlacement {
         let mut load = vec![0.0f64; shards];
         for &(id, w) in ranked.iter().skip(hot) {
             let s = (0..shards)
-                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                .min_by(|&a, &b| {
+                    load[a]
+                        .partial_cmp(&load[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
                 .unwrap_or(0);
             load[s] += w.max(0.0);
             assignment.insert(id, Assignment::Homed(s));

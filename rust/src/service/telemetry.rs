@@ -261,6 +261,15 @@ impl Telemetry {
         Self::default()
     }
 
+    /// Lock the stats, recovering from poison — recorders only run
+    /// short panic-free accounting sections, so the state is always
+    /// consistent.
+    fn state(&self) -> std::sync::MutexGuard<'_, ServeStats> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     pub fn record_batch(
         &self,
         matrix_id: usize,
@@ -269,34 +278,32 @@ impl Telemetry {
         flops: f64,
         schedule: &str,
     ) {
-        self.inner
-            .lock()
-            .unwrap()
+        self.state()
             .record_batch(matrix_id, size, wall_seconds, flops, schedule);
     }
 
     pub fn record_latency_ms(&self, ms: f64) {
-        self.inner.lock().unwrap().record_latency_ms(ms);
+        self.state().record_latency_ms(ms);
     }
 
     pub fn record_queue_wait_ms(&self, ms: f64) {
-        self.inner.lock().unwrap().record_queue_wait_ms(ms);
+        self.state().record_queue_wait_ms(ms);
     }
 
     pub fn record_rejected(&self, n: u64) {
-        self.inner.lock().unwrap().record_rejected(n);
+        self.state().record_rejected(n);
     }
 
     pub fn record_shed(&self, n: u64) {
-        self.inner.lock().unwrap().record_shed(n);
+        self.state().record_shed(n);
     }
 
     pub fn record_errors(&self, n: u64) {
-        self.inner.lock().unwrap().record_errors(n);
+        self.state().record_errors(n);
     }
 
     pub fn snapshot(&self) -> ServeStats {
-        self.inner.lock().unwrap().clone()
+        self.state().clone()
     }
 }
 

@@ -2,6 +2,7 @@
 //! SuiteSparse matrices (the paper's dataset) when they have them; the
 //! synthetic corpus is the default substitute (DESIGN.md).
 
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Read, Write};
 
 use super::coo::Coo;
@@ -47,6 +48,10 @@ pub fn read_coo<R: Read>(r: R) -> Result<Coo, MmError> {
     let mut size: Option<(usize, usize, usize)> = None;
     let mut coo = Coo::default();
     let mut remaining = 0usize;
+    // Duplicate coordinates would silently sum in `Coo::to_csr` —
+    // reject them at load as counted parse errors instead (a
+    // symmetric file repeating a mirrored pair trips this too).
+    let mut seen: HashSet<(usize, usize)> = HashSet::new();
     for (ln, line) in lines {
         let line = line?;
         let t = line.trim();
@@ -98,8 +103,23 @@ pub fn read_coo<R: Read>(r: R) -> Result<Coo, MmError> {
                 ),
             ));
         }
+        if !seen.insert((r - 1, c - 1)) {
+            return Err(perr(
+                ln + 1,
+                format!("duplicate entry for coordinate ({r},{c})"),
+            ));
+        }
         coo.push(r - 1, c - 1, v);
         if symmetric && r != c {
+            if !seen.insert((c - 1, r - 1)) {
+                return Err(perr(
+                    ln + 1,
+                    format!(
+                        "symmetric mirror of ({r},{c}) duplicates an \
+                         explicit entry"
+                    ),
+                ));
+            }
             coo.push(c - 1, r - 1, v);
         }
         remaining -= 1;
@@ -192,6 +212,34 @@ mod tests {
         assert!(read_csr(text.as_bytes()).is_err());
         let text2 = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
         assert!(read_csr(text2.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_coordinates() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+             3 3 3\n\
+             1 1 1.0\n\
+             2 2 2.0\n\
+             1 1 4.0\n";
+        match read_csr(text.as_bytes()) {
+            Err(MmError::Parse { line, msg }) => {
+                assert_eq!(line, 5);
+                assert!(msg.contains("duplicate"), "unexpected: {msg}");
+            }
+            other => panic!("expected duplicate error, got {other:?}"),
+        }
+        // A symmetric file listing both triangles duplicates through
+        // the mirror push.
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+             2 2 2\n\
+             2 1 3.0\n\
+             1 2 3.0\n";
+        match read_csr(text.as_bytes()) {
+            Err(MmError::Parse { msg, .. }) => {
+                assert!(msg.contains("duplicate"), "unexpected: {msg}");
+            }
+            other => panic!("expected duplicate error, got {other:?}"),
+        }
     }
 
     #[test]

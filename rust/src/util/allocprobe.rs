@@ -61,12 +61,15 @@ pub struct CountingAllocator;
 unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         count_one();
-        System.alloc(layout)
+        // SAFETY: caller upholds `GlobalAlloc::alloc`'s contract
+        // (non-zero-sized `layout`); forwarded verbatim to `System`.
+        unsafe { System.alloc(layout) }
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         count_one();
-        System.alloc_zeroed(layout)
+        // SAFETY: same contract as `alloc`, forwarded verbatim.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
     unsafe fn realloc(
@@ -76,10 +79,15 @@ unsafe impl GlobalAlloc for CountingAllocator {
         new_size: usize,
     ) -> *mut u8 {
         count_one();
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: caller guarantees `ptr` came from this allocator
+        // with `layout` and `new_size` is non-zero; `System` is the
+        // allocator every method of this wrapper delegates to.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: caller guarantees `ptr` was allocated by this
+        // allocator (i.e. by `System`) with `layout`.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }

@@ -1,0 +1,186 @@
+//! Property tests of the structural invariant verifier: every
+//! corruption class the `check` subsystem claims to catch is caught,
+//! and the clean corpus sails through. Deterministic seeds via
+//! `util::testkit::check`.
+
+use ft2000_spmv::check::{self, interleave};
+use ft2000_spmv::corpus::suite::SuiteSpec;
+use ft2000_spmv::prop_assert;
+use ft2000_spmv::sched::{Partition, Schedule};
+use ft2000_spmv::service::{
+    build_plan, build_plan_with, MatrixRegistry, PlanConfig, Planner,
+};
+use ft2000_spmv::sparse::{Coo, Csr, Csr5, SellCSigma};
+use ft2000_spmv::util::rng::Pcg32;
+use ft2000_spmv::util::testkit::check as prop_check;
+
+fn random_csr(rng: &mut Pcg32) -> Csr {
+    let n = 8 + rng.gen_range(200);
+    let mut coo = Coo::new(n, n);
+    let nnz = n + rng.gen_range(n * 4);
+    for _ in 0..nnz {
+        coo.push(rng.gen_range(n), rng.gen_range(n), rng.gen_f64() - 0.5);
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn corpus_passes_clean_through_the_verifier() {
+    let cfg = PlanConfig::default();
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&SuiteSpec::tiny(), Some(8));
+    for id in ids {
+        let e = reg.entry(id);
+        let r = check::check_csr(&e.name, &e.csr);
+        assert!(r.is_clean(), "{}: {r}", e.name);
+        let plan = build_plan(&Planner::Heuristic, &cfg, &e.csr);
+        let r = check::check_plan(&e.name, &plan, &e.csr);
+        assert!(r.is_clean(), "{} plan: {r}", e.name);
+    }
+}
+
+#[test]
+fn mutated_row_ptr_is_caught() {
+    prop_check("row-ptr-mutation-caught", 25, |rng| {
+        let mut csr = random_csr(rng);
+        // Push an interior pointer past the end: guaranteed to break
+        // monotonicity (its successor is <= nnz).
+        let i = 1 + rng.gen_range(csr.n_rows - 1);
+        let beyond = csr.nnz() + 1;
+        csr.ptr[i] = beyond;
+        let r = check::check_csr("mutated", &csr);
+        prop_assert!(!r.is_clean(), "mutation at ptr[{i}] not caught");
+        prop_assert!(
+            r.findings.iter().any(|f| f.invariant == "ptr-monotone"
+                || f.invariant == "ptr-end"),
+            "wrong invariant: {r}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn oob_column_index_is_caught() {
+    prop_check("oob-column-caught", 25, |rng| {
+        let mut csr = random_csr(rng);
+        let k = rng.gen_range(csr.nnz());
+        csr.indices[k] = csr.n_cols as u32 + rng.gen_range(5) as u32;
+        let r = check::check_csr("oob", &csr);
+        prop_assert!(!r.is_clean(), "oob col at {k} not caught");
+        prop_assert!(
+            r.findings.iter().any(|f| f.invariant == "col-bounds"),
+            "wrong invariant: {r}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn non_permutation_sell_perm_is_caught() {
+    prop_check("sell-perm-mutation-caught", 20, |rng| {
+        let csr = random_csr(rng);
+        let c = 1 + rng.gen_range(16);
+        let sigma = 1 + rng.gen_range(128);
+        let mut s = SellCSigma::from_csr(&csr, c, sigma);
+        // Duplicate one permutation entry: no longer a bijection.
+        s.perm[0] = s.perm[1];
+        let r = check::check_sell("dup-perm", &s);
+        prop_assert!(!r.is_clean(), "duplicated perm entry not caught");
+        prop_assert!(
+            r.findings.iter().any(|f| f.invariant == "perm-permutation"),
+            "wrong invariant: {r}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn overlapping_and_gapped_row_slots_are_caught() {
+    prop_check("bad-row-partition-caught", 20, |rng| {
+        let csr = random_csr(rng);
+        let n = csr.n_rows;
+        // Overlap: two threads both own row 0.
+        let overlap = Partition::Rows {
+            per_thread: vec![vec![(0, n)], vec![(0, 1)]],
+        };
+        let r = check::check_partition("overlap", &overlap, &csr);
+        prop_assert!(!r.is_clean(), "overlapping slots not caught");
+        // Gap: the last row is covered by nobody.
+        let gap = Partition::Rows {
+            per_thread: vec![vec![(0, n - 1)], vec![]],
+        };
+        let r = check::check_partition("gap", &gap, &csr);
+        prop_assert!(!r.is_clean(), "coverage gap not caught");
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupt_csr5_tile_descriptors_are_caught() {
+    prop_check("csr5-tile-mutation-caught", 20, |rng| {
+        let csr = random_csr(rng);
+        let tile_nnz = 1 + rng.gen_range(64);
+        let mut c5 = Csr5::from_csr(&csr, tile_nnz);
+        // A tile's starting row beyond the matrix breaks the
+        // descriptor/row-pointer consistency.
+        let t = rng.gen_range(c5.tile_ptr.len());
+        c5.tile_ptr[t] = csr.n_rows as u32 + 7;
+        let r = check::check_csr5_vs_csr("bad-tile", &c5, &csr);
+        prop_assert!(!r.is_clean(), "corrupt tile_ptr[{t}] not caught");
+        Ok(())
+    });
+}
+
+#[test]
+fn quick_plan_check_matches_plan_to_matrix() {
+    let cfg = PlanConfig::default();
+    let mut rng = Pcg32::new(0xC8EC);
+    let a = random_csr(&mut rng);
+    for sched in [
+        Schedule::CsrRowStatic,
+        Schedule::Csr5Tiles { tile_nnz: 64 },
+        Schedule::SellChunks { c: 8, sigma: 64 },
+    ] {
+        let plan =
+            build_plan_with(&cfg, &a, sched, cfg.n_threads, Vec::new());
+        assert!(
+            check::quick_plan_check(&plan, &a).is_ok(),
+            "{sched:?}: clean plan rejected"
+        );
+        // The same plan against a differently-sized matrix must be
+        // refused before a kernel can run off the end of it.
+        let mut rng2 = Pcg32::new(0x0DD);
+        let b = loop {
+            let b = random_csr(&mut rng2);
+            if b.n_rows != a.n_rows {
+                break b;
+            }
+        };
+        assert!(
+            check::quick_plan_check(&plan, &b).is_err(),
+            "{sched:?}: mismatched matrix accepted"
+        );
+    }
+}
+
+#[test]
+fn registry_counts_rejections_without_panicking() {
+    let mut rng = Pcg32::new(0xBAD);
+    let good = random_csr(&mut rng);
+    let mut bad = good.clone();
+    bad.data[0] = f64::NAN;
+    let mut reg = MatrixRegistry::new();
+    assert!(reg.try_register("nan", bad).is_err());
+    assert_eq!(reg.rejected(), 1);
+    assert!(reg.try_register("good", good).is_ok());
+    assert_eq!(reg.len(), 1);
+}
+
+#[test]
+fn interleave_quick_mode_runs_clean() {
+    for seed in [1u64, 0xF00D] {
+        let r = interleave::run(&interleave::InterleaveConfig::quick(seed));
+        assert!(r.is_clean(), "seed {seed:#x}: {r}");
+        assert!(r.checked > 0);
+    }
+}
