@@ -13,12 +13,15 @@
 
 mod common;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use ft2000_spmv::check;
 use ft2000_spmv::sched::Schedule;
 use ft2000_spmv::service::{
     build_plan_with, MatrixRegistry, PlanConfig, Planner, ServeEngine,
 };
 use ft2000_spmv::util::bench::{bench, black_box, BenchConfig};
+use ft2000_spmv::util::ordatomic::OrdAtomicU64;
 use ft2000_spmv::util::table::Table;
 
 fn main() {
@@ -140,4 +143,64 @@ fn main() {
         }
     }
     t.print();
+
+    // --- ordatomic passthrough A/B -----------------------------------
+    // With `hbcheck` off (every release build, tier-1 tests, this
+    // bench), `OrdAtomicU64` must compile to the bare std atomic — the
+    // whole concurrency-soundness layer rides on that being free. A/B
+    // a hot RMW+load loop on a raw `AtomicU64` vs the instrumented
+    // cell and gate on the ratio in quick (CI) mode.
+    let iters: u64 = if quick { 200_000 } else { 1_000_000 };
+    let raw = AtomicU64::new(0);
+    let wrapped = OrdAtomicU64::named(0, "bench.passthrough");
+    let spin = |add: &dyn Fn() -> u64, load: &dyn Fn() -> u64| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            black_box(add());
+            acc = acc.wrapping_add(black_box(load()));
+        }
+        acc
+    };
+    let r_raw = bench("raw", &bench_cfg, || {
+        black_box(spin(
+            &|| raw.fetch_add(1, Ordering::Relaxed),
+            &|| raw.load(Ordering::Relaxed),
+        ));
+    });
+    let r_ord = bench("ordatomic", &bench_cfg, || {
+        black_box(spin(
+            &|| wrapped.fetch_add(1, Ordering::Relaxed),
+            &|| wrapped.load(Ordering::Relaxed),
+        ));
+    });
+    let ratio = r_ord.mean_s / r_raw.mean_s;
+    let mut t = Table::new(
+        "OrdAtomic passthrough (hbcheck off): raw vs instrumented cell",
+        &["variant", "ns/op", "ratio"],
+    );
+    let per_op = 1e9 / (2.0 * iters as f64);
+    t.row(vec![
+        "AtomicU64".into(),
+        format!("{:.2}", r_raw.mean_s * per_op),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "OrdAtomicU64".into(),
+        format!("{:.2}", r_ord.mean_s * per_op),
+        format!("{ratio:.2}x"),
+    ]);
+    t.print();
+    println!(
+        "ordatomic passthrough ratio: {ratio:.3}x (must be ~1.0 — the \
+         wrapper is #[inline(always)] delegation)"
+    );
+    // Gate only in quick/CI mode; threshold is generous because at
+    // ~1 ns/op the measurement jitter dwarfs any real delta.
+    if quick {
+        assert!(
+            ratio < 1.25,
+            "ordatomic passthrough regressed: {ratio:.3}x slower than \
+             the raw atomic"
+        );
+    }
 }

@@ -21,6 +21,20 @@
 //!   (deterministic modules: `sparse/`, `sched/`, `sim/`,
 //!   `autotune/`, `mlmodel/`, `corpus/`, `counters/`, `solver/`,
 //!   `reorder/`, `analysis/`, `coordinator/`, `check/`).
+//! * `atomic-ord` — every atomic operation naming a memory ordering
+//!   (`Ordering::Relaxed` … `Ordering::SeqCst`) must carry an
+//!   `ord:` comment on the line or within the six lines above,
+//!   stating why that strength is correct. Test modules and
+//!   `util/ordatomic.rs` (the instrument itself) are exempt.
+//! * `relaxed-store` — a bare `Relaxed` store publishes nothing and
+//!   is almost always a broken-release bug in waiting; banned
+//!   outside tests unless waived with `lint:allow(relaxed-store)`
+//!   plus a justification (single-writer protocol, racy-by-contract
+//!   cell).
+//! * `hot-seqcst` — `SeqCst` on the hot path (`exec/`, `obs/`,
+//!   `service/`, `sched/`) is a full-fence tax that acquire/release
+//!   almost always replaces; banned outside tests unless waived
+//!   with `lint:allow(hot-seqcst)`.
 //! * `crate-attrs` — `lib.rs` must carry
 //!   `#![deny(unsafe_op_in_unsafe_fn)]`.
 //!
@@ -53,6 +67,24 @@ const WAIVER_WINDOW: usize = 5;
 
 /// Lines a `SAFETY:` comment may precede its `unsafe` site by.
 const SAFETY_WINDOW: usize = 8;
+
+/// Lines an `ord:` comment may precede its atomic op by (a multi-line
+/// comment block over a run of ops needs a little more reach than a
+/// waiver).
+const ORD_WINDOW: usize = 6;
+
+/// The memory-ordering tokens the `atomic-ord` family of rules keys
+/// on. Spelled out so `std::cmp::Ordering::Equal` never matches.
+const ATOMIC_ORDS: &[&str] = &[
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+/// Modules forming the lock-free hot path, where `SeqCst` is banned.
+const HOT_PATH: &[&str] = &["exec/", "obs/", "service/", "sched/"];
 
 struct Finding {
     path: String,
@@ -176,6 +208,28 @@ fn has_safety_comment(lines: &[&str], i: usize) -> bool {
     lines[lo..=i].iter().any(|l| l.contains("SAFETY:"))
 }
 
+/// An `ord:` comment (boundary-checked so `record:` never matches) on
+/// the line or within `ORD_WINDOW` lines above it.
+fn has_ord_comment(lines: &[&str], i: usize) -> bool {
+    let lo = i.saturating_sub(ORD_WINDOW);
+    lines[lo..=i].iter().any(|l| {
+        let mut from = 0;
+        while let Some(j) = l[from..].find("ord:") {
+            let start = from + j;
+            let pre_ok = start == 0
+                || !l[..start]
+                    .chars()
+                    .next_back()
+                    .is_some_and(|c| c.is_alphanumeric() || c == '_');
+            if pre_ok {
+                return true;
+            }
+            from = start + 4;
+        }
+        false
+    })
+}
+
 /// Does this code line declare a function whose name ends in `_into`?
 fn declares_into_fn(code: &str) -> bool {
     let mut from = 0;
@@ -208,6 +262,10 @@ fn scan_file(rel: &str, text: &str, findings: &mut Vec<Finding>) {
     let unsafe_ok = in_exec || rel == "util/allocprobe.rs";
     let unwrap_banned = in_exec || rel.starts_with("service/");
     let clock_banned = CLOCK_BANNED.iter().any(|m| rel.starts_with(m));
+    // The instrument defines the passthrough ops; every ordering in
+    // the crate is documented *at the call site*, not inside it.
+    let ord_exempt = rel == "util/ordatomic.rs";
+    let hot_path = HOT_PATH.iter().any(|m| rel.starts_with(m));
     let mut in_tests = false;
     let mut depth: i64 = 0;
     let mut into_pending = false;
@@ -275,6 +333,48 @@ fn scan_file(rel: &str, text: &str, findings: &mut Vec<Finding>) {
                  through a clock seam)"
                     .to_string(),
             );
+        }
+
+        if !in_tests
+            && !ord_exempt
+            && ATOMIC_ORDS.iter().any(|o| code.contains(o))
+        {
+            if !has_ord_comment(&lines, i)
+                && !waived(&lines, i, "atomic-ord")
+            {
+                push(
+                    ln,
+                    "atomic-ord",
+                    "atomic op without an `ord:` comment within 6 lines \
+                     above stating why this ordering is correct"
+                        .to_string(),
+                );
+            }
+            if code.contains(".store(")
+                && code.contains("Ordering::Relaxed")
+                && !waived(&lines, i, "relaxed-store")
+            {
+                push(
+                    ln,
+                    "relaxed-store",
+                    "bare Relaxed store (publishes nothing — use \
+                     Release, or waive with the single-writer/racy-ok \
+                     justification)"
+                        .to_string(),
+                );
+            }
+            if hot_path
+                && code.contains("Ordering::SeqCst")
+                && !waived(&lines, i, "hot-seqcst")
+            {
+                push(
+                    ln,
+                    "hot-seqcst",
+                    "SeqCst on the hot path (full fence — acquire/\
+                     release almost always suffices)"
+                        .to_string(),
+                );
+            }
         }
 
         if into_active

@@ -1,0 +1,1072 @@
+//! Vector-clock happens-before race detector for the lock-free serve
+//! core.
+//!
+//! The PR 7 interleaving harness proved the pool/trace protocols
+//! *functionally* correct under forced schedules; this module proves
+//! the **synchronization itself** sound. The instrumented atomics
+//! layer ([`crate::util::ordatomic`], `--features hbcheck`) captures
+//! every atomic op as an [`Event`] in exact linearization order;
+//! [`analyze`] replays the log with DJIT-style per-lane vector
+//! clocks and reports, as counted findings:
+//!
+//! - **race candidates** — conflicting accesses to one cell that no
+//!   happens-before edge orders, and
+//! - **ordering-strength waste** (advisory) — acquire/release sites
+//!   whose edges are never load-bearing on any explored schedule,
+//!   i.e. hot-path downgrade candidates.
+//!
+//! ## The happens-before model
+//!
+//! Edges come from three sources:
+//!
+//! 1. **Program order** within a lane.
+//! 2. **Release/acquire pairing**: a release-class write joins the
+//!    writer's clock into a per-address release clock; an
+//!    acquire-class read joins that accumulated clock into the
+//!    reader. A *relaxed store* to the address breaks the release
+//!    sequence (clears the clock); a relaxed RMW continues it —
+//!    mirroring the C++11 release-sequence rules the analyzer
+//!    approximates.
+//! 3. **Fork/join pseudo-events** from `ExecPool::run`: the pool's
+//!    Condvar-latch dispatch has `std::thread::scope` semantics
+//!    (publish under mutex → workers claim → dispatcher blocks on
+//!    the completion latch), so `run` logs a fork at dispatch and a
+//!    join after the latch instead of the analyzer decoding mutex
+//!    traffic. A fork joins the dispatcher's clock into every lane's
+//!    next event; a join gathers all lanes into the dispatcher.
+//!
+//! ## The conflict model
+//!
+//! Two accesses to one address from different lanes conflict when at
+//! least one writes — except pairs that are atomically arbitrated or
+//! pure synchronization:
+//!
+//! - RMW vs RMW never conflicts (hardware arbitration — counters,
+//!   ring cursors, slot claims are exactly this).
+//! - Load vs RMW never conflicts (monitoring snapshots of counters).
+//! - Two accesses that are both stronger than `Relaxed` never
+//!   conflict (C++ atomics cannot data-race; the detector treats
+//!   `Relaxed` accesses as morally-plain data whose ordering the
+//!   surrounding protocol must supply, and sync-class accesses as
+//!   the protocol itself). A relaxed store racing an *acquire* load
+//!   still conflicts — that is the broken-release pattern.
+//!
+//! Cells constructed with `racy_ok` (documented last-writer-wins,
+//! e.g. the trace kernel-context attribution) are exempt from
+//! conflict reporting but still generate edges.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{CheckReport, Finding};
+use crate::util::ordatomic::{Event, MemOrd, OpKind};
+
+/// Findings cap per analysis — a broken protocol should read as a
+/// handful of lines, not a core dump.
+const MAX_RACES: usize = 64;
+
+/// Sync addresses probed for ordering waste per analysis.
+const MAX_PROBES: usize = 32;
+
+/// One side of a race candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct Access {
+    /// Capture lane id (process-level thread id).
+    pub lane: usize,
+    /// Event seq in the capture log.
+    pub seq: usize,
+    pub op: OpKind,
+    pub ord: MemOrd,
+}
+
+impl std::fmt::Display for Access {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}({}) by lane {} (seq {})",
+            self.op.label(),
+            self.ord.label(),
+            self.lane,
+            self.seq
+        )
+    }
+}
+
+/// A conflicting pair of accesses no happens-before edge orders.
+#[derive(Clone, Debug)]
+pub struct RaceFinding {
+    pub addr: usize,
+    /// Audit label of the cell (from its constructor).
+    pub site: &'static str,
+    /// The earlier access (log order).
+    pub first: Access,
+    /// The later access.
+    pub second: Access,
+}
+
+impl RaceFinding {
+    /// Does either side perform the given op? (Test hook: fixtures
+    /// assert the store-store / store-load classes are told apart.)
+    pub fn involves(&self, op: OpKind) -> bool {
+        self.first.op == op || self.second.op == op
+    }
+}
+
+impl std::fmt::Display for RaceFinding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "`{}`: {} unordered with {}",
+            self.site, self.first, self.second
+        )
+    }
+}
+
+/// Result of one [`analyze`] pass.
+#[derive(Clone, Debug, Default)]
+pub struct HbAnalysis {
+    /// Race candidates (deduplicated per (cell, op-pair), capped).
+    pub races: Vec<RaceFinding>,
+    /// Race findings dropped by the cap.
+    pub suppressed: usize,
+    /// Advisory ordering-strength-waste notes (not counted findings:
+    /// a wasted AcqRel is a perf bug, not a soundness bug).
+    pub advice: Vec<String>,
+    /// Events analyzed.
+    pub events: usize,
+    /// Release→acquire edges derived.
+    pub edges: usize,
+    /// Distinct lanes in the capture.
+    pub lanes: usize,
+}
+
+/// A lane's vector clock (indices are dense lane slots).
+#[derive(Clone, Debug, Default)]
+struct Vc(Vec<u32>);
+
+impl Vc {
+    fn new(n: usize) -> Vc {
+        Vc(vec![0; n])
+    }
+
+    fn get(&self, i: usize) -> u32 {
+        self.0.get(i).copied().unwrap_or(0)
+    }
+
+    fn tick(&mut self, i: usize) {
+        self.0[i] += 1;
+    }
+
+    fn join(&mut self, o: &Vc) {
+        for (a, b) in self.0.iter_mut().zip(&o.0) {
+            *a = (*a).max(*b);
+        }
+    }
+}
+
+/// Last access of one op class by one lane on one address. `plain`
+/// additionally remembers the lane's last *relaxed* access when the
+/// newest one is sync-class — HB of the newest access implies HB of
+/// everything earlier in the lane, but the conflict *classification*
+/// differs, so both must be checkable.
+#[derive(Clone, Copy, Debug)]
+struct Epoch {
+    /// The owning lane's clock component at the access.
+    c: u32,
+    seq: usize,
+    ord: MemOrd,
+    op: OpKind,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct LanePair {
+    last: Epoch,
+    plain: Option<Epoch>,
+}
+
+#[derive(Debug, Default)]
+struct AddrState {
+    loads: BTreeMap<usize, LanePair>,
+    stores: BTreeMap<usize, LanePair>,
+    rmws: BTreeMap<usize, LanePair>,
+}
+
+fn record_epoch(map: &mut BTreeMap<usize, LanePair>, lane: usize, ep: Epoch) {
+    let plain = (ep.ord == MemOrd::Relaxed).then_some(ep);
+    map.entry(lane)
+        .and_modify(|p| {
+            p.last = ep;
+            if plain.is_some() {
+                p.plain = plain;
+            }
+        })
+        .or_insert(LanePair { last: ep, plain });
+}
+
+/// The conflict model (see module docs).
+fn conflicting(a_op: OpKind, a_ord: MemOrd, b_op: OpKind, b_ord: MemOrd) -> bool {
+    use OpKind::{Load, Rmw, Store};
+    let writes =
+        matches!(a_op, Store | Rmw) || matches!(b_op, Store | Rmw);
+    if !writes {
+        return false;
+    }
+    if a_op == Rmw && b_op == Rmw {
+        return false;
+    }
+    if (a_op == Load && b_op == Rmw) || (a_op == Rmw && b_op == Load) {
+        return false;
+    }
+    if a_ord != MemOrd::Relaxed && b_ord != MemOrd::Relaxed {
+        return false;
+    }
+    true
+}
+
+/// One full vector-clock pass. `disabled` downgrades every access to
+/// that address to `Relaxed` in the model (both edge derivation and
+/// conflict classification) — the "would this site survive a
+/// downgrade?" probe behind the waste advice.
+struct Once {
+    races: Vec<RaceFinding>,
+    race_keys: BTreeSet<(usize, OpKind, OpKind)>,
+    suppressed: usize,
+    edges: usize,
+    edges_by_addr: BTreeMap<usize, usize>,
+    lanes: usize,
+}
+
+fn analyze_once(events: &[Event], disabled: Option<usize>) -> Once {
+    // Lane ids are process-global; remap to dense slots so clocks
+    // stay O(lanes-in-capture).
+    let mut lane_ids: Vec<usize> = events.iter().map(|e| e.lane).collect();
+    lane_ids.sort_unstable();
+    lane_ids.dedup();
+    let n = lane_ids.len();
+    let lane_ix =
+        |lane: usize| lane_ids.binary_search(&lane).unwrap_or(0);
+
+    let mut clocks: Vec<Vc> = (0..n).map(|_| Vc::new(n)).collect();
+    let mut fork_vc: Option<Vc> = None;
+    let mut fork_gen = 0u64;
+    let mut fork_applied = vec![0u64; n];
+    let mut rel: BTreeMap<usize, Vc> = BTreeMap::new();
+    let mut states: BTreeMap<usize, AddrState> = BTreeMap::new();
+
+    let mut races = Vec::new();
+    let mut race_keys = BTreeSet::new();
+    let mut suppressed = 0usize;
+    let mut edges = 0usize;
+    let mut edges_by_addr: BTreeMap<usize, usize> = BTreeMap::new();
+
+    for e in events {
+        let l = lane_ix(e.lane);
+        // A pending fork reaches each lane at its next event.
+        if let Some(fv) = &fork_vc {
+            if fork_applied[l] != fork_gen {
+                clocks[l].join(fv);
+                fork_applied[l] = fork_gen;
+            }
+        }
+        clocks[l].tick(l);
+        match e.op {
+            OpKind::Fork => {
+                fork_gen += 1;
+                fork_vc = Some(clocks[l].clone());
+                fork_applied[l] = fork_gen;
+            }
+            OpKind::Join => {
+                let mut merged = clocks[l].clone();
+                for c in &clocks {
+                    merged.join(c);
+                }
+                clocks[l] = merged;
+            }
+            OpKind::Load | OpKind::Store | OpKind::Rmw => {
+                let ord = if disabled == Some(e.addr) {
+                    MemOrd::Relaxed
+                } else {
+                    e.ord
+                };
+                // Acquire side: consume the accumulated release clock.
+                if e.op != OpKind::Store && ord.acquires() {
+                    if let Some(r) = rel.get(&e.addr) {
+                        clocks[l].join(r);
+                        edges += 1;
+                        *edges_by_addr.entry(e.addr).or_insert(0) += 1;
+                    }
+                }
+                let st = states.entry(e.addr).or_default();
+                // Conflict scan against every other lane's last
+                // accesses (racy_ok cells are exempt by contract).
+                if e.racy_ok.is_none() {
+                    let vc = &clocks[l];
+                    for map in [&st.loads, &st.stores, &st.rmws] {
+                        for (&m, pair) in map {
+                            if m == l {
+                                continue;
+                            }
+                            let old = if conflicting(
+                                e.op,
+                                ord,
+                                pair.last.op,
+                                pair.last.ord,
+                            ) {
+                                Some(pair.last)
+                            } else {
+                                pair.plain.filter(|p| {
+                                    conflicting(e.op, ord, p.op, p.ord)
+                                })
+                            };
+                            let Some(old) = old else { continue };
+                            if vc.get(m) >= old.c {
+                                continue;
+                            }
+                            let key = (e.addr, old.op, e.op);
+                            if !race_keys.insert(key) {
+                                continue;
+                            }
+                            if races.len() >= MAX_RACES {
+                                suppressed += 1;
+                                continue;
+                            }
+                            races.push(RaceFinding {
+                                addr: e.addr,
+                                site: e.site,
+                                first: Access {
+                                    lane: lane_ids[m],
+                                    seq: old.seq,
+                                    op: old.op,
+                                    ord: old.ord,
+                                },
+                                second: Access {
+                                    lane: e.lane,
+                                    seq: e.seq,
+                                    op: e.op,
+                                    ord,
+                                },
+                            });
+                        }
+                    }
+                }
+                // Release side: publish, continue, or break the
+                // release sequence.
+                match e.op {
+                    OpKind::Store => {
+                        if ord.releases() {
+                            let vc = clocks[l].clone();
+                            rel.entry(e.addr)
+                                .and_modify(|r| r.join(&vc))
+                                .or_insert(vc);
+                        } else {
+                            rel.remove(&e.addr);
+                        }
+                    }
+                    OpKind::Rmw => {
+                        if ord.releases() {
+                            let vc = clocks[l].clone();
+                            rel.entry(e.addr)
+                                .and_modify(|r| r.join(&vc))
+                                .or_insert(vc);
+                        }
+                        // A relaxed RMW continues an existing release
+                        // sequence: leave rel[addr] intact.
+                    }
+                    _ => {}
+                }
+                if e.racy_ok.is_none() {
+                    let ep = Epoch {
+                        c: clocks[l].get(l),
+                        seq: e.seq,
+                        ord,
+                        op: e.op,
+                    };
+                    let st = states.entry(e.addr).or_default();
+                    let map = match e.op {
+                        OpKind::Load => &mut st.loads,
+                        OpKind::Store => &mut st.stores,
+                        _ => &mut st.rmws,
+                    };
+                    record_epoch(map, l, ep);
+                }
+            }
+        }
+    }
+
+    Once {
+        races,
+        race_keys,
+        suppressed,
+        edges,
+        edges_by_addr,
+        lanes: n,
+    }
+}
+
+/// Analyze a captured event log: derive happens-before, report race
+/// candidates, and probe every sync-class site for ordering waste.
+pub fn analyze(events: &[Event]) -> HbAnalysis {
+    let base = analyze_once(events, None);
+    let mut advice = Vec::new();
+
+    // Downgrade probes: for each address with sync-class traffic,
+    // re-run the analysis with that address modeled Relaxed. An
+    // unchanged race set means its edges were never load-bearing on
+    // these schedules — advisory, because coverage is only as wide as
+    // the schedules explored.
+    let mut sync_sites: BTreeMap<usize, &'static str> = BTreeMap::new();
+    for e in events {
+        if matches!(e.op, OpKind::Load | OpKind::Store | OpKind::Rmw)
+            && e.ord != MemOrd::Relaxed
+            && e.racy_ok.is_none()
+        {
+            sync_sites.entry(e.addr).or_insert(e.site);
+        }
+    }
+    for (i, (&addr, &site)) in sync_sites.iter().enumerate() {
+        if i >= MAX_PROBES {
+            advice.push(format!(
+                "... {} more sync site(s) not probed (cap {MAX_PROBES})",
+                sync_sites.len() - MAX_PROBES
+            ));
+            break;
+        }
+        let paired = base.edges_by_addr.get(&addr).copied().unwrap_or(0);
+        if paired == 0 {
+            advice.push(format!(
+                "`{site}`: acquire/release ordering never paired on any \
+                 explored schedule (no acquire observed a release) — \
+                 downgrade candidate (advisory)"
+            ));
+            continue;
+        }
+        let probe = analyze_once(events, Some(addr));
+        if probe.race_keys == base.race_keys {
+            advice.push(format!(
+                "`{site}`: {paired} sync edge(s) derived but never \
+                 load-bearing (downgrading to Relaxed adds no race on \
+                 any explored schedule) — downgrade candidate (advisory)"
+            ));
+        }
+    }
+
+    HbAnalysis {
+        races: base.races,
+        suppressed: base.suppressed,
+        advice,
+        events: events.len(),
+        edges: base.edges,
+        lanes: base.lanes,
+    }
+}
+
+/// Configuration for one [`run`] sweep (mirrors
+/// [`super::interleave::InterleaveConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct HbConfig {
+    /// Base seed; every (slot-count, round) pair forks its own stream.
+    pub seed: u64,
+    /// Captured permutation rounds per slot count.
+    pub rounds: usize,
+    /// Slot counts 2..=max_slots are exercised.
+    pub max_slots: usize,
+    /// Span-ring capacity per lane (small values force ring wraps).
+    pub ring_capacity: usize,
+}
+
+impl HbConfig {
+    /// CI smoke: a few slot counts, a few schedules each.
+    pub fn quick(seed: u64) -> Self {
+        HbConfig { seed, rounds: 8, max_slots: 4, ring_capacity: 8 }
+    }
+
+    /// The acceptance sweep: 5 slot counts x 210 schedules = 1050
+    /// seeded interleavings over the real core.
+    pub fn full(seed: u64) -> Self {
+        HbConfig { seed, rounds: 210, max_slots: 6, ring_capacity: 32 }
+    }
+
+    fn sanitized(&self) -> HbConfig {
+        HbConfig {
+            seed: self.seed,
+            rounds: self.rounds.max(1),
+            max_slots: self.max_slots.clamp(2, 16),
+            // >= 2 keeps same-round ring claims on distinct slots, so
+            // slot-field stores stay single-writer per fork window.
+            ring_capacity: self.ring_capacity.max(2),
+        }
+    }
+}
+
+/// Outcome of a [`run`] sweep over the real serve core.
+#[derive(Debug)]
+pub struct HbRunReport {
+    /// Race candidates and protocol violations as counted findings.
+    pub report: CheckReport,
+    /// Ordering-waste advisories (prefixed with their scenario).
+    pub advice: Vec<String>,
+    /// Seeded schedules explored.
+    pub schedules: usize,
+    /// Events captured across all scenarios.
+    pub events: usize,
+    /// Release→acquire edges derived.
+    pub edges: usize,
+}
+
+/// Drive the instrumented serve core (ExecPool + TraceRecorder +
+/// MetricsRegistry + sharded admission) through seeded permuted
+/// schedules and analyze every capture. Only available under
+/// `--features hbcheck` (the CLI surfaces a rebuild hint otherwise).
+#[cfg(feature = "hbcheck")]
+pub fn run(cfg: &HbConfig) -> HbRunReport {
+    use crate::util::rng::Pcg32;
+
+    let cfg = cfg.sanitized();
+    let mut report = CheckReport::new();
+    let mut advice = Vec::new();
+    let mut schedules = 0usize;
+    let mut events = 0usize;
+    let mut edges = 0usize;
+
+    let mut rng = Pcg32::new(cfg.seed);
+    for n_slots in 2..=cfg.max_slots {
+        let mut slot_rng = rng.fork(n_slots as u64);
+        let analysis =
+            pool_scenario(&cfg, n_slots, &mut slot_rng, &mut report);
+        absorb(
+            &format!("hb(slots={n_slots})"),
+            &analysis,
+            &mut report,
+            &mut advice,
+        );
+        schedules += cfg.rounds;
+        events += analysis.events;
+        edges += analysis.edges;
+    }
+
+    let adm_rounds = cfg.rounds.min(16);
+    let analysis = admission_scenario(adm_rounds, &mut report);
+    absorb("hb(admission)", &analysis, &mut report, &mut advice);
+    schedules += adm_rounds;
+    events += analysis.events;
+    edges += analysis.edges;
+
+    HbRunReport { report, advice, schedules, events, edges }
+}
+
+/// Fold one capture's analysis into the sweep report: races become
+/// counted findings, advice is namespaced, and race-freedom itself is
+/// one counted invariant.
+#[cfg(feature = "hbcheck")]
+fn absorb(
+    subject: &str,
+    analysis: &HbAnalysis,
+    report: &mut CheckReport,
+    advice: &mut Vec<String>,
+) {
+    report.checked += 1;
+    for race in &analysis.races {
+        report.findings.push(Finding {
+            subject: subject.to_string(),
+            invariant: "hb-race",
+            detail: race.to_string(),
+        });
+    }
+    if analysis.suppressed > 0 {
+        report.findings.push(Finding {
+            subject: subject.to_string(),
+            invariant: "hb-race",
+            detail: format!(
+                "... {} more race candidate(s) suppressed",
+                analysis.suppressed
+            ),
+        });
+    }
+    for a in &analysis.advice {
+        advice.push(format!("{subject}: {a}"));
+    }
+}
+
+/// The interleave harness pattern, instrumented: forced permutation
+/// schedules over a real `ExecPool` with tracing and metrics handles
+/// hot, one capture per slot count, post-round protocol checks under
+/// the same capture (driver-lane loads are join-ordered, so they must
+/// not race either).
+#[cfg(feature = "hbcheck")]
+fn pool_scenario(
+    cfg: &HbConfig,
+    n_slots: usize,
+    rng: &mut crate::util::rng::Pcg32,
+    report: &mut CheckReport,
+) -> HbAnalysis {
+    use crate::exec::ExecPool;
+    use crate::obs::{ClockMode, MetricsRegistry, Stage, TraceConfig, TraceRecorder};
+    use crate::util::ordatomic::{capture, OrdAtomicUsize};
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    /// Spin budget per slot (tighter than interleave's: every probed
+    /// spin takes the capture lock, so stalls must fail fast).
+    const MAX_SPINS: u64 = 2_000_000;
+    const UNSET: usize = usize::MAX;
+
+    let pool = ExecPool::new(n_slots - 1);
+    let trace_cfg = TraceConfig {
+        enabled: true,
+        sample: 1,
+        ring_capacity: cfg.ring_capacity,
+    };
+    let rec = Arc::new(TraceRecorder::new(
+        trace_cfg,
+        ClockMode::Virtual,
+        pool.n_workers() + 1,
+    ));
+    pool.set_trace(Arc::clone(&rec));
+    let metrics = MetricsRegistry::new();
+    let counter = metrics.counter("hb.slots");
+    let gauge = metrics.gauge("hb.last_slot");
+    let hist = metrics.histogram("hb.slot_ms");
+
+    let mut findings: Vec<(String, &'static str, String)> = Vec::new();
+    let ((), events) = capture::capture(|| {
+        for round in 0..cfg.rounds {
+            let subject =
+                format!("hb(slots={n_slots},round={round})");
+            let mut rank: Vec<usize> = (0..n_slots).collect();
+            rng.shuffle(&mut rank);
+
+            let epoch_s =
+                ((n_slots * cfg.rounds + round) as f64 + 1.0) * 3600.0;
+            rec.set_virtual_s(epoch_s);
+            let sched_code = round % 5 + 1;
+            rec.set_kernel_ctx(sched_code);
+
+            let turn = OrdAtomicUsize::named(0, "hb.turn");
+            let stalled = OrdAtomicUsize::named(0, "hb.stalled");
+            let executed: Vec<OrdAtomicUsize> = (0..n_slots)
+                .map(|_| OrdAtomicUsize::named(0, "hb.executed"))
+                .collect();
+            let order: Vec<OrdAtomicUsize> = (0..n_slots)
+                .map(|_| OrdAtomicUsize::named(UNSET, "hb.order"))
+                .collect();
+
+            {
+                let rec = &rec;
+                let rank = &rank;
+                let turn = &turn;
+                let stalled = &stalled;
+                let executed = &executed;
+                let order = &order;
+                let counter = &counter;
+                let gauge = &gauge;
+                let hist = &hist;
+                let work = move |slot: usize| {
+                    let my_turn = rank[slot];
+                    let mut spins: u64 = 0;
+                    // ord: Acquire pairs with the Release store that
+                    // advances the turn — the edge that orders the
+                    // previous slot's order[] write before ours (the
+                    // waste probe proves it load-bearing).
+                    while turn.load(Ordering::Acquire) != my_turn {
+                        std::thread::yield_now();
+                        spins += 1;
+                        if spins > MAX_SPINS {
+                            // ord: RMW arbitration; driver reads
+                            // after the pool's join latch.
+                            stalled.fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                    }
+                    // ord: RMW on a per-slot cell; the join latch
+                    // orders the driver's post-run read.
+                    executed[slot].fetch_add(1, Ordering::Relaxed);
+                    counter.inc();
+                    hist.observe(0.25);
+                    gauge.set(slot as f64);
+                    let now = rec.now_us();
+                    rec.record(slot, Stage::Reduce, sched_code, now, 0.0);
+                    // lint:allow(relaxed-store) ord: single writer —
+                    // only the slot holding turn `my_turn` writes
+                    // order[my_turn], and the turn handoff plus the
+                    // join latch publish it to the next slot and the
+                    // driver (hb-verified).
+                    order[my_turn].store(slot, Ordering::Relaxed);
+                    // ord: Release publishes this slot's work to the
+                    // next turn-holder's Acquire spin.
+                    turn.store(my_turn + 1, Ordering::Release);
+                };
+                pool.run(n_slots, &work);
+            }
+
+            // ord: driver-lane read after the join latch.
+            let stalls = stalled.load(Ordering::Relaxed);
+            if stalls > 0 {
+                findings.push((
+                    subject.clone(),
+                    "no-stall",
+                    format!(
+                        "{stalls} slot(s) exhausted the spin budget"
+                    ),
+                ));
+                continue;
+            }
+            for (slot, e) in executed.iter().enumerate() {
+                // ord: driver-lane read after the join latch.
+                let nx = e.load(Ordering::Relaxed);
+                if nx != 1 {
+                    findings.push((
+                        subject.clone(),
+                        "executed-once",
+                        format!("slot {slot} executed {nx} times"),
+                    ));
+                }
+            }
+            for (t, o) in order.iter().enumerate() {
+                // ord: driver-lane read after the join latch.
+                let got = o.load(Ordering::Relaxed);
+                if rank.get(got).copied() != Some(t) {
+                    findings.push((
+                        subject.clone(),
+                        "schedule-order",
+                        format!("turn {t} ran slot {got}"),
+                    ));
+                }
+            }
+        }
+    });
+
+    for (subject, invariant, detail) in findings {
+        report.findings.push(Finding { subject, invariant, detail });
+    }
+    report.checked += 3; // no-stall / executed-once / schedule-order
+    let subject = format!("hb(slots={n_slots})");
+    for msg in rec.validate() {
+        report.findings.push(Finding {
+            subject: subject.clone(),
+            invariant: "trace-well-formed",
+            detail: msg,
+        });
+    }
+    report.checked += 1;
+
+    analyze(&events)
+}
+
+/// Sharded admission under capture: replicated matrices take the
+/// round-robin path (`rr` RMW from the submitting lane), bounded
+/// queues reject, and scoped drain workers bump the served counter —
+/// the real `submit`/`serve` code, not a model of it.
+#[cfg(feature = "hbcheck")]
+fn admission_scenario(
+    rounds: usize,
+    report: &mut CheckReport,
+) -> HbAnalysis {
+    use crate::service::{
+        MatrixRegistry, PlacementPolicy, PlanConfig, Planner, Request,
+        ShardConfig, ShardedServer,
+    };
+    use crate::sparse::Csr;
+    use crate::util::ordatomic::capture;
+    use std::sync::Arc;
+
+    let n = 16usize;
+    let mut reg = MatrixRegistry::new();
+    for i in 0..3 {
+        reg.register(&format!("hb-identity-{i}"), Csr::identity(n));
+    }
+    let registry = Arc::new(reg);
+    let cfg = ShardConfig {
+        shards: 2,
+        queue_cap: 4,
+        workers_per_shard: 2,
+        max_batch: 4,
+        deadline_ms: 0.0,
+        // Both replicated ("hot") matrices route via the rr counter.
+        policy: PlacementPolicy::HotReplicate { hot: 2 },
+        pooled: false,
+        tune: None,
+        trace: None,
+    };
+    let server = ShardedServer::new(
+        registry,
+        Planner::Heuristic,
+        PlanConfig::default(),
+        cfg,
+    );
+
+    let ((submitted, rejected, served), events) = capture::capture(|| {
+        let mut submitted = 0usize;
+        let mut rejected = 0usize;
+        for round in 0..rounds {
+            for k in 0..8 {
+                let id = (round + k) % 3;
+                let req = Request::new(id, vec![1.0f64; n]);
+                submitted += 1;
+                if server.submit(req).is_rejected() {
+                    rejected += 1;
+                }
+            }
+        }
+        server.close();
+        let served = server.serve();
+        (submitted, rejected, served)
+    });
+
+    let subject = "hb(admission)";
+    report.check(
+        served + rejected == submitted,
+        subject,
+        "admission-accounting",
+        || {
+            format!(
+                "{submitted} submitted != {served} served + \
+                 {rejected} rejected"
+            )
+        },
+    );
+    report.check(
+        rejected > 0,
+        subject,
+        "admission-pressure",
+        || {
+            "bounded queues never rejected — the rr/reject path went \
+             unexercised"
+                .to_string()
+        },
+    );
+
+    analyze(&events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        seq: usize,
+        lane: usize,
+        op: OpKind,
+        addr: usize,
+        ord: MemOrd,
+    ) -> Event {
+        Event { seq, lane, op, addr, ord, site: "syn", racy_ok: None }
+    }
+
+    #[test]
+    fn unordered_store_store_is_a_race() {
+        let events = [
+            ev(0, 0, OpKind::Store, 100, MemOrd::Relaxed),
+            ev(1, 1, OpKind::Store, 100, MemOrd::Relaxed),
+        ];
+        let a = analyze(&events);
+        assert_eq!(a.races.len(), 1, "{:?}", a.races);
+        assert!(a.races[0].involves(OpKind::Store));
+        assert_eq!(a.races[0].addr, 100);
+        assert_eq!(a.edges, 0);
+    }
+
+    #[test]
+    fn unordered_store_load_is_a_race() {
+        let events = [
+            ev(0, 0, OpKind::Store, 100, MemOrd::Relaxed),
+            ev(1, 1, OpKind::Load, 100, MemOrd::Relaxed),
+        ];
+        let a = analyze(&events);
+        assert_eq!(a.races.len(), 1, "{:?}", a.races);
+        assert!(a.races[0].involves(OpKind::Load));
+        assert!(a.races[0].involves(OpKind::Store));
+    }
+
+    #[test]
+    fn release_acquire_chain_orders_the_data() {
+        // lane 0: data (plain) then flag (release);
+        // lane 1: flag (acquire) then data (plain). Clean.
+        let events = [
+            ev(0, 0, OpKind::Store, 1, MemOrd::Relaxed),
+            ev(1, 0, OpKind::Store, 2, MemOrd::Release),
+            ev(2, 1, OpKind::Load, 2, MemOrd::Acquire),
+            ev(3, 1, OpKind::Load, 1, MemOrd::Relaxed),
+        ];
+        let a = analyze(&events);
+        assert!(a.races.is_empty(), "{:?}", a.races);
+        assert_eq!(a.edges, 1);
+        // The flag's sync is load-bearing: no downgrade advice.
+        assert!(a.advice.is_empty(), "{:?}", a.advice);
+    }
+
+    #[test]
+    fn broken_release_is_flagged_on_flag_and_data() {
+        // Same shape, but the flag store is Relaxed: no edge, so the
+        // data pair races AND the relaxed-store-vs-acquire-load pair
+        // on the flag itself is the broken-release signature.
+        let events = [
+            ev(0, 0, OpKind::Store, 1, MemOrd::Relaxed),
+            ev(1, 0, OpKind::Store, 2, MemOrd::Relaxed),
+            ev(2, 1, OpKind::Load, 2, MemOrd::Acquire),
+            ev(3, 1, OpKind::Load, 1, MemOrd::Relaxed),
+        ];
+        let a = analyze(&events);
+        assert_eq!(a.edges, 0);
+        assert!(
+            a.races.iter().any(|r| r.addr == 1),
+            "data race missing: {:?}",
+            a.races
+        );
+        assert!(
+            a.races.iter().any(|r| r.addr == 2),
+            "broken-release on the flag missing: {:?}",
+            a.races
+        );
+    }
+
+    #[test]
+    fn relaxed_store_breaks_the_release_sequence() {
+        // Release publish, then a relaxed store to the same flag: the
+        // acquire that follows reads the *relaxed* store's sequence,
+        // which carries no edge — the data pair must race.
+        let events = [
+            ev(0, 0, OpKind::Store, 1, MemOrd::Relaxed),
+            ev(1, 0, OpKind::Store, 2, MemOrd::Release),
+            ev(2, 0, OpKind::Store, 2, MemOrd::Relaxed),
+            ev(3, 1, OpKind::Load, 2, MemOrd::Acquire),
+            ev(4, 1, OpKind::Load, 1, MemOrd::Relaxed),
+        ];
+        let a = analyze(&events);
+        assert!(
+            a.races.iter().any(|r| r.addr == 1),
+            "cleared release sequence must unorder the data: {:?}",
+            a.races
+        );
+    }
+
+    #[test]
+    fn relaxed_rmw_continues_the_release_sequence() {
+        let events = [
+            ev(0, 0, OpKind::Store, 1, MemOrd::Relaxed),
+            ev(1, 0, OpKind::Store, 2, MemOrd::Release),
+            ev(2, 0, OpKind::Rmw, 2, MemOrd::Relaxed),
+            ev(3, 1, OpKind::Load, 2, MemOrd::Acquire),
+            ev(4, 1, OpKind::Load, 1, MemOrd::Relaxed),
+        ];
+        let a = analyze(&events);
+        assert!(a.races.is_empty(), "{:?}", a.races);
+        assert_eq!(a.edges, 1);
+    }
+
+    #[test]
+    fn fork_and_join_order_pool_style_handoff() {
+        // Driver writes, forks; worker reads (ordered), writes back;
+        // driver joins, reads back (ordered). Clean end to end.
+        let events = [
+            ev(0, 0, OpKind::Store, 1, MemOrd::Relaxed),
+            ev(1, 0, OpKind::Fork, 0, MemOrd::SeqCst),
+            ev(2, 1, OpKind::Load, 1, MemOrd::Relaxed),
+            ev(3, 1, OpKind::Store, 2, MemOrd::Relaxed),
+            ev(4, 0, OpKind::Join, 0, MemOrd::SeqCst),
+            ev(5, 0, OpKind::Load, 2, MemOrd::Relaxed),
+        ];
+        let a = analyze(&events);
+        assert!(a.races.is_empty(), "{:?}", a.races);
+
+        // Control: the same accesses without fork/join race twice.
+        let events = [
+            ev(0, 0, OpKind::Store, 1, MemOrd::Relaxed),
+            ev(1, 1, OpKind::Load, 1, MemOrd::Relaxed),
+            ev(2, 1, OpKind::Store, 2, MemOrd::Relaxed),
+            ev(3, 0, OpKind::Load, 2, MemOrd::Relaxed),
+        ];
+        let a = analyze(&events);
+        assert_eq!(a.races.len(), 2, "{:?}", a.races);
+    }
+
+    #[test]
+    fn rmw_arbitration_and_snapshots_never_race() {
+        // Two lanes bump a counter, a third snapshots it — the
+        // counter/cursor/tally idiom everywhere in the serve core.
+        let events = [
+            ev(0, 0, OpKind::Rmw, 7, MemOrd::Relaxed),
+            ev(1, 1, OpKind::Rmw, 7, MemOrd::Relaxed),
+            ev(2, 2, OpKind::Load, 7, MemOrd::Relaxed),
+            ev(3, 0, OpKind::Rmw, 7, MemOrd::Relaxed),
+        ];
+        let a = analyze(&events);
+        assert!(a.races.is_empty(), "{:?}", a.races);
+    }
+
+    #[test]
+    fn racy_ok_cells_are_exempt_but_sync_cells_are_not() {
+        let mut racy = ev(0, 0, OpKind::Store, 9, MemOrd::Relaxed);
+        racy.racy_ok = Some("last-writer-wins by design");
+        let mut racy2 = ev(1, 1, OpKind::Store, 9, MemOrd::Relaxed);
+        racy2.racy_ok = Some("last-writer-wins by design");
+        let a = analyze(&[racy, racy2]);
+        assert!(a.races.is_empty(), "{:?}", a.races);
+    }
+
+    #[test]
+    fn unpaired_release_draws_downgrade_advice() {
+        let events = [ev(0, 0, OpKind::Store, 3, MemOrd::Release)];
+        let a = analyze(&events);
+        assert!(a.races.is_empty());
+        assert_eq!(a.advice.len(), 1, "{:?}", a.advice);
+        assert!(a.advice[0].contains("never paired"), "{:?}", a.advice);
+    }
+
+    #[test]
+    fn non_load_bearing_sync_draws_downgrade_advice() {
+        // A same-lane release/acquire pair derives an edge that can
+        // never order anything cross-lane: downgrade candidate.
+        let events = [
+            ev(0, 0, OpKind::Store, 3, MemOrd::Release),
+            ev(1, 0, OpKind::Load, 3, MemOrd::Acquire),
+        ];
+        let a = analyze(&events);
+        assert!(a.races.is_empty());
+        assert_eq!(a.advice.len(), 1, "{:?}", a.advice);
+        assert!(
+            a.advice[0].contains("never load-bearing"),
+            "{:?}",
+            a.advice
+        );
+    }
+
+    #[test]
+    fn race_findings_dedup_per_cell_and_op_pair() {
+        // 40 unordered store pairs on one cell collapse to one
+        // finding, not 40.
+        let mut events = Vec::new();
+        for i in 0..40 {
+            events.push(ev(
+                2 * i,
+                i % 2,
+                OpKind::Store,
+                500,
+                MemOrd::Relaxed,
+            ));
+            events.push(ev(
+                2 * i + 1,
+                (i + 1) % 2,
+                OpKind::Store,
+                500,
+                MemOrd::Relaxed,
+            ));
+        }
+        let a = analyze(&events);
+        assert_eq!(a.races.len(), 1, "{:?}", a.races);
+    }
+
+    #[test]
+    fn analysis_is_deterministic() {
+        let events = [
+            ev(0, 3, OpKind::Store, 1, MemOrd::Relaxed),
+            ev(1, 9, OpKind::Load, 1, MemOrd::Relaxed),
+            ev(2, 3, OpKind::Store, 2, MemOrd::Release),
+            ev(3, 9, OpKind::Load, 2, MemOrd::Acquire),
+        ];
+        let a = analyze(&events);
+        let b = analyze(&events);
+        assert_eq!(a.races.len(), b.races.len());
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.advice, b.advice);
+        assert_eq!(a.lanes, 2, "dense lane remap");
+    }
+}

@@ -20,12 +20,13 @@
 //!   for torn records, bad stage/schedule tags, and non-monotone
 //!   per-lane end times afterwards.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use super::{CheckReport, Finding};
 use crate::exec::ExecPool;
 use crate::obs::{ClockMode, Stage, TraceConfig, TraceRecorder};
+use crate::util::ordatomic::OrdAtomicUsize;
 use crate::util::rng::Pcg32;
 
 /// Spin budget per slot before the harness declares a stall. Spins are
@@ -52,12 +53,13 @@ pub struct InterleaveConfig {
 
 impl InterleaveConfig {
     /// CI-friendly sweep: a few slot counts, a few permutations each,
-    /// a ring small enough to wrap.
+    /// a ring small enough to wrap. Scaled further down under Miri,
+    /// where every spin iteration is interpreted.
     pub fn quick(seed: u64) -> Self {
         InterleaveConfig {
             seed,
-            rounds: 4,
-            max_slots: 4,
+            rounds: if cfg!(miri) { 2 } else { 4 },
+            max_slots: if cfg!(miri) { 3 } else { 4 },
             ring_capacity: 8,
         }
     }
@@ -139,12 +141,14 @@ fn run_slot_count(
         let sched_code = round % 5 + 1;
         rec.set_kernel_ctx(sched_code);
 
-        let turn = AtomicUsize::new(0);
-        let stalled = AtomicUsize::new(0);
-        let executed: Vec<AtomicUsize> =
-            (0..n_slots).map(|_| AtomicUsize::new(0)).collect();
-        let order: Vec<AtomicUsize> =
-            (0..n_slots).map(|_| AtomicUsize::new(UNSET)).collect();
+        let turn = OrdAtomicUsize::named(0, "interleave.turn");
+        let stalled = OrdAtomicUsize::named(0, "interleave.stalled");
+        let executed: Vec<OrdAtomicUsize> = (0..n_slots)
+            .map(|_| OrdAtomicUsize::named(0, "interleave.executed"))
+            .collect();
+        let order: Vec<OrdAtomicUsize> = (0..n_slots)
+            .map(|_| OrdAtomicUsize::named(UNSET, "interleave.order"))
+            .collect();
 
         {
             let rec = &rec;
@@ -156,28 +160,39 @@ fn run_slot_count(
             let work = move |slot: usize| {
                 let my_turn = rank[slot];
                 let mut spins: u64 = 0;
+                // ord: Acquire spin — pairs with the Release store
+                // below so each slot's writes are visible to the next.
                 while turn.load(Ordering::Acquire) != my_turn {
                     std::thread::yield_now();
                     spins += 1;
                     if spins > MAX_SPINS {
+                        // ord: Relaxed RMW — stall tally, read only
+                        // after the pool joins all slots.
                         stalled.fetch_add(1, Ordering::Relaxed);
                         return;
                     }
                 }
+                // ord: Relaxed RMW — per-slot tally, read post-join.
                 executed[slot].fetch_add(1, Ordering::Relaxed);
-                // The turn protocol makes this store race-free: only
-                // the slot holding turn `my_turn` writes order[my_turn].
+                // lint:allow(relaxed-store) ord: the turn protocol
+                // makes this store race-free — only the slot holding
+                // turn `my_turn` writes order[my_turn], and the driver
+                // reads it after the pool's join.
                 order[my_turn].store(slot, Ordering::Relaxed);
                 // One explicit span per slot on the slot's own lane
                 // (lanes == slots here), tagged with the round's
                 // schedule code, zero duration at the virtual epoch.
                 let now = rec.now_us();
                 rec.record(slot, Stage::Reduce, sched_code, now, 0.0);
+                // ord: Release store — publishes this slot's work to
+                // whichever slot acquires the next turn.
                 turn.store(my_turn + 1, Ordering::Release);
             };
             pool.run(n_slots, &work);
         }
 
+        // ord: Relaxed loads below — the pool's join already ordered
+        // every slot's writes before the driver reads the tallies.
         let stalls = stalled.load(Ordering::Relaxed);
         report.check(
             stalls == 0,
@@ -192,6 +207,7 @@ fn run_slot_count(
         );
         let mut exec_bad = None;
         for (slot, e) in executed.iter().enumerate() {
+            // ord: Relaxed load — post-join tally read (see above).
             let n = e.load(Ordering::Relaxed);
             if n != 1 && exec_bad.is_none() {
                 exec_bad = Some((slot, n));
@@ -209,6 +225,7 @@ fn run_slot_count(
         if stalls == 0 {
             let mut order_bad = None;
             for (t, o) in order.iter().enumerate() {
+                // ord: Relaxed load — post-join tally read (see above).
                 let got = o.load(Ordering::Relaxed);
                 if got != inv[t] && order_bad.is_none() {
                     order_bad = Some((t, got, inv[t]));
@@ -284,7 +301,7 @@ mod tests {
     fn tiny_ring_forces_wraps_and_still_validates() {
         let cfg = InterleaveConfig {
             seed: 7,
-            rounds: 6,
+            rounds: if cfg!(miri) { 3 } else { 6 },
             max_slots: 3,
             ring_capacity: 2,
         };

@@ -25,6 +25,7 @@
 //! on the structural checks it depends on (e.g. `csr.row()` is only
 //! called once `ptr` is known monotone and in-bounds).
 
+pub mod hb;
 pub mod interleave;
 
 use crate::exec;

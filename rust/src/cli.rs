@@ -122,6 +122,9 @@ pub enum Command {
         seed: u64,
         /// Short harness mode for CI smokes.
         quick: bool,
+        /// Run the happens-before race detector over the lock-free
+        /// core (needs the `hbcheck` build feature).
+        hb: bool,
     },
     /// Print topology/provenance info.
     Info,
@@ -199,11 +202,13 @@ pub fn usage() -> &'static str {
      check    --suite tiny|fast|full   corpus scale (default tiny)\n\
      \u{20}        --matrices N (default 8)  --seed S\n\
      \u{20}        --quick              short interleaving-harness mode\n\
+     \u{20}        --hb                 happens-before race detection over\n\
+     \u{20}                             the lock-free core (hbcheck build)\n\
      info"
 }
 
 /// Flags that take no value (presence toggles).
-const BOOL_FLAGS: &[&str] = &["pool", "spawn", "tune", "quick"];
+const BOOL_FLAGS: &[&str] = &["pool", "spawn", "tune", "quick", "hb"];
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
@@ -498,6 +503,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 .map_err(|_| anyhow!("bad --seed"))?
                 .unwrap_or(0xC8EC_2019),
             quick: flags.contains_key("quick"),
+            hb: flags.contains_key("hb"),
         },
         "info" => Command::Info,
         other => bail!("unknown command '{other}'\n{}", usage()),
@@ -860,10 +866,11 @@ mod tests {
     fn parses_check() {
         let cli = parse(&sv(&["check"])).unwrap();
         match cli.command {
-            Command::Check { suite, matrices, quick, .. } => {
+            Command::Check { suite, matrices, quick, hb, .. } => {
                 assert_eq!(suite.per_class, SuiteSpec::tiny().per_class);
                 assert_eq!(matrices, 8);
                 assert!(!quick, "quick mode is opt-in");
+                assert!(!hb, "hb analysis is opt-in");
             }
             _ => panic!("wrong command"),
         }
@@ -876,14 +883,16 @@ mod tests {
             "--seed",
             "7",
             "--quick",
+            "--hb",
         ]))
         .unwrap();
         match cli.command {
-            Command::Check { suite, matrices, seed, quick } => {
+            Command::Check { suite, matrices, seed, quick, hb } => {
                 assert_eq!(suite.per_class, SuiteSpec::fast().per_class);
                 assert_eq!(matrices, 3);
                 assert_eq!(seed, 7);
                 assert!(quick);
+                assert!(hb);
             }
             _ => panic!("wrong command"),
         }

@@ -11,7 +11,7 @@ pub mod format_select;
 pub mod matrix_report;
 pub mod report;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Mutex;
 
 use crate::corpus::suite::SuiteSpec;
@@ -22,6 +22,7 @@ use crate::sim::engine::{simulate, SimResult, ThreadSpec};
 use crate::sim::topology::{Placement, Topology};
 use crate::sparse::{Csr, MatrixFeatures};
 use crate::trace::{AccessGen, Csr5Trace, CsrMultiTrace};
+use crate::util::ordatomic::OrdAtomicUsize;
 
 /// Experiment configuration for one profiling run.
 #[derive(Clone, Debug)]
@@ -196,12 +197,15 @@ impl Campaign {
     pub fn run(&self) -> Vec<MatrixProfile> {
         let entries = self.spec.entries();
         let n = entries.len();
-        let next = AtomicUsize::new(0);
+        let next = OrdAtomicUsize::named(0, "campaign.next");
         let results: Mutex<Vec<Option<MatrixProfile>>> =
             Mutex::new((0..n).map(|_| None).collect());
         std::thread::scope(|s| {
             for _ in 0..self.workers.max(1) {
                 s.spawn(|| loop {
+                    // ord: Relaxed RMW — work-stealing ticket; each
+                    // index is claimed exactly once by atomicity
+                    // alone, results rendezvous through the Mutex.
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;

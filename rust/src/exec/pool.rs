@@ -26,12 +26,13 @@
 //! one panel's cores can only run one kernel at a time anyway, and
 //! serializing keeps the job slot single-owner.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::obs::{Stage, TraceRecorder};
+use crate::util::ordatomic::OrdAtomicU64;
 
 /// Type-erased, lifetime-erased slot closure. Only ever dereferenced
 /// while the dispatching `run` call is blocked on the job's
@@ -69,16 +70,16 @@ struct State {
 /// two relaxed atomic adds per executed slot.
 struct WorkerTally {
     /// Slots this lane has executed.
-    slots: AtomicU64,
+    slots: OrdAtomicU64,
     /// Total time this lane spent inside slot closures, ns.
-    busy_ns: AtomicU64,
+    busy_ns: OrdAtomicU64,
 }
 
 impl WorkerTally {
     fn new() -> WorkerTally {
         WorkerTally {
-            slots: AtomicU64::new(0),
-            busy_ns: AtomicU64::new(0),
+            slots: OrdAtomicU64::named(0, "pool.tally.slots"),
+            busy_ns: OrdAtomicU64::named(0, "pool.tally.busy_ns"),
         }
     }
 }
@@ -123,7 +124,10 @@ impl Shared {
     /// a per-worker kernel span when a recorder is attached.
     fn note_done(&self, lane: usize, elapsed: Duration) {
         let tally = &self.tallies[lane.min(self.tallies.len() - 1)];
+        // ord: Relaxed RMW — monotone per-lane counters; readers only
+        // snapshot (telemetry), and the latch orders end-of-job reads.
         tally.slots.fetch_add(1, Ordering::Relaxed);
+        // ord: Relaxed RMW — same contract as `slots` above.
         tally
             .busy_ns
             .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
@@ -177,7 +181,7 @@ pub struct ExecPool {
     /// affinity API; what matters is the sizing and the disjointness
     /// across pools).
     cores: Option<(usize, usize)>,
-    jobs: AtomicU64,
+    jobs: OrdAtomicU64,
     /// Construction time, the denominator of busy-share gauges.
     started: Instant,
 }
@@ -219,7 +223,7 @@ impl ExecPool {
             handles,
             dispatch: Mutex::new(()),
             cores,
-            jobs: AtomicU64::new(0),
+            jobs: OrdAtomicU64::named(0, "pool.jobs"),
             started: Instant::now(),
         }
     }
@@ -237,6 +241,8 @@ impl ExecPool {
 
     /// Jobs dispatched so far (monotone; telemetry/tests).
     pub fn jobs_dispatched(&self) -> u64 {
+        // ord: Relaxed load — monotone counter snapshot; exactness at
+        // a moment in time is not part of the contract.
         self.jobs.load(Ordering::Relaxed)
     }
 
@@ -254,6 +260,8 @@ impl ExecPool {
             .iter()
             .map(|t| {
                 (
+                    // ord: Relaxed loads — monotone counter snapshots
+                    // for telemetry; tests read them latch-ordered.
                     t.slots.load(Ordering::Relaxed),
                     t.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
                 )
@@ -281,6 +289,13 @@ impl ExecPool {
             .dispatch
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
+        // Under hbcheck, model this dispatch's scope semantics for the
+        // analyzer: everything the dispatcher did so far happens-before
+        // every slot (fork), and every slot happens-before the return
+        // (join, below) — exactly what the Condvar latch enforces.
+        #[cfg(feature = "hbcheck")]
+        crate::util::ordatomic::hb_fork();
+        // ord: Relaxed RMW — monotone dispatch counter, snapshot-read.
         self.jobs.fetch_add(1, Ordering::Relaxed);
         if n_slots == 1 {
             // Single-slot fast path: run inline on the dispatcher —
@@ -290,6 +305,8 @@ impl ExecPool {
             let t0 = Instant::now();
             work(0);
             self.shared.note_done(0, t0.elapsed());
+            #[cfg(feature = "hbcheck")]
+            crate::util::ordatomic::hb_join();
             return;
         }
         let raw = erase(work);
@@ -345,6 +362,8 @@ impl ExecPool {
             st.job = None;
             break done;
         };
+        #[cfg(feature = "hbcheck")]
+        crate::util::ordatomic::hb_join();
         if panicked {
             panic!("ExecPool: a slot closure panicked during dispatch");
         }
@@ -432,15 +451,18 @@ mod tests {
     fn reuses_the_same_workers_across_many_jobs() {
         let pool = ExecPool::new(3);
         assert_eq!(pool.n_workers(), 3);
+        // Miri runs threads ~100x slower; a scaled-down job count
+        // exercises the same reuse contract.
+        let jobs: u64 = if cfg!(miri) { 25 } else { 500 };
         let total = AtomicUsize::new(0);
-        for _ in 0..500 {
+        for _ in 0..jobs {
             pool.run(5, &|_| {
                 total.fetch_add(1, Ordering::Relaxed);
             });
         }
-        assert_eq!(total.load(Ordering::Relaxed), 2500);
+        assert_eq!(total.load(Ordering::Relaxed) as u64, 5 * jobs);
         assert_eq!(pool.n_workers(), 3, "worker set must not grow");
-        assert_eq!(pool.jobs_dispatched(), 500);
+        assert_eq!(pool.jobs_dispatched(), jobs);
     }
 
     #[test]
@@ -469,11 +491,12 @@ mod tests {
     #[test]
     fn concurrent_dispatchers_serialize_safely() {
         let pool = ExecPool::new(2);
+        let per_thread = if cfg!(miri) { 5 } else { 50 };
         let total = AtomicUsize::new(0);
         std::thread::scope(|s| {
             for _ in 0..4 {
                 s.spawn(|| {
-                    for _ in 0..50 {
+                    for _ in 0..per_thread {
                         pool.run(3, &|_| {
                             total.fetch_add(1, Ordering::Relaxed);
                         });
@@ -481,7 +504,7 @@ mod tests {
                 });
             }
         });
-        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 3);
+        assert_eq!(total.load(Ordering::Relaxed), 4 * per_thread * 3);
     }
 
     #[test]
@@ -507,14 +530,16 @@ mod tests {
         ));
         pool.set_trace(rec.clone());
         rec.set_kernel_ctx(3);
+        let jobs: u64 = if cfg!(miri) { 4 } else { 20 };
         pool.run(1, &|_| {});
-        for _ in 0..20 {
+        for _ in 0..jobs {
             pool.run(6, &|_| std::thread::yield_now());
         }
+        let want = 1 + jobs * 6;
         let tallies = pool.worker_tallies();
         assert_eq!(tallies.len(), 3, "dispatcher lane + 2 worker lanes");
         let slots: u64 = tallies.iter().map(|(s, _)| s).sum();
-        assert_eq!(slots, 1 + 20 * 6, "every executed slot is tallied");
+        assert_eq!(slots, want, "every executed slot is tallied");
         assert!(
             tallies[0].0 >= 1,
             "the single-slot fast path runs on the dispatcher lane"
@@ -522,9 +547,9 @@ mod tests {
         assert!(pool.uptime_s() >= 0.0);
         // sample = 1: every executed slot also produced a kernel span,
         // attributed to the schedule context set before dispatch.
-        assert_eq!(rec.spans_recorded(), 121);
+        assert_eq!(rec.spans_recorded() as u64, want);
         let cells = rec.flame_cells();
-        assert_eq!(cells[&(Stage::Kernel.index(), 3)].0, 121);
+        assert_eq!(cells[&(Stage::Kernel.index(), 3)].0 as u64, want);
     }
 
     #[test]

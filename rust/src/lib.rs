@@ -53,8 +53,13 @@
 //!   invariant verifiers for every sparse format and for
 //!   partitions/plans/plan-cache versions (`CheckReport` findings,
 //!   wired into registry admission, dispatch validation, and the
-//!   `ft2000-spmv check` CLI) plus a deterministic interleaving
-//!   harness for the lock-free pool + trace rings.
+//!   `ft2000-spmv check` CLI), a deterministic interleaving harness
+//!   for the lock-free pool + trace rings, and a vector-clock
+//!   happens-before race detector (`check::hb`, `check --hb`) over
+//!   the event logs captured by [`util::ordatomic`]'s instrumented
+//!   atomics (`--features hbcheck`; zero-cost passthrough otherwise)
+//!   — reporting both unordered conflicting accesses and
+//!   ordering-strength waste.
 
 pub mod analysis;
 pub mod autotune;

@@ -114,8 +114,8 @@ fn run(cli: Cli) -> Result<()> {
             trace_out,
             metrics_out,
         }),
-        Command::Check { suite, matrices, seed, quick } => {
-            check_cmd(suite, matrices, seed, quick)
+        Command::Check { suite, matrices, seed, quick, hb } => {
+            check_cmd(suite, matrices, seed, quick, hb)
         }
         Command::Info => info(),
     }
@@ -131,6 +131,7 @@ fn check_cmd(
     matrices: usize,
     seed: u64,
     quick: bool,
+    hb: bool,
 ) -> Result<()> {
     use ft2000_spmv::check::{self, interleave, CheckReport, Finding};
     use ft2000_spmv::service::{build_plan_with, PlannedFormat};
@@ -220,6 +221,10 @@ fn check_cmd(
     );
     report.merge(interleave::run(&icfg));
 
+    if hb {
+        run_hb(seed, quick, &mut report)?;
+    }
+
     if report.is_clean() {
         println!(
             "check: clean — {} invariants over {} matrices x {} plan \
@@ -246,6 +251,58 @@ fn check_cmd(
         "{} finding(s) across {} checked invariants",
         report.findings.len(),
         report.checked
+    )
+}
+
+/// `check --hb` — replay the instrumented lock-free core under seeded
+/// interleavings, then analyze the captured event logs with the
+/// vector-clock happens-before detector: conflicting accesses that no
+/// derived edge orders become findings, over-strong orderings become
+/// advisories.
+#[cfg(feature = "hbcheck")]
+fn run_hb(
+    seed: u64,
+    quick: bool,
+    report: &mut ft2000_spmv::check::CheckReport,
+) -> Result<()> {
+    use ft2000_spmv::check::hb;
+    let cfg = if quick {
+        hb::HbConfig::quick(seed)
+    } else {
+        hb::HbConfig::full(seed)
+    };
+    eprintln!(
+        "check: happens-before analysis ({} mode, seed {seed:#x})...",
+        if quick { "quick" } else { "full" }
+    );
+    let run = hb::run(&cfg);
+    for a in &run.advice {
+        println!("hb advice: {a}");
+    }
+    println!(
+        "hb: {} — {} invariants, {} schedules, {} events, {} sync edges",
+        if run.report.is_clean() { "clean" } else { "RACY" },
+        run.report.checked,
+        run.schedules,
+        run.events,
+        run.edges,
+    );
+    report.merge(run.report);
+    Ok(())
+}
+
+/// Without the `hbcheck` feature the atomics are uninstrumented and
+/// there is nothing to capture — fail loudly rather than report a
+/// vacuous clean pass.
+#[cfg(not(feature = "hbcheck"))]
+fn run_hb(
+    _seed: u64,
+    _quick: bool,
+    _report: &mut ft2000_spmv::check::CheckReport,
+) -> Result<()> {
+    anyhow::bail!(
+        "check --hb needs the instrumented build: \
+         `cargo run --features hbcheck -- check --hb`"
     )
 }
 

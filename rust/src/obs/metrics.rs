@@ -7,14 +7,20 @@
 //! name map is touched only at registration and snapshot time.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
+use crate::util::ordatomic::OrdAtomicU64;
 
 /// Monotone event counter.
-#[derive(Default)]
-pub struct Counter(AtomicU64);
+pub struct Counter(OrdAtomicU64);
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter(OrdAtomicU64::named(0, "metrics.counter"))
+    }
+}
 
 impl Counter {
     #[inline]
@@ -24,25 +30,40 @@ impl Counter {
 
     #[inline]
     pub fn add(&self, n: u64) {
+        // ord: Relaxed RMW — monotone counter; snapshots need no
+        // ordering, only atomicity.
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // ord: Relaxed load — counter snapshot.
         self.0.load(Ordering::Relaxed)
     }
 }
 
 /// Last-writer-wins instantaneous value (f64 bits in an atomic).
-#[derive(Default)]
-pub struct Gauge(AtomicU64);
+pub struct Gauge(OrdAtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(OrdAtomicU64::racy_ok(
+            0f64.to_bits(),
+            "metrics.gauge",
+            "last-writer-wins instantaneous value by contract",
+        ))
+    }
+}
 
 impl Gauge {
     #[inline]
     pub fn set(&self, v: f64) {
+        // lint:allow(relaxed-store) ord: racy_ok cell — concurrent
+        // setters race benignly; readers take whichever landed last.
         self.0.store(v.to_bits(), Ordering::Relaxed);
     }
 
     pub fn get(&self) -> f64 {
+        // ord: Relaxed load of the racy_ok gauge cell.
         f64::from_bits(self.0.load(Ordering::Relaxed))
     }
 }
@@ -59,19 +80,21 @@ pub struct Histogram {
     /// Bucket `i` counts observations in
     /// `[BASE_MS * 2^i, BASE_MS * 2^(i+1))`; bucket 0 also absorbs
     /// anything smaller, the last bucket anything larger.
-    buckets: [AtomicU64; N_BUCKETS],
-    count: AtomicU64,
+    buckets: [OrdAtomicU64; N_BUCKETS],
+    count: OrdAtomicU64,
     /// Sum of observed values, ms (f64 bits accumulated as integer
     /// µs to stay associative under concurrency).
-    sum_us: AtomicU64,
+    sum_us: OrdAtomicU64,
 }
 
 impl Default for Histogram {
     fn default() -> Self {
         Histogram {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| {
+                OrdAtomicU64::named(0, "metrics.hist.bucket")
+            }),
+            count: OrdAtomicU64::named(0, "metrics.hist.count"),
+            sum_us: OrdAtomicU64::named(0, "metrics.hist.sum_us"),
         }
     }
 }
@@ -98,16 +121,21 @@ impl Histogram {
         if !v_ms.is_finite() || v_ms < 0.0 {
             return;
         }
+        // ord: Relaxed RMWs — independent monotone accumulators; a
+        // snapshot may catch bucket/count mid-update, which percentile
+        // math tolerates (bounded staleness, no ordering needed).
         self.buckets[Self::bucket_of(v_ms)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add((v_ms * 1e3) as u64, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
+        // ord: Relaxed load — accumulator snapshot.
         self.count.load(Ordering::Relaxed)
     }
 
     pub fn sum_ms(&self) -> f64 {
+        // ord: Relaxed load — accumulator snapshot.
         self.sum_us.load(Ordering::Relaxed) as f64 / 1e3
     }
 
@@ -132,6 +160,7 @@ impl Histogram {
         let target = (p.clamp(0.0, 100.0) / 100.0 * n as f64).max(1.0);
         let mut seen = 0u64;
         for i in 0..N_BUCKETS {
+            // ord: Relaxed load — bucket snapshot (see observe).
             let c = self.buckets[i].load(Ordering::Relaxed);
             if c == 0 {
                 continue;
@@ -151,6 +180,7 @@ impl Histogram {
         Json::Arr(
             (0..N_BUCKETS)
                 .filter_map(|i| {
+                    // ord: Relaxed load — bucket snapshot.
                     let c = self.buckets[i].load(Ordering::Relaxed);
                     (c > 0).then(|| {
                         Json::Arr(vec![

@@ -19,11 +19,12 @@
 //! replayed trace lines up on the virtual timeline.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::time::Instant;
 
 use super::{Stage, TraceConfig, STAGE_COUNT};
 use crate::util::json::Json;
+use crate::util::ordatomic::{OrdAtomicU64, OrdAtomicUsize};
 use crate::util::table::Table;
 
 /// What clock spans are stamped with.
@@ -53,39 +54,49 @@ fn sched_code_name(code: usize) -> &'static str {
 }
 
 /// One recorded span. All fields atomic so ring wrap-around under
-/// concurrent writers is a benign tear, not a data race.
+/// concurrent writers is a benign tear, not a data race. The fields
+/// are declared `racy_ok` to `check::hb`: a lapped ring may mix two
+/// spans' words, which `validate` bounds (a reporting inaccuracy,
+/// never unsoundness) — exactly the documented-benign class the
+/// detector must not report.
 struct SpanSlot {
     /// `Stage::index() + 1`; 0 = slot never written.
-    stage: AtomicUsize,
+    stage: OrdAtomicUsize,
     /// Schedule code (see [`sched_code_name`]).
-    sched: AtomicUsize,
+    sched: OrdAtomicUsize,
     /// Span start, µs on the recorder's clock (f64 bits).
-    start_us: AtomicU64,
+    start_us: OrdAtomicU64,
     /// Span duration, µs (f64 bits).
-    dur_us: AtomicU64,
+    dur_us: OrdAtomicU64,
 }
+
+const SLOT_TEAR: &str = "ring lap may tear a span; bounded by validate()";
 
 impl SpanSlot {
     fn empty() -> SpanSlot {
         SpanSlot {
-            stage: AtomicUsize::new(0),
-            sched: AtomicUsize::new(0),
-            start_us: AtomicU64::new(0),
-            dur_us: AtomicU64::new(0),
+            stage: OrdAtomicUsize::racy_ok(0, "trace.slot.stage", SLOT_TEAR),
+            sched: OrdAtomicUsize::racy_ok(0, "trace.slot.sched", SLOT_TEAR),
+            start_us: OrdAtomicU64::racy_ok(
+                0,
+                "trace.slot.start_us",
+                SLOT_TEAR,
+            ),
+            dur_us: OrdAtomicU64::racy_ok(0, "trace.slot.dur_us", SLOT_TEAR),
         }
     }
 }
 
 /// One lane's span ring.
 struct Lane {
-    next: AtomicUsize,
+    next: OrdAtomicUsize,
     slots: Box<[SpanSlot]>,
 }
 
 impl Lane {
     fn new(capacity: usize) -> Lane {
         Lane {
-            next: AtomicUsize::new(0),
+            next: OrdAtomicUsize::named(0, "trace.lane.next"),
             slots: (0..capacity).map(|_| SpanSlot::empty()).collect(),
         }
     }
@@ -100,14 +111,14 @@ pub struct TraceRecorder {
     epoch: Instant,
     /// Virtual now, µs (f64 bits) — only meaningful under
     /// [`ClockMode::Virtual`].
-    virtual_us: AtomicU64,
+    virtual_us: OrdAtomicU64,
     /// Deterministic sampling counter (every `cfg.sample`-th span).
-    counter: AtomicUsize,
+    counter: OrdAtomicUsize,
     /// Schedule code of the dispatch currently executing — set by the
     /// engine before handing work to the pool so per-worker kernel
     /// spans carry attribution. Under concurrent dispatchers this is
     /// last-writer-wins: a bounded attribution approximation.
-    kernel_ctx: AtomicUsize,
+    kernel_ctx: OrdAtomicUsize,
     lanes: Box<[Lane]>,
 }
 
@@ -120,9 +131,16 @@ impl TraceRecorder {
             cfg,
             mode,
             epoch: Instant::now(),
-            virtual_us: AtomicU64::new(0f64.to_bits()),
-            counter: AtomicUsize::new(0),
-            kernel_ctx: AtomicUsize::new(SCHED_NONE),
+            virtual_us: OrdAtomicU64::named(
+                0f64.to_bits(),
+                "trace.virtual_us",
+            ),
+            counter: OrdAtomicUsize::named(0, "trace.sample_counter"),
+            kernel_ctx: OrdAtomicUsize::racy_ok(
+                SCHED_NONE,
+                "trace.kernel_ctx",
+                "last-writer-wins attribution under concurrent dispatch",
+            ),
             lanes: (0..n_lanes.max(1)).map(|_| Lane::new(cap)).collect(),
         }
     }
@@ -144,6 +162,9 @@ impl TraceRecorder {
         match self.mode {
             ClockMode::Wall => self.epoch.elapsed().as_secs_f64() * 1e6,
             ClockMode::Virtual => {
+                // ord: Relaxed load — the replay driver advances the
+                // clock before dispatch; the pool's fork edge (not
+                // this cell) publishes it to the workers.
                 f64::from_bits(self.virtual_us.load(Ordering::Relaxed))
             }
         }
@@ -151,6 +172,9 @@ impl TraceRecorder {
 
     /// Advance the virtual clock (replay harness only).
     pub fn set_virtual_s(&self, t_s: f64) {
+        // lint:allow(relaxed-store) ord: single-writer replay driver;
+        // the dispatch fork edge orders it before any worker read
+        // (hb-verified).
         self.virtual_us.store((t_s * 1e6).to_bits(), Ordering::Relaxed);
     }
 
@@ -162,18 +186,23 @@ impl TraceRecorder {
         if s <= 1 {
             return true;
         }
+        // ord: Relaxed RMW — atomic arbitration is all the sampling
+        // counter needs; no data is published through it.
         self.counter.fetch_add(1, Ordering::Relaxed) % s as usize == 0
     }
 
     /// Set the schedule attribution for subsequent kernel spans.
     #[inline]
     pub fn set_kernel_ctx(&self, sched_code: usize) {
+        // lint:allow(relaxed-store) ord: racy_ok cell — last-writer-
+        // wins attribution is the documented contract.
         self.kernel_ctx.store(sched_code, Ordering::Relaxed);
     }
 
     /// The current kernel attribution code.
     #[inline]
     pub fn kernel_ctx(&self) -> usize {
+        // ord: Relaxed load of the racy_ok attribution cell.
         self.kernel_ctx.load(Ordering::Relaxed)
     }
 
@@ -191,11 +220,18 @@ impl TraceRecorder {
         dur_us: f64,
     ) {
         let lane = &self.lanes[lane.min(self.lanes.len() - 1)];
+        // ord: Relaxed RMW — the cursor only arbitrates slot claims;
+        // readers treat slot contents as possibly torn (racy_ok).
         let idx = lane.next.fetch_add(1, Ordering::Relaxed);
         let slot = &lane.slots[idx % lane.slots.len()];
+        // lint:allow(relaxed-store) ord: racy_ok slot fields — a ring
+        // lap may tear a span; validate() bounds the damage.
         slot.stage.store(stage.index() + 1, Ordering::Relaxed);
+        // lint:allow(relaxed-store) ord: racy_ok slot field (above).
         slot.sched.store(sched_code, Ordering::Relaxed);
+        // lint:allow(relaxed-store) ord: racy_ok slot field (above).
         slot.start_us.store(start_us.to_bits(), Ordering::Relaxed);
+        // lint:allow(relaxed-store) ord: racy_ok slot field (above).
         slot.dur_us.store(dur_us.to_bits(), Ordering::Relaxed);
     }
 
@@ -219,12 +255,14 @@ impl TraceRecorder {
     pub fn span_count(&self) -> usize {
         self.lanes
             .iter()
+            // ord: Relaxed load — monotone cursor snapshot.
             .map(|l| l.next.load(Ordering::Relaxed).min(l.slots.len()))
             .sum()
     }
 
     /// Spans ever recorded, including ones overwritten by ring wrap.
     pub fn spans_recorded(&self) -> usize {
+        // ord: Relaxed load — monotone cursor snapshot.
         self.lanes.iter().map(|l| l.next.load(Ordering::Relaxed)).sum()
     }
 
@@ -249,6 +287,8 @@ impl TraceRecorder {
         const MAX_FINDINGS: usize = 64;
         let mut findings = Vec::new();
         for (li, lane) in self.lanes.iter().enumerate() {
+            // ord: Relaxed loads throughout — validate runs at
+            // quiescence (the caller's join/latch orders the writes).
             let next = lane.next.load(Ordering::Relaxed);
             let len = lane.slots.len();
             let held = next.min(len);
@@ -258,6 +298,7 @@ impl TraceRecorder {
                 // cursor, an unwrapped one at slot 0.
                 let pos = if next <= len { k } else { (next + k) % len };
                 let slot = &lane.slots[pos];
+                // ord: Relaxed load — quiescent (see loop head).
                 let tag = slot.stage.load(Ordering::Relaxed);
                 match tag.checked_sub(1).and_then(Stage::from_index) {
                     None if tag == 0 => {
@@ -275,12 +316,14 @@ impl TraceRecorder {
                     }
                     Some(_) => {}
                 }
+                // ord: Relaxed load — quiescent (see loop head).
                 let sched = slot.sched.load(Ordering::Relaxed);
                 if sched > 5 {
                     findings.push(format!(
                         "lane {li} slot {pos}: invalid schedule code {sched}"
                     ));
                 }
+                // ord: Relaxed loads — quiescent (see loop head).
                 let start =
                     f64::from_bits(slot.start_us.load(Ordering::Relaxed));
                 let dur = f64::from_bits(slot.dur_us.load(Ordering::Relaxed));
@@ -308,6 +351,7 @@ impl TraceRecorder {
             }
             if next < len {
                 for (pos, slot) in lane.slots.iter().enumerate().skip(held) {
+                    // ord: Relaxed load — quiescent (see loop head).
                     if slot.stage.load(Ordering::Relaxed) != 0 {
                         findings.push(format!(
                             "lane {li} slot {pos}: record beyond the lane \
@@ -330,14 +374,18 @@ impl TraceRecorder {
 
     fn each_span(&self, mut f: impl FnMut(usize, Stage, usize, f64, f64)) {
         for (lane_idx, lane) in self.lanes.iter().enumerate() {
+            // ord: Relaxed loads throughout — export runs at
+            // quiescence; a torn slot decodes bounded-wrong, never UB.
             let held =
                 lane.next.load(Ordering::Relaxed).min(lane.slots.len());
             for slot in &lane.slots[..held] {
+                // ord: Relaxed load — quiescent (see loop head).
                 let tag = slot.stage.load(Ordering::Relaxed);
                 let Some(stage) = tag.checked_sub(1).and_then(Stage::from_index)
                 else {
                     continue;
                 };
+                // ord: Relaxed loads — quiescent (see loop head).
                 f(
                     lane_idx,
                     stage,

@@ -22,7 +22,9 @@
 //! sharded server in [`super::shard`], and the throughput bench.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
+
+use crate::util::ordatomic::OrdAtomicUsize;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -208,7 +210,7 @@ pub(crate) fn drain_worker(
     queue: &RequestQueue,
     max_batch: usize,
     deadline_ms: f64,
-    served: &AtomicUsize,
+    served: &OrdAtomicUsize,
 ) {
     while let Some(mut batch) = queue.pop_batch(max_batch) {
         if deadline_ms > 0.0 {
@@ -256,6 +258,8 @@ pub(crate) fn drain_worker(
                         done.duration_since(r.submitted).as_secs_f64() * 1e3,
                     );
                 }
+                // ord: Relaxed RMW — served tally; the caller reads it
+                // with into_inner after the worker scope joins.
                 served.fetch_add(batch.len(), Ordering::Relaxed);
             }
             Err(_) if batch.len() > 1 => {
@@ -268,6 +272,8 @@ pub(crate) fn drain_worker(
                             engine.telemetry.record_latency_ms(
                                 r.submitted.elapsed().as_secs_f64() * 1e3,
                             );
+                            // ord: Relaxed RMW — served tally (see
+                            // the batch-success arm above).
                             served.fetch_add(1, Ordering::Relaxed);
                         }
                         Err(_) => engine.telemetry.record_errors(1),
@@ -293,7 +299,7 @@ pub fn serve_queue(
     workers: usize,
     max_batch: usize,
 ) -> usize {
-    let served = AtomicUsize::new(0);
+    let served = OrdAtomicUsize::named(0, "batch.served");
     std::thread::scope(|s| {
         for _ in 0..workers.max(1) {
             let served = &served;

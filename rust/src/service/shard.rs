@@ -25,9 +25,11 @@
 //!   overload degrades throughput, it never panics the server.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
+
+use crate::util::ordatomic::OrdAtomicUsize;
 
 use crate::autotune::AutotuneConfig;
 use crate::obs::{
@@ -248,7 +250,7 @@ pub struct ShardedServer {
     pub shards: Vec<Shard>,
     pub placement: ShardPlacement,
     pub cfg: ShardConfig,
-    rr: AtomicUsize,
+    rr: OrdAtomicUsize,
 }
 
 impl ShardedServer {
@@ -341,7 +343,7 @@ impl ShardedServer {
             shards,
             placement,
             cfg,
-            rr: AtomicUsize::new(0),
+            rr: OrdAtomicUsize::named(0, "shard.rr"),
         }
     }
 
@@ -360,6 +362,8 @@ impl ShardedServer {
         let shard = match self.placement.home(req.matrix_id) {
             Some(s) => s,
             None => {
+                // ord: Relaxed RMW — round-robin ticket; producers
+                // only need distinct values, not ordering.
                 self.rr.fetch_add(1, Ordering::Relaxed) % self.cfg.shards
             }
         };
@@ -394,7 +398,7 @@ impl ShardedServer {
     /// drained. Returns the number of requests served successfully
     /// (errors/shed/rejected are in the per-shard telemetry).
     pub fn serve(&self) -> usize {
-        let served = AtomicUsize::new(0);
+        let served = OrdAtomicUsize::named(0, "shard.served");
         std::thread::scope(|s| {
             for shard in &self.shards {
                 for _ in 0..self.cfg.workers_per_shard.max(1) {

@@ -22,6 +22,11 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
 
+// Deliberately a *raw* atomic, not `util::ordatomic::OrdAtomicU64`:
+// this counter is bumped from inside the global allocator, and the
+// hbcheck capture path takes a mutex and grows a `Vec` — logging an
+// event from within `alloc()` would re-enter the allocator under
+// that lock. The probe is observation-only and never synchronizes.
 static TOTAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
 
 thread_local! {
@@ -32,6 +37,8 @@ thread_local! {
 /// Always valid to call; stays 0 unless a binary installed
 /// [`CountingAllocator`] as its global allocator.
 pub fn total_allocs() -> u64 {
+    // ord: Relaxed load — monotone counter snapshot; readers compare
+    // two readings around a quiesced region, no ordering needed.
     TOTAL_ALLOCS.load(Ordering::Relaxed)
 }
 
@@ -45,6 +52,8 @@ pub fn thread_allocs() -> u64 {
 
 #[inline]
 fn count_one() {
+    // ord: Relaxed RMW — monotone counter inside the allocator; must
+    // stay lock-free and allocation-free, and carries no ordering.
     TOTAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
     // `try_with`: TLS may already be torn down during thread exit;
     // losing those few counts is fine, panicking in the allocator is
@@ -89,5 +98,28 @@ unsafe impl GlobalAlloc for CountingAllocator {
         // SAFETY: caller guarantees `ptr` was allocated by this
         // allocator (i.e. by `System`) with `layout`.
         unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The allocator is not installed in the library test binary, so
+    // these exercise the counters directly — enough for Miri to check
+    // the atomic/TLS interplay without a `#[global_allocator]`.
+    #[test]
+    fn counters_are_monotone_and_thread_local() {
+        let g0 = total_allocs();
+        let t0 = thread_allocs();
+        count_one();
+        count_one();
+        assert!(total_allocs() >= g0 + 2);
+        assert_eq!(thread_allocs(), t0 + 2);
+        // Another thread's counts reach the global, not our TLS.
+        let t_before = thread_allocs();
+        std::thread::spawn(count_one).join().unwrap();
+        assert_eq!(thread_allocs(), t_before);
+        assert!(total_allocs() >= g0 + 3);
     }
 }

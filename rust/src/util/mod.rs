@@ -8,6 +8,7 @@
 pub mod allocprobe;
 pub mod bench;
 pub mod json;
+pub mod ordatomic;
 pub mod rng;
 pub mod stats;
 pub mod table;

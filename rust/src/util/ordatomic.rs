@@ -1,0 +1,709 @@
+//! Instrumented atomics — the capture layer under `check::hb`.
+//!
+//! Every lock-free cell in the serve core ([`crate::exec::ExecPool`]
+//! tallies, [`crate::obs`] span rings and metrics, shard admission
+//! round-robin, the allocation probe) holds one of these newtypes
+//! instead of a raw `std::sync::atomic` type:
+//!
+//! - **Release builds (default):** `#[repr(transparent)]` passthrough
+//!   wrappers with `#[inline(always)]` methods — bit-identical to the
+//!   raw atomic, zero cost (A/B-gated in the `check_overhead` bench).
+//! - **`--features hbcheck`:** each op additionally logs a
+//!   `(lane, op, address, ordering, seq)` [`Event`] into a global
+//!   capture buffer while a [`capture::capture`] window is open. The
+//!   offline vector-clock analyzer (`check::hb`) replays that log to
+//!   derive happens-before edges from acquire/release pairings and
+//!   flag conflicting accesses no edge orders.
+//!
+//! Capture correctness hinges on one rule: the real atomic op executes
+//! *while holding the log lock*, so the event log is an exact
+//! linearization of the captured execution — an acquire load that
+//! observed a release store is always logged after that store, and the
+//! analyzer never pairs an edge backwards.
+//!
+//! Constructors carry audit metadata (erased in release builds):
+//! [`OrdAtomicU64::named`] labels the cell for findings, and
+//! [`OrdAtomicU64::racy_ok`] documents a *benign* race (last-writer-
+//! wins cells like the trace kernel context) that the analyzer must
+//! not report — the cell still participates in edge derivation.
+//!
+//! The analyzer-facing vocabulary ([`Event`], [`OpKind`], [`MemOrd`])
+//! compiles unconditionally so `check::hb::analyze` is testable with
+//! synthetic event streams in the default build; only the capture
+//! machinery is feature-gated.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// What an instrumented operation did to its cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpKind {
+    /// Atomic read.
+    Load,
+    /// Atomic write (blind — overwrites regardless of current value).
+    Store,
+    /// Atomic read-modify-write (`fetch_add`, `swap`, ...). RMWs on
+    /// the same cell arbitrate atomically and never race each other.
+    Rmw,
+    /// Pseudo-event: `ExecPool::run` dispatched a job. Everything the
+    /// forking lane did so far happens-before every slot's work.
+    Fork,
+    /// Pseudo-event: `ExecPool::run`'s completion latch released.
+    /// Every slot's work happens-before the join point.
+    Join,
+}
+
+impl OpKind {
+    /// Short label for findings ("store", "load", ...).
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Load => "load",
+            OpKind::Store => "store",
+            OpKind::Rmw => "rmw",
+            OpKind::Fork => "fork",
+            OpKind::Join => "join",
+        }
+    }
+}
+
+/// Closed mirror of `std::sync::atomic::Ordering` (which is
+/// `#[non_exhaustive]` and so cannot be matched exhaustively or used
+/// as a map key by the analyzer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MemOrd {
+    /// No synchronization — morally a plain access the surrounding
+    /// protocol (mutex, latch, fork/join) must order.
+    Relaxed,
+    /// Read side of a release/acquire edge.
+    Acquire,
+    /// Write side of a release/acquire edge.
+    Release,
+    /// Both sides (RMW only).
+    AcqRel,
+    /// Acquire + release + total order.
+    SeqCst,
+}
+
+impl MemOrd {
+    /// Classify a std `Ordering`.
+    pub fn of(ord: Ordering) -> Self {
+        match ord {
+            Ordering::Relaxed => MemOrd::Relaxed,
+            Ordering::Acquire => MemOrd::Acquire,
+            Ordering::Release => MemOrd::Release,
+            Ordering::AcqRel => MemOrd::AcqRel,
+            // `Ordering` is #[non_exhaustive]; map anything new to the
+            // strongest class rather than miscategorizing it.
+            _ => MemOrd::SeqCst,
+        }
+    }
+
+    /// Does a read at this strength consume release edges?
+    pub fn acquires(self) -> bool {
+        matches!(self, MemOrd::Acquire | MemOrd::AcqRel | MemOrd::SeqCst)
+    }
+
+    /// Does a write at this strength publish a release edge?
+    pub fn releases(self) -> bool {
+        matches!(self, MemOrd::Release | MemOrd::AcqRel | MemOrd::SeqCst)
+    }
+
+    /// Display label ("Relaxed", "Acquire", ...).
+    pub fn label(self) -> &'static str {
+        match self {
+            MemOrd::Relaxed => "Relaxed",
+            MemOrd::Acquire => "Acquire",
+            MemOrd::Release => "Release",
+            MemOrd::AcqRel => "AcqRel",
+            MemOrd::SeqCst => "SeqCst",
+        }
+    }
+}
+
+/// One captured atomic operation, in global linearization order.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Position in the capture log (== linearization order).
+    pub seq: usize,
+    /// Capturing-thread id (process-unique, assigned on first op).
+    pub lane: usize,
+    /// Operation class.
+    pub op: OpKind,
+    /// Cell address. Ptr-to-int only — an opaque map key for the
+    /// analyzer, never cast back to a pointer (Miri-clean).
+    pub addr: usize,
+    /// Declared memory ordering of the op.
+    pub ord: MemOrd,
+    /// Audit label from the cell's constructor ("pool.jobs", ...).
+    pub site: &'static str,
+    /// `Some(why)` for cells declared benign-racy at construction;
+    /// the analyzer derives edges from them but never reports them.
+    pub racy_ok: Option<&'static str>,
+}
+
+macro_rules! ord_atomic {
+    ($(#[$meta:meta])* $name:ident, $atomic:ident, $prim:ty) => {
+        $(#[$meta])*
+        #[cfg(not(feature = "hbcheck"))]
+        #[repr(transparent)]
+        pub struct $name {
+            inner: $atomic,
+        }
+
+        $(#[$meta])*
+        #[cfg(feature = "hbcheck")]
+        pub struct $name {
+            inner: $atomic,
+            site: &'static str,
+            racy: Option<&'static str>,
+        }
+
+        #[cfg(not(feature = "hbcheck"))]
+        impl $name {
+            /// Anonymous cell.
+            #[inline(always)]
+            pub const fn new(v: $prim) -> Self {
+                Self { inner: $atomic::new(v) }
+            }
+
+            /// Cell labelled for `check::hb` findings. The label is
+            /// erased in this (default) build.
+            #[inline(always)]
+            pub const fn named(v: $prim, _site: &'static str) -> Self {
+                Self { inner: $atomic::new(v) }
+            }
+
+            /// Cell with a *documented benign race* (last-writer-wins
+            /// by design); `check::hb` will not report conflicts on
+            /// it. Metadata erased in this (default) build.
+            #[inline(always)]
+            pub const fn racy_ok(
+                v: $prim,
+                _site: &'static str,
+                _why: &'static str,
+            ) -> Self {
+                Self { inner: $atomic::new(v) }
+            }
+
+            #[inline(always)]
+            pub fn load(&self, ord: Ordering) -> $prim {
+                self.inner.load(ord)
+            }
+
+            #[inline(always)]
+            pub fn store(&self, v: $prim, ord: Ordering) {
+                self.inner.store(v, ord)
+            }
+
+            #[inline(always)]
+            pub fn fetch_add(&self, v: $prim, ord: Ordering) -> $prim {
+                self.inner.fetch_add(v, ord)
+            }
+
+            /// Consume the cell (sole-ownership read — not an atomic
+            /// op, so never logged).
+            #[inline(always)]
+            pub fn into_inner(self) -> $prim {
+                self.inner.into_inner()
+            }
+        }
+
+        #[cfg(feature = "hbcheck")]
+        impl $name {
+            pub const fn new(v: $prim) -> Self {
+                Self::named(v, "(anon)")
+            }
+
+            pub const fn named(v: $prim, site: &'static str) -> Self {
+                Self { inner: $atomic::new(v), site, racy: None }
+            }
+
+            pub const fn racy_ok(
+                v: $prim,
+                site: &'static str,
+                why: &'static str,
+            ) -> Self {
+                Self { inner: $atomic::new(v), site, racy: Some(why) }
+            }
+
+            pub fn load(&self, ord: Ordering) -> $prim {
+                capture::logged(
+                    OpKind::Load,
+                    self.addr(),
+                    MemOrd::of(ord),
+                    self.site,
+                    self.racy,
+                    || self.inner.load(ord),
+                )
+            }
+
+            pub fn store(&self, v: $prim, ord: Ordering) {
+                capture::logged(
+                    OpKind::Store,
+                    self.addr(),
+                    MemOrd::of(ord),
+                    self.site,
+                    self.racy,
+                    || self.inner.store(v, ord),
+                )
+            }
+
+            pub fn fetch_add(&self, v: $prim, ord: Ordering) -> $prim {
+                capture::logged(
+                    OpKind::Rmw,
+                    self.addr(),
+                    MemOrd::of(ord),
+                    self.site,
+                    self.racy,
+                    || self.inner.fetch_add(v, ord),
+                )
+            }
+
+            /// Consume the cell (sole-ownership read — not an atomic
+            /// op, so never logged).
+            pub fn into_inner(self) -> $prim {
+                self.inner.into_inner()
+            }
+
+            fn addr(&self) -> usize {
+                &self.inner as *const $atomic as usize
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self::new(0 as $prim)
+            }
+        }
+    };
+}
+
+ord_atomic!(
+    /// Instrumented `AtomicU64` (see module docs).
+    OrdAtomicU64,
+    AtomicU64,
+    u64
+);
+ord_atomic!(
+    /// Instrumented `AtomicUsize` (see module docs).
+    OrdAtomicUsize,
+    AtomicUsize,
+    usize
+);
+
+/// Instrumented `AtomicBool` (see module docs).
+#[cfg(not(feature = "hbcheck"))]
+#[repr(transparent)]
+pub struct OrdAtomicBool {
+    inner: AtomicBool,
+}
+
+/// Instrumented `AtomicBool` (see module docs).
+#[cfg(feature = "hbcheck")]
+pub struct OrdAtomicBool {
+    inner: AtomicBool,
+    site: &'static str,
+    racy: Option<&'static str>,
+}
+
+#[cfg(not(feature = "hbcheck"))]
+impl OrdAtomicBool {
+    /// Anonymous cell.
+    #[inline(always)]
+    pub const fn new(v: bool) -> Self {
+        Self { inner: AtomicBool::new(v) }
+    }
+
+    /// Cell labelled for `check::hb` findings.
+    #[inline(always)]
+    pub const fn named(v: bool, _site: &'static str) -> Self {
+        Self { inner: AtomicBool::new(v) }
+    }
+
+    /// Cell with a documented benign race.
+    #[inline(always)]
+    pub const fn racy_ok(
+        v: bool,
+        _site: &'static str,
+        _why: &'static str,
+    ) -> Self {
+        Self { inner: AtomicBool::new(v) }
+    }
+
+    #[inline(always)]
+    pub fn load(&self, ord: Ordering) -> bool {
+        self.inner.load(ord)
+    }
+
+    #[inline(always)]
+    pub fn store(&self, v: bool, ord: Ordering) {
+        self.inner.store(v, ord)
+    }
+
+    #[inline(always)]
+    pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+        self.inner.swap(v, ord)
+    }
+}
+
+#[cfg(feature = "hbcheck")]
+impl OrdAtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self::named(v, "(anon)")
+    }
+
+    pub const fn named(v: bool, site: &'static str) -> Self {
+        Self { inner: AtomicBool::new(v), site, racy: None }
+    }
+
+    pub const fn racy_ok(
+        v: bool,
+        site: &'static str,
+        why: &'static str,
+    ) -> Self {
+        Self { inner: AtomicBool::new(v), site, racy: Some(why) }
+    }
+
+    pub fn load(&self, ord: Ordering) -> bool {
+        capture::logged(
+            OpKind::Load,
+            self.addr(),
+            MemOrd::of(ord),
+            self.site,
+            self.racy,
+            || self.inner.load(ord),
+        )
+    }
+
+    pub fn store(&self, v: bool, ord: Ordering) {
+        capture::logged(
+            OpKind::Store,
+            self.addr(),
+            MemOrd::of(ord),
+            self.site,
+            self.racy,
+            || self.inner.store(v, ord),
+        )
+    }
+
+    pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+        capture::logged(
+            OpKind::Rmw,
+            self.addr(),
+            MemOrd::of(ord),
+            self.site,
+            self.racy,
+            || self.inner.swap(v, ord),
+        )
+    }
+
+    fn addr(&self) -> usize {
+        &self.inner as *const AtomicBool as usize
+    }
+}
+
+impl Default for OrdAtomicBool {
+    fn default() -> Self {
+        Self::new(false)
+    }
+}
+
+/// Log a fork pseudo-event: everything the calling lane did so far
+/// happens-before any captured op that follows on *any* lane.
+/// `ExecPool::run` calls this after taking the dispatch lock — the
+/// Condvar latch protocol gives `run` `std::thread::scope` semantics,
+/// and the analyzer models that with explicit fork/join events rather
+/// than by decoding the latch's mutex traffic.
+#[cfg(feature = "hbcheck")]
+pub fn hb_fork() {
+    capture::sync_event(OpKind::Fork);
+}
+
+/// Log a join pseudo-event: every captured op so far (all lanes)
+/// happens-before anything the calling lane does next. `ExecPool::run`
+/// calls this after its completion latch closes.
+#[cfg(feature = "hbcheck")]
+pub fn hb_join() {
+    capture::sync_event(OpKind::Join);
+}
+
+/// Event capture machinery (only under `--features hbcheck`).
+#[cfg(feature = "hbcheck")]
+pub mod capture {
+    use super::{Event, MemOrd, OpKind};
+    use std::cell::Cell;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Mutex, MutexGuard, PoisonError};
+
+    /// Dedup bookkeeping for one lane's most recent load of a cell.
+    struct LoadMark {
+        ord: MemOrd,
+        /// Seq of the logged load this mark describes.
+        seq: usize,
+        /// `mod_seq[addr]` at the time the load was logged.
+        mod_mark: usize,
+    }
+
+    /// Log plus the spin-load dedup state; one mutex so the real
+    /// atomic op, the log append, and the dedup decision are a single
+    /// linearization point.
+    struct LogState {
+        events: Vec<Event>,
+        /// addr -> seq+1 of the last store/rmw to it (0 = never).
+        mod_seq: BTreeMap<usize, usize>,
+        /// (lane, addr) -> that lane's last *logged* load of addr.
+        last_load: BTreeMap<(usize, usize), LoadMark>,
+        /// lane -> seq of the lane's last logged event.
+        last_event: BTreeMap<usize, usize>,
+    }
+
+    static CAPTURING: AtomicBool = AtomicBool::new(false);
+    static LOG: Mutex<LogState> = Mutex::new(LogState {
+        events: Vec::new(),
+        mod_seq: BTreeMap::new(),
+        last_load: BTreeMap::new(),
+        last_event: BTreeMap::new(),
+    });
+    static SESSION: Mutex<()> = Mutex::new(());
+    static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
+
+    thread_local! {
+        static LANE: Cell<usize> = const { Cell::new(usize::MAX) };
+        static IN_LOG: Cell<bool> = const { Cell::new(false) };
+    }
+
+    fn lane_id() -> usize {
+        LANE.with(|l| {
+            if l.get() == usize::MAX {
+                l.set(NEXT_LANE.fetch_add(1, Ordering::Relaxed));
+            }
+            l.get()
+        })
+    }
+
+    fn lock_log() -> MutexGuard<'static, LogState> {
+        LOG.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    impl LogState {
+        fn clear(&mut self) {
+            self.events.clear();
+            self.mod_seq.clear();
+            self.last_load.clear();
+            self.last_event.clear();
+        }
+
+        /// Spin-load dedup: a load may be skipped iff the same lane
+        /// already logged an identical load of the cell, has logged
+        /// *nothing since* (so its analyzer vector clock is unchanged
+        /// and the skipped load is VC-identical to the logged one),
+        /// and the cell has not been modified since (so the skipped
+        /// load cannot carry a new release/acquire edge). This bounds
+        /// a spin-wait loop to one logged load per observed
+        /// modification — even with several lanes spinning at once —
+        /// without ever dropping an event the analyzer needs.
+        fn dup_load(&self, lane: usize, addr: usize, ord: MemOrd) -> bool {
+            let Some(m) = self.last_load.get(&(lane, addr)) else {
+                return false;
+            };
+            m.ord == ord
+                && self.last_event.get(&lane) == Some(&m.seq)
+                && self.mod_seq.get(&addr).copied().unwrap_or(0)
+                    == m.mod_mark
+        }
+
+        fn push(
+            &mut self,
+            lane: usize,
+            op: OpKind,
+            addr: usize,
+            ord: MemOrd,
+            site: &'static str,
+            racy_ok: Option<&'static str>,
+        ) {
+            let seq = self.events.len();
+            self.events.push(Event {
+                seq,
+                lane,
+                op,
+                addr,
+                ord,
+                site,
+                racy_ok,
+            });
+            self.last_event.insert(lane, seq);
+            match op {
+                OpKind::Load => {
+                    let mod_mark =
+                        self.mod_seq.get(&addr).copied().unwrap_or(0);
+                    self.last_load.insert(
+                        (lane, addr),
+                        LoadMark { ord, seq, mod_mark },
+                    );
+                }
+                OpKind::Store | OpKind::Rmw => {
+                    self.mod_seq.insert(addr, seq + 1);
+                }
+                OpKind::Fork | OpKind::Join => {}
+            }
+        }
+    }
+
+    /// Perform `do_op`, logging it if a capture window is open.
+    ///
+    /// The op runs under the log lock so the log is an exact
+    /// linearization (see module docs): an acquire load that observed
+    /// a release store is always logged after that store. A
+    /// thread-local reentrancy flag keeps the bookkeeping safe — the
+    /// log structures may allocate → allocator → allocprobe's
+    /// *instrumented* counter → back here; the inner op then runs
+    /// unlogged instead of self-deadlocking.
+    pub(crate) fn logged<T>(
+        op: OpKind,
+        addr: usize,
+        ord: MemOrd,
+        site: &'static str,
+        racy_ok: Option<&'static str>,
+        do_op: impl FnOnce() -> T,
+    ) -> T {
+        if !CAPTURING.load(Ordering::Acquire) {
+            return do_op();
+        }
+        if IN_LOG.with(Cell::get) {
+            return do_op();
+        }
+        IN_LOG.with(|g| g.set(true));
+        let lane = lane_id();
+        let out;
+        {
+            let mut log = lock_log();
+            out = do_op();
+            if !(op == OpKind::Load && log.dup_load(lane, addr, ord)) {
+                log.push(lane, op, addr, ord, site, racy_ok);
+            }
+        }
+        IN_LOG.with(|g| g.set(false));
+        out
+    }
+
+    /// Log a fork/join pseudo-event for the calling lane.
+    pub(crate) fn sync_event(op: OpKind) {
+        logged(op, 0, MemOrd::SeqCst, "exec.pool.latch", None, || ());
+    }
+
+    /// Run `f` with event capture on; return its result plus the
+    /// captured log. Captures serialize process-wide (parallel test
+    /// threads would otherwise interleave two captures into one log).
+    pub fn capture<R>(f: impl FnOnce() -> R) -> (R, Vec<Event>) {
+        let _session =
+            SESSION.lock().unwrap_or_else(PoisonError::into_inner);
+        struct Off;
+        impl Drop for Off {
+            fn drop(&mut self) {
+                CAPTURING.store(false, Ordering::SeqCst);
+            }
+        }
+        lock_log().clear();
+        CAPTURING.store(true, Ordering::SeqCst);
+        let off = Off;
+        let out = f();
+        drop(off);
+        let events = std::mem::take(&mut lock_log().events);
+        (out, events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memord_classifies_std_orderings() {
+        assert_eq!(MemOrd::of(Ordering::Relaxed), MemOrd::Relaxed);
+        assert_eq!(MemOrd::of(Ordering::Acquire), MemOrd::Acquire);
+        assert_eq!(MemOrd::of(Ordering::Release), MemOrd::Release);
+        assert_eq!(MemOrd::of(Ordering::AcqRel), MemOrd::AcqRel);
+        assert_eq!(MemOrd::of(Ordering::SeqCst), MemOrd::SeqCst);
+        assert!(MemOrd::Acquire.acquires());
+        assert!(!MemOrd::Acquire.releases());
+        assert!(MemOrd::Release.releases());
+        assert!(!MemOrd::Release.acquires());
+        assert!(MemOrd::AcqRel.acquires() && MemOrd::AcqRel.releases());
+        assert!(MemOrd::SeqCst.acquires() && MemOrd::SeqCst.releases());
+        assert!(!MemOrd::Relaxed.acquires() && !MemOrd::Relaxed.releases());
+    }
+
+    #[test]
+    fn passthrough_semantics_match_raw_atomics() {
+        let u = OrdAtomicU64::named(7, "test.u64");
+        assert_eq!(u.load(Ordering::Relaxed), 7);
+        assert_eq!(u.fetch_add(3, Ordering::Relaxed), 7);
+        u.store(42, Ordering::Release);
+        assert_eq!(u.load(Ordering::Acquire), 42);
+
+        let s = OrdAtomicUsize::racy_ok(1, "test.usize", "test cell");
+        assert_eq!(s.fetch_add(1, Ordering::Relaxed), 1);
+        assert_eq!(s.load(Ordering::Relaxed), 2);
+
+        let b = OrdAtomicBool::named(false, "test.bool");
+        assert!(!b.swap(true, Ordering::Relaxed));
+        assert!(b.load(Ordering::Relaxed));
+        b.store(false, Ordering::Relaxed);
+        assert!(!b.load(Ordering::Relaxed));
+
+        assert_eq!(OrdAtomicU64::default().load(Ordering::Relaxed), 0);
+        assert!(!OrdAtomicBool::default().load(Ordering::Relaxed));
+    }
+
+    #[cfg(feature = "hbcheck")]
+    #[test]
+    fn capture_logs_ops_in_linearization_order() {
+        let cell = OrdAtomicU64::named(0, "test.cap");
+        let ((), events) = capture::capture(|| {
+            cell.store(1, Ordering::Relaxed);
+            cell.fetch_add(1, Ordering::Relaxed);
+            let _ = cell.load(Ordering::Acquire);
+        });
+        let ours: Vec<_> =
+            events.iter().filter(|e| e.site == "test.cap").collect();
+        assert_eq!(ours.len(), 3);
+        assert_eq!(ours[0].op, OpKind::Store);
+        assert_eq!(ours[1].op, OpKind::Rmw);
+        assert_eq!(ours[2].op, OpKind::Load);
+        assert_eq!(ours[2].ord, MemOrd::Acquire);
+        assert!(ours[0].seq < ours[1].seq && ours[1].seq < ours[2].seq);
+        // Same thread, same cell => same lane and address throughout.
+        assert!(ours.iter().all(|e| e.lane == ours[0].lane));
+        assert!(ours.iter().all(|e| e.addr == ours[0].addr));
+    }
+
+    #[cfg(feature = "hbcheck")]
+    #[test]
+    fn capture_dedups_spin_loads() {
+        let cell = OrdAtomicUsize::named(0, "test.spin");
+        let ((), events) = capture::capture(|| {
+            for _ in 0..1000 {
+                let _ = cell.load(Ordering::Acquire);
+            }
+            cell.store(1, Ordering::Relaxed);
+            let _ = cell.load(Ordering::Acquire);
+        });
+        let ours: Vec<_> =
+            events.iter().filter(|e| e.site == "test.spin").collect();
+        // 1000 spins collapse to one load; the store un-dedups the
+        // final load.
+        assert_eq!(ours.len(), 3);
+        assert_eq!(ours[0].op, OpKind::Load);
+        assert_eq!(ours[1].op, OpKind::Store);
+        assert_eq!(ours[2].op, OpKind::Load);
+    }
+
+    #[cfg(feature = "hbcheck")]
+    #[test]
+    fn capture_off_means_no_logging() {
+        let cell = OrdAtomicU64::named(0, "test.off");
+        cell.store(5, Ordering::Relaxed);
+        let ((), events) = capture::capture(|| ());
+        assert!(events.iter().all(|e| e.site != "test.off"));
+    }
+}
