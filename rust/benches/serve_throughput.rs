@@ -22,7 +22,9 @@
 //! 6. Is stage tracing cheap enough to leave on? Section `obs` A/Bs
 //!    the serve path with the span recorder detached vs attached at
 //!    full sampling, interleaved so drift cancels, and snapshots the
-//!    tax to `BENCH_obs.json` (quick mode gates it at <= 2%).
+//!    tax to `BENCH_obs.json` (quick mode gates it at <= 2%). The
+//!    same section A/Bs the always-on scalability profiler against
+//!    `without_scaling` under the identical gate.
 //!
 //! Scale with `FT2000_SUITE=tiny|fast|full` (default fast); set
 //! `FT2000_QUICK=1` for the CI smoke mode (tiny request counts, full
@@ -158,7 +160,9 @@ fn main() {
 // equally, and the gated number is the *median* per-round ratio —
 // robust to a stray slow round on shared CI hardware. Emits
 // `BENCH_obs.json` for the perf trajectory; quick mode asserts the
-// tracing tax stays within the 2% observability budget.
+// tracing tax stays within the 2% observability budget. A second A/B
+// with the same methodology gates the always-on scalability
+// profiler's tax (attribution enabled vs `without_scaling`).
 fn section_obs(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
     use ft2000_spmv::obs::{ClockMode, TraceConfig, TraceRecorder};
 
@@ -231,6 +235,45 @@ fn section_obs(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
     if let Some(rec) = traced.trace() {
         rec.flame_table().print();
     }
+    // Scalability-profiler tax, same interleaved-median methodology:
+    // both engines untraced, one with attribution disabled. The
+    // profiler is always on in deployments, so its cost shares the
+    // tracing section's observability budget.
+    println!();
+    println!("scaling profiler A/B (serve_batch wall clock):");
+    let (scaling_off, _) = build();
+    let scaling_off = scaling_off.without_scaling();
+    let (scaling_on, _) = build();
+    for _ in 0..6 {
+        round(&scaling_off);
+        round(&scaling_on);
+    }
+    let (mut sc_total_off, mut sc_total_on) = (0.0f64, 0.0f64);
+    let mut sc_ratios = Vec::with_capacity(rounds);
+    for i in 0..rounds {
+        let (off, on) = if i % 2 == 0 {
+            let off = round(&scaling_off);
+            (off, round(&scaling_on))
+        } else {
+            let on = round(&scaling_on);
+            (round(&scaling_off), on)
+        };
+        sc_total_off += off;
+        sc_total_on += on;
+        sc_ratios.push(on / off);
+    }
+    sc_ratios.sort_by(f64::total_cmp);
+    let sc_median = sc_ratios[sc_ratios.len() / 2];
+    let sc_total_ratio = sc_total_on / sc_total_off;
+    let sc_batches = scaling_on.scaling().batches();
+    println!(
+        "profiler off {:.3} ms  on {:.3} ms  total ratio \
+         {sc_total_ratio:.4}x  median round ratio {sc_median:.4}x  \
+         ({sc_batches} batches attributed)",
+        sc_total_off * 1e3,
+        sc_total_on * 1e3,
+    );
+    scaling_on.scaling().table().print();
     let snapshot = Json::Obj(
         [
             ("section".to_string(), Json::Str("obs".to_string())),
@@ -244,6 +287,20 @@ fn section_obs(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
             ("total_ratio".to_string(), Json::Num(total_ratio)),
             ("median_round_ratio".to_string(), Json::Num(median)),
             ("spans_recorded".to_string(), Json::Num(spans as f64)),
+            ("scaling_off_s".to_string(), Json::Num(sc_total_off)),
+            ("scaling_on_s".to_string(), Json::Num(sc_total_on)),
+            (
+                "scaling_total_ratio".to_string(),
+                Json::Num(sc_total_ratio),
+            ),
+            (
+                "scaling_median_ratio".to_string(),
+                Json::Num(sc_median),
+            ),
+            (
+                "scaling_batches".to_string(),
+                Json::Num(sc_batches as f64),
+            ),
         ]
         .into_iter()
         .collect(),
@@ -260,6 +317,12 @@ fn section_obs(suite: &ft2000_spmv::corpus::suite::SuiteSpec, quick: bool) {
             median <= 1.02,
             "obs smoke: tracing tax exceeded the 2% budget (median \
              round ratio {median:.4}x over {rounds} interleaved rounds)"
+        );
+        assert!(
+            sc_median <= 1.02,
+            "obs smoke: scaling-profiler tax exceeded the 2% budget \
+             (median round ratio {sc_median:.4}x over {rounds} \
+             interleaved rounds)"
         );
     }
 }

@@ -937,7 +937,10 @@ mod tests {
         // Observations accumulated for retraining.
         let d = tuner.dataset();
         assert_eq!(d.len(), 150);
-        assert_eq!(d.n_features(), observe::BASE_FEATURES + 6);
+        assert_eq!(
+            d.n_features(),
+            observe::BASE_FEATURES + 3 + observe::STAGE_COLUMNS
+        );
     }
 
     #[test]
@@ -950,17 +953,23 @@ mod tests {
             plan_lookup_ms: 0.02,
             kernel_ms: 0.5,
             reduce_ms: 0.03,
+            imbalance_ms: 0.01,
+            overhead_ms: 0.06,
+            residual_ms: 0.04,
         };
         tuner.observe_staged(fp, arm, 0.6, 1, &stages);
         let d = tuner.dataset();
         assert_eq!(d.len(), 1);
         let row = &d.x[0];
-        assert_eq!(row[row.len() - 3..], [0.02, 0.5, 0.03]);
+        assert_eq!(
+            row[row.len() - 6..],
+            [0.02, 0.5, 0.03, 0.01, 0.06, 0.04]
+        );
         // The unstaged path records zeroed stage columns.
         tuner.observe(fp, arm, 0.6, 1);
         let d = tuner.dataset();
         let row = &d.x[1];
-        assert_eq!(row[row.len() - 3..], [0.0, 0.0, 0.0]);
+        assert_eq!(row[row.len() - 6..], [0.0; 6]);
     }
 
     #[test]

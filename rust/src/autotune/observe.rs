@@ -45,8 +45,16 @@ pub fn feature_names() -> Vec<String> {
         "plan_lookup_ms".into(),
         "kernel_ms".into(),
         "reduce_ms".into(),
+        "imbalance_ms".into(),
+        "overhead_ms".into(),
+        "residual_ms".into(),
     ]
 }
+
+/// Stage columns appended after the base features + (threads, batch,
+/// schedule) triple: three measured stage timings and the scaling
+/// profiler's three gap-attribution components.
+pub const STAGE_COLUMNS: usize = 6;
 
 /// Per-dispatch stage breakdown attached to an observation — the
 /// tracing subsystem's measured decomposition of where a dispatch's
@@ -59,6 +67,15 @@ pub struct StageObs {
     pub kernel_ms: f64,
     /// Post-kernel reduction + telemetry accounting, ms.
     pub reduce_ms: f64,
+    /// Scaling-profiler attribution: busiest-lane minus mean-lane
+    /// kernel time (`obs::scaling`), ms.
+    pub imbalance_ms: f64,
+    /// Dispatch/sync overhead (lookup + partition + reduce + latch
+    /// tail), ms.
+    pub overhead_ms: f64,
+    /// Unattributed gap remainder (model replay: the bandwidth-
+    /// saturation loss), ms.
+    pub residual_ms: f64,
 }
 
 /// Bounded accumulator of supervised observations.
@@ -95,7 +112,7 @@ impl ObservationLog {
             self.dropped += 1;
             return;
         }
-        let mut row = Vec::with_capacity(BASE_FEATURES + 6);
+        let mut row = Vec::with_capacity(BASE_FEATURES + 3 + STAGE_COLUMNS);
         row.extend(features.iter().copied().take(BASE_FEATURES));
         while row.len() < BASE_FEATURES {
             row.push(0.0);
@@ -106,6 +123,9 @@ impl ObservationLog {
         row.push(stages.plan_lookup_ms.max(0.0));
         row.push(stages.kernel_ms.max(0.0));
         row.push(stages.reduce_ms.max(0.0));
+        row.push(stages.imbalance_ms.max(0.0));
+        row.push(stages.overhead_ms.max(0.0));
+        row.push(stages.residual_ms.max(0.0));
         self.data.push(row, per_request_ms);
     }
 
@@ -213,6 +233,9 @@ mod tests {
             plan_lookup_ms: 0.01,
             kernel_ms: 0.2,
             reduce_ms: 0.04,
+            imbalance_ms: 0.03,
+            overhead_ms: 0.05,
+            residual_ms: 0.02,
         };
         log.record(
             &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
@@ -223,15 +246,21 @@ mod tests {
         );
         let d = log.snapshot();
         assert_eq!(d.len(), 2);
-        assert_eq!(d.n_features(), BASE_FEATURES + 6);
+        assert_eq!(d.n_features(), BASE_FEATURES + 3 + STAGE_COLUMNS);
         assert_eq!(d.n_features(), feature_names().len());
         assert_eq!(d.x[0][..BASE_FEATURES], [0.0; BASE_FEATURES]);
         assert_eq!(d.x[1][0], 1.0);
         assert_eq!(d.x[0][BASE_FEATURES], 2.0); // n_threads
         assert_eq!(d.x[0][BASE_FEATURES + 1], 4.0); // batch
         assert_eq!(d.x[0][BASE_FEATURES + 2], 1.0); // csr-balanced
-        assert_eq!(d.x[0][BASE_FEATURES + 3..], [0.0, 0.0, 0.0]);
-        assert_eq!(d.x[1][BASE_FEATURES + 3..], [0.01, 0.2, 0.04]);
+        assert_eq!(
+            d.x[0][BASE_FEATURES + 3..],
+            [0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+        assert_eq!(
+            d.x[1][BASE_FEATURES + 3..],
+            [0.01, 0.2, 0.04, 0.03, 0.05, 0.02]
+        );
         assert_eq!(d.y, vec![0.5, 0.25]);
     }
 

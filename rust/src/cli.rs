@@ -73,6 +73,8 @@ pub enum Command {
         trace_out: Option<String>,
         /// Write the unified metrics snapshot JSON here.
         metrics_out: Option<String>,
+        /// Write the `ft2000.scaling.v1` snapshot JSON here.
+        scaling_out: Option<String>,
     },
     /// Deterministic traffic replay through the serving engine.
     Replay {
@@ -111,6 +113,13 @@ pub enum Command {
         trace_out: Option<String>,
         /// Write the unified metrics snapshot JSON here.
         metrics_out: Option<String>,
+        /// Write the `ft2000.scaling.v1` snapshot JSON here.
+        scaling_out: Option<String>,
+        /// Model-only replay (`--model`): skip kernel execution and
+        /// replay the deterministic queueing model alone — the mode
+        /// the obs-report baseline/current CI gate feeds on, because
+        /// two identical model replays are bit-identical.
+        model: bool,
     },
     /// Structural check sweep: run the invariant verifier over the
     /// corpus, every plan family, the plan cache, and the
@@ -125,6 +134,22 @@ pub enum Command {
         /// Run the happens-before race detector over the lock-free
         /// core (needs the `hbcheck` build feature).
         hb: bool,
+    },
+    /// Diff two `ft2000.scaling.v1` snapshots into counted regression
+    /// findings (efficiency drop, knee shift, stage-share drift,
+    /// queue-wait SLO burn); exit nonzero on any finding.
+    ObsReport {
+        baseline: String,
+        current: String,
+        /// Relative peak-speedup drop tolerance (default 0.10).
+        efficiency_drop: f64,
+        /// Knee shift (threads) tolerance (default 2).
+        knee_shift: usize,
+        /// Gap-share drift tolerance (default 0.10).
+        share_drift: f64,
+        /// Absolute queue-wait p95 SLO in ms; unset derives
+        /// `2 * baseline p95 + 1ms`.
+        queue_p95_ms: Option<f64>,
     },
     /// Print topology/provenance info.
     Info,
@@ -159,7 +184,7 @@ pub enum MatrixSource {
 }
 
 pub fn usage() -> &'static str {
-    "usage: ft2000-spmv <sweep|train|analyze|verify|report|export|serve-bench|replay|check|info> [options]\n\
+    "usage: ft2000-spmv <sweep|train|analyze|verify|report|export|serve-bench|replay|check|obs-report|info> [options]\n\
      \n\
      sweep    --suite tiny|fast|full   corpus scale (default fast)\n\
      \u{20}        --schedule csr|balanced|csr5|dynamic|sell\n\
@@ -183,6 +208,7 @@ pub fn usage() -> &'static str {
      \u{20}        --tune               online plan autotuning (wall clock)\n\
      \u{20}        --trace-out PATH     Chrome trace JSON (enables tracing)\n\
      \u{20}        --metrics-out PATH   unified metrics snapshot JSON\n\
+     \u{20}        --scaling-out PATH   ft2000.scaling.v1 snapshot JSON\n\
      replay   --suite tiny|fast|full   corpus scale (default fast)\n\
      \u{20}        --pattern uniform|zipf|bursty (default zipf)\n\
      \u{20}        --requests N (default 2000)  --matrices N (default 32)\n\
@@ -199,16 +225,25 @@ pub fn usage() -> &'static str {
      \u{20}        --json PATH          dump the report as JSON\n\
      \u{20}        --trace-out PATH     Chrome trace JSON, virtual timeline\n\
      \u{20}        --metrics-out PATH   unified metrics snapshot JSON\n\
+     \u{20}        --scaling-out PATH   ft2000.scaling.v1 snapshot JSON\n\
+     \u{20}        --model              queueing model only (no kernels);\n\
+     \u{20}                             bit-identical across runs\n\
      check    --suite tiny|fast|full   corpus scale (default tiny)\n\
      \u{20}        --matrices N (default 8)  --seed S\n\
      \u{20}        --quick              short interleaving-harness mode\n\
      \u{20}        --hb                 happens-before race detection over\n\
      \u{20}                             the lock-free core (hbcheck build)\n\
+     obs-report --baseline A.json --current B.json  diff two\n\
+     \u{20}        ft2000.scaling.v1 snapshots; exit nonzero on findings\n\
+     \u{20}        --efficiency-drop F (default 0.10)\n\
+     \u{20}        --knee-shift N (default 2)\n\
+     \u{20}        --share-drift F (default 0.10)\n\
+     \u{20}        --queue-p95-ms MS (default 2*baseline p95 + 1 ms)\n\
      info"
 }
 
 /// Flags that take no value (presence toggles).
-const BOOL_FLAGS: &[&str] = &["pool", "spawn", "tune", "quick", "hb"];
+const BOOL_FLAGS: &[&str] = &["pool", "spawn", "tune", "quick", "hb", "model"];
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
@@ -459,6 +494,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             tune: flags.contains_key("tune"),
             trace_out: flags.get("trace-out").cloned(),
             metrics_out: flags.get("metrics-out").cloned(),
+            scaling_out: flags.get("scaling-out").cloned(),
         },
         "replay" => Command::Replay {
             suite: parse_suite(&flags)?,
@@ -486,6 +522,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             tune_state: flags.get("tune-state").cloned(),
             trace_out: flags.get("trace-out").cloned(),
             metrics_out: flags.get("metrics-out").cloned(),
+            scaling_out: flags.get("scaling-out").cloned(),
+            model: flags.contains_key("model"),
         },
         "check" => Command::Check {
             // The sweep's default scale is `tiny`: every structural
@@ -504,6 +542,24 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 .unwrap_or(0xC8EC_2019),
             quick: flags.contains_key("quick"),
             hb: flags.contains_key("hb"),
+        },
+        "obs-report" => Command::ObsReport {
+            baseline: flags
+                .get("baseline")
+                .cloned()
+                .ok_or_else(|| anyhow!("obs-report needs --baseline PATH"))?,
+            current: flags
+                .get("current")
+                .cloned()
+                .ok_or_else(|| anyhow!("obs-report needs --current PATH"))?,
+            efficiency_drop: parse_f64(&flags, "efficiency-drop", 0.10)?,
+            knee_shift: parse_usize(&flags, "knee-shift", 2)?,
+            share_drift: parse_f64(&flags, "share-drift", 0.10)?,
+            queue_p95_ms: flags
+                .get("queue-p95-ms")
+                .map(|s| s.parse())
+                .transpose()
+                .map_err(|_| anyhow!("bad --queue-p95-ms"))?,
         },
         "info" => Command::Info,
         other => bail!("unknown command '{other}'\n{}", usage()),
@@ -897,6 +953,116 @@ mod tests {
             _ => panic!("wrong command"),
         }
         assert!(parse(&sv(&["check", "--matrices", "x"])).is_err());
+    }
+
+    #[test]
+    fn parses_obs_report() {
+        let cli = parse(&sv(&[
+            "obs-report",
+            "--baseline",
+            "/tmp/a.json",
+            "--current",
+            "/tmp/b.json",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::ObsReport {
+                baseline,
+                current,
+                efficiency_drop,
+                knee_shift,
+                share_drift,
+                queue_p95_ms,
+            } => {
+                assert_eq!(baseline, "/tmp/a.json");
+                assert_eq!(current, "/tmp/b.json");
+                assert!((efficiency_drop - 0.10).abs() < 1e-12);
+                assert_eq!(knee_shift, 2);
+                assert!((share_drift - 0.10).abs() < 1e-12);
+                assert!(queue_p95_ms.is_none(), "SLO derives from baseline");
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "obs-report",
+            "--baseline",
+            "a",
+            "--current",
+            "b",
+            "--efficiency-drop",
+            "0.2",
+            "--knee-shift",
+            "4",
+            "--share-drift",
+            "0.05",
+            "--queue-p95-ms",
+            "1.5",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::ObsReport {
+                efficiency_drop,
+                knee_shift,
+                share_drift,
+                queue_p95_ms,
+                ..
+            } => {
+                assert!((efficiency_drop - 0.2).abs() < 1e-12);
+                assert_eq!(knee_shift, 4);
+                assert!((share_drift - 0.05).abs() < 1e-12);
+                assert_eq!(queue_p95_ms, Some(1.5));
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse(&sv(&["obs-report"])).is_err(), "paths are required");
+        assert!(
+            parse(&sv(&["obs-report", "--baseline", "a"])).is_err(),
+            "--current is required"
+        );
+    }
+
+    #[test]
+    fn parses_scaling_flags() {
+        let cli = parse(&sv(&["replay"])).unwrap();
+        match cli.command {
+            Command::Replay { scaling_out, model, .. } => {
+                assert!(scaling_out.is_none());
+                assert!(!model, "kernels execute by default");
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "replay",
+            "--model",
+            "--scaling-out",
+            "/tmp/scaling.json",
+            "--requests",
+            "25",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Replay { scaling_out, model, requests, .. } => {
+                assert!(model);
+                assert_eq!(scaling_out.as_deref(), Some("/tmp/scaling.json"));
+                assert_eq!(requests, 25, "value flags parse after --model");
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "serve-bench",
+            "--scaling-out",
+            "/tmp/sb-scaling.json",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::ServeBench { scaling_out, .. } => {
+                assert_eq!(
+                    scaling_out.as_deref(),
+                    Some("/tmp/sb-scaling.json")
+                );
+            }
+            _ => panic!("wrong command"),
+        }
     }
 
     #[test]

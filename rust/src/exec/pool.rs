@@ -269,6 +269,24 @@ impl ExecPool {
             .collect()
     }
 
+    /// Write each lane's cumulative busy nanoseconds into the head of
+    /// `out`, returning how many lanes were written
+    /// (`min(lanes, out.len())`). Alloc-free on purpose — the scaling
+    /// profiler snapshots this into a stack buffer around every
+    /// dispatch to derive per-batch lane deltas, where
+    /// [`ExecPool::worker_tallies`]'s `Vec` would break the zero-alloc
+    /// steady-state contract.
+    pub fn fill_busy_ns(&self, out: &mut [u64]) -> usize {
+        let n = self.shared.tallies.len().min(out.len());
+        for (slot, t) in out[..n].iter_mut().zip(self.shared.tallies.iter()) {
+            // ord: Relaxed load — monotone tally snapshot; the
+            // dispatcher reads its own job's contribution after the
+            // latch join, which already orders the workers' adds.
+            *slot = t.busy_ns.load(Ordering::Relaxed);
+        }
+        n
+    }
+
     /// Seconds since the pool was built (busy-share denominator).
     pub fn uptime_s(&self) -> f64 {
         self.started.elapsed().as_secs_f64()

@@ -67,9 +67,11 @@ fn run(cli: Cli) -> Result<()> {
             tune,
             trace_out,
             metrics_out,
+            scaling_out,
         } => serve_bench(
             suite, matrices, batches, workers, shards, queue_cap, policy,
             pooled, plan_cache_cap, tune, trace_out, metrics_out,
+            scaling_out,
         ),
         Command::Replay {
             suite,
@@ -92,6 +94,8 @@ fn run(cli: Cli) -> Result<()> {
             tune_state,
             trace_out,
             metrics_out,
+            scaling_out,
+            model,
         } => replay_cmd(ReplayCmd {
             suite,
             pattern,
@@ -113,10 +117,27 @@ fn run(cli: Cli) -> Result<()> {
             tune_state,
             trace_out,
             metrics_out,
+            scaling_out,
+            model,
         }),
         Command::Check { suite, matrices, seed, quick, hb } => {
             check_cmd(suite, matrices, seed, quick, hb)
         }
+        Command::ObsReport {
+            baseline,
+            current,
+            efficiency_drop,
+            knee_shift,
+            share_drift,
+            queue_p95_ms,
+        } => obs_report_cmd(
+            &baseline,
+            &current,
+            efficiency_drop,
+            knee_shift,
+            share_drift,
+            queue_p95_ms,
+        ),
         Command::Info => info(),
     }
 }
@@ -306,6 +327,61 @@ fn run_hb(
     )
 }
 
+/// `ft2000-spmv obs-report` — diff two `ft2000.scaling.v1` snapshots
+/// (baseline vs current) into counted regression findings and exit
+/// nonzero on any, so CI can gate scalability the way `check` gates
+/// structure.
+fn obs_report_cmd(
+    baseline: &str,
+    current: &str,
+    efficiency_drop: f64,
+    knee_shift: usize,
+    share_drift: f64,
+    queue_p95_ms: Option<f64>,
+) -> Result<()> {
+    use ft2000_spmv::obs::scaling::{compare, CompareThresholds};
+    let read = |path: &str| -> Result<ft2000_spmv::util::json::Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        ft2000_spmv::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+    };
+    let base = read(baseline)?;
+    let cur = read(current)?;
+    let th = CompareThresholds {
+        efficiency_drop,
+        knee_shift,
+        share_drift,
+        queue_p95_ms,
+    };
+    let report = compare(&base, &cur, &th);
+    if report.is_clean() {
+        println!(
+            "obs-report: clean — {} scalability invariants hold \
+             ({baseline} -> {current})",
+            report.checked
+        );
+        return Ok(());
+    }
+    let mut t = Table::new(
+        format!("Scalability regressions ({})", report.findings.len()),
+        &["subject", "invariant", "detail"],
+    );
+    for f in &report.findings {
+        t.row(vec![
+            f.subject.clone(),
+            f.invariant.to_string(),
+            f.detail.clone(),
+        ]);
+    }
+    t.print();
+    anyhow::bail!(
+        "{} finding(s) across {} checked invariants",
+        report.findings.len(),
+        report.checked
+    )
+}
+
 /// Wall-clock tuning config of the live `serve-bench --tune` path.
 fn live_tune_config() -> AutotuneConfig {
     AutotuneConfig::default()
@@ -325,6 +401,7 @@ fn serve_bench(
     tune: bool,
     trace_out: Option<String>,
     metrics_out: Option<String>,
+    scaling_out: Option<String>,
 ) -> Result<()> {
     eprintln!("registering {matrices} corpus matrices...");
     let plan_cfg =
@@ -509,6 +586,11 @@ fn serve_bench(
             std::fs::write(path, engine.metrics_snapshot().to_string())?;
             eprintln!("wrote {path}");
         }
+        engine.scaling().table().print();
+        if let Some(path) = &scaling_out {
+            std::fs::write(path, engine.scaling_snapshot().to_string())?;
+            eprintln!("wrote {path}");
+        }
         eprintln!("served {served} requests in {wall:.3}s");
     } else {
         // Sharded path: one shard per modeled panel, matrices placed
@@ -587,6 +669,10 @@ fn serve_bench(
             )?;
             eprintln!("wrote {path}");
         }
+        if let Some(path) = &scaling_out {
+            std::fs::write(path, server.scaling_snapshot().to_string())?;
+            eprintln!("wrote {path}");
+        }
         eprintln!(
             "served {served} requests in {wall:.3}s \
              ({} rejected, {} errors)",
@@ -619,6 +705,8 @@ struct ReplayCmd {
     tune_state: Option<String>,
     trace_out: Option<String>,
     metrics_out: Option<String>,
+    scaling_out: Option<String>,
+    model: bool,
 }
 
 /// Virtual-clock tuning config of the `replay --tune` path: the cost
@@ -681,6 +769,7 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
     let rcfg = ReplayConfig {
         max_batch: cmd.max_batch,
         queue_cap: cmd.queue_cap,
+        execute: !cmd.model,
         pooled: cmd.pooled,
         tune: if cmd.tune && cmd.shards > 1 {
             Some(replay_tune_config(&cmd))
@@ -696,11 +785,12 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
     };
     eprintln!(
         "replaying {requests} requests ({arrivals:?}, {popularity:?}, \
-         seed {:#x}, {} shard(s), {} dispatch{})...",
+         seed {:#x}, {} shard(s), {} dispatch{}{})...",
         cmd.seed,
         cmd.shards,
         if cmd.pooled { "pool" } else { "spawn" },
-        if cmd.tune { ", tuned" } else { "" }
+        if cmd.tune { ", tuned" } else { "" },
+        if cmd.model { ", model only" } else { "" }
     );
     if cmd.shards > 1 {
         if cmd.tune_state.is_some() {
@@ -731,6 +821,10 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
         }
         if let Some(path) = &cmd.metrics_out {
             std::fs::write(path, report.metrics_json().to_string())?;
+            eprintln!("wrote {path}");
+        }
+        if let Some(path) = &cmd.scaling_out {
+            std::fs::write(path, report.scaling.to_string())?;
             eprintln!("wrote {path}");
         }
         return Ok(());
@@ -812,6 +906,11 @@ fn replay_cmd(cmd: ReplayCmd) -> Result<()> {
     }
     if let Some(path) = &cmd.metrics_out {
         std::fs::write(path, engine.metrics_snapshot().to_string())?;
+        eprintln!("wrote {path}");
+    }
+    engine.scaling().table().print();
+    if let Some(path) = &cmd.scaling_out {
+        std::fs::write(path, engine.scaling_snapshot().to_string())?;
         eprintln!("wrote {path}");
     }
     Ok(())

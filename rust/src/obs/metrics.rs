@@ -154,7 +154,9 @@ impl Histogram {
     /// estimate next to telemetry's P² digests.
     pub fn percentile(&self, p: f64) -> f64 {
         let n = self.count();
-        if n == 0 {
+        // Empty population and junk `p` both answer 0 (a NaN `p`
+        // would otherwise flow through clamp and silently act as p0).
+        if n == 0 || !p.is_finite() {
             return 0.0;
         }
         let target = (p.clamp(0.0, 100.0) / 100.0 * n as f64).max(1.0);
@@ -347,6 +349,54 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert!(h.percentile(0.0) >= 0.0);
         assert!(h.percentile(100.0).is_finite());
+    }
+
+    #[test]
+    fn histogram_empty_population_answers_zero_everywhere() {
+        let h = Histogram::default();
+        for p in [0.0, 50.0, 95.0, 100.0, -3.0, 400.0] {
+            assert_eq!(h.percentile(p), 0.0);
+        }
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.percentile(f64::NAN), 0.0);
+        assert_eq!(h.percentile(f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn histogram_single_sample_stays_in_its_bucket() {
+        let h = Histogram::default();
+        h.observe(0.5); // bucket [0.256, 0.512) ms
+        for p in [0.0, 50.0, 100.0] {
+            let v = h.percentile(p);
+            assert!(
+                (0.256..=0.512).contains(&v),
+                "p{p} = {v} escaped the sample's bucket"
+            );
+        }
+        // A junk percentile on a warm histogram still answers 0, not
+        // a panic or an arbitrary bucket.
+        assert_eq!(h.percentile(f64::NAN), 0.0);
+    }
+
+    #[test]
+    fn histogram_clock_granularity_durations_bucket_low() {
+        // Zero and sub-microsecond durations (clock granularity) land
+        // in bucket 0; negatives and NaN are dropped, never bucketed.
+        let h = Histogram::default();
+        h.observe(0.0);
+        h.observe(1e-9);
+        h.observe(Histogram::BASE_MS);
+        assert_eq!(h.count(), 3);
+        let p100 = h.percentile(100.0);
+        assert!(
+            p100 <= 2.0 * Histogram::BASE_MS,
+            "p100 {p100} escaped bucket 0"
+        );
+        h.observe(-0.0);
+        assert_eq!(h.count(), 4, "-0.0 is a valid zero duration");
+        h.observe(-1e-9);
+        h.observe(f64::NEG_INFINITY);
+        assert_eq!(h.count(), 4);
     }
 
     #[test]

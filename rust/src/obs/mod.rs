@@ -17,7 +17,13 @@
 //!   schema that unifies today's scattered surfaces (`ServeStats`,
 //!   shard tables, `PlanCache` hit/evict counters, `ExecPool` worker
 //!   occupancy, autotune arm stats) — see
-//!   `ServeEngine::metrics_snapshot`.
+//!   `ServeEngine::metrics_snapshot`;
+//! * [`scaling::ScalingProfiler`] — the always-on scalability
+//!   attribution layer on top of both: per-batch decomposition of the
+//!   gap to linear speedup (load imbalance / dispatch+sync overhead /
+//!   memory-bound residual), per-fingerprint efficiency curves with
+//!   knee detection, the `ft2000.scaling.v1` snapshot, and the
+//!   baseline/compare regression gate behind `ft2000-spmv obs-report`.
 //!
 //! Tracing is off by default ([`TraceConfig`]); when off, the serve
 //! path pays one branch per would-be span. When on, recording is a
@@ -26,9 +32,14 @@
 //! enabled, and the `obs` bench section gates overhead at <= 2%.
 
 pub mod metrics;
+pub mod scaling;
 pub mod trace;
 
 pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use scaling::{
+    CompareThresholds, GapComponents, GapTotals, QueueWaitSummary,
+    ScalingProfiler,
+};
 pub use trace::{chrome_document, ClockMode, TraceRecorder};
 
 /// The serve-path stages a span can be tagged with. Every stage a

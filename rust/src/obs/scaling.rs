@@ -1,0 +1,885 @@
+//! Online scalability attribution — the layer that turns the span
+//! rings and worker tallies of PR 6 into live scalability *diagnosis*.
+//!
+//! The paper's central question is why an SpMV kernel stops scaling on
+//! FT-2000+. Offline it answers with a regression tree over matrix
+//! features; the serving engine can do better, because for every
+//! executed batch it already holds the raw signal: per-lane kernel
+//! busy time ([`crate::exec::ExecPool`] worker tallies), the
+//! engine-measured dispatch stages (plan lookup, partition, reduce,
+//! autotune observe), and the kernel wall clock. This module
+//! decomposes the gap between ideal linear speedup and what the batch
+//! actually achieved into counted components:
+//!
+//! * **load imbalance** — the busiest lane ran longer than the mean
+//!   lane (`max - work/threads`): ragged row partitions, the paper's
+//!   `job_var` factor made visible per batch;
+//! * **dispatch/sync overhead** — time outside useful kernel work:
+//!   plan lookup + partition + reduce + autotune-observe on the
+//!   dispatcher, plus the latch tail (`wall - max_lane`) where every
+//!   lane waited for the join;
+//! * **memory-bound residual** — the remainder of the gap. On the
+//!   replay cost model this is exactly the bandwidth-saturation loss
+//!   (`eff = min(threads, sat_threads)` in
+//!   [`crate::service::CostModel`]); on live measurements memory
+//!   stalls inflate each lane's busy time instead, so the per-batch
+//!   residual stays near zero and the bandwidth ceiling surfaces as
+//!   the *efficiency curve* flattening — the paper's speedup plateau.
+//!
+//! Components are aggregated per matrix fingerprint into online
+//! efficiency curves (effective threads → speedup estimate, where
+//! speedup = serial-equivalent work / kernel wall) with knee detection
+//! mirroring the autotune ladder's plateau hunt
+//! ([`crate::autotune::ladder::knee_index`]): the fewest threads whose
+//! speedup is within tolerance of the best observed.
+//!
+//! The profiler is always on and allocation-free in steady state: the
+//! per-batch record path is a mutex + BTreeMap probe + float adds
+//! (`tests/alloc.rs` pins it), with map nodes allocated only the first
+//! time a (fingerprint, thread-count) pair is seen — the same warmup
+//! discipline as serving telemetry. Snapshots export under the
+//! versioned `ft2000.scaling.v1` schema; [`compare`] diffs two
+//! snapshots into counted [`CheckReport`] findings (efficiency drop,
+//! knee shift, stage-share drift, queue-wait SLO burn) for the
+//! `ft2000-spmv obs-report` CI gate.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::check::{CheckReport, Finding};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Fixed bound on the per-dispatch lane-snapshot buffers the serve
+/// path keeps on its stack (dispatcher lane + up to 64 workers — the
+/// FT-2000+ has 64 cores). Pools wider than this degrade gracefully:
+/// extra lanes are simply not attributed.
+pub const MAX_LANES: usize = 65;
+
+/// Plateau tolerance for knee detection — mirrors the autotune
+/// ladder's default (`AutotuneConfig::knee_tol`): the knee is the
+/// fewest effective threads whose speedup is within 5% of the best.
+pub const KNEE_TOL: f64 = 0.05;
+
+/// One batch's decomposition of the gap to ideal linear speedup.
+/// Constructed by [`GapComponents::from_parts`] so the accounting
+/// identity `gap = imbalance + overhead + residual` holds exactly by
+/// construction (pinned by test on the deterministic replay).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GapComponents {
+    /// Serial-equivalent useful work: sum of lane kernel busy time
+    /// (live) or the cost model's serial kernel term (replay).
+    pub work_s: f64,
+    /// Kernel wall time (the parallel region).
+    pub kernel_s: f64,
+    /// What the batch actually cost: kernel wall + dispatch overhead.
+    pub observed_s: f64,
+    /// `work_s / threads` — the linear-speedup target.
+    pub ideal_s: f64,
+    /// `observed_s - ideal_s`, split exactly into the three below.
+    pub gap_s: f64,
+    /// Busiest lane minus mean lane kernel time.
+    pub imbalance_s: f64,
+    /// Dispatch stages outside the kernel + the latch tail inside it.
+    pub overhead_s: f64,
+    /// The unattributed remainder (model: bandwidth saturation).
+    pub residual_s: f64,
+    /// Effective parallel speedup estimate: `work_s / kernel_s`.
+    pub speedup: f64,
+    /// Whether per-lane tallies backed this sample (false for
+    /// spawn-mode engines, where work degrades to the wall clock and
+    /// the speedup estimate to 1).
+    pub lane_data: bool,
+}
+
+impl GapComponents {
+    /// Assemble the decomposition from its measured (or modeled)
+    /// parts. `dispatch_s` is stage time outside the kernel wall;
+    /// `latch_s` is join-wait inside it. The residual absorbs what
+    /// imbalance and overhead do not explain, so the components always
+    /// sum to the gap.
+    pub fn from_parts(
+        threads: usize,
+        work_s: f64,
+        kernel_s: f64,
+        dispatch_s: f64,
+        imbalance_s: f64,
+        latch_s: f64,
+        lane_data: bool,
+    ) -> GapComponents {
+        let th = threads.max(1) as f64;
+        let observed_s = kernel_s + dispatch_s;
+        let ideal_s = work_s / th;
+        let gap_s = observed_s - ideal_s;
+        let overhead_s = dispatch_s + latch_s;
+        let residual_s = gap_s - imbalance_s - overhead_s;
+        let speedup = if kernel_s > 0.0 { work_s / kernel_s } else { th };
+        GapComponents {
+            work_s,
+            kernel_s,
+            observed_s,
+            ideal_s,
+            gap_s,
+            imbalance_s,
+            overhead_s,
+            residual_s,
+            speedup,
+            lane_data,
+        }
+    }
+
+    /// Decomposition for a live pooled dispatch from the per-lane
+    /// busy-time deltas around the kernel. Without lane data (spawn
+    /// mode) the work estimate degrades to the wall clock: imbalance
+    /// and latch are unobservable and the gap is all dispatch
+    /// overhead.
+    pub fn from_executed(
+        threads: usize,
+        kernel_s: f64,
+        busy_max_s: f64,
+        busy_sum_s: f64,
+        dispatch_s: f64,
+        lane_data: bool,
+    ) -> GapComponents {
+        if !lane_data || busy_sum_s <= 0.0 {
+            return Self::from_parts(
+                threads, kernel_s, kernel_s, dispatch_s, 0.0, 0.0, false,
+            );
+        }
+        let mean_s = busy_sum_s / threads.max(1) as f64;
+        let imbalance_s = (busy_max_s - mean_s).max(0.0);
+        let latch_s = (kernel_s - busy_max_s).max(0.0);
+        Self::from_parts(
+            threads,
+            busy_sum_s,
+            kernel_s,
+            dispatch_s,
+            imbalance_s,
+            latch_s,
+            true,
+        )
+    }
+
+    /// Fold post-hoc dispatcher time (e.g. the autotune-observe stage,
+    /// measured after the tuner consumed this batch's attribution)
+    /// into the overhead component. Observed, gap, and overhead all
+    /// grow by `extra_s`; the residual is untouched, so the accounting
+    /// identity survives.
+    pub fn with_extra_overhead(mut self, extra_s: f64) -> GapComponents {
+        let extra_s = extra_s.max(0.0);
+        self.observed_s += extra_s;
+        self.gap_s += extra_s;
+        self.overhead_s += extra_s;
+        self
+    }
+}
+
+/// Aggregated component sums — one per matrix plus one grand total.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GapTotals {
+    pub batches: u64,
+    pub requests: u64,
+    pub work_s: f64,
+    pub kernel_s: f64,
+    pub observed_s: f64,
+    pub ideal_s: f64,
+    pub gap_s: f64,
+    pub imbalance_s: f64,
+    pub overhead_s: f64,
+    pub residual_s: f64,
+}
+
+impl GapTotals {
+    fn add(&mut self, batch: usize, c: &GapComponents) {
+        self.batches += 1;
+        self.requests += batch as u64;
+        self.work_s += c.work_s;
+        self.kernel_s += c.kernel_s;
+        self.observed_s += c.observed_s;
+        self.ideal_s += c.ideal_s;
+        self.gap_s += c.gap_s;
+        self.imbalance_s += c.imbalance_s;
+        self.overhead_s += c.overhead_s;
+        self.residual_s += c.residual_s;
+    }
+
+    fn merge(&mut self, o: &GapTotals) {
+        self.batches += o.batches;
+        self.requests += o.requests;
+        self.work_s += o.work_s;
+        self.kernel_s += o.kernel_s;
+        self.observed_s += o.observed_s;
+        self.ideal_s += o.ideal_s;
+        self.gap_s += o.gap_s;
+        self.imbalance_s += o.imbalance_s;
+        self.overhead_s += o.overhead_s;
+        self.residual_s += o.residual_s;
+    }
+
+    /// Share of the gap each component explains, clamped to [0, 1]
+    /// (zero when there is no gap to attribute).
+    pub fn shares(&self) -> (f64, f64, f64) {
+        if self.gap_s <= 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        let share = |c: f64| (c / self.gap_s).clamp(0.0, 1.0);
+        (
+            share(self.imbalance_s),
+            share(self.overhead_s),
+            share(self.residual_s),
+        )
+    }
+
+    fn to_json(self) -> Json {
+        let (imb, ovh, res) = self.shares();
+        Json::Obj(
+            [
+                ("batches", self.batches as f64),
+                ("requests", self.requests as f64),
+                ("work_s", self.work_s),
+                ("kernel_s", self.kernel_s),
+                ("observed_s", self.observed_s),
+                ("ideal_s", self.ideal_s),
+                ("gap_s", self.gap_s),
+                ("imbalance_s", self.imbalance_s),
+                ("overhead_s", self.overhead_s),
+                ("residual_s", self.residual_s),
+                ("imbalance_share", imb),
+                ("overhead_share", ovh),
+                ("residual_share", res),
+            ]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(v)))
+            .collect(),
+        )
+    }
+}
+
+/// One point of a matrix's efficiency curve: all batches that ran at
+/// this effective thread count.
+#[derive(Clone, Copy, Debug, Default)]
+struct CurveCell {
+    batches: u64,
+    work_s: f64,
+    kernel_s: f64,
+}
+
+impl CurveCell {
+    fn speedup(&self) -> f64 {
+        if self.kernel_s > 0.0 {
+            self.work_s / self.kernel_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[derive(Default)]
+struct MatAgg {
+    totals: GapTotals,
+    /// effective threads -> accumulated curve point.
+    curve: BTreeMap<usize, CurveCell>,
+}
+
+impl MatAgg {
+    /// The speedup-plateau knee: the fewest effective threads whose
+    /// mean speedup is within `tol` of the best bucket — the same
+    /// fewest-resources-on-the-plateau hunt as
+    /// [`crate::autotune::ladder::knee_index`], over measured curves
+    /// instead of ladder arms.
+    fn knee_threads(&self, tol: f64) -> Option<usize> {
+        let best = self
+            .curve
+            .values()
+            .map(CurveCell::speedup)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !best.is_finite() || best <= 0.0 {
+            return None;
+        }
+        self.curve
+            .iter()
+            .find(|(_, c)| c.speedup() >= best * (1.0 - tol))
+            .map(|(&th, _)| th)
+    }
+}
+
+#[derive(Default)]
+struct ProfilerState {
+    total: GapTotals,
+    by_matrix: BTreeMap<u64, MatAgg>,
+}
+
+/// Queue-wait summary the engine folds into the scalability snapshot
+/// (the obs-report SLO-burn gate reads it): serving telemetry owns the
+/// digest, this is the flattened view.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueWaitSummary {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub mean_ms: f64,
+    pub count: u64,
+}
+
+/// The always-on scalability profiler one [`crate::service::ServeEngine`]
+/// carries. Interior-mutable (one mutex) so the dispatch path records
+/// through `&self`; see the module docs for the accounting model.
+pub struct ScalingProfiler {
+    enabled: bool,
+    inner: Mutex<ProfilerState>,
+}
+
+impl Default for ScalingProfiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScalingProfiler {
+    pub fn new() -> ScalingProfiler {
+        ScalingProfiler {
+            enabled: true,
+            inner: Mutex::new(ProfilerState::default()),
+        }
+    }
+
+    /// Flip attribution off (A/B baselines in the obs bench section).
+    /// Serving engines leave it on — the point of the profiler is that
+    /// scalability data is always being collected.
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ProfilerState> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Record one batch's decomposition. Alloc-free once this
+    /// (fingerprint, threads) pair has been seen (steady state); the
+    /// first sighting allocates the map nodes, like telemetry warmup.
+    pub fn record(
+        &self,
+        fingerprint: u64,
+        threads: usize,
+        batch: usize,
+        c: &GapComponents,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let mut st = self.lock();
+        st.total.add(batch, c);
+        let mat = st.by_matrix.entry(fingerprint).or_default();
+        mat.totals.add(batch, c);
+        let cell = mat.curve.entry(threads.max(1)).or_default();
+        cell.batches += 1;
+        cell.work_s += c.work_s;
+        cell.kernel_s += c.kernel_s;
+    }
+
+    /// Batches attributed so far (all matrices).
+    pub fn batches(&self) -> u64 {
+        self.lock().total.batches
+    }
+
+    /// Grand-total component sums.
+    pub fn totals(&self) -> GapTotals {
+        self.lock().total
+    }
+
+    /// Fold another profiler's aggregates into this one — the sharded
+    /// roll-up ([`crate::service::ShardedServer`] merges its per-shard
+    /// engines' profilers into one snapshot).
+    pub fn merge_from(&self, other: &ScalingProfiler) {
+        let o = other.lock();
+        let mut st = self.lock();
+        st.total.merge(&o.total);
+        for (fp, mat) in &o.by_matrix {
+            let dst = st.by_matrix.entry(*fp).or_default();
+            dst.totals.merge(&mat.totals);
+            for (th, cell) in &mat.curve {
+                let d = dst.curve.entry(*th).or_default();
+                d.batches += cell.batches;
+                d.work_s += cell.work_s;
+                d.kernel_s += cell.kernel_s;
+            }
+        }
+    }
+
+    /// The versioned `ft2000.scaling.v1` snapshot. Documented keys
+    /// (golden-pinned by `tests/obs.rs`):
+    ///
+    /// * `schema`, `batches`
+    /// * `gap` — grand-total [`GapTotals`] fields + `*_share`s
+    /// * `queue_wait_ms` — `p50_ms`/`p95_ms`/`mean_ms`/`count`
+    /// * `matrices[]` — `fingerprint` (hex), per-matrix `gap` object,
+    ///   `efficiency[]` curve (`threads`/`batches`/`speedup`/
+    ///   `efficiency`), `knee_threads` (null until measurable)
+    pub fn snapshot(&self, qw: &QueueWaitSummary) -> Json {
+        let st = self.lock();
+        let mut mats = Vec::new();
+        for (fp, mat) in &st.by_matrix {
+            let curve: Vec<Json> = mat
+                .curve
+                .iter()
+                .map(|(&th, cell)| {
+                    let sp = cell.speedup();
+                    Json::Obj(
+                        [
+                            ("threads", th as f64),
+                            ("batches", cell.batches as f64),
+                            ("speedup", sp),
+                            ("efficiency", sp / th.max(1) as f64),
+                        ]
+                        .into_iter()
+                        .map(|(k, v)| (k.to_string(), Json::Num(v)))
+                        .collect(),
+                    )
+                })
+                .collect();
+            let mut obj = BTreeMap::new();
+            obj.insert(
+                "fingerprint".to_string(),
+                Json::Str(format!("{fp:016x}")),
+            );
+            obj.insert("gap".to_string(), mat.totals.to_json());
+            obj.insert("efficiency".to_string(), Json::Arr(curve));
+            obj.insert(
+                "knee_threads".to_string(),
+                mat.knee_threads(KNEE_TOL)
+                    .map_or(Json::Null, |k| Json::Num(k as f64)),
+            );
+            mats.push(Json::Obj(obj));
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "schema".to_string(),
+            Json::Str("ft2000.scaling.v1".to_string()),
+        );
+        obj.insert("batches".to_string(), Json::Num(st.total.batches as f64));
+        obj.insert("gap".to_string(), st.total.to_json());
+        obj.insert(
+            "queue_wait_ms".to_string(),
+            Json::Obj(
+                [
+                    ("p50_ms", qw.p50_ms),
+                    ("p95_ms", qw.p95_ms),
+                    ("mean_ms", qw.mean_ms),
+                    ("count", qw.count as f64),
+                ]
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(v)))
+                .collect(),
+            ),
+        );
+        obj.insert("matrices".to_string(), Json::Arr(mats));
+        Json::Obj(obj)
+    }
+
+    /// The rendered attribution table: one row per matrix, the knee,
+    /// speedup at the knee, and where the gap went.
+    pub fn table(&self) -> Table {
+        let st = self.lock();
+        let mut t = Table::new(
+            "scalability attribution (gap to linear speedup)",
+            &[
+                "fingerprint",
+                "batches",
+                "knee",
+                "speedup@knee",
+                "gap ms",
+                "imbalance",
+                "overhead",
+                "residual",
+            ],
+        );
+        let pct = |x: f64| format!("{:.1}%", x * 100.0);
+        for (fp, mat) in &st.by_matrix {
+            let knee = mat.knee_threads(KNEE_TOL);
+            let sp = knee
+                .and_then(|k| mat.curve.get(&k))
+                .map_or(0.0, CurveCell::speedup);
+            let (imb, ovh, res) = mat.totals.shares();
+            t.row(vec![
+                format!("{fp:016x}"),
+                mat.totals.batches.to_string(),
+                knee.map_or("-".to_string(), |k| k.to_string()),
+                format!("{sp:.2}"),
+                format!("{:.3}", mat.totals.gap_s * 1e3),
+                pct(imb),
+                pct(ovh),
+                pct(res),
+            ]);
+        }
+        t
+    }
+}
+
+/// Thresholds for [`compare`] — the obs-report regression gate.
+#[derive(Clone, Copy, Debug)]
+pub struct CompareThresholds {
+    /// Relative per-matrix peak-speedup drop that counts as an
+    /// efficiency regression (0.10 = 10%).
+    pub efficiency_drop: f64,
+    /// Knee shift (in threads, either direction) that counts as a
+    /// scalability-shape regression.
+    pub knee_shift: usize,
+    /// Absolute drift in a gap component's share of the total gap.
+    pub share_drift: f64,
+    /// Absolute queue-wait p95 SLO in ms. `None` derives a burn
+    /// threshold from the baseline: `2 * baseline_p95 + 1ms`.
+    pub queue_p95_ms: Option<f64>,
+}
+
+impl Default for CompareThresholds {
+    fn default() -> Self {
+        CompareThresholds {
+            efficiency_drop: 0.10,
+            knee_shift: 2,
+            share_drift: 0.10,
+            queue_p95_ms: None,
+        }
+    }
+}
+
+fn num(doc: &Json, path: &[&str]) -> Option<f64> {
+    let mut cur = doc;
+    for k in path {
+        cur = cur.get(k)?;
+    }
+    cur.as_f64()
+}
+
+fn check(
+    report: &mut CheckReport,
+    ok: bool,
+    subject: String,
+    invariant: &'static str,
+    detail: impl FnOnce() -> String,
+) {
+    report.checked += 1;
+    if !ok {
+        report.findings.push(Finding {
+            subject,
+            invariant,
+            detail: detail(),
+        });
+    }
+}
+
+/// Diff two `ft2000.scaling.v1` snapshots into counted regression
+/// findings. Identical documents always compare clean; every finding
+/// names the matrix (or the global surface) it fired on. The four
+/// finding families are the ones a scalability SLO cares about:
+/// peak-efficiency drop, knee shift, gap-composition drift, and
+/// queue-wait SLO burn.
+pub fn compare(
+    baseline: &Json,
+    current: &Json,
+    th: &CompareThresholds,
+) -> CheckReport {
+    let mut report = CheckReport::new();
+    for (name, doc) in [("baseline", baseline), ("current", current)] {
+        check(
+            &mut report,
+            doc.get("schema").and_then(Json::as_str)
+                == Some("ft2000.scaling.v1"),
+            name.to_string(),
+            "scaling-schema",
+            || {
+                format!(
+                    "expected schema ft2000.scaling.v1, got {:?}",
+                    doc.get("schema")
+                )
+            },
+        );
+    }
+    if !report.is_clean() {
+        return report;
+    }
+
+    // Index both matrix lists by fingerprint.
+    let index = |doc: &Json| -> BTreeMap<String, Json> {
+        doc.get("matrices")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|m| {
+                        let fp = m.get("fingerprint")?.as_str()?.to_string();
+                        Some((fp, m.clone()))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let base_mats = index(baseline);
+    let cur_mats = index(current);
+
+    for (fp, b) in &base_mats {
+        let Some(c) = cur_mats.get(fp) else {
+            // A matrix disappearing from the snapshot is a coverage
+            // change, not a scalability regression — skip silently
+            // (replays over different corpora are comparable on the
+            // shared part).
+            continue;
+        };
+        // Peak speedup across the efficiency curve.
+        let peak = |m: &Json| -> f64 {
+            m.get("efficiency")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|p| num(p, &["speedup"]))
+                        .fold(0.0, f64::max)
+                })
+                .unwrap_or(0.0)
+        };
+        let (pb, pc) = (peak(b), peak(c));
+        check(
+            &mut report,
+            pb <= 0.0 || pc >= pb * (1.0 - th.efficiency_drop),
+            format!("matrix {fp}"),
+            "efficiency-drop",
+            || {
+                format!(
+                    "peak speedup fell {pb:.3} -> {pc:.3} \
+                     (> {:.0}% drop)",
+                    th.efficiency_drop * 100.0
+                )
+            },
+        );
+        let knee = |m: &Json| num(m, &["knee_threads"]);
+        if let (Some(kb), Some(kc)) = (knee(b), knee(c)) {
+            let shift = (kb - kc).abs();
+            check(
+                &mut report,
+                shift < th.knee_shift as f64,
+                format!("matrix {fp}"),
+                "knee-shift",
+                || {
+                    format!(
+                        "speedup knee moved {kb:.0} -> {kc:.0} threads \
+                         (>= {} shift)",
+                        th.knee_shift
+                    )
+                },
+            );
+        }
+    }
+
+    // Gap-composition drift on the grand total.
+    for share in ["imbalance_share", "overhead_share", "residual_share"] {
+        let (sb, sc) = (
+            num(baseline, &["gap", share]).unwrap_or(0.0),
+            num(current, &["gap", share]).unwrap_or(0.0),
+        );
+        check(
+            &mut report,
+            (sb - sc).abs() <= th.share_drift,
+            "gap composition".to_string(),
+            "stage-share-drift",
+            || {
+                format!(
+                    "{share} drifted {:.1}% -> {:.1}% \
+                     (> {:.0} point tolerance)",
+                    sb * 100.0,
+                    sc * 100.0,
+                    th.share_drift * 100.0
+                )
+            },
+        );
+    }
+
+    // Queue-wait SLO burn.
+    let base_p95 = num(baseline, &["queue_wait_ms", "p95_ms"]).unwrap_or(0.0);
+    let cur_p95 = num(current, &["queue_wait_ms", "p95_ms"]).unwrap_or(0.0);
+    let slo = th.queue_p95_ms.unwrap_or(2.0 * base_p95 + 1.0);
+    check(
+        &mut report,
+        cur_p95 <= slo,
+        "queue wait".to_string(),
+        "queue-slo-burn",
+        || {
+            format!(
+                "p95 queue wait {cur_p95:.3} ms exceeds SLO {slo:.3} ms \
+                 (baseline p95 {base_p95:.3} ms)"
+            )
+        },
+    );
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn components_sum_exactly_from_parts() {
+        let c = GapComponents::from_parts(
+            8, 0.8, 0.13, 0.002, 0.015, 0.001, true,
+        );
+        let sum = c.imbalance_s + c.overhead_s + c.residual_s;
+        assert!((sum - c.gap_s).abs() < 1e-12, "{sum} != {}", c.gap_s);
+        assert!((c.observed_s - (0.13 + 0.002)).abs() < 1e-15);
+        assert!((c.ideal_s - 0.1).abs() < 1e-15);
+        // Post-hoc overhead keeps the identity.
+        let c2 = c.with_extra_overhead(0.003);
+        let sum2 = c2.imbalance_s + c2.overhead_s + c2.residual_s;
+        assert!((sum2 - c2.gap_s).abs() < 1e-12);
+        assert_eq!(c2.residual_s, c.residual_s);
+    }
+
+    #[test]
+    fn executed_decomposition_attributes_imbalance_and_latch() {
+        // 4 threads, lanes busy 40/30/20/10 ms, wall 45 ms, 2 ms
+        // dispatch: mean lane = 25 ms, imbalance = 15 ms, latch = 5 ms.
+        let c = GapComponents::from_executed(
+            4, 0.045, 0.040, 0.100, 0.002, true,
+        );
+        assert!((c.work_s - 0.100).abs() < 1e-15);
+        assert!((c.imbalance_s - 0.015).abs() < 1e-12);
+        assert!((c.overhead_s - 0.007).abs() < 1e-12);
+        let sum = c.imbalance_s + c.overhead_s + c.residual_s;
+        assert!((sum - c.gap_s).abs() < 1e-12);
+        // Speedup estimate: 100 ms work in a 45 ms wall.
+        assert!((c.speedup - 100.0 / 45.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn executed_without_lane_data_degrades_to_overhead_only() {
+        let c =
+            GapComponents::from_executed(4, 0.010, 0.0, 0.0, 0.001, false);
+        assert!(!c.lane_data);
+        assert!((c.speedup - 1.0).abs() < 1e-12);
+        assert!((c.imbalance_s).abs() < 1e-15);
+        let sum = c.imbalance_s + c.overhead_s + c.residual_s;
+        assert!((sum - c.gap_s).abs() < 1e-12);
+    }
+
+    fn record_curve(p: &ScalingProfiler, fp: u64, th: usize, speedup: f64) {
+        // One batch whose work/wall ratio is exactly `speedup`.
+        let wall = 0.010;
+        let c = GapComponents::from_parts(
+            th,
+            wall * speedup,
+            wall,
+            0.0,
+            0.0,
+            0.0,
+            true,
+        );
+        p.record(fp, th, 1, &c);
+    }
+
+    #[test]
+    fn knee_mirrors_ladder_plateau_hunt() {
+        let p = ScalingProfiler::new();
+        // Speedup plateaus at 4 threads: 1.0, 3.9, 4.0, 4.05.
+        record_curve(&p, 7, 1, 1.0);
+        record_curve(&p, 7, 2, 2.0);
+        record_curve(&p, 7, 4, 3.9);
+        record_curve(&p, 7, 8, 4.0);
+        record_curve(&p, 7, 16, 4.05);
+        let st = p.lock();
+        let knee = st.by_matrix[&7].knee_threads(KNEE_TOL);
+        // 3.9 >= 4.05 * 0.95 — four threads sit on the plateau.
+        assert_eq!(knee, Some(4));
+    }
+
+    #[test]
+    fn snapshot_and_merge_aggregate_by_fingerprint() {
+        let a = ScalingProfiler::new();
+        let b = ScalingProfiler::new();
+        record_curve(&a, 1, 4, 3.0);
+        record_curve(&b, 1, 4, 3.0);
+        record_curve(&b, 2, 8, 5.0);
+        a.merge_from(&b);
+        assert_eq!(a.batches(), 3);
+        let snap = a.snapshot(&QueueWaitSummary::default());
+        let mats = snap.get("matrices").and_then(Json::as_arr).unwrap();
+        assert_eq!(mats.len(), 2);
+        let eff = mats[0].get("efficiency").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            eff[0].get("batches").and_then(Json::as_f64),
+            Some(2.0)
+        );
+        assert_eq!(
+            eff[0].get("speedup").and_then(Json::as_f64),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn disabled_profiler_records_nothing() {
+        let mut p = ScalingProfiler::new();
+        p.set_enabled(false);
+        record_curve(&p, 1, 4, 3.0);
+        assert_eq!(p.batches(), 0);
+    }
+
+    #[test]
+    fn compare_is_clean_on_identical_snapshots() {
+        let p = ScalingProfiler::new();
+        record_curve(&p, 1, 4, 3.0);
+        record_curve(&p, 1, 8, 3.2);
+        let qw = QueueWaitSummary {
+            p50_ms: 0.1,
+            p95_ms: 0.4,
+            mean_ms: 0.15,
+            count: 10,
+        };
+        let snap = p.snapshot(&qw);
+        let report =
+            compare(&snap, &snap, &CompareThresholds::default());
+        assert!(report.is_clean(), "{report}");
+        assert!(report.checked >= 5);
+    }
+
+    #[test]
+    fn compare_counts_every_regression_family() {
+        let p = ScalingProfiler::new();
+        record_curve(&p, 1, 2, 2.0);
+        record_curve(&p, 1, 4, 4.0);
+        let qw = QueueWaitSummary {
+            p95_ms: 0.4,
+            ..QueueWaitSummary::default()
+        };
+        let base = p.snapshot(&qw);
+
+        let bad = ScalingProfiler::new();
+        // Speedup halved, knee pushed out, queue wait burned.
+        record_curve(&bad, 1, 2, 1.0);
+        record_curve(&bad, 1, 4, 1.1);
+        record_curve(&bad, 1, 16, 2.0);
+        let qw_bad = QueueWaitSummary {
+            p95_ms: 40.0,
+            ..QueueWaitSummary::default()
+        };
+        let cur = bad.snapshot(&qw_bad);
+        let report = compare(&base, &cur, &CompareThresholds::default());
+        assert!(!report.is_clean());
+        let inv: Vec<&str> =
+            report.findings.iter().map(|f| f.invariant).collect();
+        assert!(inv.contains(&"efficiency-drop"), "{inv:?}");
+        assert!(inv.contains(&"knee-shift"), "{inv:?}");
+        assert!(inv.contains(&"queue-slo-burn"), "{inv:?}");
+    }
+
+    #[test]
+    fn compare_rejects_wrong_schema() {
+        let doc = Json::Obj(
+            [("schema".to_string(), Json::Str("nope".to_string()))]
+                .into_iter()
+                .collect(),
+        );
+        let report =
+            compare(&doc, &doc, &CompareThresholds::default());
+        assert_eq!(report.findings.len(), 2);
+        assert_eq!(report.findings[0].invariant, "scaling-schema");
+    }
+}

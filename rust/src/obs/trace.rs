@@ -266,6 +266,13 @@ impl TraceRecorder {
         self.lanes.iter().map(|l| l.next.load(Ordering::Relaxed)).sum()
     }
 
+    /// Spans lost to ring wrap: recorded but no longer held. Exported
+    /// as `trace.spans.overwritten` in `ft2000.metrics.v1` so ring
+    /// loss is visible instead of silent.
+    pub fn spans_overwritten(&self) -> usize {
+        self.spans_recorded().saturating_sub(self.span_count())
+    }
+
     /// Well-formedness validation of the recorded rings — reused by
     /// the deterministic interleaving harness (`check::interleave`)
     /// and the `ft2000-spmv check` CLI smoke. Returns one message per
@@ -439,7 +446,9 @@ impl TraceRecorder {
     }
 
     /// Aggregate held spans into (stage, schedule) -> (count,
-    /// total_us) cells.
+    /// total_us) cells, raw: sampled spans count once, whatever the
+    /// sampling rate. [`TraceRecorder::flame_cells_scaled`] corrects
+    /// for sampling.
     pub fn flame_cells(&self) -> BTreeMap<(usize, usize), (u64, f64)> {
         let mut cells: BTreeMap<(usize, usize), (u64, f64)> =
             BTreeMap::new();
@@ -451,12 +460,41 @@ impl TraceRecorder {
         cells
     }
 
-    /// The per-stage/per-schedule flame table (serve-path order).
+    /// [`TraceRecorder::flame_cells`] scaled by the 1-in-N sampling
+    /// rate: with `sample = N`, each held span stands for ~N executed
+    /// ones, so counts and totals are multiplied by N to estimate the
+    /// unsampled truth. (Raw sums under sampling understate absolute
+    /// stage time by the sampling factor — the bias the flame table
+    /// used to carry.)
+    pub fn flame_cells_scaled(&self) -> BTreeMap<(usize, usize), (u64, f64)> {
+        let rate = self.cfg.sample.max(1) as u64;
+        let mut cells = self.flame_cells();
+        for (count, us) in cells.values_mut() {
+            *count *= rate;
+            *us *= rate as f64;
+        }
+        cells
+    }
+
+    /// The per-stage/per-schedule flame table (serve-path order),
+    /// sampling-corrected: spans and totals are the scaled estimates
+    /// of [`TraceRecorder::flame_cells_scaled`] (identical to the raw
+    /// sums at full sampling).
     pub fn flame_table(&self) -> Table {
-        let cells = self.flame_cells();
+        let cells = self.flame_cells_scaled();
         let total: f64 = cells.values().map(|(_, us)| us).sum();
+        let rate = self.cfg.sample.max(1);
+        let title = if rate > 1 {
+            format!(
+                "Stage flame (per-stage/per-schedule span aggregate, \
+                 x{rate} sampling estimate)"
+            )
+        } else {
+            "Stage flame (per-stage/per-schedule span aggregate)"
+                .to_string()
+        };
         let mut t = Table::new(
-            "Stage flame (per-stage/per-schedule span aggregate)",
+            title,
             &["stage", "schedule", "spans", "total ms", "mean us", "share"],
         );
         for stage in Stage::all() {
@@ -584,6 +622,42 @@ mod tests {
         assert!(md.contains("csr-static"));
         assert!(md.contains("sell"));
         assert!(md.contains("reduce"));
+    }
+
+    #[test]
+    fn flame_scaling_corrects_sampling_bias() {
+        // 1-in-4 sampling: only every 4th record lands in the ring,
+        // so raw sums understate stage time 4x. The scaled cells (and
+        // the flame table built from them) multiply back up.
+        let rec = TraceRecorder::new(cfg(64, 4), ClockMode::Virtual, 1);
+        for i in 0..8 {
+            if rec.sampled() {
+                rec.record(0, Stage::Kernel, 1, i as f64 * 10.0, 10.0);
+            }
+        }
+        let raw = rec.flame_cells();
+        assert_eq!(raw[&(Stage::Kernel.index(), 1)], (2, 20.0));
+        let scaled = rec.flame_cells_scaled();
+        assert_eq!(scaled[&(Stage::Kernel.index(), 1)], (8, 80.0));
+        let md = rec.flame_table().to_markdown();
+        assert!(md.contains("x4 sampling estimate"), "{md}");
+        assert!(md.contains("| 8 "), "{md}");
+        // Full sampling: scaled == raw, no estimate marker.
+        let full = TraceRecorder::new(cfg(64, 1), ClockMode::Virtual, 1);
+        full.record(0, Stage::Kernel, 1, 0.0, 10.0);
+        assert_eq!(full.flame_cells(), full.flame_cells_scaled());
+        assert!(!full.flame_table().to_markdown().contains("estimate"));
+    }
+
+    #[test]
+    fn overwritten_spans_are_counted() {
+        let rec = TraceRecorder::new(cfg(4, 1), ClockMode::Wall, 1);
+        for i in 0..100 {
+            rec.record(0, Stage::Kernel, SCHED_NONE, i as f64, 1.0);
+        }
+        assert_eq!(rec.spans_overwritten(), 96);
+        let fresh = TraceRecorder::new(cfg(4, 1), ClockMode::Wall, 1);
+        assert_eq!(fresh.spans_overwritten(), 0);
     }
 
     #[test]

@@ -66,6 +66,9 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::autotune::{AutotuneConfig, Autotuner, StageObs};
 use crate::exec::{ExecPool, Scratch};
+use crate::obs::scaling::{
+    GapComponents, QueueWaitSummary, ScalingProfiler, MAX_LANES,
+};
 use crate::obs::{Counter, Histogram, MetricsRegistry, Stage, TraceRecorder};
 use crate::sched::Schedule;
 use crate::util::json::Json;
@@ -137,6 +140,10 @@ pub struct ServeEngine {
     /// Pre-registered hot-path instrument handles (atomic updates
     /// only — no name lookup, no lock, no allocation per dispatch).
     obs: EngineObs,
+    /// Always-on scalability attribution: every dispatch's gap to
+    /// linear speedup, decomposed and aggregated per fingerprint
+    /// ([`ServeEngine::scaling_snapshot`]).
+    scaling: ScalingProfiler,
 }
 
 /// The engine's pre-registered instrument handles.
@@ -195,6 +202,7 @@ impl ServeEngine {
             trace: None,
             metrics,
             obs,
+            scaling: ScalingProfiler::new(),
         }
     }
 
@@ -336,6 +344,20 @@ impl ServeEngine {
         &self.metrics
     }
 
+    /// The always-on scalability profiler (see
+    /// [`ServeEngine::scaling_snapshot`] for the one-call export).
+    pub fn scaling(&self) -> &ScalingProfiler {
+        &self.scaling
+    }
+
+    /// Disable scalability attribution — the A/B baseline for the
+    /// `obs` bench section's profiler-tax gate. Serving deployments
+    /// leave it on (the default).
+    pub fn without_scaling(mut self) -> Self {
+        self.scaling.set_enabled(false);
+        self
+    }
+
     /// Resolve the plan one dispatch against `entry` should run —
     /// shared by the live path ([`ServeEngine::execute_batch`]) and
     /// the virtual-time replay's model-only dispatcher so both obey
@@ -454,12 +476,41 @@ impl ServeEngine {
             rec.set_kernel_ctx(sched_code);
         }
         let pool = self.pool.as_ref();
+        // Scalability attribution: snapshot per-lane busy time around
+        // the kernel so this dispatch can compute its own lane deltas
+        // (max vs mean = load imbalance). Stack buffers — the dispatch
+        // path stays allocation-free. Concurrent dispatches on one
+        // pool smear each other's deltas slightly (same last-writer
+        // contract as the kernel-span context); the aggregation
+        // averages it out.
+        let mut lanes_before = [0u64; MAX_LANES];
+        let probed = match (self.scaling.is_enabled(), pool) {
+            (true, Some(p)) => p.fill_busy_ns(&mut lanes_before),
+            _ => 0,
+        };
         let (wall_seconds, threads, per_request_ms) = if batch == 1 {
             let st = plan.execute_into(&entry.csr, xs[0], pool, scratch);
             (st.wall_seconds, st.threads, st.per_request_ms())
         } else {
             let st = plan.execute_batch_into(&entry.csr, xs, pool, scratch);
             (st.wall_seconds, st.threads, st.per_request_ms())
+        };
+        let (busy_max_s, busy_sum_s) = if probed > 0 {
+            let mut lanes_after = [0u64; MAX_LANES];
+            let n = pool
+                .map_or(0, |p| p.fill_busy_ns(&mut lanes_after))
+                .min(probed);
+            let (mut max_ns, mut sum_ns) = (0u64, 0u64);
+            for (after, before) in
+                lanes_after[..n].iter().zip(&lanes_before[..n])
+            {
+                let d = after.saturating_sub(*before);
+                max_ns = max_ns.max(d);
+                sum_ns += d;
+            }
+            (max_ns as f64 / 1e9, sum_ns as f64 / 1e9)
+        } else {
+            (0.0, 0.0)
         };
         if let Some(rec) = &self.trace {
             // Pool workers emit their own per-lane kernel spans; an
@@ -493,6 +544,18 @@ impl ServeEngine {
             .add((wall_seconds * 1e6) as u64);
         self.obs.stage_us[Stage::Reduce.index()]
             .add((reduce_s * 1e6) as u64);
+        // Per-batch gap-to-linear decomposition (`obs::scaling`): the
+        // dispatcher stage time measured so far is lookup + reduce;
+        // the autotune-observe stage below is folded in post-hoc.
+        let comps = GapComponents::from_executed(
+            threads,
+            wall_seconds,
+            busy_max_s,
+            busy_sum_s,
+            lookup_s + reduce_s,
+            probed > 0,
+        );
+        let mut tuner_obs_s = 0.0;
         // Close the loop on the engine's own clock (live serving).
         // External-clock tuners (virtual-time replay) are fed by the
         // caller instead — see `replay::Dispatcher`.
@@ -502,6 +565,9 @@ impl ServeEngine {
                     plan_lookup_ms: lookup_s * 1e3,
                     kernel_ms: wall_seconds * 1e3,
                     reduce_ms: reduce_s * 1e3,
+                    imbalance_ms: comps.imbalance_s * 1e3,
+                    overhead_ms: comps.overhead_s * 1e3,
+                    residual_ms: comps.residual_s.max(0.0) * 1e3,
                 };
                 let t_obs = Instant::now();
                 if let Some(promoted) = t.observe_staged(
@@ -514,6 +580,7 @@ impl ServeEngine {
                     self.plans.replace(entry.fingerprint, promoted);
                 }
                 let obs_s = t_obs.elapsed().as_secs_f64();
+                tuner_obs_s = obs_s;
                 if let Some(rec) = &self.trace {
                     rec.record_elapsed(
                         0,
@@ -526,6 +593,12 @@ impl ServeEngine {
                     .add((obs_s * 1e6) as u64);
             }
         }
+        self.scaling.record(
+            entry.fingerprint,
+            threads,
+            batch,
+            &comps.with_extra_overhead(tuner_obs_s),
+        );
         Ok(BatchStats {
             wall_seconds,
             plan_hit,
@@ -609,6 +682,20 @@ impl ServeEngine {
         self.metrics
             .gauge("serve.scratch.bytes")
             .set(scratch_bytes as f64);
+        if let Some(rec) = &self.trace {
+            // Ring-loss accounting: spans ever recorded vs still held.
+            // The difference is what sampling consumers must know —
+            // wrapped lanes silently overwrite their oldest spans.
+            self.metrics
+                .gauge("trace.spans.recorded")
+                .set(rec.spans_recorded() as f64);
+            self.metrics
+                .gauge("trace.spans.overwritten")
+                .set(rec.spans_overwritten() as f64);
+            self.metrics
+                .gauge("trace.sample")
+                .set(rec.config().sample.max(1) as f64);
+        }
         let pool_json = self.pool.as_ref().map(|pool| {
             let up = pool.uptime_s();
             let lanes: Vec<Json> = pool
@@ -716,6 +803,26 @@ impl ServeEngine {
         obj.insert("autotune".to_string(), tune_json.unwrap_or(Json::Null));
         obj.insert("registry".to_string(), self.metrics.snapshot());
         Json::Obj(obj)
+    }
+
+    /// The queue-wait summary the scalability snapshot embeds (the
+    /// obs-report SLO-burn gate reads it).
+    fn queue_wait_summary(stats: &ServeStats) -> QueueWaitSummary {
+        QueueWaitSummary {
+            p50_ms: stats.queue_wait.percentile(50.0).unwrap_or(0.0),
+            p95_ms: stats.queue_wait.percentile(95.0).unwrap_or(0.0),
+            mean_ms: stats.queue_wait.mean(),
+            count: stats.queue_wait.count,
+        }
+    }
+
+    /// The versioned `ft2000.scaling.v1` snapshot: the profiler's
+    /// per-fingerprint gap attribution and efficiency curves plus the
+    /// telemetry queue-wait summary — the document `ft2000-spmv
+    /// obs-report` diffs for regressions.
+    pub fn scaling_snapshot(&self) -> Json {
+        let stats = self.telemetry.snapshot();
+        self.scaling.snapshot(&Self::queue_wait_summary(&stats))
     }
 }
 

@@ -21,6 +21,7 @@ use anyhow::{ensure, Result};
 
 use crate::autotune::StageObs;
 use crate::exec::SPMM_COL_BLOCK;
+use crate::obs::scaling::{GapComponents, ScalingProfiler};
 use crate::obs::trace::SCHED_NONE;
 use crate::obs::{chrome_document, ClockMode, Stage, TraceRecorder};
 use crate::sched::panel_core_range;
@@ -90,6 +91,41 @@ impl CostModel {
             + (nnz as f64 * blocks * self.stream_a_s
                 + nnz as f64 * batch as f64 * self.fma_s)
                 / eff
+    }
+
+    /// Serial-equivalent kernel work of one dispatch (the `T1` the
+    /// kernel term of [`CostModel::service_s`] divides by the
+    /// effective parallelism).
+    pub fn work_s(&self, nnz: usize, batch: usize) -> f64 {
+        let blocks = batch.div_ceil(SPMM_COL_BLOCK).max(1) as f64;
+        nnz as f64 * blocks * self.stream_a_s
+            + nnz as f64 * batch as f64 * self.fma_s
+    }
+
+    /// Deterministic gap-to-linear decomposition of one modeled
+    /// dispatch, term for term the same arithmetic as
+    /// [`CostModel::service_s`]: the dispatch + fork/join terms are
+    /// overhead, the model has no lane raggedness (imbalance 0), and
+    /// what remains of the gap is exactly the kernel time the
+    /// bandwidth cap refused to parallelize —
+    /// `T1 * (1/eff - 1/threads)`, nonzero iff `threads >
+    /// sat_threads`. The components therefore sum to the observed gap
+    /// *exactly*, which is the identity the acceptance test pins on a
+    /// deterministic replay.
+    pub fn components(
+        &self,
+        nnz: usize,
+        batch: usize,
+        threads: usize,
+    ) -> GapComponents {
+        let th = threads.max(1);
+        let eff = th.min(self.sat_threads.max(1)) as f64;
+        let work_s = self.work_s(nnz, batch);
+        let kernel_s = work_s / eff;
+        let dispatch_s = self.dispatch_s + self.sync_s * (th - 1) as f64;
+        GapComponents::from_parts(
+            th, work_s, kernel_s, dispatch_s, 0.0, 0.0, false,
+        )
     }
 }
 
@@ -343,22 +379,52 @@ impl Dispatcher<'_> {
         }
     }
 
+    /// Model-only replays have no lane tallies to measure, so the
+    /// cost model's own deterministic decomposition feeds the scaling
+    /// profiler — gap attribution works on bit-reproducible replays
+    /// too. Executed replays skip this: `dispatch_into` already
+    /// recorded the *measured* components for the same batch.
+    fn attribute(&self, disp: &Dispatched, batch: usize, c: &GapComponents) {
+        if self.execute {
+            return;
+        }
+        self.engine.scaling().record(
+            disp.fingerprint,
+            disp.threads.max(1),
+            batch,
+            c,
+        );
+    }
+
     /// Close the tuning loop on the *virtual* clock: the modeled
     /// service time of this dispatch becomes the tuner's observation
     /// (one per-request share per coalesced request), and promotions
     /// land in the engine's plan cache. Wall-clock tuners are skipped
     /// — the engine already observed real time in `execute_batch`.
-    fn feedback(&self, disp: &Dispatched, service_s: f64, batch: usize) {
+    fn feedback(
+        &self,
+        disp: &Dispatched,
+        service_s: f64,
+        batch: usize,
+        comps: &GapComponents,
+    ) {
         let Some(arm) = disp.arm else { return };
         let Some(tuner) = self.engine.tuner() else { return };
         if tuner.wall_clock() {
             return;
         }
         let per_request_ms = service_s * 1e3 / batch.max(1) as f64;
-        // The modeled service time is all kernel as far as the stage
-        // columns go — the model has no measured lookup/reduce split.
-        let stages =
-            StageObs { kernel_ms: service_s * 1e3, ..StageObs::default() };
+        // The modeled service time is all kernel as far as the
+        // measured stage columns go (the model has no lookup/reduce
+        // split), but the cost model's gap attribution is exact — the
+        // retraining dataset learns the saturation residual.
+        let stages = StageObs {
+            kernel_ms: service_s * 1e3,
+            imbalance_ms: comps.imbalance_s * 1e3,
+            overhead_ms: comps.overhead_s * 1e3,
+            residual_ms: comps.residual_s.max(0.0) * 1e3,
+            ..StageObs::default()
+        };
         let t0 = Instant::now();
         let promoted = tuner.observe_staged(
             disp.fingerprint,
@@ -440,6 +506,10 @@ pub struct ShardedReplayReport {
     /// ([`ServeEngine::metrics_snapshot`]), captured before the
     /// harness engines wound down (parallel to `shards`).
     pub metrics: Vec<Json>,
+    /// Fleet scalability roll-up: every shard engine's
+    /// [`ScalingProfiler`] merged into one `ft2000.scaling.v1`
+    /// document (queue-wait summary from the merged stats).
+    pub scaling: Json,
 }
 
 impl ShardedReplayReport {
@@ -638,6 +708,7 @@ pub fn replay_sharded(
     let mut cores = Vec::with_capacity(shards);
     let mut traces = Vec::new();
     let mut metrics = Vec::with_capacity(shards);
+    let fleet_scaling = ScalingProfiler::new();
     let mut makespan = 0.0f64;
     for (s, sub) in per_shard.iter().enumerate() {
         let shard_cores = panel_core_range(&topo, s, shards);
@@ -712,6 +783,7 @@ pub fn replay_sharded(
         let stats = engine.telemetry.snapshot();
         let (cache_hits, cache_misses) = engine.plans.stats();
         metrics.push(engine.metrics_snapshot());
+        fleet_scaling.merge_from(engine.scaling());
         out.push(ReplayReport {
             stats,
             cache_hits,
@@ -721,12 +793,19 @@ pub fn replay_sharded(
             autotune: engine.tuner().map(|t| t.summaries()),
         });
     }
+    let mut merged_stats = ServeStats::default();
+    for r in &out {
+        merged_stats.merge(&r.stats);
+    }
+    let scaling =
+        fleet_scaling.snapshot(&ServeEngine::queue_wait_summary(&merged_stats));
     Ok(ShardedReplayReport {
         shards: out,
         cores,
         duration_s: makespan,
         traces,
         metrics,
+        scaling,
     })
 }
 
@@ -812,7 +891,9 @@ fn replay_open(
         let disp = d.run(mid, batch.len());
         let service_s =
             cfg.cost.service_s(disp.nnz, batch.len(), disp.threads);
-        d.feedback(&disp, service_s, batch.len());
+        let comps = cfg.cost.components(disp.nnz, batch.len(), disp.threads);
+        d.attribute(&disp, batch.len(), &comps);
+        d.feedback(&disp, service_s, batch.len(), &comps);
         let completion = t_dispatch + service_s;
         if let Some(rec) = &rec {
             rec.set_virtual_s(completion);
@@ -913,7 +994,9 @@ fn replay_closed(
         let disp = d.run(mid, batch.len());
         let service_s =
             cfg.cost.service_s(disp.nnz, batch.len(), disp.threads);
-        d.feedback(&disp, service_s, batch.len());
+        let comps = cfg.cost.components(disp.nnz, batch.len(), disp.threads);
+        d.attribute(&disp, batch.len(), &comps);
+        d.feedback(&disp, service_s, batch.len(), &comps);
         let completion = t_start + service_s;
         if let Some(rec) = &rec {
             rec.set_virtual_s(completion);

@@ -32,6 +32,7 @@ use std::time::Instant;
 use crate::util::ordatomic::OrdAtomicUsize;
 
 use crate::autotune::AutotuneConfig;
+use crate::obs::scaling::ScalingProfiler;
 use crate::obs::{
     chrome_document, ClockMode, Stage, TraceConfig, TraceRecorder,
 };
@@ -536,6 +537,19 @@ impl ShardedServer {
         );
         Json::Obj(doc)
     }
+
+    /// Fleet scalability roll-up: every shard engine's
+    /// [`ScalingProfiler`] merged into one `ft2000.scaling.v1`
+    /// document, with the queue-wait summary taken from the merged
+    /// stats — the sharded counterpart of
+    /// [`ServeEngine::scaling_snapshot`].
+    pub fn scaling_snapshot(&self) -> Json {
+        let fleet = ScalingProfiler::new();
+        for s in &self.shards {
+            fleet.merge_from(s.engine.scaling());
+        }
+        fleet.snapshot(&ServeEngine::queue_wait_summary(&self.merged_stats()))
+    }
 }
 
 #[cfg(test)]
@@ -634,6 +648,17 @@ mod tests {
         assert_eq!(merged.errors, 1, "poison must be an error outcome");
         assert_eq!(merged.rejected, 0);
         assert_eq!(merged.digest.count, n_valid as u64);
+        // The always-on profiler attributed every executed batch and
+        // the fleet roll-up merges the shard profilers.
+        let scal = server.scaling_snapshot();
+        assert_eq!(
+            scal.get("schema").and_then(Json::as_str),
+            Some("ft2000.scaling.v1")
+        );
+        assert!(
+            scal.get("batches").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "shard dispatches must be attributed"
+        );
         // Every shard that homes a matrix saw its traffic.
         for (i, snap) in server.snapshots(1.0).iter().enumerate() {
             if server.placement.homed_counts()[i] > 0 {

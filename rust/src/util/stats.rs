@@ -168,12 +168,18 @@ impl P2Quantile {
     }
 
     pub fn observe(&mut self, x: f64) {
+        // A non-finite sample would poison the marker heights (and a
+        // NaN would defeat the cell search below) — drop it, matching
+        // the histogram's observe contract.
+        if !x.is_finite() {
+            return;
+        }
         if self.n < 5 {
             self.init[self.n as usize] = x;
             self.n += 1;
             if self.n == 5 {
                 let mut s = self.init;
-                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                s.sort_by(f64::total_cmp);
                 self.q = s;
             }
             return;
@@ -241,7 +247,7 @@ impl P2Quantile {
         }
         if self.n < 5 {
             let mut v = self.init[..self.n as usize].to_vec();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.sort_by(f64::total_cmp);
             return percentile(&v, self.p * 100.0);
         }
         self.q[2]
@@ -374,6 +380,43 @@ mod tests {
         assert_eq!(q.count(), 3);
         assert_eq!(q.quantile(), 2.0);
         assert!((q.p() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_edge_populations_never_panic() {
+        // Empty and single-sample populations: exact answers, no
+        // interpolation panics.
+        for p in [0.0, 0.5, 0.95, 1.0] {
+            let mut q = P2Quantile::new(p);
+            assert_eq!(q.quantile(), 0.0, "empty population answers 0");
+            q.observe(7.25);
+            assert_eq!(q.count(), 1);
+            assert_eq!(
+                q.quantile(),
+                7.25,
+                "single-sample p{p} is the sample itself"
+            );
+        }
+        // Non-finite samples are dropped — in the exact small-n
+        // buffer (where a NaN used to poison the sort) and in the
+        // warm marker phase alike.
+        let mut q = P2Quantile::new(0.5);
+        for x in [1.0, f64::NAN, 2.0, f64::INFINITY, 3.0] {
+            q.observe(x);
+        }
+        assert_eq!(q.count(), 3);
+        assert_eq!(q.quantile(), 2.0);
+        for x in [4.0, 5.0, f64::NAN, 6.0, f64::NEG_INFINITY, 7.0] {
+            q.observe(x);
+        }
+        assert_eq!(q.count(), 7);
+        assert!(q.quantile().is_finite());
+        // All-identical samples stay degenerate but finite.
+        let mut flat = P2Quantile::new(0.95);
+        for _ in 0..100 {
+            flat.observe(0.0);
+        }
+        assert_eq!(flat.quantile(), 0.0);
     }
 
     #[test]

@@ -15,6 +15,13 @@
 //! buffers, so the zero-allocation contract must hold with the
 //! recorder attached, not just with observability off.
 //!
+//! The scalability profiler (PR 9) is always on — every dispatch in
+//! the measured window records gap components through
+//! `ScalingProfiler::record`, whose per-fingerprint aggregates were
+//! allocated during warmup. The zero-alloc pin therefore covers the
+//! profiler's steady state too; the batch-count assertion at the end
+//! proves it really observed the window.
+//!
 //! Kept as a single `#[test]` on purpose: the counter is
 //! process-global, and libtest runs sibling tests on concurrent
 //! threads whose allocations would pollute the reading.
@@ -148,4 +155,21 @@ fn pooled_steady_state_serving_allocates_nothing() {
     let stats = engine.telemetry.snapshot();
     assert_eq!(stats.requests, 48 * 3 * 5);
     assert_eq!(stats.batches, 48 * 3 * 2);
+
+    // So did the scalability profiler: every dispatch attributed its
+    // gap-to-linear components without leaving the zero-alloc budget,
+    // and the accounting stayed internally consistent.
+    let totals = engine.scaling().totals();
+    assert_eq!(
+        totals.batches,
+        (48 * 3 * 2) as u64,
+        "the scaling profiler must observe every steady-state dispatch"
+    );
+    assert!(
+        (totals.gap_s
+            - (totals.imbalance_s + totals.overhead_s + totals.residual_s))
+            .abs()
+            <= 1e-9 * totals.gap_s.abs().max(1e-12),
+        "gap components must sum to the observed gap"
+    );
 }

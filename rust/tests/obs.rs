@@ -9,8 +9,8 @@ use ft2000_spmv::autotune::AutotuneConfig;
 use ft2000_spmv::corpus::suite::SuiteSpec;
 use ft2000_spmv::obs::{ClockMode, Stage, TraceConfig, TraceRecorder};
 use ft2000_spmv::service::{
-    replay, Arrivals, MatrixRegistry, PlanConfig, Planner, Popularity,
-    ReplayConfig, ServeEngine, WorkloadSpec,
+    replay, Arrivals, CostModel, MatrixRegistry, PlanConfig, Planner,
+    Popularity, ReplayConfig, ServeEngine, WorkloadSpec,
 };
 use ft2000_spmv::util::json::{parse, Json};
 
@@ -76,4 +76,192 @@ fn traced_replay_exports_chrome_trace_and_unified_metrics() {
         .and_then(|s| s.get("queue_wait_ms"))
         .expect("queue-wait block in the serve report");
     assert!(qw.get("p95").is_some(), "queue-wait p95 missing");
+}
+
+/// The exact key set of a JSON object, for golden-schema pins.
+fn keys(doc: &Json) -> Vec<&str> {
+    doc.as_obj()
+        .expect("object node")
+        .keys()
+        .map(String::as_str)
+        .collect()
+}
+
+fn model_replay_engine(requests: usize, cost: CostModel) -> ServeEngine {
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&SuiteSpec::tiny(), Some(6));
+    let engine =
+        ServeEngine::new(reg, Planner::Heuristic, PlanConfig::default());
+    let spec = WorkloadSpec {
+        requests,
+        popularity: Popularity::Zipf { s: 1.2 },
+        arrivals: Arrivals::Closed { clients: 2 },
+        seed: 0x5CA1,
+    };
+    let cfg = ReplayConfig { execute: false, cost, ..ReplayConfig::default() };
+    replay(&engine, &ids, &spec, &cfg).unwrap();
+    engine
+}
+
+/// Golden schema: `ft2000.metrics.v1` carries exactly the documented
+/// key sets at every level dashboards are told to read. A key
+/// appearing or vanishing here is a consumer-visible schema change
+/// and must bump the version string instead.
+#[test]
+fn metrics_snapshot_golden_keys() {
+    let engine = model_replay_engine(120, CostModel::default());
+    let snap = parse(&engine.metrics_snapshot().to_string()).unwrap();
+    assert_eq!(
+        keys(&snap),
+        ["autotune", "plan_cache", "pool", "registry", "schema", "serve"]
+    );
+    assert_eq!(
+        keys(snap.get("serve").unwrap()),
+        [
+            "batch_hist",
+            "batches",
+            "cache_hits",
+            "cache_misses",
+            "duration_s",
+            "errors",
+            "executed_gflops",
+            "latency_ms",
+            "mean_batch",
+            "per_schedule",
+            "queue_wait_ms",
+            "rejected",
+            "requests",
+            "shed",
+            "throughput_rps",
+        ]
+    );
+    assert_eq!(
+        keys(snap.get("serve").unwrap().get("queue_wait_ms").unwrap()),
+        ["count", "mean", "p50", "p95"]
+    );
+    assert_eq!(
+        keys(snap.get("plan_cache").unwrap()),
+        [
+            "capacity",
+            "evictions",
+            "hit_rate",
+            "hits",
+            "len",
+            "misses",
+            "replacements",
+        ]
+    );
+}
+
+/// Golden schema: `ft2000.scaling.v1` — the document `obs-report`
+/// diffs — emits exactly the documented keys for the roll-up, the
+/// per-matrix attribution, and every efficiency-curve point.
+#[test]
+fn scaling_snapshot_golden_keys() {
+    let engine = model_replay_engine(120, CostModel::default());
+    let snap = parse(&engine.scaling_snapshot().to_string()).unwrap();
+    assert_eq!(
+        snap.get("schema").and_then(Json::as_str),
+        Some("ft2000.scaling.v1")
+    );
+    assert_eq!(
+        keys(&snap),
+        ["batches", "gap", "matrices", "queue_wait_ms", "schema"]
+    );
+    let gap_keys = [
+        "batches",
+        "gap_s",
+        "ideal_s",
+        "imbalance_s",
+        "imbalance_share",
+        "kernel_s",
+        "observed_s",
+        "overhead_s",
+        "overhead_share",
+        "requests",
+        "residual_s",
+        "residual_share",
+        "work_s",
+    ];
+    assert_eq!(keys(snap.get("gap").unwrap()), gap_keys);
+    assert_eq!(
+        keys(snap.get("queue_wait_ms").unwrap()),
+        ["count", "mean_ms", "p50_ms", "p95_ms"]
+    );
+    let mats = snap.get("matrices").and_then(Json::as_arr).unwrap();
+    assert!(!mats.is_empty(), "replay must populate per-matrix curves");
+    for m in mats {
+        assert_eq!(
+            keys(m),
+            ["efficiency", "fingerprint", "gap", "knee_threads"]
+        );
+        assert_eq!(keys(m.get("gap").unwrap()), gap_keys);
+        let curve = m.get("efficiency").and_then(Json::as_arr).unwrap();
+        assert!(!curve.is_empty());
+        for cell in curve {
+            assert_eq!(
+                keys(cell),
+                ["batches", "efficiency", "speedup", "threads"]
+            );
+        }
+    }
+}
+
+/// Acceptance pin: on a deterministic model replay the per-batch
+/// gap-to-linear components must sum to the observed gap (the
+/// attribution never invents or loses time), the decomposition must
+/// be reproducible bit-for-bit across runs, and a cost model
+/// saturating below the plan width must surface a positive
+/// memory-bound residual.
+#[test]
+fn model_replay_components_sum_to_observed_gap() {
+    // Panels saturate at 2 threads while plans run 4 wide: the model
+    // predicts a memory-bandwidth residual `T1 * (1/2 - 1/4) > 0`.
+    let cost = CostModel { sat_threads: 2, ..CostModel::default() };
+    let engine = model_replay_engine(200, cost);
+    let t = engine.scaling().totals();
+    assert!(t.batches > 0 && t.requests >= t.batches);
+    assert!(t.work_s > 0.0 && t.kernel_s > 0.0);
+
+    // Identity 1: gap is exactly observed minus ideal.
+    assert!(
+        (t.observed_s - t.ideal_s - t.gap_s).abs() <= 1e-12 * t.observed_s,
+        "gap {} != observed {} - ideal {}",
+        t.gap_s,
+        t.observed_s,
+        t.ideal_s
+    );
+    // Identity 2: the gap decomposes without remainder.
+    let parts = t.imbalance_s + t.overhead_s + t.residual_s;
+    assert!(
+        (t.gap_s - parts).abs() <= 1e-9 * t.gap_s.max(1e-12),
+        "components {} do not sum to gap {}",
+        parts,
+        t.gap_s
+    );
+    // Dispatch + fork/join cost every batch; saturation past 2 of 4
+    // threads leaves bandwidth-bound time on the table.
+    assert!(t.overhead_s > 0.0, "dispatch/sync overhead must be counted");
+    assert!(t.residual_s > 0.0, "memory-bound residual must be counted");
+
+    // Same seed, same model: the totals replay bit-for-bit.
+    let again = model_replay_engine(200, cost).scaling().totals();
+    assert_eq!(t.batches, again.batches);
+    assert_eq!(t.gap_s.to_bits(), again.gap_s.to_bits());
+    assert_eq!(t.residual_s.to_bits(), again.residual_s.to_bits());
+
+    // Every efficiency-curve point reflects the saturation ceiling:
+    // the modeled kernel speedup is exactly min(threads, sat_threads).
+    let snap = engine.scaling_snapshot();
+    for m in snap.get("matrices").and_then(Json::as_arr).unwrap() {
+        for cell in m.get("efficiency").and_then(Json::as_arr).unwrap() {
+            let th = cell.get("threads").and_then(Json::as_usize).unwrap();
+            let sp = cell.get("speedup").and_then(Json::as_f64).unwrap();
+            let want = th.min(2) as f64;
+            assert!(
+                (sp - want).abs() < 1e-9,
+                "speedup {sp} at {th} threads, expected {want}"
+            );
+        }
+    }
 }
