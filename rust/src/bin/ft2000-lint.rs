@@ -14,13 +14,19 @@
 //! * `hot-alloc` — inside `fn *_into` kernels (the zero-allocation
 //!   serve path), `Vec::new`, `vec!`, `.to_vec()`, and `.collect()`
 //!   are banned.
-//! * `no-unwrap` — non-test code in `service/` and `exec/` must not
-//!   call `.unwrap()` / `.expect(` (poison-recovering locks and
-//!   counted error outcomes instead).
+//! * `no-unwrap` — non-test code in `service/`, `exec/`, and
+//!   `resil/` must not call `.unwrap()` / `.expect(`
+//!   (poison-recovering locks and counted error outcomes instead).
 //! * `raw-clock` — `Instant::now` is banned outside the clock seams
 //!   (deterministic modules: `sparse/`, `sched/`, `sim/`,
 //!   `autotune/`, `mlmodel/`, `corpus/`, `counters/`, `solver/`,
-//!   `reorder/`, `analysis/`, `coordinator/`, `check/`).
+//!   `reorder/`, `analysis/`, `coordinator/`, `check/`, `resil/` —
+//!   fault plans and chaos replays run on the virtual step clock).
+//! * `retry-budget` — in `service/` and `resil/`, a loop on a line
+//!   that mentions retrying must mention its budget (or cap) within
+//!   five lines: unbounded retry storms take a degraded fleet down
+//!   for good. Waive with `lint:allow(retry-budget)` when the bound
+//!   lives elsewhere.
 //! * `atomic-ord` — every atomic operation naming a memory ordering
 //!   (`Ordering::Relaxed` … `Ordering::SeqCst`) must carry an
 //!   `ord:` comment on the line or within the six lines above,
@@ -60,6 +66,7 @@ const CLOCK_BANNED: &[&str] = &[
     "analysis/",
     "coordinator/",
     "check/",
+    "resil/",
 ];
 
 /// Lines a waiver comment may precede its target by.
@@ -203,6 +210,17 @@ fn waived(lines: &[&str], i: usize, rule: &str) -> bool {
     lines[lo..=i].iter().any(|l| l.contains(&tag))
 }
 
+/// "budget" (or "cap") mentioned in code-or-comment within
+/// `WAIVER_WINDOW` lines on either side of line `i` — close enough
+/// that a reader sees the retry bound next to the loop.
+fn near_budget(lines: &[&str], i: usize) -> bool {
+    let lo = i.saturating_sub(WAIVER_WINDOW);
+    let hi = (i + WAIVER_WINDOW).min(lines.len().saturating_sub(1));
+    lines[lo..=hi]
+        .iter()
+        .any(|l| l.contains("budget") || has_token(l, "cap"))
+}
+
 fn has_safety_comment(lines: &[&str], i: usize) -> bool {
     let lo = i.saturating_sub(SAFETY_WINDOW);
     lines[lo..=i].iter().any(|l| l.contains("SAFETY:"))
@@ -260,8 +278,11 @@ fn scan_file(rel: &str, text: &str, findings: &mut Vec<Finding>) {
     let lines: Vec<&str> = text.lines().collect();
     let in_exec = rel.starts_with("exec/");
     let unsafe_ok = in_exec || rel == "util/allocprobe.rs";
-    let unwrap_banned = in_exec || rel.starts_with("service/");
+    let unwrap_banned =
+        in_exec || rel.starts_with("service/") || rel.starts_with("resil/");
     let clock_banned = CLOCK_BANNED.iter().any(|m| rel.starts_with(m));
+    let retry_scope =
+        rel.starts_with("service/") || rel.starts_with("resil/");
     // The instrument defines the passthrough ops; every ordering in
     // the crate is documented *at the call site*, not inside it.
     let ord_exempt = rel == "util/ordatomic.rs";
@@ -318,6 +339,27 @@ fn scan_file(rel: &str, text: &str, findings: &mut Vec<Finding>) {
                 "no-unwrap",
                 "unwrap/expect in serve-path module (recover or return \
                  a counted error)"
+                    .to_string(),
+            );
+        }
+
+        // Substring match on "retry" on purpose: `retry_budget` and
+        // `submit_with_retry` have `_` boundaries that `has_token`
+        // would treat as mid-identifier and skip.
+        if !in_tests
+            && retry_scope
+            && code.contains("retry")
+            && (has_token(code, "for")
+                || has_token(code, "while")
+                || has_token(code, "loop"))
+            && !near_budget(&lines, i)
+            && !waived(&lines, i, "retry-budget")
+        {
+            push(
+                ln,
+                "retry-budget",
+                "retry loop with no budget/cap in sight (bound it, or \
+                 name the bound within 5 lines)"
                     .to_string(),
             );
         }
@@ -409,5 +451,76 @@ fn scan_file(rel: &str, text: &str, findings: &mut Vec<Finding>) {
         if into_active && depth <= into_base {
             into_active = false;
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Rules fired by `scan_file` on a synthetic source, as rule
+    /// names. `main()` never lints `bin/ft2000-lint.rs` itself, so
+    /// these fixtures can contain banned constructs verbatim.
+    fn rules_for(rel: &str, src: &str) -> Vec<&'static str> {
+        let mut findings = Vec::new();
+        scan_file(rel, src, &mut findings);
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn retry_budget_rule_fires_and_waives() {
+        let unbounded = "for attempt in 0..3 { retry(); }\n";
+        assert!(rules_for("service/shard.rs", unbounded)
+            .contains(&"retry-budget"));
+        assert!(
+            rules_for("resil/chaos.rs", unbounded)
+                .contains(&"retry-budget"),
+            "resil/ is in scope for retry-budget"
+        );
+        assert!(
+            !rules_for("sim/queue.rs", unbounded)
+                .contains(&"retry-budget"),
+            "rule is scoped to service/ and resil/"
+        );
+
+        let bounded = "for attempt in 0..retry_budget { retry(); }\n";
+        assert!(
+            rules_for("service/shard.rs", bounded).is_empty(),
+            "naming the budget on the loop line satisfies the rule"
+        );
+        let near = "// bounded by the admission budget below\n\
+                    while retry_pending() { step(); }\n";
+        assert!(
+            rules_for("resil/mod.rs", near).is_empty(),
+            "a budget mention within 5 lines satisfies the rule"
+        );
+
+        let waived = "// lint:allow(retry-budget) bound lives in caller\n\
+                      loop { if !retry() { break; } }\n";
+        assert!(rules_for("service/batch.rs", waived).is_empty());
+
+        let in_tests = "#[cfg(test)]\nmod tests {\n\
+                        for attempt in 0..3 { retry(); }\n}\n";
+        assert!(
+            !rules_for("service/shard.rs", in_tests)
+                .contains(&"retry-budget"),
+            "test-module code is exempt"
+        );
+    }
+
+    #[test]
+    fn resil_is_clock_banned() {
+        let src = "let t = Instant::now();\n";
+        assert!(rules_for("resil/health.rs", src).contains(&"raw-clock"));
+        assert!(
+            !rules_for("obs/trace.rs", src).contains(&"raw-clock"),
+            "obs/ keeps its wall clock"
+        );
+    }
+
+    #[test]
+    fn resil_unwrap_is_banned_outside_tests() {
+        let src = "let v = q.pop().unwrap();\n";
+        assert!(rules_for("resil/chaos.rs", src).contains(&"no-unwrap"));
     }
 }

@@ -8,6 +8,7 @@
 //! ft2000-spmv serve-bench [--suite S] [--matrices N] [--batches 1,2,4,8,16] [--workers W]
 //! ft2000-spmv replay  [--suite S] [--pattern uniform|zipf|bursty] [--requests N] [--clients C] ...
 //! ft2000-spmv check   [--suite S] [--matrices N] [--seed S] [--quick]
+//! ft2000-spmv chaos   [--seed S] [--scenarios N] [--canary] [--health-out PATH]
 //! ft2000-spmv info
 //! ```
 
@@ -135,12 +136,17 @@ pub enum Command {
         /// core (needs the `hbcheck` build feature).
         hb: bool,
     },
-    /// Diff two `ft2000.scaling.v1` snapshots into counted regression
-    /// findings (efficiency drop, knee shift, stage-share drift,
-    /// queue-wait SLO burn); exit nonzero on any finding.
+    /// Diff snapshot pairs into counted regression findings and exit
+    /// nonzero on any: two `ft2000.scaling.v1` snapshots
+    /// (`--baseline/--current`: efficiency drop, knee shift,
+    /// stage-share drift, queue-wait SLO burn) and/or two
+    /// `ft2000.health.v1` snapshots
+    /// (`--health-baseline/--health-current`: recovery-p95 burn,
+    /// shed-rate drift, degraded-dwell drift). Each pair is optional
+    /// but must come whole; at least one pair is required.
     ObsReport {
-        baseline: String,
-        current: String,
+        baseline: Option<String>,
+        current: Option<String>,
         /// Relative peak-speedup drop tolerance (default 0.10).
         efficiency_drop: f64,
         /// Knee shift (threads) tolerance (default 2).
@@ -150,6 +156,35 @@ pub enum Command {
         /// Absolute queue-wait p95 SLO in ms; unset derives
         /// `2 * baseline p95 + 1ms`.
         queue_p95_ms: Option<f64>,
+        health_baseline: Option<String>,
+        health_current: Option<String>,
+        /// Absolute recovery-p95 SLO in ms; unset derives
+        /// `2 * baseline p95 + 1ms`.
+        recovery_p95_ms: Option<f64>,
+        /// Absolute shed-rate drift tolerance (default 0.05).
+        shed_rate_drift: f64,
+        /// Absolute degraded-dwell-fraction drift tolerance
+        /// (default 0.10).
+        dwell_drift: f64,
+    },
+    /// Seeded chaos sweep over the serving fleet: replay a fault
+    /// matrix (scenario 0 is the scripted ladder walk), assert
+    /// no-lost-no-duplicated requests and bitwise-correct outputs,
+    /// and emit the merged `ft2000.health.v1` document; exit nonzero
+    /// on any finding.
+    Chaos {
+        seed: u64,
+        scenarios: usize,
+        requests: usize,
+        matrices: usize,
+        shards: usize,
+        faults: usize,
+        retry_budget: usize,
+        /// Plant a ledger bug (drop one shed) — the negative control
+        /// proving the sweep catches broken fault handling.
+        canary: bool,
+        /// Write the merged `ft2000.health.v1` snapshot JSON here.
+        health_out: Option<String>,
     },
     /// Print topology/provenance info.
     Info,
@@ -184,7 +219,7 @@ pub enum MatrixSource {
 }
 
 pub fn usage() -> &'static str {
-    "usage: ft2000-spmv <sweep|train|analyze|verify|report|export|serve-bench|replay|check|obs-report|info> [options]\n\
+    "usage: ft2000-spmv <sweep|train|analyze|verify|report|export|serve-bench|replay|check|obs-report|chaos|info> [options]\n\
      \n\
      sweep    --suite tiny|fast|full   corpus scale (default fast)\n\
      \u{20}        --schedule csr|balanced|csr5|dynamic|sell\n\
@@ -239,11 +274,26 @@ pub fn usage() -> &'static str {
      \u{20}        --knee-shift N (default 2)\n\
      \u{20}        --share-drift F (default 0.10)\n\
      \u{20}        --queue-p95-ms MS (default 2*baseline p95 + 1 ms)\n\
+     \u{20}        --health-baseline A.json --health-current B.json\n\
+     \u{20}                             diff two ft2000.health.v1 snapshots\n\
+     \u{20}                             (each pair optional, at least one)\n\
+     \u{20}        --recovery-p95-ms MS (default 2*baseline p95 + 1 ms)\n\
+     \u{20}        --shed-rate-drift F (default 0.05)\n\
+     \u{20}        --dwell-drift F (default 0.10)\n\
+     chaos    --seed S (default 0xC4A05)  --scenarios N (default 6)\n\
+     \u{20}        --requests N (default 160, per scenario)\n\
+     \u{20}        --matrices N (default 4)  --shards N (default 3)\n\
+     \u{20}        --faults N (default 5, per generated scenario)\n\
+     \u{20}        --retry-budget N (default 3)\n\
+     \u{20}        --canary             plant a ledger bug (negative control;\n\
+     \u{20}                             the sweep must exit nonzero)\n\
+     \u{20}        --health-out PATH    merged ft2000.health.v1 JSON\n\
      info"
 }
 
 /// Flags that take no value (presence toggles).
-const BOOL_FLAGS: &[&str] = &["pool", "spawn", "tune", "quick", "hb", "model"];
+const BOOL_FLAGS: &[&str] =
+    &["pool", "spawn", "tune", "quick", "hb", "model", "canary"];
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
@@ -543,23 +593,65 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             quick: flags.contains_key("quick"),
             hb: flags.contains_key("hb"),
         },
-        "obs-report" => Command::ObsReport {
-            baseline: flags
-                .get("baseline")
-                .cloned()
-                .ok_or_else(|| anyhow!("obs-report needs --baseline PATH"))?,
-            current: flags
-                .get("current")
-                .cloned()
-                .ok_or_else(|| anyhow!("obs-report needs --current PATH"))?,
-            efficiency_drop: parse_f64(&flags, "efficiency-drop", 0.10)?,
-            knee_shift: parse_usize(&flags, "knee-shift", 2)?,
-            share_drift: parse_f64(&flags, "share-drift", 0.10)?,
-            queue_p95_ms: flags
-                .get("queue-p95-ms")
+        "obs-report" => {
+            let baseline = flags.get("baseline").cloned();
+            let current = flags.get("current").cloned();
+            let health_baseline = flags.get("health-baseline").cloned();
+            let health_current = flags.get("health-current").cloned();
+            if baseline.is_some() != current.is_some() {
+                bail!(
+                    "obs-report needs --baseline and --current together"
+                );
+            }
+            if health_baseline.is_some() != health_current.is_some() {
+                bail!(
+                    "obs-report needs --health-baseline and \
+                     --health-current together"
+                );
+            }
+            if baseline.is_none() && health_baseline.is_none() {
+                bail!(
+                    "obs-report needs --baseline/--current and/or \
+                     --health-baseline/--health-current"
+                );
+            }
+            Command::ObsReport {
+                baseline,
+                current,
+                efficiency_drop: parse_f64(&flags, "efficiency-drop", 0.10)?,
+                knee_shift: parse_usize(&flags, "knee-shift", 2)?,
+                share_drift: parse_f64(&flags, "share-drift", 0.10)?,
+                queue_p95_ms: flags
+                    .get("queue-p95-ms")
+                    .map(|s| s.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --queue-p95-ms"))?,
+                health_baseline,
+                health_current,
+                recovery_p95_ms: flags
+                    .get("recovery-p95-ms")
+                    .map(|s| s.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("bad --recovery-p95-ms"))?,
+                shed_rate_drift: parse_f64(&flags, "shed-rate-drift", 0.05)?,
+                dwell_drift: parse_f64(&flags, "dwell-drift", 0.10)?,
+            }
+        }
+        "chaos" => Command::Chaos {
+            seed: flags
+                .get("seed")
                 .map(|s| s.parse())
                 .transpose()
-                .map_err(|_| anyhow!("bad --queue-p95-ms"))?,
+                .map_err(|_| anyhow!("bad --seed"))?
+                .unwrap_or(0xC4A05),
+            scenarios: parse_usize(&flags, "scenarios", 6)?.max(1),
+            requests: parse_usize(&flags, "requests", 160)?.max(1),
+            matrices: parse_usize(&flags, "matrices", 4)?.max(1),
+            shards: parse_usize(&flags, "shards", 3)?.max(1),
+            faults: parse_usize(&flags, "faults", 5)?,
+            retry_budget: parse_usize(&flags, "retry-budget", 3)?,
+            canary: flags.contains_key("canary"),
+            health_out: flags.get("health-out").cloned(),
         },
         "info" => Command::Info,
         other => bail!("unknown command '{other}'\n{}", usage()),
@@ -973,13 +1065,18 @@ mod tests {
                 knee_shift,
                 share_drift,
                 queue_p95_ms,
+                health_baseline,
+                health_current,
+                ..
             } => {
-                assert_eq!(baseline, "/tmp/a.json");
-                assert_eq!(current, "/tmp/b.json");
+                assert_eq!(baseline.as_deref(), Some("/tmp/a.json"));
+                assert_eq!(current.as_deref(), Some("/tmp/b.json"));
                 assert!((efficiency_drop - 0.10).abs() < 1e-12);
                 assert_eq!(knee_shift, 2);
                 assert!((share_drift - 0.10).abs() < 1e-12);
                 assert!(queue_p95_ms.is_none(), "SLO derives from baseline");
+                assert!(health_baseline.is_none());
+                assert!(health_current.is_none());
             }
             _ => panic!("wrong command"),
         }
@@ -1019,6 +1116,127 @@ mod tests {
             parse(&sv(&["obs-report", "--baseline", "a"])).is_err(),
             "--current is required"
         );
+    }
+
+    #[test]
+    fn parses_obs_report_health_pair() {
+        // The health pair alone is a valid invocation.
+        let cli = parse(&sv(&[
+            "obs-report",
+            "--health-baseline",
+            "/tmp/ha.json",
+            "--health-current",
+            "/tmp/hb.json",
+            "--shed-rate-drift",
+            "0.02",
+            "--dwell-drift",
+            "0.25",
+            "--recovery-p95-ms",
+            "9.5",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::ObsReport {
+                baseline,
+                health_baseline,
+                health_current,
+                recovery_p95_ms,
+                shed_rate_drift,
+                dwell_drift,
+                ..
+            } => {
+                assert!(baseline.is_none());
+                assert_eq!(health_baseline.as_deref(), Some("/tmp/ha.json"));
+                assert_eq!(health_current.as_deref(), Some("/tmp/hb.json"));
+                assert_eq!(recovery_p95_ms, Some(9.5));
+                assert!((shed_rate_drift - 0.02).abs() < 1e-12);
+                assert!((dwell_drift - 0.25).abs() < 1e-12);
+            }
+            _ => panic!("wrong command"),
+        }
+        // Both pairs together also parse.
+        assert!(parse(&sv(&[
+            "obs-report",
+            "--baseline",
+            "a",
+            "--current",
+            "b",
+            "--health-baseline",
+            "ha",
+            "--health-current",
+            "hb",
+        ]))
+        .is_ok());
+        // Half a health pair is an error, like half a scaling pair.
+        assert!(parse(&sv(&[
+            "obs-report",
+            "--health-baseline",
+            "ha"
+        ]))
+        .is_err());
+        assert!(parse(&sv(&[
+            "obs-report",
+            "--baseline",
+            "a",
+            "--current",
+            "b",
+            "--health-current",
+            "hb",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn parses_chaos() {
+        let cli = parse(&sv(&["chaos"])).unwrap();
+        match cli.command {
+            Command::Chaos {
+                seed,
+                scenarios,
+                requests,
+                matrices,
+                shards,
+                faults,
+                retry_budget,
+                canary,
+                health_out,
+            } => {
+                assert_eq!(seed, 0xC4A05);
+                assert_eq!(scenarios, 6);
+                assert_eq!(requests, 160);
+                assert_eq!(matrices, 4);
+                assert_eq!(shards, 3);
+                assert_eq!(faults, 5);
+                assert_eq!(retry_budget, 3);
+                assert!(!canary, "the canary is opt-in");
+                assert!(health_out.is_none());
+            }
+            _ => panic!("wrong command"),
+        }
+        let cli = parse(&sv(&[
+            "chaos",
+            "--seed",
+            "42",
+            "--scenarios",
+            "2",
+            "--canary",
+            "--requests",
+            "48",
+            "--health-out",
+            "/tmp/health.json",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Chaos { seed, scenarios, requests, canary, health_out, .. } => {
+                assert_eq!(seed, 42);
+                assert_eq!(scenarios, 2);
+                assert_eq!(requests, 48, "value flags parse after --canary");
+                assert!(canary);
+                assert_eq!(health_out.as_deref(), Some("/tmp/health.json"));
+            }
+            _ => panic!("wrong command"),
+        }
+        assert!(parse(&sv(&["chaos", "--scenarios", "x"])).is_err());
     }
 
     #[test]

@@ -63,6 +63,24 @@ struct State {
     epoch: u64,
     job: Option<Job>,
     shutdown: bool,
+    /// Fault-injection stall mask: bit `lane` set means worker lane
+    /// `lane` (1-based, the tally index) must not claim new slots. An
+    /// in-flight slot always finishes — the mask gates *claims*, so a
+    /// stalled lane parks and the dispatcher plus the healthy lanes
+    /// cover the job (a straggler degrades the dispatch, it never
+    /// wedges it). Lanes >= 64 are never maskable.
+    stalled: u64,
+    /// When set, the dispatcher's completion-latch wait wakes every
+    /// `latch_timeout` to count the overdue join instead of blocking
+    /// forever. It must keep waiting — abandoning claimed slots would
+    /// free the borrowed closure under a running worker — but the
+    /// counted timeout is the health signal degradation policies key
+    /// off.
+    latch_timeout: Option<Duration>,
+    /// Latch waits that exceeded `latch_timeout` (monotone).
+    latch_timeouts: u64,
+    /// Jobs published while at least one lane was stalled (monotone).
+    degraded_dispatches: u64,
 }
 
 /// Per-lane busy accounting (lane 0 = the dispatching thread, lane
@@ -206,6 +224,10 @@ impl ExecPool {
                 epoch: 0,
                 job: None,
                 shutdown: false,
+                stalled: 0,
+                latch_timeout: None,
+                latch_timeouts: 0,
+                degraded_dispatches: 0,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
@@ -292,6 +314,53 @@ impl ExecPool {
         self.started.elapsed().as_secs_f64()
     }
 
+    /// Mark worker lane `lane` (1-based tally index, `1..=n_workers`)
+    /// stalled or healthy. A stalled lane stops claiming slots — its
+    /// in-flight slot, if any, still completes — so injected
+    /// stragglers degrade dispatches to the remaining lanes instead
+    /// of wedging the latch. Clearing a stall wakes the pool so a
+    /// revived lane can claim pending work. Lanes >= 64 are ignored.
+    pub fn set_lane_stalled(&self, lane: usize, stalled: bool) {
+        if lane == 0 || lane >= 64 {
+            return;
+        }
+        let bit = 1u64 << lane;
+        let mut st = self.shared.lock();
+        if stalled {
+            st.stalled |= bit;
+        } else {
+            st.stalled &= !bit;
+            drop(st);
+            self.shared.work_cv.notify_all();
+        }
+    }
+
+    /// The current stall mask (bit `lane` = worker lane `lane`).
+    pub fn stalled_lanes(&self) -> u64 {
+        self.shared.lock().stalled
+    }
+
+    /// Bound the dispatcher's completion-latch wait: overdue joins
+    /// are counted in [`ExecPool::latch_timeouts`] every `timeout`
+    /// instead of blocking silently. `None` restores the unbounded
+    /// wait. Soundness note: the latch still waits out every claimed
+    /// slot — the timeout is a *counted health signal*, not an
+    /// abandonment (the borrowed closure must outlive every worker).
+    pub fn set_latch_timeout(&self, timeout: Option<Duration>) {
+        self.shared.lock().latch_timeout = timeout;
+    }
+
+    /// Completion-latch waits that exceeded the configured timeout.
+    pub fn latch_timeouts(&self) -> u64 {
+        self.shared.lock().latch_timeouts
+    }
+
+    /// Jobs published while at least one lane was stalled — each one
+    /// ran degraded on the dispatcher plus the healthy lanes.
+    pub fn degraded_dispatches(&self) -> u64 {
+        self.shared.lock().degraded_dispatches
+    }
+
     /// Execute `work(slot)` for every `slot in 0..n_slots` across the
     /// resident workers plus the calling thread, returning once every
     /// slot has completed. Slots must be safe to run concurrently
@@ -331,6 +400,9 @@ impl ExecPool {
         {
             let mut st = self.shared.lock();
             st.epoch += 1;
+            if st.stalled != 0 {
+                st.degraded_dispatches += 1;
+            }
             st.job = Some(Job {
                 work: raw,
                 n_slots,
@@ -371,11 +443,30 @@ impl ExecPool {
                 if job.completed == job.n_slots {
                     break job.panicked;
                 }
-                st = self
-                    .shared
-                    .done_cv
-                    .wait(st)
-                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                let latch_timeout = st.latch_timeout;
+                st = match latch_timeout {
+                    Some(d) => {
+                        let (mut g, wait) = self
+                            .shared
+                            .done_cv
+                            .wait_timeout(st, d)
+                            .unwrap_or_else(
+                                std::sync::PoisonError::into_inner,
+                            );
+                        if wait.timed_out() {
+                            // Overdue join: count it and keep waiting
+                            // — claimed slots borrow the closure, so
+                            // the latch may never be abandoned.
+                            g.latch_timeouts += 1;
+                        }
+                        g
+                    }
+                    None => self
+                        .shared
+                        .done_cv
+                        .wait(st)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner),
+                };
             };
             st.job = None;
             break done;
@@ -416,13 +507,17 @@ fn erase<'a>(work: &'a (dyn Fn(usize) + Sync + 'a)) -> RawWork {
 
 fn worker_loop(lane: usize, shared: &Shared) {
     let mut seen_epoch = 0u64;
+    let stall_bit = if lane < 64 { 1u64 << lane } else { 0 };
     loop {
         let mut st = shared.lock();
         loop {
             if st.shutdown {
                 return;
             }
-            if st.epoch != seen_epoch && st.job.is_some() {
+            if st.stalled & stall_bit == 0
+                && st.epoch != seen_epoch
+                && st.job.is_some()
+            {
                 break;
             }
             st = shared
@@ -431,10 +526,18 @@ fn worker_loop(lane: usize, shared: &Shared) {
                 .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
         seen_epoch = st.epoch;
-        while let Some((w, slot)) = Shared::claim(&mut st) {
-            drop(st);
-            shared.complete(lane, w, slot);
-            st = shared.lock();
+        // The stall mask gates *claims* only: a lane stalled mid-job
+        // finishes its in-flight slot (in `complete`, outside the
+        // lock) and simply stops taking more.
+        while st.stalled & stall_bit == 0 {
+            match Shared::claim(&mut st) {
+                Some((w, slot)) => {
+                    drop(st);
+                    shared.complete(lane, w, slot);
+                    st = shared.lock();
+                }
+                None => break,
+            }
         }
         drop(st);
     }
@@ -587,5 +690,96 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn stalled_lane_dispatch_degrades_but_completes() {
+        let pool = ExecPool::new(2);
+        // Stall worker lane 1 permanently: it must stop claiming, the
+        // dispatcher plus lane 2 must still cover every slot, and the
+        // job must be counted as a degraded dispatch — not a hang.
+        pool.set_lane_stalled(1, true);
+        assert_eq!(pool.stalled_lanes(), 1 << 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+        assert!(
+            pool.degraded_dispatches() >= 1,
+            "a dispatch under a stalled lane must be counted degraded"
+        );
+        assert_eq!(
+            pool.worker_tallies()[1].0,
+            0,
+            "a stalled lane must not claim slots while stalled"
+        );
+        // Revive the lane: the pool returns to full-width service.
+        pool.set_lane_stalled(1, false);
+        assert_eq!(pool.stalled_lanes(), 0);
+        let before = pool.degraded_dispatches();
+        let hits = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+        assert_eq!(
+            pool.degraded_dispatches(),
+            before,
+            "a healthy dispatch must not be counted degraded"
+        );
+        // Lane 0 (the dispatcher) and out-of-range lanes are never
+        // maskable: the dispatcher always participates, so `run` can
+        // never deadlock even with every worker stalled.
+        pool.set_lane_stalled(0, true);
+        pool.set_lane_stalled(64, true);
+        assert_eq!(pool.stalled_lanes(), 0);
+    }
+
+    #[test]
+    fn latch_timeout_counts_overdue_joins_without_abandoning() {
+        // Timing-sensitive (real sleeps); Miri's serial scheduler
+        // would make the margins meaningless.
+        if cfg!(miri) {
+            return;
+        }
+        let pool = ExecPool::new(1);
+        pool.set_latch_timeout(Some(Duration::from_millis(20)));
+        // Choreography: worker lane 1 starts stalled, so the
+        // dispatcher deterministically claims slot 0. Slot 0 revives
+        // the lane and spins until the worker has entered slot 1,
+        // then returns — the dispatcher reaches the completion latch
+        // while the worker is still sleeping, so the bounded wait
+        // must time out (counted) and then still join normally.
+        pool.set_lane_stalled(1, true);
+        let worker_in_slot = AtomicUsize::new(0);
+        pool.run(2, &|s| {
+            if s == 0 {
+                pool.set_lane_stalled(1, false);
+                let t0 = Instant::now();
+                while worker_in_slot.load(Ordering::Acquire) == 0 {
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(5),
+                        "worker never claimed the remaining slot"
+                    );
+                    std::thread::yield_now();
+                }
+            } else {
+                worker_in_slot.store(1, Ordering::Release);
+                std::thread::sleep(Duration::from_millis(120));
+            }
+        });
+        assert!(
+            pool.latch_timeouts() >= 1,
+            "an overdue completion latch must be a counted timeout"
+        );
+        // The latch still joined: both slots completed exactly once
+        // and the pool stays serviceable with the timeout armed.
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+        pool.set_latch_timeout(None);
     }
 }

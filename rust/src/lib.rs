@@ -59,7 +59,14 @@
 //!   the event logs captured by [`util::ordatomic`]'s instrumented
 //!   atomics (`--features hbcheck`; zero-cost passthrough otherwise)
 //!   — reporting both unordered conflicting accesses and
-//!   ordering-strength waste.
+//!   ordering-strength waste;
+//! * [`resil`] — deterministic fault injection and graceful
+//!   degradation: seeded virtual-clock fault plans (lane stalls,
+//!   worker panics, shard outages, queue spikes, corrupt payloads),
+//!   the health tracker / degraded-mode ladder the serve path
+//!   consults on every dispatch, shard failover and bounded-retry
+//!   backoff, the versioned `ft2000.health.v1` snapshot, and the
+//!   `ft2000-spmv chaos` replayable fault-matrix sweep.
 
 pub mod analysis;
 pub mod autotune;
@@ -72,6 +79,7 @@ pub mod exec;
 pub mod mlmodel;
 pub mod obs;
 pub mod reorder;
+pub mod resil;
 pub mod runtime;
 pub mod sched;
 pub mod service;

@@ -130,13 +130,46 @@ fn run(cli: Cli) -> Result<()> {
             knee_shift,
             share_drift,
             queue_p95_ms,
-        } => obs_report_cmd(
-            &baseline,
-            &current,
+            health_baseline,
+            health_current,
+            recovery_p95_ms,
+            shed_rate_drift,
+            dwell_drift,
+        } => obs_report_cmd(ObsReportCmd {
+            baseline,
+            current,
             efficiency_drop,
             knee_shift,
             share_drift,
             queue_p95_ms,
+            health_baseline,
+            health_current,
+            recovery_p95_ms,
+            shed_rate_drift,
+            dwell_drift,
+        }),
+        Command::Chaos {
+            seed,
+            scenarios,
+            requests,
+            matrices,
+            shards,
+            faults,
+            retry_budget,
+            canary,
+            health_out,
+        } => chaos_cmd(
+            ft2000_spmv::resil::ChaosConfig {
+                seed,
+                scenarios,
+                requests,
+                matrices,
+                shards,
+                faults,
+                retry_budget,
+                canary,
+            },
+            health_out,
         ),
         Command::Info => info(),
     }
@@ -327,44 +360,71 @@ fn run_hb(
     )
 }
 
-/// `ft2000-spmv obs-report` — diff two `ft2000.scaling.v1` snapshots
-/// (baseline vs current) into counted regression findings and exit
-/// nonzero on any, so CI can gate scalability the way `check` gates
-/// structure.
-fn obs_report_cmd(
-    baseline: &str,
-    current: &str,
+/// Parsed `obs-report` invocation (bundled: the flag list outgrew a
+/// readable argument list once the health pair joined the scaling
+/// pair).
+struct ObsReportCmd {
+    baseline: Option<String>,
+    current: Option<String>,
     efficiency_drop: f64,
     knee_shift: usize,
     share_drift: f64,
     queue_p95_ms: Option<f64>,
-) -> Result<()> {
+    health_baseline: Option<String>,
+    health_current: Option<String>,
+    recovery_p95_ms: Option<f64>,
+    shed_rate_drift: f64,
+    dwell_drift: f64,
+}
+
+/// `ft2000-spmv obs-report` — diff snapshot pairs (baseline vs
+/// current) into counted regression findings and exit nonzero on any,
+/// so CI can gate scalability and fault-handling health the way
+/// `check` gates structure. The scaling pair feeds
+/// `obs::scaling::compare` (`ft2000.scaling.v1`); the health pair
+/// feeds `resil::compare_health` (`ft2000.health.v1`); findings from
+/// both merge into one report.
+fn obs_report_cmd(cmd: ObsReportCmd) -> Result<()> {
     use ft2000_spmv::obs::scaling::{compare, CompareThresholds};
+    use ft2000_spmv::resil::{compare_health, HealthThresholds};
     let read = |path: &str| -> Result<ft2000_spmv::util::json::Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
         ft2000_spmv::util::json::parse(&text)
             .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
     };
-    let base = read(baseline)?;
-    let cur = read(current)?;
-    let th = CompareThresholds {
-        efficiency_drop,
-        knee_shift,
-        share_drift,
-        queue_p95_ms,
-    };
-    let report = compare(&base, &cur, &th);
+    let mut report = ft2000_spmv::check::CheckReport::new();
+    let mut diffed: Vec<String> = Vec::new();
+    if let (Some(b), Some(c)) = (&cmd.baseline, &cmd.current) {
+        let th = CompareThresholds {
+            efficiency_drop: cmd.efficiency_drop,
+            knee_shift: cmd.knee_shift,
+            share_drift: cmd.share_drift,
+            queue_p95_ms: cmd.queue_p95_ms,
+        };
+        report.merge(compare(&read(b)?, &read(c)?, &th));
+        diffed.push(format!("scaling {b} -> {c}"));
+    }
+    if let (Some(b), Some(c)) = (&cmd.health_baseline, &cmd.health_current)
+    {
+        let th = HealthThresholds {
+            recovery_p95_ms: cmd.recovery_p95_ms,
+            shed_rate_drift: cmd.shed_rate_drift,
+            dwell_drift: cmd.dwell_drift,
+        };
+        report.merge(compare_health(&read(b)?, &read(c)?, &th));
+        diffed.push(format!("health {b} -> {c}"));
+    }
     if report.is_clean() {
         println!(
-            "obs-report: clean — {} scalability invariants hold \
-             ({baseline} -> {current})",
-            report.checked
+            "obs-report: clean — {} invariants hold ({})",
+            report.checked,
+            diffed.join(", ")
         );
         return Ok(());
     }
     let mut t = Table::new(
-        format!("Scalability regressions ({})", report.findings.len()),
+        format!("Observability regressions ({})", report.findings.len()),
         &["subject", "invariant", "detail"],
     );
     for f in &report.findings {
@@ -379,6 +439,57 @@ fn obs_report_cmd(
         "{} finding(s) across {} checked invariants",
         report.findings.len(),
         report.checked
+    )
+}
+
+/// `ft2000-spmv chaos` — run the seeded fault-matrix sweep
+/// ([`ft2000_spmv::resil::chaos::run`]) and exit nonzero on any
+/// finding, so CI can gate graceful degradation the way `check` gates
+/// structure. `--health-out` writes the merged `ft2000.health.v1`
+/// document for a later `obs-report --health-baseline/--health-current`
+/// diff.
+fn chaos_cmd(
+    cfg: ft2000_spmv::resil::ChaosConfig,
+    health_out: Option<String>,
+) -> Result<()> {
+    eprintln!(
+        "chaos: {} scenario(s) x {} steps, {} shards, seed {:#x}{}...",
+        cfg.scenarios,
+        cfg.requests,
+        cfg.shards,
+        cfg.seed,
+        if cfg.canary { " (canary planted)" } else { "" }
+    );
+    let out = ft2000_spmv::resil::chaos::run(&cfg);
+    if let Some(path) = &health_out {
+        std::fs::write(path, out.health.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    if out.report.is_clean() {
+        println!(
+            "chaos: clean — {} invariants over {} scenario(s), {} requests \
+             submitted: none lost or duplicated, every served output \
+             bitwise-correct, every fault a counted graceful outcome",
+            out.report.checked, out.scenarios, out.submitted
+        );
+        return Ok(());
+    }
+    let mut t = Table::new(
+        format!("Chaos findings ({})", out.report.findings.len()),
+        &["subject", "invariant", "detail"],
+    );
+    for f in &out.report.findings {
+        t.row(vec![
+            f.subject.clone(),
+            f.invariant.to_string(),
+            f.detail.clone(),
+        ]);
+    }
+    t.print();
+    anyhow::bail!(
+        "{} finding(s) across {} checked invariants",
+        out.report.findings.len(),
+        out.report.checked
     )
 }
 

@@ -1,0 +1,903 @@
+//! The seeded chaos sweep — a *replayable* fault-matrix experiment
+//! over a live mini-fleet.
+//!
+//! [`run`] builds a small sharded deployment (one pinned
+//! [`ServeEngine`] per shard over one shared registry), schedules
+//! faults on a virtual step clock, and drives deterministic traffic
+//! through the outage. Scenario 0 is a scripted ladder walk that
+//! exercises every rung (stall → reduced lanes, double stall →
+//! sequential fallback, panic containment, outage + failover, queue
+//! spike + bounded retry, corrupt-payload admission); scenarios 1..
+//! replay seeded [`FaultPlan`]s. Two invariant families are asserted
+//! throughout:
+//!
+//! * **No lost, no duplicated requests** — every submitted request
+//!   ends in exactly one counted terminal outcome
+//!   (`served_ok + shed + rejected == submitted`, per scenario).
+//! * **Bitwise-correct outputs** — every served output equals the
+//!   matrix's healthy reference bit for bit (the pooled plan
+//!   reference for normal serves, the `Csr::spmv` reference for
+//!   sequential-fallback serves — each path is individually
+//!   deterministic).
+//!
+//! Determinism contract: the driver's decisions depend only on the
+//! seed and the step counter (the virtual clock `now_ms = step`), and
+//! the fleet health document is merged from the *driver's* scenario
+//! ledgers — engine-internal trackers are fed by wall-clock busy
+//! tallies and stay out of the snapshot — so the same seed produces
+//! byte-identical [`ChaosOutcome::health`] across runs.
+//!
+//! Injected worker panics print the standard panic line to stderr
+//! (the hook runs before containment); that noise is the evidence
+//! that a real unwind crossed the pool and was survived.
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::check::{CheckReport, Finding};
+use crate::corpus::suite::SuiteSpec;
+use crate::service::{
+    MatrixRegistry, PlacementPolicy, PlanConfig, Planner, ServeEngine,
+    ShardPlacement,
+};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+use super::health::{DegradedMode, HealthTracker};
+use super::{decorrelated_jitter, FaultEvent, FaultKind, FaultPlan,
+    FaultPlanConfig};
+
+/// Per-shard model queue capacity (requests).
+const QUEUE_CAP: usize = 8;
+/// Requests drained per shard per virtual step.
+const DRAIN_PER_STEP: usize = 2;
+/// Deadline: queued requests older than this many steps are shed.
+const DEADLINE_STEPS: u64 = 6;
+/// Admissions attempted by one queue-pressure spike.
+const SPIKE_BURST: usize = 30;
+/// Worker lanes per shard pool.
+const LANES: usize = 4;
+
+/// Chaos sweep parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Root seed; scenario `i` derives its fault plan from it.
+    pub seed: u64,
+    /// Scenarios to run (scenario 0 is always the scripted ladder
+    /// walk; the rest replay seeded fault plans).
+    pub scenarios: usize,
+    /// Virtual steps per scenario — one background request per step.
+    pub requests: usize,
+    /// Matrices registered from the tiny synthetic suite.
+    pub matrices: usize,
+    /// Shards (one pinned engine + one model queue each).
+    pub shards: usize,
+    /// Faults per generated scenario.
+    pub faults: usize,
+    /// Bounded re-admission budget per overloaded request.
+    pub retry_budget: usize,
+    /// Deliberately drop one shed from the ledger (scenario 0) — the
+    /// planted fault-handling bug the CI smoke proves the sweep
+    /// catches.
+    pub canary: bool,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0xC4A05,
+            scenarios: 6,
+            requests: 160,
+            matrices: 4,
+            shards: 3,
+            faults: 5,
+            retry_budget: 3,
+            canary: false,
+        }
+    }
+}
+
+/// What a sweep produced: the findings report, the merged
+/// `ft2000.health.v1` document of the driver ledgers, and the ledger
+/// denominators.
+pub struct ChaosOutcome {
+    pub report: CheckReport,
+    pub health: Json,
+    pub scenarios: usize,
+    pub submitted: u64,
+}
+
+/// One queued model request: a matrix (by suite position) and its
+/// enqueue step (deadline accounting).
+struct Pending {
+    matrix: usize,
+    enq: u64,
+}
+
+/// One live fault window.
+struct Active {
+    expire: u64,
+    kind: FaultKind,
+    shard: usize,
+    lane: usize,
+}
+
+/// Terminal outcome of one admission attempt in the model router.
+enum Admit {
+    Queued,
+    Shed,
+    Rejected,
+}
+
+fn check(
+    report: &mut CheckReport,
+    ok: bool,
+    subject: String,
+    invariant: &'static str,
+    detail: impl FnOnce() -> String,
+) {
+    report.checked += 1;
+    if !ok {
+        report.findings.push(Finding {
+            subject,
+            invariant,
+            detail: detail(),
+        });
+    }
+}
+
+fn bitwise_eq(got: &[f64], want: &[f64]) -> bool {
+    got.len() == want.len()
+        && got
+            .iter()
+            .zip(want)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+}
+
+fn stalls_on(active: &[Active], shard: usize) -> usize {
+    active
+        .iter()
+        .filter(|a| a.kind == FaultKind::LaneStall && a.shard == shard)
+        .count()
+}
+
+/// Route + enqueue one request into the model queues: overrides and
+/// the down set first, then the capacity check, then a bounded-budget
+/// retry scan over the survivors with decorrelated-jitter (virtual)
+/// backoff. The caller counts the returned terminal outcome.
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    queues: &mut [VecDeque<Pending>],
+    down: &[bool],
+    tracker: &HealthTracker,
+    rng: &mut Pcg32,
+    retry_budget: usize,
+    matrix: usize,
+    route: usize,
+    step: u64,
+) -> Admit {
+    let shards = queues.len();
+    if down.iter().all(|&d| d) {
+        return Admit::Rejected;
+    }
+    let mut candidate = route % shards;
+    if down[candidate] {
+        match (1..shards)
+            .map(|k| (candidate + k) % shards)
+            .find(|&s| !down[s])
+        {
+            Some(s) => {
+                tracker.note_failed_over(1);
+                candidate = s;
+            }
+            None => return Admit::Rejected,
+        }
+    }
+    if queues[candidate].len() < QUEUE_CAP {
+        queues[candidate].push_back(Pending { matrix, enq: step });
+        return Admit::Queued;
+    }
+    let mut backoff = 1.0;
+    for attempt in 0..retry_budget {
+        // Bounded retry budget; the backoff is virtual milliseconds —
+        // exercised for determinism, never slept on.
+        backoff = decorrelated_jitter(rng, backoff, 1.0, 8.0);
+        let next = (candidate + 1 + attempt) % shards;
+        if down[next] {
+            continue;
+        }
+        tracker.note_retried(1);
+        if queues[next].len() < QUEUE_CAP {
+            queues[next].push_back(Pending { matrix, enq: step });
+            return Admit::Queued;
+        }
+    }
+    Admit::Shed
+}
+
+/// The scripted ladder walk of scenario 0 — every fault kind once,
+/// ordered so each graceful-degradation mechanism is exercised and
+/// recovered inside the step budget. Lane targets use the
+/// [`FaultEvent`] encoding (`shard = target % shards`,
+/// `lane = 1 + target / shards`).
+fn scripted_events(shards: usize) -> Vec<FaultEvent> {
+    let s1 = 1 % shards;
+    let s2 = 2 % shards;
+    vec![
+        // Shard 0 lane 1 stalls: ladder -> ReducedLanes.
+        FaultEvent {
+            step: 2,
+            kind: FaultKind::LaneStall,
+            target: 0,
+            duration: 6,
+        },
+        // Shard 0 lane 2 turns straggler: EWMA marks, no escalation.
+        FaultEvent {
+            step: 3,
+            kind: FaultKind::LaneSlow,
+            target: shards,
+            duration: 2,
+        },
+        // Second stall on shard 0: ladder -> Sequential fallback.
+        FaultEvent {
+            step: 4,
+            kind: FaultKind::LaneStall,
+            target: shards,
+            duration: 4,
+        },
+        // A slot closure panics mid-dispatch on shard s1.
+        FaultEvent {
+            step: 6,
+            kind: FaultKind::WorkerPanic,
+            target: s1,
+            duration: 1,
+        },
+        // Shard s1 goes dark: failover re-homes its matrices.
+        FaultEvent {
+            step: 10,
+            kind: FaultKind::ShardOutage,
+            target: s1,
+            duration: 5,
+        },
+        // Shard s2 blinks.
+        FaultEvent {
+            step: 14,
+            kind: FaultKind::ShardFlap,
+            target: s2,
+            duration: 1,
+        },
+        // Queue-pressure burst far past total capacity: bounded
+        // retries spill to the other shards, the excess is shed.
+        FaultEvent {
+            step: 16,
+            kind: FaultKind::QueueSpike,
+            target: 0,
+            duration: 1,
+        },
+        // Malformed payloads reach admission: counted rejections.
+        FaultEvent {
+            step: 18,
+            kind: FaultKind::CorruptPayload,
+            target: 0,
+            duration: 1,
+        },
+    ]
+}
+
+/// Run one scenario; returns the number of submitted requests.
+fn run_scenario(
+    cfg: &ChaosConfig,
+    scen: usize,
+    report: &mut CheckReport,
+    fleet: &HealthTracker,
+) -> u64 {
+    let shards = cfg.shards.max(1);
+    let steps = (cfg.requests as u64).max(24);
+    let subj = format!("chaos scenario {scen} (seed {:#x})", cfg.seed);
+
+    // One shared registry of tiny suite matrices, one pinned engine
+    // per shard (4 modeled cores each), latch timeouts armed so even
+    // a wedged join would surface as a counter, not a hang.
+    let mut reg = MatrixRegistry::new();
+    let ids = reg.register_suite(&SuiteSpec::tiny(), Some(cfg.matrices.max(1)));
+    let registry = Arc::new(reg);
+    let engines: Vec<ServeEngine> = (0..shards)
+        .map(|s| {
+            let e = ServeEngine::shared_pinned(
+                registry.clone(),
+                Planner::Heuristic,
+                PlanConfig::default(),
+                (LANES * s, LANES * s + LANES),
+            );
+            if let Some(pool) = e.pool() {
+                pool.set_latch_timeout(Some(Duration::from_millis(250)));
+            }
+            e
+        })
+        .collect();
+    let nm = ids.len();
+    let weights: Vec<f64> = ids
+        .iter()
+        .map(|&id| registry.entry(id).csr.nnz() as f64)
+        .collect();
+    let placement = ShardPlacement::build(
+        &ids,
+        &weights,
+        shards,
+        PlacementPolicy::HotReplicate { hot: 1 },
+    );
+
+    // Deterministic inputs and the two bitwise references per matrix:
+    // the sequential `Csr::spmv` output, and each engine's own healthy
+    // pooled output (identical plan => identical bits thereafter).
+    let xs: Vec<Vec<f64>> = ids
+        .iter()
+        .map(|&id| {
+            (0..registry.entry(id).csr.n_cols)
+                .map(|i| ((i % 7) as f64) * 0.25 - 0.5)
+                .collect()
+        })
+        .collect();
+    let refs_seq: Vec<Vec<f64>> = ids
+        .iter()
+        .enumerate()
+        .map(|(m, &id)| {
+            let csr = &registry.entry(id).csr;
+            let mut y = vec![0.0; csr.n_rows];
+            csr.spmv(&xs[m], &mut y);
+            y
+        })
+        .collect();
+    let mut refs_plan: Vec<Vec<Vec<f64>>> = Vec::with_capacity(shards);
+    for e in &engines {
+        let mut per_matrix = Vec::with_capacity(nm);
+        for (m, &id) in ids.iter().enumerate() {
+            match e.execute_batch(id, &[xs[m].as_slice()]) {
+                Ok(out) => per_matrix.push(out.ys.into_iter().next()
+                    .unwrap_or_default()),
+                Err(err) => {
+                    check(
+                        report,
+                        false,
+                        subj.clone(),
+                        "serve-error",
+                        || format!("healthy warmup failed: {err}"),
+                    );
+                    per_matrix.push(refs_seq[m].clone());
+                }
+            }
+        }
+        refs_plan.push(per_matrix);
+    }
+
+    // Scenario state: the driver's ledger, model queues, fault plan.
+    let tracker = HealthTracker::new();
+    let sseed = cfg
+        .seed
+        .wrapping_add((scen as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut rng = Pcg32::new(sseed ^ 0x1C4A);
+    let events = if scen == 0 {
+        scripted_events(shards)
+    } else {
+        let plan_cfg = FaultPlanConfig {
+            steps,
+            faults: cfg.faults,
+            lanes: LANES,
+            shards,
+        };
+        FaultPlan::generate(sseed, &plan_cfg).events().to_vec()
+    };
+    let mut queues: Vec<VecDeque<Pending>> =
+        (0..shards).map(|_| VecDeque::new()).collect();
+    let mut down = vec![false; shards];
+    let mut overrides: HashMap<usize, usize> = HashMap::new();
+    let mut active: Vec<Active> = Vec::new();
+    let mut ev_idx = 0usize;
+    let mut submitted = 0u64;
+    let mut applied = 0u64;
+    let mut canary_skips: u64 = if cfg.canary && scen == 0 { 1 } else { 0 };
+
+    // One serve of the queue head, with the bitwise-output check
+    // against the reference matching the engine's current rung.
+    macro_rules! serve_one {
+        ($s:expr, $m:expr) => {{
+            let s: usize = $s;
+            let m: usize = $m;
+            let _ = tracker.note_dispatch();
+            let sequential =
+                engines[s].health().mode() == DegradedMode::Sequential;
+            match engines[s].execute_batch(ids[m], &[xs[m].as_slice()]) {
+                Ok(out) => {
+                    let want = if sequential {
+                        &refs_seq[m]
+                    } else {
+                        &refs_plan[s][m]
+                    };
+                    check(
+                        report,
+                        bitwise_eq(&out.ys[0], want),
+                        subj.clone(),
+                        "bitwise-output",
+                        || {
+                            format!(
+                                "matrix {m} on shard {s} diverged from its \
+                                 healthy reference (sequential={sequential})"
+                            )
+                        },
+                    );
+                    tracker.note_served(1);
+                    if stalls_on(&active, s) > 0 {
+                        tracker.note_degraded_dispatch();
+                    }
+                }
+                Err(err) => check(
+                    report,
+                    false,
+                    subj.clone(),
+                    "serve-error",
+                    || format!("matrix {m} on shard {s} errored: {err}"),
+                ),
+            }
+        }};
+    }
+
+    let mut step: u64 = 0;
+    let mut extra: u64 = 0;
+    loop {
+        let injecting = step < steps;
+        let now_ms = step as f64;
+
+        // 1. Expire fault windows due at this step (or everything,
+        // once the injection horizon is past).
+        let mut expired: Vec<Active> = Vec::new();
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].expire <= step || !injecting {
+                expired.push(active.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        for a in expired {
+            match a.kind {
+                FaultKind::LaneStall => {
+                    if let Some(pool) = engines[a.shard].pool() {
+                        pool.set_lane_stalled(a.lane, false);
+                    }
+                    if stalls_on(&active, a.shard) == 0 {
+                        engines[a.shard].health().recover(now_ms);
+                    }
+                }
+                FaultKind::ShardOutage | FaultKind::ShardFlap => {
+                    down[a.shard] = false;
+                    let s = a.shard;
+                    overrides.retain(|id, _| {
+                        placement.home(*id) != Some(s)
+                    });
+                }
+                _ => {}
+            }
+        }
+        if active.is_empty() {
+            tracker.recover(now_ms);
+        }
+
+        // 2. Apply fault events due at this step.
+        while injecting
+            && ev_idx < events.len()
+            && events[ev_idx].step == step
+        {
+            let e = events[ev_idx];
+            ev_idx += 1;
+            applied += 1;
+            tracker.note_injected(e.kind);
+            match e.kind {
+                FaultKind::LaneStall => {
+                    let s = e.target % shards;
+                    let lane = 1 + e.target / shards;
+                    if let Some(pool) = engines[s].pool() {
+                        pool.set_lane_stalled(lane, true);
+                    }
+                    active.push(Active {
+                        expire: step + e.duration,
+                        kind: e.kind,
+                        shard: s,
+                        lane,
+                    });
+                    let to = if stalls_on(&active, s) >= 2 {
+                        DegradedMode::Sequential
+                    } else {
+                        DegradedMode::ReducedLanes
+                    };
+                    tracker.escalate(to, now_ms);
+                    engines[s].health().escalate(to, now_ms);
+                    if to == DegradedMode::Sequential {
+                        // Prove the last rung end to end: serve one
+                        // request through the wedged shard right now
+                        // and require the sequential-fallback counter
+                        // to move.
+                        let before = engines[s]
+                            .health()
+                            .totals()
+                            .sequential_dispatches;
+                        let m = (step as usize) % nm;
+                        submitted += 1;
+                        serve_one!(s, m);
+                        let after = engines[s]
+                            .health()
+                            .totals()
+                            .sequential_dispatches;
+                        check(
+                            report,
+                            after > before,
+                            subj.clone(),
+                            "sequential-fallback",
+                            || format!(
+                                "shard {s} served in Sequential mode but \
+                                 the fallback counter did not move"
+                            ),
+                        );
+                    }
+                }
+                FaultKind::LaneSlow => {
+                    let lane = (1 + e.target / shards).min(LANES);
+                    // Synthetic straggler: feed the EWMA detector a
+                    // deterministic collapsed share for this lane.
+                    let mut busy = [100u64; LANES + 1];
+                    busy[lane] = 4;
+                    for _ in 0..12 {
+                        tracker.observe_lanes(&busy);
+                    }
+                }
+                FaultKind::WorkerPanic => {
+                    let s = e.target % shards;
+                    if let Some(pool) = engines[s].pool() {
+                        let contained = catch_unwind(AssertUnwindSafe(|| {
+                            pool.run(2, &|_| {
+                                panic!("chaos: injected worker panic")
+                            });
+                        }))
+                        .is_err();
+                        check(
+                            report,
+                            contained,
+                            subj.clone(),
+                            "panic-contained",
+                            || format!(
+                                "shard {s}: injected slot panic did not \
+                                 propagate to the dispatcher"
+                            ),
+                        );
+                        if contained {
+                            tracker.note_panic_contained();
+                        }
+                    }
+                }
+                FaultKind::ShardOutage | FaultKind::ShardFlap => {
+                    let s = e.target % shards;
+                    if !down[s] {
+                        down[s] = true;
+                        let alive: Vec<usize> = (0..shards)
+                            .filter(|&k| !down[k])
+                            .collect();
+                        let plan = placement.reassign_plan(s, &alive);
+                        tracker.note_failed_over(plan.len() as u64);
+                        for (id, to) in plan {
+                            overrides.insert(id, to);
+                        }
+                        tracker.escalate(DegradedMode::ReducedLanes, now_ms);
+                        active.push(Active {
+                            expire: step + e.duration,
+                            kind: e.kind,
+                            shard: s,
+                            lane: 0,
+                        });
+                        // Re-admit the dark shard's backlog onto the
+                        // survivors under the bounded retry budget.
+                        let backlog: Vec<Pending> =
+                            queues[s].drain(..).collect();
+                        for p in backlog {
+                            let route = overrides
+                                .get(&ids[p.matrix])
+                                .copied()
+                                .unwrap_or(s);
+                            match admit(
+                                &mut queues,
+                                &down,
+                                &tracker,
+                                &mut rng,
+                                cfg.retry_budget,
+                                p.matrix,
+                                route,
+                                p.enq,
+                            ) {
+                                Admit::Queued => {}
+                                Admit::Shed => {
+                                    if canary_skips > 0 {
+                                        canary_skips -= 1;
+                                    } else {
+                                        tracker.note_shed(1);
+                                    }
+                                }
+                                Admit::Rejected => tracker.note_rejected(1),
+                            }
+                        }
+                    }
+                }
+                FaultKind::QueueSpike => {
+                    let s = e.target % shards;
+                    for _ in 0..SPIKE_BURST {
+                        submitted += 1;
+                        match admit(
+                            &mut queues,
+                            &down,
+                            &tracker,
+                            &mut rng,
+                            cfg.retry_budget,
+                            0,
+                            s,
+                            step,
+                        ) {
+                            Admit::Queued => {}
+                            Admit::Shed => {
+                                if canary_skips > 0 {
+                                    canary_skips -= 1;
+                                } else {
+                                    tracker.note_shed(1);
+                                }
+                            }
+                            Admit::Rejected => tracker.note_rejected(1),
+                        }
+                    }
+                }
+                FaultKind::CorruptPayload => {
+                    // Both corruption shapes through the admission
+                    // verifier on a scratch registry: a structurally
+                    // corrupt CSR and an unparseable payload. Each
+                    // must be a counted rejection, never a panic.
+                    let mut scratch_reg = MatrixRegistry::new();
+                    let mut bad = registry.entry(ids[0]).csr.clone();
+                    bad.indices[0] = bad.n_cols as u32;
+                    let structural =
+                        scratch_reg.try_register("chaos-oob", bad).is_err();
+                    let nan_mtx = "%%MatrixMarket matrix coordinate real \
+                                   general\n2 2 1\n1 1 NaN\n";
+                    let parse = scratch_reg
+                        .register_mtx_reader("chaos-nan", nan_mtx.as_bytes())
+                        .is_err();
+                    check(
+                        report,
+                        structural && parse && scratch_reg.rejected() == 2,
+                        subj.clone(),
+                        "corrupt-admission",
+                        || format!(
+                            "corrupt payloads must be counted rejections: \
+                             structural={structural} parse={parse} \
+                             rejected={}",
+                            scratch_reg.rejected()
+                        ),
+                    );
+                    tracker.note_rejected_corrupt(2);
+                }
+            }
+        }
+
+        // 3. Background traffic: one request per injection step.
+        if injecting {
+            let m = (step as usize) % nm;
+            let route = overrides
+                .get(&ids[m])
+                .copied()
+                .or_else(|| placement.home(ids[m]))
+                .unwrap_or((step as usize) % shards);
+            submitted += 1;
+            match admit(
+                &mut queues,
+                &down,
+                &tracker,
+                &mut rng,
+                cfg.retry_budget,
+                m,
+                route,
+                step,
+            ) {
+                Admit::Queued => {}
+                Admit::Shed => {
+                    if canary_skips > 0 {
+                        canary_skips -= 1;
+                    } else {
+                        tracker.note_shed(1);
+                    }
+                }
+                Admit::Rejected => tracker.note_rejected(1),
+            }
+        }
+
+        // 4. Drain: up to DRAIN_PER_STEP per live shard, shedding
+        // anything past its deadline.
+        for s in 0..shards {
+            if down[s] {
+                continue;
+            }
+            for _ in 0..DRAIN_PER_STEP {
+                let Some(p) = queues[s].pop_front() else { break };
+                if step.saturating_sub(p.enq) > DEADLINE_STEPS {
+                    if canary_skips > 0 {
+                        canary_skips -= 1;
+                    } else {
+                        tracker.note_shed(1);
+                    }
+                    continue;
+                }
+                serve_one!(s, p.matrix);
+            }
+        }
+
+        step += 1;
+        if step >= steps {
+            extra += 1;
+            let drained = queues.iter().all(VecDeque::is_empty);
+            if (drained && active.is_empty()) || extra > 10_000 {
+                break;
+            }
+        }
+    }
+
+    // Scenario-end invariants.
+    check(
+        report,
+        queues.iter().all(VecDeque::is_empty),
+        subj.clone(),
+        "drain-complete",
+        || "model queues still hold requests after the drain".to_string(),
+    );
+    let t = tracker.totals();
+    check(
+        report,
+        t.served_ok + t.shed + t.rejected == submitted,
+        subj.clone(),
+        "request-ledger",
+        || {
+            format!(
+                "served {} + shed {} + rejected {} != submitted {submitted} \
+                 — a request was lost or double-counted",
+                t.served_ok, t.shed, t.rejected
+            )
+        },
+    );
+    check(
+        report,
+        t.injected_total == applied,
+        subj.clone(),
+        "fault-accounting",
+        || {
+            format!(
+                "{} faults applied but {} recorded as injected",
+                applied, t.injected_total
+            )
+        },
+    );
+    check(
+        report,
+        tracker.mode() == DegradedMode::Full
+            && engines
+                .iter()
+                .all(|e| e.health().mode() == DegradedMode::Full),
+        subj.clone(),
+        "mode-recovered",
+        || "a ladder did not return to Full after all faults expired"
+            .to_string(),
+    );
+    for (s, e) in engines.iter().enumerate() {
+        if let Some(pool) = e.pool() {
+            let hits = crate::util::ordatomic::OrdAtomicUsize::named(
+                0,
+                "chaos.survive",
+            );
+            pool.run(2, &|_| {
+                // ord: Relaxed RMW — independent tally, no ordering
+                // needed; the pool latch is the synchronization.
+                hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+            check(
+                report,
+                hits.into_inner() == 2,
+                subj.clone(),
+                "pool-survives",
+                || format!(
+                    "shard {s} pool failed a post-scenario dispatch"
+                ),
+            );
+        }
+    }
+
+    fleet.merge_from(&tracker);
+    submitted
+}
+
+/// Run the sweep: the scripted ladder walk plus
+/// `cfg.scenarios - 1` seeded fault-plan replays, merging every
+/// scenario's driver ledger into one fleet health document.
+pub fn run(cfg: &ChaosConfig) -> ChaosOutcome {
+    let mut report = CheckReport::new();
+    let fleet = HealthTracker::new();
+    let scenarios = cfg.scenarios.max(1);
+    let mut submitted = 0u64;
+    for scen in 0..scenarios {
+        submitted += run_scenario(cfg, scen, &mut report, &fleet);
+    }
+    ChaosOutcome {
+        report,
+        health: fleet.snapshot(),
+        scenarios,
+        submitted,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ChaosConfig {
+        ChaosConfig {
+            scenarios: 2,
+            requests: 32,
+            matrices: 3,
+            shards: 2,
+            faults: 3,
+            ..ChaosConfig::default()
+        }
+    }
+
+    #[test]
+    fn sweep_is_clean_and_replays_bit_identically() {
+        if cfg!(miri) {
+            return; // real pools + panics; far too slow under miri
+        }
+        let cfg = small();
+        let a = run(&cfg);
+        assert!(a.report.is_clean(), "{}", a.report);
+        assert!(a.submitted > 0);
+        assert_eq!(a.scenarios, 2);
+        let b = run(&cfg);
+        assert!(b.report.is_clean(), "{}", b.report);
+        assert_eq!(
+            a.health.to_string(),
+            b.health.to_string(),
+            "same seed must replay to a byte-identical health document"
+        );
+        assert_eq!(a.submitted, b.submitted);
+        // A different seed is a different experiment.
+        let c = run(&ChaosConfig { seed: 0xC4A06, ..cfg });
+        assert!(c.report.is_clean(), "{}", c.report);
+    }
+
+    #[test]
+    fn canary_ledger_bug_is_caught() {
+        if cfg!(miri) {
+            return;
+        }
+        let out = run(&ChaosConfig {
+            canary: true,
+            scenarios: 1,
+            requests: 32,
+            matrices: 3,
+            shards: 2,
+            ..ChaosConfig::default()
+        });
+        assert!(
+            !out.report.is_clean(),
+            "a dropped shed must break the request ledger"
+        );
+        assert!(
+            out.report
+                .findings
+                .iter()
+                .any(|f| f.invariant == "request-ledger"),
+            "{}",
+            out.report
+        );
+    }
+}

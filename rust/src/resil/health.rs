@@ -1,0 +1,721 @@
+//! Health tracking, the degraded-mode ladder, and the versioned
+//! `ft2000.health.v1` evidence snapshot.
+//!
+//! Every fault the injection plane can raise must end here as a
+//! *counted* outcome: a [`HealthTracker`] is the single ledger a
+//! serve path (engine or shard router) writes its graceful-
+//! degradation decisions into — sheds, bounded retries, failovers,
+//! contained panics, degraded and sequential dispatches, slow-lane
+//! marks from the EWMA straggler detector. Trackers merge across
+//! shards exactly like `obs::scaling` profilers merge, and
+//! [`compare_health`] diffs two snapshots into counted regression
+//! findings (recovery-time p95, shed rate, degraded-mode dwell) for
+//! the `obs-report` gate.
+//!
+//! Steady-state discipline matches the rest of the serve path: one
+//! poison-recovering mutex, counter bumps only, the per-lane EWMA
+//! vector grown once during warmup — the zero-alloc pin in
+//! `tests/alloc.rs` covers the tracker with serving live.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::check::{CheckReport, Finding};
+use crate::service::telemetry::LatencyDigest;
+use crate::util::json::Json;
+
+use super::FaultKind;
+
+/// Version tag of the health snapshot document.
+pub const HEALTH_SCHEMA: &str = "ft2000.health.v1";
+
+/// EWMA smoothing for per-lane busy shares.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Dispatches observed before the slow-lane detector may mark
+/// anyone (EWMA warmup).
+const SLOW_LANE_WARMUP: u64 = 8;
+
+/// The degradation ladder. Ordered: escalation only ever moves
+/// right, recovery returns to [`DegradedMode::Full`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradedMode {
+    /// Healthy: dispatch on the full executor pool.
+    Full,
+    /// Some lanes are stalled/slow: the pool runs narrowed (the
+    /// stall mask keeps sick lanes from claiming), autotune
+    /// observations are suppressed so the ladder is not mistaken for
+    /// a plan regression.
+    ReducedLanes,
+    /// Last rung: bypass the pool entirely and run the sequential
+    /// fallback kernel — degraded throughput, never a wedge.
+    Sequential,
+}
+
+impl DegradedMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DegradedMode::Full => "full",
+            DegradedMode::ReducedLanes => "reduced_lanes",
+            DegradedMode::Sequential => "sequential",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            DegradedMode::Full => 0,
+            DegradedMode::ReducedLanes => 1,
+            DegradedMode::Sequential => 2,
+        }
+    }
+}
+
+/// Copyable counter roll-up for assertions and quick reads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthTotals {
+    pub served_ok: u64,
+    pub shed: u64,
+    pub retried: u64,
+    pub rejected: u64,
+    pub rejected_corrupt: u64,
+    pub failed_over: u64,
+    pub degraded_dispatches: u64,
+    pub sequential_dispatches: u64,
+    pub tuner_suppressed: u64,
+    pub panics_contained: u64,
+    pub slow_lane_marks: u64,
+    pub injected_total: u64,
+}
+
+#[derive(Clone)]
+struct HealthState {
+    injected: [u64; FaultKind::ALL.len()],
+    served_ok: u64,
+    shed: u64,
+    retried: u64,
+    rejected: u64,
+    rejected_corrupt: u64,
+    failed_over: u64,
+    degraded_dispatches: u64,
+    sequential_dispatches: u64,
+    tuner_suppressed: u64,
+    panics_contained: u64,
+    slow_lane_marks: u64,
+    /// Dispatches the EWMA detector has observed (warmup gate).
+    lanes_observed: u64,
+    /// Per-lane EWMA of the busy share; grown once on first observe
+    /// (warmup-time allocation, like the scaling profiler's maps).
+    lane_ewma: Vec<f64>,
+    mode: DegradedMode,
+    /// Dispatch counts spent on each ladder rung.
+    mode_dwell: [u64; 3],
+    /// Virtual/relative timestamp of the Full → degraded transition;
+    /// cleared (into the recovery digest) on recovery.
+    escalated_at_ms: Option<f64>,
+    /// Escalation → recovery durations, ms.
+    recovery: LatencyDigest,
+}
+
+/// The fault/recovery ledger of one serve surface (an engine, a
+/// shard router, or a chaos driver). All methods take `&self`:
+/// mutation is behind one poison-recovering mutex, and the
+/// steady-state cost is a lock plus counter bumps.
+pub struct HealthTracker {
+    inner: Mutex<HealthState>,
+}
+
+impl Default for HealthTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HealthTracker {
+    pub fn new() -> HealthTracker {
+        HealthTracker {
+            inner: Mutex::new(HealthState {
+                injected: [0; FaultKind::ALL.len()],
+                served_ok: 0,
+                shed: 0,
+                retried: 0,
+                rejected: 0,
+                rejected_corrupt: 0,
+                failed_over: 0,
+                degraded_dispatches: 0,
+                sequential_dispatches: 0,
+                tuner_suppressed: 0,
+                panics_contained: 0,
+                slow_lane_marks: 0,
+                lanes_observed: 0,
+                lane_ewma: Vec::new(),
+                mode: DegradedMode::Full,
+                mode_dwell: [0; 3],
+                escalated_at_ms: None,
+                recovery: LatencyDigest::default(),
+            }),
+        }
+    }
+
+    /// Lock the state, recovering from poisoning — the guarded
+    /// sections are pure field updates (same rationale as the pool's
+    /// state lock).
+    fn lock(&self) -> std::sync::MutexGuard<'_, HealthState> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Count one injected fault of `kind`.
+    pub fn note_injected(&self, kind: FaultKind) {
+        self.lock().injected[kind.index()] += 1;
+    }
+
+    pub fn note_served(&self, n: u64) {
+        self.lock().served_ok += n;
+    }
+
+    pub fn note_shed(&self, n: u64) {
+        self.lock().shed += n;
+    }
+
+    pub fn note_retried(&self, n: u64) {
+        self.lock().retried += n;
+    }
+
+    pub fn note_rejected(&self, n: u64) {
+        self.lock().rejected += n;
+    }
+
+    pub fn note_rejected_corrupt(&self, n: u64) {
+        self.lock().rejected_corrupt += n;
+    }
+
+    pub fn note_failed_over(&self, n: u64) {
+        self.lock().failed_over += n;
+    }
+
+    pub fn note_panic_contained(&self) {
+        self.lock().panics_contained += 1;
+    }
+
+    /// Count one dispatch issued while some lane was degraded (the
+    /// pool ran narrowed).
+    pub fn note_degraded_dispatch(&self) {
+        self.lock().degraded_dispatches += 1;
+    }
+
+    /// Count one dispatch forced onto the sequential fallback.
+    pub fn note_sequential_dispatch(&self) {
+        self.lock().sequential_dispatches += 1;
+    }
+
+    /// Count one autotune observation suppressed by the ladder.
+    pub fn note_tuner_suppressed(&self) {
+        self.lock().tuner_suppressed += 1;
+    }
+
+    /// Called at the top of every dispatch: charges the dwell
+    /// counter of the current rung and returns it so the dispatcher
+    /// can pick its execution path.
+    pub fn note_dispatch(&self) -> DegradedMode {
+        let mut st = self.lock();
+        let mode = st.mode;
+        st.mode_dwell[mode.index()] += 1;
+        mode
+    }
+
+    /// Feed one dispatch's per-lane busy deltas (nanoseconds) into
+    /// the EWMA straggler detector. Alloc-free after the first call
+    /// at a given width. A lane whose smoothed share sits under half
+    /// its fair share (after warmup) earns a slow-lane mark.
+    pub fn observe_lanes(&self, busy: &[u64]) {
+        let n = busy.len();
+        if n == 0 {
+            return;
+        }
+        let total: u64 = busy.iter().sum();
+        if total == 0 {
+            return;
+        }
+        let mut st = self.lock();
+        if st.lane_ewma.len() < n {
+            let fair = 1.0 / n as f64;
+            st.lane_ewma.resize(n, fair);
+        }
+        st.lanes_observed += 1;
+        let warmed = st.lanes_observed >= SLOW_LANE_WARMUP;
+        let fair = 1.0 / n as f64;
+        for (i, &b) in busy.iter().enumerate() {
+            let share = b as f64 / total as f64;
+            let updated =
+                st.lane_ewma[i] * (1.0 - EWMA_ALPHA) + share * EWMA_ALPHA;
+            st.lane_ewma[i] = updated;
+            if warmed && n >= 2 && updated < 0.5 * fair {
+                st.slow_lane_marks += 1;
+            }
+        }
+    }
+
+    /// Climb the ladder to `to` (escalation is monotone; a request
+    /// to move down is ignored — that is what [`Self::recover`] is
+    /// for). `now_ms` stamps the start of the degraded window on the
+    /// first rung up.
+    pub fn escalate(&self, to: DegradedMode, now_ms: f64) {
+        let mut st = self.lock();
+        if to <= st.mode {
+            return;
+        }
+        if st.mode == DegradedMode::Full {
+            st.escalated_at_ms = Some(now_ms);
+        }
+        st.mode = to;
+    }
+
+    /// Return to [`DegradedMode::Full`], observing the degraded
+    /// window's duration into the recovery digest.
+    pub fn recover(&self, now_ms: f64) {
+        let mut st = self.lock();
+        if st.mode == DegradedMode::Full {
+            return;
+        }
+        if let Some(t0) = st.escalated_at_ms.take() {
+            let dt = (now_ms - t0).max(0.0);
+            st.recovery.observe(dt);
+        }
+        st.mode = DegradedMode::Full;
+    }
+
+    pub fn mode(&self) -> DegradedMode {
+        self.lock().mode
+    }
+
+    pub fn totals(&self) -> HealthTotals {
+        let st = self.lock();
+        HealthTotals {
+            served_ok: st.served_ok,
+            shed: st.shed,
+            retried: st.retried,
+            rejected: st.rejected,
+            rejected_corrupt: st.rejected_corrupt,
+            failed_over: st.failed_over,
+            degraded_dispatches: st.degraded_dispatches,
+            sequential_dispatches: st.sequential_dispatches,
+            tuner_suppressed: st.tuner_suppressed,
+            panics_contained: st.panics_contained,
+            slow_lane_marks: st.slow_lane_marks,
+            injected_total: st.injected.iter().sum(),
+        }
+    }
+
+    /// Fold another tracker into this one (fleet roll-ups, the same
+    /// merge idiom as `ScalingProfiler::merge_from`). Counters and
+    /// dwell add, digests merge, the mode takes the worse rung, and
+    /// lane EWMAs average where both sides observed the lane.
+    pub fn merge_from(&self, other: &HealthTracker) {
+        let o = { other.lock().clone() };
+        let mut st = self.lock();
+        for (mine, theirs) in st.injected.iter_mut().zip(o.injected) {
+            *mine += theirs;
+        }
+        st.served_ok += o.served_ok;
+        st.shed += o.shed;
+        st.retried += o.retried;
+        st.rejected += o.rejected;
+        st.rejected_corrupt += o.rejected_corrupt;
+        st.failed_over += o.failed_over;
+        st.degraded_dispatches += o.degraded_dispatches;
+        st.sequential_dispatches += o.sequential_dispatches;
+        st.tuner_suppressed += o.tuner_suppressed;
+        st.panics_contained += o.panics_contained;
+        st.slow_lane_marks += o.slow_lane_marks;
+        st.lanes_observed += o.lanes_observed;
+        let had = st.lane_ewma.len();
+        if had < o.lane_ewma.len() {
+            st.lane_ewma.resize(o.lane_ewma.len(), 0.0);
+        }
+        for (i, &v) in o.lane_ewma.iter().enumerate() {
+            if i < had {
+                st.lane_ewma[i] = 0.5 * (st.lane_ewma[i] + v);
+            } else {
+                st.lane_ewma[i] = v;
+            }
+        }
+        st.mode = st.mode.max(o.mode);
+        for (mine, theirs) in st.mode_dwell.iter_mut().zip(o.mode_dwell) {
+            *mine += theirs;
+        }
+        st.recovery.merge(&o.recovery);
+    }
+
+    /// The versioned `ft2000.health.v1` document.
+    pub fn snapshot(&self) -> Json {
+        let st = self.lock().clone();
+        let mut doc = BTreeMap::new();
+        doc.insert(
+            "schema".to_string(),
+            Json::Str(HEALTH_SCHEMA.to_string()),
+        );
+        let mut injected = BTreeMap::new();
+        for k in FaultKind::ALL {
+            injected.insert(
+                k.name().to_string(),
+                Json::Num(st.injected[k.index()] as f64),
+            );
+        }
+        doc.insert("injected".to_string(), Json::Obj(injected));
+        let mut outcomes = BTreeMap::new();
+        for (key, v) in [
+            ("served_ok", st.served_ok),
+            ("shed", st.shed),
+            ("retried", st.retried),
+            ("rejected", st.rejected),
+            ("rejected_corrupt", st.rejected_corrupt),
+            ("failed_over", st.failed_over),
+            ("degraded_dispatches", st.degraded_dispatches),
+            ("sequential_dispatches", st.sequential_dispatches),
+            ("tuner_suppressed", st.tuner_suppressed),
+            ("panics_contained", st.panics_contained),
+            ("slow_lane_marks", st.slow_lane_marks),
+        ] {
+            outcomes.insert(key.to_string(), Json::Num(v as f64));
+        }
+        doc.insert("outcomes".to_string(), Json::Obj(outcomes));
+        let mut mode = BTreeMap::new();
+        mode.insert(
+            "current".to_string(),
+            Json::Str(st.mode.name().to_string()),
+        );
+        let mut dwell = BTreeMap::new();
+        dwell.insert(
+            "full".to_string(),
+            Json::Num(st.mode_dwell[0] as f64),
+        );
+        dwell.insert(
+            "reduced_lanes".to_string(),
+            Json::Num(st.mode_dwell[1] as f64),
+        );
+        dwell.insert(
+            "sequential".to_string(),
+            Json::Num(st.mode_dwell[2] as f64),
+        );
+        mode.insert("dwell".to_string(), Json::Obj(dwell));
+        doc.insert("mode".to_string(), Json::Obj(mode));
+        let mut rec = BTreeMap::new();
+        rec.insert(
+            "count".to_string(),
+            Json::Num(st.recovery.count as f64),
+        );
+        rec.insert("mean_ms".to_string(), Json::Num(st.recovery.mean()));
+        rec.insert("max_ms".to_string(), Json::Num(st.recovery.max_ms));
+        rec.insert(
+            "p50_ms".to_string(),
+            Json::Num(st.recovery.percentile(50.0).unwrap_or(0.0)),
+        );
+        rec.insert(
+            "p95_ms".to_string(),
+            Json::Num(st.recovery.percentile(95.0).unwrap_or(0.0)),
+        );
+        doc.insert("recovery_ms".to_string(), Json::Obj(rec));
+        let lanes: Vec<Json> = st
+            .lane_ewma
+            .iter()
+            .enumerate()
+            .map(|(i, &e)| {
+                let mut lane = BTreeMap::new();
+                lane.insert("lane".to_string(), Json::Num(i as f64));
+                lane.insert("ewma_share".to_string(), Json::Num(e));
+                Json::Obj(lane)
+            })
+            .collect();
+        doc.insert("lanes".to_string(), Json::Arr(lanes));
+        Json::Obj(doc)
+    }
+}
+
+/// Regression thresholds for [`compare_health`].
+#[derive(Clone, Copy, Debug)]
+pub struct HealthThresholds {
+    /// Absolute recovery-p95 ceiling, ms. `None` derives
+    /// `2 * baseline_p95 + 1.0` — generous for short windows, tight
+    /// once recoveries exist (the scaling gate's queue-wait rule).
+    pub recovery_p95_ms: Option<f64>,
+    /// Allowed absolute increase of `shed / (served_ok + shed)`.
+    pub shed_rate_drift: f64,
+    /// Allowed absolute increase of the degraded-dwell fraction
+    /// (`(reduced + sequential) / total` dispatches).
+    pub dwell_drift: f64,
+}
+
+impl Default for HealthThresholds {
+    fn default() -> Self {
+        HealthThresholds {
+            recovery_p95_ms: None,
+            shed_rate_drift: 0.05,
+            dwell_drift: 0.10,
+        }
+    }
+}
+
+fn check(
+    report: &mut CheckReport,
+    ok: bool,
+    subject: String,
+    invariant: &'static str,
+    detail: impl FnOnce() -> String,
+) {
+    report.checked += 1;
+    if !ok {
+        report.findings.push(Finding {
+            subject,
+            invariant,
+            detail: detail(),
+        });
+    }
+}
+
+fn num(doc: &Json, path: &[&str]) -> Option<f64> {
+    let mut cur = doc;
+    for k in path {
+        cur = cur.get(k)?;
+    }
+    cur.as_f64()
+}
+
+fn shed_rate(doc: &Json) -> f64 {
+    let served = num(doc, &["outcomes", "served_ok"]).unwrap_or(0.0);
+    let shed = num(doc, &["outcomes", "shed"]).unwrap_or(0.0);
+    if served + shed <= 0.0 {
+        0.0
+    } else {
+        shed / (served + shed)
+    }
+}
+
+fn dwell_fraction(doc: &Json) -> f64 {
+    let full = num(doc, &["mode", "dwell", "full"]).unwrap_or(0.0);
+    let reduced =
+        num(doc, &["mode", "dwell", "reduced_lanes"]).unwrap_or(0.0);
+    let seq = num(doc, &["mode", "dwell", "sequential"]).unwrap_or(0.0);
+    let total = full + reduced + seq;
+    if total <= 0.0 {
+        0.0
+    } else {
+        (reduced + seq) / total
+    }
+}
+
+/// Diff two `ft2000.health.v1` snapshots into counted regression
+/// findings: recovery-time p95 past its ceiling, shed rate drifting
+/// up, degraded-mode dwell growing. Schema mismatches short-circuit
+/// — comparing across versions would silently check nothing.
+pub fn compare_health(
+    baseline: &Json,
+    current: &Json,
+    th: &HealthThresholds,
+) -> CheckReport {
+    let mut report = CheckReport::new();
+    for (tag, doc) in [("baseline", baseline), ("current", current)] {
+        check(
+            &mut report,
+            doc.get("schema").and_then(Json::as_str) == Some(HEALTH_SCHEMA),
+            format!("{tag} health snapshot"),
+            "health-schema",
+            || {
+                format!(
+                    "expected schema \"{HEALTH_SCHEMA}\", got {:?}",
+                    doc.get("schema").and_then(Json::as_str)
+                )
+            },
+        );
+    }
+    if !report.is_clean() {
+        return report;
+    }
+
+    let base_p95 = num(baseline, &["recovery_ms", "p95_ms"]).unwrap_or(0.0);
+    let cur_p95 = num(current, &["recovery_ms", "p95_ms"]).unwrap_or(0.0);
+    let ceiling = th.recovery_p95_ms.unwrap_or(2.0 * base_p95 + 1.0);
+    check(
+        &mut report,
+        cur_p95 <= ceiling,
+        "recovery p95".to_string(),
+        "recovery-p95",
+        || {
+            format!(
+                "recovery p95 {cur_p95:.3} ms exceeds the allowed \
+                 {ceiling:.3} ms (baseline {base_p95:.3} ms)"
+            )
+        },
+    );
+
+    let base_shed = shed_rate(baseline);
+    let cur_shed = shed_rate(current);
+    check(
+        &mut report,
+        cur_shed <= base_shed + th.shed_rate_drift,
+        "shed rate".to_string(),
+        "shed-rate",
+        || {
+            format!(
+                "shed rate rose {base_shed:.4} -> {cur_shed:.4} \
+                 (allowed drift {:.4})",
+                th.shed_rate_drift
+            )
+        },
+    );
+
+    let base_dwell = dwell_fraction(baseline);
+    let cur_dwell = dwell_fraction(current);
+    check(
+        &mut report,
+        cur_dwell <= base_dwell + th.dwell_drift,
+        "degraded-mode dwell".to_string(),
+        "degraded-dwell",
+        || {
+            format!(
+                "degraded dwell fraction rose {base_dwell:.4} -> \
+                 {cur_dwell:.4} (allowed drift {:.4})",
+                th.dwell_drift
+            )
+        },
+    );
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_escalates_monotonically_and_recovers_with_timing() {
+        let h = HealthTracker::new();
+        assert_eq!(h.mode(), DegradedMode::Full);
+        assert_eq!(h.note_dispatch(), DegradedMode::Full);
+        h.escalate(DegradedMode::ReducedLanes, 10.0);
+        assert_eq!(h.note_dispatch(), DegradedMode::ReducedLanes);
+        // Monotone: asking for a lower rung is not a recovery.
+        h.escalate(DegradedMode::Full, 11.0);
+        assert_eq!(h.mode(), DegradedMode::ReducedLanes);
+        h.escalate(DegradedMode::Sequential, 12.0);
+        assert_eq!(h.note_dispatch(), DegradedMode::Sequential);
+        h.recover(25.0);
+        assert_eq!(h.mode(), DegradedMode::Full);
+        // One degraded window, 10 -> 25 virtual ms.
+        let snap = h.snapshot();
+        assert_eq!(
+            snap.get("recovery_ms")
+                .and_then(|r| r.get("count"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            snap.get("recovery_ms")
+                .and_then(|r| r.get("max_ms"))
+                .and_then(Json::as_f64),
+            Some(15.0)
+        );
+        assert_eq!(
+            snap.get("mode")
+                .and_then(|m| m.get("dwell"))
+                .and_then(|d| d.get("reduced_lanes"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        // Recovering while healthy is a no-op.
+        h.recover(30.0);
+        assert_eq!(
+            h.snapshot()
+                .get("recovery_ms")
+                .and_then(|r| r.get("count"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn slow_lane_detector_marks_persistent_stragglers_only() {
+        let h = HealthTracker::new();
+        // Balanced lanes: warmup plus plenty of observations, no
+        // marks.
+        for _ in 0..32 {
+            h.observe_lanes(&[100, 100, 100, 100]);
+        }
+        assert_eq!(h.totals().slow_lane_marks, 0);
+        // Lane 3 collapses to ~zero share: once the EWMA crosses
+        // half the fair share it earns marks every dispatch.
+        for _ in 0..32 {
+            h.observe_lanes(&[100, 100, 100, 0]);
+        }
+        let marks = h.totals().slow_lane_marks;
+        assert!(marks > 0, "a collapsed lane must be marked slow");
+        // Zero-total and empty observations are ignored.
+        h.observe_lanes(&[0, 0, 0, 0]);
+        h.observe_lanes(&[]);
+        assert_eq!(h.totals().slow_lane_marks, marks);
+    }
+
+    #[test]
+    fn merge_folds_counters_digests_and_modes() {
+        let a = HealthTracker::new();
+        let b = HealthTracker::new();
+        a.note_served(10);
+        a.note_shed(2);
+        a.note_injected(FaultKind::LaneStall);
+        b.note_served(5);
+        b.note_retried(3);
+        b.note_injected(FaultKind::LaneStall);
+        b.note_injected(FaultKind::QueueSpike);
+        b.escalate(DegradedMode::Sequential, 0.0);
+        a.merge_from(&b);
+        let t = a.totals();
+        assert_eq!(t.served_ok, 15);
+        assert_eq!(t.shed, 2);
+        assert_eq!(t.retried, 3);
+        assert_eq!(t.injected_total, 3);
+        assert_eq!(a.mode(), DegradedMode::Sequential);
+        let snap = a.snapshot();
+        assert_eq!(
+            snap.get("injected")
+                .and_then(|i| i.get("lane_stall"))
+                .and_then(Json::as_f64),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn compare_flags_degraded_snapshots_and_schema_mismatch() {
+        let base = HealthTracker::new();
+        base.note_served(100);
+        base.note_shed(1);
+        for _ in 0..4 {
+            base.note_dispatch();
+        }
+        let cur = HealthTracker::new();
+        cur.note_served(40);
+        cur.note_shed(60);
+        cur.escalate(DegradedMode::Sequential, 0.0);
+        for _ in 0..4 {
+            cur.note_dispatch();
+        }
+        cur.recover(500.0);
+        cur.escalate(DegradedMode::ReducedLanes, 600.0);
+        cur.recover(1100.0);
+        let th = HealthThresholds::default();
+        let clean =
+            compare_health(&base.snapshot(), &base.snapshot(), &th);
+        assert!(clean.is_clean(), "{clean}");
+        let report = compare_health(&base.snapshot(), &cur.snapshot(), &th);
+        assert!(!report.is_clean());
+        let invariants: Vec<&str> =
+            report.findings.iter().map(|f| f.invariant).collect();
+        assert!(invariants.contains(&"shed-rate"), "{invariants:?}");
+        assert!(invariants.contains(&"degraded-dwell"), "{invariants:?}");
+        assert!(invariants.contains(&"recovery-p95"), "{invariants:?}");
+        // Schema mismatch short-circuits the comparison.
+        let bogus =
+            crate::util::json::parse("{\"schema\": \"nope.v0\"}").unwrap();
+        let r = compare_health(&bogus, &base.snapshot(), &th);
+        assert!(!r.is_clean());
+        assert!(r.findings.iter().all(|f| f.invariant == "health-schema"));
+    }
+}

@@ -1,0 +1,283 @@
+//! Deterministic fault injection and graceful degradation.
+//!
+//! The paper's scalability story is really a fragility story: SpMV
+//! speedup on FT-2000+ survives only while every lane pulls its
+//! weight and every panel answers — one straggler core or one
+//! saturated queue and the speedup curve folds. A serving fleet
+//! built on that observation has to treat failure as a first-class
+//! *input*, not an exception: this module makes it one, the same way
+//! `check` made structure checkable and `check::hb` made ordering
+//! checkable.
+//!
+//! Three planes:
+//!
+//! * **Injection** — a seeded [`FaultPlan`] schedules faults on a
+//!   virtual clock (steps, not wall time), so a chaos replay is
+//!   bit-reproducible per seed like `check::interleave`. The fault
+//!   taxonomy ([`FaultKind`]) covers worker-lane stalls and
+//!   slowdowns (straggler emulation through
+//!   [`crate::exec::ExecPool::set_lane_stalled`]), worker panics,
+//!   shard outages and flapping, queue-pressure spikes, and
+//!   corrupt-payload admissions (routed through the registry
+//!   verifier).
+//! * **Degradation** — [`health::HealthTracker`] keeps per-lane EWMA
+//!   slow-lane detection fed by the busy-tally probe, a
+//!   [`health::DegradedMode`] ladder (full pool → reduced lanes →
+//!   sequential fallback) that the serve path consults on every
+//!   dispatch and autotune treats as temporary suppression, bounded
+//!   retry budgets with [`decorrelated_jitter`] backoff, and shard
+//!   failover that re-homes a dead shard's matrices onto survivors
+//!   (see `service::shard`).
+//! * **Evidence** — every injected fault and every recovery decision
+//!   is a counted outcome in a versioned `ft2000.health.v1` snapshot
+//!   (merged across shards like `ft2000.scaling.v1`); [`chaos::run`]
+//!   sweeps a seeded fault matrix asserting no-lost-no-duplicated
+//!   requests and bitwise-correct outputs, and
+//!   [`health::compare_health`] turns two snapshots into counted
+//!   regression findings for `obs-report`.
+
+pub mod chaos;
+pub mod health;
+
+pub use chaos::{ChaosConfig, ChaosOutcome};
+pub use health::{
+    compare_health, DegradedMode, HealthThresholds, HealthTracker,
+    HEALTH_SCHEMA,
+};
+
+use crate::util::rng::Pcg32;
+
+/// The fault taxonomy. Every kind is non-fatal by contract: the
+/// engine must end each one in a counted graceful outcome (degraded,
+/// shed, retried, failed-over, rejected) — never a hang, never a
+/// wrong answer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// A worker lane stops claiming slots (hung core emulation).
+    LaneStall,
+    /// A worker lane runs far under its fair busy share (straggler).
+    LaneSlow,
+    /// A slot closure panics mid-dispatch.
+    WorkerPanic,
+    /// A whole shard goes dark for a while.
+    ShardOutage,
+    /// A shard blinks: a short outage followed by a quick return.
+    ShardFlap,
+    /// A burst of admissions far past the queue capacity.
+    QueueSpike,
+    /// A malformed matrix payload reaches admission.
+    CorruptPayload,
+}
+
+impl FaultKind {
+    /// Every kind, in a fixed canonical order (snapshot key order).
+    pub const ALL: [FaultKind; 7] = [
+        FaultKind::LaneStall,
+        FaultKind::LaneSlow,
+        FaultKind::WorkerPanic,
+        FaultKind::ShardOutage,
+        FaultKind::ShardFlap,
+        FaultKind::QueueSpike,
+        FaultKind::CorruptPayload,
+    ];
+
+    /// Stable snake_case name (snapshot keys, tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::LaneStall => "lane_stall",
+            FaultKind::LaneSlow => "lane_slow",
+            FaultKind::WorkerPanic => "worker_panic",
+            FaultKind::ShardOutage => "shard_outage",
+            FaultKind::ShardFlap => "shard_flap",
+            FaultKind::QueueSpike => "queue_spike",
+            FaultKind::CorruptPayload => "corrupt_payload",
+        }
+    }
+
+    /// Index into [`FaultKind::ALL`] (counter arrays, sort keys).
+    pub fn index(&self) -> usize {
+        match self {
+            FaultKind::LaneStall => 0,
+            FaultKind::LaneSlow => 1,
+            FaultKind::WorkerPanic => 2,
+            FaultKind::ShardOutage => 3,
+            FaultKind::ShardFlap => 4,
+            FaultKind::QueueSpike => 5,
+            FaultKind::CorruptPayload => 6,
+        }
+    }
+}
+
+/// One scheduled fault: fire at virtual step `step`, last `duration`
+/// steps. `target` is kind-relative — a lane×shard code for lane
+/// faults (`shard = target % shards`, `lane = 1 + target / shards`),
+/// a shard index for shard faults, ignored by payload faults.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub step: u64,
+    pub kind: FaultKind,
+    pub target: usize,
+    pub duration: u64,
+}
+
+/// Shape of a generated fault schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlanConfig {
+    /// Virtual steps the scenario runs for.
+    pub steps: u64,
+    /// How many faults to schedule.
+    pub faults: usize,
+    /// Worker lanes per shard pool (stall/slow/panic targets).
+    pub lanes: usize,
+    /// Shards in the fleet (outage/flap/spike targets).
+    pub shards: usize,
+}
+
+impl Default for FaultPlanConfig {
+    fn default() -> Self {
+        FaultPlanConfig { steps: 64, faults: 5, lanes: 4, shards: 3 }
+    }
+}
+
+/// A seeded, virtual-clock fault schedule. Same seed + same config ⇒
+/// the identical event list, which is what makes a chaos sweep a
+/// *replay* rather than a dice roll.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Generate the schedule for `seed`. Events land in the first
+    /// ~three quarters of the step budget so expiry and recovery fit
+    /// inside the scenario, and are sorted by
+    /// `(step, kind index, target)` so application order is total.
+    pub fn generate(seed: u64, cfg: &FaultPlanConfig) -> FaultPlan {
+        let mut rng = Pcg32::new(seed ^ 0xFA_017);
+        let horizon = (cfg.steps.max(4) * 3 / 4) as usize;
+        let mut events = Vec::with_capacity(cfg.faults);
+        for _ in 0..cfg.faults {
+            let kind = FaultKind::ALL[rng.gen_range(FaultKind::ALL.len())];
+            let step = 1 + rng.gen_range(horizon) as u64;
+            let target = match kind {
+                FaultKind::LaneStall
+                | FaultKind::LaneSlow
+                | FaultKind::WorkerPanic => {
+                    rng.gen_range((cfg.lanes * cfg.shards).max(1))
+                }
+                FaultKind::ShardOutage
+                | FaultKind::ShardFlap
+                | FaultKind::QueueSpike => rng.gen_range(cfg.shards.max(1)),
+                FaultKind::CorruptPayload => 0,
+            };
+            let duration = match kind {
+                FaultKind::ShardFlap => 1,
+                _ => 1 + rng.gen_range(5) as u64,
+            };
+            events.push(FaultEvent { step, kind, target, duration });
+        }
+        events.sort_by_key(|e| (e.step, e.kind.index(), e.target));
+        FaultPlan { seed, events }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+}
+
+/// Decorrelated-jitter backoff (the AWS architecture-blog variant):
+/// `sleep = min(cap, uniform(base, prev * 3))`, never below `base`.
+/// On a virtual clock the returned value is a step delay; on a wall
+/// clock, milliseconds — either way the sequence is deterministic
+/// per RNG state, which keeps retry schedules replayable.
+pub fn decorrelated_jitter(
+    rng: &mut Pcg32,
+    prev_ms: f64,
+    base_ms: f64,
+    cap_ms: f64,
+) -> f64 {
+    let base = base_ms.max(0.0);
+    let span = (prev_ms * 3.0 - base).max(0.0);
+    (base + rng.gen_f64() * span).min(cap_ms.max(base))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plans_are_bit_reproducible_per_seed() {
+        let cfg = FaultPlanConfig::default();
+        let a = FaultPlan::generate(0xC4A05, &cfg);
+        let b = FaultPlan::generate(0xC4A05, &cfg);
+        assert_eq!(a.events(), b.events());
+        assert_eq!(a.seed(), 0xC4A05);
+        assert_eq!(a.events().len(), cfg.faults);
+        let c = FaultPlan::generate(0xC4A06, &cfg);
+        assert_ne!(
+            a.events(),
+            c.events(),
+            "different seeds must draw different schedules"
+        );
+        // Sorted by (step, kind, target); every event fits the run
+        // with room for its expiry.
+        for w in a.events().windows(2) {
+            assert!(
+                (w[0].step, w[0].kind.index(), w[0].target)
+                    <= (w[1].step, w[1].kind.index(), w[1].target)
+            );
+        }
+        for e in a.events() {
+            assert!(e.step >= 1 && e.step <= cfg.steps * 3 / 4);
+            assert!(e.duration >= 1 && e.duration <= 6);
+        }
+    }
+
+    #[test]
+    fn fault_kind_names_and_indices_are_stable() {
+        for (i, k) in FaultKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+        let names: Vec<&str> =
+            FaultKind::ALL.iter().map(FaultKind::name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "lane_stall",
+                "lane_slow",
+                "worker_panic",
+                "shard_outage",
+                "shard_flap",
+                "queue_spike",
+                "corrupt_payload",
+            ]
+        );
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let mut rng = Pcg32::new(7);
+        let mut prev = 1.0;
+        let mut seq = Vec::new();
+        for _ in 0..64 {
+            prev = decorrelated_jitter(&mut rng, prev, 1.0, 20.0);
+            assert!(prev >= 1.0 && prev <= 20.0, "{prev}");
+            seq.push(prev);
+        }
+        let mut rng2 = Pcg32::new(7);
+        let mut prev2 = 1.0;
+        for &want in &seq {
+            prev2 = decorrelated_jitter(&mut rng2, prev2, 1.0, 20.0);
+            assert_eq!(prev2.to_bits(), want.to_bits());
+        }
+        // The cap really binds.
+        let mut rng = Pcg32::new(9);
+        let v = decorrelated_jitter(&mut rng, 1e9, 1.0, 20.0);
+        assert!(v <= 20.0);
+    }
+}

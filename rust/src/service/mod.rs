@@ -70,6 +70,7 @@ use crate::obs::scaling::{
     GapComponents, QueueWaitSummary, ScalingProfiler, MAX_LANES,
 };
 use crate::obs::{Counter, Histogram, MetricsRegistry, Stage, TraceRecorder};
+use crate::resil::health::{DegradedMode, HealthTracker};
 use crate::sched::Schedule;
 use crate::util::json::Json;
 
@@ -144,6 +145,11 @@ pub struct ServeEngine {
     /// linear speedup, decomposed and aggregated per fingerprint
     /// ([`ServeEngine::scaling_snapshot`]).
     scaling: ScalingProfiler,
+    /// Fault/recovery ledger and degraded-mode ladder
+    /// (`resil::health`): every dispatch consults the current rung,
+    /// lane busy deltas feed the slow-lane detector, and autotune
+    /// observations are suppressed while degraded.
+    health: HealthTracker,
 }
 
 /// The engine's pre-registered instrument handles.
@@ -203,6 +209,7 @@ impl ServeEngine {
             metrics,
             obs,
             scaling: ScalingProfiler::new(),
+            health: HealthTracker::new(),
         }
     }
 
@@ -358,6 +365,21 @@ impl ServeEngine {
         self
     }
 
+    /// The engine's fault/recovery ledger (`resil::health`): the
+    /// degraded-mode ladder the dispatch path consults, plus every
+    /// counted graceful outcome. Chaos drivers and shard routers
+    /// escalate/recover through this handle; fleets roll engines up
+    /// with [`HealthTracker::merge_from`].
+    pub fn health(&self) -> &HealthTracker {
+        &self.health
+    }
+
+    /// The versioned `ft2000.health.v1` snapshot of this engine's
+    /// health ledger.
+    pub fn health_snapshot(&self) -> Json {
+        self.health.snapshot()
+    }
+
     /// Resolve the plan one dispatch against `entry` should run —
     /// shared by the live path ([`ServeEngine::execute_batch`]) and
     /// the virtual-time replay's model-only dispatcher so both obey
@@ -475,7 +497,19 @@ impl ServeEngine {
             }
             rec.set_kernel_ctx(sched_code);
         }
-        let pool = self.pool.as_ref();
+        // Graceful degradation: the current ladder rung picks this
+        // dispatch's execution path. `Sequential` bypasses the pool
+        // entirely (a wedged pool must never wedge a request);
+        // `ReducedLanes` keeps the pool — the stall mask already
+        // narrows it — but the dispatch is counted as degraded.
+        let mode = self.health.note_dispatch();
+        if mode == DegradedMode::ReducedLanes {
+            self.health.note_degraded_dispatch();
+        }
+        let pool = match mode {
+            DegradedMode::Sequential => None,
+            _ => self.pool.as_ref(),
+        };
         // Scalability attribution: snapshot per-lane busy time around
         // the kernel so this dispatch can compute its own lane deltas
         // (max vs mean = load imbalance). Stack buffers — the dispatch
@@ -488,26 +522,59 @@ impl ServeEngine {
             (true, Some(p)) => p.fill_busy_ns(&mut lanes_before),
             _ => 0,
         };
-        let (wall_seconds, threads, per_request_ms) = if batch == 1 {
-            let st = plan.execute_into(&entry.csr, xs[0], pool, scratch);
-            (st.wall_seconds, st.threads, st.per_request_ms())
-        } else {
-            let st = plan.execute_batch_into(&entry.csr, xs, pool, scratch);
-            (st.wall_seconds, st.threads, st.per_request_ms())
-        };
+        let (wall_seconds, threads, per_request_ms) =
+            if mode == DegradedMode::Sequential {
+                // Last ladder rung: the direct sequential kernel into
+                // the arena — no pool, no partition, same `row_dot`
+                // accumulation order as the reference `Csr::spmv`.
+                self.health.note_sequential_dispatch();
+                let t0 = Instant::now();
+                let n_rows = entry.csr.n_rows;
+                if batch == 1 {
+                    scratch.y.clear();
+                    scratch.y.resize(n_rows, 0.0);
+                    entry.csr.spmv(xs[0], &mut scratch.y);
+                } else {
+                    scratch.yb.clear();
+                    scratch.yb.resize(n_rows * batch, 0.0);
+                    scratch.y.clear();
+                    scratch.y.resize(n_rows, 0.0);
+                    for (j, x) in xs.iter().enumerate() {
+                        entry.csr.spmv(x, &mut scratch.y);
+                        for r in 0..n_rows {
+                            scratch.yb[r * batch + j] = scratch.y[r];
+                        }
+                    }
+                }
+                let w = t0.elapsed().as_secs_f64();
+                (w, 1, w * 1e3 / batch as f64)
+            } else if batch == 1 {
+                let st = plan.execute_into(&entry.csr, xs[0], pool, scratch);
+                (st.wall_seconds, st.threads, st.per_request_ms())
+            } else {
+                let st =
+                    plan.execute_batch_into(&entry.csr, xs, pool, scratch);
+                (st.wall_seconds, st.threads, st.per_request_ms())
+            };
         let (busy_max_s, busy_sum_s) = if probed > 0 {
             let mut lanes_after = [0u64; MAX_LANES];
             let n = pool
                 .map_or(0, |p| p.fill_busy_ns(&mut lanes_after))
                 .min(probed);
+            let mut deltas = [0u64; MAX_LANES];
             let (mut max_ns, mut sum_ns) = (0u64, 0u64);
-            for (after, before) in
-                lanes_after[..n].iter().zip(&lanes_before[..n])
+            for (i, (after, before)) in
+                lanes_after[..n].iter().zip(&lanes_before[..n]).enumerate()
             {
                 let d = after.saturating_sub(*before);
+                deltas[i] = d;
                 max_ns = max_ns.max(d);
                 sum_ns += d;
             }
+            // Feed the slow-lane EWMA detector (stack buffer — the
+            // dispatch path stays allocation-free once the tracker's
+            // lane vector is warm).
+            self.health.observe_lanes(&deltas[..n]);
             (max_ns as f64 / 1e9, sum_ns as f64 / 1e9)
         } else {
             (0.0, 0.0)
@@ -560,7 +627,13 @@ impl ServeEngine {
         // External-clock tuners (virtual-time replay) are fed by the
         // caller instead — see `replay::Dispatcher`.
         if let (Some(t), Some(a)) = (&self.tuner, arm) {
-            if t.wall_clock() {
+            if t.wall_clock() && mode != DegradedMode::Full {
+                // The ladder is not a plan property: a degraded
+                // latency observed into the tuner would demote a good
+                // plan, so observations are suppressed (not fed as
+                // failures) until recovery.
+                self.health.note_tuner_suppressed();
+            } else if t.wall_clock() {
                 let stages = StageObs {
                     plan_lookup_ms: lookup_s * 1e3,
                     kernel_ms: wall_seconds * 1e3,

@@ -175,16 +175,36 @@ impl MatrixRegistry {
         ids
     }
 
-    /// Register a MatrixMarket file under its path as the name.
-    /// Untrusted input: the parsed matrix passes through
-    /// [`MatrixRegistry::try_register`], so a structurally corrupt
-    /// file is a counted error, not a later kernel panic.
+    /// Register MatrixMarket content from any reader under `name`.
+    /// Untrusted input end to end: a payload that fails to *parse*
+    /// (malformed header, non-finite values, oversized dims, short
+    /// files) is as much a counted rejection as one that parses into
+    /// a structurally corrupt matrix — both bump
+    /// [`MatrixRegistry::rejected`], neither ever panics or serves.
+    pub fn register_mtx_reader<R: std::io::Read>(
+        &mut self,
+        name: &str,
+        reader: R,
+    ) -> Result<usize> {
+        let csr = match mm::read_csr(reader) {
+            Ok(csr) => csr,
+            Err(e) => {
+                self.rejected += 1;
+                return Err(anyhow!("{name}: {e}"));
+            }
+        };
+        self.try_register(name, csr)
+            .map_err(|report| anyhow!("{name}: rejected: {report}"))
+    }
+
+    /// Register a MatrixMarket file under its path as the name (the
+    /// file-backed wrapper of [`MatrixRegistry::register_mtx_reader`];
+    /// an unopenable file is an I/O error, not a counted rejection —
+    /// nothing was admitted for checking).
     pub fn register_mtx(&mut self, path: &str) -> Result<usize> {
         let f = std::fs::File::open(path)
             .with_context(|| format!("opening {path}"))?;
-        let csr = mm::read_csr(f).map_err(|e| anyhow!("{path}: {e}"))?;
-        self.try_register(path, csr)
-            .map_err(|report| anyhow!("{path}: rejected: {report}"))
+        self.register_mtx_reader(path, f)
     }
 }
 

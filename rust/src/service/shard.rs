@@ -22,11 +22,17 @@
 //! * an admission controller: bounded per-shard queues reject excess
 //!   load ([`Admitted::Rejected`], counted in telemetry), and an
 //!   optional per-request deadline sheds stale backlog at pop time —
-//!   overload degrades throughput, it never panics the server.
+//!   overload degrades throughput, it never panics the server;
+//! * shard failover: a shard marked dark ([`ShardedServer::
+//!   set_shard_down`]) gets its homed matrices re-placed onto the
+//!   survivors ([`ShardPlacement::reassign_plan`], deterministic),
+//!   traffic re-routes around the outage (counted in the fleet's
+//!   health ledger), and [`ShardedServer::submit_with_retry`] gives
+//!   producers a bounded-budget, jitter-backoff re-admission path.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::ordatomic::OrdAtomicUsize;
@@ -36,9 +42,12 @@ use crate::obs::scaling::ScalingProfiler;
 use crate::obs::{
     chrome_document, ClockMode, Stage, TraceConfig, TraceRecorder,
 };
+use crate::resil::decorrelated_jitter;
+use crate::resil::health::{DegradedMode, HealthTracker};
 use crate::sched::panel_core_range;
 use crate::sim::topology::Topology;
 use crate::util::json::Json;
+use crate::util::rng::Pcg32;
 
 use super::batch::{drain_worker, PushError, Request, RequestQueue};
 use super::plan::{PlanConfig, Planner};
@@ -163,6 +172,46 @@ impl ShardPlacement {
             .filter(|a| matches!(a, Assignment::Replicated))
             .count()
     }
+
+    /// Failover plan for a dead shard: every matrix homed to `dead`,
+    /// re-binned onto the `alive` shards (lightest current homed
+    /// count first, ties on the lower shard index). Deterministic —
+    /// the same outage always produces the same `(matrix, new shard)`
+    /// list — and non-mutating: callers keep the overrides and drop
+    /// them when the shard returns, so recovery is exactly "traffic
+    /// goes home". Replicated matrices need no plan (survivors
+    /// already hold them); an empty `alive` list yields an empty plan
+    /// (nothing to fail over *to*).
+    pub fn reassign_plan(
+        &self,
+        dead: usize,
+        alive: &[usize],
+    ) -> Vec<(usize, usize)> {
+        if alive.is_empty() {
+            return Vec::new();
+        }
+        let mut orphans: Vec<usize> = self
+            .assignment
+            .iter()
+            .filter_map(|(id, a)| match a {
+                Assignment::Homed(s) if *s == dead => Some(*id),
+                _ => None,
+            })
+            .collect();
+        orphans.sort_unstable();
+        let counts = self.homed_counts();
+        let mut load: Vec<(usize, usize)> = alive
+            .iter()
+            .map(|&s| (counts.get(s).copied().unwrap_or(0), s))
+            .collect();
+        let mut plan = Vec::with_capacity(orphans.len());
+        for id in orphans {
+            load.sort_unstable();
+            load[0].0 += 1;
+            plan.push((id, load[0].1));
+        }
+        plan
+    }
 }
 
 /// Knobs of the sharded server.
@@ -252,6 +301,21 @@ pub struct ShardedServer {
     pub placement: ShardPlacement,
     pub cfg: ShardConfig,
     rr: OrdAtomicUsize,
+    /// Dark-shard bitmask (bit `s` = shard `s` is down). Advisory
+    /// routing state: readers tolerate a stale value (they still land
+    /// on a valid shard), so every access is Relaxed.
+    down: OrdAtomicUsize,
+    /// Failover overrides installed while a shard is dark:
+    /// matrix id -> surviving shard. Empty whenever `down` is empty
+    /// (the healthy submit path never takes this lock).
+    failover: Mutex<HashMap<usize, usize>>,
+    /// The router's own resilience ledger (admission failovers,
+    /// bounded retries, all-dark rejections); shard engines keep
+    /// their dispatch-path ledgers, [`ShardedServer::health_snapshot`]
+    /// merges the fleet.
+    health: HealthTracker,
+    /// Router epoch for the health ledger's relative timestamps.
+    t0: Instant,
 }
 
 impl ShardedServer {
@@ -345,6 +409,10 @@ impl ShardedServer {
             placement,
             cfg,
             rr: OrdAtomicUsize::named(0, "shard.rr"),
+            down: OrdAtomicUsize::named(0, "shard.down"),
+            failover: Mutex::new(HashMap::new()),
+            health: HealthTracker::new(),
+            t0: Instant::now(),
         }
     }
 
@@ -360,12 +428,45 @@ impl ShardedServer {
     /// and reported — admission control, not a panic.
     pub fn submit(&self, req: Request) -> Admitted {
         let t0 = Instant::now();
-        let shard = match self.placement.home(req.matrix_id) {
+        let home = match self.placement.home(req.matrix_id) {
             Some(s) => s,
             None => {
                 // ord: Relaxed RMW — round-robin ticket; producers
                 // only need distinct values, not ordering.
                 self.rr.fetch_add(1, Ordering::Relaxed) % self.cfg.shards
+            }
+        };
+        // ord: Relaxed load — advisory dark-shard mask; a stale read
+        // still lands on a valid shard. Zero when the fleet is
+        // healthy, so the hot path takes no lock.
+        let mask = self.down.load(Ordering::Relaxed);
+        let shard = if mask == 0 {
+            home
+        } else {
+            // Failover overrides re-home a dark shard's matrices onto
+            // survivors; the alive scan re-routes anything else still
+            // pointing at darkness.
+            let preferred = {
+                let overrides = self
+                    .failover
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                overrides.get(&req.matrix_id).copied().unwrap_or(home)
+            };
+            match self.first_alive(preferred, mask) {
+                Some(s) => {
+                    if s != home {
+                        self.health.note_failed_over(1);
+                    }
+                    s
+                }
+                None => {
+                    // The whole fleet is dark: a counted rejection,
+                    // charged to the home shard's telemetry.
+                    self.health.note_rejected(1);
+                    self.shards[home].engine.telemetry.record_rejected(1);
+                    return Admitted::Rejected { shard: home };
+                }
             }
         };
         let admitted = match self.shards[shard].queue.try_push(req) {
@@ -386,6 +487,134 @@ impl ShardedServer {
             );
         }
         admitted
+    }
+
+    /// First not-dark shard scanning from `preferred` (inclusive),
+    /// wrapping; `None` when the whole fleet is dark. Shards past the
+    /// mask width can never be marked down.
+    fn first_alive(&self, preferred: usize, mask: usize) -> Option<usize> {
+        (0..self.cfg.shards)
+            .map(|k| (preferred + k) % self.cfg.shards)
+            .find(|&s| {
+                s >= usize::BITS as usize || mask & (1usize << s) == 0
+            })
+    }
+
+    /// Whether `shard` is currently marked dark.
+    pub fn is_shard_down(&self, shard: usize) -> bool {
+        // ord: Relaxed load — advisory routing state (see `down`).
+        shard < usize::BITS as usize
+            && self.down.load(Ordering::Relaxed) & (1usize << shard) != 0
+    }
+
+    /// Mark a shard dark (outage) or bring it back. Going dark
+    /// installs the deterministic failover plan
+    /// ([`ShardPlacement::reassign_plan`]) as routing overrides and
+    /// counts one failover per re-homed matrix; coming back clears
+    /// exactly those overrides, so recovery is "traffic goes home".
+    /// The router's health ledger escalates to
+    /// [`DegradedMode::ReducedLanes`] while any shard is dark and
+    /// recovers when the last one returns.
+    pub fn set_shard_down(&self, shard: usize, down: bool) {
+        if shard >= self.cfg.shards || shard >= usize::BITS as usize {
+            return;
+        }
+        let bit = 1usize << shard;
+        let mut overrides = self
+            .failover
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        // ord: Relaxed load — mask writes are serialized by the
+        // failover mutex held here; concurrent readers are advisory.
+        let mask = self.down.load(Ordering::Relaxed);
+        if down {
+            if mask & bit != 0 {
+                return;
+            }
+            // ord: Relaxed store — serialized by the failover mutex.
+            self.down.store(mask | bit, Ordering::Relaxed);
+            let alive: Vec<usize> = (0..self.cfg.shards)
+                .filter(|&s| {
+                    s != shard
+                        && (s >= usize::BITS as usize
+                            || (mask | bit) & (1usize << s) == 0)
+                })
+                .collect();
+            let plan = self.placement.reassign_plan(shard, &alive);
+            self.health.note_failed_over(plan.len() as u64);
+            for (id, to) in plan {
+                overrides.insert(id, to);
+            }
+            self.health.escalate(DegradedMode::ReducedLanes, self.now_ms());
+        } else {
+            if mask & bit == 0 {
+                return;
+            }
+            // ord: Relaxed store — serialized by the failover mutex.
+            self.down.store(mask & !bit, Ordering::Relaxed);
+            overrides.retain(|id, _| self.placement.home(*id) != Some(shard));
+            if mask & !bit == 0 {
+                self.health.recover(self.now_ms());
+            }
+        }
+    }
+
+    /// Milliseconds since this router was built (the health ledger's
+    /// relative clock).
+    fn now_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// [`ShardedServer::submit`] with a bounded re-admission budget:
+    /// a rejected admission is retried up to `budget` more times with
+    /// decorrelated-jitter backoff (capped at 8 ms per wait), each
+    /// attempt counted in the health ledger. Overload still wins —
+    /// the final rejection stands once the budget is spent.
+    pub fn submit_with_retry(&self, req: Request, budget: usize) -> Admitted {
+        let resubmit = || Request {
+            matrix_id: req.matrix_id,
+            x: req.x.clone(),
+            submitted: req.submitted,
+        };
+        let mut last = self.submit(resubmit());
+        if !last.is_rejected() {
+            return last;
+        }
+        let mut rng = Pcg32::new(0x8E7A11 ^ req.matrix_id as u64);
+        let mut backoff = 1.0;
+        for _attempt in 0..budget {
+            backoff = decorrelated_jitter(&mut rng, backoff, 1.0, 8.0);
+            if !cfg!(miri) {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    backoff / 1e3,
+                ));
+            }
+            self.health.note_retried(1);
+            last = self.submit(resubmit());
+            if !last.is_rejected() {
+                return last;
+            }
+        }
+        last
+    }
+
+    /// The router's own resilience ledger (shard engines keep their
+    /// dispatch-path ledgers; [`ShardedServer::health_snapshot`]
+    /// merges the fleet).
+    pub fn health(&self) -> &HealthTracker {
+        &self.health
+    }
+
+    /// Fleet health roll-up: the router ledger merged with every
+    /// shard engine's — one `ft2000.health.v1` document, the
+    /// resilience counterpart of [`ShardedServer::scaling_snapshot`].
+    pub fn health_snapshot(&self) -> Json {
+        let fleet = HealthTracker::new();
+        fleet.merge_from(&self.health);
+        for s in &self.shards {
+            fleet.merge_from(s.engine.health());
+        }
+        fleet.snapshot()
     }
 
     /// No more submissions; workers drain the backlogs and exit.
@@ -600,6 +829,24 @@ mod tests {
         assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
         // Unknown ids route somewhere valid instead of panicking.
         assert!(p.route(usize::MAX, 7) < 4);
+    }
+
+    #[test]
+    fn reassign_plan_is_deterministic_and_balanced() {
+        let ids: Vec<usize> = (0..9).collect();
+        let weights = vec![1.0; 9];
+        let p =
+            ShardPlacement::build(&ids, &weights, 3, PlacementPolicy::Home);
+        let plan = p.reassign_plan(0, &[1, 2]);
+        assert_eq!(plan, p.reassign_plan(0, &[1, 2]), "must be a replay");
+        assert_eq!(plan.len(), p.homed_counts()[0], "every orphan re-homed");
+        assert!(plan.iter().all(|&(_, s)| s == 1 || s == 2));
+        // Orphans spread across survivors, not dog-piled on one.
+        let to1 = plan.iter().filter(|&&(_, s)| s == 1).count();
+        let to2 = plan.len() - to1;
+        assert!((to1 as i64 - to2 as i64).abs() <= 1, "{plan:?}");
+        // Nothing to fail over to: an empty plan, not a panic.
+        assert!(p.reassign_plan(0, &[]).is_empty());
     }
 
     #[test]

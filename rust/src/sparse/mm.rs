@@ -63,18 +63,37 @@ pub fn read_coo<R: Read>(r: R) -> Result<Coo, MmError> {
             if fields.len() != 3 {
                 return Err(perr(ln + 1, "bad size line"));
             }
-            let m = fields[0]
+            let m: usize = fields[0]
                 .parse()
                 .map_err(|_| perr(ln + 1, "bad rows"))?;
-            let n = fields[1]
+            let n: usize = fields[1]
                 .parse()
                 .map_err(|_| perr(ln + 1, "bad cols"))?;
             let nnz: usize = fields[2]
                 .parse()
                 .map_err(|_| perr(ln + 1, "bad nnz"))?;
+            // Oversized declarations are rejected before they size a
+            // buffer: a corrupt size line must be a counted parse
+            // error, never an allocation blow-up downstream.
+            let cap = m.checked_mul(n).ok_or_else(|| {
+                perr(ln + 1, format!("dimensions {m}x{n} overflow"))
+            })?;
+            if nnz > cap {
+                return Err(perr(
+                    ln + 1,
+                    format!(
+                        "declared nnz {nnz} exceeds the {m}x{n} \
+                         matrix capacity {cap}"
+                    ),
+                ));
+            }
             size = Some((m, n, nnz));
             remaining = nnz;
-            coo = Coo::with_capacity(m, n, nnz * if symmetric { 2 } else { 1 });
+            coo = Coo::with_capacity(
+                m,
+                n,
+                nnz.saturating_mul(if symmetric { 2 } else { 1 }),
+            );
             continue;
         }
         if remaining == 0 {
@@ -93,6 +112,14 @@ pub fn read_coo<R: Read>(r: R) -> Result<Coo, MmError> {
         } else {
             fields[2].parse().map_err(|_| perr(ln + 1, "bad value"))?
         };
+        // `"NaN".parse::<f64>()` succeeds — catch non-finite values
+        // here or they poison every kernel and fingerprint downstream.
+        if !v.is_finite() {
+            return Err(perr(
+                ln + 1,
+                format!("non-finite value {v} at ({r},{c})"),
+            ));
+        }
         if r == 0 || c == 0 || r > coo.n_rows || c > coo.n_cols {
             return Err(perr(
                 ln + 1,
@@ -239,6 +266,59 @@ mod tests {
                 assert!(msg.contains("duplicate"), "unexpected: {msg}");
             }
             other => panic!("expected duplicate error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_non_finite_values() {
+        for bad in ["NaN", "nan", "inf", "-inf", "Infinity"] {
+            let text = format!(
+                "%%MatrixMarket matrix coordinate real general\n\
+                 2 2 2\n\
+                 1 1 1.0\n\
+                 2 2 {bad}\n"
+            );
+            match read_csr(text.as_bytes()) {
+                Err(MmError::Parse { line, msg }) => {
+                    assert_eq!(line, 4, "{bad}");
+                    assert!(
+                        msg.contains("non-finite"),
+                        "unexpected message for {bad}: {msg}"
+                    );
+                }
+                other => {
+                    panic!("{bad} must be a parse error, got {other:?}")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_declarations() {
+        // Declared nnz past the matrix capacity: rejected at the size
+        // line, before any entry buffer is sized from it.
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+             3 3 100\n\
+             1 1 1.0\n";
+        match read_csr(text.as_bytes()) {
+            Err(MmError::Parse { line, msg }) => {
+                assert_eq!(line, 2);
+                assert!(msg.contains("capacity"), "unexpected: {msg}");
+            }
+            other => panic!("expected parse error, got {other:?}"),
+        }
+        // Dimensions whose product overflows usize.
+        let huge = usize::MAX;
+        let text = format!(
+            "%%MatrixMarket matrix coordinate real general\n\
+             {huge} {huge} 1\n\
+             1 1 1.0\n"
+        );
+        match read_csr(text.as_bytes()) {
+            Err(MmError::Parse { msg, .. }) => {
+                assert!(msg.contains("overflow"), "unexpected: {msg}");
+            }
+            other => panic!("expected parse error, got {other:?}"),
         }
     }
 

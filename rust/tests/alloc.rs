@@ -22,6 +22,12 @@
 //! profiler's steady state too; the batch-count assertion at the end
 //! proves it really observed the window.
 //!
+//! So is the health ledger (PR 10): every dispatch consults the
+//! degraded-mode ladder and feeds the slow-lane EWMA detector, whose
+//! per-lane vector was grown during warmup. The dwell assertion at
+//! the end proves the tracker was live inside the measured window —
+//! the resilience seams ride the hot path allocation-free too.
+//!
 //! Kept as a single `#[test]` on purpose: the counter is
 //! process-global, and libtest runs sibling tests on concurrent
 //! threads whose allocations would pollute the reading.
@@ -171,5 +177,43 @@ fn pooled_steady_state_serving_allocates_nothing() {
             .abs()
             <= 1e-9 * totals.gap_s.abs().max(1e-12),
         "gap components must sum to the observed gap"
+    );
+
+    // And so did the health ledger, without leaving the budget: every
+    // dispatch charged the Full rung of the degraded-mode ladder, and
+    // the slow-lane EWMA detector observed the pool's lanes (the
+    // snapshot itself allocates — which is why it is read only here,
+    // outside the measured window).
+    use ft2000_spmv::util::json::Json;
+    let health = engine.health_snapshot();
+    assert_eq!(
+        health.get("schema").and_then(Json::as_str),
+        Some("ft2000.health.v1")
+    );
+    assert_eq!(
+        health
+            .get("mode")
+            .and_then(|m| m.get("current"))
+            .and_then(Json::as_str),
+        Some("full"),
+        "a healthy run must end on the Full rung"
+    );
+    let dwell_full = health
+        .get("mode")
+        .and_then(|m| m.get("dwell"))
+        .and_then(|d| d.get("full"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    assert_eq!(
+        dwell_full as u64, totals.batches,
+        "the ladder must be consulted on every dispatch"
+    );
+    assert!(
+        !health
+            .get("lanes")
+            .and_then(Json::as_arr)
+            .map(|l| l.is_empty())
+            .unwrap_or(true),
+        "the slow-lane detector must have observed the pool's lanes"
     );
 }

@@ -1,0 +1,377 @@
+//! Resilience acceptance (the PR-10 tentpole contract): the seeded
+//! chaos sweep replays bit-identically through the public API and
+//! leaves the fleet healthy; shard failover re-homes traffic onto
+//! survivors as counted graceful outcomes; bounded re-admission
+//! spends exactly its budget; corrupt MatrixMarket payloads — seeded
+//! mutations of a valid file — are counted rejections, never panics;
+//! and the `ft2000.health.v1` document carries exactly its documented
+//! key set (a golden-schema pin like `ft2000.metrics.v1`'s).
+
+use std::sync::Arc;
+
+use ft2000_spmv::corpus::suite::SuiteSpec;
+use ft2000_spmv::resil::{chaos, ChaosConfig, DegradedMode, HEALTH_SCHEMA};
+use ft2000_spmv::service::{
+    MatrixRegistry, PlacementPolicy, PlanConfig, Planner, Request,
+    ShardConfig, ShardedServer,
+};
+use ft2000_spmv::util::json::{parse, Json};
+use ft2000_spmv::util::rng::Pcg32;
+
+fn small_chaos() -> ChaosConfig {
+    ChaosConfig {
+        scenarios: 2,
+        requests: 28,
+        matrices: 3,
+        shards: 2,
+        faults: 3,
+        ..ChaosConfig::default()
+    }
+}
+
+/// Same seed, same fault schedule, same health evidence — the chaos
+/// sweep is an experiment, so its output must be a pure function of
+/// its configuration; and a clean sweep means every injected fault
+/// ended as a counted graceful outcome.
+#[test]
+fn chaos_sweep_is_clean_and_replays_bit_identically() {
+    if cfg!(miri) {
+        return;
+    }
+    let cfg = small_chaos();
+    let a = chaos::run(&cfg);
+    assert!(
+        a.report.is_clean(),
+        "chaos sweep must pass: {:?}",
+        a.report.findings
+    );
+    assert!(a.submitted > 0, "the sweep must drive traffic");
+    let b = chaos::run(&cfg);
+    assert_eq!(
+        a.health.to_string(),
+        b.health.to_string(),
+        "same seed must replay to byte-identical health evidence"
+    );
+    assert_eq!(a.submitted, b.submitted);
+}
+
+/// `--canary` drops one deliberate shed from the ledger: the sweep
+/// must catch its own instrumentation lying (proves the gate can
+/// fail, so a green run means something).
+#[test]
+fn chaos_canary_is_caught() {
+    if cfg!(miri) {
+        return;
+    }
+    let cfg = ChaosConfig { canary: true, scenarios: 1, ..small_chaos() };
+    let out = chaos::run(&cfg);
+    assert!(!out.report.is_clean(), "the canary must be detected");
+    assert!(
+        out.report.findings.iter().any(|f| f.invariant == "request-ledger"),
+        "the dropped shed must surface as a ledger finding: {:?}",
+        out.report.findings
+    );
+}
+
+/// The exact key set of a JSON object, for golden-schema pins.
+fn keys(doc: &Json) -> Vec<&str> {
+    doc.as_obj()
+        .expect("object node")
+        .keys()
+        .map(String::as_str)
+        .collect()
+}
+
+/// Golden schema: `ft2000.health.v1` — the document `obs-report
+/// --health-baseline/--health-current` diffs — carries exactly the
+/// documented keys at every level. A key appearing or vanishing here
+/// is a consumer-visible schema change and must bump the version
+/// string instead.
+#[test]
+fn health_snapshot_golden_keys() {
+    if cfg!(miri) {
+        return;
+    }
+    // A chaos scenario exercises every counter the snapshot reports.
+    let out = chaos::run(&ChaosConfig { scenarios: 1, ..small_chaos() });
+    let snap = parse(&out.health.to_string()).expect("snapshot parses");
+    assert_eq!(
+        snap.get("schema").and_then(Json::as_str),
+        Some(HEALTH_SCHEMA)
+    );
+    assert_eq!(
+        keys(&snap),
+        ["injected", "lanes", "mode", "outcomes", "recovery_ms", "schema"]
+    );
+    assert_eq!(
+        keys(snap.get("injected").unwrap()),
+        [
+            "corrupt_payload",
+            "lane_slow",
+            "lane_stall",
+            "queue_spike",
+            "shard_flap",
+            "shard_outage",
+            "worker_panic",
+        ]
+    );
+    assert_eq!(
+        keys(snap.get("outcomes").unwrap()),
+        [
+            "degraded_dispatches",
+            "failed_over",
+            "panics_contained",
+            "rejected",
+            "rejected_corrupt",
+            "retried",
+            "sequential_dispatches",
+            "served_ok",
+            "shed",
+            "slow_lane_marks",
+            "tuner_suppressed",
+        ]
+    );
+    assert_eq!(keys(snap.get("mode").unwrap()), ["current", "dwell"]);
+    assert_eq!(
+        keys(snap.get("mode").unwrap().get("dwell").unwrap()),
+        ["full", "reduced_lanes", "sequential"]
+    );
+    assert_eq!(
+        keys(snap.get("recovery_ms").unwrap()),
+        ["count", "max_ms", "mean_ms", "p50_ms", "p95_ms"]
+    );
+    let lanes = snap.get("lanes").and_then(Json::as_arr).unwrap();
+    assert!(!lanes.is_empty(), "chaos must feed the slow-lane EWMA");
+    for lane in lanes {
+        assert_eq!(keys(lane), ["ewma_share", "lane"]);
+    }
+    // The sweep injected every fault kind at least once (scenario 0
+    // is scripted to cover the full matrix).
+    for k in keys(snap.get("injected").unwrap()) {
+        let n = snap
+            .get("injected")
+            .and_then(|i| i.get(k))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(n >= 1.0, "fault kind {k} never injected");
+    }
+}
+
+fn sharded(shards: usize, queue_cap: usize) -> ShardedServer {
+    let mut reg = MatrixRegistry::new();
+    reg.register_suite(&SuiteSpec::tiny(), Some(4));
+    ShardedServer::new(
+        Arc::new(reg),
+        Planner::Heuristic,
+        PlanConfig::default(),
+        ShardConfig {
+            shards,
+            queue_cap,
+            workers_per_shard: 1,
+            pooled: false,
+            // Every matrix homed: failover counts are deterministic.
+            policy: PlacementPolicy::Home,
+            ..ShardConfig::default()
+        },
+    )
+}
+
+/// A dark shard's traffic re-homes onto survivors (counted
+/// failovers, ladder escalated); an all-dark fleet rejects instead of
+/// wedging; recovery sends traffic home and returns the ladder to
+/// `Full`.
+#[test]
+fn shard_outage_fails_over_and_recovers() {
+    if cfg!(miri) {
+        return;
+    }
+    let server = sharded(2, 64);
+    let n_cols: Vec<usize> = (0..4)
+        .map(|id| server.registry().entry(id).csr.n_cols)
+        .collect();
+
+    // Healthy: every admission lands on its home shard.
+    for id in 0..4 {
+        let admitted =
+            server.submit(Request::new(id, vec![1.0; n_cols[id]]));
+        assert!(!admitted.is_rejected());
+    }
+    assert_eq!(server.health().totals().failed_over, 0);
+    assert_eq!(server.health().mode(), DegradedMode::Full);
+
+    // Shard 0 goes dark: its matrices re-home (one counted failover
+    // each), admissions only land on shard 1, the ladder escalates.
+    server.set_shard_down(0, true);
+    assert!(server.is_shard_down(0));
+    let planned = server.health().totals().failed_over;
+    assert!(planned > 0, "a dark shard must re-home its matrices");
+    assert_eq!(server.health().mode(), DegradedMode::ReducedLanes);
+    for id in 0..4 {
+        match server.submit(Request::new(id, vec![1.0; n_cols[id]])) {
+            ft2000_spmv::service::Admitted::Shard(s) => {
+                assert_eq!(s, 1, "matrix {id} routed to the dark shard")
+            }
+            other => panic!("matrix {id} not admitted: {other:?}"),
+        }
+    }
+    // Dark-period admissions of re-homed matrices count as failovers
+    // too; healthy admissions after recovery must not.
+    let during = server.health().totals().failed_over;
+    assert!(during >= planned);
+
+    // The whole fleet dark: counted rejections, not a hang or panic.
+    server.set_shard_down(1, true);
+    let admitted = server.submit(Request::new(0, vec![1.0; n_cols[0]]));
+    assert!(admitted.is_rejected(), "all-dark must reject");
+    assert!(server.health().totals().rejected >= 1);
+
+    // Recovery: overrides clear, traffic goes home, ladder recovers.
+    server.set_shard_down(0, false);
+    server.set_shard_down(1, false);
+    assert_eq!(server.health().mode(), DegradedMode::Full);
+    for id in 0..4 {
+        let admitted =
+            server.submit(Request::new(id, vec![1.0; n_cols[id]]));
+        assert!(!admitted.is_rejected());
+    }
+    assert_eq!(
+        server.health().totals().failed_over,
+        during,
+        "healthy admissions must not count failovers"
+    );
+
+    // Everything admitted drains and serves after the episode.
+    server.close();
+    let served = server.serve();
+    assert_eq!(served, 12, "all admitted requests must be served");
+
+    // The fleet roll-up is a valid health document.
+    let snap = server.health_snapshot();
+    assert_eq!(
+        snap.get("schema").and_then(Json::as_str),
+        Some(HEALTH_SCHEMA)
+    );
+}
+
+/// `submit_with_retry` spends exactly its budget against a full
+/// queue — every attempt a counted retry, overload still winning.
+#[test]
+fn retry_budget_is_bounded_and_counted() {
+    if cfg!(miri) {
+        return;
+    }
+    let server = sharded(1, 1);
+    let n = server.registry().entry(0).csr.n_cols;
+    // Fill the single admission slot; no workers are draining.
+    assert!(!server.submit(Request::new(0, vec![1.0; n])).is_rejected());
+
+    let admitted =
+        server.submit_with_retry(Request::new(0, vec![1.0; n]), 3);
+    assert!(admitted.is_rejected(), "overload must win past the budget");
+    assert_eq!(
+        server.health().totals().retried,
+        3,
+        "every re-admission attempt must be counted"
+    );
+
+    // Zero budget means plain submit: no retries counted.
+    let admitted =
+        server.submit_with_retry(Request::new(0, vec![1.0; n]), 0);
+    assert!(admitted.is_rejected());
+    assert_eq!(server.health().totals().retried, 3);
+
+    server.close();
+    assert_eq!(server.serve(), 1);
+}
+
+/// A valid MatrixMarket payload for mutation: 4x4, 5 entries.
+const VALID_MTX: &str = "%%MatrixMarket matrix coordinate real general\n\
+     4 4 5\n\
+     1 1 2.0\n\
+     2 3 -1.5\n\
+     3 1 4.0\n\
+     3 3 1.0\n\
+     4 2 0.5\n";
+
+/// Seeded corpus mutations through the admission seam: every corrupt
+/// payload is a counted rejection (`MatrixRegistry::rejected`), the
+/// registry never grows from one, and nothing panics. Covers the
+/// structured failure modes explicitly plus seeded random
+/// truncations/splices for the long tail.
+#[test]
+fn corrupt_mtx_payloads_are_counted_rejections() {
+    let mut reg = MatrixRegistry::new();
+    let ok = reg.register_mtx_reader("valid", VALID_MTX.as_bytes());
+    assert!(ok.is_ok(), "the unmutated payload must admit");
+    assert_eq!(reg.rejected(), 0);
+    let len_before = reg.len();
+
+    // Structured mutations: one per parser defense.
+    let structured = [
+        // Non-finite value.
+        VALID_MTX.replace("-1.5", "NaN"),
+        // Out-of-range (1-based) coordinate.
+        VALID_MTX.replace("4 2 0.5", "5 2 0.5"),
+        // Zero (0-based) coordinate.
+        VALID_MTX.replace("1 1 2.0", "0 1 2.0"),
+        // Duplicate coordinate.
+        VALID_MTX.replace("3 3 1.0", "1 1 1.0"),
+        // Truncated: fewer entries than declared.
+        VALID_MTX.replace("4 2 0.5\n", ""),
+        // Oversized declaration: nnz past the matrix capacity.
+        VALID_MTX.replace("4 4 5", "4 4 99"),
+        // Dimension overflow.
+        VALID_MTX
+            .replace("4 4 5", "18446744073709551615 18446744073709551615 1"),
+        // Wrong header.
+        VALID_MTX.replace("coordinate", "array"),
+        // Unsupported field type.
+        VALID_MTX.replace(" real ", " complex "),
+        // Garbage value token.
+        VALID_MTX.replace("2.0", "2.O"),
+        // Empty payload.
+        String::new(),
+    ];
+    for (i, bad) in structured.iter().enumerate() {
+        let res = reg.register_mtx_reader("mutant", bad.as_bytes());
+        assert!(res.is_err(), "structured mutation {i} must be rejected");
+        assert_eq!(
+            reg.rejected(),
+            i + 1,
+            "mutation {i} must be a *counted* rejection"
+        );
+    }
+
+    // Seeded random mutations: truncate at an arbitrary byte, or
+    // splice a garbage byte in. Some splices still parse (e.g. a
+    // digit replacing a digit) — the contract under test is "Err or
+    // Ok, never a panic; every Err counted".
+    let mut rng = Pcg32::new(0x5EED_F00D);
+    let mut rejected = reg.rejected();
+    let mut admitted_fuzz = 0;
+    for _ in 0..64 {
+        let mut bytes = VALID_MTX.as_bytes().to_vec();
+        let cut = 1 + rng.gen_range(bytes.len() - 1);
+        if rng.gen_range(2) == 0 {
+            bytes.truncate(cut);
+        } else {
+            bytes[cut] = (rng.next_u64() % 256) as u8;
+        }
+        match reg.register_mtx_reader("fuzz", &bytes[..]) {
+            Ok(_) => admitted_fuzz += 1,
+            Err(_) => {
+                rejected += 1;
+                assert_eq!(reg.rejected(), rejected);
+            }
+        }
+    }
+    assert_eq!(
+        reg.len(),
+        len_before + admitted_fuzz,
+        "rejected payloads must never register"
+    );
+    assert!(
+        reg.rejected() >= structured.len(),
+        "the structured mutations alone must all be counted"
+    );
+}
